@@ -1,0 +1,35 @@
+//! Multimodal reasoning demo (the Table 4 path): loads llava-mini + the
+//! synthetic ScienceQA test set, compresses BOTH towers (ViT + LM) in rust
+//! with three methods, and prints the accuracy breakdown by subject /
+//! context modality / grade.
+//!
+//! Run: cargo run --release --example multimodal_reasoning -- [artifacts]
+
+use anyhow::{Context, Result};
+use latentllm::compress::pipeline::Method;
+use latentllm::reports::tables::{table4, TableCtx};
+use latentllm::runtime::Engine;
+
+fn main() -> Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string()));
+    let engine = Engine::new(&artifacts).context("engine")?;
+    let ctx = TableCtx {
+        engine: &engine,
+        artifacts: artifacts.clone(),
+        max_batches: 8,
+        qk_iters: 4,
+        ud_iters: 2,
+    };
+    println!("llava-mini synthetic-ScienceQA accuracy \
+              (NAT/SOC/LAN | TXT/IMG/NO | G1-6/G7-12 | Avg):\n");
+    let v = table4(&ctx, &[0.3],
+                   &[Method::Plain, Method::AsvdRootCov,
+                     Method::LatentLlm])?;
+    std::fs::create_dir_all("reports")?;
+    std::fs::write("reports/mm_example.json", v.to_string_pretty())?;
+    println!("\nexpected shape (paper Table 4): plain collapses, rootcov \
+              holds, latentllm closest to the original; NO-context and \
+              higher-grade questions degrade first.");
+    Ok(())
+}

@@ -1,0 +1,7 @@
+"""Build-time python package for the LatentLLM reproduction.
+
+Everything here runs ONCE at `make artifacts` time: trains the mini models,
+runs the reference compression implementation, lowers the JAX/Pallas programs
+to HLO text, and exports weights/calibration/goldens for the rust
+coordinator. Nothing is imported at request time.
+"""

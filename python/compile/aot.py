@@ -1,0 +1,325 @@
+"""AOT artifact builder — the single build-time entrypoint (`make artifacts`).
+
+Emits everything the rust coordinator needs into artifacts/:
+
+  corpora.ltw            synthetic corpora (train/test token streams)
+  model_<size>.ltw       trained opt-mini weights
+  calib_<size>.ltw       per-layer calibration activations (paper §5)
+  score_<size>.hlo.txt   dense scoring program  (tokens, *W) -> NLL[B]
+  step_<size>.hlo.txt    dense serving program  (tokens, lens, *W) -> logits
+  latent_*.hlo.txt       MLA-architecture programs (factored weights)
+  latent_model_*.ltw     latent factors for the serving demo
+  mm_model.ltw/mm_data.ltw/mm_score_*.hlo.txt   llava-mini (Table 4)
+  goldens.json           python-side losses/ppl for rust cross-checks
+  manifest.json          configs, program param orders, rank signatures
+  training_log.json      loss curves (EXPERIMENTS.md provenance)
+
+HLO *text* is the interchange format (not serialized protos): jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Weights are *parameters* of every program, so rust can evaluate any weight
+set — in particular weights compressed by the rust pipeline — through one
+compiled executable per architecture signature.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, data, ltw, model, multimodal, train
+from .latentllm import pipeline, rank
+
+SCORE_B, SEQ_LEN = 8, 128
+MM_B = 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _write_hlo(path, fn, *specs):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) // 1024} KiB)", flush=True)
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def emit_lm_programs(out, cfg):
+    """Dense score/step programs with weights as ordered parameters."""
+    names = cfg.param_names()
+    shapes = cfg.shapes()
+    wspecs = [_spec(shapes[n], jnp.float32) for n in names]
+
+    def score(tokens, *ws):
+        params = dict(zip(names, ws))
+        return (model.batch_nll(cfg, params, tokens, use_pallas=True),)
+
+    def step(tokens, lens, *ws):
+        params = dict(zip(names, ws))
+        return (model.step_logits(cfg, params, tokens, lens,
+                                  use_pallas=True),)
+
+    tok = _spec((SCORE_B, SEQ_LEN), jnp.int32)
+    _write_hlo(os.path.join(out, f"score_{cfg.name}.hlo.txt"),
+               score, tok, *wspecs)
+    _write_hlo(os.path.join(out, f"step_{cfg.name}.hlo.txt"),
+               step, tok, _spec((SCORE_B,), jnp.int32), *wspecs)
+    return {"score": ["tokens"] + names,
+            "step": ["tokens", "lens"] + names}
+
+
+def emit_latent_programs(out, cfg, ranks, tag):
+    names = model.latent_param_names(cfg, ranks)
+    shapes = model.latent_shapes(cfg, ranks)
+    wspecs = [_spec(shapes[n], jnp.float32) for n in names]
+
+    def score(tokens, *ws):
+        params = dict(zip(names, ws))
+        return (model.latent_batch_nll(cfg, params, tokens,
+                                       use_pallas=True),)
+
+    def step(tokens, lens, *ws):
+        params = dict(zip(names, ws))
+        return (model.latent_step_logits(cfg, params, tokens, lens,
+                                         use_pallas=True),)
+
+    tok = _spec((SCORE_B, SEQ_LEN), jnp.int32)
+    _write_hlo(os.path.join(out, f"latent_score_{tag}.hlo.txt"),
+               score, tok, *wspecs)
+    _write_hlo(os.path.join(out, f"latent_step_{tag}.hlo.txt"),
+               step, tok, _spec((SCORE_B,), jnp.int32), *wspecs)
+    return {"latent_score": ["tokens"] + names,
+            "latent_step": ["tokens", "lens"] + names}
+
+
+def latent_params_from_report(cfg, weights, report, ranks):
+    """Map pipeline factors -> the latent architecture's parameter dict."""
+    out = {"tok_emb": weights["tok_emb"], "pos_emb": weights["pos_emb"],
+           "lnf.g": weights["lnf.g"], "lnf.b": weights["lnf.b"]}
+    h, dh = cfg.n_heads, cfg.d_h
+    for i, lrep in enumerate(report["layers"]):
+        p = f"layers.{i}."
+        for nm in ("ln1.g", "ln1.b", "ln2.g", "ln2.b"):
+            out[p + nm] = weights[p + nm]
+        jq = lrep["qk_factors"]
+        out[p + "attn.aq"] = np.asarray(jq["Aq"], np.float32)
+        out[p + "attn.bq_heads"] = np.stack(jq["Bq"]).astype(np.float32)
+        out[p + "attn.bq"] = np.asarray(jq["bq"], np.float32)
+        out[p + "attn.ak"] = np.asarray(jq["Ak"], np.float32)
+        out[p + "attn.bk_heads"] = np.stack(jq["Bk"]).astype(np.float32)
+        out[p + "attn.bk"] = np.asarray(jq["bk"], np.float32)
+        vo = lrep["vo_factors"]
+        out[p + "attn.av"] = np.asarray(vo["v"]["A"], np.float32)
+        out[p + "attn.bv_heads"] = np.asarray(
+            vo["v"]["B"], np.float32).reshape(h, dh, -1)
+        out[p + "attn.bv"] = np.asarray(vo["v"]["bias"], np.float32)
+        out[p + "attn.ao_heads"] = np.asarray(vo["o"]["A"], np.float32)
+        out[p + "attn.bo_mat"] = np.asarray(vo["o"]["B"], np.float32)
+        out[p + "attn.bo"] = np.asarray(vo["o"]["bias"], np.float32)
+        ud = lrep["ud_factors"]
+        out[p + "mlp.au"] = np.asarray(ud["res_u"]["A"], np.float32)
+        out[p + "mlp.bu_mat"] = np.asarray(ud["res_u"]["B"], np.float32)
+        out[p + "mlp.bu"] = np.asarray(ud["bu"], np.float32)
+        out[p + "mlp.ad"] = np.asarray(ud["res_d"]["A"], np.float32)
+        out[p + "mlp.bd_mat"] = np.asarray(ud["res_d"]["B"], np.float32)
+        out[p + "mlp.bd"] = np.asarray(ud["bd"], np.float32)
+    return out
+
+
+def emit_mm_program(out, mm):
+    names = multimodal.param_names(mm)
+
+    def score(images, tokens, *ws):
+        params = dict(zip(names, ws))
+        return (multimodal.batch_logits(mm, params, images, tokens),)
+
+    p0 = multimodal.init_params(mm)
+    wspecs = [_spec(p0[n].shape, jnp.float32) for n in names]
+    _write_hlo(os.path.join(out, f"mm_score_{mm.name}.hlo.txt"), score,
+               _spec((MM_B, 16, 16), jnp.float32),
+               _spec((MM_B, multimodal.TEXT_LEN), jnp.int32), *wspecs)
+    return {f"mm_score_{mm.name}": ["images", "tokens"] + names}
+
+
+def flatten_calib(cal):
+    return {f"{layer}.{k}": v for layer, d in cal.items()
+            for k, v in d.items()}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny training budget (CI smoke)")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    t_start = time.time()
+    manifest = {"seq_len": SEQ_LEN, "score_batch": SCORE_B, "mm_batch": MM_B,
+                "programs": {}, "models": {}, "corpora": {},
+                "vocab": data.VOCAB}
+    tlog = {}
+
+    # ------------------------------------------------------------------ data
+    print("== corpora ==", flush=True)
+    corp = {}
+    streams = {}
+    for name in data.CORPORA:
+        n_train = 200_000 if name == "synthwiki" else 2_000
+        if args.quick:
+            n_train = min(n_train, 40_000)
+        tr, te = data.splits(name, n_train=n_train, n_test=24_576)
+        streams[name] = (tr, te)
+        corp[f"{name}.train"] = tr
+        corp[f"{name}.test"] = te
+        manifest["corpora"][name] = {"train": len(tr), "test": len(te)}
+    ltw.write_ltw(os.path.join(out, "corpora.ltw"), corp)
+
+    train_tokens = streams["synthwiki"][0]
+    calib_tokens = data.calibration(train_tokens, n_samples=64,
+                                    seq_len=SEQ_LEN)
+
+    # ------------------------------------------------------------- LM models
+    steps = {"opt-mini-s": 700, "opt-mini-m": 500, "opt-mini-l": 400}
+    family = configs.MINI_FAMILY
+    weights_by_size = {}
+    calib_by_size = {}
+    for cfg in family:
+        n = 60 if args.quick else steps[cfg.name]
+        print(f"== train {cfg.name} ({n} steps) ==", flush=True)
+        params, curve = train.train_lm(cfg, train_tokens, steps=n, lr=3e-3,
+                                       log_every=max(n // 4, 1))
+        tlog[cfg.name] = curve
+        weights_by_size[cfg.name] = params
+        ltw.write_ltw(os.path.join(out, f"model_{cfg.name}.ltw"), params)
+        cal = train.collect_calibration(cfg, params, calib_tokens,
+                                        max_cols=1024)
+        calib_by_size[cfg.name] = cal
+        ltw.write_ltw(os.path.join(out, f"calib_{cfg.name}.ltw"),
+                      flatten_calib(cal))
+        ppls = {nm: train.eval_ppl(cfg, params, streams[nm][1],
+                                   batch=SCORE_B, seq_len=SEQ_LEN,
+                                   max_batches=24)
+                for nm in data.CORPORA}
+        manifest["models"][cfg.name] = {
+            "config": cfg.to_dict(), "base_ppl": ppls,
+            "param_names": cfg.param_names(),
+            "n_params": int(sum(np.asarray(v).size
+                                for v in params.values()))}
+        print(f"  base ppl: {ppls}", flush=True)
+        manifest["programs"].update(
+            {f"{k}_{cfg.name}": v
+             for k, v in emit_lm_programs(out, cfg).items()})
+
+    # ------------------------------------------------- latent (MLA) programs
+    demo = configs.OPT_MINI_M
+    demo_ratio = 0.3
+    keep = 1.0 - demo_ratio
+    d, dh, h, di = demo.d, demo.d_h, demo.n_heads, demo.d_i
+    r_qk = rank.joint_qk_rank(d, dh, h, h, keep, blockid=True)
+    ranks = {"rq": r_qk, "rk": r_qk,
+             "rv": rank.local_rank(d, d, keep, True),
+             "ro": rank.local_rank(d, d, keep, True),
+             "ru": rank.local_rank(di, d, keep, True),
+             "rd": rank.local_rank(d, di, keep, True)}
+    tag = f"{demo.name}_r{int(demo_ratio * 100)}"
+    print(f"== latent demo {tag} ranks={ranks} ==", flush=True)
+    pf64 = {k: np.asarray(v, np.float64)
+            for k, v in weights_by_size[demo.name].items()}
+    new_w, rep = pipeline.compress_model(demo, pf64, calib_by_size[demo.name],
+                                         "latentllm", demo_ratio)
+    lat_params = latent_params_from_report(demo, weights_by_size[demo.name],
+                                           rep, ranks)
+    ltw.write_ltw(os.path.join(out, f"latent_model_{tag}.ltw"),
+                  {k: np.asarray(v, np.float32)
+                   for k, v in lat_params.items()})
+    manifest["latent_demo"] = {
+        "model": demo.name, "ratio": demo_ratio, "ranks": ranks, "tag": tag,
+        "param_names": model.latent_param_names(demo, ranks),
+        "achieved_ratio": rep["achieved_ratio"]}
+    manifest["programs"].update(
+        {f"{k}_{tag}": v
+         for k, v in emit_latent_programs(out, demo, ranks, tag).items()})
+    # sanity: latent forward == reconstructed dense forward (ppl-level)
+    lat_ppl = float(np.exp(np.mean(np.asarray(model.latent_batch_nll(
+        demo, {k: jnp.asarray(v) for k, v in lat_params.items()},
+        jnp.asarray(calib_tokens[:SCORE_B]), use_pallas=False)))))
+    rec_ppl = float(np.exp(np.mean(np.asarray(model.batch_nll(
+        demo, {k: jnp.asarray(np.asarray(v, np.float32))
+               for k, v in new_w.items()},
+        jnp.asarray(calib_tokens[:SCORE_B]), use_pallas=False)))))
+    print(f"  latent ppl {lat_ppl:.3f} vs reconstructed {rec_ppl:.3f}")
+    manifest["latent_demo"]["latent_vs_reconstructed_ppl"] = [lat_ppl,
+                                                              rec_ppl]
+
+    # ------------------------------------------------------------ multimodal
+    mm = configs.LLAVA_MINI
+    n_mm = 400 if args.quick else 6000
+    mm_steps = 80 if args.quick else 2000
+    print(f"== llava-mini ({mm_steps} steps) ==", flush=True)
+    ds_train = multimodal.make_dataset(n_mm, seed=0)
+    ds_test = multimodal.make_dataset(max(n_mm // 4, 200), seed=1)
+    mm_params, mm_curve = multimodal.train_mm(mm, ds_train, steps=mm_steps,
+                                              lr=3e-3,
+                                              log_every=max(mm_steps // 5, 1))
+    tlog["llava-mini"] = mm_curve
+    acc = multimodal.evaluate(mm, mm_params, ds_test)
+    print(f"  base accuracy: {acc}", flush=True)
+    ltw.write_ltw(os.path.join(out, "mm_model.ltw"), mm_params)
+    ltw.write_ltw(os.path.join(out, "mm_data.ltw"), {
+        "images": ds_test["images"], "tokens": ds_test["tokens"],
+        "labels": ds_test["labels"], "cats": ds_test["cats"]})
+    mm_cal = multimodal.collect_calibration(mm, mm_params, ds_train)
+    ltw.write_ltw(os.path.join(out, "mm_calib.ltw"), flatten_calib(mm_cal))
+    manifest["mm"] = {"config": mm.to_dict(), "base_acc": acc,
+                      "param_names": multimodal.param_names(mm),
+                      "text_len": multimodal.TEXT_LEN,
+                      "n_test": int(ds_test["images"].shape[0])}
+    manifest["programs"].update(emit_mm_program(out, mm))
+
+    # --------------------------------------------------------------- goldens
+    print("== goldens ==", flush=True)
+    gcfg = configs.OPT_MINI_S
+    gparams = {k: np.asarray(v, np.float64)
+               for k, v in weights_by_size[gcfg.name].items()}
+    gold = {"model": gcfg.name, "entries": []}
+    for method in ("plain", "asvd_rootcov", "latentllm"):
+        for ratio in (0.2, 0.4):
+            nw, rep2 = pipeline.compress_model(
+                gcfg, gparams, calib_by_size[gcfg.name], method, ratio)
+            nw32 = {k: np.asarray(v, np.float32) for k, v in nw.items()}
+            ppl = train.eval_ppl(gcfg, nw32, streams["synthwiki"][1],
+                                 batch=SCORE_B, seq_len=SEQ_LEN,
+                                 max_batches=24)
+            gold["entries"].append({
+                "method": method, "ratio": ratio, "ppl": ppl,
+                "achieved_ratio": rep2["achieved_ratio"]})
+            print(f"  {method} @{ratio}: ppl {ppl:.3f}", flush=True)
+    with open(os.path.join(out, "goldens.json"), "w") as f:
+        json.dump(gold, f, indent=1)
+
+    with open(os.path.join(out, "training_log.json"), "w") as f:
+        json.dump(tlog, f)
+    manifest["build_seconds"] = time.time() - t_start
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"== done in {manifest['build_seconds']:.0f}s ==", flush=True)
+
+
+if __name__ == "__main__":
+    main()

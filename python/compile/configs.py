@@ -1,0 +1,128 @@
+"""Model configurations.
+
+`MiniConfig` is the OPT-style architecture used for the trained-from-scratch
+reproduction models (see DESIGN.md §2 for the substitution rationale): ReLU
+MLP, pre-LN, learned positional embeddings, biases on all linear layers —
+architecturally an OPT model at reduced scale (paper Table 5).
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class MiniConfig:
+    name: str
+    vocab: int = 512
+    d: int = 128              # hidden size
+    n_layers: int = 4
+    n_heads: int = 4
+    d_i: int = 512            # intermediate (4d like OPT)
+    max_len: int = 128        # max sequence length / learned pos-emb rows
+    tie_embeddings: bool = True
+
+    @property
+    def d_h(self) -> int:
+        assert self.d % self.n_heads == 0
+        return self.d // self.n_heads
+
+    def param_names(self):
+        """Deterministic flat parameter order shared with rust (manifest)."""
+        names = ["tok_emb", "pos_emb"]
+        for i in range(self.n_layers):
+            p = f"layers.{i}."
+            names += [
+                p + "ln1.g", p + "ln1.b",
+                p + "attn.wq", p + "attn.bq",
+                p + "attn.wk", p + "attn.bk",
+                p + "attn.wv", p + "attn.bv",
+                p + "attn.wo", p + "attn.bo",
+                p + "ln2.g", p + "ln2.b",
+                p + "mlp.wu", p + "mlp.bu",
+                p + "mlp.wd", p + "mlp.bd",
+            ]
+        names += ["lnf.g", "lnf.b"]
+        if not self.tie_embeddings:
+            names += ["lm_head"]
+        return names
+
+    def shapes(self):
+        """name -> shape, matching param_names order. Weight convention:
+        w[out, in] (row-major out-features first), matching the paper's
+        W ∈ R^{d' x d} acting as y = W x."""
+        d, di, v = self.d, self.d_i, self.vocab
+        s = {"tok_emb": (v, d), "pos_emb": (self.max_len, d)}
+        for i in range(self.n_layers):
+            p = f"layers.{i}."
+            s[p + "ln1.g"] = (d,)
+            s[p + "ln1.b"] = (d,)
+            for m in ("wq", "wk", "wv", "wo"):
+                s[p + f"attn.{m}"] = (d, d)
+            for m in ("bq", "bk", "bv", "bo"):
+                s[p + f"attn.{m}"] = (d,)
+            s[p + "ln2.g"] = (d,)
+            s[p + "ln2.b"] = (d,)
+            s[p + "mlp.wu"] = (di, d)
+            s[p + "mlp.bu"] = (di,)
+            s[p + "mlp.wd"] = (d, di)
+            s[p + "mlp.bd"] = (d,)
+        s["lnf.g"] = (d,)
+        s["lnf.b"] = (d,)
+        if not self.tie_embeddings:
+            s["lm_head"] = (v, d)
+        return s
+
+    def n_params(self) -> int:
+        return sum(
+            int.__mul__(*(list(sh) + [1])[:2]) if len(sh) == 2 else sh[0]
+            for sh in self.shapes().values()
+        )
+
+    def to_dict(self):
+        return asdict(self)
+
+
+# The reproduction family — stand-ins for OPT-125M/350M/1.3B (Table 5),
+# scaled so all of them train + evaluate in seconds on CPU.
+OPT_MINI_S = MiniConfig(name="opt-mini-s", d=96, n_layers=2, n_heads=4, d_i=384)
+OPT_MINI_M = MiniConfig(name="opt-mini-m", d=128, n_layers=4, n_heads=4, d_i=512)
+OPT_MINI_L = MiniConfig(name="opt-mini-l", d=192, n_layers=6, n_heads=6, d_i=768)
+
+MINI_FAMILY = [OPT_MINI_S, OPT_MINI_M, OPT_MINI_L]
+
+
+@dataclass(frozen=True)
+class VisionConfig:
+    """Tiny CLIP-style ViT for the llava-mini multimodal model."""
+    img: int = 16
+    patch: int = 4
+    d: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    d_i: int = 256
+
+    @property
+    def n_patches(self) -> int:
+        return (self.img // self.patch) ** 2  # 16
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch
+
+
+@dataclass(frozen=True)
+class LlavaMiniConfig:
+    name: str = "llava-mini"
+    lm: MiniConfig = field(
+        default_factory=lambda: MiniConfig(
+            name="llava-mini-lm", vocab=256, d=96, n_layers=3, n_heads=4,
+            d_i=384, max_len=64)
+    )
+    vision: VisionConfig = field(default_factory=VisionConfig)
+    n_answers: int = 8  # class-concept answers (see multimodal.py docstring)
+
+    def to_dict(self):
+        return {"name": self.name, "lm": self.lm.to_dict(),
+                "vision": asdict(self.vision), "n_answers": self.n_answers}
+
+
+LLAVA_MINI = LlavaMiniConfig()

@@ -1,0 +1,92 @@
+"""Synthetic corpora — stand-ins for WikiText-2 / PTB / C4 (DESIGN.md §2).
+
+A seeded topic-switching bigram (Markov) generator over a Zipf-shaped
+vocabulary: per topic, every token has a small successor table with heavy-
+tailed transition probabilities, so a small transformer learns real
+structure and perplexity differences between compression methods are
+meaningful. The three corpora use different seeds/topologies, mirroring the
+paper's calibrate-on-C4 / evaluate-on-{WT2, PTB, C4} zero-shot protocol.
+"""
+
+import numpy as np
+
+VOCAB = 512
+BASE_SEED = 20250607          # the shared "language" (bigram tables)
+MAX_TOPICS, MAX_BRANCH = 6, 10
+CORPORA = {
+    # name: (seed, n_topics, branch, zipf_a, switch_prob, perturb)
+    # All corpora share the same base successor tables (the "language");
+    # per-corpus style = topic subset, branch cut, Zipf temperature, and a
+    # perturbed fraction of transitions — so a model trained on synthwiki
+    # transfers to the others with moderately higher perplexity, mirroring
+    # the paper's WT2/PTB/C4 relationship.
+    "synthwiki": (1234, 4, 8, 1.3, 0.02, 0.0),
+    "synthptb": (5678, 3, 6, 1.5, 0.03, 0.15),
+    "synthc4": (9012, 6, 10, 1.1, 0.015, 0.10),
+}
+
+
+def _successor_tables(name):
+    """Per-corpus view of the shared tables + zipf cumulative probs."""
+    seed, n_topics, branch, zipf_a, switch, perturb = CORPORA[name]
+    base_rng = np.random.default_rng(BASE_SEED)
+    base = base_rng.integers(0, VOCAB,
+                             size=(MAX_TOPICS, VOCAB, MAX_BRANCH))
+    tables = base[:n_topics, :, :branch].copy()
+    if perturb > 0:
+        prng = np.random.default_rng(seed)
+        mask = prng.random(tables.shape) < perturb
+        tables[mask] = prng.integers(0, VOCAB, size=int(mask.sum()))
+    probs = (1.0 / np.arange(1, branch + 1) ** zipf_a)
+    probs /= probs.sum()
+    return tables, np.cumsum(probs), switch
+
+
+def generate(name, n_tokens, split_seed=0):
+    """Generate `n_tokens` int32 tokens of corpus `name`."""
+    seed = CORPORA[name][0]
+    n_topics, branch = CORPORA[name][1], CORPORA[name][2]
+    tables, cum, switch = _successor_tables(name)
+    srng = np.random.default_rng(seed * 7919 + split_seed + 1)  # the walk
+    u_tok = srng.random(n_tokens)
+    u_sw = srng.random(n_tokens)
+    u_topic = srng.integers(0, n_topics, size=n_tokens)
+    out = np.empty(n_tokens, dtype=np.int32)
+    tok = int(srng.integers(0, VOCAB))
+    topic = 0
+    for i in range(n_tokens):
+        if u_sw[i] < switch:
+            topic = int(u_topic[i])
+        slot = int(np.searchsorted(cum, u_tok[i]))
+        tok = int(tables[topic, tok, min(slot, branch - 1)])
+        out[i] = tok
+    return out
+
+
+def splits(name, n_train=200_000, n_test=24_576):
+    """(train, test) token streams; test uses a disjoint walk seed."""
+    return generate(name, n_train, split_seed=0), \
+        generate(name, n_test, split_seed=1)
+
+
+def batches(tokens, batch, seq_len, rng=None, n_batches=None):
+    """Yield [batch, seq_len] int32 windows; random if rng else sequential."""
+    tokens = np.asarray(tokens, dtype=np.int32)
+    max_start = len(tokens) - seq_len - 1
+    if rng is not None:
+        while True:
+            starts = rng.integers(0, max_start, size=batch)
+            yield np.stack([tokens[s:s + seq_len] for s in starts])
+    else:
+        n = (max_start // seq_len) if n_batches is None else n_batches * batch
+        windows = [tokens[s:s + seq_len]
+                   for s in range(0, max_start, seq_len)]
+        for i in range(0, len(windows) - batch + 1, batch):
+            yield np.stack(windows[i:i + batch])
+
+
+def calibration(tokens, n_samples=64, seq_len=128, seed=42):
+    """The paper's calibration protocol: n random seq_len-token segments."""
+    rng = np.random.default_rng(seed)
+    starts = rng.integers(0, len(tokens) - seq_len - 1, size=n_samples)
+    return np.stack([tokens[s:s + seq_len] for s in starts]).astype(np.int32)

@@ -1,0 +1,4 @@
+"""Layer-1 Pallas kernels (interpret=True on CPU; see DESIGN.md
+§Hardware-Adaptation for the TPU mapping) and their jnp oracles."""
+
+from . import attention, gram, lowrank, ref  # noqa: F401

@@ -1,0 +1,100 @@
+"""Pallas attention kernels: dense causal MHA and the latent (MLA) variant.
+
+The MLA kernel is the inference payoff of the paper's joint QK/VO
+compression: scores are computed *in latent space*, sᵢ = (q_lat Hᵢ) c_kᵀ,
+against the shared latent KV cache (r_k + r_v floats per token instead of
+2·d — the DeepSeek-V3 style cache saving), and values are decompressed
+per head only after the attention weighting.
+
+Grid: one program per head; at this repo's scales a whole [t × d_h] head
+fits VMEM comfortably (t ≤ 128). On a real TPU the same kernels would tile
+t into MXU-aligned blocks with an online-softmax accumulator; interpret=True
+keeps CPU numerics exact instead.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -1e30
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    d_h = q.shape[-1]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) \
+        / jnp.sqrt(jnp.float32(d_h))
+    t = q.shape[0]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    s = jnp.where(mask, s, _NEG)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def mha(q, k, v, interpret=True):
+    """Causal multi-head attention. q,k,v: [h, t, d_h] → [h, t, d_h]."""
+    h, t, d_h = q.shape
+    return pl.pallas_call(
+        _mha_kernel,
+        grid=(h,),
+        in_specs=[pl.BlockSpec((1, t, d_h), lambda i: (i, 0, 0))] * 3,
+        out_specs=pl.BlockSpec((1, t, d_h), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t, d_h), jnp.float32),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _latent_kernel(q_ref, ck_ref, cv_ref, h_ref, bv_ref, o_ref):
+    q_lat = q_ref[...]          # [t, rq]
+    ck = ck_ref[...]            # [t, rk]
+    cv = cv_ref[...]            # [t, rv]
+    h_core = h_ref[0]           # [rq, rk]
+    bv = bv_ref[0]              # [d_h, rv]
+    d_h = bv.shape[0]
+    qh = jnp.dot(q_lat, h_core, preferred_element_type=jnp.float32)
+    s = jnp.dot(qh, ck.T, preferred_element_type=jnp.float32) \
+        / jnp.sqrt(jnp.float32(d_h))
+    t = q_lat.shape[0]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    s = jnp.where(mask, s, _NEG)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    ctx_lat = jnp.dot(p, cv, preferred_element_type=jnp.float32)  # [t, rv]
+    o_ref[0] = jnp.dot(ctx_lat, bv.T, preferred_element_type=jnp.float32)
+
+
+def latent_attention(q_lat, ck, cv, h_core, bv, interpret=True):
+    """MLA: q_lat:[t,rq], ck:[t,rk], cv:[t,rv], h_core:[h,rq,rk],
+    bv:[h,d_h,rv] → [h,t,d_h]. The latent KV (ck, cv) is what a serving
+    stack caches per token."""
+    h, rq, rk = h_core.shape
+    t = q_lat.shape[0]
+    rv = cv.shape[1]
+    d_h = bv.shape[1]
+    return pl.pallas_call(
+        _latent_kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((t, rq), lambda i: (0, 0)),
+            pl.BlockSpec((t, rk), lambda i: (0, 0)),
+            pl.BlockSpec((t, rv), lambda i: (0, 0)),
+            pl.BlockSpec((1, rq, rk), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d_h, rv), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, d_h), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t, d_h), jnp.float32),
+        interpret=interpret,
+    )(q_lat, ck, cv, h_core, bv)
+
+
+def kv_cache_bytes(t, d, n_layers, dtype_bytes=2):
+    """Dense MHA cache: 2·d floats per token per layer."""
+    return t * n_layers * 2 * d * dtype_bytes
+
+
+def latent_kv_cache_bytes(t, rk, rv, n_layers, dtype_bytes=2):
+    """MLA cache: (r_k + r_v) floats per token per layer (paper benefit ii)."""
+    return t * n_layers * (rk + rv) * dtype_bytes

@@ -1,0 +1,38 @@
+"""Pallas kernel: streaming Gram/auto-correlation accumulation  C = X Xᵀ.
+
+This is the calibration pass's hot spot (paper §3.2: C = XXᵀ + λI): the
+token axis `l` is large (#calibration samples × seq len) while d is small,
+so the kernel streams token tiles HBM→VMEM and accumulates the d×d Gram
+matrix in an f32 VMEM-resident output block (classic reduction-over-grid
+pattern — on TPU this is the bf16-in / f32-accumulate MXU idiom).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # [d, bl] token tile
+    o_ref[...] += jnp.dot(x, x.T, preferred_element_type=jnp.float32)
+
+
+def gram(x, bl=256, interpret=True):
+    """C = X Xᵀ for x: [d, l], streamed over l in tiles of bl."""
+    d, l = x.shape
+    lp = ((l + bl - 1) // bl) * bl
+    if lp != l:
+        x = jnp.pad(x, ((0, 0), (0, lp - l)))  # zero pad: no effect on XXᵀ
+    grid = (lp // bl,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((d, bl), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((d, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,103 @@
+"""Pallas kernel: fused low-rank projection  y = B (A x) + bias.
+
+The paper's latent linear layer (§3.2/3.3). Two variants:
+  * dense factors  A[r×d_in], B[d_out×r];
+  * block-identity A = [I  A₂] (Eq 9) where the identity block costs no
+    FLOPs — the kernel only multiplies the A₂ tail and adds the passthrough.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks token tiles of
+size `bt` (HBM→VMEM streaming); the factor matrices are VMEM-resident
+(r·d_in + d_out·r floats, well under the ~16 MB VMEM budget for every config
+in this repo); both matmuls feed the MXU back-to-back without an HBM
+round-trip for the latent intermediate — that fusion is the point of the
+kernel. interpret=True everywhere (CPU correctness path).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lowrank_kernel(x_ref, a_ref, b_ref, bias_ref, o_ref):
+    lat = jnp.dot(x_ref[...], a_ref[...].T,
+                  preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.dot(lat, b_ref[...].T,
+                         preferred_element_type=jnp.float32) + bias_ref[...]
+
+
+def _lowrank_blockid_kernel(x_ref, a2_ref, b_ref, bias_ref, o_ref, *, r):
+    x = x_ref[...]
+    # identity block: free passthrough of the first r features (Eq 9)
+    lat = x[:, :r] + jnp.dot(x[:, r:], a2_ref[...].T,
+                             preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.dot(lat, b_ref[...].T,
+                         preferred_element_type=jnp.float32) + bias_ref[...]
+
+
+def _pad_tokens(x, bt):
+    t = x.shape[0]
+    tp = ((t + bt - 1) // bt) * bt
+    if tp != t:
+        x = jnp.pad(x, ((0, tp - t), (0, 0)))
+    return x, t
+
+
+def lowrank_matmul(x, a, b, bias=None, bt=64, interpret=True):
+    """x:[t,d_in] @ A[r,d_in]ᵀ @ B[d_out,r]ᵀ + bias, tiled over tokens."""
+    r, d_in = a.shape
+    d_out = b.shape[0]
+    if bias is None:
+        bias = jnp.zeros((d_out,), dtype=x.dtype)
+    xp, t = _pad_tokens(x, bt)
+    grid = (xp.shape[0] // bt,)
+    out = pl.pallas_call(
+        _lowrank_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((r, d_in), lambda i: (0, 0)),
+            pl.BlockSpec((d_out, r), lambda i: (0, 0)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], d_out), jnp.float32),
+        interpret=interpret,
+    )(xp, a, b, bias)
+    return out[:t]
+
+
+def lowrank_matmul_blockid(x, a2, b, bias=None, bt=64, interpret=True):
+    """Block-identity variant: a2:[r, d_in−r]; A = [I a2] implicitly."""
+    r = a2.shape[0]
+    d_in = r + a2.shape[1]
+    d_out = b.shape[0]
+    assert x.shape[1] == d_in
+    if bias is None:
+        bias = jnp.zeros((d_out,), dtype=x.dtype)
+    xp, t = _pad_tokens(x, bt)
+    grid = (xp.shape[0] // bt,)
+    out = pl.pallas_call(
+        functools.partial(_lowrank_blockid_kernel, r=r),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((r, d_in - r), lambda i: (0, 0)),
+            pl.BlockSpec((d_out, r), lambda i: (0, 0)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], d_out), jnp.float32),
+        interpret=interpret,
+    )(xp, a2, b, bias)
+    return out[:t]
+
+
+def vmem_bytes(t_block, d_in, d_out, r, dtype_bytes=4):
+    """Static VMEM footprint estimate used by the §Perf analysis."""
+    return dtype_bytes * (t_block * d_in          # x tile
+                          + r * d_in + d_out * r  # factors
+                          + t_block * r           # latent intermediate
+                          + t_block * d_out       # output tile
+                          + d_out)                # bias

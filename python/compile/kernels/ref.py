@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every kernel in this package has a matching reference here; pytest +
+hypothesis sweep shapes and assert allclose (see python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+
+def lowrank_matmul(x, a, b, bias=None):
+    """y = (x Aᵀ) Bᵀ + bias.   x:[t,d_in], a:[r,d_in], b:[d_out,r]."""
+    y = (x @ a.T) @ b.T
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def lowrank_matmul_blockid(x, a2, b, bias=None, perm=None):
+    """Block-identity fast path (paper Eq 9): A = [I  A₂] (optionally with a
+    column permutation from the pivoting of Remark 4).
+
+    x:[t,d_in], a2:[r, d_in-r], b:[d_out,r].
+    """
+    r = a2.shape[0]
+    if perm is not None:
+        x = x[:, perm]
+    lat = x[:, :r] + x[:, r:] @ a2.T
+    y = lat @ b.T
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def mha(q, k, v, causal=True):
+    """softmax(q kᵀ/√d_h + mask) v per head.  q,k,v: [h, t, d_h]."""
+    d_h = q.shape[-1]
+    s = jnp.einsum("htd,hsd->hts", q, k) / jnp.sqrt(jnp.float32(d_h))
+    if causal:
+        t = q.shape[1]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hts,hsd->htd", p, v)
+
+
+def latent_attention(q_lat, ck, cv, h_core, bv, causal=True):
+    """Multi-head *latent* attention (paper §4.1/4.2 inference path).
+
+    q_lat:[t,rq] shared query latent; ck:[t,rk], cv:[t,rv] latent KV cache;
+    h_core:[h,rq,rk] absorbed Bq,iᵀBk,i; bv:[h,d_h,rv] value decompression.
+    Scores are computed directly in latent space: sᵢ = (q_lat Hᵢ) ckᵀ —
+    the MLA trick that never materializes full K.
+    Returns [h, t, d_h].
+    """
+    d_h = bv.shape[1]
+    s = jnp.einsum("tq,hqk,sk->hts", q_lat, h_core, ck) \
+        / jnp.sqrt(jnp.float32(d_h))
+    if causal:
+        t = q_lat.shape[0]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    ctx_lat = jnp.einsum("hts,sv->htv", p, cv)           # [h,t,rv]
+    return jnp.einsum("htv,hdv->htd", ctx_lat, bv)       # decompress
+
+
+def gram(x):
+    """C = X Xᵀ over the token axis.  x: [d, l]."""
+    return x @ x.T

@@ -1,0 +1,1 @@
+"""LatentLLM reference compression algorithms (numpy). See DESIGN.md."""

@@ -1,0 +1,95 @@
+"""Local activation-aware SVD compression of a single linear layer
+(paper §3.2 + App A/B).
+
+Given W ∈ R^{d'×d}, calibration activations X ∈ R^{d×l} (or covariance C)
+and a target rank r:
+
+    B A P = svd_r[W P]          (Eq 3)
+
+with the pre-conditioner P from `precond.py` and a junction from
+`junction.py`. With a bias term the loss is minimized by centering (App
+B.2): compress against C₀ = (X−μ1ᵀ)(X−μ1ᵀ)ᵀ and update
+b̂ = b + (W − BA) μ   (Eq 45).
+"""
+
+import numpy as np
+
+from . import junction, linalg, precond
+
+
+def compress(w, rank, kind="rootcov", junction_kind="blockid",
+             x=None, c=None, bias=None, mu=None, lam_rel=1e-6):
+    """Compress one linear layer.
+
+    Returns dict with B, A, bias, info, and the achieved activation loss
+    (relative, against the pre-conditioner's own covariance).
+    """
+    w = np.asarray(w, dtype=np.float64)
+    d_out, d_in = w.shape
+
+    use_center = bias is not None
+    if c is None and x is not None:
+        if use_center:
+            c, mu = linalg.centered_covariance(x, lam_rel=lam_rel)
+        else:
+            c = linalg.covariance(x, lam_rel=lam_rel)
+    if c is None:
+        c = np.eye(d_in)
+    if mu is None:
+        mu = np.zeros(d_in)
+
+    p, p_inv = precond.build(kind, x=x, c=c, lam_rel=lam_rel)
+    rank = int(min(rank, d_out, d_in))
+    u, s, vt = linalg.svd_truncated(w @ p, rank)
+    b, a, info = junction.apply(u, s, vt, p_inv, kind=junction_kind)
+
+    w_hat = b @ a
+    new_bias = None
+    if bias is not None:
+        new_bias = np.asarray(bias, dtype=np.float64) + (w - w_hat) @ mu
+
+    loss = linalg.act_loss(w, w_hat, c)
+    denom = linalg.act_loss(w, np.zeros_like(w), c)
+    return {
+        "B": b, "A": a, "bias": new_bias, "info": info,
+        "w_hat": w_hat, "rank": rank,
+        "loss": loss, "rel_loss": loss / max(denom, 1e-30),
+        "params": junction.factor_params(d_out, d_in, rank,
+                                         junction_kind == "blockid"),
+    }
+
+
+def compress_stacked(ws, rank, kind="rootcov", junction_kind="blockid",
+                     x=None, c=None, lam_rel=1e-6):
+    """Joint-QKV style compression (App C): stack several weights that share
+    the same input and factor them with a SHARED compression matrix A and a
+    stacked dense decompression B. Returns per-weight blocks of B."""
+    w = np.concatenate([np.asarray(wi, dtype=np.float64) for wi in ws], axis=0)
+    res = compress(w, rank, kind=kind, junction_kind=junction_kind,
+                   x=x, c=c, lam_rel=lam_rel)
+    outs, off = [], 0
+    for wi in ws:
+        outs.append(res["B"][off:off + wi.shape[0]])
+        off += wi.shape[0]
+    res["B_blocks"] = outs
+    return res
+
+
+def split_head_compress(w, n_heads, rank_total, kind="rootcov",
+                        junction_kind="left", x=None, c=None, lam_rel=1e-6):
+    """Per-head independent compression (App D) — the ablation that shows
+    block-diagonal B is wasteful. rank_total is divided across heads."""
+    w = np.asarray(w, dtype=np.float64)
+    d_out = w.shape[0]
+    dh = d_out // n_heads
+    rh = max(1, rank_total // n_heads)
+    blocks = []
+    loss = 0.0
+    for i in range(n_heads):
+        wi = w[i * dh:(i + 1) * dh]
+        r = compress(wi, rh, kind=kind, junction_kind=junction_kind,
+                     x=x, c=c, lam_rel=lam_rel)
+        blocks.append(r)
+        loss += r["loss"]
+    w_hat = np.concatenate([r["w_hat"] for r in blocks], axis=0)
+    return {"blocks": blocks, "w_hat": w_hat, "loss": loss}

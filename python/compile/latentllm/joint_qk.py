@@ -1,0 +1,145 @@
+"""Joint QK compression → multi-head latent attention (paper §4.1, Alg 1,
+App E).
+
+Minimizes the attention-map error
+
+    L₂ = Σᵢ ‖Mᵢ − M̂ᵢ‖² = Σᵢ ‖C½ Gᵢ C½ − (Aq C½)ᵀ Hᵢ (Ak C½)‖²,
+    Gᵢ = Wq,iᵀ Wk,i                                   (Eq 13)
+
+a 3-mode Tucker decomposition solved by alternating symmetric
+eigendecompositions (HOSVD, Eqs 74–77):
+
+    Ak ← RightSingular_rk[Σᵢ G̃ᵢᵀ Aqᵀ Aq G̃ᵢ]
+    Aq ← RightSingular_rq[Σᵢ G̃ᵢ Akᵀ Ak G̃ᵢᵀ]         (whitened G̃ᵢ = P Gᵢ P)
+
+with cores Hᵢ = Aq G̃ᵢ Akᵀ (Eq 64) and per-head factors
+Bq,i = Jᵢᵀ Wq,i Aqᵀ Jq,  Bk,i = Jᵢ⁺ Wk,i Akᵀ Jk (Alg 1 output). Junction
+matrices Jq/Jk/Jᵢ are free; the block-identity choice saves
+rq² + rk² + d_h²·h parameters (paper §4.1).
+
+GQA (App E.3) is supported through `group_size`: Wq carries
+group_size × n_kv_heads heads, Wk carries n_kv_heads.
+
+Bias awareness (App E.2): with QK biases and token mean μ, the alternating
+matrices gain the rank-1 term Σᵢ C₀½Wq,iᵀ(Wk,iμ+bk,i)(·)ᵀWq,iC₀½ (Eq 140),
+and the HOSVD runs on the centered covariance C₀.
+"""
+
+import numpy as np
+
+from . import linalg, precond
+
+
+def _split_heads(w, n, dh):
+    w = np.asarray(w, dtype=np.float64)
+    assert w.shape[0] == n * dh, (w.shape, n, dh)
+    return [w[i * dh:(i + 1) * dh] for i in range(n)]
+
+
+def attention_map_loss(g_list_white, aq, ak):
+    """L = Σᵢ ‖Gᵢ‖² − ‖Aq Gᵢ Akᵀ‖² for orthonormal Aq/Ak rows (Eq 68)."""
+    total = 0.0
+    for g in g_list_white:
+        total += linalg.frob2(g) - linalg.frob2(aq @ g @ ak.T)
+    return total
+
+
+def compress(wq, wk, n_kv_heads, d_h, rq, rk, n_iter=8,
+             kind="rootcov", x=None, c=None, group_size=1,
+             bq=None, bk=None, mu=None, lam_rel=1e-6,
+             blockid=True):
+    """Run Algorithm 1. Returns factors + effective reconstructed weights.
+
+    wq: [group_size*n_kv_heads*d_h, d], wk: [n_kv_heads*d_h, d].
+    """
+    wq = np.asarray(wq, dtype=np.float64)
+    wk = np.asarray(wk, dtype=np.float64)
+    d = wq.shape[1]
+    rq = int(min(rq, d))
+    rk = int(min(rk, d))
+
+    bias_aware = bq is not None and bk is not None and mu is not None
+    if c is None:
+        if x is not None:
+            if bias_aware:
+                c, mu = linalg.centered_covariance(x, lam_rel=lam_rel)
+            else:
+                c = linalg.covariance(x, lam_rel=lam_rel)
+        else:
+            c = np.eye(d)
+
+    p, p_inv = precond.build(kind, x=x, c=c, lam_rel=lam_rel)
+
+    q_heads = _split_heads(wq, group_size * n_kv_heads, d_h)
+    k_heads = _split_heads(wk, n_kv_heads, d_h)
+    bq_heads = _split_heads(bq.reshape(-1, 1), group_size * n_kv_heads, d_h) \
+        if bias_aware else None
+    bk_heads = _split_heads(bk.reshape(-1, 1), n_kv_heads, d_h) \
+        if bias_aware else None
+
+    # Whitened per-pair attention kernels G̃_{i,j} = (Wq,ij P)ᵀ (Wk,i P)
+    pairs = []  # (q_idx, k_idx)
+    g_white = []
+    for i in range(n_kv_heads):
+        for j in range(group_size):
+            qi = i * group_size + j
+            g = (q_heads[qi] @ p).T @ (k_heads[i] @ p)
+            pairs.append((qi, i))
+            g_white.append(g)
+
+    # Bias rank-1 augmentation terms (Eq 140/142): in whitened coords,
+    # u_q = P Wqᵀ (Wk μ + bk),  u_k = P Wkᵀ (Wq μ + bq).
+    uq_terms = np.zeros((d, d))
+    uk_terms = np.zeros((d, d))
+    if bias_aware:
+        for (qi, ki) in pairs:
+            vk = k_heads[ki] @ mu + bk_heads[ki][:, 0] if bias_aware else None
+            vq = q_heads[qi] @ mu + bq_heads[qi][:, 0]
+            a_ = p @ q_heads[qi].T @ vk
+            b_ = p @ k_heads[ki].T @ vq
+            uq_terms += np.outer(a_, a_)
+            uk_terms += np.outer(b_, b_)
+
+    # Init Aq from Σ G G ᵀ (Alg 1 initialization line).
+    acc = sum(g @ g.T for g in g_white) + uq_terms
+    aq = linalg.topk_eigvecs(acc, rq)
+
+    losses = [attention_map_loss(g_white, aq,
+                                 linalg.topk_eigvecs(sum(g.T @ g for g in g_white), rk))]
+    ak = None
+    for _ in range(max(1, n_iter)):
+        acc_k = sum(g.T @ (aq.T @ (aq @ g)) for g in g_white) + uk_terms
+        ak = linalg.topk_eigvecs(acc_k, rk)
+        acc_q = sum(g @ (ak.T @ (ak @ g.T)) for g in g_white) + uq_terms
+        aq = linalg.topk_eigvecs(acc_q, rq)
+        losses.append(attention_map_loss(g_white, aq, ak))
+
+    # Cores + per-head decompression (Alg 1 output block), Jᵢ = I here;
+    # the per-head block-identity transform is applied by the caller's
+    # parameter accounting (rust mirrors this exactly).
+    bq_f = [qh @ p @ aq.T for qh in q_heads]          # Wq,i P Aqᵀ  (d_h×rq)
+    bk_f = [kh @ p @ ak.T for kh in k_heads]          # d_h×rk
+    aq_f = aq @ p_inv                                  # rq×d
+    ak_f = ak @ p_inv
+
+    wq_hat = np.concatenate([b @ aq_f for b in bq_f], axis=0)
+    wk_hat = np.concatenate([b @ ak_f for b in bk_f], axis=0)
+
+    new_bq, new_bk = None, None
+    if bias_aware:
+        # First-order bias correction (Eq 121/122 with Jᵢ = I):
+        # b̂ = b + (W − Ŵ) μ  keeps the mean attention logits unchanged.
+        new_bq = np.asarray(bq, dtype=np.float64) + (wq - wq_hat) @ mu
+        new_bk = np.asarray(bk, dtype=np.float64) + (wk - wk_hat) @ mu
+
+    h_q = group_size * n_kv_heads
+    params = (rq + rk) * d + h_q * d_h * rq + n_kv_heads * d_h * rk
+    if blockid:
+        params -= rq * rq + rk * rk + d_h * d_h * min(h_q, n_kv_heads)
+    return {
+        "Aq": aq_f, "Ak": ak_f, "Bq": bq_f, "Bk": bk_f,
+        "bq": new_bq, "bk": new_bk,
+        "wq_hat": wq_hat, "wk_hat": wk_hat,
+        "losses": losses, "loss": losses[-1],
+        "params": params, "rq": rq, "rk": rk,
+    }

@@ -1,0 +1,115 @@
+"""Joint Up/Down (MLP) compression via SparseLLM-style decoupling
+(paper §4.3, App H).
+
+2-layer ReLU MLP:  Z = Wu X + bu,  Z′ = σ(Z),  Y = Wd Z′ + bd.
+Decoupled loss (Eq 20):
+
+    L₄ = α‖WuX − Z‖² + β‖Z′ − σ(Z)‖² + γ‖WdZ′ − Y‖²
+
+alternating closed-form updates with auxiliary (Z, Z′):
+
+  Z′ = (γ Ŵdᵀ Ŵd + β I)⁺ (β σ(Z) + γ Ŵdᵀ (Y − b̂d))        (Eq 21)
+  Z  elementwise:  z₋ = Ŵu X + b̂u  if that branch (σ(z)=0) wins,
+                   z₊ = (α z₋ + β z′)/(α+β) if the positive branch wins
+                   — choose by the smaller pointwise decoupled loss (Eq 22)
+  Ŵu = svd_r[(Z − μz1ᵀ)(X − μx1ᵀ)⁺ · Cx^{1/2}]             (App H)
+  Ŵd = svd_r[(Y − μy1ᵀ)(Z′ − μz′1ᵀ)⁺ · Cz′^{1/2}]
+
+The effective-weight regression (Z X⁺) + root-cov ASVD is exactly the
+paper's "SVD of Z X⁺ C^{1/2}" with the bias handled by centering (App B.2).
+"""
+
+import numpy as np
+
+from . import asvd, linalg
+
+
+def _relu(z):
+    return np.maximum(z, 0.0)
+
+
+def _fit_effective(target, x, rank, junction_kind, lam_rel):
+    """Ridge-fit W_eff: target ≈ W_eff x + b, then root-cov ASVD compress."""
+    x = np.asarray(x, dtype=np.float64)
+    t = np.asarray(target, dtype=np.float64)
+    mu_x = x.mean(axis=1, keepdims=True)
+    mu_t = t.mean(axis=1, keepdims=True)
+    xc = x - mu_x
+    tc = t - mu_t
+    c = linalg.covariance(xc, lam_rel=max(lam_rel, 1e-8))
+    l = x.shape[1]
+    w_eff = (tc @ xc.T / l) @ linalg.pinv(c)
+    b_eff = (mu_t - w_eff @ mu_x)[:, 0]
+    res = asvd.compress(w_eff, rank, kind="rootcov",
+                        junction_kind=junction_kind, c=c,
+                        bias=b_eff, mu=np.zeros(x.shape[0]),
+                        lam_rel=lam_rel)
+    return res["w_hat"], b_eff, res
+
+
+def mlp_loss(wu, bu, wd, bd, x, y):
+    yh = wd @ _relu(wu @ x + bu[:, None]) + bd[:, None]
+    return linalg.frob2(yh - y)
+
+
+def compress(wu, bu, wd, bd, x, ru, rd, n_iter=4,
+             junction_kind="blockid", alpha=1.0, beta=1.0, gamma=1.0,
+             lam_rel=1e-6):
+    """Jointly compress (Wu, Wd) given calibration input X [d×l].
+
+    Returns factored results for both projections + per-iteration MLP loss.
+    """
+    wu = np.asarray(wu, dtype=np.float64)
+    wd = np.asarray(wd, dtype=np.float64)
+    bu = np.zeros(wu.shape[0]) if bu is None else np.asarray(bu, np.float64)
+    bd = np.zeros(wd.shape[0]) if bd is None else np.asarray(bd, np.float64)
+    x = np.asarray(x, dtype=np.float64)
+
+    z_teacher = wu @ x + bu[:, None]
+    zp_teacher = _relu(z_teacher)
+    y = wd @ zp_teacher + bd[:, None]
+
+    # Init: local root-cov ASVD of both layers (the non-joint baseline).
+    res_u = asvd.compress(wu, ru, kind="rootcov", junction_kind=junction_kind,
+                          x=x, bias=bu, lam_rel=lam_rel)
+    res_d = asvd.compress(wd, rd, kind="rootcov", junction_kind=junction_kind,
+                          x=zp_teacher, bias=bd, lam_rel=lam_rel)
+    wu_hat, bu_hat = res_u["w_hat"], res_u["bias"]
+    wd_hat, bd_hat = res_d["w_hat"], res_d["bias"]
+
+    losses = [mlp_loss(wu_hat, bu_hat, wd_hat, bd_hat, x, y)]
+    z = wu_hat @ x + bu_hat[:, None]
+
+    best = (losses[0], wu_hat, bu_hat, wd_hat, bd_hat, res_u, res_d)
+    for _ in range(max(0, n_iter)):
+        # --- Z′ update (Eq 21) given Ŵd, Z.
+        di = wd_hat.shape[1]
+        m = gamma * (wd_hat.T @ wd_hat) + beta * np.eye(di)
+        rhs = beta * _relu(z) + gamma * (wd_hat.T @ (y - bd_hat[:, None]))
+        zp = np.linalg.solve(m, rhs)
+
+        # --- Z update (Eq 22), branch chosen by pointwise decoupled loss.
+        z_lin = wu_hat @ x + bu_hat[:, None]
+        z_pos = (alpha * z_lin + beta * zp) / (alpha + beta)
+        z_pos = np.maximum(z_pos, 0.0)   # positive branch must satisfy z≥0
+        z_neg = np.minimum(z_lin, 0.0)   # negative branch must satisfy z≤0
+        loss_pos = alpha * (z_pos - z_lin) ** 2 + beta * (zp - z_pos) ** 2
+        loss_neg = alpha * (z_neg - z_lin) ** 2 + beta * zp ** 2
+        z = np.where(loss_pos <= loss_neg, z_pos, z_neg)
+
+        # --- Refit Ŵu from (X → Z) and Ŵd from (Z′ → Y), App H.
+        wu_hat, bu_hat, res_u = _fit_effective(z, x, ru, junction_kind, lam_rel)
+        wd_hat, bd_hat, res_d = _fit_effective(y, zp, rd, junction_kind, lam_rel)
+
+        cur = mlp_loss(wu_hat, bu_hat, wd_hat, bd_hat, x, y)
+        losses.append(cur)
+        if cur < best[0]:
+            best = (cur, wu_hat, bu_hat, wd_hat, bd_hat, res_u, res_d)
+
+    _, wu_hat, bu_hat, wd_hat, bd_hat, res_u, res_d = best
+    return {
+        "wu_hat": wu_hat, "bu": bu_hat, "wd_hat": wd_hat, "bd": bd_hat,
+        "res_u": res_u, "res_d": res_d,
+        "losses": losses, "loss": best[0],
+        "params": res_u["params"] + res_d["params"],
+    }

@@ -1,0 +1,133 @@
+"""Joint VO compression (paper §4.2, App G).
+
+Per-head loss for arbitrary attention weights (Eq 184):
+
+    L₃ = Σᵢ ‖ Wo,i Wv,i C½ − Bo (Ao,i Bv,i) (Av C½) ‖²,
+    Gᵢ = Wo,i Wv,i C½  ∈ R^{d'×d}
+
+solved by alternating HOSVD (Eqs 185–188):
+
+    Bo  = top-ro eigvecs[Σᵢ Gᵢ Av′ᵀ Av′ Gᵢᵀ]   (columns, d'×ro)
+    Av′ = top-rv eigvecs[Σᵢ Gᵢᵀ Bo Boᵀ Gᵢ]     (rows,    rv×d)
+    Ao,i = Boᵀ Wo,i Jᵢ,   Bv,i = Jᵢ⁺ (Wv,i C½) Av′ᵀ,   Av = Av′ C^{-½}
+
+Bias update (App G.1): run on the centered covariance C₀ and set
+b̂o = bo + Σᵢ[Wo,i(Wv,iμ+bv,i) − Ŵo,i(Ŵv,iμ+bv,i)] (Eq 193; b̂v absorbed).
+
+`combined()` is the single-SVD variant of Eq 183 (all heads merged), and the
+contraction-order FLOP analysis of Eqs 17/18 lives in `contraction_flops`.
+Remark 11: joint VO is typically *not* better than split V/O — we implement
+both and the pipeline default follows the paper (split V/O); this module
+backs the ablation bench.
+"""
+
+import numpy as np
+
+from . import linalg, precond
+
+
+def _split_heads(w, n, dh, axis):
+    w = np.asarray(w, dtype=np.float64)
+    if axis == 0:
+        return [w[i * dh:(i + 1) * dh] for i in range(n)]
+    return [w[:, i * dh:(i + 1) * dh] for i in range(n)]
+
+
+def compress(wv, wo, n_heads, d_h, rv, ro, n_iter=4, kind="rootcov",
+             x=None, c=None, bv=None, bo=None, mu=None, lam_rel=1e-6,
+             blockid=True):
+    """wv: [h*d_h, d] value proj; wo: [d', h*d_h] output proj."""
+    wv = np.asarray(wv, dtype=np.float64)
+    wo = np.asarray(wo, dtype=np.float64)
+    d = wv.shape[1]
+    d_out = wo.shape[0]
+    rv = int(min(rv, d))
+    ro = int(min(ro, d_out))
+
+    bias_aware = bv is not None and bo is not None and mu is not None
+    if c is None:
+        if x is not None:
+            if bias_aware:
+                c, mu = linalg.centered_covariance(x, lam_rel=lam_rel)
+            else:
+                c = linalg.covariance(x, lam_rel=lam_rel)
+        else:
+            c = np.eye(d)
+    p, p_inv = precond.build(kind, x=x, c=c, lam_rel=lam_rel)
+
+    v_heads = _split_heads(wv, n_heads, d_h, axis=0)
+    o_heads = _split_heads(wo, n_heads, d_h, axis=1)
+    g = [o_heads[i] @ (v_heads[i] @ p) for i in range(n_heads)]  # d'×d
+
+    # Init Av′ from Σ Gᵀ G.
+    av = linalg.topk_eigvecs(sum(gi.T @ gi for gi in g), rv)
+    bo_m = None
+    losses = []
+    for _ in range(max(1, n_iter)):
+        bo_m = linalg.topk_eigvecs(sum(gi @ (av.T @ (av @ gi.T)) for gi in g),
+                                   ro).T  # d'×ro orthonormal columns
+        av = linalg.topk_eigvecs(sum(gi.T @ (bo_m @ (bo_m.T @ gi)) for gi in g),
+                                 rv)
+        loss = sum(linalg.frob2(gi) - linalg.frob2(bo_m.T @ gi @ av.T)
+                   for gi in g)
+        losses.append(loss)
+
+    ao = [bo_m.T @ oh for oh in o_heads]              # ro×d_h
+    bv_f = [(vh @ p) @ av.T for vh in v_heads]        # d_h×rv
+    av_f = av @ p_inv                                  # rv×d
+
+    wv_hat = np.concatenate([b @ av_f for b in bv_f], axis=0)
+    wo_hat = np.concatenate([bo_m @ a for a in ao], axis=1)
+
+    new_bo = None
+    if bias_aware:
+        bv_heads = _split_heads(np.asarray(bv, dtype=np.float64).reshape(-1, 1),
+                                n_heads, d_h, axis=0)
+        vo_hat_heads = _split_heads(wv_hat, n_heads, d_h, axis=0)
+        oo_hat_heads = _split_heads(wo_hat, n_heads, d_h, axis=1)
+        new_bo = np.asarray(bo, dtype=np.float64).copy()
+        for i in range(n_heads):
+            new_bo += o_heads[i] @ (v_heads[i] @ mu + bv_heads[i][:, 0])
+            new_bo -= oo_hat_heads[i] @ (vo_hat_heads[i] @ mu + bv_heads[i][:, 0])
+
+    params = rv * d + ro * d_out + n_heads * d_h * (rv + ro)
+    if blockid:
+        params -= rv * rv + ro * ro + d_h * d_h * n_heads
+    return {
+        "Av": av_f, "Bv": bv_f, "Ao": ao, "Bo": bo_m,
+        "bv": None if bv is None else np.asarray(bv, dtype=np.float64),
+        "bo": new_bo,
+        "wv_hat": wv_hat, "wo_hat": wo_hat,
+        "losses": losses, "loss": losses[-1] if losses else None,
+        "params": params, "rv": rv, "ro": ro,
+    }
+
+
+def combined(wv, wo, rank, kind="rootcov", x=None, c=None, lam_rel=1e-6):
+    """Single-SVD joint VO (Eq 183): factor Wo Wv C½ with one rank-r SVD."""
+    wv = np.asarray(wv, dtype=np.float64)
+    wo = np.asarray(wo, dtype=np.float64)
+    d = wv.shape[1]
+    if c is None:
+        c = linalg.covariance(x, lam_rel=lam_rel) if x is not None else np.eye(d)
+    p, p_inv = precond.build(kind, x=x, c=c, lam_rel=lam_rel)
+    m = wo @ wv @ p
+    u, s, vt = linalg.svd_truncated(m, int(rank))
+    w_hat = (u * s) @ vt @ p_inv   # effective Wo·Wv product
+    loss = linalg.frob2(m) - float(np.sum(s**2))
+    return {"w_hat_product": w_hat, "loss": loss, "rank": int(rank)}
+
+
+def contraction_flops(d, d_h, h, l, rv, ro):
+    """MLA contraction-order complexities of Eq 17 vs Eq 18 (MAC counts).
+
+    Returns (order_a, order_b, reduction): order_a applies attention after
+    per-head value decompression (Eq 17); order_b applies attention on the
+    shared latent and defers Bo (Eq 18). The paper's rule: if h·ro < rv the
+    weighting should happen on the output compression side.
+    """
+    order_a = l * d * rv + h * d_h * l * rv + h * d_h * l * l \
+        + h * d_h * l * ro + h * d * l * ro
+    order_b = l * d * rv + rv * l * l + h * d_h * l * rv \
+        + h * d_h * l * ro + d * l * ro
+    return order_a, order_b, order_a - order_b

@@ -1,0 +1,90 @@
+"""Junction matrices J (paper §3.3, App A.2).
+
+Given the truncated SVD  U S V = svd_r[W P],  any J with S J J⁺ = S yields a
+valid factorization  B = U S J,  A = J⁺ V P⁺  with identical loss. The
+*block-identity* choice J = V₁ (left r×r block of V P⁺) turns A into
+[I  V₁⁺V₂], saving r² parameters and r² MACs per token (paper Eq 9) — that
+is the parameter accounting that makes low-rank compression always shrink
+the model (r(d+d')−r² < d·d' for all r < min(d,d')).
+
+Pivoting (Remark 4): when V₁ is ill-conditioned we greedily permute columns
+(rank-revealing Gram-Schmidt) so the leading block is well conditioned; the
+permutation costs no FLOPs at inference, only the stored index vector.
+"""
+
+import numpy as np
+
+JUNCTIONS = ("left", "right", "sym", "blockid")
+
+
+def _greedy_pivot(m, r):
+    """Pick r column indices of m (r×d) making m[:, idx] well conditioned.
+
+    Greedy rank-revealing selection: repeatedly take the column with the
+    largest residual after projecting out the span of already-chosen ones.
+    Returns an index array of length r.
+    """
+    m = np.asarray(m, dtype=np.float64)
+    d = m.shape[1]
+    q = np.zeros((m.shape[0], 0))
+    resid = m.copy()
+    chosen = []
+    for _ in range(r):
+        norms = np.sum(resid**2, axis=0)
+        norms[chosen] = -1.0
+        j = int(np.argmax(norms))
+        chosen.append(j)
+        v = m[:, j] - q @ (q.T @ m[:, j]) if q.shape[1] else m[:, j].copy()
+        n = np.linalg.norm(v)
+        if n < 1e-12:
+            break
+        v /= n
+        q = np.concatenate([q, v[:, None]], axis=1)
+        resid = resid - np.outer(v, v @ resid)
+    while len(chosen) < r:  # degenerate fallback
+        for j in range(d):
+            if j not in chosen:
+                chosen.append(j)
+                break
+    return np.array(chosen[:r], dtype=np.int64)
+
+
+def apply(u, s, vt, p_inv, kind="blockid", pivot=True):
+    """Build (B, A, info) from a truncated whitened SVD.
+
+    u [d'×r], s [r], vt [r×d]: svd_r[W P];  p_inv: P⁺ [d×d].
+    Returns B [d'×r], A [r×d] with Ŵ = B A, plus an info dict carrying the
+    identity-block metadata for parameter/FLOP accounting.
+    """
+    r = s.shape[0]
+    m = vt @ p_inv  # V P⁺, the "whitened right-singular" rows (r×d)
+    info = {"kind": kind, "rank": r, "identity_cols": None, "perm": None}
+
+    if kind == "left":
+        return (u * s), m, info
+    if kind == "right":
+        return u, (m * s[:, None]), info
+    if kind == "sym":
+        rs = np.sqrt(s)
+        return (u * rs), (m * rs[:, None]), info
+    if kind == "blockid":
+        if pivot:
+            idx = _greedy_pivot(m, r)
+        else:
+            idx = np.arange(r)
+        v1 = m[:, idx]
+        # J = V₁  →  A = V₁⁺ [V₁ V₂] has an exact identity block at `idx`.
+        v1_inv = np.linalg.pinv(v1)
+        a = v1_inv @ m
+        a[:, idx] = np.eye(r)  # exact by construction; kill fp residue
+        b = (u * s) @ v1
+        info["identity_cols"] = idx
+        info["perm"] = idx
+        return b, a, info
+    raise ValueError(f"unknown junction {kind!r}")
+
+
+def factor_params(d_out, d_in, r, blockid):
+    """Parameter count of a (B,A) factor pair (paper §3.3)."""
+    n = r * (d_out + d_in)
+    return n - r * r if blockid else n

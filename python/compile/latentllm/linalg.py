@@ -1,0 +1,80 @@
+"""Small linear-algebra helpers shared by the compression algorithms.
+
+All computations are float64 numpy; weights enter as W[out, in] matching the
+paper's W ∈ R^{d'×d} acting on column activations y = W x.
+"""
+
+import numpy as np
+
+
+def sym(c):
+    return 0.5 * (c + c.T)
+
+
+def sqrtm_psd(c, eps=1e-12):
+    """Symmetric PSD matrix square root via eigendecomposition."""
+    w, v = np.linalg.eigh(sym(np.asarray(c, dtype=np.float64)))
+    w = np.clip(w, 0.0, None)
+    return (v * np.sqrt(w)) @ v.T
+
+
+def invsqrtm_psd(c, eps=1e-10):
+    """Pseudo-inverse square root of a symmetric PSD matrix."""
+    w, v = np.linalg.eigh(sym(np.asarray(c, dtype=np.float64)))
+    wmax = max(float(w[-1]), 0.0)
+    inv = np.where(w > eps * max(wmax, 1.0), 1.0 / np.sqrt(np.clip(w, 0, None)), 0.0)
+    return (v * inv) @ v.T
+
+
+def pinv(a, rcond=1e-10):
+    return np.linalg.pinv(np.asarray(a, dtype=np.float64), rcond=rcond)
+
+
+def topk_eigvecs(c, k):
+    """Top-k eigenvectors of a symmetric matrix, as rows (k×d).
+
+    This is `RightSingular_k[.]` of Algorithm 1 applied to a symmetric PSD
+    accumulation matrix: right-singular vectors == eigenvectors.
+    """
+    w, v = np.linalg.eigh(sym(np.asarray(c, dtype=np.float64)))
+    idx = np.argsort(w)[::-1][:k]
+    return v[:, idx].T
+
+
+def svd_truncated(m, r):
+    """Rank-r truncated SVD. Returns (U[d'×r], s[r], Vt[r×d])."""
+    u, s, vt = np.linalg.svd(np.asarray(m, dtype=np.float64), full_matrices=False)
+    return u[:, :r], s[:r], vt[:r, :]
+
+
+def frob2(m):
+    m = np.asarray(m)
+    return float(np.sum(m.astype(np.float64) ** 2))
+
+
+def act_loss(w, w_hat, c):
+    """Activation-aware loss tr[(W−Ŵ) C (W−Ŵ)ᵀ]  (paper Eq 4/35)."""
+    d = np.asarray(w, dtype=np.float64) - np.asarray(w_hat, dtype=np.float64)
+    return float(np.trace(d @ np.asarray(c, dtype=np.float64) @ d.T))
+
+
+def covariance(x, lam_rel=1e-6, normalize=True):
+    """C = (XXᵀ + λI)/l — shrunk auto-correlation of activations (Remark 3).
+
+    x: [d, l] column-token activations. λ is relative to mean diagonal.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    l = x.shape[1]
+    c = x @ x.T
+    tr = np.trace(c) / max(c.shape[0], 1)
+    c += lam_rel * max(tr, 1e-12) * np.eye(c.shape[0])
+    if normalize:
+        c /= max(l, 1)
+    return sym(c)
+
+
+def centered_covariance(x, lam_rel=1e-6):
+    """C₀ = (X−μ1ᵀ)(X−μ1ᵀ)ᵀ/l + λI — used with bias updates (App B.2)."""
+    x = np.asarray(x, dtype=np.float64)
+    mu = x.mean(axis=1, keepdims=True)
+    return covariance(x - mu, lam_rel=lam_rel), mu[:, 0]

@@ -1,0 +1,60 @@
+"""Pre-conditioning matrices P for activation-aware SVD (paper §3.2, Table 1).
+
+Each builder maps calibration activations X ∈ R^{d×l} to P ∈ R^{d×d} used as
+svd_r[W P]; the optimal choice is the root covariance P = C^{1/2}
+(paper Eq 5 / App B.1). All others are sub-optimal baselines reproduced for
+Table 2 / Figs 7 & 16.
+"""
+
+import numpy as np
+
+from . import linalg
+
+PRECONDITIONERS = (
+    "identity",      # plain SVD              [Denton'14; Sainath'13]
+    "diag_hessian",  # diag[(XXᵀ+λI)^{-1}]^{-1/2}   [OBS; GPTQ; SparseGPT]
+    "diag_l1",       # diag[Σ_j |X_ij|]^α            [ASVD; AWQ]
+    "diag_l2",       # diag[XXᵀ]^{1/2}               [WandA]
+    "cov",           # XXᵀ + λI                      [CorDA]
+    "rootcov",       # (XXᵀ + λI)^{1/2}              [LatentLLM — optimal]
+)
+
+
+def build(kind, x=None, c=None, lam_rel=1e-6, alpha=0.5):
+    """Return (P, P⁺) for the given pre-conditioner kind.
+
+    Either raw activations `x` [d×l] or a covariance `c` [d×d] must be given
+    (diag_l1 needs raw activations; it falls back to sqrt-diag of C if only C
+    is available, which matches the ℓ1≈ℓ2 diagonal family).
+    """
+    if c is None:
+        if x is None:
+            raise ValueError("need x or c")
+        c = linalg.covariance(x, lam_rel=lam_rel)
+    c = np.asarray(c, dtype=np.float64)
+    d = c.shape[0]
+
+    if kind == "identity":
+        p = np.eye(d)
+        return p, p
+    if kind == "diag_hessian":
+        h = np.linalg.inv(c + 1e-10 * np.eye(d))
+        dg = np.clip(np.diag(h), 1e-30, None) ** -0.5
+        return np.diag(dg), np.diag(1.0 / dg)
+    if kind == "diag_l1":
+        if x is not None:
+            dg = np.abs(np.asarray(x, dtype=np.float64)).sum(axis=1)
+            dg /= max(x.shape[1], 1)
+        else:
+            dg = np.sqrt(np.clip(np.diag(c), 0, None))
+        dg = np.clip(dg, 1e-30, None) ** alpha
+        return np.diag(dg), np.diag(1.0 / dg)
+    if kind == "diag_l2":
+        dg = np.sqrt(np.clip(np.diag(c), 1e-30, None))
+        return np.diag(dg), np.diag(1.0 / dg)
+    if kind == "cov":
+        return c, linalg.pinv(c)
+    if kind == "rootcov":
+        p = linalg.sqrtm_psd(c)
+        return p, linalg.invsqrtm_psd(c)
+    raise ValueError(f"unknown preconditioner {kind!r}")

@@ -1,0 +1,59 @@
+"""Quantization-aware distillation of the low-rank factors (paper App I.1).
+
+Chunk-wise q-bit uniform quantization (Eq 242) plus STE-style projected
+gradient refinement of B, A against the activation loss — in a non-autograd
+setting STE reduces to projected gradient descent with the quantizer as the
+projection.
+"""
+
+import numpy as np
+
+from . import linalg
+
+
+def quantize_uniform(x, bits, chunk=64):
+    """Chunk-wise min/max uniform quantization along the last axis."""
+    x = np.asarray(x, dtype=np.float64)
+    flat = x.reshape(-1)
+    n = flat.size
+    out = np.empty_like(flat)
+    levels = (1 << bits) - 1
+    for s in range(0, n, chunk):
+        seg = flat[s:s + chunk]
+        lo, hi = float(seg.min()), float(seg.max())
+        if hi - lo < 1e-12:
+            out[s:s + chunk] = seg
+            continue
+        scale = levels / (hi - lo)
+        out[s:s + chunk] = np.round((seg - lo) * scale) / scale + lo
+    return out.reshape(x.shape)
+
+
+def quantize_factors(b, a, w, c, bits=4, chunk=64, n_iter=20):
+    """Quantize (B, A) then STE-refine against ‖(BA−W)C½‖².
+
+    Returns (Bq, Aq, history) where history[0] is the post-quantization loss
+    (no refinement) and history[-1] the refined loss.
+    """
+    b = np.asarray(b, dtype=np.float64).copy()
+    a = np.asarray(a, dtype=np.float64).copy()
+    w = np.asarray(w, dtype=np.float64)
+    c = np.asarray(c, dtype=np.float64)
+
+    bq = quantize_uniform(b, bits, chunk)
+    aq = quantize_uniform(a, bits, chunk)
+    hist = [linalg.act_loss(w, bq @ aq, c)]
+    lmax = float(np.linalg.eigvalsh(c)[-1])
+    fb, fa = b.copy(), a.copy()   # latent full-precision shadows (STE state)
+    for _ in range(n_iter):
+        e = (bq @ aq - w) @ c
+        gb = 2.0 * e @ aq.T
+        ga = 2.0 * bq.T @ e
+        lb = 2.0 * lmax * max(float(np.sum(aq * aq)), 1e-12)
+        la = 2.0 * lmax * max(float(np.sum(bq * bq)), 1e-12)
+        fb -= gb / lb
+        fa -= ga / la
+        bq = quantize_uniform(fb, bits, chunk)
+        aq = quantize_uniform(fa, bits, chunk)
+        hist.append(linalg.act_loss(w, bq @ aq, c))
+    return bq, aq, hist

@@ -1,0 +1,54 @@
+"""Compression-ratio → rank solvers (paper §3.3 parameter accounting).
+
+`keep` is the fraction of the original weight's parameters retained
+(keep = 1 − compression_ratio). Counts follow the paper exactly:
+
+  dense factors  : r (d + d')
+  block identity : r (d + d') − r²                       (Eq 9)
+  joint QK       : (rq+rk)(d + d_h·h) − rq² − rk² − d_h²·h   (§4.1)
+"""
+
+import math
+
+
+def local_rank(d_out, d_in, keep, blockid):
+    """Rank for one linear so factor params ≈ keep·d_out·d_in."""
+    target = keep * d_out * d_in
+    s = d_out + d_in
+    if blockid:
+        disc = s * s - 4.0 * target
+        r = (s - math.sqrt(max(disc, 0.0))) / 2.0
+    else:
+        r = target / s
+    r = int(round(r))
+    return max(1, min(r, min(d_out, d_in)))
+
+
+def local_params(d_out, d_in, r, blockid):
+    n = r * (d_out + d_in)
+    return n - r * r if blockid else n
+
+
+def joint_qk_rank(d, d_h, n_q_heads, n_kv_heads, keep, blockid=True):
+    """Shared rank rq = rk = r for the joint QK factorization."""
+    orig = d * d_h * (n_q_heads + n_kv_heads)
+    target = keep * orig
+    s = 2 * d + d_h * (n_q_heads + n_kv_heads)
+    credit = d_h * d_h * min(n_q_heads, n_kv_heads) if blockid else 0
+    if blockid:
+        # 2r² − s·r + (target + credit) = 0, take the smaller root.
+        disc = s * s - 8.0 * (target + credit)
+        if disc < 0:
+            return min(d, d_h * min(n_q_heads, n_kv_heads))
+        r = (s - math.sqrt(disc)) / 4.0
+    else:
+        r = target / s
+    r = int(round(r))
+    return max(1, min(r, d))
+
+
+def joint_qk_params(d, d_h, n_q_heads, n_kv_heads, rq, rk, blockid=True):
+    n = (rq + rk) * d + n_q_heads * d_h * rq + n_kv_heads * d_h * rk
+    if blockid:
+        n -= rq * rq + rk * rk + d_h * d_h * min(n_q_heads, n_kv_heads)
+    return n

@@ -1,0 +1,160 @@
+"""Sparse and low-rank+sparse approximation (paper App I).
+
+Ŵ = B A + D with ‖D‖₀ ≤ κ, activation-aware loss ‖(Ŵ−W)C½‖².
+Solvers:
+  * FISTA with soft-shrinkage (Eqs 233–235),
+  * projected gradient with hard-shrink top-κ (the STE variant, Eq 237 —
+    in a non-autograd setting STE == projected GD),
+  * soft-shrink gradient descent (the differentiable variant of Fig 13),
+  * alternating low-rank + sparse (Fig 14) and sparsified-factor (Fig 15),
+  * WandA-style diagonal-C ablation (Eq 238, Fig 16).
+"""
+
+import numpy as np
+
+from . import linalg
+
+
+def hard_topk(m, k):
+    """Keep the k entries of largest magnitude (global), zero the rest."""
+    m = np.asarray(m, dtype=np.float64)
+    if k <= 0:
+        return np.zeros_like(m)
+    if k >= m.size:
+        return m.copy()
+    flat = np.abs(m).ravel()
+    thresh = np.partition(flat, m.size - k)[m.size - k]
+    out = np.where(np.abs(m) >= thresh, m, 0.0)
+    # tie-breaking may keep a few extra entries; trim deterministically
+    extra = int((out != 0).sum()) - k
+    if extra > 0:
+        idx = np.argwhere((np.abs(m) == thresh).ravel()).ravel()[:extra]
+        flat_out = out.ravel()
+        flat_out[idx] = 0.0
+        out = flat_out.reshape(m.shape)
+    return out
+
+
+def soft_shrink(m, alpha):
+    m = np.asarray(m, dtype=np.float64)
+    return np.sign(m) * np.maximum(np.abs(m) - alpha, 0.0)
+
+
+def sparse_loss(w, d, c, ba=None):
+    ba = 0.0 if ba is None else ba
+    return linalg.act_loss(w, d + ba, c)
+
+
+def fista(w, c, kappa, ba=None, n_iter=50, lam=None):
+    """FISTA soft-shrink solve of Eq 232. λ is auto-tuned to land near the
+    target sparsity κ by bisection over a few outer rounds (the paper notes
+    tuning λ is the method's weakness — reproduced faithfully)."""
+    w = np.asarray(w, dtype=np.float64)
+    c = np.asarray(c, dtype=np.float64)
+    resid = w - (0.0 if ba is None else ba)
+    lmax = float(np.linalg.eigvalsh(c)[-1])
+    step = 1.0 / (2.0 * max(lmax, 1e-12))
+
+    def run(lam_):
+        d = np.zeros_like(w)
+        yk = d.copy()
+        t = 1.0
+        for _ in range(n_iter):
+            grad = 2.0 * (yk - resid) @ c
+            d_new = soft_shrink(yk - step * grad, lam_ * step)
+            t_new = 0.5 * (1.0 + np.sqrt(1.0 + 4.0 * t * t))
+            yk = d_new + ((t - 1.0) / t_new) * (d_new - d)
+            d, t = d_new, t_new
+        return d
+
+    if lam is not None:
+        d = run(lam)
+        return d, sparse_loss(w, d, c, ba)
+    lo, hi = 1e-8, float(np.abs(2.0 * resid @ c).max()) + 1e-6
+    d = np.zeros_like(w)
+    for _ in range(12):
+        mid = np.sqrt(lo * hi)
+        d = run(mid)
+        nnz = int((d != 0).sum())
+        if nnz > kappa:
+            lo = mid
+        else:
+            hi = mid
+    d = run(hi)
+    return d, sparse_loss(w, d, c, ba)
+
+
+def projected_gd(w, c, kappa, ba=None, n_iter=60, shrink="hard"):
+    """Projected gradient: D ← Π[D − η∇];  Π = hard top-κ (STE, Eq 237) or
+    soft-shrink tuned to κ. Deterministic target sparsity, unlike FISTA."""
+    w = np.asarray(w, dtype=np.float64)
+    c = np.asarray(c, dtype=np.float64)
+    resid = w - (0.0 if ba is None else ba)
+    lmax = float(np.linalg.eigvalsh(c)[-1])
+    step = 1.0 / (2.0 * max(lmax, 1e-12))
+    d = hard_topk(resid, kappa)
+    for _ in range(n_iter):
+        grad = 2.0 * (d - resid) @ c
+        d = d - step * grad
+        if shrink == "hard":
+            d = hard_topk(d, kappa)
+        else:
+            flat = np.abs(d).ravel()
+            if kappa < d.size:
+                alpha = np.partition(flat, d.size - kappa)[d.size - kappa]
+                d = soft_shrink(d, alpha * 0.5)
+                d = hard_topk(d, kappa)
+    return d, sparse_loss(w, d, c, ba)
+
+
+def wanda_diag(w, c, kappa):
+    """WandA/SparseGPT-style one-shot: diagonal-C importance |W|·diag(C)^½
+    (Eq 238 ablation — degraded vs full-C iterative, Fig 16)."""
+    w = np.asarray(w, dtype=np.float64)
+    imp = np.abs(w) * np.sqrt(np.clip(np.diag(c), 0, None))[None, :]
+    mask = hard_topk(imp, kappa) != 0
+    d = np.where(mask, w, 0.0)
+    return d, sparse_loss(w, d, c)
+
+
+def lowrank_plus_sparse(w, c, rank, kappa, n_iter=6, solver="hard"):
+    """Alternate svd_r[(W−D)C½] and sparse fit of (W−BA) (App I / Fig 14)."""
+    from . import asvd
+    w = np.asarray(w, dtype=np.float64)
+    d = np.zeros_like(w)
+    ba = np.zeros_like(w)
+    hist = []
+    for _ in range(n_iter):
+        res = asvd.compress(w - d, rank, kind="rootcov",
+                            junction_kind="left", c=c)
+        ba = res["w_hat"]
+        if solver == "fista":
+            d, _ = fista(w - ba, c, kappa, n_iter=30)
+        else:
+            d, _ = projected_gd(w - ba, c, kappa, n_iter=30)
+        hist.append(linalg.act_loss(w, ba + d, c))
+    return ba, d, hist
+
+
+def sparsify_factors(b, a, w, c, keep_frac, n_iter=40):
+    """Fig 15: hard-sparsify the low-rank factors B, A themselves with
+    alternating projected refits against the activation loss."""
+    b = np.asarray(b, dtype=np.float64).copy()
+    a = np.asarray(a, dtype=np.float64).copy()
+    w = np.asarray(w, dtype=np.float64)
+    c = np.asarray(c, dtype=np.float64)
+    kb = max(1, int(keep_frac * b.size))
+    ka = max(1, int(keep_frac * a.size))
+    lmax = float(np.linalg.eigvalsh(c)[-1])
+    hist = []
+    for _ in range(n_iter):
+        # grad wrt B: 2 (BA−W) C Aᵀ ; wrt A: 2 Bᵀ (BA−W) C
+        e = (b @ a - w) @ c
+        gb = 2.0 * e @ a.T
+        ga = 2.0 * b.T @ e
+        lb = 2.0 * lmax * max(float(np.sum(a * a)), 1e-12)
+        la = 2.0 * lmax * max(float(np.sum(b * b)), 1e-12)
+        b = hard_topk(b - gb / lb, kb)
+        a = hard_topk(a - ga / la, ka)
+        hist.append(linalg.act_loss(w, b @ a, c))
+    return b, a, hist

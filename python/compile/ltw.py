@@ -1,0 +1,58 @@
+"""LTW1 — the weight/tensor interchange format between python and rust.
+
+Little-endian binary:
+  magic b"LTW1" | u32 n_tensors | per tensor:
+    u16 name_len | name utf-8 | u8 dtype (0=f32, 1=i32) | u8 ndim
+    | u32 dims... | raw data (C order)
+See DESIGN.md §5 and rust/src/model/io.rs (the reader).
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"LTW1"
+_DTYPES = {0: np.float32, 1: np.int32}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_ltw(path, tensors):
+    """tensors: dict[str, np.ndarray] (f32 or i32). Insertion order kept."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _CODES:
+                arr = arr.astype(np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _CODES[arr.dtype], arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<I", dim))
+            f.write(arr.tobytes())
+
+
+def read_ltw(path):
+    out = {}
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == MAGIC, f"bad magic in {path}"
+    (n,) = struct.unpack_from("<I", data, 4)
+    off = 8
+    for _ in range(n):
+        (nlen,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off:off + nlen].decode("utf-8")
+        off += nlen
+        code, ndim = struct.unpack_from("<BB", data, off)
+        off += 2
+        dims = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        dt = _DTYPES[code]
+        count = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(data, dtype=dt, count=count, offset=off)
+        off += count * 4
+        out[name] = arr.reshape(dims)
+    return out

@@ -1,0 +1,274 @@
+"""L2: OPT-mini transformer in JAX (dense and latent/MLA variants).
+
+Architecture (matches OPT, paper Table 5, at mini scale): learned positional
+embeddings, pre-LN, ReLU MLP, biases on every linear, tied LM head.
+
+Two execution paths:
+  * `use_pallas=False` — pure jnp, used for training (fast under jit);
+  * `use_pallas=True`  — routes matmul/attention through the L1 Pallas
+    kernels (interpret=True); this is the path lowered by aot.py into the
+    HLO artifacts the rust runtime executes, so the kernels are *in* the
+    deployed program.
+
+All weights follow the paper's convention W ∈ R^{d'×d}, y = W x, stored
+[out, in]; activations inside the model are row-token matrices [.., t, d],
+so applications read `x @ w.T + b`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import configs
+from .kernels import attention as attn_k
+from .kernels import lowrank as lr_k
+
+
+def init_params(cfg: configs.MiniConfig, seed=0):
+    """He/scaled-normal init, numpy dict keyed per configs.param_names()."""
+    rng = np.random.default_rng(seed)
+    shapes = cfg.shapes()
+    params = {}
+    for name, shape in shapes.items():
+        if name.endswith((".g",)):
+            params[name] = np.ones(shape, dtype=np.float32)
+        elif name.endswith((".b", "bq", "bk", "bv", "bo", "bu", "bd")) \
+                and len(shape) == 1:
+            params[name] = np.zeros(shape, dtype=np.float32)
+        else:
+            fan_in = shape[-1]
+            scale = 1.0 / np.sqrt(fan_in)
+            if name.endswith("attn.wo") or name.endswith("mlp.wd"):
+                scale /= np.sqrt(2.0 * cfg.n_layers)  # GPT-2 style
+            params[name] = rng.normal(0.0, scale, size=shape) \
+                .astype(np.float32)
+    return params
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _heads(x, h):
+    t, d = x.shape
+    return x.reshape(t, h, d // h).transpose(1, 0, 2)  # [h, t, d_h]
+
+
+def _unheads(x):
+    h, t, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(t, h * dh)
+
+
+def _mha_jnp(q, k, v):
+    from .kernels import ref
+    return ref.mha(q, k, v, causal=True)
+
+
+def forward(cfg, params, tokens, use_pallas=False, collect=False):
+    """Single-sequence forward. tokens: [t] int32 → logits [t, vocab].
+
+    With collect=True also returns the calibration activations the
+    compression pipeline needs: per layer attn_x / o_x / mlp_x as [d, t]
+    column-token matrices (paper §5 calibration protocol).
+    """
+    t = tokens.shape[0]
+    h = cfg.n_heads
+    x = params["tok_emb"][tokens] + params["pos_emb"][:t]
+    cal = []
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        xa = _ln(x, params[p + "ln1.g"], params[p + "ln1.b"])
+        q = xa @ params[p + "attn.wq"].T + params[p + "attn.bq"]
+        k = xa @ params[p + "attn.wk"].T + params[p + "attn.bk"]
+        v = xa @ params[p + "attn.wv"].T + params[p + "attn.bv"]
+        if use_pallas:
+            ctx = attn_k.mha(_heads(q, h), _heads(k, h), _heads(v, h))
+        else:
+            ctx = _mha_jnp(_heads(q, h), _heads(k, h), _heads(v, h))
+        ctx = _unheads(ctx)
+        x = x + ctx @ params[p + "attn.wo"].T + params[p + "attn.bo"]
+
+        xm = _ln(x, params[p + "ln2.g"], params[p + "ln2.b"])
+        z = jnp.maximum(xm @ params[p + "mlp.wu"].T + params[p + "mlp.bu"],
+                        0.0)
+        x = x + z @ params[p + "mlp.wd"].T + params[p + "mlp.bd"]
+        if collect:
+            cal.append({"attn_x": xa.T, "o_x": ctx.T, "mlp_x": xm.T})
+    x = _ln(x, params["lnf.g"], params["lnf.b"])
+    logits = x @ params["tok_emb"].T
+    return (logits, cal) if collect else logits
+
+
+def nll(cfg, params, tokens, use_pallas=False):
+    """Mean next-token negative log-likelihood of one sequence [t]."""
+    logits = forward(cfg, params, tokens, use_pallas=use_pallas)
+    lp = jax.nn.log_softmax(logits[:-1], axis=-1)
+    tgt = tokens[1:]
+    return -jnp.take_along_axis(lp, tgt[:, None], axis=-1).mean()
+
+
+def batch_nll(cfg, params, tokens, use_pallas=False):
+    """tokens [b, t] → per-sequence mean NLL [b] (the `score` program)."""
+    return jax.vmap(lambda s: nll(cfg, params, s, use_pallas=use_pallas))(
+        tokens)
+
+
+def step_logits(cfg, params, tokens, lens, use_pallas=False):
+    """tokens [b, t] padded, lens [b] → next-token logits [b, vocab]
+    (the `step` program used by the serving coordinator)."""
+    logits = jax.vmap(
+        lambda s: forward(cfg, params, s, use_pallas=use_pallas))(tokens)
+    idx = jnp.clip(lens - 1, 0, tokens.shape[1] - 1)
+    return jnp.take_along_axis(
+        logits, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Latent (MLA) architecture — the deployed form of a LatentLLM-compressed
+# model: shared compression planes A*, per-head cores/decompressors, latent
+# KV cache semantics (paper §4.1/4.2, Fig 1b).
+# ---------------------------------------------------------------------------
+
+def latent_param_names(cfg, ranks):
+    """Deterministic parameter order for the latent scoring/step programs.
+
+    ranks: dict with rq, rk, rv, ro, ru, rd (uniform across layers)."""
+    names = ["tok_emb", "pos_emb"]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        names += [
+            p + "ln1.g", p + "ln1.b",
+            p + "attn.aq", p + "attn.bq_heads", p + "attn.bq",
+            p + "attn.ak", p + "attn.bk_heads", p + "attn.bk",
+            p + "attn.av", p + "attn.bv_heads", p + "attn.bv",
+            p + "attn.ao_heads", p + "attn.bo_mat", p + "attn.bo",
+            p + "ln2.g", p + "ln2.b",
+            p + "mlp.au", p + "mlp.bu_mat", p + "mlp.bu",
+            p + "mlp.ad", p + "mlp.bd_mat", p + "mlp.bd",
+        ]
+    names += ["lnf.g", "lnf.b"]
+    return names
+
+
+def latent_shapes(cfg, ranks):
+    d, dh, h, di = cfg.d, cfg.d_h, cfg.n_heads, cfg.d_i
+    rq, rk, rv, ro = ranks["rq"], ranks["rk"], ranks["rv"], ranks["ro"]
+    ru, rd = ranks["ru"], ranks["rd"]
+    s = {"tok_emb": (cfg.vocab, d), "pos_emb": (cfg.max_len, d)}
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        s[p + "ln1.g"] = (d,)
+        s[p + "ln1.b"] = (d,)
+        s[p + "attn.aq"] = (rq, d)
+        s[p + "attn.bq_heads"] = (h, dh, rq)
+        s[p + "attn.bq"] = (d,)
+        s[p + "attn.ak"] = (rk, d)
+        s[p + "attn.bk_heads"] = (h, dh, rk)
+        s[p + "attn.bk"] = (d,)
+        s[p + "attn.av"] = (rv, d)
+        s[p + "attn.bv_heads"] = (h, dh, rv)
+        s[p + "attn.bv"] = (d,)
+        s[p + "attn.ao_heads"] = (ro, h * dh)
+        s[p + "attn.bo_mat"] = (d, ro)
+        s[p + "attn.bo"] = (d,)
+        s[p + "ln2.g"] = (d,)
+        s[p + "ln2.b"] = (d,)
+        s[p + "mlp.au"] = (ru, d)
+        s[p + "mlp.bu_mat"] = (di, ru)
+        s[p + "mlp.bu"] = (di,)
+        s[p + "mlp.ad"] = (rd, di)
+        s[p + "mlp.bd_mat"] = (d, rd)
+        s[p + "mlp.bd"] = (d,)
+    s["lnf.g"] = (d,)
+    s["lnf.b"] = (d,)
+    return s
+
+
+def latent_forward(cfg, params, tokens, use_pallas=True):
+    """Latent/MLA forward for one sequence [t] → logits [t, vocab].
+
+    Attention scores run in latent space through the absorbed cores
+    Hᵢ = Bq,iᵀBk,i; the per-token KV state is (A_k x, A_v x) of size
+    r_k + r_v — the cache the coordinator accounts for.
+    """
+    t = tokens.shape[0]
+    h = cfg.n_heads
+    x = params["tok_emb"][tokens] + params["pos_emb"][:t]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        xa = _ln(x, params[p + "ln1.g"], params[p + "ln1.b"])
+        aq, ak, av = params[p + "attn.aq"], params[p + "attn.ak"], \
+            params[p + "attn.av"]
+        bqh, bkh, bvh = params[p + "attn.bq_heads"], \
+            params[p + "attn.bk_heads"], params[p + "attn.bv_heads"]
+        q_lat = xa @ aq.T                       # [t, rq]
+        ck = xa @ ak.T                          # [t, rk]  latent K cache
+        cv = xa @ av.T                          # [t, rv]  latent V cache
+        # QKV biases survive the latent path through bilinear augmentation:
+        # score = [q_lat;1]ᵀ [[Hᵢ, Bq,iᵀbk,i],[bq,iᵀBk,i, bq,iᵀbk,i]] [c_k;1]
+        # and values via c̃v = [cv 1], B̃v,i = [Bv,i  bv,i].
+        bq_h = params[p + "attn.bq"].reshape(h, cfg.d_h)
+        bk_h = params[p + "attn.bk"].reshape(h, cfg.d_h)
+        bv_h = params[p + "attn.bv"].reshape(h, cfg.d_h)
+        h_core = jnp.einsum("hdq,hdk->hqk", bqh, bkh)
+        top = jnp.concatenate(
+            [h_core, jnp.einsum("hdq,hd->hq", bqh, bk_h)[:, :, None]],
+            axis=2)
+        bot = jnp.concatenate(
+            [jnp.einsum("hd,hdk->hk", bq_h, bkh),
+             jnp.einsum("hd,hd->h", bq_h, bk_h)[:, None]],
+            axis=1)[:, None, :]
+        h_aug = jnp.concatenate([top, bot], axis=1)      # [h, rq+1, rk+1]
+        ones = jnp.ones((t, 1), dtype=x.dtype)
+        q_aug = jnp.concatenate([q_lat, ones], axis=1)
+        ck_aug = jnp.concatenate([ck, ones], axis=1)
+        cv_aug = jnp.concatenate([cv, ones], axis=1)
+        bv_aug = jnp.concatenate([bvh, bv_h[:, :, None]], axis=2)
+        if use_pallas:
+            ctx = attn_k.latent_attention(q_aug, ck_aug, cv_aug, h_aug,
+                                          bv_aug)
+        else:
+            from .kernels import ref
+            ctx = ref.latent_attention(q_aug, ck_aug, cv_aug, h_aug, bv_aug)
+        ctx = _unheads(ctx)
+        ao = params[p + "attn.ao_heads"]        # [ro, h*dh]
+        bo = params[p + "attn.bo_mat"]          # [d, ro]
+        x = x + (ctx @ ao.T) @ bo.T + params[p + "attn.bo"]
+
+        xm = _ln(x, params[p + "ln2.g"], params[p + "ln2.b"])
+        if use_pallas:
+            z = lr_k.lowrank_matmul(xm, params[p + "mlp.au"],
+                                    params[p + "mlp.bu_mat"],
+                                    params[p + "mlp.bu"])
+            z = jnp.maximum(z, 0.0)
+            y = lr_k.lowrank_matmul(z, params[p + "mlp.ad"],
+                                    params[p + "mlp.bd_mat"],
+                                    params[p + "mlp.bd"])
+        else:
+            z = jnp.maximum((xm @ params[p + "mlp.au"].T)
+                            @ params[p + "mlp.bu_mat"].T
+                            + params[p + "mlp.bu"], 0.0)
+            y = (z @ params[p + "mlp.ad"].T) @ params[p + "mlp.bd_mat"].T \
+                + params[p + "mlp.bd"]
+        x = x + y
+    x = _ln(x, params["lnf.g"], params["lnf.b"])
+    return x @ params["tok_emb"].T
+
+
+def latent_batch_nll(cfg, params, tokens, use_pallas=True):
+    def one(s):
+        logits = latent_forward(cfg, params, s, use_pallas=use_pallas)
+        lp = jax.nn.log_softmax(logits[:-1], axis=-1)
+        return -jnp.take_along_axis(lp, s[1:, None], axis=-1).mean()
+    return jax.vmap(one)(tokens)
+
+
+def latent_step_logits(cfg, params, tokens, lens, use_pallas=True):
+    logits = jax.vmap(
+        lambda s: latent_forward(cfg, params, s, use_pallas=use_pallas))(
+        tokens)
+    idx = jnp.clip(lens - 1, 0, tokens.shape[1] - 1)
+    return jnp.take_along_axis(
+        logits, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]

@@ -1,0 +1,331 @@
+"""llava-mini: tiny LLaVa-style multimodal model + synthetic ScienceQA
+(the Table 4 / Fig 6 substitution — DESIGN.md §2).
+
+Structure mirrors LLaVa: a CLIP-style ViT encodes the image into patch
+tokens, a projector maps them into the LM embedding space, they are
+prepended to the question tokens, and the LM's final hidden state answers a
+4-way multiple-choice question.
+
+Synthetic ScienceQA: 8 image pattern classes; each question asks which
+class is present, with the evidence delivered through one of three context
+modalities — IMG (in the image), TXT (a context token names the class), or
+NO (the class must be recalled from a memorized question-fact table). The
+paper's category breakdown is reproduced: subjects NAT/SOC/LAN shift the
+fact-space size and modality mix (LAN: more context-less questions, larger
+fact space), grades G1-6/G7-12 control noise/fact difficulty — so accuracy
+ordering NAT>SOC>LAN, TXT>IMG>NO, G1-6>G7-12 emerges for the same reasons
+it does in the paper (harder evidence, not different code paths).
+
+Simplification vs the paper's 4-option letter format: the answer head
+predicts the *class concept* (8-way) rather than the option letter — a tiny
+model learns concept retrieval but not letter/pointer binding within this
+build budget; the compression-degradation story (what Table 4 measures) is
+unchanged. Chance level is therefore 12.5%.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import configs
+from .model import _heads, _ln, _unheads
+from .train import adam_init, adam_step
+
+N_CLASSES = 8
+CLS_TOK = 10          # tokens 10..17 name the 8 classes
+SUBJ_TOK = 30         # 30/31/32 = NAT/SOC/LAN
+GRADE_TOK = 35        # 35/36 = G1-6/G7-12
+NEUTRAL_TOK = 40
+FACT_TOK = 50         # fact tokens 50.. (question identity for NO-context)
+BOS = 1
+TEXT_LEN = 24
+SUBJECTS = ("NAT", "SOC", "LAN")
+MODALITIES = ("TXT", "IMG", "NO")
+GRADES = ("G1-6", "G7-12")
+
+# per-subject: (p_txt, p_img, p_no, n_facts_easy, n_facts_hard)
+_SUBJ = {
+    0: (0.4, 0.4, 0.2, 16, 48),    # NAT
+    1: (0.35, 0.35, 0.3, 24, 64),  # SOC
+    2: (0.25, 0.25, 0.5, 32, 96),  # LAN
+}
+
+
+def render_image(cls, noise, rng):
+    """16×16 pattern for one of the 8 classes."""
+    i, j = np.meshgrid(np.arange(16), np.arange(16), indexing="ij")
+    pats = [
+        (i // 2) % 2, (j // 2) % 2, ((i // 2) + (j // 2)) % 2,
+        ((i + j) // 4) % 2, (i < 8).astype(int), (j < 8).astype(int),
+        ((np.abs(i - 8) < 4) & (np.abs(j - 8) < 4)).astype(int),
+        ((i < 2) | (i > 13) | (j < 2) | (j > 13)).astype(int),
+    ]
+    img = pats[cls].astype(np.float32) * 2.0 - 1.0
+    return img + noise * rng.normal(size=(16, 16)).astype(np.float32)
+
+
+def make_dataset(n, seed=0):
+    """Returns dict with images [n,16,16], tokens [n,TEXT_LEN] i32,
+    labels [n] i32 (option index 0..3), cats [n,3] i32 (subj, mod, grade),
+    and the fact tables used (so train/test share them)."""
+    rng = np.random.default_rng(seed)
+    # fact tables: fact id -> class, per subject (sized per difficulty).
+    # Fixed seed: the "world knowledge" is shared between train and test —
+    # NO-context questions test recall of these memorized facts.
+    frng = np.random.default_rng(20250711)
+    fact_cls = {s: frng.integers(0, N_CLASSES, size=_SUBJ[s][4])
+                for s in range(3)}
+    images = np.zeros((n, 16, 16), dtype=np.float32)
+    tokens = np.zeros((n, TEXT_LEN), dtype=np.int32)
+    labels = np.zeros(n, dtype=np.int32)
+    cats = np.zeros((n, 3), dtype=np.int32)
+    for idx in range(n):
+        subj = int(rng.integers(0, 3))
+        p_txt, p_img, p_no, n_easy, n_hard = _SUBJ[subj]
+        mod = int(rng.choice(3, p=[p_txt, p_img, p_no]))
+        grade = int(rng.integers(0, 2))
+        noise = 0.35 if grade == 0 else 0.8
+        if mod == 2:  # NO-context: class comes from a memorized fact
+            n_facts = n_easy if grade == 0 else n_hard
+            fact = int(rng.integers(0, n_facts))
+            cls = int(fact_cls[subj][fact])
+        else:
+            fact = int(rng.integers(0, n_easy))
+            cls = int(rng.integers(0, N_CLASSES))
+        # 4 answer options containing the true class (presentation; the
+        # model answers with the class concept — see module docstring)
+        others = rng.permutation([c for c in range(N_CLASSES) if c != cls])[:3]
+        opts = np.concatenate([[cls], others])
+        rng.shuffle(opts)
+        label = int(cls)
+
+        toks = [BOS, SUBJ_TOK + subj, GRADE_TOK + grade, FACT_TOK + fact]
+        toks.append(CLS_TOK + cls if mod == 0 else NEUTRAL_TOK)
+        toks += [CLS_TOK + int(c) for c in opts]
+        toks += [2]  # [ANS]
+        tokens[idx, :len(toks)] = toks
+        if mod == 1:
+            images[idx] = render_image(cls, noise, rng)
+        labels[idx] = label
+        cats[idx] = (subj, mod, grade)
+    return {"images": images, "tokens": tokens, "labels": labels,
+            "cats": cats}
+
+
+# --------------------------------------------------------------------------
+# Model
+# --------------------------------------------------------------------------
+
+def param_names(mm: configs.LlavaMiniConfig):
+    names = ["vit.patch.w", "vit.patch.b", "vit.pos"]
+    for i in range(mm.vision.n_layers):
+        p = f"vit.layers.{i}."
+        names += [p + "ln1.g", p + "ln1.b",
+                  p + "attn.wq", p + "attn.bq", p + "attn.wk", p + "attn.bk",
+                  p + "attn.wv", p + "attn.bv", p + "attn.wo", p + "attn.bo",
+                  p + "ln2.g", p + "ln2.b",
+                  p + "mlp.wu", p + "mlp.bu", p + "mlp.wd", p + "mlp.bd"]
+    names += ["vit.lnf.g", "vit.lnf.b", "proj.w", "proj.b"]
+    names += ["lm." + n for n in mm.lm.param_names()
+              if n not in ("lm_head",)]
+    names += ["ans.w", "ans.b"]
+    return names
+
+
+def init_params(mm: configs.LlavaMiniConfig, seed=0):
+    from .model import init_params as lm_init
+    rng = np.random.default_rng(seed + 777)
+    v = mm.vision
+    params = {}
+    params["vit.patch.w"] = rng.normal(
+        0, 1 / np.sqrt(v.patch_dim), (v.d, v.patch_dim)).astype(np.float32)
+    params["vit.patch.b"] = np.zeros(v.d, dtype=np.float32)
+    params["vit.pos"] = (0.02 * rng.normal(size=(v.n_patches, v.d))
+                         ).astype(np.float32)
+    vit_cfg = configs.MiniConfig(name="vit", vocab=1, d=v.d,
+                                 n_layers=v.n_layers, n_heads=v.n_heads,
+                                 d_i=v.d_i, max_len=v.n_patches)
+    vit_p = lm_init(vit_cfg, seed=seed + 1)
+    for i in range(v.n_layers):
+        p = f"layers.{i}."
+        for suffix in ("ln1.g", "ln1.b", "attn.wq", "attn.bq", "attn.wk",
+                       "attn.bk", "attn.wv", "attn.bv", "attn.wo", "attn.bo",
+                       "ln2.g", "ln2.b", "mlp.wu", "mlp.bu", "mlp.wd",
+                       "mlp.bd"):
+            params["vit." + p + suffix] = vit_p[p + suffix]
+    params["vit.lnf.g"] = np.ones(v.d, dtype=np.float32)
+    params["vit.lnf.b"] = np.zeros(v.d, dtype=np.float32)
+    params["proj.w"] = rng.normal(
+        0, 1 / np.sqrt(v.d), (mm.lm.d, v.d)).astype(np.float32)
+    params["proj.b"] = np.zeros(mm.lm.d, dtype=np.float32)
+    lm_p = lm_init(mm.lm, seed=seed + 2)
+    for k, arr in lm_p.items():
+        params["lm." + k] = arr
+    params["ans.w"] = rng.normal(
+        0, 1 / np.sqrt(mm.lm.d), (mm.n_answers, mm.lm.d)).astype(np.float32)
+    params["ans.b"] = np.zeros(mm.n_answers, dtype=np.float32)
+    return params
+
+
+def _block(params, prefix, x, h, causal, collect=None):
+    """One pre-LN transformer block over [t, d] tokens."""
+    xa = _ln(x, params[prefix + "ln1.g"], params[prefix + "ln1.b"])
+    q = xa @ params[prefix + "attn.wq"].T + params[prefix + "attn.bq"]
+    k = xa @ params[prefix + "attn.wk"].T + params[prefix + "attn.bk"]
+    v = xa @ params[prefix + "attn.wv"].T + params[prefix + "attn.bv"]
+    from .kernels import ref
+    ctx = _unheads(ref.mha(_heads(q, h), _heads(k, h), _heads(v, h),
+                           causal=causal))
+    x = x + ctx @ params[prefix + "attn.wo"].T + params[prefix + "attn.bo"]
+    xm = _ln(x, params[prefix + "ln2.g"], params[prefix + "ln2.b"])
+    z = jnp.maximum(xm @ params[prefix + "mlp.wu"].T
+                    + params[prefix + "mlp.bu"], 0.0)
+    x = x + z @ params[prefix + "mlp.wd"].T + params[prefix + "mlp.bd"]
+    if collect is not None:
+        collect.append({"attn_x": xa.T, "o_x": ctx.T, "mlp_x": xm.T})
+    return x
+
+
+def forward(mm, params, image, text_tokens, collect=False):
+    """One sample: image [16,16], text_tokens [TEXT_LEN] → answer logits [4]."""
+    v = mm.vision
+    patches = image.reshape(v.img // v.patch, v.patch,
+                            v.img // v.patch, v.patch)
+    patches = patches.transpose(0, 2, 1, 3).reshape(v.n_patches, v.patch_dim)
+    x = patches @ params["vit.patch.w"].T + params["vit.patch.b"] \
+        + params["vit.pos"]
+    cal_v, cal_l = [], []
+    for i in range(v.n_layers):
+        x = _block(params, f"vit.layers.{i}.", x, v.n_heads, causal=False,
+                   collect=cal_v if collect else None)
+    x = _ln(x, params["vit.lnf.g"], params["vit.lnf.b"])
+    vis = x @ params["proj.w"].T + params["proj.b"]       # [n_patches, d_lm]
+
+    emb = params["lm.tok_emb"][text_tokens]
+    seq = jnp.concatenate([vis, emb], axis=0)
+    seq = seq + params["lm.pos_emb"][:seq.shape[0]]
+    for i in range(mm.lm.n_layers):
+        seq = _block(params, f"lm.layers.{i}.", seq, mm.lm.n_heads,
+                     causal=True, collect=cal_l if collect else None)
+    seq = _ln(seq, params["lm.lnf.g"], params["lm.lnf.b"])
+    logits = seq[-1] @ params["ans.w"].T + params["ans.b"]
+    if collect:
+        return logits, cal_v, cal_l
+    return logits
+
+
+def batch_logits(mm, params, images, tokens):
+    return jax.vmap(lambda im, tk: forward(mm, params, im, tk))(
+        images, tokens)
+
+
+def train_mm(mm, ds, steps=800, batch=32, lr=2e-3, seed=0, log_every=100):
+    import time
+    params = init_params(mm, seed=seed)
+    state = adam_init(params)
+    rng = np.random.default_rng(seed + 5)
+
+    def loss_fn(p, im, tk, lb):
+        logits = jax.vmap(lambda a, b: forward(mm, p, a, b))(im, tk)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(lp, lb[:, None], axis=-1).mean()
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    n = ds["images"].shape[0]
+    curve = []
+    t0 = time.time()
+    for it in range(1, steps + 1):
+        idx = rng.integers(0, n, size=batch)
+        jp = {k: jnp.asarray(v) for k, v in params.items()}
+        loss, grads = grad_fn(jp, jnp.asarray(ds["images"][idx]),
+                              jnp.asarray(ds["tokens"][idx]),
+                              jnp.asarray(ds["labels"][idx]))
+        params = adam_step(params, grads, state, it, lr)
+        curve.append(float(loss))
+        if it % log_every == 0 or it == 1:
+            print(f"[llava-mini] step {it:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    return params, curve
+
+
+def evaluate(mm, params, ds, batch=64):
+    """Accuracy overall + by subject / context modality / grade
+    (the Table 4 column structure)."""
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
+    fn = jax.jit(lambda im, tk: batch_logits(mm, jp, im, tk))
+    n = ds["images"].shape[0]
+    preds = np.zeros(n, dtype=np.int64)
+    for s in range(0, n, batch):
+        e = min(s + batch, n)
+        # pad to full batch for a single jit signature
+        im = np.zeros((batch, 16, 16), np.float32)
+        tk = np.zeros((batch, TEXT_LEN), np.int32)
+        im[:e - s] = ds["images"][s:e]
+        tk[:e - s] = ds["tokens"][s:e]
+        out = np.asarray(fn(jnp.asarray(im), jnp.asarray(tk)))
+        preds[s:e] = out[:e - s].argmax(axis=-1)
+    correct = preds == ds["labels"]
+    res = {"Avg": float(correct.mean())}
+    for si, sname in enumerate(SUBJECTS):
+        m = ds["cats"][:, 0] == si
+        res[sname] = float(correct[m].mean()) if m.any() else 0.0
+    for mi, mname in enumerate(MODALITIES):
+        m = ds["cats"][:, 1] == mi
+        res[mname] = float(correct[m].mean()) if m.any() else 0.0
+    for gi, gname in enumerate(GRADES):
+        m = ds["cats"][:, 2] == gi
+        res[gname] = float(correct[m].mean()) if m.any() else 0.0
+    return res
+
+
+def collect_calibration(mm, params, ds, n_samples=64, max_cols=768, seed=3):
+    """Per-layer activation matrices for both towers (vit./lm. prefixes)."""
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
+    fwd = jax.jit(lambda im, tk: forward(mm, jp, im, tk, collect=True)[1:])
+    acc_v = [{k: [] for k in ("attn_x", "o_x", "mlp_x")}
+             for _ in range(mm.vision.n_layers)]
+    acc_l = [{k: [] for k in ("attn_x", "o_x", "mlp_x")}
+             for _ in range(mm.lm.n_layers)]
+    for i in range(min(n_samples, ds["images"].shape[0])):
+        cal_v, cal_l = fwd(jnp.asarray(ds["images"][i]),
+                           jnp.asarray(ds["tokens"][i]))
+        for j, layer in enumerate(cal_v):
+            for k in acc_v[j]:
+                acc_v[j][k].append(np.asarray(layer[k]))
+        for j, layer in enumerate(cal_l):
+            for k in acc_l[j]:
+                acc_l[j][k].append(np.asarray(layer[k]))
+    rng = np.random.default_rng(seed)
+    out = {}
+    for tower, acc in (("vit", acc_v), ("lm", acc_l)):
+        for j, layer in enumerate(acc):
+            d = {}
+            for k, chunks in layer.items():
+                x = np.concatenate(chunks, axis=1)
+                if x.shape[1] > max_cols:
+                    idx = rng.choice(x.shape[1], size=max_cols, replace=False)
+                    x = x[:, np.sort(idx)]
+                d[k] = x.astype(np.float32)
+            out[f"{tower}.layers.{j}"] = d
+    return out
+
+
+def compress_mm(mm, params, calib, method, ratio):
+    """Compress both towers with the LM pipeline (per-tower MiniConfig)."""
+    from .latentllm import pipeline
+    v = mm.vision
+    vit_cfg = configs.MiniConfig(name="vit", vocab=1, d=v.d,
+                                 n_layers=v.n_layers, n_heads=v.n_heads,
+                                 d_i=v.d_i, max_len=v.n_patches)
+    reports = {}
+    new_params = dict(params)
+    for tower, cfg in (("vit", vit_cfg), ("lm", mm.lm)):
+        sub = {k[len(tower) + 1:]: np.asarray(val, np.float64)
+               for k, val in params.items() if k.startswith(tower + ".")}
+        cal = {f"layers.{i}": calib[f"{tower}.layers.{i}"]
+               for i in range(cfg.n_layers)}
+        new_sub, rep = pipeline.compress_model(cfg, sub, cal, method, ratio)
+        for k, val in new_sub.items():
+            new_params[f"{tower}.{k}"] = np.asarray(val, np.float32)
+        reports[tower] = rep
+    return new_params, reports

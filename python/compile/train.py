@@ -1,0 +1,98 @@
+"""Build-time training of the opt-mini family on the synthetic corpora.
+
+Hand-rolled Adam over the jnp forward path (the Pallas path is reserved for
+the AOT-lowered inference programs). Runs once inside `make artifacts`;
+loss curves land in artifacts/training_log.json and EXPERIMENTS.md.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+
+
+def adam_init(params):
+    return {k: (np.zeros_like(v), np.zeros_like(v)) for k, v in params.items()}
+
+
+def adam_step(params, grads, state, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    out = {}
+    for k, v in params.items():
+        g = np.asarray(grads[k])
+        m, s = state[k]
+        m = b1 * m + (1 - b1) * g
+        s = b2 * s + (1 - b2) * g * g
+        state[k] = (m, s)
+        mh = m / (1 - b1 ** step)
+        sh = s / (1 - b2 ** step)
+        out[k] = v - lr * mh / (np.sqrt(sh) + eps)
+    return out
+
+
+def train_lm(cfg, train_tokens, steps=400, batch=16, seq_len=128,
+             lr=1e-3, seed=0, log_every=50):
+    """Train one opt-mini model; returns (params, loss_curve)."""
+    params = model.init_params(cfg, seed=seed)
+    state = adam_init(params)
+    rng = np.random.default_rng(seed + 101)
+    gen = data.batches(train_tokens, batch, seq_len, rng=rng)
+
+    def loss_fn(p, toks):
+        return model.batch_nll(cfg, p, toks).mean()
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    curve = []
+    t0 = time.time()
+    for it in range(1, steps + 1):
+        toks = jnp.asarray(next(gen))
+        jp = {k: jnp.asarray(v) for k, v in params.items()}
+        loss, grads = grad_fn(jp, toks)
+        params = adam_step(params, grads, state, it, lr)
+        curve.append(float(loss))
+        if it % log_every == 0 or it == 1:
+            print(f"[{cfg.name}] step {it:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    return params, curve
+
+
+def eval_ppl(cfg, params, test_tokens, batch=8, seq_len=128, max_batches=24):
+    """Perplexity over sequential test windows (matches the rust evaluator)."""
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
+    fn = jax.jit(lambda toks: model.batch_nll(cfg, jp, toks))
+    tot, n = 0.0, 0
+    for i, toks in enumerate(data.batches(test_tokens, batch, seq_len)):
+        if i >= max_batches:
+            break
+        nll = np.asarray(fn(jnp.asarray(toks)))
+        tot += float(nll.sum())
+        n += nll.shape[0]
+    return float(np.exp(tot / max(n, 1)))
+
+
+def collect_calibration(cfg, params, calib_tokens, max_cols=1024, seed=7):
+    """Run the model over the calibration samples and gather per-layer
+    activation matrices (attn_x / o_x / mlp_x as [d, l]), subsampled to
+    max_cols columns for the rust-side compression path."""
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
+    fwd = jax.jit(lambda s: model.forward(cfg, jp, s, collect=True)[1])
+    acc = [{"attn_x": [], "o_x": [], "mlp_x": []}
+           for _ in range(cfg.n_layers)]
+    for row in calib_tokens:
+        cal = fwd(jnp.asarray(row))
+        for i, layer in enumerate(cal):
+            for k in acc[i]:
+                acc[i][k].append(np.asarray(layer[k]))
+    rng = np.random.default_rng(seed)
+    out = {}
+    for i, layer in enumerate(acc):
+        out[f"layers.{i}"] = {}
+        for k, chunks in layer.items():
+            x = np.concatenate(chunks, axis=1)   # [d, n_samples*t]
+            if x.shape[1] > max_cols:
+                idx = rng.choice(x.shape[1], size=max_cols, replace=False)
+                x = x[:, np.sort(idx)]
+            out[f"layers.{i}"][k] = x.astype(np.float32)
+    return out

@@ -1,0 +1,28 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def wishart(rng, d, decay=0.9, dof=None):
+    """Wishart-correlated covariance (the paper's synthetic setup)."""
+    dof = dof or 2 * d
+    idx = np.arange(d)
+    sigma = decay ** np.abs(idx[:, None] - idx[None, :])
+    l = np.linalg.cholesky(sigma + 1e-9 * np.eye(d))
+    g = rng.normal(size=(d, dof))
+    lg = l @ g
+    return lg @ lg.T / dof
+
+
+@pytest.fixture
+def wishart_cov():
+    return wishart

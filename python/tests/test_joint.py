@@ -1,0 +1,123 @@
+"""Joint QK / VO / UD compression properties (paper §4, Apps E/G/H)."""
+
+import numpy as np
+import pytest
+
+from compile.latentllm import joint_qk, joint_ud, joint_vo, linalg
+
+
+def test_joint_qk_losses_monotone(rng):
+    d, h, dh = 20, 4, 5
+    wq = rng.normal(size=(d, d))
+    wk = rng.normal(size=(d, d))
+    res = joint_qk.compress(wq, wk, n_kv_heads=h, d_h=dh, rq=8, rk=8,
+                            n_iter=6, kind="identity")
+    assert all(b <= a * (1 + 1e-9)
+               for a, b in zip(res["losses"], res["losses"][1:]))
+
+
+def test_joint_qk_exact_full_rank(rng):
+    d, h, dh = 12, 4, 3
+    wq = rng.normal(size=(d, d))
+    wk = rng.normal(size=(d, d))
+    res = joint_qk.compress(wq, wk, n_kv_heads=h, d_h=dh, rq=d, rk=d,
+                            n_iter=3, kind="identity")
+    np.testing.assert_allclose(res["wq_hat"], wq, atol=1e-7)
+    np.testing.assert_allclose(res["wk_hat"], wk, atol=1e-7)
+
+
+def test_joint_qk_beats_separate_on_attention_loss(rng, wishart_cov):
+    """Fig 10: attention-aware joint ≥ activation-aware split."""
+    from compile.latentllm import asvd
+    d, h, dh, r = 20, 4, 5, 8
+    c = wishart_cov(rng, d)
+    p = linalg.sqrtm_psd(c)
+    wq = rng.normal(size=(d, d)) @ p
+    wk = rng.normal(size=(d, d)) @ p
+    joint = joint_qk.compress(wq, wk, n_kv_heads=h, d_h=dh, rq=r, rk=r,
+                              n_iter=8, kind="identity")
+    rq = asvd.compress(wq, r, kind="identity", junction_kind="left")
+    rk = asvd.compress(wk, r, kind="identity", junction_kind="left")
+    base = 0.0
+    for i in range(h):
+        g = wq[i * dh:(i + 1) * dh].T @ wk[i * dh:(i + 1) * dh]
+        gh = rq["w_hat"][i * dh:(i + 1) * dh].T \
+            @ rk["w_hat"][i * dh:(i + 1) * dh]
+        base += linalg.frob2(g - gh)
+    assert joint["loss"] <= base * 1.01
+
+
+def test_joint_qk_gqa(rng):
+    d, dh, n_kv, gs = 16, 4, 2, 2
+    wq = rng.normal(size=(gs * n_kv * dh, d))
+    wk = rng.normal(size=(n_kv * dh, d))
+    res = joint_qk.compress(wq, wk, n_kv_heads=n_kv, d_h=dh, rq=8, rk=8,
+                            group_size=gs, kind="identity")
+    assert len(res["Bq"]) == gs * n_kv
+    assert len(res["Bk"]) == n_kv
+    assert res["wq_hat"].shape == wq.shape
+
+
+def test_joint_qk_bias_mean_preserved(rng):
+    d, h, dh = 12, 4, 3
+    wq = rng.normal(size=(d, d))
+    wk = rng.normal(size=(d, d))
+    x = rng.normal(size=(d, 128)) + 0.3
+    bq = rng.normal(size=d) * 0.1
+    bk = rng.normal(size=d) * 0.1
+    res = joint_qk.compress(wq, wk, n_kv_heads=h, d_h=dh, rq=8, rk=8,
+                            x=x, bq=bq, bk=bk,
+                            mu=x.mean(axis=1))
+    mu = x.mean(axis=1)
+    np.testing.assert_allclose(wq @ mu + bq, res["wq_hat"] @ mu + res["bq"],
+                               atol=1e-8)
+
+
+def test_joint_vo_monotone_and_full_rank(rng):
+    d, h, dh = 16, 4, 4
+    wv = rng.normal(size=(d, d))
+    wo = rng.normal(size=(d, d))
+    res = joint_vo.compress(wv, wo, n_heads=h, d_h=dh, rv=8, ro=8,
+                            n_iter=4, kind="identity")
+    ls = res["losses"]
+    assert all(b <= a * (1 + 1e-9) for a, b in zip(ls, ls[1:]))
+    full = joint_vo.compress(wv, wo, n_heads=h, d_h=dh, rv=d, ro=d,
+                             n_iter=2, kind="identity")
+    for i in range(h):
+        g = wo[:, i * dh:(i + 1) * dh] @ wv[i * dh:(i + 1) * dh]
+        gh = full["wo_hat"][:, i * dh:(i + 1) * dh] \
+            @ full["wv_hat"][i * dh:(i + 1) * dh]
+        np.testing.assert_allclose(g, gh, atol=1e-7)
+
+
+def test_vo_contraction_order_rule():
+    """Eqs 17/18: the reduction formula and the h·ro<rv rule."""
+    d, dh, h, l, rv, ro = 128, 32, 4, 128, 96, 16
+    a, b, red = joint_vo.contraction_flops(d, dh, h, l, rv, ro)
+    assert red == (d - rv) * l * l + (h - 1) * d * l * ro
+    assert b < a
+
+
+def test_joint_ud_best_never_worse_than_init(rng):
+    d, di, l = 10, 24, 160
+    wu = rng.normal(size=(di, d))
+    wd = rng.normal(size=(d, di)) * 0.3
+    bu = rng.normal(size=di) * 0.05
+    bd = np.zeros(d)
+    x = rng.normal(size=(d, l))
+    res = joint_ud.compress(wu, bu, wd, bd, x, 5, 5, n_iter=3)
+    assert res["loss"] <= res["losses"][0] * (1 + 1e-9)
+
+
+def test_joint_ud_exact_full_rank(rng):
+    d, di, l = 6, 12, 120
+    wu = rng.normal(size=(di, d))
+    wd = rng.normal(size=(d, di))
+    bu = np.full(di, 0.1)
+    bd = np.full(d, -0.2)
+    x = rng.normal(size=(d, l))
+    res = joint_ud.compress(wu, bu, wd, bd, x, d, d, n_iter=2)
+    y = wd @ np.maximum(wu @ x + bu[:, None], 0) + bd[:, None]
+    yh = res["wd_hat"] @ np.maximum(
+        res["wu_hat"] @ x + res["bu"][:, None], 0) + res["bd"][:, None]
+    assert linalg.frob2(yh - y) / linalg.frob2(y) < 1e-6

@@ -1,0 +1,128 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+hypothesis sweeps shapes; allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, gram, lowrank, ref
+
+FTOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def arr(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@settings(max_examples=12, deadline=None)
+@given(t=st.integers(1, 70), d_in=st.integers(1, 40),
+       r=st.integers(1, 24), d_out=st.integers(1, 40),
+       bt=st.sampled_from([8, 16, 64]), use_bias=st.booleans())
+def test_lowrank_matmul_matches_ref(t, d_in, r, d_out, bt, use_bias):
+    rng = np.random.default_rng(t * 1000 + d_in * 10 + r)
+    x, a, b = arr(rng, t, d_in), arr(rng, r, d_in), arr(rng, d_out, r)
+    bias = arr(rng, d_out) if use_bias else None
+    got = lowrank.lowrank_matmul(x, a, b, bias, bt=bt)
+    want = ref.lowrank_matmul(x, a, b, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **FTOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.integers(1, 50), r=st.integers(1, 20),
+       tail=st.integers(1, 30), d_out=st.integers(1, 30))
+def test_lowrank_blockid_matches_ref(t, r, tail, d_out):
+    rng = np.random.default_rng(t * 31 + r * 7 + tail)
+    x = arr(rng, t, r + tail)
+    a2 = arr(rng, r, tail)
+    b = arr(rng, d_out, r)
+    got = lowrank.lowrank_matmul_blockid(x, a2, b, bt=16)
+    want = ref.lowrank_matmul_blockid(x, a2, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **FTOL)
+
+
+def test_blockid_equals_dense_with_identity_block(rng):
+    """A = [I A2] as dense vs the fast path (paper Eq 9)."""
+    r, tail, t, d_out = 8, 12, 20, 16
+    a2 = arr(rng, r, tail)
+    a = jnp.concatenate([jnp.eye(r, dtype=jnp.float32), a2], axis=1)
+    b = arr(rng, d_out, r)
+    x = arr(rng, t, r + tail)
+    y1 = lowrank.lowrank_matmul(x, a, b)
+    y2 = lowrank.lowrank_matmul_blockid(x, a2, b)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), **FTOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(h=st.integers(1, 6), t=st.integers(2, 48),
+       d_h=st.integers(2, 24))
+def test_mha_matches_ref(h, t, d_h):
+    rng = np.random.default_rng(h * 100 + t + d_h)
+    q, k, v = (arr(rng, h, t, d_h) for _ in range(3))
+    got = attention.mha(q, k, v)
+    want = ref.mha(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **FTOL)
+
+
+def test_mha_causality(rng):
+    """Changing future tokens must not change past outputs."""
+    h, t, d_h = 2, 16, 8
+    q, k, v = (arr(rng, h, t, d_h) for _ in range(3))
+    out1 = np.asarray(attention.mha(q, k, v))
+    k2 = k.at[:, -1].set(99.0)
+    v2 = v.at[:, -1].set(-99.0)
+    out2 = np.asarray(attention.mha(q, k2, v2))
+    np.testing.assert_allclose(out1[:, :-1], out2[:, :-1], **FTOL)
+    assert not np.allclose(out1[:, -1], out2[:, -1])
+
+
+@settings(max_examples=8, deadline=None)
+@given(h=st.integers(1, 4), t=st.integers(2, 32), rq=st.integers(1, 12),
+       rk=st.integers(1, 12), rv=st.integers(1, 12), d_h=st.integers(2, 12))
+def test_latent_attention_matches_ref(h, t, rq, rk, rv, d_h):
+    rng = np.random.default_rng(h + t * 3 + rq * 5 + rk * 7 + rv)
+    q_lat, ck, cv = arr(rng, t, rq), arr(rng, t, rk), arr(rng, t, rv)
+    hc, bv = arr(rng, h, rq, rk), arr(rng, h, d_h, rv)
+    got = attention.latent_attention(q_lat, ck, cv, hc, bv)
+    want = ref.latent_attention(q_lat, ck, cv, hc, bv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **FTOL)
+
+
+def test_latent_equals_dense_attention_when_exact(rng):
+    """With factors that exactly reproduce q/k/v, MLA == MHA (the §4.1
+    inference-path identity)."""
+    h, t, d_h, d = 2, 12, 4, 16
+    x = arr(rng, t, d)
+    wq, wk, wv = (arr(rng, h * d_h, d) for _ in range(3))
+    # exact factors: A = I_d (r = d), B_i = W_i
+    eye = jnp.eye(d, dtype=jnp.float32)
+    bq = jnp.stack([wq[i * d_h:(i + 1) * d_h] for i in range(h)])
+    bk = jnp.stack([wk[i * d_h:(i + 1) * d_h] for i in range(h)])
+    bv = jnp.stack([wv[i * d_h:(i + 1) * d_h] for i in range(h)])
+    q = (x @ wq.T).reshape(t, h, d_h).transpose(1, 0, 2)
+    k = (x @ wk.T).reshape(t, h, d_h).transpose(1, 0, 2)
+    v = (x @ wv.T).reshape(t, h, d_h).transpose(1, 0, 2)
+    dense = ref.mha(q, k, v)
+    h_core = jnp.einsum("hdq,hdk->hqk", bq, bk)
+    lat = ref.latent_attention(x @ eye, x @ eye, x @ eye, h_core, bv)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(lat),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.integers(1, 32), l=st.integers(1, 300),
+       bl=st.sampled_from([32, 64, 256]))
+def test_gram_matches_ref(d, l, bl):
+    rng = np.random.default_rng(d * 1000 + l)
+    x = arr(rng, d, l)
+    got = gram.gram(x, bl=bl)
+    want = ref.gram(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_vmem_estimate_sane():
+    # the §Perf static VMEM model: well under a 16 MiB budget at repo scales
+    assert lowrank.vmem_bytes(64, 192, 192, 96) < 16 << 20

@@ -1,0 +1,111 @@
+"""Whole-model pipeline + JAX model integration (trains a tiny model once
+per session; verifies the Table 2 method ordering end-to-end and the
+dense↔latent architectural identity)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, data, model, train
+from compile.latentllm import pipeline, rank
+
+TINY = configs.MiniConfig(name="tiny", vocab=256, d=48, n_layers=2,
+                          n_heads=4, d_i=96, max_len=64)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    tr, te = data.splits("synthwiki", n_train=30_000, n_test=6_000)
+    # remap tokens into the tiny vocab
+    tr = (tr % TINY.vocab).astype(np.int32)
+    te = (te % TINY.vocab).astype(np.int32)
+    params, _ = train.train_lm(TINY, tr, steps=150, batch=8, seq_len=64,
+                               lr=3e-3, log_every=1000)
+    calib_tokens = data.calibration(tr, n_samples=8, seq_len=64)
+    calib = train.collect_calibration(TINY, params, calib_tokens,
+                                      max_cols=384)
+    return params, calib, te
+
+
+def eval_ppl(params, te):
+    return train.eval_ppl(TINY, {k: np.asarray(v, np.float32)
+                                 for k, v in params.items()},
+                          te, batch=8, seq_len=64, max_batches=6)
+
+
+def test_method_ordering(trained):
+    """The paper's Table 2 story at tiny scale: latentllm ≤ rootcov ≤
+    plain at matched ratio (allowing small noise margins)."""
+    params, calib, te = trained
+    base = eval_ppl(params, te)
+    p64 = {k: np.asarray(v, np.float64) for k, v in params.items()}
+    ppl = {}
+    for m in ("plain", "asvd_rootcov", "latentllm"):
+        nw, rep = pipeline.compress_model(TINY, p64, calib, m, 0.3,
+                                          qk_iters=4, ud_iters=2)
+        ppl[m] = eval_ppl(nw, te)
+        assert abs(rep["achieved_ratio"] - 0.3) < 0.06, (m, rep)
+    assert ppl["latentllm"] <= ppl["asvd_rootcov"] * 1.05
+    assert ppl["asvd_rootcov"] <= ppl["plain"] * 1.05
+    assert base <= ppl["latentllm"]
+
+
+def test_latent_forward_equals_reconstructed(trained):
+    """The deployed MLA architecture computes exactly the same function as
+    the reconstructed dense Ŵ (§4.1 inference identity, incl. biases)."""
+    from compile.aot import latent_params_from_report
+    params, calib, te = trained
+    p64 = {k: np.asarray(v, np.float64) for k, v in params.items()}
+    nw, rep = pipeline.compress_model(TINY, p64, calib, "latentllm", 0.3,
+                                      qk_iters=3, ud_iters=2)
+    keep = 0.7
+    r_qk = rank.joint_qk_rank(TINY.d, TINY.d_h, TINY.n_heads, TINY.n_heads,
+                              keep, blockid=True)
+    ranks = {"rq": r_qk, "rk": r_qk,
+             "rv": rank.local_rank(TINY.d, TINY.d, keep, True),
+             "ro": rank.local_rank(TINY.d, TINY.d, keep, True),
+             "ru": rank.local_rank(TINY.d_i, TINY.d, keep, True),
+             "rd": rank.local_rank(TINY.d, TINY.d_i, keep, True)}
+    lat = latent_params_from_report(
+        TINY, {k: np.asarray(v, np.float32) for k, v in params.items()},
+        rep, ranks)
+    toks = jnp.asarray(te[:64].astype(np.int32))
+    dense_logits = model.forward(
+        TINY, {k: jnp.asarray(np.asarray(v, np.float32))
+               for k, v in nw.items()}, toks)
+    lat_logits = model.latent_forward(
+        TINY, {k: jnp.asarray(v) for k, v in lat.items()}, toks,
+        use_pallas=False)
+    np.testing.assert_allclose(np.asarray(dense_logits),
+                               np.asarray(lat_logits), rtol=2e-3, atol=2e-3)
+
+
+def test_pallas_forward_equals_jnp(trained):
+    params, _, te = trained
+    jp = {k: jnp.asarray(np.asarray(v, np.float32))
+          for k, v in params.items()}
+    toks = jnp.asarray(te[:64].astype(np.int32))
+    l1 = model.forward(TINY, jp, toks, use_pallas=False)
+    l2 = model.forward(TINY, jp, toks, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_rank_solver_roundtrip():
+    for keep in (0.5, 0.7, 0.9):
+        for (do, di) in ((48, 48), (96, 48), (48, 96)):
+            for blockid in (False, True):
+                r = rank.local_rank(do, di, keep, blockid)
+                p = rank.local_params(do, di, r, blockid)
+                step = do + di
+                if 1 < r < min(do, di):
+                    assert abs(p - keep * do * di) <= step
+
+
+def test_calibration_shapes(trained):
+    _, calib, _ = trained
+    for i in range(TINY.n_layers):
+        layer = calib[f"layers.{i}"]
+        for k in ("attn_x", "o_x", "mlp_x"):
+            assert layer[k].shape[0] in (TINY.d,)
+            assert layer[k].shape[1] <= 384

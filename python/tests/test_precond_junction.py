@@ -1,0 +1,110 @@
+"""Pre-conditioner (Table 1) and junction-matrix (§3.3) properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.latentllm import asvd, junction, linalg, precond
+
+
+def test_rootcov_is_optimal(rng, wishart_cov):
+    """Paper §3.2: P = C^{1/2} minimizes the activation loss over Table 1."""
+    d = 20
+    c = wishart_cov(rng, d)
+    w = rng.normal(size=(16, d))
+    losses = {}
+    for kind in precond.PRECONDITIONERS:
+        res = asvd.compress(w, 8, kind=kind, junction_kind="left", c=c)
+        losses[kind] = res["loss"]
+    for kind, loss in losses.items():
+        assert losses["rootcov"] <= loss * (1 + 1e-9), kind
+
+
+def test_precond_inverse_pairs(rng, wishart_cov):
+    c = wishart_cov(rng, 12)
+    x = rng.normal(size=(12, 64))
+    for kind in precond.PRECONDITIONERS:
+        p, p_inv = precond.build(kind, x=x, c=c)
+        if kind in ("identity", "diag_hessian", "diag_l1", "diag_l2",
+                    "rootcov"):
+            np.testing.assert_allclose(p @ p_inv, np.eye(12), atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d_out=st.integers(4, 24), d_in=st.integers(4, 24),
+       r=st.integers(1, 12))
+def test_junctions_loss_invariant(d_out, d_in, r):
+    """Any J with SJJ⁺=S leaves Ŵ unchanged (§3.3)."""
+    r = min(r, d_out, d_in)
+    rng = np.random.default_rng(d_out * 100 + d_in + r)
+    w = rng.normal(size=(d_out, d_in))
+    u, s, vt = linalg.svd_truncated(w, r)
+    p_inv = np.eye(d_in)
+    ref_b, ref_a, _ = junction.apply(u, s, vt, p_inv, kind="left")
+    ref_w = ref_b @ ref_a
+    for kind in junction.JUNCTIONS:
+        b, a, info = junction.apply(u, s, vt, p_inv, kind=kind)
+        np.testing.assert_allclose(b @ a, ref_w, atol=1e-8)
+        assert info["rank"] == r
+
+
+def test_blockid_identity_exact(rng):
+    w = rng.normal(size=(10, 14))
+    u, s, vt = linalg.svd_truncated(w, 5)
+    b, a, info = junction.apply(u, s, vt, np.eye(14), kind="blockid")
+    idx = info["identity_cols"]
+    np.testing.assert_array_equal(a[:, idx], np.eye(5))
+
+
+def test_blockid_param_count():
+    # §3.3 worked example: r = 0.75d keeps (15/16)d² params
+    d = 64
+    r = 48
+    assert junction.factor_params(d, d, r, True) == 15 * d * d // 16
+    assert junction.factor_params(d, d, r, False) == 3 * d * d // 2
+
+
+def test_bias_update_preserves_mean(rng, wishart_cov):
+    """App B.2: b̂ = b + (W−BA)μ keeps the mean output."""
+    d = 12
+    x = rng.normal(size=(d, 200)) + rng.normal(size=(d, 1))  # nonzero mean
+    w = rng.normal(size=(8, d))
+    bias = rng.normal(size=8)
+    res = asvd.compress(w, 4, kind="rootcov", junction_kind="blockid",
+                        x=x, bias=bias)
+    mu = x.mean(axis=1)
+    np.testing.assert_allclose(w @ mu + bias,
+                               res["w_hat"] @ mu + res["bias"], atol=1e-8)
+
+
+def test_loss_matches_eckart_young_for_identity(rng):
+    """With P=I the ASVD loss equals the SVD tail energy."""
+    w = rng.normal(size=(10, 10))
+    s = np.linalg.svd(w, compute_uv=False)
+    res = asvd.compress(w, 6, kind="identity", junction_kind="left")
+    assert abs(res["loss"] - np.sum(s[6:] ** 2)) < 1e-8
+
+
+def test_joint_qkv_beats_split(rng, wishart_cov):
+    """App C / Fig 8: shared-A stacking wins at equal params."""
+    d = 16
+    c = wishart_cov(rng, d)
+    ws = [rng.normal(size=(d, d)) for _ in range(3)]
+    r = 4
+    split = sum(asvd.compress(w, r, kind="rootcov", junction_kind="left",
+                              c=c)["loss"] for w in ws)
+    r_joint = 3 * r * 2 * d // (4 * d)
+    jr = asvd.compress_stacked(ws, r_joint, kind="rootcov",
+                               junction_kind="left", c=c)
+    assert jr["loss"] <= split * 1.05
+
+
+def test_split_head_worse(rng, wishart_cov):
+    """App D / Fig 9."""
+    d = 16
+    c = wishart_cov(rng, d)
+    w = rng.normal(size=(d, d))
+    joint = asvd.compress(w, 8, kind="rootcov", junction_kind="left", c=c)
+    split = asvd.split_head_compress(w, 4, 8, kind="rootcov", c=c)
+    sl = linalg.act_loss(w, split["w_hat"], c)
+    assert joint["loss"] <= sl * (1 + 1e-9)

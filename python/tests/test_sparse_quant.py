@@ -1,0 +1,81 @@
+"""Sparse / low-rank+sparse / quantization appendix algorithms (App I)."""
+
+import numpy as np
+import pytest
+
+from compile.latentllm import asvd, linalg, quant, sparse
+
+
+@pytest.fixture
+def problem(rng, wishart_cov):
+    d = 14
+    return rng.normal(size=(d, d)), wishart_cov(rng, d)
+
+
+def test_hard_topk_exact(rng):
+    w = rng.normal(size=(8, 8))
+    for k in [0, 3, 17, 64, 100]:
+        d = sparse.hard_topk(w, k)
+        assert (d != 0).sum() == min(k, 64)
+
+
+def test_projected_gd_respects_sparsity_and_beats_wanda(problem):
+    w, c = problem
+    kappa = 60
+    d, loss = sparse.projected_gd(w, c, kappa, n_iter=60)
+    assert (d != 0).sum() <= kappa
+    _, wloss = sparse.wanda_diag(w, c, kappa)
+    assert loss <= wloss * (1 + 1e-9)
+
+
+def test_fista_near_target(problem):
+    w, c = problem
+    d, _ = sparse.fista(w, c, 50, n_iter=40)
+    assert 0 < (d != 0).sum() <= 75
+
+
+def test_sparse_beats_lowrank_equal_budget(problem):
+    """Fig 11 headline."""
+    w, c = problem
+    dsz = w.shape[0]
+    r = 3
+    budget = r * 2 * dsz
+    lr = asvd.compress(w, r, kind="rootcov", junction_kind="left", c=c)
+    _, sp = sparse.projected_gd(w, c, budget, n_iter=60)
+    assert sp <= lr["loss"] * (1 + 1e-9)
+
+
+def test_lowrank_plus_sparse_tracks(problem):
+    w, c = problem
+    ba, d, hist = sparse.lowrank_plus_sparse(w, c, rank=3, kappa=30,
+                                             n_iter=4)
+    assert hist[-1] <= hist[0] * (1 + 1e-9)
+    got = linalg.act_loss(w, ba + d, c)
+    assert abs(got - hist[-1]) < 1e-8
+
+
+def test_sparsify_factors(problem):
+    w, c = problem
+    lr = asvd.compress(w, 8, kind="rootcov", junction_kind="left", c=c)
+    b, a, hist = sparse.sparsify_factors(lr["B"], lr["A"], w, c, 0.5,
+                                         n_iter=25)
+    assert (b != 0).sum() <= int(0.5 * b.size) + 1
+    assert (a != 0).sum() <= int(0.5 * a.size) + 1
+    assert len(hist) == 25
+
+
+def test_quantizer_levels_and_identity(rng):
+    m = rng.normal(size=(6, 6))
+    q2 = quant.quantize_uniform(m, 2, chunk=36)
+    assert len(np.unique(np.round(q2, 9))) <= 4
+    q16 = quant.quantize_uniform(m, 16, chunk=36)
+    np.testing.assert_allclose(q16, m, atol=1e-3)
+
+
+def test_quant_ste_improves(problem):
+    w, c = problem
+    lr = asvd.compress(w, 7, kind="rootcov", junction_kind="left", c=c)
+    _, _, hist = quant.quantize_factors(lr["B"], lr["A"], w, c, bits=4,
+                                        chunk=32, n_iter=20)
+    assert min(hist) <= hist[0] * (1 + 1e-9)
+    assert min(hist) < hist[0]

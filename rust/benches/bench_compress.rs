@@ -1,0 +1,63 @@
+//! Compression-algorithm benches: per-module costs and the whole-model
+//! pipeline (the numbers behind EXPERIMENTS.md §Perf L3).
+
+use latentllm::compress::asvd::{self, AsvdOpts};
+use latentllm::compress::joint_qk::{self, JointQkOpts};
+use latentllm::compress::joint_ud::{self, JointUdOpts};
+use latentllm::compress::junction::Junction;
+use latentllm::compress::pipeline::{compress_model, Method};
+use latentllm::compress::precond::Precond;
+use latentllm::data::CalibSet;
+use latentllm::model::config::OPT_MINI_S;
+use latentllm::util::bench::Bench;
+use latentllm::util::rng::{decaying_covariance, wishart, Rng};
+
+fn main() {
+    let mut b = Bench::new(0.8);
+    let mut rng = Rng::new(2);
+    println!("== compression algorithms ==");
+
+    for d in [96usize, 128] {
+        let w = rng.normal_matrix(d, d);
+        let c = wishart(&mut rng, &decaying_covariance(d, 0.9), 2 * d);
+        let r = d / 2;
+        let opts = AsvdOpts { kind: Precond::RootCov,
+                              junction: Junction::BlockId,
+                              ..Default::default() };
+        b.run(&format!("asvd rootcov+blockid d={d} r={r}"),
+              || asvd::compress_with_cov(&w, r, &c, &vec![0.0; d], &opts));
+        let wq = rng.normal_matrix(d, d);
+        let wk = rng.normal_matrix(d, d);
+        b.run(&format!("joint_qk alg1 d={d} h=4 iters=8"), || {
+            joint_qk::compress(&wq, &wk, 4, d / 4, r, r,
+                               &JointQkOpts { kind: Precond::Identity,
+                                              n_iter: 8,
+                                              ..Default::default() })
+        });
+    }
+
+    // UD joint (the pipeline's dominant cost)
+    let (d, di, l) = (96usize, 384usize, 512usize);
+    let wu = rng.normal_matrix(di, d);
+    let wd = rng.normal_matrix(d, di).scale(0.2);
+    let x = rng.normal_matrix(d, l);
+    b.run("joint_ud d=96 di=384 l=512 iters=2", || {
+        joint_ud::compress(&wu, &vec![0.0; di], &wd, &vec![0.0; d], &x,
+                           48, 48, &JointUdOpts { n_iter: 2,
+                                                  ..Default::default() })
+    });
+
+    // whole-model pipeline (opt-mini-s, synthetic calibration)
+    println!("== whole-model pipeline (opt-mini-s) ==");
+    let cfg = OPT_MINI_S;
+    let weights = latentllm::compress::pipeline::tests_support::
+        random_weights(&cfg, 7);
+    let cal = CalibSet::synthetic(cfg.n_layers, cfg.d, 512, 3);
+    let mut bb = Bench::new(0.1); // pipeline is seconds; few iters
+    bb.max_iters = 3;
+    for method in [Method::AsvdRootCov, Method::LatentLlm] {
+        bb.run(&format!("pipeline {} @30%", method.name()), || {
+            compress_model(&cfg, &weights, &cal, method, 0.3, 4, 2).unwrap()
+        });
+    }
+}

@@ -1,0 +1,30 @@
+//! Linear-algebra substrate benches — the §Perf L3 hot-path baseline:
+//! matmul, symmetric eig (Algorithm 1's inner op), SVD, sqrtm.
+//!
+//! Run: cargo bench --offline (custom harness, see util::bench)
+
+use latentllm::tensor::{eigh, sqrtm_psd, svd_truncated, topk_eigvecs};
+use latentllm::util::bench::Bench;
+use latentllm::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new(0.6);
+    let mut rng = Rng::new(1);
+    println!("== linalg substrate ==");
+    for d in [64usize, 128, 256] {
+        let a = rng.normal_matrix(d, d);
+        let bm = rng.normal_matrix(d, d);
+        b.run(&format!("matmul {d}x{d}"), || a.matmul(&bm));
+        b.run(&format!("matmul_bt {d}x{d}"), || a.matmul_bt(&bm));
+        let psd = a.matmul_bt(&a);
+        b.run(&format!("eigh {d}x{d}"), || eigh(&psd));
+        b.run(&format!("topk_eigvecs {d}->k32"),
+              || topk_eigvecs(&psd, 32.min(d)));
+        b.run(&format!("sqrtm {d}x{d}"), || sqrtm_psd(&psd));
+        b.run(&format!("svd_r32 {d}x{d}"),
+              || svd_truncated(&a, 32.min(d)));
+    }
+    // the UD-path shape: tall covariance
+    let tall = rng.normal_matrix(384, 96);
+    b.run("svd_r48 384x96 (UD shape)", || svd_truncated(&tall, 48));
+}

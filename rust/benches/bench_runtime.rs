@@ -1,0 +1,58 @@
+//! PJRT runtime benches: program compile time and scoring-program execution
+//! throughput (tokens/s), dense vs latent-architecture programs.
+//! Requires artifacts (`make artifacts`); skips gracefully otherwise.
+
+use latentllm::data::Corpus;
+use latentllm::model::Weights;
+use latentllm::runtime::{Engine, ParamValue};
+use latentllm::util::bench::Bench;
+
+fn main() {
+    let artifacts = std::env::var("LATENTLLM_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        println!("bench_runtime: no artifacts at {artifacts} — skipping \
+                  (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::new(&artifacts).expect("engine");
+    let model = "opt-mini-m";
+    let weights = Weights::load(format!("{artifacts}/model_{model}.ltw"))
+        .expect("weights");
+    let corpus = Corpus::load(format!("{artifacts}/corpora.ltw"),
+                              "synthwiki", "test").expect("corpus");
+    let (b, t) = (8usize, 128usize);
+    let batch = corpus.batches(b, t).into_iter().next().unwrap();
+
+    let mut bench = Bench::new(1.0);
+    println!("== PJRT runtime ==");
+    bench.run("compile score program (cold-ish)", || {
+        // compile cache makes repeats cheap; measure the cached fetch too
+        engine.program(&format!("score_{model}")).unwrap()
+    });
+    let prog = engine.program(&format!("score_{model}")).unwrap();
+    let stats = bench.run("score exec 8x128 (dense)", || {
+        let tokens = ParamValue::I32 { shape: vec![b, t],
+                                       data: batch.clone() };
+        prog.run_f32(&[tokens], &weights).unwrap()
+    });
+    let toks_per_s = (b * t) as f64 / (stats.mean_ns / 1e9);
+    println!("  -> {toks_per_s:.0} tokens/s (dense scoring)");
+
+    // latent-architecture program (true MLA execution path)
+    let tag_entry = engine.manifest().path(&["latent_demo", "tag"])
+        .and_then(|v| v.as_str()).map(String::from);
+    if let Some(tag) = tag_entry {
+        let lat_w = Weights::load(
+            format!("{artifacts}/latent_model_{tag}.ltw")).unwrap();
+        let lprog = engine.program(&format!("latent_score_{tag}")).unwrap();
+        let stats = bench.run("score exec 8x128 (latent/MLA)", || {
+            let tokens = ParamValue::I32 { shape: vec![b, t],
+                                           data: batch.clone() };
+            lprog.run_f32(&[tokens], &lat_w).unwrap()
+        });
+        let l_toks = (b * t) as f64 / (stats.mean_ns / 1e9);
+        println!("  -> {l_toks:.0} tokens/s (latent scoring, \
+                  {:.2}x dense)", l_toks / toks_per_s);
+    }
+}

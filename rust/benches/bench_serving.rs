@@ -1,0 +1,70 @@
+//! End-to-end serving bench: throughput and latency quantiles of the
+//! coordinator (batcher + router + PJRT worker) under a closed-loop load,
+//! across batcher configurations — the L3 target of EXPERIMENTS.md §Perf.
+
+use std::time::Duration;
+
+use latentllm::coordinator::batcher::BatcherConfig;
+use latentllm::coordinator::kvcache::{CacheKind, KvCacheManager};
+use latentllm::coordinator::router::{ModelVariant, Policy, Router};
+use latentllm::coordinator::server::{ScoreRequest, Server, ServerConfig};
+use latentllm::data::Corpus;
+use latentllm::model::config::mini_by_name;
+use latentllm::model::Weights;
+
+fn main() {
+    let artifacts = std::env::var("LATENTLLM_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        println!("bench_serving: no artifacts — skipping");
+        return;
+    }
+    let model = "opt-mini-m";
+    let cfg = mini_by_name(model).unwrap();
+    let weights = Weights::load(format!("{artifacts}/model_{model}.ltw"))
+        .unwrap();
+    let corpus = Corpus::load(format!("{artifacts}/corpora.ltw"),
+                              "synthwiki", "test").unwrap();
+    let n_requests = 64usize;
+
+    println!("== serving e2e (batcher sweep) ==");
+    for (max_batch, wait_ms) in [(1usize, 0u64), (4, 2), (8, 5), (8, 20)] {
+        let variants = vec![ModelVariant {
+            name: "dense".into(),
+            score_program: format!("score_{model}"),
+            weights: weights.clone(),
+            cache: KvCacheManager::new(CacheKind::Dense { d: cfg.d },
+                                       cfg.n_layers, 2, 64 << 20),
+        }];
+        let server = Server::start(
+            artifacts.clone().into(),
+            Router::new(variants, Policy::RoundRobin),
+            ServerConfig {
+                batcher: BatcherConfig {
+                    max_batch,
+                    max_wait: Duration::from_millis(wait_ms),
+                },
+                policy: Policy::RoundRobin,
+                program_batch: 8,
+                seq_len: 128,
+            });
+        let reqs = corpus.calibration(n_requests, 128, 42);
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = reqs.into_iter().enumerate()
+            .map(|(i, tokens)| server.submit(ScoreRequest {
+                id: i as u64, tokens }))
+            .collect();
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let m = server.shutdown();
+        let (p50, p95, p99) = m.quantiles("request_us")
+            .unwrap_or((0.0, 0.0, 0.0));
+        println!("max_batch={max_batch:<2} wait={wait_ms:>2}ms: \
+                  {:>6.1} req/s  p50={:>7.0}µs p95={:>7.0}µs p99={:>7.0}µs \
+                  batches={}",
+                 n_requests as f64 / dt, p50, p95, p99,
+                 m.counter("batches"));
+    }
+}

@@ -1,0 +1,51 @@
+//! One bench per paper table/figure (DESIGN.md §4): regenerates each
+//! artifact-free experiment and times it; artifact-dependent tables run in
+//! reduced form when artifacts exist. `cargo bench` therefore exercises
+//! every reproduction path end to end.
+
+use latentllm::compress::pipeline::Method;
+use latentllm::reports::{figs, tables};
+use latentllm::runtime::Engine;
+use latentllm::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new(0.3);
+    b.max_iters = 3;
+    println!("== paper tables & figures ==");
+    b.run("table3 (analytic, exact)", tables::table3);
+    b.run("fig7  (precond sweep)", || figs::fig7(32, 1));
+    b.run("fig8  (joint vs split qkv)", || figs::fig8(32, 2));
+    b.run("fig9  (split-head)", || figs::fig9(32, 4, 3));
+    b.run("fig10 (attention-aware)", || figs::fig10(32, 4, 4));
+    b.run("fig11+16 (sparse vs lowrank)", || figs::fig11_16(28, 5));
+    b.run("fig12 (rope window)", || figs::fig12(48, 8, 6));
+    b.run("fig13 (shrink variants)", || figs::fig13(28, 7));
+    b.run("fig14 (lowrank+sparse)", || figs::fig14(24, 8));
+    b.run("fig15 (sparse factors)", || figs::fig15(24, 9));
+
+    let artifacts = std::env::var("LATENTLLM_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    if std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        let engine = Engine::new(&artifacts).unwrap();
+        let ctx = tables::TableCtx {
+            engine: &engine,
+            artifacts: artifacts.clone().into(),
+            max_batches: 4,
+            qk_iters: 3,
+            ud_iters: 2,
+        };
+        let mut b2 = Bench::new(0.1);
+        b2.max_iters = 1;
+        b2.run("table2 (1 size, 1 ratio, 2 methods)", || {
+            tables::table2(&ctx, &["opt-mini-s"], &[0.3],
+                           &[Method::AsvdRootCov, Method::LatentLlm])
+                .unwrap()
+        });
+        b2.run("table4 (1 ratio, 1 method)", || {
+            tables::table4(&ctx, &[0.3], &[Method::LatentLlm]).unwrap()
+        });
+    } else {
+        println!("(artifacts missing: table2/table4 skipped — run `make \
+                  artifacts`)");
+    }
+}

@@ -1,0 +1,235 @@
+//! Local activation-aware SVD compression of one linear layer
+//! (paper §3.2 + App A/B):  B A P = svd_r[W P]  with bias update
+//! b̂ = b + (W − BA)μ against the centered covariance (App B.2).
+
+use super::junction::{self, Factors, Junction};
+use super::precond::Precond;
+use crate::tensor::linalg::act_loss;
+use crate::tensor::svd_truncated;
+use crate::Matrix;
+
+#[derive(Clone, Debug)]
+pub struct AsvdResult {
+    pub factors: Factors,
+    pub w_hat: Matrix,
+    pub bias: Option<Vec<f64>>,
+    pub rank: usize,
+    /// tr[(W−Ŵ) C (W−Ŵ)ᵀ]
+    pub loss: f64,
+    /// loss / tr[W C Wᵀ]
+    pub rel_loss: f64,
+    pub params: usize,
+}
+
+pub struct AsvdOpts<'a> {
+    pub kind: Precond,
+    pub junction: Junction,
+    /// raw activations [d×l] (for the ℓ1 pre-conditioner / centering)
+    pub x: Option<&'a Matrix>,
+    pub bias: Option<&'a [f64]>,
+    pub lam_rel: f64,
+}
+
+impl Default for AsvdOpts<'_> {
+    fn default() -> Self {
+        AsvdOpts {
+            kind: Precond::RootCov,
+            junction: Junction::BlockId,
+            x: None,
+            bias: None,
+            lam_rel: 1e-6,
+        }
+    }
+}
+
+/// Covariance + mean from opts (centered iff a bias is being updated —
+/// App B.2 Remark 2).
+fn stats(d_in: usize, opts: &AsvdOpts) -> (Matrix, Vec<f64>) {
+    match opts.x {
+        Some(x) => {
+            if opts.bias.is_some() {
+                let mu = x.col_mean();
+                (x.center_cols(&mu).covariance(opts.lam_rel), mu)
+            } else {
+                (x.covariance(opts.lam_rel), vec![0.0; d_in])
+            }
+        }
+        None => (Matrix::eye(d_in), vec![0.0; d_in]),
+    }
+}
+
+pub fn compress(w: &Matrix, rank: usize, opts: &AsvdOpts) -> AsvdResult {
+    let (c, mu) = stats(w.cols(), opts);
+    compress_with_cov(w, rank, &c, &mu, opts)
+}
+
+pub fn compress_with_cov(w: &Matrix, rank: usize, c: &Matrix, mu: &[f64],
+                         opts: &AsvdOpts) -> AsvdResult {
+    let (p, p_inv) = opts.kind.build(c, opts.x);
+    compress_prewhitened(w, rank, &p, &p_inv, c, mu, opts)
+}
+
+/// As [`compress_with_cov`] but with a prebuilt pre-conditioner pair —
+/// §Perf: callers that already hold an eigendecomposition of C (the UD
+/// refit loop) avoid recomputing it.
+pub fn compress_prewhitened(w: &Matrix, rank: usize, p: &Matrix,
+                            p_inv: &Matrix, c: &Matrix, mu: &[f64],
+                            opts: &AsvdOpts) -> AsvdResult {
+    let rank = rank.min(w.rows()).min(w.cols()).max(1);
+    let f = svd_truncated(&w.matmul(p), rank);
+    let factors = junction::apply(&f, p_inv, opts.junction);
+    let w_hat = factors.w_hat();
+
+    let bias = opts.bias.map(|b| {
+        let delta = w.sub(&w_hat).matvec(mu);
+        b.iter().zip(&delta).map(|(b, d)| b + d).collect()
+    });
+
+    let loss = act_loss(w, &w_hat, c);
+    let denom = w.matmul(c).matmul_bt(w).trace().max(1e-30);
+    let params = factors.params();
+    AsvdResult {
+        factors, w_hat, bias, rank, loss,
+        rel_loss: loss / denom, params,
+    }
+}
+
+/// Joint-QKV style (App C): stack weights sharing the same input; shared A,
+/// stacked B. Returns the full result plus per-block row offsets.
+pub fn compress_stacked(ws: &[&Matrix], rank: usize, opts: &AsvdOpts)
+                        -> (AsvdResult, Vec<usize>) {
+    let refs: Vec<&Matrix> = ws.to_vec();
+    let stacked = Matrix::vstack(&refs);
+    let mut offs = vec![0usize];
+    for w in ws {
+        offs.push(offs.last().unwrap() + w.rows());
+    }
+    (compress(&stacked, rank, opts), offs)
+}
+
+/// Split-head ablation (App D): each head compressed independently with
+/// rank_total/h; block-diagonal B.
+pub fn split_head_compress(w: &Matrix, n_heads: usize, rank_total: usize,
+                           opts: &AsvdOpts) -> (Matrix, f64) {
+    let dh = w.rows() / n_heads;
+    let rh = (rank_total / n_heads).max(1);
+    let mut blocks = Vec::new();
+    let mut loss = 0.0;
+    for i in 0..n_heads {
+        let wi = w.slice_rows(i * dh, (i + 1) * dh);
+        let r = compress(&wi, rh, opts);
+        loss += r.loss;
+        blocks.push(r.w_hat);
+    }
+    let refs: Vec<&Matrix> = blocks.iter().collect();
+    (Matrix::vstack(&refs), loss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{decaying_covariance, wishart, Rng};
+
+    fn problem(seed: u64, d_out: usize, d_in: usize, l: usize)
+               -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let w = rng.normal_matrix(d_out, d_in);
+        let sigma = decaying_covariance(d_in, 0.9);
+        let chol = crate::tensor::cholesky(&sigma).unwrap();
+        let x = chol.matmul(&rng.normal_matrix(d_in, l));
+        (w, x)
+    }
+
+    #[test]
+    fn rootcov_is_optimal_among_preconditioners() {
+        // Paper §3.2: P = C^{1/2} minimizes the activation loss — every
+        // other Table 1 variant must be ≥ (Fig 7 / Fig 16 premise).
+        let (w, x) = problem(40, 12, 16, 200);
+        let c = x.covariance(1e-6);
+        let mut losses = std::collections::BTreeMap::new();
+        for kind in super::super::precond::ALL {
+            let opts = AsvdOpts { kind, x: Some(&x), junction: Junction::Left,
+                                  ..Default::default() };
+            let r = compress_with_cov(&w, 6, &c, &vec![0.0; 16], &opts);
+            losses.insert(kind.name(), r.loss);
+        }
+        let best = losses["rootcov"];
+        for (name, &loss) in &losses {
+            assert!(best <= loss * (1.0 + 1e-9),
+                    "rootcov {best} should beat {name} {loss}");
+        }
+    }
+
+    #[test]
+    fn loss_decreases_with_rank() {
+        let (w, x) = problem(41, 10, 14, 150);
+        let opts = AsvdOpts { x: Some(&x), ..Default::default() };
+        let mut prev = f64::INFINITY;
+        for r in [2usize, 4, 6, 8, 10] {
+            let res = compress(&w, r, &opts);
+            assert!(res.loss <= prev + 1e-9, "rank {r}");
+            prev = res.loss;
+        }
+        // full rank = exact
+        let res = compress(&w, 10, &opts);
+        assert!(res.rel_loss < 1e-12);
+    }
+
+    #[test]
+    fn bias_update_preserves_mean_output() {
+        // App B.2: with b̂ = b + (W−Ŵ)μ the mean output is unchanged.
+        let (w, x) = problem(42, 8, 12, 300);
+        let bias: Vec<f64> = (0..8).map(|i| i as f64 * 0.1).collect();
+        let opts = AsvdOpts { x: Some(&x), bias: Some(&bias),
+                              ..Default::default() };
+        let res = compress(&w, 4, &opts);
+        let mu = x.col_mean();
+        let y_mean = w.matvec(&mu).iter().zip(&bias)
+            .map(|(a, b)| a + b).collect::<Vec<_>>();
+        let y_hat_mean = res.w_hat.matvec(&mu).iter()
+            .zip(res.bias.as_ref().unwrap())
+            .map(|(a, b)| a + b).collect::<Vec<_>>();
+        for (a, b) in y_mean.iter().zip(&y_hat_mean) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn joint_qkv_beats_split_qkv_at_equal_params(// Fig 8
+    ) {
+        let mut rng = Rng::new(43);
+        let d = 18;
+        let c = wishart(&mut rng, &decaying_covariance(d, 0.9), 3 * d);
+        let wq = rng.normal_matrix(d, d);
+        let wk = rng.normal_matrix(d, d);
+        let wv = rng.normal_matrix(d, d);
+        // split: rank r each => params 3r(2d); joint: rank 3r-ish shared.
+        let r = 4;
+        let opts = AsvdOpts { junction: Junction::Left, ..Default::default() };
+        let mut split_loss = 0.0;
+        for w in [&wq, &wk, &wv] {
+            split_loss +=
+                compress_with_cov(w, r, &c, &vec![0.0; d], &opts).loss;
+        }
+        // joint rank giving the same params: 3r(2d) = r_j(3d + d)
+        let r_j = 3 * r * 2 * d / (4 * d);
+        let (joint, _) = {
+            let stacked = Matrix::vstack(&[&wq, &wk, &wv]);
+            (compress_with_cov(&stacked, r_j, &c, &vec![0.0; d], &opts), 0)
+        };
+        assert!(joint.loss <= split_loss * 1.05,
+                "joint {} vs split {}", joint.loss, split_loss);
+    }
+
+    #[test]
+    fn split_head_is_worse(// Fig 9: block-diagonal B wastes capacity
+    ) {
+        let (w, x) = problem(44, 16, 16, 200);
+        let opts = AsvdOpts { x: Some(&x), junction: Junction::Left,
+                              ..Default::default() };
+        let joint = compress(&w, 8, &opts);
+        let (_, split_loss) = split_head_compress(&w, 4, 8, &opts);
+        assert!(joint.loss <= split_loss * (1.0 + 1e-9),
+                "joint {} vs split-head {}", joint.loss, split_loss);
+    }
+}

@@ -1,0 +1,336 @@
+//! Joint QK compression → multi-head latent attention
+//! (paper §4.1, Algorithm 1, App E).
+//!
+//! Tucker/HOSVD over the 3-mode tensor with slices G̃ᵢ = (Wq,i P)ᵀ(Wk,i P),
+//! alternating `RightSingular` (= top-k eigenvector) updates:
+//!
+//! ```text
+//! Ak ← eigvecs_rk[Σᵢ G̃ᵢᵀ Aqᵀ Aq G̃ᵢ]
+//! Aq ← eigvecs_rq[Σᵢ G̃ᵢ Akᵀ Ak G̃ᵢᵀ]
+//! ```
+//!
+//! with per-head cores Hᵢ = Aq G̃ᵢ Akᵀ and outputs Bq,i = Wq,i P Aqᵀ,
+//! Bk,i = Wk,i P Akᵀ, Aq ← Aq P⁺, Ak ← Ak P⁺ (Jᵢ = I). GQA is supported
+//! through `group_size` (App E.3); bias-aware mode adds the rank-1 terms of
+//! Eq 140/142 and the first-order bias correction b̂ = b + (W−Ŵ)μ.
+
+use super::precond::Precond;
+use crate::tensor::topk_eigvecs;
+use crate::Matrix;
+
+pub struct JointQkOpts<'a> {
+    pub kind: Precond,
+    pub n_iter: usize,
+    /// query heads per kv head (GQA group size; 1 = MHA)
+    pub group_size: usize,
+    pub x: Option<&'a Matrix>,
+    pub bq: Option<&'a [f64]>,
+    pub bk: Option<&'a [f64]>,
+    pub lam_rel: f64,
+}
+
+impl Default for JointQkOpts<'_> {
+    fn default() -> Self {
+        JointQkOpts {
+            kind: Precond::RootCov,
+            n_iter: 8,
+            group_size: 1,
+            x: None,
+            bq: None,
+            bk: None,
+            lam_rel: 1e-6,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct JointQkResult {
+    pub aq: Matrix,          // rq×d (already un-whitened: Aq P⁺)
+    pub ak: Matrix,          // rk×d
+    pub bq: Vec<Matrix>,     // per q-head d_h×rq
+    pub bk: Vec<Matrix>,     // per kv-head d_h×rk
+    pub bq_bias: Option<Vec<f64>>,
+    pub bk_bias: Option<Vec<f64>>,
+    pub wq_hat: Matrix,
+    pub wk_hat: Matrix,
+    /// attention-map loss after each alternating iteration (Eq 68)
+    pub losses: Vec<f64>,
+    pub rq: usize,
+    pub rk: usize,
+    pub params: usize,
+}
+
+fn split_heads(w: &Matrix, n: usize, dh: usize) -> Vec<Matrix> {
+    assert_eq!(w.rows(), n * dh, "head split {}x{} into {n}x{dh}",
+               w.rows(), w.cols());
+    (0..n).map(|i| w.slice_rows(i * dh, (i + 1) * dh)).collect()
+}
+
+/// L = Σᵢ ‖Gᵢ‖² − ‖Aq Gᵢ Akᵀ‖² for orthonormal Aq/Ak rows (Eq 68).
+pub fn attention_map_loss(g: &[Matrix], aq: &Matrix, ak: &Matrix) -> f64 {
+    g.iter()
+        .map(|gi| gi.frob2() - aq.matmul(gi).matmul_bt(ak).frob2())
+        .sum()
+}
+
+pub fn compress(wq: &Matrix, wk: &Matrix, n_kv_heads: usize, d_h: usize,
+                rq: usize, rk: usize, opts: &JointQkOpts) -> JointQkResult {
+    let d = wq.cols();
+    let rq = rq.min(d).max(1);
+    let rk = rk.min(d).max(1);
+    let gs = opts.group_size.max(1);
+    let n_q = gs * n_kv_heads;
+    let bias_aware = opts.bq.is_some() && opts.bk.is_some() && opts.x.is_some();
+
+    let (c, mu) = match opts.x {
+        Some(x) if bias_aware => {
+            let mu = x.col_mean();
+            (x.center_cols(&mu).covariance(opts.lam_rel), mu)
+        }
+        Some(x) => (x.covariance(opts.lam_rel), vec![0.0; d]),
+        None => (Matrix::eye(d), vec![0.0; d]),
+    };
+    let (p, p_inv) = opts.kind.build(&c, opts.x);
+
+    let q_heads = split_heads(wq, n_q, d_h);
+    let k_heads = split_heads(wk, n_kv_heads, d_h);
+    let qp: Vec<Matrix> = q_heads.iter().map(|h| h.matmul(&p)).collect();
+    let kp: Vec<Matrix> = k_heads.iter().map(|h| h.matmul(&p)).collect();
+
+    // whitened kernels G̃_{i,j} = (Wq,ij P)ᵀ (Wk,i P), one per (q, kv) pair
+    let mut g = Vec::with_capacity(n_q);
+    let mut pair_kv = Vec::with_capacity(n_q);
+    for i in 0..n_kv_heads {
+        for j in 0..gs {
+            let qi = i * gs + j;
+            g.push(qp[qi].matmul_at(&kp[i]));
+            pair_kv.push(i);
+        }
+    }
+
+    // bias rank-1 augmentation (Eq 140/142)
+    let mut uq = Matrix::zeros(d, d);
+    let mut uk = Matrix::zeros(d, d);
+    if bias_aware {
+        let bq = opts.bq.unwrap();
+        let bk = opts.bk.unwrap();
+        for (qi, &ki) in pair_kv.iter().enumerate() {
+            let bk_i = &bk[ki * d_h..(ki + 1) * d_h];
+            let bq_i = &bq[qi * d_h..(qi + 1) * d_h];
+            let vk: Vec<f64> = k_heads[ki].matvec(&mu).iter().zip(bk_i)
+                .map(|(a, b)| a + b).collect();
+            let vq: Vec<f64> = q_heads[qi].matvec(&mu).iter().zip(bq_i)
+                .map(|(a, b)| a + b).collect();
+            let a_vec = p.matvec(&q_heads[qi].transpose().matvec(&vk));
+            let b_vec = p.matvec(&k_heads[ki].transpose().matvec(&vq));
+            rank1_add(&mut uq, &a_vec);
+            rank1_add(&mut uk, &b_vec);
+        }
+    }
+
+    // init Aq from Σ G Gᵀ (Algorithm 1 init line)
+    let mut acc = Matrix::zeros(d, d);
+    for gi in &g {
+        acc.add_inplace(&gi.matmul_bt(gi));
+    }
+    acc.add_inplace(&uq);
+    let mut aq = topk_eigvecs(&acc, rq);
+
+    let mut ak = {
+        let mut acc = Matrix::zeros(d, d);
+        for gi in &g {
+            acc.add_inplace(&gi.matmul_at(gi));
+        }
+        acc.add_inplace(&uk);
+        topk_eigvecs(&acc, rk)
+    };
+    let mut losses = vec![attention_map_loss(&g, &aq, &ak)];
+
+    for _ in 0..opts.n_iter.max(1) {
+        // Ak ← eigvecs[Σ Gᵀ Aqᵀ Aq G]
+        let mut acc_k = Matrix::zeros(d, d);
+        for gi in &g {
+            let ag = aq.matmul(gi); // rq×d
+            acc_k.add_inplace(&ag.matmul_at(&ag));
+        }
+        acc_k.add_inplace(&uk);
+        ak = topk_eigvecs(&acc_k, rk);
+        // Aq ← eigvecs[Σ G Akᵀ Ak Gᵀ]
+        let mut acc_q = Matrix::zeros(d, d);
+        for gi in &g {
+            let ga = ak.matmul(&gi.transpose()); // rk×d
+            acc_q.add_inplace(&ga.matmul_at(&ga));
+        }
+        acc_q.add_inplace(&uq);
+        aq = topk_eigvecs(&acc_q, rq);
+        losses.push(attention_map_loss(&g, &aq, &ak));
+    }
+
+    // outputs (Alg 1, Jᵢ = I)
+    let bq_f: Vec<Matrix> = qp.iter().map(|h| h.matmul_bt(&aq)).collect();
+    let bk_f: Vec<Matrix> = kp.iter().map(|h| h.matmul_bt(&ak)).collect();
+    let aq_f = aq.matmul(&p_inv);
+    let ak_f = ak.matmul(&p_inv);
+
+    let wq_hat = {
+        let blocks: Vec<Matrix> =
+            bq_f.iter().map(|b| b.matmul(&aq_f)).collect();
+        let refs: Vec<&Matrix> = blocks.iter().collect();
+        Matrix::vstack(&refs)
+    };
+    let wk_hat = {
+        let blocks: Vec<Matrix> =
+            bk_f.iter().map(|b| b.matmul(&ak_f)).collect();
+        let refs: Vec<&Matrix> = blocks.iter().collect();
+        Matrix::vstack(&refs)
+    };
+
+    let (bq_bias, bk_bias) = if bias_aware {
+        // first-order correction: b̂ = b + (W − Ŵ)μ (Eq 121/122, Jᵢ=I)
+        let fix = |b: &[f64], w: &Matrix, wh: &Matrix| {
+            let delta = w.sub(wh).matvec(&mu);
+            b.iter().zip(&delta).map(|(a, d)| a + d).collect::<Vec<f64>>()
+        };
+        (Some(fix(opts.bq.unwrap(), wq, &wq_hat)),
+         Some(fix(opts.bk.unwrap(), wk, &wk_hat)))
+    } else {
+        (None, None)
+    };
+
+    let params =
+        super::rank::joint_qk_params(d, d_h, n_q, n_kv_heads, rq, rk, true);
+    JointQkResult {
+        aq: aq_f, ak: ak_f, bq: bq_f, bk: bk_f, bq_bias, bk_bias,
+        wq_hat, wk_hat, losses, rq, rk, params,
+    }
+}
+
+fn rank1_add(m: &mut Matrix, v: &[f64]) {
+    let d = v.len();
+    for i in 0..d {
+        if v[i] == 0.0 {
+            continue;
+        }
+        for j in 0..d {
+            m[(i, j)] += v[i] * v[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::asvd::{self, AsvdOpts};
+    use crate::compress::junction::Junction;
+    use crate::util::rng::{decaying_covariance, wishart, Rng};
+
+    fn heads(seed: u64, d: usize, h: usize) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let wq = rng.normal_matrix(d, d);
+        let wk = rng.normal_matrix(d, d);
+        let c = wishart(&mut rng, &decaying_covariance(d, 0.9), 2 * d);
+        let _ = h;
+        (wq, wk, c)
+    }
+
+    #[test]
+    fn losses_monotone_nonincreasing() {
+        let (wq, wk, _) = heads(50, 24, 4);
+        let opts = JointQkOpts { kind: Precond::Identity, n_iter: 6,
+                                 ..Default::default() };
+        let res = compress(&wq, &wk, 4, 6, 10, 10, &opts);
+        for w in res.losses.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-9), "{:?}", res.losses);
+        }
+        assert!(res.losses[0] >= 0.0);
+    }
+
+    #[test]
+    fn exact_at_full_rank() {
+        let (wq, wk, _) = heads(51, 16, 4);
+        let opts = JointQkOpts { kind: Precond::Identity,
+                                 ..Default::default() };
+        let res = compress(&wq, &wk, 4, 4, 16, 16, &opts);
+        assert!(res.wq_hat.max_abs_diff(&wq) < 1e-7);
+        assert!(res.wk_hat.max_abs_diff(&wk) < 1e-7);
+        assert!(res.losses.last().unwrap().abs() < 1e-7);
+    }
+
+    #[test]
+    fn attention_aware_beats_activation_aware(// Fig 10
+    ) {
+        // Attention-map loss of the joint HOSVD vs per-matrix ASVD at the
+        // same ranks, both whitened by the same covariance.
+        let (wq, wk, c) = heads(52, 20, 4);
+        let d = 20;
+        let dh = 5;
+        let (rq, rk) = (8, 8);
+        let opts = JointQkOpts { kind: Precond::RootCov, n_iter: 8,
+                                 ..Default::default() };
+        // inject covariance by pretending x: use c via compress_with_cov
+        // path: build P outside and pass identity + pre-whitened weights.
+        let p = crate::tensor::sqrtm_psd(&c);
+        let wq_w = wq.matmul(&p);
+        let wk_w = wk.matmul(&p);
+        let joint = compress(&wq_w, &wk_w, 4, dh, rq, rk,
+                             &JointQkOpts { kind: Precond::Identity,
+                                            ..opts });
+        // activation-aware baseline: ASVD each of Wq, Wk at same ranks
+        let aopts = AsvdOpts { kind: Precond::Identity,
+                               junction: Junction::Left,
+                               ..Default::default() };
+        let rq_res = asvd::compress(&wq_w, rq, &aopts);
+        let rk_res = asvd::compress(&wk_w, rk, &aopts);
+        // attention-map loss of the baseline
+        let mut base_loss = 0.0;
+        for i in 0..4 {
+            let gi = wq_w.slice_rows(i * dh, (i + 1) * dh).matmul_at(
+                &wk_w.slice_rows(i * dh, (i + 1) * dh));
+            let gh = rq_res.w_hat.slice_rows(i * dh, (i + 1) * dh).matmul_at(
+                &rk_res.w_hat.slice_rows(i * dh, (i + 1) * dh));
+            base_loss += gi.sub(&gh).frob2();
+        }
+        let joint_loss = *joint.losses.last().unwrap();
+        assert!(joint_loss <= base_loss * 1.01,
+                "attention-aware {joint_loss} vs activation-aware {base_loss}");
+    }
+
+    #[test]
+    fn gqa_group_size() {
+        let mut rng = Rng::new(53);
+        let (d, dh, n_kv, gs) = (16usize, 4usize, 2usize, 2usize);
+        let wq = rng.normal_matrix(gs * n_kv * dh, d);
+        let wk = rng.normal_matrix(n_kv * dh, d);
+        let opts = JointQkOpts { kind: Precond::Identity, group_size: gs,
+                                 ..Default::default() };
+        let res = compress(&wq, &wk, n_kv, dh, 8, 8, &opts);
+        assert_eq!(res.bq.len(), gs * n_kv);
+        assert_eq!(res.bk.len(), n_kv);
+        assert_eq!(res.wq_hat.rows(), wq.rows());
+        assert_eq!(res.wk_hat.rows(), wk.rows());
+    }
+
+    #[test]
+    fn bias_aware_keeps_mean_logits() {
+        let mut rng = Rng::new(54);
+        let (d, dh, h) = (12usize, 3usize, 4usize);
+        let wq = rng.normal_matrix(d, d);
+        let wk = rng.normal_matrix(d, d);
+        let x = rng.normal_matrix(d, 100);
+        let bq: Vec<f64> = (0..d).map(|i| 0.05 * i as f64).collect();
+        let bk: Vec<f64> = (0..d).map(|i| -0.03 * i as f64).collect();
+        let opts = JointQkOpts { x: Some(&x), bq: Some(&bq), bk: Some(&bk),
+                                 ..Default::default() };
+        let res = compress(&wq, &wk, h, dh, 8, 8, &opts);
+        let mu = x.col_mean();
+        // mean q per head preserved
+        let q_mean: Vec<f64> = wq.matvec(&mu).iter().zip(&bq)
+            .map(|(a, b)| a + b).collect();
+        let q_hat_mean: Vec<f64> = res.wq_hat.matvec(&mu).iter()
+            .zip(res.bq_bias.as_ref().unwrap())
+            .map(|(a, b)| a + b).collect();
+        for (a, b) in q_mean.iter().zip(&q_hat_mean) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+}

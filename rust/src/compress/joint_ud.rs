@@ -1,0 +1,252 @@
+//! Joint Up/Down (MLP) compression via SparseLLM-style decoupling
+//! (paper §4.3, App H). Alternates the closed-form auxiliary updates
+//! (Z′ ridge solve Eq 21, Z ReLU branch choice Eq 22) with effective-weight
+//! refits compressed by root-covariance ASVD.
+
+use super::asvd::{self, AsvdOpts, AsvdResult};
+use super::junction::Junction;
+use super::precond::Precond;
+use crate::tensor::solve;
+use crate::Matrix;
+
+pub struct JointUdOpts {
+    pub n_iter: usize,
+    pub junction: Junction,
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma: f64,
+    pub lam_rel: f64,
+}
+
+impl Default for JointUdOpts {
+    fn default() -> Self {
+        JointUdOpts { n_iter: 4, junction: Junction::BlockId,
+                      alpha: 1.0, beta: 1.0, gamma: 1.0, lam_rel: 1e-6 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct JointUdResult {
+    pub wu_hat: Matrix,
+    pub bu: Vec<f64>,
+    pub wd_hat: Matrix,
+    pub bd: Vec<f64>,
+    pub res_u: AsvdResult,
+    pub res_d: AsvdResult,
+    /// end-to-end MLP output loss after init and each iteration
+    pub losses: Vec<f64>,
+    pub params: usize,
+}
+
+fn relu(m: &Matrix) -> Matrix {
+    let mut out = m.clone();
+    for v in out.data_mut() {
+        *v = v.max(0.0);
+    }
+    out
+}
+
+fn add_bias(m: &Matrix, b: &[f64]) -> Matrix {
+    let mut out = m.clone();
+    for i in 0..m.rows() {
+        for v in out.row_mut(i) {
+            *v += b[i];
+        }
+    }
+    out
+}
+
+fn mlp_loss(wu: &Matrix, bu: &[f64], wd: &Matrix, bd: &[f64],
+            x: &Matrix, y: &Matrix) -> f64 {
+    let z = relu(&add_bias(&wu.matmul(x), bu));
+    add_bias(&wd.matmul(&z), bd).sub(y).frob2()
+}
+
+/// Ridge-fit target ≈ W_eff·x + b, then root-cov ASVD at the given rank.
+/// §Perf: one eigendecomposition of C serves the ridge pseudo-inverse AND
+/// the root-covariance pre-conditioner pair.
+fn fit_effective(target: &Matrix, x: &Matrix, rank: usize,
+                 junction: Junction, lam_rel: f64)
+                 -> (Matrix, Vec<f64>, AsvdResult) {
+    use crate::tensor::eig::eigh;
+    let mu_x = x.col_mean();
+    let mu_t = target.col_mean();
+    let xc = x.center_cols(&mu_x);
+    let tc = target.center_cols(&mu_t);
+    let c = xc.covariance(lam_rel.max(1e-8));
+    let l = x.cols().max(1) as f64;
+
+    // single eigh → C⁺, C^{1/2}, C^{-1/2}
+    let (w_eig, v_eig) = eigh(&c);
+    let wmax = w_eig.last().copied().unwrap_or(0.0).max(0.0);
+    let scaled = |f: &dyn Fn(f64) -> f64| -> Matrix {
+        let n = v_eig.rows();
+        let mut vs = v_eig.clone();
+        for j in 0..n {
+            let s = f(w_eig[j]);
+            for i in 0..n {
+                vs[(i, j)] *= s;
+            }
+        }
+        vs.matmul_bt(&v_eig)
+    };
+    let thresh = 1e-12 * wmax.max(1.0);
+    let c_pinv = scaled(&|x| if x > thresh { 1.0 / x } else { 0.0 });
+    let p = scaled(&|x| x.max(0.0).sqrt());
+    let p_inv = scaled(&|x| if x > 1e-10 * wmax.max(1.0) {
+        1.0 / x.max(0.0).sqrt()
+    } else {
+        0.0
+    });
+
+    let w_eff = tc.matmul_bt(&xc).scale(1.0 / l).matmul(&c_pinv);
+    let b_eff: Vec<f64> = mu_t.iter()
+        .zip(w_eff.matvec(&mu_x))
+        .map(|(t, wx)| t - wx)
+        .collect();
+    let opts = AsvdOpts { kind: Precond::RootCov, junction,
+                          bias: Some(&b_eff), lam_rel, x: None,
+                          };
+    let res = asvd::compress_prewhitened(&w_eff, rank, &p, &p_inv, &c,
+                                         &vec![0.0; x.rows()], &opts);
+    let bias = res.bias.clone().unwrap_or(b_eff);
+    (res.w_hat.clone(), bias, res)
+}
+
+pub fn compress(wu: &Matrix, bu: &[f64], wd: &Matrix, bd: &[f64],
+                x: &Matrix, ru: usize, rd: usize, opts: &JointUdOpts)
+                -> JointUdResult {
+    let z_teacher = add_bias(&wu.matmul(x), bu);
+    let zp_teacher = relu(&z_teacher);
+    let y = add_bias(&wd.matmul(&zp_teacher), bd);
+
+    // init: local root-cov ASVD of both layers (the non-joint baseline)
+    let up_opts = AsvdOpts { kind: Precond::RootCov, junction: opts.junction,
+                             x: Some(x), bias: Some(bu),
+                             lam_rel: opts.lam_rel };
+    let res_u0 = asvd::compress(wu, ru, &up_opts);
+    let dn_opts = AsvdOpts { kind: Precond::RootCov, junction: opts.junction,
+                             x: Some(&zp_teacher), bias: Some(bd),
+                             lam_rel: opts.lam_rel };
+    let res_d0 = asvd::compress(wd, rd, &dn_opts);
+    let mut wu_hat = res_u0.w_hat.clone();
+    let mut bu_hat = res_u0.bias.clone().unwrap();
+    let mut wd_hat = res_d0.w_hat.clone();
+    let mut bd_hat = res_d0.bias.clone().unwrap();
+
+    let mut losses = vec![mlp_loss(&wu_hat, &bu_hat, &wd_hat, &bd_hat,
+                                   x, &y)];
+    let mut z = add_bias(&wu_hat.matmul(x), &bu_hat);
+    let mut best = (losses[0], wu_hat.clone(), bu_hat.clone(),
+                    wd_hat.clone(), bd_hat.clone(),
+                    res_u0.clone(), res_d0.clone());
+
+    let (al, be, ga) = (opts.alpha, opts.beta, opts.gamma);
+    for _ in 0..opts.n_iter {
+        // Z′ ridge solve (Eq 21): (γ ŴdᵀŴd + βI) Z′ = βσ(Z) + γŴdᵀ(Y−b̂d)
+        let di = wd_hat.cols();
+        let mut m = wd_hat.matmul_at(&wd_hat).scale(ga);
+        for i in 0..di {
+            m[(i, i)] += be;
+        }
+        let neg_bd: Vec<f64> = bd_hat.iter().map(|v| -v).collect();
+        let rhs = relu(&z).scale(be)
+            .add(&wd_hat.transpose()
+                .matmul(&add_bias(&y, &neg_bd))
+                .scale(ga));
+        let zp = solve(&m, &rhs);
+
+        // Z branch choice (Eq 22)
+        let z_lin = add_bias(&wu_hat.matmul(x), &bu_hat);
+        let mut z_new = z_lin.clone();
+        for idx in 0..z_new.data().len() {
+            let zl = z_lin.data()[idx];
+            let zpv = zp.data()[idx];
+            let z_pos = ((al * zl + be * zpv) / (al + be)).max(0.0);
+            let z_neg = zl.min(0.0);
+            let loss_pos = al * (z_pos - zl).powi(2)
+                + be * (zpv - z_pos).powi(2);
+            let loss_neg = al * (z_neg - zl).powi(2) + be * zpv * zpv;
+            z_new.data_mut()[idx] = if loss_pos <= loss_neg { z_pos }
+                                    else { z_neg };
+        }
+        z = z_new;
+
+        // refit effective weights (App H)
+        let (wu2, bu2, ru_res) =
+            fit_effective(&z, x, ru, opts.junction, opts.lam_rel);
+        let (wd2, bd2, rd_res) =
+            fit_effective(&y, &zp, rd, opts.junction, opts.lam_rel);
+        wu_hat = wu2;
+        bu_hat = bu2;
+        wd_hat = wd2;
+        bd_hat = bd2;
+        let cur = mlp_loss(&wu_hat, &bu_hat, &wd_hat, &bd_hat, x, &y);
+        losses.push(cur);
+        if cur < best.0 {
+            best = (cur, wu_hat.clone(), bu_hat.clone(), wd_hat.clone(),
+                    bd_hat.clone(), ru_res, rd_res);
+        }
+    }
+
+    let params = best.5.params + best.6.params;
+    JointUdResult {
+        wu_hat: best.1, bu: best.2, wd_hat: best.3, bd: best.4,
+        res_u: best.5, res_d: best.6, losses, params,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn joint_not_worse_than_local_init() {
+        let mut rng = Rng::new(70);
+        let (d, di, l) = (12usize, 32usize, 160usize);
+        let wu = rng.normal_matrix(di, d);
+        let wd = rng.normal_matrix(d, di).scale(0.3);
+        let bu: Vec<f64> = (0..di).map(|i| 0.01 * i as f64 - 0.1).collect();
+        let bd = vec![0.0; d];
+        let x = rng.normal_matrix(d, l);
+        let res = compress(&wu, &bu, &wd, &bd, &x, 6, 6,
+                           &JointUdOpts::default());
+        // the returned best is never worse than the local-ASVD init
+        // (on iid random weights the decoupled iterations may not improve —
+        // the best-tracking guarantees we keep the init in that case; the
+        // structured-model improvement is covered by the goldens
+        // integration test and the python pipeline validation)
+        let final_loss = *res.losses.iter()
+            .fold(&f64::INFINITY, |m, v| if v < m { v } else { m });
+        assert!(final_loss <= res.losses[0] * (1.0 + 1e-9),
+                "{:?}", res.losses);
+        // and the reported factors reproduce that best loss
+        let y = add_bias(&wd.matmul(&relu(&add_bias(&wu.matmul(&x), &bu))),
+                         &bd);
+        let got = mlp_loss(&res.wu_hat, &res.bu, &res.wd_hat, &res.bd,
+                           &x, &y);
+        assert!((got - final_loss).abs() < 1e-6 * (1.0 + final_loss));
+    }
+
+    #[test]
+    fn exact_at_full_rank() {
+        let mut rng = Rng::new(71);
+        let (d, di, l) = (6usize, 12usize, 100usize);
+        let wu = rng.normal_matrix(di, d);
+        let wd = rng.normal_matrix(d, di);
+        let bu = vec![0.1; di];
+        let bd = vec![-0.2; d];
+        let x = rng.normal_matrix(d, l);
+        let res = compress(&wu, &bu, &wd, &bd, &x, d.min(di), d.min(di),
+                           &JointUdOpts { n_iter: 2, ..Default::default() });
+        let y = add_bias(&wd.matmul(&relu(&add_bias(&wu.matmul(&x), &bu))),
+                         &bd);
+        let yh = add_bias(
+            &res.wd_hat.matmul(&relu(&add_bias(&res.wu_hat.matmul(&x),
+                                               &res.bu))),
+            &res.bd);
+        let rel = yh.sub(&y).frob2() / y.frob2();
+        assert!(rel < 1e-6, "rel {rel}");
+    }
+}

@@ -1,0 +1,256 @@
+//! Joint value/output compression (paper §4.2, App G): alternating HOSVD
+//! over Gᵢ = Wo,i (Wv,i P), plus the single-SVD combined variant (Eq 183)
+//! and the contraction-order FLOP analysis (Eqs 17/18).
+
+use super::precond::Precond;
+use crate::tensor::topk_eigvecs;
+use crate::Matrix;
+
+pub struct JointVoOpts<'a> {
+    pub kind: Precond,
+    pub n_iter: usize,
+    pub x: Option<&'a Matrix>,
+    pub bv: Option<&'a [f64]>,
+    pub bo: Option<&'a [f64]>,
+    pub lam_rel: f64,
+}
+
+impl Default for JointVoOpts<'_> {
+    fn default() -> Self {
+        JointVoOpts { kind: Precond::RootCov, n_iter: 4, x: None,
+                      bv: None, bo: None, lam_rel: 1e-6 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct JointVoResult {
+    pub av: Matrix,        // rv×d
+    pub bv: Vec<Matrix>,   // per head d_h×rv
+    pub ao: Vec<Matrix>,   // per head ro×d_h
+    pub bo: Matrix,        // d'×ro
+    pub bo_bias: Option<Vec<f64>>,
+    pub wv_hat: Matrix,
+    pub wo_hat: Matrix,
+    pub losses: Vec<f64>,
+    pub rv: usize,
+    pub ro: usize,
+    pub params: usize,
+}
+
+/// wv: [h·d_h × d], wo: [d' × h·d_h].
+pub fn compress(wv: &Matrix, wo: &Matrix, n_heads: usize, d_h: usize,
+                rv: usize, ro: usize, opts: &JointVoOpts) -> JointVoResult {
+    let d = wv.cols();
+    let d_out = wo.rows();
+    let rv = rv.min(d).max(1);
+    let ro = ro.min(d_out).max(1);
+    let bias_aware = opts.bv.is_some() && opts.bo.is_some() && opts.x.is_some();
+
+    let (c, mu) = match opts.x {
+        Some(x) if bias_aware => {
+            let mu = x.col_mean();
+            (x.center_cols(&mu).covariance(opts.lam_rel), mu)
+        }
+        Some(x) => (x.covariance(opts.lam_rel), vec![0.0; d]),
+        None => (Matrix::eye(d), vec![0.0; d]),
+    };
+    let (p, p_inv) = opts.kind.build(&c, opts.x);
+
+    let v_heads: Vec<Matrix> =
+        (0..n_heads).map(|i| wv.slice_rows(i * d_h, (i + 1) * d_h)).collect();
+    let o_heads: Vec<Matrix> =
+        (0..n_heads).map(|i| wo.slice_cols(i * d_h, (i + 1) * d_h)).collect();
+    let vp: Vec<Matrix> = v_heads.iter().map(|h| h.matmul(&p)).collect();
+    // Gᵢ = Wo,i (Wv,i P)  (d'×d)
+    let g: Vec<Matrix> =
+        (0..n_heads).map(|i| o_heads[i].matmul(&vp[i])).collect();
+
+    // init Av from Σ Gᵀ G
+    let mut acc = Matrix::zeros(d, d);
+    for gi in &g {
+        acc.add_inplace(&gi.matmul_at(gi));
+    }
+    let mut av = topk_eigvecs(&acc, rv);
+    let mut bo_m = Matrix::zeros(d_out, ro);
+    let mut losses = Vec::new();
+
+    for _ in 0..opts.n_iter.max(1) {
+        // Bo = eigvecs_ro[Σ G Avᵀ Av Gᵀ] (columns)
+        let mut acc_o = Matrix::zeros(d_out, d_out);
+        for gi in &g {
+            let ga = av.matmul(&gi.transpose()); // rv×d'
+            acc_o.add_inplace(&ga.matmul_at(&ga));
+        }
+        bo_m = topk_eigvecs(&acc_o, ro).transpose(); // d'×ro
+        // Av = eigvecs_rv[Σ Gᵀ Bo Boᵀ G] (rows)
+        let mut acc_v = Matrix::zeros(d, d);
+        for gi in &g {
+            let bg = bo_m.matmul_at(gi); // ro×d
+            acc_v.add_inplace(&bg.matmul_at(&bg));
+        }
+        av = topk_eigvecs(&acc_v, rv);
+        let loss: f64 = g.iter()
+            .map(|gi| gi.frob2()
+                - bo_m.matmul_at(gi).matmul_bt(&av).frob2())
+            .sum();
+        losses.push(loss);
+    }
+
+    let ao: Vec<Matrix> =
+        o_heads.iter().map(|oh| bo_m.matmul_at(oh)).collect(); // ro×d_h
+    let bv_f: Vec<Matrix> = vp.iter().map(|vh| vh.matmul_bt(&av)).collect();
+    let av_f = av.matmul(&p_inv);
+
+    let wv_hat = {
+        let blocks: Vec<Matrix> =
+            bv_f.iter().map(|b| b.matmul(&av_f)).collect();
+        let refs: Vec<&Matrix> = blocks.iter().collect();
+        Matrix::vstack(&refs)
+    };
+    let wo_hat = {
+        let blocks: Vec<Matrix> = ao.iter().map(|a| bo_m.matmul(a)).collect();
+        let refs: Vec<&Matrix> = blocks.iter().collect();
+        Matrix::hstack(&refs)
+    };
+
+    let bo_bias = if bias_aware {
+        // App G.1 Eq 193: b̂o = bo + Σᵢ[Wo,i(Wv,iμ+bv,i) − Ŵo,i(Ŵv,iμ+bv,i)]
+        let bv_b = opts.bv.unwrap();
+        let mut out = opts.bo.unwrap().to_vec();
+        for i in 0..n_heads {
+            let bv_i = &bv_b[i * d_h..(i + 1) * d_h];
+            let t: Vec<f64> = v_heads[i].matvec(&mu).iter().zip(bv_i)
+                .map(|(a, b)| a + b).collect();
+            let y = o_heads[i].matvec(&t);
+            let th: Vec<f64> = wv_hat.slice_rows(i * d_h, (i + 1) * d_h)
+                .matvec(&mu).iter().zip(bv_i).map(|(a, b)| a + b).collect();
+            let yh = wo_hat.slice_cols(i * d_h, (i + 1) * d_h).matvec(&th);
+            for j in 0..d_out {
+                out[j] += y[j] - yh[j];
+            }
+        }
+        Some(out)
+    } else {
+        None
+    };
+
+    let mut params = rv * d + ro * d_out + n_heads * d_h * (rv + ro);
+    params = params.saturating_sub(rv * rv + ro * ro + d_h * d_h * n_heads);
+    JointVoResult {
+        av: av_f, bv: bv_f, ao, bo: bo_m, bo_bias,
+        wv_hat, wo_hat, losses, rv, ro, params,
+    }
+}
+
+/// Combined single-SVD variant (Eq 183): factor Wo Wv P at rank r.
+pub fn combined(wv: &Matrix, wo: &Matrix, rank: usize, kind: Precond,
+                c: &Matrix) -> (Matrix, f64) {
+    let (p, p_inv) = kind.build(c, None);
+    let m = wo.matmul(wv).matmul(&p);
+    let f = crate::tensor::svd_truncated(&m, rank);
+    let w_hat = f.reconstruct().matmul(&p_inv);
+    let loss = m.frob2() - f.s.iter().map(|s| s * s).sum::<f64>();
+    (w_hat, loss)
+}
+
+/// MLA contraction-order MAC counts (Eqs 17/18). Returns (order_a, order_b):
+/// order_a decompresses values per head before attention weighting, order_b
+/// weights on the shared latent and defers Bo. Rule: if h·ro < rv, weight on
+/// the output-compression side.
+pub fn contraction_flops(d: usize, d_h: usize, h: usize, l: usize,
+                         rv: usize, ro: usize) -> (usize, usize) {
+    let order_a = l * d * rv + h * d_h * l * rv + h * d_h * l * l
+        + h * d_h * l * ro + h * d * l * ro;
+    let order_b = l * d * rv + rv * l * l + h * d_h * l * rv
+        + h * d_h * l * ro + d * l * ro;
+    (order_a, order_b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn losses_monotone_and_exact_at_full_rank() {
+        let mut rng = Rng::new(60);
+        let (d, dh, h) = (16usize, 4usize, 4usize);
+        let wv = rng.normal_matrix(d, d);
+        let wo = rng.normal_matrix(d, d);
+        let opts = JointVoOpts { kind: Precond::Identity, n_iter: 5,
+                                 ..Default::default() };
+        let res = compress(&wv, &wo, h, dh, 8, 8, &opts);
+        for w in res.losses.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-9));
+        }
+        let full = compress(&wv, &wo, h, dh, d, d, &opts);
+        // at full rank the per-head PRODUCTS are preserved
+        for i in 0..h {
+            let gi = wo.slice_cols(i * dh, (i + 1) * dh)
+                .matmul(&wv.slice_rows(i * dh, (i + 1) * dh));
+            let gh = full.wo_hat.slice_cols(i * dh, (i + 1) * dh)
+                .matmul(&full.wv_hat.slice_rows(i * dh, (i + 1) * dh));
+            assert!(gi.max_abs_diff(&gh) < 1e-7);
+        }
+    }
+
+    #[test]
+    fn contraction_order_rule(// Eq 17/18 + the "if h·ro < rv" remark
+    ) {
+        let (d, dh, h, l) = (128, 32, 4, 128);
+        // h·ro < rv → order_b strictly cheaper
+        let (a, b) = contraction_flops(d, dh, h, l, 96, 16);
+        assert!(b < a);
+        // reduction formula: (d−rv)l² + (h−1)·d·l·ro
+        let (rv, ro) = (96usize, 16usize);
+        assert_eq!(a - b, (d - rv) * l * l + (h - 1) * d * l * ro);
+    }
+
+    #[test]
+    fn combined_loss_matches_tail() {
+        let mut rng = Rng::new(61);
+        let wv = rng.normal_matrix(12, 12);
+        let wo = rng.normal_matrix(12, 12);
+        let c = Matrix::eye(12);
+        let m = wo.matmul(&wv);
+        let f = crate::tensor::svd(&m);
+        let (_, loss) = combined(&wv, &wo, 5, Precond::Identity, &c);
+        let tail: f64 = f.s[5..].iter().map(|s| s * s).sum();
+        assert!((loss - tail).abs() < 1e-7);
+    }
+
+    #[test]
+    fn bias_update_preserves_mean_output() {
+        let mut rng = Rng::new(62);
+        let (d, dh, h) = (12usize, 3usize, 4usize);
+        let wv = rng.normal_matrix(d, d);
+        let wo = rng.normal_matrix(d, d);
+        let x = rng.normal_matrix(d, 80);
+        let bv: Vec<f64> = (0..d).map(|i| 0.02 * i as f64).collect();
+        let bo: Vec<f64> = (0..d).map(|i| 0.01 * i as f64 - 0.05).collect();
+        let opts = JointVoOpts { x: Some(&x), bv: Some(&bv), bo: Some(&bo),
+                                 ..Default::default() };
+        let res = compress(&wv, &wo, h, dh, 6, 6, &opts);
+        let mu = x.col_mean();
+        // per-head mean output sums preserved
+        let mut y = bo.clone();
+        let mut yh = res.bo_bias.clone().unwrap();
+        for i in 0..h {
+            let t: Vec<f64> = wv.slice_rows(i * dh, (i + 1) * dh)
+                .matvec(&mu).iter().zip(&bv[i * dh..(i + 1) * dh])
+                .map(|(a, b)| a + b).collect();
+            let o = wo.slice_cols(i * dh, (i + 1) * dh).matvec(&t);
+            let th: Vec<f64> = res.wv_hat.slice_rows(i * dh, (i + 1) * dh)
+                .matvec(&mu).iter().zip(&bv[i * dh..(i + 1) * dh])
+                .map(|(a, b)| a + b).collect();
+            let oh = res.wo_hat.slice_cols(i * dh, (i + 1) * dh).matvec(&th);
+            for j in 0..d {
+                y[j] += o[j];
+                yh[j] += oh[j];
+            }
+        }
+        for (a, b) in y.iter().zip(&yh) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Junction matrices J (paper §3.3, App A.2).
+//!
+//! `B = U S J`, `A = J⁺ V P⁺` is loss-invariant in J; the block-identity
+//! choice J = V₁ gives A = [I  V₁⁺V₂] (Eq 9), saving r² parameters and
+//! MACs — with greedy column pivoting for ill-conditioned V₁ (Remark 4).
+
+use crate::tensor::svd::Svd;
+use crate::tensor::{pinv, Matrix};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Junction {
+    /// J = I: singular values live in B.
+    Left,
+    /// J = S⁺: singular values live in A.
+    Right,
+    /// J = [S^{1/2}]⁺: split equally.
+    Sym,
+    /// J = V₁: A gets an exact identity block (saves r² params).
+    BlockId,
+}
+
+#[derive(Clone, Debug)]
+pub struct Factors {
+    pub b: Matrix,
+    pub a: Matrix,
+    /// columns of A carrying the identity block (BlockId only).
+    pub identity_cols: Option<Vec<usize>>,
+}
+
+impl Factors {
+    pub fn w_hat(&self) -> Matrix {
+        self.b.matmul(&self.a)
+    }
+
+    /// Parameter count with the identity-block credit (paper §3.3).
+    pub fn params(&self) -> usize {
+        let r = self.a.rows();
+        let n = self.b.rows() * r + r * self.a.cols();
+        if self.identity_cols.is_some() {
+            n - r * r
+        } else {
+            n
+        }
+    }
+}
+
+/// Greedy rank-revealing column selection (modified Gram-Schmidt):
+/// picks r columns of the r×d matrix m that span it well.
+pub fn greedy_pivot(m: &Matrix, r: usize) -> Vec<usize> {
+    let d = m.cols();
+    let rows = m.rows();
+    let mut chosen: Vec<usize> = Vec::with_capacity(r);
+    let mut q: Vec<Vec<f64>> = Vec::new(); // orthonormal basis so far
+    let mut resid2: Vec<f64> =
+        (0..d).map(|j| (0..rows).map(|i| m[(i, j)].powi(2)).sum()).collect();
+    for _ in 0..r {
+        let mut best = usize::MAX;
+        let mut best_v = -1.0;
+        for j in 0..d {
+            if !chosen.contains(&j) && resid2[j] > best_v {
+                best_v = resid2[j];
+                best = j;
+            }
+        }
+        if best == usize::MAX {
+            break;
+        }
+        chosen.push(best);
+        // orthonormalize the chosen column, update residuals
+        let mut v: Vec<f64> = (0..rows).map(|i| m[(i, best)]).collect();
+        for b in &q {
+            let dot: f64 = v.iter().zip(b).map(|(a, b)| a * b).sum();
+            for (vi, bi) in v.iter_mut().zip(b) {
+                *vi -= dot * bi;
+            }
+        }
+        let n: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if n < 1e-12 {
+            continue;
+        }
+        for vi in &mut v {
+            *vi /= n;
+        }
+        for j in 0..d {
+            let dot: f64 = (0..rows).map(|i| m[(i, j)] * v[i]).sum();
+            resid2[j] = (resid2[j] - dot * dot).max(0.0);
+        }
+        q.push(v);
+    }
+    while chosen.len() < r {
+        for j in 0..d {
+            if !chosen.contains(&j) {
+                chosen.push(j);
+                break;
+            }
+        }
+    }
+    chosen
+}
+
+/// Build (B, A) from a truncated whitened SVD of W·P and P⁺.
+pub fn apply(f: &Svd, p_inv: &Matrix, kind: Junction) -> Factors {
+    let r = f.s.len();
+    let m = f.vt.matmul(p_inv); // V P⁺ (r×d)
+    match kind {
+        Junction::Left => Factors {
+            b: scale_cols(&f.u, &f.s),
+            a: m,
+            identity_cols: None,
+        },
+        Junction::Right => Factors {
+            b: f.u.clone(),
+            a: scale_rows(&m, &f.s),
+            identity_cols: None,
+        },
+        Junction::Sym => {
+            let rs: Vec<f64> = f.s.iter().map(|v| v.sqrt()).collect();
+            Factors {
+                b: scale_cols(&f.u, &rs),
+                a: scale_rows(&m, &rs),
+                identity_cols: None,
+            }
+        }
+        Junction::BlockId => {
+            let idx = greedy_pivot(&m, r);
+            let v1 = m.select_cols(&idx);
+            let v1_inv = pinv(&v1);
+            let mut a = v1_inv.matmul(&m);
+            // exact identity at the pivot columns (kill fp residue)
+            for (k, &j) in idx.iter().enumerate() {
+                for i in 0..r {
+                    a[(i, j)] = if i == k { 1.0 } else { 0.0 };
+                }
+            }
+            let b = scale_cols(&f.u, &f.s).matmul(&v1);
+            Factors { b, a, identity_cols: Some(idx) }
+        }
+    }
+}
+
+fn scale_cols(m: &Matrix, s: &[f64]) -> Matrix {
+    let mut out = m.clone();
+    for j in 0..s.len() {
+        for i in 0..m.rows() {
+            out[(i, j)] *= s[j];
+        }
+    }
+    out
+}
+
+fn scale_rows(m: &Matrix, s: &[f64]) -> Matrix {
+    let mut out = m.clone();
+    for i in 0..s.len() {
+        for j in 0..m.cols() {
+            out[(i, j)] *= s[i];
+        }
+    }
+    out
+}
+
+/// Factor-pair parameter count (paper §3.3).
+pub fn factor_params(d_out: usize, d_in: usize, r: usize, blockid: bool)
+                     -> usize {
+    let n = r * (d_out + d_in);
+    if blockid {
+        n - r * r
+    } else {
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::svd_truncated;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_junctions_same_w_hat() {
+        let mut rng = Rng::new(30);
+        let w = rng.normal_matrix(8, 12);
+        let f = svd_truncated(&w, 5);
+        let p_inv = Matrix::eye(12);
+        let reference = apply(&f, &p_inv, Junction::Left).w_hat();
+        for kind in [Junction::Right, Junction::Sym, Junction::BlockId] {
+            let fac = apply(&f, &p_inv, kind);
+            assert!(fac.w_hat().max_abs_diff(&reference) < 1e-8,
+                    "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn blockid_has_exact_identity_block() {
+        let mut rng = Rng::new(31);
+        let w = rng.normal_matrix(10, 10);
+        let f = svd_truncated(&w, 4);
+        let fac = apply(&f, &Matrix::eye(10), Junction::BlockId);
+        let idx = fac.identity_cols.clone().unwrap();
+        assert_eq!(idx.len(), 4);
+        for (k, &j) in idx.iter().enumerate() {
+            for i in 0..4 {
+                let expect = if i == k { 1.0 } else { 0.0 };
+                assert_eq!(fac.a[(i, j)], expect);
+            }
+        }
+        // params credit
+        assert_eq!(fac.params(), 4 * (10 + 10) - 16);
+    }
+
+    #[test]
+    fn greedy_pivot_prefers_strong_columns() {
+        // m has two huge columns and the rest tiny: pivots must take them.
+        let mut m = Matrix::zeros(2, 6);
+        m[(0, 3)] = 10.0;
+        m[(1, 5)] = 8.0;
+        for j in 0..6 {
+            m[(0, j)] += 0.01;
+        }
+        let idx = greedy_pivot(&m, 2);
+        assert!(idx.contains(&3) && idx.contains(&5), "{idx:?}");
+    }
+}

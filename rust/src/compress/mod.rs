@@ -1,0 +1,31 @@
+//! The paper's compression suite — production rust implementation.
+//!
+//! Mirrors `python/compile/latentllm/` (the build-time reference) exactly;
+//! integration tests cross-check both against artifacts/goldens.json.
+//!
+//! * [`precond`] — Table 1 pre-conditioners (§3.2, App B.1)
+//! * [`junction`] — junction matrices incl. block identity (§3.3, App A.2)
+//! * [`asvd`] — local activation-aware SVD (§3.2, App B)
+//! * [`joint_qk`] — Algorithm 1: MHA→MLA Tucker/HOSVD (§4.1, App E)
+//! * [`joint_vo`] — joint value/output HOSVD (§4.2, App G)
+//! * [`joint_ud`] — SparseLLM-style decoupled MLP compression (§4.3, App H)
+//! * [`sparse`] — sparse / low-rank+sparse approximation (App I)
+//! * [`quant`] — quantization-aware factor distillation (App I.1)
+//! * [`rope`] — RoPE-aware attention-map loss (App F.3, Fig 12)
+//! * [`rank`] — compression-ratio → rank solvers (§3.3 accounting)
+//! * [`pipeline`] — whole-model compression (§5 protocol, Table 2 rows)
+
+pub mod asvd;
+pub mod joint_qk;
+pub mod joint_ud;
+pub mod joint_vo;
+pub mod junction;
+pub mod pipeline;
+pub mod precond;
+pub mod quant;
+pub mod rank;
+pub mod rope;
+pub mod sparse;
+
+pub use pipeline::{compress_model, Method};
+pub use precond::Precond;

@@ -1,0 +1,362 @@
+//! Whole-model compression pipeline (paper §5 protocol — the Table 2 rows).
+//! Mirrors python/compile/latentllm/pipeline.py.
+
+use anyhow::Result;
+
+use super::asvd::{self, AsvdOpts};
+use super::joint_qk::{self, JointQkOpts};
+use super::joint_ud::{self, JointUdOpts};
+use super::joint_vo::{self, JointVoOpts};
+use super::junction::Junction;
+use super::precond::Precond;
+use super::rank;
+use crate::data::CalibSet;
+use crate::model::{MiniConfig, Weights};
+use crate::Matrix;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Plain,
+    AsvdHessian,
+    AsvdL1,
+    AsvdL2,
+    AsvdCov,
+    AsvdRootCov,
+    LatentLlm,
+    /// ablation: joint VO instead of split V/O (Remark 11)
+    LatentLlmJointVo,
+}
+
+pub const TABLE2_METHODS: [Method; 6] = [
+    Method::Plain, Method::AsvdHessian, Method::AsvdL2,
+    Method::AsvdCov, Method::AsvdRootCov, Method::LatentLlm,
+];
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Plain => "plain",
+            Method::AsvdHessian => "asvd_hessian",
+            Method::AsvdL1 => "asvd_l1",
+            Method::AsvdL2 => "asvd_l2",
+            Method::AsvdCov => "asvd_cov",
+            Method::AsvdRootCov => "asvd_rootcov",
+            Method::LatentLlm => "latentllm",
+            Method::LatentLlmJointVo => "latentllm_jointvo",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Method> {
+        [Method::Plain, Method::AsvdHessian, Method::AsvdL1, Method::AsvdL2,
+         Method::AsvdCov, Method::AsvdRootCov, Method::LatentLlm,
+         Method::LatentLlmJointVo]
+            .into_iter()
+            .find(|m| m.name() == s)
+    }
+
+    pub fn precond(&self) -> Precond {
+        match self {
+            Method::Plain => Precond::Identity,
+            Method::AsvdHessian => Precond::DiagHessian,
+            Method::AsvdL1 => Precond::DiagL1,
+            Method::AsvdL2 => Precond::DiagL2,
+            Method::AsvdCov => Precond::Cov,
+            Method::AsvdRootCov | Method::LatentLlm
+            | Method::LatentLlmJointVo => Precond::RootCov,
+        }
+    }
+
+    pub fn is_latent(&self) -> bool {
+        matches!(self, Method::LatentLlm | Method::LatentLlmJointVo)
+    }
+
+    /// Paper's display label (Table 2 row names).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Plain => "Plain SVD (Identity)",
+            Method::AsvdHessian => "ASVD (Hessian)",
+            Method::AsvdL1 => "ASVD (L1-norm)",
+            Method::AsvdL2 => "ASVD (L2-norm)",
+            Method::AsvdCov => "ASVD (Cov)",
+            Method::AsvdRootCov => "ASVD (RootCov)",
+            Method::LatentLlm => "LatentLLM (RootCov)",
+            Method::LatentLlmJointVo => "LatentLLM (JointVO)",
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct LayerReport {
+    pub layer: usize,
+    pub qk_rank: usize,
+    pub qk_loss: f64,
+    pub ud_loss: f64,
+    pub params: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub method: Method,
+    pub ratio: f64,
+    pub layers: Vec<LayerReport>,
+    pub orig_linear_params: usize,
+    pub new_linear_params: usize,
+}
+
+impl Report {
+    pub fn achieved_ratio(&self) -> f64 {
+        1.0 - self.new_linear_params as f64
+            / self.orig_linear_params.max(1) as f64
+    }
+}
+
+/// Compress every MHA/MLP linear of `weights` to the target ratio.
+/// Returns the effective (reconstructed Ŵ + updated biases) weight set —
+/// evaluated through the dense scoring program — plus the report.
+pub fn compress_model(cfg: &MiniConfig, weights: &Weights, calib: &CalibSet,
+                      method: Method, ratio: f64, qk_iters: usize,
+                      ud_iters: usize) -> Result<(Weights, Report)> {
+    let keep = 1.0 - ratio;
+    let pk = method.precond();
+    let latent = method.is_latent();
+    let junction = if latent { Junction::BlockId } else { Junction::Left };
+    let (d, dh, h, di) = (cfg.d, cfg.d_h(), cfg.n_heads, cfg.d_i);
+
+    let mut out = weights.clone();
+    let mut report = Report {
+        method, ratio, layers: Vec::new(),
+        orig_linear_params: cfg.linear_params(),
+        new_linear_params: 0,
+    };
+
+    for i in 0..cfg.n_layers {
+        let p = format!("layers.{i}.");
+        let x_attn = calib.x(i, "attn_x");
+        let x_o = calib.x(i, "o_x");
+        let x_mlp = calib.x(i, "mlp_x");
+        let mut lrep = LayerReport { layer: i, ..Default::default() };
+
+        let wq = weights.matrix(&format!("{p}attn.wq"))?;
+        let wk = weights.matrix(&format!("{p}attn.wk"))?;
+        let wv = weights.matrix(&format!("{p}attn.wv"))?;
+        let wo = weights.matrix(&format!("{p}attn.wo"))?;
+        let bq = weights.bias(&format!("{p}attn.bq"))?;
+        let bk = weights.bias(&format!("{p}attn.bk"))?;
+        let bv = weights.bias(&format!("{p}attn.bv"))?;
+        let bo = weights.bias(&format!("{p}attn.bo"))?;
+        let wu = weights.matrix(&format!("{p}mlp.wu"))?;
+        let wd = weights.matrix(&format!("{p}mlp.wd"))?;
+        let bu = weights.bias(&format!("{p}mlp.bu"))?;
+        let bd = weights.bias(&format!("{p}mlp.bd"))?;
+
+        if latent {
+            // ---- joint QK (§4.1, Alg 1)
+            let r_qk = rank::joint_qk_rank(d, dh, h, h, keep, true);
+            let jq = joint_qk::compress(&wq, &wk, h, dh, r_qk, r_qk,
+                                        &JointQkOpts {
+                                            kind: pk, n_iter: qk_iters,
+                                            x: Some(x_attn),
+                                            bq: Some(&bq), bk: Some(&bk),
+                                            ..Default::default()
+                                        });
+            out.set_matrix(&format!("{p}attn.wq"), &jq.wq_hat);
+            out.set_matrix(&format!("{p}attn.wk"), &jq.wk_hat);
+            out.set_bias(&format!("{p}attn.bq"), jq.bq_bias.as_ref().unwrap());
+            out.set_bias(&format!("{p}attn.bk"), jq.bk_bias.as_ref().unwrap());
+            lrep.qk_rank = r_qk;
+            lrep.qk_loss = *jq.losses.last().unwrap();
+            let mut layer_params = jq.params;
+
+            // ---- V / O
+            if method == Method::LatentLlmJointVo {
+                let r_vo = rank::local_rank(d, d, keep, true);
+                let jv = joint_vo::compress(&wv, &wo, h, dh, r_vo, r_vo,
+                                            &JointVoOpts {
+                                                kind: pk, n_iter: ud_iters,
+                                                x: Some(x_attn),
+                                                bv: Some(&bv), bo: Some(&bo),
+                                                ..Default::default()
+                                            });
+                out.set_matrix(&format!("{p}attn.wv"), &jv.wv_hat);
+                out.set_matrix(&format!("{p}attn.wo"), &jv.wo_hat);
+                out.set_bias(&format!("{p}attn.bo"),
+                             jv.bo_bias.as_ref().unwrap());
+                layer_params += jv.params;
+            } else {
+                // paper default: split V/O, root-cov + block identity
+                let r_v = rank::local_rank(d, d, keep, true);
+                let rv = asvd::compress(&wv, r_v, &AsvdOpts {
+                    kind: pk, junction, x: Some(x_attn), bias: Some(&bv),
+                    ..Default::default()
+                });
+                let r_o = rank::local_rank(d, d, keep, true);
+                let ro = asvd::compress(&wo, r_o, &AsvdOpts {
+                    kind: pk, junction, x: Some(x_o), bias: Some(&bo),
+                    ..Default::default()
+                });
+                out.set_matrix(&format!("{p}attn.wv"), &rv.w_hat);
+                out.set_bias(&format!("{p}attn.bv"), rv.bias.as_ref().unwrap());
+                out.set_matrix(&format!("{p}attn.wo"), &ro.w_hat);
+                out.set_bias(&format!("{p}attn.bo"), ro.bias.as_ref().unwrap());
+                layer_params += rv.params + ro.params;
+            }
+
+            // ---- joint UD (§4.3)
+            let r_u = rank::local_rank(di, d, keep, true);
+            let r_d = rank::local_rank(d, di, keep, true);
+            let ud = joint_ud::compress(&wu, &bu, &wd, &bd, x_mlp, r_u, r_d,
+                                        &JointUdOpts {
+                                            n_iter: ud_iters,
+                                            junction,
+                                            ..Default::default()
+                                        });
+            out.set_matrix(&format!("{p}mlp.wu"), &ud.wu_hat);
+            out.set_bias(&format!("{p}mlp.bu"), &ud.bu);
+            out.set_matrix(&format!("{p}mlp.wd"), &ud.wd_hat);
+            out.set_bias(&format!("{p}mlp.bd"), &ud.bd);
+            lrep.ud_loss = *ud.losses.iter()
+                .fold(&f64::INFINITY, |m, v| if v < m { v } else { m });
+            layer_params += ud.params;
+            lrep.params = layer_params;
+        } else {
+            // local compression of each of the six linears
+            let mut layer_params = 0usize;
+            let jobs: [(&str, &Matrix, &[f64], &Matrix); 5] = [
+                ("attn.wq", &wq, &bq, x_attn),
+                ("attn.wk", &wk, &bk, x_attn),
+                ("attn.wv", &wv, &bv, x_attn),
+                ("attn.wo", &wo, &bo, x_o),
+                ("mlp.wu", &wu, &bu, x_mlp),
+            ];
+            for (name, w, b, x) in jobs {
+                let r = rank::local_rank(w.rows(), w.cols(), keep, false);
+                let res = asvd::compress(w, r, &AsvdOpts {
+                    kind: pk, junction, x: Some(x), bias: Some(b),
+                    ..Default::default()
+                });
+                out.set_matrix(&format!("{p}{name}"), &res.w_hat);
+                let bname = format!("{p}{}", name.replace('w', "b"));
+                out.set_bias(&bname, res.bias.as_ref().unwrap());
+                layer_params += res.params;
+            }
+            // wd sees σ(Wu_orig x + bu)
+            let mut z = wu.matmul(x_mlp);
+            for r in 0..z.rows() {
+                let bi = bu[r];
+                for v in z.row_mut(r) {
+                    *v = (*v + bi).max(0.0);
+                }
+            }
+            let r = rank::local_rank(d, di, keep, false);
+            let res = asvd::compress(&wd, r, &AsvdOpts {
+                kind: pk, junction, x: Some(&z), bias: Some(&bd),
+                ..Default::default()
+            });
+            out.set_matrix(&format!("{p}mlp.wd"), &res.w_hat);
+            out.set_bias(&format!("{p}mlp.bd"), res.bias.as_ref().unwrap());
+            layer_params += res.params;
+            lrep.params = layer_params;
+        }
+        report.new_linear_params += lrep.params;
+        report.layers.push(lrep);
+    }
+    Ok((out, report))
+}
+
+/// Support for tests and benches: random weight sets in the exact
+/// MiniConfig layout (not behind cfg(test) so `cargo bench` can use it).
+pub mod tests_support {
+    use super::*;
+    use crate::model::io::{Tensor, TensorMap};
+    use crate::util::rng::Rng;
+
+    /// Random weights in the exact MiniConfig layout.
+    pub fn random_weights(cfg: &MiniConfig, seed: u64) -> Weights {
+        let mut rng = Rng::new(seed);
+        let mut map = TensorMap::new();
+        let put_m = |map: &mut TensorMap, name: String, r: usize,
+                         c: usize, rng: &mut Rng| {
+            let m = rng.normal_matrix(r, c).scale(1.0 / (c as f64).sqrt());
+            map.insert(name, Tensor::F32 { shape: vec![r, c],
+                                           data: m.to_f32() });
+        };
+        let put_v = |map: &mut TensorMap, name: String, n: usize, v: f32| {
+            map.insert(name, Tensor::F32 { shape: vec![n],
+                                           data: vec![v; n] });
+        };
+        put_m(&mut map, "tok_emb".into(), cfg.vocab, cfg.d, &mut rng);
+        put_m(&mut map, "pos_emb".into(), cfg.max_len, cfg.d, &mut rng);
+        for i in 0..cfg.n_layers {
+            let p = format!("layers.{i}.");
+            put_v(&mut map, format!("{p}ln1.g"), cfg.d, 1.0);
+            put_v(&mut map, format!("{p}ln1.b"), cfg.d, 0.0);
+            for m in ["wq", "wk", "wv", "wo"] {
+                put_m(&mut map, format!("{p}attn.{m}"), cfg.d, cfg.d,
+                      &mut rng);
+            }
+            for b in ["bq", "bk", "bv", "bo"] {
+                put_v(&mut map, format!("{p}attn.{b}"), cfg.d, 0.01);
+            }
+            put_v(&mut map, format!("{p}ln2.g"), cfg.d, 1.0);
+            put_v(&mut map, format!("{p}ln2.b"), cfg.d, 0.0);
+            put_m(&mut map, format!("{p}mlp.wu"), cfg.d_i, cfg.d, &mut rng);
+            put_v(&mut map, format!("{p}mlp.bu"), cfg.d_i, 0.01);
+            put_m(&mut map, format!("{p}mlp.wd"), cfg.d, cfg.d_i, &mut rng);
+            put_v(&mut map, format!("{p}mlp.bd"), cfg.d, 0.0);
+        }
+        put_v(&mut map, "lnf.g".into(), cfg.d, 1.0);
+        put_v(&mut map, "lnf.b".into(), cfg.d, 0.0);
+        Weights::new(map)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_support::random_weights;
+    use super::*;
+    use crate::model::config::OPT_MINI_S;
+
+    #[test]
+    fn pipeline_hits_target_ratio() {
+        let cfg = OPT_MINI_S;
+        let w = random_weights(&cfg, 100);
+        let cal = CalibSet::synthetic(cfg.n_layers, cfg.d, 256, 7);
+        for method in [Method::AsvdRootCov, Method::LatentLlm] {
+            for ratio in [0.2f64, 0.4] {
+                let (_, rep) = compress_model(&cfg, &w, &cal, method, ratio,
+                                              3, 2).unwrap();
+                let got = rep.achieved_ratio();
+                assert!((got - ratio).abs() < 0.05,
+                        "{method:?}@{ratio}: achieved {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn latentllm_blockid_credit_gives_higher_ranks() {
+        // at equal ratio, latentllm's −r² credit buys strictly larger ranks
+        let cfg = OPT_MINI_S;
+        let keep = 0.7;
+        let r_dense = rank::local_rank(cfg.d, cfg.d, keep, false);
+        let r_block = rank::local_rank(cfg.d, cfg.d, keep, true);
+        assert!(r_block > r_dense, "{r_block} vs {r_dense}");
+    }
+
+    #[test]
+    fn all_methods_produce_finite_weights() {
+        let cfg = OPT_MINI_S;
+        let w = random_weights(&cfg, 101);
+        let cal = CalibSet::synthetic(cfg.n_layers, cfg.d, 200, 8);
+        for method in TABLE2_METHODS {
+            let (nw, _) = compress_model(&cfg, &w, &cal, method, 0.3, 2, 1)
+                .unwrap();
+            for name in nw.names() {
+                let t = nw.tensor(name).unwrap();
+                if let Ok(data) = t.as_f32() {
+                    assert!(data.iter().all(|v| v.is_finite()),
+                            "{method:?}: {name} has non-finite values");
+                }
+            }
+        }
+    }
+}

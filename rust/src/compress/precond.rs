@@ -1,0 +1,139 @@
+//! Pre-conditioning matrices P for activation-aware SVD
+//! (paper §3.2, Table 1, App B.1).
+//!
+//! The optimal choice is the root covariance P = C^{1/2} (Eq 5); the others
+//! are the published baselines reproduced for Table 2 and Figs 7/16.
+
+use crate::tensor::{pinv_psd, sqrt_and_invsqrt_psd};
+use crate::Matrix;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precond {
+    /// P = I — plain SVD [Denton'14; Sainath'13]
+    Identity,
+    /// diag[(XXᵀ+λI)^{-1}]^{-1/2} — OBS / GPTQ / SparseGPT
+    DiagHessian,
+    /// diag[Σ_j |X_ij|]^α — ASVD / AWQ (α = 0.5)
+    DiagL1,
+    /// diag[XXᵀ]^{1/2} — WandA
+    DiagL2,
+    /// XXᵀ + λI — CorDA
+    Cov,
+    /// (XXᵀ + λI)^{1/2} — LatentLLM (optimal)
+    RootCov,
+}
+
+pub const ALL: [Precond; 6] = [
+    Precond::Identity, Precond::DiagHessian, Precond::DiagL1,
+    Precond::DiagL2, Precond::Cov, Precond::RootCov,
+];
+
+impl Precond {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precond::Identity => "identity",
+            Precond::DiagHessian => "diag_hessian",
+            Precond::DiagL1 => "diag_l1",
+            Precond::DiagL2 => "diag_l2",
+            Precond::Cov => "cov",
+            Precond::RootCov => "rootcov",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Precond> {
+        ALL.iter().copied().find(|p| p.name() == name)
+    }
+
+    /// Build (P, P⁺) from covariance C (and optionally raw activations
+    /// for the ℓ1 variant).
+    pub fn build(&self, c: &Matrix, x: Option<&Matrix>) -> (Matrix, Matrix) {
+        let d = c.rows();
+        match self {
+            Precond::Identity => (Matrix::eye(d), Matrix::eye(d)),
+            Precond::DiagHessian => {
+                let mut creg = c.clone();
+                for i in 0..d {
+                    creg[(i, i)] += 1e-10;
+                }
+                let h = crate::tensor::solve(&creg, &Matrix::eye(d));
+                let dg: Vec<f64> = (0..d)
+                    .map(|i| h[(i, i)].max(1e-30).powf(-0.5))
+                    .collect();
+                diag_pair(&dg)
+            }
+            Precond::DiagL1 => {
+                let dg: Vec<f64> = match x {
+                    Some(x) => (0..d)
+                        .map(|i| {
+                            let s: f64 =
+                                x.row(i).iter().map(|v| v.abs()).sum();
+                            (s / x.cols().max(1) as f64).max(1e-30).sqrt()
+                        })
+                        .collect(),
+                    None => (0..d)
+                        .map(|i| c[(i, i)].max(1e-30).sqrt().sqrt())
+                        .collect(),
+                };
+                diag_pair(&dg)
+            }
+            Precond::DiagL2 => {
+                let dg: Vec<f64> =
+                    (0..d).map(|i| c[(i, i)].max(1e-30).sqrt()).collect();
+                diag_pair(&dg)
+            }
+            Precond::Cov => (c.clone(), pinv_psd(c)),
+            Precond::RootCov => sqrt_and_invsqrt_psd(c),
+        }
+    }
+}
+
+fn diag_pair(dg: &[f64]) -> (Matrix, Matrix) {
+    let d = dg.len();
+    let mut p = Matrix::zeros(d, d);
+    let mut pi = Matrix::zeros(d, d);
+    for i in 0..d {
+        p[(i, i)] = dg[i];
+        pi[(i, i)] = 1.0 / dg[i];
+    }
+    (p, pi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{decaying_covariance, wishart, Rng};
+
+    #[test]
+    fn rootcov_inverse_pair() {
+        let mut rng = Rng::new(21);
+        let c = wishart(&mut rng, &decaying_covariance(10, 0.9), 64);
+        let (p, pi) = Precond::RootCov.build(&c, None);
+        assert!(p.matmul(&pi).max_abs_diff(&Matrix::eye(10)) < 1e-7);
+        assert!(p.matmul(&p).max_abs_diff(&c) < 1e-7);
+    }
+
+    #[test]
+    fn diagonal_variants_are_diagonal() {
+        let mut rng = Rng::new(22);
+        let x = rng.normal_matrix(6, 40);
+        let c = x.covariance(1e-6);
+        for kind in [Precond::DiagHessian, Precond::DiagL1, Precond::DiagL2] {
+            let (p, pi) = kind.build(&c, Some(&x));
+            for i in 0..6 {
+                for j in 0..6 {
+                    if i != j {
+                        assert_eq!(p[(i, j)], 0.0);
+                    }
+                }
+                assert!((p[(i, i)] * pi[(i, i)] - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for p in ALL {
+            assert_eq!(Precond::from_name(p.name()), Some(p));
+        }
+    }
+}

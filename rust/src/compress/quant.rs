@@ -1,0 +1,95 @@
+//! Quantization-aware distillation of low-rank factors (paper App I.1):
+//! chunk-wise q-bit uniform quantization (Eq 242) + STE-style projected
+//! gradient refinement of (B, A) against the activation loss.
+
+use crate::tensor::eig::eigh;
+use crate::tensor::linalg::act_loss;
+use crate::Matrix;
+
+/// Chunk-wise min/max uniform quantization over the flat buffer (Eq 242).
+pub fn quantize_uniform(m: &Matrix, bits: u32, chunk: usize) -> Matrix {
+    let levels = ((1u64 << bits) - 1) as f64;
+    let mut out = m.clone();
+    let data = out.data_mut();
+    let n = data.len();
+    let mut s = 0;
+    while s < n {
+        let e = (s + chunk).min(n);
+        let seg = &mut data[s..e];
+        let lo = seg.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = seg.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        if hi - lo > 1e-12 {
+            let scale = levels / (hi - lo);
+            for v in seg.iter_mut() {
+                *v = ((*v - lo) * scale).round() / scale + lo;
+            }
+        }
+        s = e;
+    }
+    out
+}
+
+/// Quantize (B, A) then STE-refine. Returns (Bq, Aq, loss history) with
+/// history[0] = post-quantization loss, history.last() = refined.
+pub fn quantize_factors(b0: &Matrix, a0: &Matrix, w: &Matrix, c: &Matrix,
+                        bits: u32, chunk: usize, n_iter: usize)
+                        -> (Matrix, Matrix, Vec<f64>) {
+    let (wc, _) = eigh(c);
+    let lc = wc.last().copied().unwrap_or(0.0).max(1e-12);
+    let mut fb = b0.clone(); // full-precision shadow (STE state)
+    let mut fa = a0.clone();
+    let mut bq = quantize_uniform(&fb, bits, chunk);
+    let mut aq = quantize_uniform(&fa, bits, chunk);
+    let mut hist = vec![act_loss(w, &bq.matmul(&aq), c)];
+    for _ in 0..n_iter {
+        let e = bq.matmul(&aq).sub(w).matmul(c);
+        let gb = e.matmul_bt(&aq).scale(2.0);
+        let ga = bq.matmul_at(&e).scale(2.0);
+        let lb = 2.0 * lc * aq.frob2().max(1e-12);
+        let la = 2.0 * lc * bq.frob2().max(1e-12);
+        fb = fb.sub(&gb.scale(1.0 / lb));
+        fa = fa.sub(&ga.scale(1.0 / la));
+        bq = quantize_uniform(&fb, bits, chunk);
+        aq = quantize_uniform(&fa, bits, chunk);
+        hist.push(act_loss(w, &bq.matmul(&aq), c));
+    }
+    (bq, aq, hist)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::asvd::{self, AsvdOpts};
+    use crate::compress::junction::Junction;
+    use crate::compress::precond::Precond;
+    use crate::util::rng::{decaying_covariance, wishart, Rng};
+
+    #[test]
+    fn quantizer_level_count() {
+        let mut rng = Rng::new(90);
+        let m = rng.normal_matrix(8, 8);
+        let q = quantize_uniform(&m, 2, 64);
+        let uniq: std::collections::BTreeSet<i64> =
+            q.data().iter().map(|v| (v * 1e9) as i64).collect();
+        assert!(uniq.len() <= 4, "2-bit should give ≤4 levels per chunk");
+        // identity at high precision
+        let q16 = quantize_uniform(&m, 16, 64);
+        assert!(q16.max_abs_diff(&m) < 1e-3);
+    }
+
+    #[test]
+    fn ste_refinement_reduces_loss() {
+        let mut rng = Rng::new(91);
+        let w = rng.normal_matrix(12, 12);
+        let c = wishart(&mut rng, &decaying_covariance(12, 0.9), 24);
+        let opts = AsvdOpts { kind: Precond::RootCov,
+                              junction: Junction::Left,
+                              ..Default::default() };
+        let lr = asvd::compress_with_cov(&w, 6, &c, &vec![0.0; 12], &opts);
+        let (_, _, hist) = quantize_factors(&lr.factors.b, &lr.factors.a,
+                                            &w, &c, 4, 32, 25);
+        let best = hist.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(best <= hist[0] * (1.0 + 1e-9), "{hist:?}");
+        assert!(best < hist[0], "refinement should improve: {hist:?}");
+    }
+}

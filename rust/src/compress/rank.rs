@@ -1,0 +1,119 @@
+//! Compression-ratio → rank solvers (paper §3.3 parameter accounting).
+//! Mirrors python/compile/latentllm/rank.py exactly.
+
+/// Rank for one d_out×d_in linear so the factor params ≈ keep·d_out·d_in.
+pub fn local_rank(d_out: usize, d_in: usize, keep: f64, blockid: bool)
+                  -> usize {
+    let target = keep * (d_out * d_in) as f64;
+    let s = (d_out + d_in) as f64;
+    let r = if blockid {
+        let disc = (s * s - 4.0 * target).max(0.0);
+        (s - disc.sqrt()) / 2.0
+    } else {
+        target / s
+    };
+    (r.round() as usize).clamp(1, d_out.min(d_in))
+}
+
+pub fn local_params(d_out: usize, d_in: usize, r: usize, blockid: bool)
+                    -> usize {
+    let n = r * (d_out + d_in);
+    if blockid {
+        n - r * r
+    } else {
+        n
+    }
+}
+
+/// Shared rank rq = rk = r for the joint QK factorization (§4.1):
+/// params = (rq+rk)(d + d_h·h) − rq² − rk² − d_h²·h.
+pub fn joint_qk_rank(d: usize, d_h: usize, n_q: usize, n_kv: usize,
+                     keep: f64, blockid: bool) -> usize {
+    let orig = (d * d_h * (n_q + n_kv)) as f64;
+    let target = keep * orig;
+    let s = (2 * d + d_h * (n_q + n_kv)) as f64;
+    let r = if blockid {
+        let credit = (d_h * d_h * n_q.min(n_kv)) as f64;
+        let disc = s * s - 8.0 * (target + credit);
+        if disc < 0.0 {
+            return d.min(d_h * n_q.min(n_kv));
+        }
+        (s - disc.sqrt()) / 4.0
+    } else {
+        target / s
+    };
+    (r.round() as usize).clamp(1, d)
+}
+
+pub fn joint_qk_params(d: usize, d_h: usize, n_q: usize, n_kv: usize,
+                       rq: usize, rk: usize, blockid: bool) -> usize {
+    let n = (rq + rk) * d + n_q * d_h * rq + n_kv * d_h * rk;
+    if blockid {
+        n - rq * rq - rk * rk - d_h * d_h * n_q.min(n_kv)
+    } else {
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{dim, run_cases};
+
+    #[test]
+    fn rank_inverts_param_count() {
+        run_cases("rank-params-roundtrip", 60, 0x51, |rng, _| {
+            let d_out = dim(rng, 8, 256);
+            let d_in = dim(rng, 8, 256);
+            let keep = 0.2 + 0.7 * rng.uniform();
+            for blockid in [false, true] {
+                let r = local_rank(d_out, d_in, keep, blockid);
+                let p = local_params(d_out, d_in, r, blockid) as f64;
+                let target = keep * (d_out * d_in) as f64;
+                // within one rank step of the target (or clamped)
+                let step = (d_out + d_in) as f64;
+                if r < d_out.min(d_in) && r > 1 {
+                    prop_assert!((p - target).abs() <= step,
+                                 "params {p} target {target} \
+                                  (d'={d_out}, d={d_in}, keep={keep})");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn blockid_always_shrinks() {
+        // §3.3: r(d+d')−r² < d·d' for every r < min(d,d').
+        run_cases("blockid-always-shrinks", 40, 0x52, |rng, _| {
+            let d = dim(rng, 4, 128);
+            let r = dim(rng, 1, d - 1);
+            prop_assert!(local_params(d, d, r, true) < d * d,
+                         "d={d} r={r}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn paper_example_25pct_latent() {
+        // §3.3 worked example: d=d', r=0.75d → dense 1.5d² (50% MORE than
+        // d²), blockid (15/16)d² (< d²).
+        let d = 1024usize;
+        let r = 3 * d / 4;
+        assert_eq!(local_params(d, d, r, false), 3 * d * d / 2);
+        assert_eq!(local_params(d, d, r, true), 15 * d * d / 16);
+    }
+
+    #[test]
+    fn joint_qk_rank_solves_target() {
+        let (d, dh, h) = (128usize, 32usize, 4usize);
+        for keep in [0.5, 0.7, 0.9] {
+            let r = joint_qk_rank(d, dh, h, h, keep, true);
+            let p = joint_qk_params(d, dh, h, h, r, r, true) as f64;
+            let target = keep * (2 * d * d) as f64;
+            assert!(p <= target + (4 * d) as f64,
+                    "keep {keep}: params {p} > target {target}");
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! RoPE-aware attention-map loss (paper App F.3, Fig 12).
+//!
+//! With rotary position embeddings the attention kernel at relative offset
+//! δ = n−m is  Δ_{i,δ} = Wq,iᵀ Θ_{i,δ} Wk,i; the RoPE-aware loss sums the
+//! whitened kernel error over a window of offsets (the paper uses a
+//! 10-token window). Each (head, offset) pair becomes one more HOSVD slice,
+//! so the same alternating solver applies.
+
+use super::joint_qk::attention_map_loss;
+use super::precond::Precond;
+use crate::tensor::topk_eigvecs;
+use crate::Matrix;
+
+/// Block-diagonal RoPE rotation Θ_δ for head dim d_h (Llama-2 layout,
+/// Eq 174/175): pairs (2i, 2i+1) rotated by δ·θ^(−2i/d_h).
+pub fn rope_rotation(d_h: usize, delta: f64, theta: f64) -> Matrix {
+    let mut m = Matrix::zeros(d_h, d_h);
+    for i in 0..d_h / 2 {
+        let ang = delta * theta.powf(-2.0 * i as f64 / d_h as f64);
+        let (s, c) = ang.sin_cos();
+        m[(2 * i, 2 * i)] = c;
+        m[(2 * i, 2 * i + 1)] = -s;
+        m[(2 * i + 1, 2 * i)] = s;
+        m[(2 * i + 1, 2 * i + 1)] = c;
+    }
+    if d_h % 2 == 1 {
+        m[(d_h - 1, d_h - 1)] = 1.0;
+    }
+    m
+}
+
+pub struct RopeQkResult {
+    pub aq: Matrix,
+    pub ak: Matrix,
+    /// loss over the RoPE window per iteration
+    pub losses: Vec<f64>,
+}
+
+/// RoPE-aware joint QK HOSVD: slices G̃_{i,δ} = (Wq,i P)ᵀ Θ_{i,δ} (Wk,i P)
+/// for causal offsets δ ∈ [0, window).
+pub fn compress_rope_aware(wq: &Matrix, wk: &Matrix, n_heads: usize,
+                           d_h: usize, rq: usize, rk: usize, window: usize,
+                           theta: f64, n_iter: usize, kind: Precond,
+                           c: &Matrix) -> RopeQkResult {
+    let d = wq.cols();
+    let (p, _) = kind.build(c, None);
+    let mut g = Vec::with_capacity(n_heads * window);
+    for i in 0..n_heads {
+        let qi = wq.slice_rows(i * d_h, (i + 1) * d_h).matmul(&p);
+        let ki = wk.slice_rows(i * d_h, (i + 1) * d_h).matmul(&p);
+        for delta in 0..window {
+            let rot = rope_rotation(d_h, delta as f64, theta);
+            g.push(qi.matmul_at(&rot.matmul(&ki)));
+        }
+    }
+    let mut acc = Matrix::zeros(d, d);
+    for gi in &g {
+        acc.add_inplace(&gi.matmul_bt(gi));
+    }
+    let mut aq = topk_eigvecs(&acc, rq);
+    let mut acc_k0 = Matrix::zeros(d, d);
+    for gi in &g {
+        acc_k0.add_inplace(&gi.matmul_at(gi));
+    }
+    let mut ak = topk_eigvecs(&acc_k0, rk);
+    let mut losses = vec![attention_map_loss(&g, &aq, &ak)];
+    for _ in 0..n_iter {
+        let mut acc_k = Matrix::zeros(d, d);
+        for gi in &g {
+            let ag = aq.matmul(gi);
+            acc_k.add_inplace(&ag.matmul_at(&ag));
+        }
+        ak = topk_eigvecs(&acc_k, rk);
+        let mut acc_q = Matrix::zeros(d, d);
+        for gi in &g {
+            let ga = ak.matmul(&gi.transpose());
+            acc_q.add_inplace(&ga.matmul_at(&ga));
+        }
+        aq = topk_eigvecs(&acc_q, rq);
+        losses.push(attention_map_loss(&g, &aq, &ak));
+    }
+    RopeQkResult { aq, ak, losses }
+}
+
+/// Evaluate an (Aq, Ak) pair under the RoPE-window loss (for comparing the
+/// RoPE-blind solution on the RoPE-aware objective — Fig 12's comparison).
+pub fn rope_window_loss(wq: &Matrix, wk: &Matrix, n_heads: usize, d_h: usize,
+                        aq: &Matrix, ak: &Matrix, window: usize, theta: f64,
+                        kind: Precond, c: &Matrix) -> f64 {
+    let (p, _) = kind.build(c, None);
+    let mut g = Vec::new();
+    for i in 0..n_heads {
+        let qi = wq.slice_rows(i * d_h, (i + 1) * d_h).matmul(&p);
+        let ki = wk.slice_rows(i * d_h, (i + 1) * d_h).matmul(&p);
+        for delta in 0..window {
+            let rot = rope_rotation(d_h, delta as f64, theta);
+            g.push(qi.matmul_at(&rot.matmul(&ki)));
+        }
+    }
+    attention_map_loss(&g, aq, ak)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rotation_is_orthogonal_and_composes() {
+        let r1 = rope_rotation(8, 1.0, 1e4);
+        let r2 = rope_rotation(8, 2.0, 1e4);
+        assert!(r1.matmul_bt(&r1).max_abs_diff(&Matrix::eye(8)) < 1e-12);
+        // Θ_1 Θ_1 = Θ_2 (relative-position property Θᵀ_m Θ_n = Θ_{n−m})
+        assert!(r1.matmul(&r1).max_abs_diff(&r2) < 1e-12);
+        // δ=0 is identity
+        assert!(rope_rotation(8, 0.0, 1e4).max_abs_diff(&Matrix::eye(8))
+                < 1e-12);
+    }
+
+    #[test]
+    fn rope_aware_beats_rope_blind_on_rope_loss(// Fig 12
+    ) {
+        let mut rng = Rng::new(95);
+        let (d, dh, h) = (24usize, 6usize, 4usize);
+        let wq = rng.normal_matrix(d, d);
+        let wk = rng.normal_matrix(d, d);
+        let c = Matrix::eye(d);
+        let (rq, rk) = (10, 10);
+        let aware = compress_rope_aware(&wq, &wk, h, dh, rq, rk, 10, 1e4, 6,
+                                        Precond::Identity, &c);
+        // rope-blind: plain joint QK (δ=0 only), then evaluate on the window
+        let blind = compress_rope_aware(&wq, &wk, h, dh, rq, rk, 1, 1e4, 6,
+                                        Precond::Identity, &c);
+        let blind_on_window = rope_window_loss(&wq, &wk, h, dh, &blind.aq,
+                                               &blind.ak, 10, 1e4,
+                                               Precond::Identity, &c);
+        let aware_loss = *aware.losses.last().unwrap();
+        assert!(aware_loss <= blind_on_window * (1.0 + 1e-9),
+                "aware {aware_loss} vs blind {blind_on_window}");
+    }
+
+    #[test]
+    fn losses_monotone() {
+        let mut rng = Rng::new(96);
+        let (d, dh, h) = (16usize, 4usize, 4usize);
+        let wq = rng.normal_matrix(d, d);
+        let wk = rng.normal_matrix(d, d);
+        let res = compress_rope_aware(&wq, &wk, h, dh, 6, 6, 5, 1e4, 5,
+                                      Precond::Identity, &Matrix::eye(d));
+        for w in res.losses.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-9));
+        }
+    }
+}

@@ -1,0 +1,237 @@
+//! Sparse and low-rank+sparse approximation (paper App I):
+//! FISTA soft-shrink (Eqs 233–235), projected-GD hard top-κ (the STE
+//! variant, Eq 237), WandA-style diagonal one-shot (Eq 238), alternating
+//! low-rank+sparse, and factor sparsification — backing Figs 11/13/14/15/16.
+
+use super::asvd::{self, AsvdOpts};
+use super::junction::Junction;
+use super::precond::Precond;
+use crate::tensor::eig::eigh;
+use crate::tensor::linalg::act_loss;
+use crate::Matrix;
+
+/// Keep the κ entries of largest magnitude (global), zero the rest.
+pub fn hard_topk(m: &Matrix, k: usize) -> Matrix {
+    let n = m.data().len();
+    if k == 0 {
+        return Matrix::zeros(m.rows(), m.cols());
+    }
+    if k >= n {
+        return m.clone();
+    }
+    let mut mags: Vec<f64> = m.data().iter().map(|v| v.abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let thresh = mags[k - 1];
+    let mut out = m.clone();
+    let mut kept = 0usize;
+    for v in out.data_mut() {
+        if v.abs() >= thresh && kept < k {
+            kept += 1;
+        } else {
+            *v = 0.0;
+        }
+    }
+    out
+}
+
+pub fn soft_shrink(m: &Matrix, alpha: f64) -> Matrix {
+    let mut out = m.clone();
+    for v in out.data_mut() {
+        *v = v.signum() * (v.abs() - alpha).max(0.0);
+    }
+    out
+}
+
+pub fn nnz(m: &Matrix) -> usize {
+    m.data().iter().filter(|&&v| v != 0.0).count()
+}
+
+fn lmax(c: &Matrix) -> f64 {
+    let (w, _) = eigh(c);
+    w.last().copied().unwrap_or(0.0).max(1e-12)
+}
+
+/// FISTA soft-shrink (Eq 232–235) with λ bisection toward target κ.
+/// Returns (D, loss).
+pub fn fista(w: &Matrix, c: &Matrix, kappa: usize, n_iter: usize)
+             -> (Matrix, f64) {
+    let step = 1.0 / (2.0 * lmax(c));
+    let run = |lam: f64| -> Matrix {
+        let mut d = Matrix::zeros(w.rows(), w.cols());
+        let mut yk = d.clone();
+        let mut t = 1.0f64;
+        for _ in 0..n_iter {
+            let grad = yk.sub(w).matmul(c).scale(2.0);
+            let d_new = soft_shrink(&yk.sub(&grad.scale(step)), lam * step);
+            let t_new = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+            yk = d_new.add(&d_new.sub(&d).scale((t - 1.0) / t_new));
+            d = d_new;
+            t = t_new;
+        }
+        d
+    };
+    let gmax = w.matmul(c).scale(2.0).data().iter()
+        .map(|v| v.abs()).fold(0.0, f64::max) + 1e-9;
+    let (mut lo, mut hi) = (1e-8f64, gmax);
+    for _ in 0..12 {
+        let mid = (lo * hi).sqrt();
+        if nnz(&run(mid)) > kappa {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let d = run(hi);
+    let loss = act_loss(w, &d, c);
+    (d, loss)
+}
+
+/// Projected gradient with hard top-κ projection — the STE variant
+/// (Eq 237): deterministic target sparsity.
+pub fn projected_gd(w: &Matrix, c: &Matrix, kappa: usize, n_iter: usize)
+                    -> (Matrix, f64) {
+    let step = 1.0 / (2.0 * lmax(c));
+    let mut d = hard_topk(w, kappa);
+    for _ in 0..n_iter {
+        let grad = d.sub(w).matmul(c).scale(2.0);
+        d = hard_topk(&d.sub(&grad.scale(step)), kappa);
+    }
+    (d.clone(), act_loss(w, &d, c))
+}
+
+/// WandA/SparseGPT-style one-shot with diagonal C only (Eq 238, Fig 16).
+pub fn wanda_diag(w: &Matrix, c: &Matrix, kappa: usize) -> (Matrix, f64) {
+    let imp = Matrix::from_fn(w.rows(), w.cols(), |i, j| {
+        w[(i, j)].abs() * c[(j, j)].max(0.0).sqrt()
+    });
+    let mask = hard_topk(&imp, kappa);
+    let d = Matrix::from_fn(w.rows(), w.cols(), |i, j| {
+        if mask[(i, j)] != 0.0 { w[(i, j)] } else { 0.0 }
+    });
+    let loss = act_loss(w, &d, c);
+    (d, loss)
+}
+
+/// Alternating low-rank + sparse (App I, Fig 14): svd_r[(W−D)P] ↔ sparse
+/// fit of (W−BA). Returns (BA, D, per-round losses).
+pub fn lowrank_plus_sparse(w: &Matrix, c: &Matrix, rank: usize, kappa: usize,
+                           rounds: usize) -> (Matrix, Matrix, Vec<f64>) {
+    let mut d = Matrix::zeros(w.rows(), w.cols());
+    let mut ba = Matrix::zeros(w.rows(), w.cols());
+    let mut hist = Vec::new();
+    let opts = AsvdOpts { kind: Precond::RootCov, junction: Junction::Left,
+                          ..Default::default() };
+    for _ in 0..rounds {
+        let res = asvd::compress_with_cov(&w.sub(&d), rank, c,
+                                          &vec![0.0; w.cols()], &opts);
+        ba = res.w_hat;
+        let (d_new, _) = projected_gd(&w.sub(&ba), c, kappa, 30);
+        d = d_new;
+        hist.push(act_loss(w, &ba.add(&d), c));
+    }
+    (ba, d, hist)
+}
+
+/// Fig 15: hard-sparsify the low-rank factors themselves with alternating
+/// projected refits against the activation loss.
+pub fn sparsify_factors(b0: &Matrix, a0: &Matrix, w: &Matrix, c: &Matrix,
+                        keep_frac: f64, n_iter: usize)
+                        -> (Matrix, Matrix, Vec<f64>) {
+    let mut b = b0.clone();
+    let mut a = a0.clone();
+    let kb = ((keep_frac * b.data().len() as f64) as usize).max(1);
+    let ka = ((keep_frac * a.data().len() as f64) as usize).max(1);
+    let lc = lmax(c);
+    let mut hist = Vec::new();
+    for _ in 0..n_iter {
+        let e = b.matmul(&a).sub(w).matmul(c);
+        let gb = e.matmul_bt(&a).scale(2.0);
+        let ga = b.matmul_at(&e).scale(2.0);
+        let lb = 2.0 * lc * a.frob2().max(1e-12);
+        let la = 2.0 * lc * b.frob2().max(1e-12);
+        b = hard_topk(&b.sub(&gb.scale(1.0 / lb)), kb);
+        a = hard_topk(&a.sub(&ga.scale(1.0 / la)), ka);
+        hist.push(act_loss(w, &b.matmul(&a), c));
+    }
+    (b, a, hist)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{decaying_covariance, wishart, Rng};
+
+    fn problem(seed: u64, d: usize) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let w = rng.normal_matrix(d, d);
+        let c = wishart(&mut rng, &decaying_covariance(d, 0.9), 2 * d);
+        (w, c)
+    }
+
+    #[test]
+    fn hard_topk_exact_sparsity() {
+        let (w, _) = problem(80, 10);
+        for k in [0usize, 5, 37, 100] {
+            let d = hard_topk(&w, k);
+            assert_eq!(nnz(&d), k.min(100));
+        }
+    }
+
+    #[test]
+    fn projected_gd_hits_target_and_beats_oneshot() {
+        let (w, c) = problem(81, 12);
+        let kappa = 50;
+        let (d, loss) = projected_gd(&w, &c, kappa, 60);
+        assert!(nnz(&d) <= kappa);
+        // iterative with full C beats magnitude one-shot with diag C (Fig 16)
+        let (_, wanda_loss) = wanda_diag(&w, &c, kappa);
+        assert!(loss <= wanda_loss * (1.0 + 1e-9),
+                "pgd {loss} vs wanda {wanda_loss}");
+    }
+
+    #[test]
+    fn fista_near_target_sparsity() {
+        let (w, c) = problem(82, 10);
+        let kappa = 40;
+        let (d, _) = fista(&w, &c, kappa, 40);
+        let got = nnz(&d);
+        assert!(got <= kappa + 12, "nnz {got} vs κ {kappa}");
+        assert!(got > 0);
+    }
+
+    #[test]
+    fn sparse_beats_lowrank_at_equal_budget(// Fig 11's headline finding
+    ) {
+        let (w, c) = problem(83, 16);
+        // budget: rank-4 factors of a 16x16 = 4*(16+16) = 128 params
+        let opts = AsvdOpts { kind: Precond::RootCov,
+                              junction: Junction::Left,
+                              ..Default::default() };
+        let lr = asvd::compress_with_cov(&w, 4, &c, &vec![0.0; 16], &opts);
+        let (_, sp_loss) = projected_gd(&w, &c, 128, 60);
+        assert!(sp_loss <= lr.loss * (1.0 + 1e-9),
+                "sparse {sp_loss} vs low-rank {}", lr.loss);
+    }
+
+    #[test]
+    fn lowrank_plus_sparse_improves_over_rounds() {
+        let (w, c) = problem(84, 12);
+        let (_, _, hist) = lowrank_plus_sparse(&w, &c, 3, 30, 4);
+        assert!(hist.last().unwrap() <= &(hist[0] * (1.0 + 1e-9)),
+                "{hist:?}");
+    }
+
+    #[test]
+    fn sparsify_factors_runs_and_reports() {
+        let (w, c) = problem(85, 10);
+        let opts = AsvdOpts { kind: Precond::RootCov,
+                              junction: Junction::Left,
+                              ..Default::default() };
+        let lr = asvd::compress_with_cov(&w, 6, &c, &vec![0.0; 10], &opts);
+        let (b, a, hist) = sparsify_factors(&lr.factors.b, &lr.factors.a,
+                                            &w, &c, 0.6, 25);
+        assert!(nnz(&b) <= (0.6 * 60.0) as usize + 1);
+        assert!(nnz(&a) <= (0.6 * 60.0) as usize + 1);
+        assert_eq!(hist.len(), 25);
+    }
+}

@@ -1,0 +1,163 @@
+//! Deployment configuration: TOML files → typed configs for the serving
+//! coordinator and report runner (the launcher's `--config` path).
+//!
+//! Example (configs/serve.toml):
+//! ```toml
+//! [serve]
+//! model = "opt-mini-m"
+//! policy = "cache_aware"
+//! max_batch = 8
+//! max_wait_ms = 5
+//! kv_budget_mb = 8
+//! latent_ratio = 0.3
+//! [report]
+//! max_batches = 12
+//! qk_iters = 8
+//! ud_iters = 4
+//! ```
+
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::router::Policy;
+use crate::util::toml::{self, Table};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeSettings {
+    pub model: String,
+    pub policy: Policy,
+    pub batcher: BatcherConfig,
+    pub kv_budget_bytes: usize,
+    pub latent_ratio: f64,
+    pub program_batch: usize,
+    pub seq_len: usize,
+}
+
+impl Default for ServeSettings {
+    fn default() -> Self {
+        ServeSettings {
+            model: "opt-mini-m".into(),
+            policy: Policy::CacheAware,
+            batcher: BatcherConfig::default(),
+            kv_budget_bytes: 8 << 20,
+            latent_ratio: 0.3,
+            program_batch: 8,
+            seq_len: 128,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReportSettings {
+    pub max_batches: usize,
+    pub qk_iters: usize,
+    pub ud_iters: usize,
+}
+
+impl Default for ReportSettings {
+    fn default() -> Self {
+        ReportSettings { max_batches: 12, qk_iters: 8, ud_iters: 4 }
+    }
+}
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub serve: ServeSettings,
+    pub report: ReportSettings,
+}
+
+fn policy_from_str(s: &str) -> Option<Policy> {
+    match s {
+        "rr" | "round_robin" => Some(Policy::RoundRobin),
+        "prefer_latent" => Some(Policy::PreferLatent),
+        "cache_aware" => Some(Policy::CacheAware),
+        _ => None,
+    }
+}
+
+impl Config {
+    pub fn from_table(t: &Table) -> Result<Config> {
+        let mut cfg = Config::default();
+        let get_usize = |key: &str, default: usize| -> usize {
+            t.get(key).and_then(|v| v.as_i64()).map(|v| v as usize)
+                .unwrap_or(default)
+        };
+        if let Some(v) = t.get("serve.model").and_then(|v| v.as_str()) {
+            cfg.serve.model = v.to_string();
+        }
+        if let Some(v) = t.get("serve.policy").and_then(|v| v.as_str()) {
+            cfg.serve.policy = policy_from_str(v)
+                .with_context(|| format!("unknown policy {v:?}"))?;
+        }
+        cfg.serve.batcher.max_batch =
+            get_usize("serve.max_batch", cfg.serve.batcher.max_batch);
+        if let Some(ms) = t.get("serve.max_wait_ms").and_then(|v| v.as_f64())
+        {
+            cfg.serve.batcher.max_wait = Duration::from_micros(
+                (ms * 1000.0) as u64);
+        }
+        cfg.serve.kv_budget_bytes =
+            get_usize("serve.kv_budget_mb",
+                      cfg.serve.kv_budget_bytes >> 20) << 20;
+        if let Some(r) = t.get("serve.latent_ratio").and_then(|v| v.as_f64())
+        {
+            anyhow::ensure!((0.0..1.0).contains(&r),
+                            "latent_ratio must be in [0,1)");
+            cfg.serve.latent_ratio = r;
+        }
+        cfg.serve.program_batch =
+            get_usize("serve.program_batch", cfg.serve.program_batch);
+        cfg.serve.seq_len = get_usize("serve.seq_len", cfg.serve.seq_len);
+        cfg.report.max_batches =
+            get_usize("report.max_batches", cfg.report.max_batches);
+        cfg.report.qk_iters = get_usize("report.qk_iters",
+                                        cfg.report.qk_iters);
+        cfg.report.ud_iters = get_usize("report.ud_iters",
+                                        cfg.report.ud_iters);
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {path}"))?;
+        Config::from_table(&toml::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let t = toml::parse(
+            "[serve]\nmodel = \"opt-mini-l\"\npolicy = \"prefer_latent\"\n\
+             max_batch = 16\nmax_wait_ms = 2.5\nkv_budget_mb = 32\n\
+             latent_ratio = 0.4\n[report]\nmax_batches = 6\n").unwrap();
+        let c = Config::from_table(&t).unwrap();
+        assert_eq!(c.serve.model, "opt-mini-l");
+        assert_eq!(c.serve.policy, Policy::PreferLatent);
+        assert_eq!(c.serve.batcher.max_batch, 16);
+        assert_eq!(c.serve.batcher.max_wait, Duration::from_micros(2500));
+        assert_eq!(c.serve.kv_budget_bytes, 32 << 20);
+        assert_eq!(c.serve.latent_ratio, 0.4);
+        assert_eq!(c.report.max_batches, 6);
+        assert_eq!(c.report.qk_iters, 8); // default survives
+    }
+
+    #[test]
+    fn defaults_when_empty() {
+        let c = Config::from_table(&Table::new()).unwrap();
+        assert_eq!(c, Config::default());
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let t = toml::parse("[serve]\npolicy = \"nope\"\n").unwrap();
+        assert!(Config::from_table(&t).is_err());
+        let t = toml::parse("[serve]\nlatent_ratio = 1.5\n").unwrap();
+        assert!(Config::from_table(&t).is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Dynamic batcher: accumulates requests until `max_batch` or `max_wait`,
+//! then flushes — the standard continuous-batching front half. Pure data
+//! structure (the server thread drives the clock), so it is exhaustively
+//! testable without timers.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Pending<T> {
+    pub item: T,
+    pub enqueued: Instant,
+}
+
+#[derive(Debug)]
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    queue: VecDeque<Pending<T>>,
+    pub flushes: u64,
+    pub full_flushes: u64,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher { cfg, queue: VecDeque::new(), flushes: 0, full_flushes: 0 }
+    }
+
+    pub fn push(&mut self, item: T, now: Instant) {
+        self.queue.push_back(Pending { item, enqueued: now });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Whether a flush should happen at `now`.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.cfg.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(p) => now.duration_since(p.enqueued) >= self.cfg.max_wait,
+            None => false,
+        }
+    }
+
+    /// Deadline at which the oldest pending request forces a flush.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.queue.front().map(|p| p.enqueued + self.cfg.max_wait)
+    }
+
+    /// Take up to max_batch requests (FIFO). Never returns an empty vec
+    /// unless the queue is empty.
+    pub fn flush(&mut self, now: Instant) -> Vec<Pending<T>> {
+        let n = self.queue.len().min(self.cfg.max_batch);
+        if n == 0 {
+            return Vec::new();
+        }
+        self.flushes += 1;
+        if n == self.cfg.max_batch {
+            self.full_flushes += 1;
+        }
+        let _ = now;
+        self.queue.drain(..n).collect()
+    }
+
+    pub fn config(&self) -> BatcherConfig {
+        self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn flushes_at_max_batch() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 3, max_wait: Duration::from_secs(100),
+        });
+        let now = t0();
+        b.push(1, now);
+        b.push(2, now);
+        assert!(!b.ready(now));
+        b.push(3, now);
+        assert!(b.ready(now));
+        let batch = b.flush(now);
+        assert_eq!(batch.len(), 3);
+        assert!(b.is_empty());
+        assert_eq!(b.full_flushes, 1);
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 100, max_wait: Duration::from_millis(5),
+        });
+        let now = t0();
+        b.push("a", now);
+        assert!(!b.ready(now));
+        let later = now + Duration::from_millis(6);
+        assert!(b.ready(later));
+        assert_eq!(b.flush(later).len(), 1);
+    }
+
+    #[test]
+    fn fifo_order_and_partial_flush() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 2, max_wait: Duration::from_millis(0),
+        });
+        let now = t0();
+        for i in 0..5 {
+            b.push(i, now);
+        }
+        let batch1 = b.flush(now);
+        assert_eq!(batch1.iter().map(|p| p.item).collect::<Vec<_>>(),
+                   vec![0, 1]);
+        assert_eq!(b.flush(now).len(), 2);
+        assert_eq!(b.flush(now).len(), 1);
+        assert_eq!(b.flush(now).len(), 0);
+        assert_eq!(b.flushes, 3);
+    }
+
+    #[test]
+    fn never_exceeds_max_batch_property() {
+        use crate::util::prop::run_cases;
+        run_cases("batcher-max", 50, 0xbb, |rng, _| {
+            let max_batch = 1 + rng.below(16);
+            let mut b = Batcher::new(BatcherConfig {
+                max_batch, max_wait: Duration::from_millis(1),
+            });
+            let now = t0();
+            let n = rng.below(100);
+            for i in 0..n {
+                b.push(i, now);
+            }
+            let mut total = 0;
+            loop {
+                let batch = b.flush(now);
+                if batch.is_empty() {
+                    break;
+                }
+                if batch.len() > max_batch {
+                    return Err(format!("batch {} > {}", batch.len(),
+                                       max_batch));
+                }
+                total += batch.len();
+            }
+            if total != n {
+                return Err(format!("lost requests: {total} != {n}"));
+            }
+            Ok(())
+        });
+    }
+}

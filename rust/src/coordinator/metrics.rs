@@ -1,0 +1,116 @@
+//! Lightweight metrics registry: counters + latency histograms with
+//! p50/p95/p99 summaries, shared across coordinator threads.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    latencies: BTreeMap<String, Vec<f64>>, // micros
+}
+
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn observe(&self, name: &str, d: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies.entry(name.to_string()).or_default()
+            .push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn quantiles(&self, name: &str) -> Option<(f64, f64, f64)> {
+        let g = self.inner.lock().unwrap();
+        let mut v = g.latencies.get(name)?.clone();
+        if v.is_empty() {
+            return None;
+        }
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| v[((v.len() as f64 - 1.0) * p) as usize];
+        Some((q(0.50), q(0.95), q(0.99)))
+    }
+
+    pub fn count(&self, name: &str) -> usize {
+        self.inner.lock().unwrap()
+            .latencies.get(name).map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Render a human summary (the server prints this on shutdown).
+    pub fn summary(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (k, v) in &g.counters {
+            out.push_str(&format!("  {k}: {v}\n"));
+        }
+        drop(g);
+        let names: Vec<String> = {
+            let g = self.inner.lock().unwrap();
+            g.latencies.keys().cloned().collect()
+        };
+        for name in names {
+            if let Some((p50, p95, p99)) = self.quantiles(&name) {
+                out.push_str(&format!(
+                    "  {name}: n={} p50={:.0}µs p95={:.0}µs p99={:.0}µs\n",
+                    self.count(&name), p50, p95, p99));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_quantiles() {
+        let m = Metrics::new();
+        m.incr("req", 3);
+        m.incr("req", 2);
+        assert_eq!(m.counter("req"), 5);
+        for i in 1..=100u64 {
+            m.observe("lat", Duration::from_micros(i));
+        }
+        let (p50, p95, p99) = m.quantiles("lat").unwrap();
+        assert!((p50 - 50.0).abs() <= 2.0);
+        assert!((p95 - 95.0).abs() <= 2.0);
+        assert!((p99 - 99.0).abs() <= 2.0);
+        assert!(m.quantiles("missing").is_none());
+    }
+
+    #[test]
+    fn thread_safe() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.incr("x", 1);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("x"), 4000);
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 serving coordinator: request router, dynamic batcher, KV-cache
+//! manager with MLA-aware accounting, worker pool over PJRT executables,
+//! and a metrics registry — the vLLM-router-shaped stack the paper's
+//! compressed models plug into (std::thread + mpsc; tokio is unavailable
+//! offline, see DESIGN.md §2).
+
+pub mod batcher;
+pub mod kvcache;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use kvcache::{CacheKind, KvCacheManager};
+pub use metrics::Metrics;
+pub use router::{ModelVariant, Router};
+pub use server::{Server, ServerConfig};

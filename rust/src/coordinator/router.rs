@@ -1,0 +1,165 @@
+//! Request router over model variants (dense MHA vs compressed MLA).
+//!
+//! The paper's serving payoff: the latent variant's KV cache is a fraction
+//! of the dense one's, so under memory pressure the cache-aware policy
+//! keeps admitting requests to the latent variant long after dense is
+//! saturated. Policies are deterministic and unit-tested.
+
+use super::kvcache::KvCacheManager;
+
+/// One deployable model variant.
+pub struct ModelVariant {
+    pub name: String,
+    /// PJRT program name for scoring (e.g. "score_opt-mini-m")
+    pub score_program: String,
+    pub weights: crate::model::Weights,
+    pub cache: KvCacheManager,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    /// prefer the latent variant while it has cache headroom
+    PreferLatent,
+    /// pick the variant with the most free cache tokens
+    CacheAware,
+}
+
+pub struct Router {
+    pub variants: Vec<ModelVariant>,
+    policy: Policy,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(variants: Vec<ModelVariant>, policy: Policy) -> Self {
+        Router { variants, policy, rr_next: 0 }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Choose a variant index for a request of `tokens` length; accounts
+    /// the admission in the chosen variant's cache. None = all saturated.
+    pub fn route(&mut self, seq_id: u64, tokens: usize) -> Option<usize> {
+        let n = self.variants.len();
+        if n == 0 {
+            return None;
+        }
+        let order: Vec<usize> = match self.policy {
+            Policy::RoundRobin => {
+                let s = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % n;
+                (0..n).map(|i| (s + i) % n).collect()
+            }
+            Policy::PreferLatent => {
+                let mut idx: Vec<usize> = (0..n).collect();
+                idx.sort_by_key(|&i| {
+                    // latent variants have smaller bytes/token: first
+                    self.variants[i].cache.bytes_per_token()
+                });
+                idx
+            }
+            Policy::CacheAware => {
+                let mut idx: Vec<usize> = (0..n).collect();
+                idx.sort_by_key(|&i| {
+                    let c = &self.variants[i].cache;
+                    let free = c.capacity_tokens().saturating_sub(
+                        c.used_bytes() / c.bytes_per_token().max(1));
+                    std::cmp::Reverse(free)
+                });
+                idx
+            }
+        };
+        for i in order {
+            if self.variants[i].cache.admit(seq_id, tokens) {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    pub fn release(&mut self, variant: usize, seq_id: u64) {
+        self.variants[variant].cache.release(seq_id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kvcache::CacheKind;
+    use crate::model::io::TensorMap;
+    use crate::model::Weights;
+
+    fn variant(name: &str, kind: CacheKind, budget: usize) -> ModelVariant {
+        ModelVariant {
+            name: name.into(),
+            score_program: format!("score_{name}"),
+            weights: Weights::new(TensorMap::new()),
+            cache: KvCacheManager::new(kind, 4, 2, budget),
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let vs = vec![
+            variant("a", CacheKind::Dense { d: 64 }, 1 << 22),
+            variant("b", CacheKind::Dense { d: 64 }, 1 << 22),
+        ];
+        let mut r = Router::new(vs, Policy::RoundRobin);
+        let picks: Vec<usize> =
+            (0..4).map(|i| r.route(i, 16).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn prefer_latent_routes_to_smaller_cache_cost() {
+        let vs = vec![
+            variant("dense", CacheKind::Dense { d: 128 }, 1 << 22),
+            variant("latent", CacheKind::Latent { rk: 32, rv: 32 }, 1 << 22),
+        ];
+        let mut r = Router::new(vs, Policy::PreferLatent);
+        let idx = r.route(0, 16).unwrap();
+        assert_eq!(r.variants[idx].name, "latent");
+    }
+
+    #[test]
+    fn cache_aware_spreads_and_saturates() {
+        // two variants with capacity for 2×16-token requests each:
+        // cache-aware admission must spread 4 requests across both, then
+        // reject the 5th.
+        let cap2 = |kind: CacheKind| {
+            let m = KvCacheManager::new(kind, 4, 2, 0);
+            let bpt = m.bytes_per_token();
+            bpt * 16 * 2
+        };
+        let vs = vec![
+            variant_with_budget("a", CacheKind::Dense { d: 64 },
+                                cap2(CacheKind::Dense { d: 64 })),
+            variant_with_budget("b", CacheKind::Latent { rk: 8, rv: 8 },
+                                cap2(CacheKind::Latent { rk: 8, rv: 8 })),
+        ];
+        let mut r = Router::new(vs, Policy::CacheAware);
+        let mut hits = std::collections::BTreeMap::new();
+        for i in 0..4u64 {
+            let idx = r.route(i, 16).expect("capacity remains");
+            *hits.entry(r.variants[idx].name.clone()).or_insert(0) += 1;
+        }
+        assert_eq!(hits.get("a"), Some(&2));
+        assert_eq!(hits.get("b"), Some(&2));
+        assert!(r.route(99, 16).is_none(), "all saturated");
+    }
+
+    fn variant_with_budget(name: &str, kind: CacheKind, budget: usize)
+                           -> ModelVariant {
+        variant(name, kind, budget)
+    }
+
+    #[test]
+    fn all_saturated_returns_none() {
+        let vs = vec![variant("tiny", CacheKind::Dense { d: 64 }, 64)];
+        let mut r = Router::new(vs, Policy::RoundRobin);
+        assert!(r.route(0, 1000).is_none());
+    }
+}

@@ -1,0 +1,191 @@
+//! The serving loop: a worker thread drains the dynamic batcher, routes
+//! each flush to a model variant, pads to the program's fixed batch shape,
+//! executes on PJRT, and replies per request. std::thread + mpsc (tokio is
+//! unavailable offline; the control flow is identical).
+//!
+//! The PJRT client is `Rc`-based (not Send), so the worker thread builds
+//! and owns its own [`Engine`] — requests/responses cross the channel,
+//! executables never do.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::router::{Policy, Router};
+use crate::runtime::{Engine, ParamValue};
+
+#[derive(Clone, Debug)]
+pub struct ScoreRequest {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ScoreResponse {
+    pub id: u64,
+    pub nll: f32,
+    pub variant: String,
+    pub latency: Duration,
+}
+
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+    pub policy: Policy,
+    /// fixed program batch (manifest score_batch)
+    pub program_batch: usize,
+    pub seq_len: usize,
+}
+
+enum Msg {
+    Req(ScoreRequest, mpsc::Sender<ScoreResponse>),
+    Shutdown,
+}
+
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Server {
+    /// Start the worker thread; it constructs its own PJRT engine from the
+    /// artifacts directory (the client is not Send).
+    pub fn start(artifacts: PathBuf, router: Router, cfg: ServerConfig)
+                 -> Server {
+        let metrics = Arc::new(Metrics::new());
+        let m = metrics.clone();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let handle = std::thread::spawn(move || {
+            let engine = match Engine::new(&artifacts) {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("[server] engine init failed: {e:#}");
+                    return;
+                }
+            };
+            serve_loop(engine, router, cfg, rx, m);
+        });
+        Server { tx, handle: Some(handle), metrics }
+    }
+
+    pub fn submit(&self, req: ScoreRequest)
+                  -> mpsc::Receiver<ScoreResponse> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Msg::Req(req, rtx)).expect("server alive");
+        rrx
+    }
+
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        self.metrics.clone()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Entry {
+    req: ScoreRequest,
+    reply: mpsc::Sender<ScoreResponse>,
+    t_submit: Instant,
+}
+
+fn serve_loop(engine: Engine, mut router: Router, cfg: ServerConfig,
+              rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>) {
+    let mut batcher: Batcher<Entry> = Batcher::new(cfg.batcher);
+    let mut running = true;
+    while running || !batcher.is_empty() {
+        // Collect messages until flush condition or shutdown.
+        let now = Instant::now();
+        let timeout = if batcher.is_empty() {
+            Duration::from_millis(50)
+        } else {
+            batcher.deadline()
+                .map(|d| d.saturating_duration_since(now))
+                .unwrap_or(Duration::ZERO)
+        };
+        if running {
+            match rx.recv_timeout(timeout) {
+                Ok(Msg::Req(req, reply)) => {
+                    metrics.incr("requests", 1);
+                    batcher.push(Entry { req, reply, t_submit: Instant::now() },
+                                 Instant::now());
+                }
+                Ok(Msg::Shutdown) => running = false,
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => running = false,
+            }
+        }
+        let now = Instant::now();
+        if batcher.ready(now) || (!running && !batcher.is_empty()) {
+            let entries = batcher.flush(now);
+            if let Err(e) = execute_batch(&engine, &mut router, &cfg,
+                                          entries, &metrics) {
+                metrics.incr("batch_errors", 1);
+                eprintln!("[server] batch error: {e:#}");
+            }
+        }
+    }
+}
+
+fn execute_batch(engine: &Engine, router: &mut Router, cfg: &ServerConfig,
+                 entries: Vec<super::batcher::Pending<Entry>>,
+                 metrics: &Arc<Metrics>) -> Result<()> {
+    if entries.is_empty() {
+        return Ok(());
+    }
+    // route the whole flush to one variant (vLLM-style per-batch placement)
+    let seq_id = entries[0].item.req.id;
+    let vidx = router.route(seq_id, cfg.seq_len).unwrap_or(0);
+    let (program, vname) = {
+        let v = &router.variants[vidx];
+        (v.score_program.clone(), v.name.clone())
+    };
+    let prog = engine.program(&program)?;
+
+    let b = cfg.program_batch;
+    let t = cfg.seq_len;
+    let mut flat = vec![0i32; b * t];
+    for (i, e) in entries.iter().enumerate().take(b) {
+        let toks = &e.item.req.tokens;
+        let n = toks.len().min(t);
+        flat[i * t..i * t + n].copy_from_slice(&toks[..n]);
+        // left-fill short requests by repeating (keeps shapes static)
+        for j in n..t {
+            flat[i * t + j] = toks[j % n.max(1)];
+        }
+    }
+    let tokens = ParamValue::I32 { shape: vec![b, t], data: flat };
+    let t_exec = Instant::now();
+    let nll = prog.run_f32(&[tokens], &router.variants[vidx].weights)?;
+    metrics.observe("exec_us", t_exec.elapsed());
+    metrics.incr("batches", 1);
+    metrics.incr(&format!("variant_{vname}"), entries.len() as u64);
+
+    for (i, e) in entries.into_iter().enumerate() {
+        let resp = ScoreResponse {
+            id: e.item.req.id,
+            nll: nll.get(i).copied().unwrap_or(f32::NAN),
+            variant: vname.clone(),
+            latency: e.item.t_submit.elapsed(),
+        };
+        metrics.observe("request_us", resp.latency);
+        let _ = e.item.reply.send(resp);
+    }
+    router.release(vidx, seq_id);
+    Ok(())
+}

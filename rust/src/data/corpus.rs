@@ -1,0 +1,163 @@
+//! Token-stream corpora (from artifacts/corpora.ltw) and calibration
+//! activation sets (from artifacts/calib_<model>.ltw).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::io::read_ltw;
+use crate::Matrix;
+
+/// A named token stream with sequential batching (the eval protocol:
+/// non-overlapping seq_len windows, batch-major).
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub name: String,
+    pub tokens: Vec<i32>,
+}
+
+impl Corpus {
+    /// Load `{name}.{split}` from corpora.ltw.
+    pub fn load(path: impl AsRef<Path>, name: &str, split: &str)
+                -> Result<Self> {
+        let map = read_ltw(path)?;
+        let key = format!("{name}.{split}");
+        let t = map.get(&key).ok_or_else(|| anyhow!("no stream {key:?}"))?;
+        Ok(Corpus { name: key, tokens: t.as_i32()?.to_vec() })
+    }
+
+    /// Non-overlapping [batch × seq_len] windows; the tail that doesn't
+    /// fill a complete batch is dropped (matches the python evaluator).
+    pub fn batches(&self, batch: usize, seq_len: usize) -> Vec<Vec<i32>> {
+        let max_start = self.tokens.len().saturating_sub(seq_len + 1);
+        let mut windows = Vec::new();
+        let mut s = 0;
+        while s < max_start {
+            windows.push(self.tokens[s..s + seq_len].to_vec());
+            s += seq_len;
+        }
+        let n_full = windows.len() / batch;
+        (0..n_full)
+            .map(|b| {
+                let mut flat = Vec::with_capacity(batch * seq_len);
+                for w in &windows[b * batch..(b + 1) * batch] {
+                    flat.extend_from_slice(w);
+                }
+                flat
+            })
+            .collect()
+    }
+
+    /// The paper's calibration sampling: n random seq_len windows (seeded).
+    pub fn calibration(&self, n: usize, seq_len: usize, seed: u64)
+                       -> Vec<Vec<i32>> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let max_start = self.tokens.len() - seq_len - 1;
+        (0..n)
+            .map(|_| {
+                let s = rng.below(max_start);
+                self.tokens[s..s + seq_len].to_vec()
+            })
+            .collect()
+    }
+}
+
+/// Per-layer calibration activations: `layers.{i}.{attn_x|o_x|mlp_x}`
+/// as [d × l] column-token matrices (paper §5 protocol, collected by
+/// python/compile/train.py::collect_calibration).
+#[derive(Clone, Debug)]
+pub struct CalibSet {
+    layers: Vec<BTreeMap<String, Matrix>>,
+}
+
+impl CalibSet {
+    pub fn load(path: impl AsRef<Path>, n_layers: usize) -> Result<Self> {
+        let map = read_ltw(path)?;
+        Self::from_map(&map, "", n_layers)
+    }
+
+    /// Build from a tensor map with key prefix (e.g. "lm." for llava-mini).
+    pub fn from_map(map: &crate::model::io::TensorMap, prefix: &str,
+                    n_layers: usize) -> Result<Self> {
+        let mut layers = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            let mut layer = BTreeMap::new();
+            for kind in ["attn_x", "o_x", "mlp_x"] {
+                let key = format!("{prefix}layers.{i}.{kind}");
+                let t = map.get(&key)
+                    .ok_or_else(|| anyhow!("missing calibration {key:?}"))?;
+                layer.insert(kind.to_string(), t.to_matrix()?);
+            }
+            layers.push(layer);
+        }
+        Ok(CalibSet { layers })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn x(&self, layer: usize, kind: &str) -> &Matrix {
+        &self.layers[layer][kind]
+    }
+
+    /// Build directly from per-layer matrices (used by ablation resampling).
+    pub fn from_layers(layers: Vec<BTreeMap<String, Matrix>>) -> Self {
+        CalibSet { layers }
+    }
+
+    /// Synthetic calibration for tests: correlated Gaussian activations.
+    pub fn synthetic(n_layers: usize, d: usize, l: usize, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let sigma = crate::util::rng::decaying_covariance(d, 0.8);
+        let chol = crate::tensor::cholesky(&sigma).unwrap();
+        let layers = (0..n_layers)
+            .map(|_| {
+                let mut layer = BTreeMap::new();
+                for kind in ["attn_x", "o_x", "mlp_x"] {
+                    let g = rng.normal_matrix(d, l);
+                    layer.insert(kind.to_string(), chol.matmul(&g));
+                }
+                layer
+            })
+            .collect();
+        CalibSet { layers }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_are_disjoint_and_full() {
+        let c = Corpus { name: "t".into(), tokens: (0..1000).collect() };
+        let b = c.batches(2, 64);
+        assert!(!b.is_empty());
+        for flat in &b {
+            assert_eq!(flat.len(), 2 * 64);
+        }
+        // windows don't overlap: first elements stride by seq_len
+        assert_eq!(b[0][0], 0);
+        assert_eq!(b[0][64], 64);
+    }
+
+    #[test]
+    fn calibration_seeded() {
+        let c = Corpus { name: "t".into(), tokens: (0..5000).collect() };
+        let a = c.calibration(4, 32, 7);
+        let b = c.calibration(4, 32, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a[0].len(), 32);
+    }
+
+    #[test]
+    fn synthetic_calib_shapes() {
+        let cal = CalibSet::synthetic(2, 8, 40, 3);
+        assert_eq!(cal.n_layers(), 2);
+        assert_eq!(cal.x(0, "attn_x").rows(), 8);
+        assert_eq!(cal.x(1, "mlp_x").cols(), 40);
+    }
+}

@@ -1,0 +1,7 @@
+//! Corpus loading, batching, and a rust-side synthetic generator used by
+//! tests and benches (deterministic, independent of the python artifacts).
+
+pub mod corpus;
+pub mod synth;
+
+pub use corpus::{CalibSet, Corpus};

@@ -1,0 +1,77 @@
+//! Rust-side synthetic corpus generator — the same topic-switching bigram
+//! family as python/compile/data.py (different seeds; used by unit tests,
+//! benches, and the serving example's request generator so they don't
+//! depend on artifacts being present).
+
+use crate::util::rng::Rng;
+
+pub struct SynthCorpus {
+    pub vocab: usize,
+    tables: Vec<Vec<Vec<u32>>>, // [topic][token][branch]
+    cum: Vec<f64>,
+    switch: f64,
+}
+
+impl SynthCorpus {
+    pub fn new(vocab: usize, n_topics: usize, branch: usize, zipf_a: f64,
+               switch: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let tables = (0..n_topics)
+            .map(|_| {
+                (0..vocab)
+                    .map(|_| (0..branch)
+                        .map(|_| rng.below(vocab) as u32)
+                        .collect())
+                    .collect()
+            })
+            .collect();
+        let probs: Vec<f64> =
+            (1..=branch).map(|i| 1.0 / (i as f64).powf(zipf_a)).collect();
+        let total: f64 = probs.iter().sum();
+        let mut cum = Vec::with_capacity(branch);
+        let mut acc = 0.0;
+        for p in probs {
+            acc += p / total;
+            cum.push(acc);
+        }
+        SynthCorpus { vocab, tables, cum, switch }
+    }
+
+    pub fn generate(&self, n: usize, walk_seed: u64) -> Vec<i32> {
+        let mut rng = Rng::new(walk_seed);
+        let mut tok = rng.below(self.vocab);
+        let mut topic = 0usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            if rng.uniform() < self.switch {
+                topic = rng.below(self.tables.len());
+            }
+            let u = rng.uniform();
+            let slot = self.cum.iter().position(|&c| u < c)
+                .unwrap_or(self.cum.len() - 1);
+            tok = self.tables[topic][tok][slot] as usize;
+            out.push(tok as i32);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_range_and_deterministic() {
+        let c = SynthCorpus::new(128, 3, 6, 1.3, 0.02, 42);
+        let a = c.generate(500, 1);
+        let b = c.generate(500, 1);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&t| (0..128).contains(&t)));
+        // structure: bigram successors are limited -> repeated pairs common
+        let mut pairs = std::collections::HashSet::new();
+        for w in a.windows(2) {
+            pairs.insert((w[0], w[1]));
+        }
+        assert!(pairs.len() < 450, "should be far from iid ({})", pairs.len());
+    }
+}

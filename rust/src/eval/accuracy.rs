@@ -1,0 +1,98 @@
+//! Multimodal answer-reasoning accuracy with the paper's Table 4 breakdown:
+//! subjects NAT/SOC/LAN, context modalities TXT/IMG/NO, grades G1-6/G7-12.
+
+use anyhow::Result;
+
+use crate::model::io::TensorMap;
+use crate::model::Weights;
+use crate::runtime::{Engine, ParamValue};
+
+pub const SUBJECTS: [&str; 3] = ["NAT", "SOC", "LAN"];
+pub const MODALITIES: [&str; 3] = ["TXT", "IMG", "NO"];
+pub const GRADES: [&str; 2] = ["G1-6", "G7-12"];
+
+#[derive(Clone, Debug, Default)]
+pub struct MmBreakdown {
+    pub avg: f64,
+    pub by_subject: [f64; 3],
+    pub by_modality: [f64; 3],
+    pub by_grade: [f64; 2],
+    pub n: usize,
+}
+
+impl MmBreakdown {
+    /// Table 4 column order: NAT SOC LAN | TXT IMG NO | G1-6 G7-12 | Avg.
+    pub fn row(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(9);
+        v.extend_from_slice(&self.by_subject);
+        v.extend_from_slice(&self.by_modality);
+        v.extend_from_slice(&self.by_grade);
+        v.push(self.avg);
+        v
+    }
+}
+
+/// Evaluate llava-mini answer accuracy via the `mm_score_llava-mini`
+/// program. `data` is the mm_data.ltw map (images/tokens/labels/cats).
+pub fn evaluate_mm(engine: &Engine, program: &str, weights: &Weights,
+                   data: &TensorMap, batch: usize) -> Result<MmBreakdown> {
+    let images = data["images"].as_f32()?;
+    let tokens = data["tokens"].as_i32()?;
+    let labels = data["labels"].as_i32()?;
+    let cats = data["cats"].as_i32()?;
+    let n = data["labels"].shape()[0];
+    let text_len = data["tokens"].shape()[1];
+    let img_hw = 16 * 16;
+
+    let prog = engine.program(program)?;
+    let mut correct = vec![false; n];
+    let mut s = 0usize;
+    while s < n {
+        let e = (s + batch).min(n);
+        // pad the final batch to the fixed program batch size
+        let mut im = vec![0.0f32; batch * img_hw];
+        let mut tk = vec![0i32; batch * text_len];
+        im[..(e - s) * img_hw]
+            .copy_from_slice(&images[s * img_hw..e * img_hw]);
+        tk[..(e - s) * text_len]
+            .copy_from_slice(&tokens[s * text_len..e * text_len]);
+        let logits = prog.run_f32(
+            &[ParamValue::F32 { shape: vec![batch, 16, 16], data: im },
+              ParamValue::I32 { shape: vec![batch, text_len], data: tk }],
+            weights)?;
+        let n_ans = logits.len() / batch;
+        for (bi, item) in (s..e).enumerate() {
+            let row = &logits[bi * n_ans..(bi + 1) * n_ans];
+            let pred = row.iter().enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32).unwrap_or(-1);
+            correct[item] = pred == labels[item];
+        }
+        s = e;
+    }
+
+    let mut out = MmBreakdown { n, ..Default::default() };
+    let frac = |mask: &dyn Fn(usize) -> bool| -> f64 {
+        let (mut num, mut den) = (0usize, 0usize);
+        for i in 0..n {
+            if mask(i) {
+                den += 1;
+                if correct[i] {
+                    num += 1;
+                }
+            }
+        }
+        if den == 0 { 0.0 } else { num as f64 / den as f64 }
+    };
+    out.avg = frac(&|_| true);
+    for s_i in 0..3 {
+        out.by_subject[s_i] = frac(&|i| cats[i * 3] == s_i as i32);
+    }
+    for m_i in 0..3 {
+        out.by_modality[m_i] = frac(&|i| cats[i * 3 + 1] == m_i as i32);
+    }
+    for g_i in 0..2 {
+        out.by_grade[g_i] = frac(&|i| cats[i * 3 + 2] == g_i as i32);
+    }
+    Ok(out)
+}

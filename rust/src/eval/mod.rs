@@ -1,0 +1,13 @@
+//! Evaluators: perplexity over token corpora (Table 2 / Figs 4–5) and
+//! multimodal accuracy with the paper's category breakdown (Table 4 /
+//! Fig 6). Both drive the dense scoring programs through the PJRT engine,
+//! so *any* weight set — in particular rust-compressed ones — is evaluated
+//! through the exact same compiled computation.
+
+pub mod accuracy;
+pub mod generate;
+pub mod perplexity;
+
+pub use accuracy::{evaluate_mm, MmBreakdown};
+pub use generate::{generate, GenerateOpts};
+pub use perplexity::{perplexity, PplResult};

@@ -1,0 +1,58 @@
+//! Perplexity evaluation: exp(mean per-sequence NLL) over sequential
+//! non-overlapping windows — the protocol the python evaluator uses, so
+//! python and rust numbers are directly comparable (goldens.json).
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::model::Weights;
+use crate::runtime::{Engine, ParamValue};
+
+#[derive(Clone, Debug)]
+pub struct PplResult {
+    pub ppl: f64,
+    pub mean_nll: f64,
+    pub n_sequences: usize,
+}
+
+/// Evaluate perplexity of `weights` on `corpus` through the scoring
+/// program `score_<model>` (or a latent program name passed explicitly).
+pub fn perplexity(engine: &Engine, program: &str, weights: &Weights,
+                  corpus: &Corpus, batch: usize, seq_len: usize,
+                  max_batches: usize) -> Result<PplResult> {
+    let prog = engine.program(program)?;
+    let mut total = 0.0f64;
+    let mut n = 0usize;
+    for (i, flat) in corpus.batches(batch, seq_len).into_iter().enumerate() {
+        if i >= max_batches {
+            break;
+        }
+        let tokens = ParamValue::I32 { shape: vec![batch, seq_len],
+                                       data: flat };
+        let nll = prog.run_f32(&[tokens], weights)?;
+        total += nll.iter().map(|&v| v as f64).sum::<f64>();
+        n += nll.len();
+    }
+    let mean = total / n.max(1) as f64;
+    Ok(PplResult { ppl: mean.exp(), mean_nll: mean, n_sequences: n })
+}
+
+/// Perplexity via explicit token batches (used by the serving bench and
+/// tests that bypass Corpus).
+pub fn perplexity_batches(engine: &Engine, program: &str, weights: &Weights,
+                          batches: &[Vec<i32>], batch: usize,
+                          seq_len: usize) -> Result<PplResult> {
+    let prog = engine.program(program)?;
+    let mut total = 0.0f64;
+    let mut n = 0usize;
+    for flat in batches {
+        assert_eq!(flat.len(), batch * seq_len);
+        let tokens = ParamValue::I32 { shape: vec![batch, seq_len],
+                                       data: flat.clone() };
+        let nll = prog.run_f32(&[tokens], weights)?;
+        total += nll.iter().map(|&v| v as f64).sum::<f64>();
+        n += nll.len();
+    }
+    let mean = total / n.max(1) as f64;
+    Ok(PplResult { ppl: mean.exp(), mean_nll: mean, n_sequences: n })
+}

@@ -1,0 +1,24 @@
+//! LatentLLM — attention-aware joint tensor compression (MERL 2025),
+//! reproduced as a three-layer rust + JAX/Pallas stack.
+//!
+//! This crate is layer 3: the production coordinator. It re-implements the
+//! paper's full compression suite over its own dense linear-algebra
+//! substrate ([`tensor`]), loads AOT-compiled HLO programs through PJRT
+//! ([`runtime`]), evaluates perplexity / multimodal accuracy ([`eval`]),
+//! serves batched requests with an MLA-aware KV-cache accounting
+//! ([`coordinator`]), and regenerates every table and figure of the paper
+//! ([`reports`]). Python/JAX runs only at `make artifacts` time.
+
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod flops;
+pub mod model;
+pub mod reports;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use tensor::Matrix;

@@ -1,0 +1,456 @@
+//! `latentllm` — CLI launcher for the LatentLLM coordinator.
+//!
+//! Subcommands (hand-rolled arg parsing; clap is unavailable offline):
+//!   compress  — compress a model with a method/ratio, report ppl
+//!   eval      — evaluate perplexity of a (compressed) model
+//!   serve     — start the serving demo (dense + latent variants)
+//!   report    — regenerate paper tables/figures (all|table2|table3|...)
+//!   info      — print configs, artifact manifest summary
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::exit;
+
+use anyhow::{bail, Context, Result};
+
+use latentllm::compress::pipeline::{self, Method, TABLE2_METHODS};
+use latentllm::coordinator::{
+    kvcache::CacheKind, kvcache::KvCacheManager,
+    router::{ModelVariant, Policy, Router},
+    server::{ScoreRequest, Server, ServerConfig},
+};
+use latentllm::data::{CalibSet, Corpus};
+use latentllm::model::config::{mini_by_name, MINI_FAMILY, OPT_FAMILY};
+use latentllm::model::Weights;
+use latentllm::reports::{figs, tables};
+use latentllm::runtime::Engine;
+use latentllm::{eval, flops};
+
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn flag(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+    fn usize_flag(&self, name: &str, default: usize) -> usize {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn f64_flag(&self, name: &str, default: f64) -> f64 {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+const USAGE: &str = "\
+latentllm — attention-aware joint tensor compression (paper reproduction)
+
+USAGE:
+  latentllm info      [--artifacts DIR]
+  latentllm compress  --model opt-mini-m --method latentllm --ratio 0.3
+                      [--artifacts DIR] [--out FILE.ltw]
+  latentllm eval      --model opt-mini-m [--weights FILE.ltw]
+                      [--corpus synthwiki] [--artifacts DIR]
+  latentllm serve     [--requests N] [--policy cache_aware|prefer_latent|rr]
+                      [--config FILE.toml] [--artifacts DIR]
+  latentllm generate  --model opt-mini-m [--prompts 8] [--new 32]
+                      [--temperature 0.8] [--latent] [--artifacts DIR]
+  latentllm report    all|table2|table3|table4|fig4|fig5|fig7..fig16|ablations
+                      [--artifacts DIR] [--out DIR] [--max-batches N]
+
+Methods: plain asvd_hessian asvd_l1 asvd_l2 asvd_cov asvd_rootcov
+         latentllm latentllm_jointvo
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprint!("{USAGE}");
+        exit(2);
+    }
+    let cmd = argv[0].clone();
+    let args = parse_args(&argv[1..]);
+    let code = match run(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.flag("artifacts", "artifacts"));
+    match cmd {
+        "info" => info(&artifacts),
+        "compress" => compress_cmd(args, &artifacts),
+        "eval" => eval_cmd(args, &artifacts),
+        "serve" => serve_cmd(args, &artifacts),
+        "generate" => generate_cmd(args, &artifacts),
+        "report" => report_cmd(args, &artifacts),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn info(artifacts: &PathBuf) -> Result<()> {
+    println!("mini family:");
+    for c in MINI_FAMILY {
+        println!("  {:<12} d={} L={} h={} d_i={} linear={}",
+                 c.name, c.d, c.n_layers, c.n_heads, c.d_i,
+                 flops::human(c.linear_params() as f64));
+    }
+    println!("real OPT family (analytic, Table 5):");
+    for c in &OPT_FAMILY {
+        println!("  {:<10} d={} L={} params={}", c.name, c.d, c.n_layers,
+                 flops::human(c.n_params() as f64));
+    }
+    if artifacts.join("manifest.json").exists() {
+        let engine = Engine::new(artifacts)?;
+        let man = engine.manifest();
+        println!("artifacts at {}:", artifacts.display());
+        if let Some(models) = man.get("models").and_then(|m| m.as_obj()) {
+            for (name, info) in models {
+                let ppl = info.path(&["base_ppl", "synthwiki"])
+                    .and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+                println!("  {name}: base ppl(synthwiki) = {ppl:.2}");
+            }
+        }
+    } else {
+        println!("(no artifacts at {} — run `make artifacts`)",
+                 artifacts.display());
+    }
+    Ok(())
+}
+
+fn load_model(artifacts: &PathBuf, model: &str)
+              -> Result<(&'static latentllm::model::MiniConfig, Weights,
+                         CalibSet)> {
+    let cfg = mini_by_name(model)
+        .with_context(|| format!("unknown model {model:?}"))?;
+    let w = Weights::load(artifacts.join(format!("model_{model}.ltw")))?;
+    let cal = CalibSet::load(artifacts.join(format!("calib_{model}.ltw")),
+                             cfg.n_layers)?;
+    Ok((cfg, w, cal))
+}
+
+fn compress_cmd(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let model = args.flag("model", "opt-mini-m");
+    let method = Method::from_name(&args.flag("method", "latentllm"))
+        .context("unknown method")?;
+    let ratio = args.f64_flag("ratio", 0.3);
+    let (cfg, w, cal) = load_model(artifacts, &model)?;
+    let t0 = std::time::Instant::now();
+    let (nw, rep) = pipeline::compress_model(cfg, &w, &cal, method, ratio,
+                                             args.usize_flag("qk-iters", 8),
+                                             args.usize_flag("ud-iters", 4))?;
+    println!("compressed {model} with {} @ {:.0}% in {:.2}s",
+             method.label(), ratio * 100.0, t0.elapsed().as_secs_f64());
+    println!("  linear params {} -> {} (achieved ratio {:.3})",
+             flops::human(rep.orig_linear_params as f64),
+             flops::human(rep.new_linear_params as f64),
+             rep.achieved_ratio());
+    if let Some(out) = args.flags.get("out") {
+        latentllm::model::io::write_ltw(out, nw.map())?;
+        println!("  wrote {out}");
+    }
+    // quick ppl check through the PJRT scoring program
+    let engine = Engine::new(artifacts)?;
+    let corpus = Corpus::load(artifacts.join("corpora.ltw"), "synthwiki",
+                              "test")?;
+    let r = eval::perplexity(&engine, &format!("score_{model}"), &nw,
+                             &corpus, 8, 128, 12)?;
+    println!("  ppl(synthwiki) = {:.2}", r.ppl);
+    Ok(())
+}
+
+fn eval_cmd(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let model = args.flag("model", "opt-mini-m");
+    let corpus_name = args.flag("corpus", "synthwiki");
+    let (_, base_w, _) = load_model(artifacts, &model)?;
+    let w = match args.flags.get("weights") {
+        Some(p) => Weights::load(p)?,
+        None => base_w,
+    };
+    let engine = Engine::new(artifacts)?;
+    let corpus = Corpus::load(artifacts.join("corpora.ltw"), &corpus_name,
+                              "test")?;
+    let r = eval::perplexity(&engine, &format!("score_{model}"), &w,
+                             &corpus, 8, 128,
+                             args.usize_flag("max-batches", 24))?;
+    println!("ppl({corpus_name}) = {:.3}  (mean NLL {:.4}, {} sequences)",
+             r.ppl, r.mean_nll, r.n_sequences);
+    Ok(())
+}
+
+fn generate_cmd(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    use latentllm::eval::generate::{generate, GenerateOpts};
+    let model = args.flag("model", "opt-mini-m");
+    let n_prompts = args.usize_flag("prompts", 8).min(8);
+    let engine = Engine::new(artifacts)?;
+    let vocab = engine.manifest().get("vocab")
+        .and_then(|v| v.as_usize()).unwrap_or(512);
+    let corpus = Corpus::load(artifacts.join("corpora.ltw"), "synthwiki",
+                              "test")?;
+    let prompts: Vec<Vec<i32>> = corpus.calibration(n_prompts, 16, 7);
+    let opts = GenerateOpts {
+        max_new: args.usize_flag("new", 32),
+        temperature: args.f64_flag("temperature", 0.0),
+        seed: 11,
+    };
+    let (program, weights) = if args.flags.contains_key("latent") {
+        let tag = engine.manifest().path(&["latent_demo", "tag"])
+            .and_then(|v| v.as_str()).context("no latent demo artifact")?;
+        (format!("latent_step_{tag}"),
+         Weights::load(artifacts.join(format!("latent_model_{tag}.ltw")))?)
+    } else {
+        (format!("step_{model}"),
+         Weights::load(artifacts.join(format!("model_{model}.ltw")))?)
+    };
+    let res = generate(&engine, &program, &weights, &prompts, 8, 128,
+                       vocab, &opts)?;
+    for (i, s) in res.sequences.iter().enumerate() {
+        let tail: Vec<i32> = s[s.len().saturating_sub(opts.max_new)..]
+            .to_vec();
+        println!("seq {i}: ...{tail:?}");
+    }
+    println!("generated {} tokens in {:.2}s — {:.1} tok/s (program {})",
+             res.tokens_generated, res.seconds, res.tokens_per_sec,
+             program);
+    Ok(())
+}
+
+fn serve_cmd(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let file_cfg = match args.flags.get("config") {
+        Some(p) => latentllm::config::Config::load(p)?,
+        None => latentllm::config::Config::default(),
+    };
+    let model = args.flag("model", &file_cfg.serve.model);
+    let n_requests = args.usize_flag("requests", 64);
+    let policy = match args.flag("policy", "").as_str() {
+        "rr" | "round_robin" => Policy::RoundRobin,
+        "prefer_latent" => Policy::PreferLatent,
+        "cache_aware" => Policy::CacheAware,
+        _ => file_cfg.serve.policy,
+    };
+    let (cfg, weights, cal) = load_model(artifacts, &model)?;
+    // latent variant: compress in-process at the configured ratio
+    let ratio = file_cfg.serve.latent_ratio;
+    let (latent_w, rep) = pipeline::compress_model(
+        cfg, &weights, &cal, Method::LatentLlm, ratio, 4, 2)?;
+    println!("built latent variant (achieved ratio {:.3})",
+             rep.achieved_ratio());
+    let budget = file_cfg.serve.kv_budget_bytes;
+    let r_lat = latentllm::compress::rank::local_rank(cfg.d, cfg.d,
+                                                      1.0 - ratio, true);
+    let variants = vec![
+        ModelVariant {
+            name: "dense".into(),
+            score_program: format!("score_{model}"),
+            weights,
+            cache: KvCacheManager::new(CacheKind::Dense { d: cfg.d },
+                                       cfg.n_layers, 2, budget),
+        },
+        ModelVariant {
+            name: "latent30".into(),
+            score_program: format!("score_{model}"),
+            weights: latent_w,
+            cache: KvCacheManager::new(
+                CacheKind::Latent { rk: r_lat, rv: r_lat },
+                cfg.n_layers, 2, budget),
+        },
+    ];
+    let router = Router::new(variants, policy);
+    let server = Server::start(artifacts.clone(), router, ServerConfig {
+        batcher: file_cfg.serve.batcher,
+        policy,
+        program_batch: file_cfg.serve.program_batch,
+        seq_len: file_cfg.serve.seq_len,
+    });
+    let corpus = Corpus::load(artifacts.join("corpora.ltw"), "synthwiki",
+                              "test")?;
+    let reqs = corpus.calibration(n_requests, 128, 99);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = reqs.into_iter().enumerate()
+        .map(|(i, tokens)| server.submit(ScoreRequest {
+            id: i as u64, tokens,
+        }))
+        .collect();
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv().is_ok() {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    let metrics = server.shutdown();
+    println!("served {ok}/{n_requests} in {:.2}s ({:.1} req/s)",
+             dt.as_secs_f64(), ok as f64 / dt.as_secs_f64());
+    print!("{}", metrics.summary());
+    Ok(())
+}
+
+fn report_cmd(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let what = args.positional.first().map(String::as_str).unwrap_or("all");
+    let out_dir = PathBuf::from(args.flag("out", "reports"));
+    std::fs::create_dir_all(&out_dir)?;
+    let save = |name: &str, v: &latentllm::util::json::Value| -> Result<()> {
+        let p = out_dir.join(format!("{name}.json"));
+        std::fs::write(&p, v.to_string_pretty())?;
+        println!("wrote {}", p.display());
+        Ok(())
+    };
+
+    // artifact-free figures
+    let d = args.usize_flag("dim", 48);
+    match what {
+        "fig7" => {
+            let v = figs::fig7(d, 1);
+            println!("{}", figs::render(&v));
+            return save("fig7", &v);
+        }
+        "fig8" => {
+            let v = figs::fig8(d, 2);
+            println!("{}", figs::render(&v));
+            return save("fig8", &v);
+        }
+        "fig9" => {
+            let v = figs::fig9(d, 4, 3);
+            println!("{}", figs::render(&v));
+            return save("fig9", &v);
+        }
+        "fig10" => {
+            let v = figs::fig10(d, 4, 4);
+            println!("{}", figs::render(&v));
+            return save("fig10", &v);
+        }
+        "fig11" | "fig16" => {
+            let (f11, f16) = figs::fig11_16(d, 5);
+            println!("{}", figs::render(&f11));
+            println!("{}", figs::render(&f16));
+            save("fig11", &f11)?;
+            return save("fig16", &f16);
+        }
+        "fig12" => {
+            let v = figs::fig12(args.usize_flag("dim", 96), 8, 6);
+            println!("{}", figs::render(&v));
+            return save("fig12", &v);
+        }
+        "fig13" => {
+            let v = figs::fig13(d, 7);
+            println!("{}", figs::render(&v));
+            return save("fig13", &v);
+        }
+        "fig14" => {
+            let v = figs::fig14(d, 8);
+            println!("{}", figs::render(&v));
+            return save("fig14", &v);
+        }
+        "fig15" => {
+            let v = figs::fig15(d, 9);
+            println!("{}", figs::render(&v));
+            return save("fig15", &v);
+        }
+        "table3" => {
+            return save("table3", &tables::table3());
+        }
+        _ => {}
+    }
+
+    // artifact-dependent reports
+    let engine = Engine::new(artifacts)?;
+    let ctx = tables::TableCtx {
+        engine: &engine,
+        artifacts: artifacts.clone(),
+        max_batches: args.usize_flag("max-batches", 12),
+        qk_iters: args.usize_flag("qk-iters", 8),
+        ud_iters: args.usize_flag("ud-iters", 4),
+    };
+    match what {
+        "all" => {
+            tables::run_all(&ctx, &out_dir)?;
+            // plus the artifact-free figure suite
+            for (name, v) in [("fig7", figs::fig7(d, 1)),
+                              ("fig8", figs::fig8(d, 2)),
+                              ("fig9", figs::fig9(d, 4, 3)),
+                              ("fig10", figs::fig10(d, 4, 4)),
+                              ("fig13", figs::fig13(d, 7)),
+                              ("fig14", figs::fig14(d, 8)),
+                              ("fig15", figs::fig15(d, 9)),
+                              ("fig12", figs::fig12(96, 8, 6))] {
+                println!("{}", figs::render(&v));
+                save(name, &v)?;
+            }
+            let (f11, f16) = figs::fig11_16(d, 5);
+            println!("{}", figs::render(&f11));
+            println!("{}", figs::render(&f16));
+            save("fig11", &f11)?;
+            save("fig16", &f16)?;
+            Ok(())
+        }
+        "table2" => {
+            let v = tables::table2(&ctx,
+                                   &["opt-mini-s", "opt-mini-m",
+                                     "opt-mini-l"],
+                                   &[0.1, 0.2, 0.3, 0.4],
+                                   &TABLE2_METHODS)?;
+            save("table2", &v)
+        }
+        "table4" => {
+            let ratios: Vec<f64> = args.flag("ratios",
+                                             "0.3,0.6,0.8,0.9,0.95")
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect();
+            let v = tables::table4(&ctx, &ratios,
+                                   &[Method::Plain, Method::AsvdRootCov,
+                                     Method::LatentLlm])?;
+            save("table4", &v)
+        }
+        "fig4" => {
+            let v = tables::fig4(&ctx, &["opt-mini-m"],
+                                 &[Method::AsvdRootCov,
+                                   Method::LatentLlm])?;
+            save("fig4", &v)
+        }
+        "fig5" => {
+            let v = tables::fig5(&ctx, &["opt-mini-s", "opt-mini-m",
+                                         "opt-mini-l"])?;
+            save("fig5", &v)
+        }
+        "ablations" => {
+            let v = latentllm::reports::ablations::run(
+                &ctx, &args.flag("model", "opt-mini-s"),
+                args.f64_flag("ratio", 0.3))?;
+            save("ablations", &v)
+        }
+        other => bail!("unknown report {other:?}"),
+    }
+}

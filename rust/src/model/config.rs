@@ -1,0 +1,182 @@
+//! Model architecture configs: the trained opt-mini family plus the real
+//! model rows of the paper's Tables 5–7 (used analytically by [`crate::flops`]
+//! to regenerate Table 3 exactly).
+
+/// OPT-style transformer config (pre-LN, ReLU MLP, learned pos-emb, biases).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MiniConfig {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_i: usize,
+    pub max_len: usize,
+}
+
+impl MiniConfig {
+    pub fn d_h(&self) -> usize {
+        self.d / self.n_heads
+    }
+
+    /// Deterministic parameter order — must match python configs.param_names().
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = vec!["tok_emb".to_string(), "pos_emb".to_string()];
+        for i in 0..self.n_layers {
+            let p = format!("layers.{i}.");
+            for s in ["ln1.g", "ln1.b", "attn.wq", "attn.bq", "attn.wk",
+                      "attn.bk", "attn.wv", "attn.bv", "attn.wo", "attn.bo",
+                      "ln2.g", "ln2.b", "mlp.wu", "mlp.bu", "mlp.wd",
+                      "mlp.bd"] {
+                names.push(format!("{p}{s}"));
+            }
+        }
+        names.push("lnf.g".to_string());
+        names.push("lnf.b".to_string());
+        names
+    }
+
+    /// Linear (compressible) parameter count per layer: 4d² + 2·d·d_i.
+    pub fn linear_params_per_layer(&self) -> usize {
+        4 * self.d * self.d + 2 * self.d * self.d_i
+    }
+
+    pub fn linear_params(&self) -> usize {
+        self.n_layers * self.linear_params_per_layer()
+    }
+}
+
+pub const OPT_MINI_S: MiniConfig = MiniConfig {
+    name: "opt-mini-s", vocab: 512, d: 96, n_layers: 2, n_heads: 4,
+    d_i: 384, max_len: 128,
+};
+pub const OPT_MINI_M: MiniConfig = MiniConfig {
+    name: "opt-mini-m", vocab: 512, d: 128, n_layers: 4, n_heads: 4,
+    d_i: 512, max_len: 128,
+};
+pub const OPT_MINI_L: MiniConfig = MiniConfig {
+    name: "opt-mini-l", vocab: 512, d: 192, n_layers: 6, n_heads: 6,
+    d_i: 768, max_len: 128,
+};
+
+pub const MINI_FAMILY: [&MiniConfig; 3] =
+    [&OPT_MINI_S, &OPT_MINI_M, &OPT_MINI_L];
+
+pub fn mini_by_name(name: &str) -> Option<&'static MiniConfig> {
+    MINI_FAMILY.iter().find(|c| c.name == name).copied()
+}
+
+/// Real published-model config (paper Tables 5–7) for analytic accounting.
+#[derive(Clone, Debug)]
+pub struct RealConfig {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_h: usize,
+    pub d_i: usize,
+    pub max_pos: usize,
+    /// separate (untied) LM head
+    pub untied_head: bool,
+    /// learned positional embeddings contribute params (OPT: yes)
+    pub learned_pos: bool,
+}
+
+/// OPT family (paper Table 5). vocab 50272, learned pos-emb (max 2048).
+pub const OPT_FAMILY: [RealConfig; 9] = [
+    RealConfig { name: "OPT-125M", vocab: 50272, d: 768, n_layers: 12,
+        n_heads: 12, n_kv_heads: 12, d_h: 64, d_i: 3072, max_pos: 2048,
+        untied_head: false, learned_pos: true },
+    RealConfig { name: "OPT-350M", vocab: 50272, d: 1024, n_layers: 24,
+        n_heads: 16, n_kv_heads: 16, d_h: 64, d_i: 4096, max_pos: 2048,
+        untied_head: false, learned_pos: true },
+    RealConfig { name: "OPT-1.3B", vocab: 50272, d: 2048, n_layers: 24,
+        n_heads: 32, n_kv_heads: 32, d_h: 64, d_i: 8192, max_pos: 2048,
+        untied_head: false, learned_pos: true },
+    RealConfig { name: "OPT-2.7B", vocab: 50272, d: 2560, n_layers: 32,
+        n_heads: 32, n_kv_heads: 32, d_h: 80, d_i: 10240, max_pos: 2048,
+        untied_head: false, learned_pos: true },
+    RealConfig { name: "OPT-6.7B", vocab: 50272, d: 4096, n_layers: 32,
+        n_heads: 32, n_kv_heads: 32, d_h: 128, d_i: 16384, max_pos: 2048,
+        untied_head: false, learned_pos: true },
+    RealConfig { name: "OPT-13B", vocab: 50272, d: 5120, n_layers: 40,
+        n_heads: 40, n_kv_heads: 40, d_h: 128, d_i: 20480, max_pos: 2048,
+        untied_head: false, learned_pos: true },
+    RealConfig { name: "OPT-30B", vocab: 50272, d: 7168, n_layers: 48,
+        n_heads: 56, n_kv_heads: 56, d_h: 128, d_i: 28672, max_pos: 2048,
+        untied_head: false, learned_pos: true },
+    RealConfig { name: "OPT-66B", vocab: 50272, d: 9216, n_layers: 64,
+        n_heads: 72, n_kv_heads: 72, d_h: 128, d_i: 36864, max_pos: 2048,
+        untied_head: false, learned_pos: true },
+    RealConfig { name: "OPT-175B", vocab: 50272, d: 12288, n_layers: 96,
+        n_heads: 96, n_kv_heads: 96, d_h: 128, d_i: 49152, max_pos: 2048,
+        untied_head: false, learned_pos: true },
+];
+
+pub fn opt_by_name(name: &str) -> Option<&'static RealConfig> {
+    OPT_FAMILY.iter().find(|c| c.name == name)
+}
+
+impl RealConfig {
+    /// Total parameters (embeddings + linears + LN/bias terms).
+    pub fn n_params(&self) -> usize {
+        let d = self.d;
+        let attn = d * self.d_h * self.n_heads * 2           // q, o
+            + d * self.d_h * self.n_kv_heads * 2             // k, v
+            + 4 * d;                                         // qkvo biases
+        let mlp = 2 * d * self.d_i + self.d_i + d;
+        let ln = 2 * (2 * d);
+        let per_layer = attn + mlp + ln;
+        let emb = self.vocab * d
+            + if self.learned_pos { (self.max_pos + 2) * d } else { 0 }
+            + if self.untied_head { self.vocab * d } else { 0 };
+        emb + self.n_layers * per_layer + 2 * d
+    }
+
+    /// Compressible linear weights only.
+    pub fn linear_params(&self) -> usize {
+        let d = self.d;
+        self.n_layers
+            * (d * self.d_h * (2 * self.n_heads + 2 * self.n_kv_heads)
+                + 2 * d * self.d_i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_names_match_python_convention() {
+        let names = OPT_MINI_S.param_names();
+        assert_eq!(names[0], "tok_emb");
+        assert_eq!(names[2], "layers.0.ln1.g");
+        assert_eq!(names.last().unwrap(), "lnf.b");
+        assert_eq!(names.len(), 2 + 2 * 16 + 2);
+    }
+
+    /// Paper Table 3 anchor: OPT-6.7B has 6.66B params.
+    #[test]
+    fn opt_6_7b_param_count() {
+        let c = opt_by_name("OPT-6.7B").unwrap();
+        let n = c.n_params() as f64 / 1e9;
+        assert!((n - 6.66).abs() < 0.03, "got {n}B");
+    }
+
+    #[test]
+    fn opt_125m_param_count() {
+        let c = opt_by_name("OPT-125M").unwrap();
+        let n = c.n_params() as f64 / 1e6;
+        assert!((n - 125.0).abs() < 2.0, "got {n}M");
+    }
+
+    #[test]
+    fn linear_fraction_dominates() {
+        for c in OPT_FAMILY.iter().skip(2) {
+            let frac = c.linear_params() as f64 / c.n_params() as f64;
+            assert!(frac > 0.85, "{}: {frac}", c.name);
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! LTW1 interchange reader/writer (DESIGN.md §5; python side:
+//! python/compile/ltw.py). Little-endian: magic "LTW1", u32 count, then per
+//! tensor: u16 name-len, name, u8 dtype (0=f32, 1=i32), u8 ndim, u32 dims…,
+//! raw data.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// 2-D f32 tensor → f64 Matrix.
+    pub fn to_matrix(&self) -> Result<crate::Matrix> {
+        let shape = self.shape();
+        let data = self.as_f32()?;
+        match shape.len() {
+            2 => Ok(crate::Matrix::from_f32(shape[0], shape[1], data)),
+            1 => Ok(crate::Matrix::from_f32(1, shape[0], data)),
+            _ => bail!("to_matrix needs 1-D/2-D, got {shape:?}"),
+        }
+    }
+}
+
+pub type TensorMap = BTreeMap<String, Tensor>;
+
+const MAGIC: &[u8; 4] = b"LTW1";
+
+pub fn read_ltw(path: impl AsRef<Path>) -> Result<TensorMap> {
+    let path = path.as_ref();
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    parse_ltw(&buf).with_context(|| format!("parse {}", path.display()))
+}
+
+pub fn parse_ltw(buf: &[u8]) -> Result<TensorMap> {
+    if buf.len() < 8 || &buf[..4] != MAGIC {
+        bail!("bad LTW1 magic");
+    }
+    let n = u32::from_le_bytes(buf[4..8].try_into()?) as usize;
+    let mut off = 8;
+    let mut out = TensorMap::new();
+    for _ in 0..n {
+        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+            if *off + n > buf.len() {
+                bail!("truncated LTW file");
+            }
+            let s = &buf[*off..*off + n];
+            *off += n;
+            Ok(s)
+        };
+        let name_len =
+            u16::from_le_bytes(take(&mut off, 2)?.try_into()?) as usize;
+        let name = std::str::from_utf8(take(&mut off, name_len)?)?.to_string();
+        let dtype = take(&mut off, 1)?[0];
+        let ndim = take(&mut off, 1)?[0] as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u32::from_le_bytes(take(&mut off, 4)?.try_into()?)
+                as usize);
+        }
+        let count: usize = shape.iter().product();
+        let raw = take(&mut off, count * 4)?;
+        let t = match dtype {
+            0 => Tensor::F32 {
+                shape,
+                data: raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            },
+            1 => Tensor::I32 {
+                shape,
+                data: raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            },
+            d => bail!("unknown dtype code {d}"),
+        };
+        out.insert(name, t);
+    }
+    Ok(out)
+}
+
+pub fn write_ltw(path: impl AsRef<Path>, tensors: &TensorMap) -> Result<()> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        buf.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+        buf.extend_from_slice(nb);
+        match t {
+            Tensor::F32 { shape, data } => {
+                buf.push(0);
+                buf.push(shape.len() as u8);
+                for &d in shape {
+                    buf.extend_from_slice(&(d as u32).to_le_bytes());
+                }
+                for v in data {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Tensor::I32 { shape, data } => {
+                buf.push(1);
+                buf.push(shape.len() as u8);
+                for &d in shape {
+                    buf.extend_from_slice(&(d as u32).to_le_bytes());
+                }
+                for v in data {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+    let path = path.as_ref();
+    std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?
+        .write_all(&buf)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut m = TensorMap::new();
+        m.insert("a.w".into(), Tensor::F32 {
+            shape: vec![2, 3],
+            data: vec![1.0, -2.5, 3.0, 0.0, 1e-9, 7.25],
+        });
+        m.insert("tokens".into(), Tensor::I32 {
+            shape: vec![4],
+            data: vec![0, 1, -5, 511],
+        });
+        let dir = std::env::temp_dir().join("ltw_test_roundtrip.ltw");
+        write_ltw(&dir, &m).unwrap();
+        let back = read_ltw(&dir).unwrap();
+        assert_eq!(m, back);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(parse_ltw(b"NOPE\x00\x00\x00\x00").is_err());
+        let mut m = TensorMap::new();
+        m.insert("x".into(), Tensor::F32 { shape: vec![8], data: vec![0.0; 8] });
+        let p = std::env::temp_dir().join("ltw_test_trunc.ltw");
+        write_ltw(&p, &m).unwrap();
+        let buf = std::fs::read(&p).unwrap();
+        assert!(parse_ltw(&buf[..buf.len() - 5]).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn matrix_view() {
+        let t = Tensor::F32 { shape: vec![2, 2], data: vec![1., 2., 3., 4.] };
+        let m = t.to_matrix().unwrap();
+        assert_eq!(m[(1, 0)], 3.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Model configurations, weight containers, and the LTW interchange IO.
+
+pub mod config;
+pub mod io;
+pub mod weights;
+
+pub use config::{MiniConfig, RealConfig, MINI_FAMILY, OPT_FAMILY};
+pub use io::{read_ltw, write_ltw, Tensor};
+pub use weights::Weights;

@@ -1,0 +1,108 @@
+//! Weight container: a named tensor map with matrix/bias accessors and the
+//! ordered flattening used to feed the PJRT programs (parameter order comes
+//! from the artifact manifest and must match python's `param_names`).
+
+use anyhow::{anyhow, Context, Result};
+
+use super::io::{Tensor, TensorMap};
+use crate::Matrix;
+
+#[derive(Clone, Debug)]
+pub struct Weights {
+    map: TensorMap,
+}
+
+impl Weights {
+    pub fn new(map: TensorMap) -> Self {
+        Weights { map }
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(Weights { map: super::io::read_ltw(path)? })
+    }
+
+    pub fn map(&self) -> &TensorMap {
+        &self.map
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).ok_or_else(|| anyhow!("missing tensor {name:?}"))
+    }
+
+    /// 2-D weight as f64 Matrix (paper convention W[out, in]).
+    pub fn matrix(&self, name: &str) -> Result<Matrix> {
+        self.tensor(name)?.to_matrix().context(name.to_string())
+    }
+
+    /// 1-D bias as f64 vector.
+    pub fn bias(&self, name: &str) -> Result<Vec<f64>> {
+        Ok(self.tensor(name)?.as_f32()?.iter().map(|&v| v as f64).collect())
+    }
+
+    /// Replace a 2-D weight (keeps f32 storage).
+    pub fn set_matrix(&mut self, name: &str, m: &Matrix) {
+        self.map.insert(name.to_string(), Tensor::F32 {
+            shape: vec![m.rows(), m.cols()],
+            data: m.to_f32(),
+        });
+    }
+
+    pub fn set_bias(&mut self, name: &str, b: &[f64]) {
+        self.map.insert(name.to_string(), Tensor::F32 {
+            shape: vec![b.len()],
+            data: b.iter().map(|&v| v as f32).collect(),
+        });
+    }
+
+    pub fn set_tensor(&mut self, name: &str, t: Tensor) {
+        self.map.insert(name.to_string(), t);
+    }
+
+    /// Total element count.
+    pub fn n_elements(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Flatten in the given order (for PJRT program parameters).
+    pub fn ordered<'a>(&'a self, names: &[String]) -> Result<Vec<&'a Tensor>> {
+        names.iter().map(|n| self.tensor(n)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Weights {
+        let mut m = TensorMap::new();
+        m.insert("w".into(), Tensor::F32 {
+            shape: vec![2, 2], data: vec![1., 2., 3., 4.],
+        });
+        m.insert("b".into(), Tensor::F32 { shape: vec![2], data: vec![5., 6.] });
+        Weights::new(m)
+    }
+
+    #[test]
+    fn accessors() {
+        let w = sample();
+        assert_eq!(w.matrix("w").unwrap()[(0, 1)], 2.0);
+        assert_eq!(w.bias("b").unwrap(), vec![5.0, 6.0]);
+        assert!(w.matrix("nope").is_err());
+        assert_eq!(w.n_elements(), 6);
+    }
+
+    #[test]
+    fn set_and_order() {
+        let mut w = sample();
+        w.set_matrix("w", &Matrix::eye(2));
+        assert_eq!(w.matrix("w").unwrap()[(0, 0)], 1.0);
+        assert_eq!(w.matrix("w").unwrap()[(0, 1)], 0.0);
+        let ord = w.ordered(&["b".into(), "w".into()]).unwrap();
+        assert_eq!(ord[0].shape(), &[2]);
+        assert_eq!(ord[1].shape(), &[2, 2]);
+    }
+}

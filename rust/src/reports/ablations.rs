@@ -1,0 +1,145 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!  * junction matrix: block identity vs dense factors at the SAME rank
+//!    (identical loss, r² fewer params — §3.3) and at the same PARAMS
+//!    (block identity buys a higher rank → lower ppl);
+//!  * joint-VO vs split-V/O (paper Remark 11);
+//!  * Algorithm 1 iteration count (paper used 8 for QK, 4 for UD);
+//!  * calibration sample budget (paper: 64 × 2048 tokens).
+
+use anyhow::Result;
+
+use super::tables::TableCtx;
+use crate::compress::asvd::{self, AsvdOpts};
+use crate::compress::joint_qk::{self, JointQkOpts};
+use crate::compress::junction::Junction;
+use crate::compress::pipeline::{compress_model, Method};
+use crate::compress::precond::Precond;
+use crate::data::{CalibSet, Corpus};
+use crate::eval;
+use crate::model::config::mini_by_name;
+use crate::model::Weights;
+use crate::util::json::Value;
+
+pub fn run(ctx: &TableCtx, model: &str, ratio: f64) -> Result<Value> {
+    let cfg = mini_by_name(model).expect("model");
+    let weights = Weights::load(ctx.artifacts.join(
+        format!("model_{model}.ltw")))?;
+    let calib = CalibSet::load(ctx.artifacts.join(
+        format!("calib_{model}.ltw")), cfg.n_layers)?;
+    let corpus = Corpus::load(ctx.artifacts.join("corpora.ltw"),
+                              "synthwiki", "test")?;
+    let program = format!("score_{model}");
+    let ppl_of = |w: &Weights| -> Result<f64> {
+        Ok(eval::perplexity(ctx.engine, &program, w, &corpus, 8, 128,
+                            ctx.max_batches)?.ppl)
+    };
+    let mut out = Vec::new();
+
+    // ---- junction ablation (single layer, same rank): identical loss,
+    // fewer params — the §3.3 claim in isolation.
+    {
+        let w = weights.matrix("layers.0.attn.wq")?;
+        let x = calib.x(0, "attn_x");
+        let r = cfg.d / 2;
+        let left = asvd::compress(&w, r, &AsvdOpts {
+            kind: Precond::RootCov, junction: Junction::Left,
+            x: Some(x), ..Default::default() });
+        let blockid = asvd::compress(&w, r, &AsvdOpts {
+            kind: Precond::RootCov, junction: Junction::BlockId,
+            x: Some(x), ..Default::default() });
+        let rel = (left.loss - blockid.loss).abs()
+            / left.loss.max(1e-12);
+        out.push(Value::obj(vec![
+            ("ablation", "junction_same_rank".into()),
+            ("rank", r.into()),
+            ("loss_dense", left.loss.into()),
+            ("loss_blockid", blockid.loss.into()),
+            ("loss_rel_diff", rel.into()),
+            ("params_dense", left.params.into()),
+            ("params_blockid", blockid.params.into()),
+        ]));
+        println!("junction @rank {r}: identical loss (rel diff {rel:.2e}), \
+                  params {} -> {}", left.params, blockid.params);
+    }
+
+    // ---- joint-VO vs split-V/O (Remark 11)
+    for (name, method) in [("split_vo", Method::LatentLlm),
+                           ("joint_vo", Method::LatentLlmJointVo)] {
+        let (nw, rep) = compress_model(cfg, &weights, &calib, method, ratio,
+                                       ctx.qk_iters, ctx.ud_iters)?;
+        let ppl = ppl_of(&nw)?;
+        println!("{name}: ppl {ppl:.3} (achieved {:.3})",
+                 rep.achieved_ratio());
+        out.push(Value::obj(vec![
+            ("ablation", "vo_strategy".into()),
+            ("variant", name.into()),
+            ("ppl", ppl.into()),
+            ("achieved_ratio", rep.achieved_ratio().into()),
+        ]));
+    }
+
+    // ---- Algorithm 1 iteration sweep (attention-map loss + ppl)
+    for iters in [0usize, 1, 2, 4, 8] {
+        let wq = weights.matrix("layers.0.attn.wq")?;
+        let wk = weights.matrix("layers.0.attn.wk")?;
+        let x = calib.x(0, "attn_x");
+        let r = 3 * cfg.d / 4;
+        let jq = joint_qk::compress(&wq, &wk, cfg.n_heads, cfg.d_h(), r, r,
+                                    &JointQkOpts { kind: Precond::RootCov,
+                                                   n_iter: iters.max(1),
+                                                   x: Some(x),
+                                                   ..Default::default() });
+        let loss = if iters == 0 { jq.losses[0] }
+                   else { *jq.losses.last().unwrap() };
+        let (nw, _) = compress_model(cfg, &weights, &calib,
+                                     Method::LatentLlm, ratio,
+                                     iters.max(1), ctx.ud_iters)?;
+        let ppl = ppl_of(&nw)?;
+        println!("qk_iters={iters}: attn-loss {loss:.4e}  ppl {ppl:.3}");
+        out.push(Value::obj(vec![
+            ("ablation", "qk_iters".into()),
+            ("iters", iters.into()),
+            ("attn_loss", loss.into()),
+            ("ppl", ppl.into()),
+        ]));
+    }
+
+    // ---- calibration budget sweep
+    for cols in [128usize, 384, 1024] {
+        let cal_small = subsample(&calib, cfg.n_layers, cols);
+        let (nw, _) = compress_model(cfg, &weights, &cal_small,
+                                     Method::LatentLlm, ratio,
+                                     ctx.qk_iters, ctx.ud_iters)?;
+        let ppl = ppl_of(&nw)?;
+        println!("calib_cols={cols}: ppl {ppl:.3}");
+        out.push(Value::obj(vec![
+            ("ablation", "calib_budget".into()),
+            ("cols", cols.into()),
+            ("ppl", ppl.into()),
+        ]));
+    }
+
+    Ok(Value::obj(vec![("report", "ablations".into()),
+                       ("model", model.into()),
+                       ("ratio", ratio.into()),
+                       ("entries", Value::Arr(out))]))
+}
+
+fn subsample(cal: &CalibSet, n_layers: usize, cols: usize) -> CalibSet {
+    // deterministic stride subsample of the calibration columns
+    let mut layers = Vec::new();
+    for i in 0..n_layers {
+        let mut m = std::collections::BTreeMap::new();
+        for kind in ["attn_x", "o_x", "mlp_x"] {
+            let x = cal.x(i, kind);
+            let total = x.cols();
+            let take = cols.min(total);
+            let stride = (total / take).max(1);
+            let idx: Vec<usize> =
+                (0..take).map(|j| (j * stride) % total).collect();
+            m.insert(kind.to_string(), x.select_cols(&idx));
+        }
+        layers.push(m);
+    }
+    CalibSet::from_layers(layers)
+}

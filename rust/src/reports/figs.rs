@@ -1,0 +1,402 @@
+//! Appendix-figure generators (Figs 7–16): the paper's self-contained
+//! synthetic studies on random weights with Wishart-sampled correlations
+//! ("covariance of identity or off-diagonal decaying of 0.9 factor").
+//! Pure rust — no artifacts needed. Sizes are scaled so the whole suite
+//! runs in seconds; the *shapes* (who wins, where) are the reproduction
+//! target (DESIGN.md §4).
+
+use crate::compress::asvd::{self, AsvdOpts};
+use crate::compress::junction::Junction;
+use crate::compress::precond::Precond;
+use crate::compress::{joint_qk, rope, sparse};
+use crate::tensor::linalg::act_loss;
+use crate::util::json::Value;
+use crate::util::rng::{decaying_covariance, wishart, Rng};
+use crate::Matrix;
+
+fn db(loss: f64, ref_loss: f64) -> f64 {
+    10.0 * (loss / ref_loss.max(1e-300)).log10()
+}
+
+fn series(name: &str, x: Vec<f64>, y: Vec<f64>) -> Value {
+    Value::obj(vec![("name", name.into()), ("x", x.into()),
+                    ("y", y.into())])
+}
+
+/// Fig 7: plain SVD vs CorDA (Cov) vs RootCorDA (RootCov) — activation
+/// loss vs rank on random weights with Wishart(0.9-decay) correlation.
+pub fn fig7(d: usize, seed: u64) -> Value {
+    let mut rng = Rng::new(seed);
+    let w = rng.normal_matrix(d, d);
+    let c = wishart(&mut rng, &decaying_covariance(d, 0.9), 2 * d);
+    let ref_loss = w.matmul(&c).matmul_bt(&w).trace();
+    let ranks: Vec<usize> = (1..=8).map(|i| i * d / 10).collect();
+    let mut out = Vec::new();
+    for kind in [Precond::Identity, Precond::Cov, Precond::RootCov] {
+        let opts = AsvdOpts { kind, junction: Junction::Left,
+                              ..Default::default() };
+        let ys: Vec<f64> = ranks.iter().map(|&r| {
+            let res = asvd::compress_with_cov(&w, r, &c, &vec![0.0; d],
+                                              &opts);
+            db(res.loss, ref_loss)
+        }).collect();
+        out.push(series(kind.name(), ranks.iter().map(|&r| r as f64)
+                        .collect(), ys));
+    }
+    Value::obj(vec![("figure", "fig7".into()), ("d", d.into()),
+                    ("ylabel", "relative loss (dB)".into()),
+                    ("series", Value::Arr(out))])
+}
+
+/// Fig 8: joint-QKV (shared A) vs split-QKV at equal parameter budget.
+pub fn fig8(d: usize, seed: u64) -> Value {
+    let mut rng = Rng::new(seed);
+    let wq = rng.normal_matrix(d, d);
+    let wk = rng.normal_matrix(d, d);
+    let wv = rng.normal_matrix(d, d);
+    let c = wishart(&mut rng, &decaying_covariance(d, 0.9), 2 * d);
+    let ref_loss: f64 = [&wq, &wk, &wv].iter()
+        .map(|w| w.matmul(&c).matmul_bt(w).trace()).sum();
+    let opts = AsvdOpts { kind: Precond::RootCov, junction: Junction::Left,
+                          ..Default::default() };
+    let ranks: Vec<usize> = (1..=8).map(|i| i * d / 12).collect();
+    let (mut split_y, mut joint_y, mut xs) = (vec![], vec![], vec![]);
+    for &r in &ranks {
+        let params = 3 * r * 2 * d;
+        xs.push(params as f64);
+        let mut split = 0.0;
+        for w in [&wq, &wk, &wv] {
+            split += asvd::compress_with_cov(w, r, &c, &vec![0.0; d],
+                                             &opts).loss;
+        }
+        split_y.push(db(split, ref_loss));
+        // joint rank at equal params: r_j (3d + d) = 3r·2d
+        let r_j = (3 * r * 2 * d) / (4 * d);
+        let stacked = Matrix::vstack(&[&wq, &wk, &wv]);
+        let joint = asvd::compress_with_cov(&stacked, r_j.max(1), &c,
+                                            &vec![0.0; d], &opts);
+        joint_y.push(db(joint.loss, ref_loss));
+    }
+    Value::obj(vec![("figure", "fig8".into()), ("d", d.into()),
+                    ("xlabel", "params".into()),
+                    ("series", Value::Arr(vec![
+                        series("split-qkv", xs.clone(), split_y),
+                        series("joint-qkv", xs, joint_y)]))])
+}
+
+/// Fig 9: split-head vs joint-head compression.
+pub fn fig9(d: usize, h: usize, seed: u64) -> Value {
+    let mut rng = Rng::new(seed);
+    let w = rng.normal_matrix(d, d);
+    let c = wishart(&mut rng, &decaying_covariance(d, 0.9), 2 * d);
+    let ref_loss = w.matmul(&c).matmul_bt(&w).trace();
+    let opts = AsvdOpts { kind: Precond::RootCov, junction: Junction::Left,
+                          ..Default::default() };
+    let ranks: Vec<usize> = (1..=6).map(|i| i * d / 8).collect();
+    let (mut joint_y, mut split_y) = (vec![], vec![]);
+    for &r in &ranks {
+        joint_y.push(db(asvd::compress_with_cov(&w, r, &c, &vec![0.0; d],
+                                                &opts).loss, ref_loss));
+        // split-head: rank r/h per head slice, same covariance
+        let dh = d / h;
+        let rh = (r / h).max(1);
+        let blocks: Vec<Matrix> = (0..h).map(|i| {
+            asvd::compress_with_cov(&w.slice_rows(i * dh, (i + 1) * dh),
+                                    rh, &c, &vec![0.0; d], &opts).w_hat
+        }).collect();
+        let refs: Vec<&Matrix> = blocks.iter().collect();
+        let w_hat = Matrix::vstack(&refs);
+        split_y.push(db(act_loss(&w, &w_hat, &c), ref_loss));
+    }
+    Value::obj(vec![("figure", "fig9".into()), ("d", d.into()),
+                    ("series", Value::Arr(vec![
+                        series("joint-head",
+                               ranks.iter().map(|&r| r as f64).collect(),
+                               joint_y),
+                        series("split-head",
+                               ranks.iter().map(|&r| r as f64).collect(),
+                               split_y)]))])
+}
+
+/// Fig 10: attention-aware joint HOSVD vs activation-aware per-matrix ASVD
+/// on the attention-map loss (random QK, Wishart 0.9 correlation; WandA =
+/// diagonal correlation variant).
+pub fn fig10(d: usize, h: usize, seed: u64) -> Value {
+    let mut rng = Rng::new(seed);
+    let dh = d / h;
+    let wq = rng.normal_matrix(d, d);
+    let wk = rng.normal_matrix(d, d);
+    let c = wishart(&mut rng, &decaying_covariance(d, 0.9), 2 * d);
+    let p = crate::tensor::sqrtm_psd(&c);
+    let wq_w = wq.matmul(&p);
+    let wk_w = wk.matmul(&p);
+    let ref_loss: f64 = (0..h).map(|i| {
+        wq_w.slice_rows(i * dh, (i + 1) * dh)
+            .matmul_at(&wk_w.slice_rows(i * dh, (i + 1) * dh)).frob2()
+    }).sum();
+    let attn_loss = |wq_h: &Matrix, wk_h: &Matrix| -> f64 {
+        (0..h).map(|i| {
+            let g = wq_w.slice_rows(i * dh, (i + 1) * dh)
+                .matmul_at(&wk_w.slice_rows(i * dh, (i + 1) * dh));
+            let gh = wq_h.slice_rows(i * dh, (i + 1) * dh)
+                .matmul_at(&wk_h.slice_rows(i * dh, (i + 1) * dh));
+            g.sub(&gh).frob2()
+        }).sum()
+    };
+    let ranks: Vec<usize> = (1..=6).map(|i| i * d / 8).collect();
+    let (mut aware, mut act, mut wanda) = (vec![], vec![], vec![]);
+    for &r in &ranks {
+        let jq = joint_qk::compress(&wq_w, &wk_w, h, dh, r, r,
+                                    &joint_qk::JointQkOpts {
+                                        kind: Precond::Identity, n_iter: 8,
+                                        ..Default::default() });
+        aware.push(db(*jq.losses.last().unwrap(), ref_loss));
+        let opts = AsvdOpts { kind: Precond::Identity,
+                              junction: Junction::Left,
+                              ..Default::default() };
+        let rq = asvd::compress(&wq_w, r, &opts);
+        let rk = asvd::compress(&wk_w, r, &opts);
+        act.push(db(attn_loss(&rq.w_hat, &rk.w_hat), ref_loss));
+        // WandA-style: diagonal correlation pre-conditioner on raw weights
+        let dopts = AsvdOpts { kind: Precond::DiagL2,
+                               junction: Junction::Left,
+                               ..Default::default() };
+        let wq_d = asvd::compress_with_cov(&wq, r, &c, &vec![0.0; d],
+                                           &dopts);
+        let wk_d = asvd::compress_with_cov(&wk, r, &c, &vec![0.0; d],
+                                           &dopts);
+        wanda.push(db(attn_loss(&wq_d.w_hat.matmul(&p),
+                                &wk_d.w_hat.matmul(&p)), ref_loss));
+    }
+    let xs: Vec<f64> = ranks.iter().map(|&r| r as f64).collect();
+    Value::obj(vec![("figure", "fig10".into()), ("d", d.into()),
+                    ("series", Value::Arr(vec![
+                        series("attention-aware (hosvd)", xs.clone(), aware),
+                        series("activation-aware (asvd)", xs.clone(), act),
+                        series("wanda-diag", xs, wanda)]))])
+}
+
+/// Fig 11 + Fig 16: sparse vs low-rank at equal parameter budget, and
+/// full-C iterative vs diagonal-C one-shot.
+pub fn fig11_16(d: usize, seed: u64) -> (Value, Value) {
+    let mut rng = Rng::new(seed);
+    let w = rng.normal_matrix(d, d);
+    let c = wishart(&mut rng, &decaying_covariance(d, 0.9), 2 * d);
+    let ref_loss = w.matmul(&c).matmul_bt(&w).trace();
+    let fracs = [0.1, 0.2, 0.3, 0.45, 0.6, 0.8];
+    let (mut lr_y, mut sp_y, mut wd_y, mut fi_y, mut xs) =
+        (vec![], vec![], vec![], vec![], vec![]);
+    for &f in &fracs {
+        let budget = (f * (d * d) as f64) as usize;
+        xs.push(f);
+        let r = (budget / (2 * d)).max(1);
+        let opts = AsvdOpts { kind: Precond::RootCov,
+                              junction: Junction::Left,
+                              ..Default::default() };
+        lr_y.push(db(asvd::compress_with_cov(&w, r, &c, &vec![0.0; d],
+                                             &opts).loss, ref_loss));
+        let (_, sp) = sparse::projected_gd(&w, &c, budget, 50);
+        sp_y.push(db(sp, ref_loss));
+        let (_, wd) = sparse::wanda_diag(&w, &c, budget);
+        wd_y.push(db(wd, ref_loss));
+        let (_, fi) = sparse::fista(&w, &c, budget, 40);
+        fi_y.push(db(fi, ref_loss));
+    }
+    let fig11 = Value::obj(vec![
+        ("figure", "fig11".into()), ("d", d.into()),
+        ("xlabel", "param fraction".into()),
+        ("series", Value::Arr(vec![
+            series("low-rank (rootcov)", xs.clone(), lr_y.clone()),
+            series("sparse (hard/STE)", xs.clone(), sp_y.clone())]))]);
+    let fig16 = Value::obj(vec![
+        ("figure", "fig16".into()), ("d", d.into()),
+        ("series", Value::Arr(vec![
+            series("full-C iterative", xs.clone(), sp_y),
+            series("fista", xs.clone(), fi_y),
+            series("wanda diag-C one-shot", xs, wd_y)]))]);
+    (fig11, fig16)
+}
+
+/// Fig 12: RoPE-aware vs RoPE-blind HOSVD under the 10-token-window loss
+/// (θ = 1e4). Dimension is scaled from the paper's 768 for runtime; set
+/// d higher via the CLI for the full-size run.
+pub fn fig12(d: usize, h: usize, seed: u64) -> Value {
+    let mut rng = Rng::new(seed);
+    let dh = d / h;
+    let wq = rng.normal_matrix(d, d);
+    let wk = rng.normal_matrix(d, d);
+    let c = Matrix::eye(d);
+    let ranks: Vec<usize> = (1..=5).map(|i| i * d / 7).collect();
+    let ref_loss = rope::rope_window_loss(&wq, &wk, h, dh,
+                                          &Matrix::zeros(1, d),
+                                          &Matrix::zeros(1, d), 10, 1e4,
+                                          Precond::Identity, &c);
+    let (mut aware, mut blind) = (vec![], vec![]);
+    for &r in &ranks {
+        let a = rope::compress_rope_aware(&wq, &wk, h, dh, r, r, 10, 1e4, 6,
+                                          Precond::Identity, &c);
+        aware.push(db(*a.losses.last().unwrap(), ref_loss));
+        let b = rope::compress_rope_aware(&wq, &wk, h, dh, r, r, 1, 1e4, 6,
+                                          Precond::Identity, &c);
+        blind.push(db(rope::rope_window_loss(&wq, &wk, h, dh, &b.aq, &b.ak,
+                                             10, 1e4, Precond::Identity,
+                                             &c), ref_loss));
+    }
+    let xs: Vec<f64> = ranks.iter().map(|&r| r as f64).collect();
+    Value::obj(vec![("figure", "fig12".into()), ("d", d.into()),
+                    ("series", Value::Arr(vec![
+                        series("rope-aware hosvd", xs.clone(), aware),
+                        series("rope-blind hosvd", xs, blind)]))])
+}
+
+/// Fig 13: STE/hard-shrink vs soft-shrink vs FISTA across sparsity.
+pub fn fig13(d: usize, seed: u64) -> Value {
+    let mut rng = Rng::new(seed);
+    let w = rng.normal_matrix(d, d);
+    let c = wishart(&mut rng, &decaying_covariance(d, 0.9), 2 * d);
+    let ref_loss = w.matmul(&c).matmul_bt(&w).trace();
+    let fracs = [0.1, 0.25, 0.4, 0.6, 0.8];
+    let (mut hard, mut fista_y, mut xs) = (vec![], vec![], vec![]);
+    for &f in &fracs {
+        let k = (f * (d * d) as f64) as usize;
+        xs.push(f);
+        hard.push(db(sparse::projected_gd(&w, &c, k, 60).1, ref_loss));
+        fista_y.push(db(sparse::fista(&w, &c, k, 50).1, ref_loss));
+    }
+    Value::obj(vec![("figure", "fig13".into()), ("d", d.into()),
+                    ("series", Value::Arr(vec![
+                        series("hardshrink/STE", xs.clone(), hard),
+                        series("fista (softshrink)", xs, fista_y)]))])
+}
+
+/// Fig 14: low-rank+sparse vs sparse-alone vs low-rank-alone.
+pub fn fig14(d: usize, seed: u64) -> Value {
+    let mut rng = Rng::new(seed);
+    let w = rng.normal_matrix(d, d);
+    let c = wishart(&mut rng, &decaying_covariance(d, 0.9), 2 * d);
+    let ref_loss = w.matmul(&c).matmul_bt(&w).trace();
+    let fracs = [0.2, 0.4, 0.6];
+    let (mut mix, mut sp, mut lr, mut xs) = (vec![], vec![], vec![], vec![]);
+    for &f in &fracs {
+        let budget = (f * (d * d) as f64) as usize;
+        xs.push(f);
+        // mixed: half budget to rank, half to sparse
+        let r = (budget / 2 / (2 * d)).max(1);
+        let kappa = budget / 2;
+        let (_, _, hist) = sparse::lowrank_plus_sparse(&w, &c, r, kappa, 4);
+        mix.push(db(*hist.last().unwrap(), ref_loss));
+        sp.push(db(sparse::projected_gd(&w, &c, budget, 50).1, ref_loss));
+        let opts = AsvdOpts { kind: Precond::RootCov,
+                              junction: Junction::Left,
+                              ..Default::default() };
+        lr.push(db(asvd::compress_with_cov(&w, (budget / (2 * d)).max(1),
+                                           &c, &vec![0.0; d], &opts).loss,
+                   ref_loss));
+    }
+    Value::obj(vec![("figure", "fig14".into()), ("d", d.into()),
+                    ("series", Value::Arr(vec![
+                        series("lowrank+sparse", xs.clone(), mix),
+                        series("sparse-alone", xs.clone(), sp),
+                        series("lowrank-alone", xs, lr)]))])
+}
+
+/// Fig 15: sparsifying the low-rank factors B/A.
+pub fn fig15(d: usize, seed: u64) -> Value {
+    let mut rng = Rng::new(seed);
+    let w = rng.normal_matrix(d, d);
+    let c = wishart(&mut rng, &decaying_covariance(d, 0.9), 2 * d);
+    let ref_loss = w.matmul(&c).matmul_bt(&w).trace();
+    let r = 2 * d / 3; // "rank 640/512 of 768" scale analogue
+    let opts = AsvdOpts { kind: Precond::RootCov, junction: Junction::Left,
+                          ..Default::default() };
+    let base = asvd::compress_with_cov(&w, r, &c, &vec![0.0; d], &opts);
+    let keeps = [1.0, 0.8, 0.6, 0.4, 0.25];
+    let (mut ys, mut sp_ys, mut xs) = (vec![], vec![], vec![]);
+    for &kf in &keeps {
+        let params = (2.0 * (r * d) as f64 * kf) as usize;
+        xs.push(params as f64 / (d * d) as f64);
+        if kf >= 1.0 {
+            ys.push(db(base.loss, ref_loss));
+        } else {
+            let (_, _, hist) = sparse::sparsify_factors(
+                &base.factors.b, &base.factors.a, &w, &c, kf, 30);
+            ys.push(db(*hist.last().unwrap(), ref_loss));
+        }
+        sp_ys.push(db(sparse::projected_gd(&w, &c, params, 40).1, ref_loss));
+    }
+    Value::obj(vec![("figure", "fig15".into()), ("d", d.into()),
+                    ("xlabel", "param fraction".into()),
+                    ("series", Value::Arr(vec![
+                        series("sparsified B/A", xs.clone(), ys),
+                        series("sparse-alone", xs, sp_ys)]))])
+}
+
+/// Render a figure Value as an aligned text block (series per row).
+pub fn render(v: &Value) -> String {
+    let mut out = String::new();
+    let name = v.get("figure").and_then(|f| f.as_str()).unwrap_or("fig");
+    out.push_str(&format!("== {name} ==\n"));
+    if let Some(series) = v.get("series").and_then(|s| s.as_arr()) {
+        for s in series {
+            let nm = s.get("name").and_then(|n| n.as_str()).unwrap_or("?");
+            let xs = s.get("x").and_then(|x| x.as_arr()).unwrap_or(&[]);
+            let ys = s.get("y").and_then(|y| y.as_arr()).unwrap_or(&[]);
+            out.push_str(&format!("  {nm:<28}"));
+            for (x, y) in xs.iter().zip(ys) {
+                out.push_str(&format!(" ({:.2},{:+.1}dB)",
+                                      x.as_f64().unwrap_or(0.0),
+                                      y.as_f64().unwrap_or(0.0)));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn last_ys(v: &Value) -> Vec<(String, f64)> {
+        v.get("series").unwrap().as_arr().unwrap().iter().map(|s| {
+            let name = s.get("name").unwrap().as_str().unwrap().to_string();
+            let ys = s.get("y").unwrap().as_arr().unwrap();
+            (name, ys.last().unwrap().as_f64().unwrap())
+        }).collect()
+    }
+
+    #[test]
+    fn fig7_ordering_rootcov_best() {
+        let v = fig7(24, 1);
+        let ys = last_ys(&v);
+        let get = |n: &str| ys.iter().find(|(k, _)| k == n).unwrap().1;
+        assert!(get("rootcov") <= get("cov") + 1e-9);
+        assert!(get("rootcov") <= get("identity") + 1e-9);
+    }
+
+    #[test]
+    fn fig10_attention_aware_wins() {
+        let v = fig10(24, 4, 2);
+        let ys = last_ys(&v);
+        let get = |n: &str| ys.iter().find(|(k, _)| k.starts_with(n))
+            .unwrap().1;
+        assert!(get("attention-aware") <= get("activation-aware") + 1e-6);
+    }
+
+    #[test]
+    fn fig11_sparse_beats_lowrank() {
+        let (f11, _) = fig11_16(20, 3);
+        let ys = last_ys(&f11);
+        let get = |n: &str| ys.iter().find(|(k, _)| k.starts_with(n))
+            .unwrap().1;
+        assert!(get("sparse") <= get("low-rank") + 1e-6);
+    }
+
+    #[test]
+    fn render_is_nonempty() {
+        let v = fig13(12, 4);
+        let s = render(&v);
+        assert!(s.contains("fig13"));
+        assert!(s.contains("dB"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Report generators — one per paper table/figure (DESIGN.md §4 index).
+//! Each writes aligned text to stdout and a JSON artifact under the report
+//! output directory so the series can be re-plotted.
+
+pub mod ablations;
+pub mod figs;
+pub mod table;
+pub mod tables;
+
+pub use table::TextTable;

@@ -1,0 +1,328 @@
+//! Table/figure generators that need the artifacts (trained models,
+//! calibration, PJRT programs): Table 2 (perplexity grid), Table 3
+//! (FLOPs/MACs/params), Table 4 + Fig 6 (multimodal accuracy), Fig 4
+//! (ppl vs ratio) and Fig 5 (ppl vs FLOPs).
+
+use anyhow::{Context, Result};
+
+use super::table::TextTable;
+use crate::compress::pipeline::{self, Method, TABLE2_METHODS};
+use crate::data::{CalibSet, Corpus};
+use crate::eval;
+use crate::flops;
+use crate::model::config::{mini_by_name, MiniConfig, OPT_FAMILY};
+use crate::model::Weights;
+use crate::runtime::Engine;
+use crate::util::json::Value;
+
+pub struct TableCtx<'a> {
+    pub engine: &'a Engine,
+    pub artifacts: std::path::PathBuf,
+    /// eval batches cap (speed knob)
+    pub max_batches: usize,
+    pub qk_iters: usize,
+    pub ud_iters: usize,
+}
+
+fn load_model(ctx: &TableCtx, cfg: &MiniConfig)
+              -> Result<(Weights, CalibSet)> {
+    let w = Weights::load(ctx.artifacts.join(
+        format!("model_{}.ltw", cfg.name)))?;
+    let cal = CalibSet::load(ctx.artifacts.join(
+        format!("calib_{}.ltw", cfg.name)), cfg.n_layers)?;
+    Ok((w, cal))
+}
+
+fn corpora(ctx: &TableCtx) -> Result<Vec<Corpus>> {
+    ["synthwiki", "synthptb", "synthc4"].iter()
+        .map(|n| Corpus::load(ctx.artifacts.join("corpora.ltw"), n, "test"))
+        .collect()
+}
+
+/// Table 2: perplexity of each model size × method × ratio on the three
+/// synthetic corpora (paper: OPT family on WT2/PTB/C4 at 10–40%).
+pub fn table2(ctx: &TableCtx, sizes: &[&str], ratios: &[f64],
+              methods: &[Method]) -> Result<Value> {
+    let (batch, seq_len) = score_dims(ctx.engine);
+    let corp = corpora(ctx)?;
+    let mut rows = Vec::new();
+    let mut out = TextTable::new(&{
+        let mut h = vec!["model", "method", "ratio"];
+        h.extend(corp.iter().map(|c| c.name.as_str()));
+        h
+    });
+    for size in sizes {
+        let cfg = mini_by_name(size).context("unknown size")?;
+        let (weights, cal) = load_model(ctx, cfg)?;
+        let program = format!("score_{}", cfg.name);
+        // baseline row (0%)
+        let mut base = vec![];
+        for c in &corp {
+            let r = eval::perplexity(ctx.engine, &program, &weights, c,
+                                     batch, seq_len, ctx.max_batches)?;
+            base.push(r.ppl);
+        }
+        rows.push(row_value(size, "original", 0.0, &base));
+        out.row(render_row(size, "original", 0.0, &base));
+        for &method in methods {
+            for &ratio in ratios {
+                let (nw, _rep) = pipeline::compress_model(
+                    cfg, &weights, &cal, method, ratio,
+                    ctx.qk_iters, ctx.ud_iters)?;
+                let mut ppls = vec![];
+                for c in &corp {
+                    let r = eval::perplexity(ctx.engine, &program, &nw, c,
+                                             batch, seq_len,
+                                             ctx.max_batches)?;
+                    ppls.push(r.ppl);
+                }
+                rows.push(row_value(size, method.label(), ratio, &ppls));
+                out.row(render_row(size, method.label(), ratio, &ppls));
+            }
+        }
+    }
+    println!("{}", out.render());
+    Ok(Value::obj(vec![("table", "table2".into()),
+                       ("rows", Value::Arr(rows))]))
+}
+
+fn score_dims(engine: &Engine) -> (usize, usize) {
+    let b = engine.manifest().get("score_batch")
+        .and_then(|v| v.as_usize()).unwrap_or(8);
+    let t = engine.manifest().get("seq_len")
+        .and_then(|v| v.as_usize()).unwrap_or(128);
+    (b, t)
+}
+
+fn row_value(model: &str, method: &str, ratio: f64, ppls: &[f64]) -> Value {
+    Value::obj(vec![
+        ("model", model.into()), ("method", method.into()),
+        ("ratio", ratio.into()),
+        ("ppl", ppls.to_vec().into()),
+    ])
+}
+
+fn render_row(model: &str, method: &str, ratio: f64, ppls: &[f64])
+              -> Vec<String> {
+    let mut r = vec![model.to_string(), method.to_string(),
+                     format!("{:.0}%", ratio * 100.0)];
+    r.extend(ppls.iter().map(|p| format!("{p:.2}")));
+    r
+}
+
+/// Table 3: analytic FLOPs/MACs/params for OPT-6.7B (exact reproduction)
+/// plus the mini family, 0–90%.
+pub fn table3() -> Value {
+    let mut out = TextTable::new(&["model", "compression", "FLOPs", "MACs",
+                                   "Parameters"]);
+    let mut rows = Vec::new();
+    let cfg = OPT_FAMILY.iter().find(|c| c.name == "OPT-6.7B").unwrap();
+    for i in 0..10 {
+        let ratio = i as f64 * 0.1;
+        let c = flops::complexity(cfg, 128, ratio, false);
+        out.row(vec![cfg.name.into(), format!("{:.0}%", ratio * 100.0),
+                     flops::human_g(c.flops), flops::human_g(c.macs),
+                     flops::human(c.params)]);
+        rows.push(Value::obj(vec![
+            ("model", cfg.name.into()), ("ratio", ratio.into()),
+            ("flops", c.flops.into()), ("macs", c.macs.into()),
+            ("params", c.params.into())]));
+    }
+    println!("{}", out.render());
+    Value::obj(vec![("table", "table3".into()), ("rows", Value::Arr(rows))])
+}
+
+/// Fig 4 (ppl vs ratio, wide sweep) — reuses the Table 2 machinery.
+pub fn fig4(ctx: &TableCtx, sizes: &[&str], methods: &[Method])
+            -> Result<Value> {
+    let ratios: Vec<f64> = (1..=7).map(|i| i as f64 * 0.1).collect();
+    let v = table2(ctx, sizes, &ratios, methods)?;
+    Ok(Value::obj(vec![("figure", "fig4".into()),
+                       ("data", v)]))
+}
+
+/// Fig 5: ppl vs FLOPs — maps the fig4 sweep onto the analytic FLOPs of
+/// the corresponding real OPT configs (paper plots 125M..13B).
+pub fn fig5(ctx: &TableCtx, sizes: &[&str]) -> Result<Value> {
+    let ratios = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5];
+    let (batch, seq_len) = score_dims(ctx.engine);
+    let corp = Corpus::load(ctx.artifacts.join("corpora.ltw"), "synthwiki",
+                            "test")?;
+    let mut series = Vec::new();
+    for size in sizes {
+        let cfg = mini_by_name(size).context("size")?;
+        let (weights, cal) = load_model(ctx, cfg)?;
+        let program = format!("score_{}", cfg.name);
+        let mini_linear = cfg.linear_params() as f64;
+        let (mut xs, mut ys) = (vec![], vec![]);
+        for &ratio in &ratios {
+            let w = if ratio == 0.0 {
+                weights.clone()
+            } else {
+                pipeline::compress_model(cfg, &weights, &cal,
+                                         Method::LatentLlm, ratio,
+                                         ctx.qk_iters, ctx.ud_iters)?.0
+            };
+            let r = eval::perplexity(ctx.engine, &program, &w, &corp,
+                                     batch, seq_len, ctx.max_batches)?;
+            // x-axis: per-token MACs of this mini model at the ratio
+            let macs = (1.0 - ratio) * mini_linear
+                + (cfg.vocab * cfg.d) as f64;
+            xs.push(macs * seq_len as f64 * 2.0); // FLOPs per sequence
+            ys.push(r.ppl);
+        }
+        series.push(Value::obj(vec![
+            ("name", (*size).into()), ("x", xs.into()), ("y", ys.into())]));
+    }
+    Ok(Value::obj(vec![("figure", "fig5".into()),
+                       ("series", Value::Arr(series))]))
+}
+
+/// Table 4 + Fig 6: multimodal accuracy breakdown of llava-mini under each
+/// method × ratio (paper: LLaVa on ScienceQA at 10–50%).
+/// The llava-mini compression runs in python at artifact time for the
+/// headline table; here we *evaluate* rust-compressed LM towers as well —
+/// compressing both towers in rust requires the mm pipeline, which reuses
+/// the per-tower MiniConfig path.
+pub fn table4(ctx: &TableCtx, ratios: &[f64], methods: &[Method])
+              -> Result<Value> {
+    use crate::model::io::read_ltw;
+    let data = read_ltw(ctx.artifacts.join("mm_data.ltw"))?;
+    let weights = Weights::load(ctx.artifacts.join("mm_model.ltw"))?;
+    let calib = read_ltw(ctx.artifacts.join("mm_calib.ltw"))?;
+    let mm_batch = ctx.engine.manifest().get("mm_batch")
+        .and_then(|v| v.as_usize()).unwrap_or(16);
+    let program = "mm_score_llava-mini";
+
+    // tower configs from the manifest
+    let man = ctx.engine.manifest();
+    let lm_cfg = mini_from_manifest(man.path(&["mm", "config", "lm"])
+        .context("mm lm config")?)?;
+    let vit_cfg = vit_from_manifest(man.path(&["mm", "config", "vision"])
+        .context("mm vision config")?)?;
+
+    let mut out = TextTable::new(&["method", "compression", "NAT", "SOC",
+                                   "LAN", "TXT", "IMG", "NO", "G1-6",
+                                   "G7-12", "Avg"]);
+    let mut rows = Vec::new();
+    let base = eval::evaluate_mm(ctx.engine, program, &weights, &data,
+                                 mm_batch)?;
+    push_mm_row(&mut out, &mut rows, "Original un-compressed", 0.0, &base);
+
+    for &ratio in ratios {
+        for &method in methods {
+            let mut nw = weights.clone();
+            for (tower, cfg) in [("vit", &vit_cfg), ("lm", &lm_cfg)] {
+                let sub = tower_weights(&weights, tower)?;
+                let cal = CalibSet::from_map(&calib,
+                                             &format!("{tower}."),
+                                             cfg.n_layers)?;
+                let (cw, _) = pipeline::compress_model(
+                    cfg, &sub, &cal, method, ratio,
+                    ctx.qk_iters, ctx.ud_iters)?;
+                for name in cw.names() {
+                    nw.set_tensor(&format!("{tower}.{name}"),
+                                  cw.tensor(name)?.clone());
+                }
+            }
+            let r = eval::evaluate_mm(ctx.engine, program, &nw, &data,
+                                      mm_batch)?;
+            push_mm_row(&mut out, &mut rows, method.label(), ratio, &r);
+        }
+    }
+    println!("{}", out.render());
+    Ok(Value::obj(vec![("table", "table4".into()),
+                       ("rows", Value::Arr(rows))]))
+}
+
+fn tower_weights(w: &Weights, tower: &str) -> Result<Weights> {
+    let mut map = crate::model::io::TensorMap::new();
+    let prefix = format!("{tower}.");
+    for name in w.names() {
+        if let Some(rest) = name.strip_prefix(&prefix) {
+            map.insert(rest.to_string(), w.tensor(name)?.clone());
+        }
+    }
+    Ok(Weights::new(map))
+}
+
+fn push_mm_row(out: &mut TextTable, rows: &mut Vec<Value>, label: &str,
+               ratio: f64, r: &eval::MmBreakdown) {
+    let mut cells = vec![label.to_string(),
+                         format!("{:.0}%", ratio * 100.0)];
+    cells.extend(r.row().iter().map(|v| format!("{:.2}", v * 100.0)));
+    out.row(cells);
+    rows.push(Value::obj(vec![
+        ("method", label.into()), ("ratio", ratio.into()),
+        ("acc", r.row().into())]));
+}
+
+fn mini_from_manifest(v: &Value) -> Result<MiniConfig> {
+    let g = |k: &str| -> Result<usize> {
+        v.get(k).and_then(|x| x.as_usize())
+            .context(format!("mm config field {k}"))
+    };
+    Ok(MiniConfig {
+        name: "llava-mini-lm",
+        vocab: g("vocab")?,
+        d: g("d")?,
+        n_layers: g("n_layers")?,
+        n_heads: g("n_heads")?,
+        d_i: g("d_i")?,
+        max_len: g("max_len")?,
+    })
+}
+
+fn vit_from_manifest(v: &Value) -> Result<MiniConfig> {
+    let g = |k: &str| -> Result<usize> {
+        v.get(k).and_then(|x| x.as_usize())
+            .context(format!("vit config field {k}"))
+    };
+    Ok(MiniConfig {
+        name: "llava-mini-vit",
+        vocab: 1,
+        d: g("d")?,
+        n_layers: g("n_layers")?,
+        n_heads: g("n_heads")?,
+        d_i: g("d_i")?,
+        max_len: 16,
+    })
+}
+
+/// Run every artifact-dependent report; used by `latentllm report all`.
+pub fn run_all(ctx: &TableCtx, out_dir: &std::path::Path) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let save = |name: &str, v: &Value| -> Result<()> {
+        std::fs::write(out_dir.join(format!("{name}.json")),
+                       v.to_string_pretty())?;
+        Ok(())
+    };
+    println!("=== Table 3 (analytic; exact paper anchor) ===");
+    save("table3", &table3())?;
+    println!("=== Table 2 (perplexity grid) ===");
+    let t2 = table2(ctx, &["opt-mini-s", "opt-mini-m", "opt-mini-l"],
+                    &[0.1, 0.2, 0.3, 0.4], &TABLE2_METHODS)?;
+    save("table2", &t2)?;
+    println!("=== Fig 4 (ppl vs ratio, latentllm + rootcov) ===");
+    let f4 = fig4(ctx, &["opt-mini-m"],
+                  &[Method::AsvdRootCov, Method::LatentLlm])?;
+    save("fig4", &f4)?;
+    println!("=== Fig 5 (ppl vs FLOPs) ===");
+    let f5 = fig5(ctx, &["opt-mini-s", "opt-mini-m", "opt-mini-l"])?;
+    save("fig5", &f5)?;
+    println!("=== Table 4 / Fig 6 (multimodal) ===");
+    // llava-mini is overparameterized for the synthetic task, so the
+    // capacity-binding regime (where the paper's degradation ordering
+    // appears) sits at deeper ratios than the paper's 10-50% — sweep
+    // through the transition (see EXPERIMENTS.md).
+    let t4 = table4(ctx, &[0.3, 0.6, 0.8, 0.9, 0.95],
+                    &[Method::Plain, Method::AsvdRootCov,
+                      Method::LatentLlm])?;
+    save("table4", &t4)?;
+    Ok(())
+}
+
+#[allow(unused)]
+pub fn ratios_default() -> Vec<f64> {
+    vec![0.1, 0.2, 0.3, 0.4]
+}

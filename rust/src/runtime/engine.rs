@@ -1,0 +1,162 @@
+//! The PJRT engine: HLO-text → compile → execute, with a program cache.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::literal::ParamValue;
+use crate::model::io::Tensor;
+use crate::model::Weights;
+use crate::util::json::{self, Value};
+
+/// A compiled PJRT executable plus its parameter-order metadata.
+pub struct Program {
+    pub name: String,
+    /// manifest-declared parameter names, in call order
+    pub param_order: Vec<String>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Program {
+    /// Execute with explicit leading inputs (tokens, lens, images, …)
+    /// followed by the weight tensors in manifest order. Returns the
+    /// flattened f32 outputs of the 1-tuple result.
+    pub fn run_f32(&self, leading: &[ParamValue], weights: &Weights)
+                   -> Result<Vec<f32>> {
+        let lit = self.execute(leading, weights)?;
+        let out = lit.to_tuple1().context("program output tuple")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    fn execute(&self, leading: &[ParamValue], weights: &Weights)
+               -> Result<xla::Literal> {
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(
+            self.param_order.len());
+        for p in leading {
+            args.push(p.to_literal()?);
+        }
+        let weight_names = &self.param_order[leading.len()..];
+        for name in weight_names {
+            let t = weights.tensor(name)
+                .with_context(|| format!("program {}", self.name))?;
+            args.push(super::literal::tensor_to_literal(t)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&args)?;
+        Ok(result[0][0].to_literal_sync()?)
+    }
+}
+
+/// PJRT CPU engine with a compile cache keyed by program name.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts: PathBuf,
+    manifest: Value,
+    cache: Mutex<HashMap<String, std::sync::Arc<Program>>>,
+}
+
+impl Engine {
+    pub fn new(artifacts: impl AsRef<Path>) -> Result<Self> {
+        let artifacts = artifacts.as_ref().to_path_buf();
+        let manifest_text =
+            std::fs::read_to_string(artifacts.join("manifest.json"))
+                .context("read manifest.json (run `make artifacts`)")?;
+        let manifest = json::parse(&manifest_text)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            artifacts,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Value {
+        &self.manifest
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts
+    }
+
+    /// Parameter order for a program from the manifest
+    /// (`programs.<name>.<kind>` is a list of names).
+    fn param_order(&self, prog: &str) -> Result<Vec<String>> {
+        // manifest["programs"] maps e.g. "score_opt-mini-m" -> [names...]
+        let programs = self.manifest.get("programs")
+            .ok_or_else(|| anyhow!("manifest missing programs"))?;
+        let entry = programs.get(prog)
+            .ok_or_else(|| anyhow!("manifest has no program {prog:?}"))?;
+        let arr = entry.as_arr()
+            .ok_or_else(|| anyhow!("program {prog:?} entry not a list"))?;
+        arr.iter()
+            .map(|v| v.as_str().map(String::from)
+                .ok_or_else(|| anyhow!("bad param name")))
+            .collect()
+    }
+
+    /// Load + compile (or fetch from cache) a program by name; the HLO file
+    /// is `<name>.hlo.txt` under the artifacts directory.
+    pub fn program(&self, name: &str) -> Result<std::sync::Arc<Program>> {
+        if let Some(p) = self.cache.lock().unwrap().get(name) {
+            return Ok(p.clone());
+        }
+        let path = self.artifacts.join(format!("{name}.hlo.txt"));
+        let param_order = self.param_order(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?)
+            .map_err(|e| anyhow!("load {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let prog = std::sync::Arc::new(Program {
+            name: name.to_string(),
+            param_order,
+            exe,
+        });
+        self.cache.lock().unwrap().insert(name.to_string(), prog.clone());
+        Ok(prog)
+    }
+
+    /// Convenience: i32 leading input from a flat buffer.
+    pub fn i32_input(shape: &[usize], data: Vec<i32>) -> ParamValue {
+        ParamValue::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn f32_input(shape: &[usize], data: Vec<f32>) -> ParamValue {
+        ParamValue::F32 { shape: shape.to_vec(), data }
+    }
+
+    /// Leading-input count heuristic from manifest naming: entries that are
+    /// not weight tensors ("tokens", "lens", "images").
+    pub fn leading_count(order: &[String]) -> usize {
+        order.iter()
+            .take_while(|n| matches!(n.as_str(),
+                                     "tokens" | "lens" | "images"))
+            .count()
+    }
+
+    /// Weights view for a tensor map (helper for tests).
+    pub fn weights_from_map(map: crate::model::io::TensorMap) -> Weights {
+        Weights::new(map)
+    }
+
+    /// Batch-of-sequences helper: flatten Vec<Vec<i32>> into one i32 input.
+    pub fn tokens_input(batch: &[Vec<i32>]) -> ParamValue {
+        let b = batch.len();
+        let t = batch.first().map(|s| s.len()).unwrap_or(0);
+        let mut flat = Vec::with_capacity(b * t);
+        for s in batch {
+            assert_eq!(s.len(), t, "ragged batch");
+            flat.extend_from_slice(s);
+        }
+        ParamValue::I32 { shape: vec![b, t], data: flat }
+    }
+}
+
+/// Pure helper used by tests without a PJRT client.
+pub fn tensor_param(t: &Tensor) -> ParamValue {
+    ParamValue::from_tensor(t)
+}

@@ -1,0 +1,43 @@
+//! Marshalling between LTW tensors / rust buffers and xla Literals.
+
+use anyhow::Result;
+
+use crate::model::io::Tensor;
+
+/// An input value for a PJRT program parameter.
+#[derive(Clone, Debug)]
+pub enum ParamValue {
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+}
+
+impl ParamValue {
+    pub fn from_tensor(t: &Tensor) -> ParamValue {
+        match t {
+            Tensor::F32 { shape, data } => ParamValue::F32 {
+                shape: shape.clone(), data: data.clone(),
+            },
+            Tensor::I32 { shape, data } => ParamValue::I32 {
+                shape: shape.clone(), data: data.clone(),
+            },
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            ParamValue::F32 { shape, data } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            ParamValue::I32 { shape, data } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    ParamValue::from_tensor(t).to_literal()
+}

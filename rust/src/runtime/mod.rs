@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text programs emitted by
+//! python/compile/aot.py and executes them on the CPU PJRT client through
+//! the `xla` crate. One compiled executable per program signature, cached.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod literal;
+
+pub use engine::{Engine, Program};
+pub use literal::{tensor_to_literal, ParamValue};

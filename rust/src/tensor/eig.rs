@@ -1,0 +1,384 @@
+//! Symmetric eigendecomposition.
+//!
+//! This is the workhorse of the whole compression suite: Algorithm 1's
+//! `RightSingular_r[·]` calls are top-k eigenvector extractions of
+//! symmetric PSD accumulation matrices, and `sqrtm`/`invsqrtm` (the optimal
+//! pre-conditioner, paper §3.2) are built on it.
+//!
+//! §Perf: the production path [`eigh`] is Householder tridiagonalization +
+//! implicit-shift QL (EISPACK tred2/tql2) — ~40× faster than the cyclic
+//! Jacobi reference at n=256. [`eigh_jacobi`] is kept as the slow exact
+//! reference and cross-checked in tests.
+
+use super::matrix::Matrix;
+
+/// Eigendecomposition of a symmetric matrix: `a ≈ V diag(w) Vᵀ`.
+/// Returns (eigenvalues ascending, eigenvectors as columns of V).
+pub fn eigh(a: &Matrix) -> (Vec<f64>, Matrix) {
+    assert_eq!(a.rows(), a.cols(), "eigh needs square input");
+    let n = a.rows();
+    if n == 0 {
+        return (Vec::new(), Matrix::zeros(0, 0));
+    }
+    if n <= 4 {
+        return eigh_jacobi(a); // tiny: Jacobi is simplest and exact
+    }
+    let mut z = a.symmetrize();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    tred2(&mut z, &mut d, &mut e);
+    // §Perf: tql2's Givens accumulation touches two COLUMNS per rotation —
+    // strided in row-major storage. Rotating rows of the transpose keeps
+    // both operands contiguous (~2-3× at n ≥ 256).
+    let mut zt = z.transpose();
+    tql2_rows(&mut zt, &mut d, &mut e);
+    // sort ascending (tql2 output is not guaranteed sorted)
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    let w: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let mut v = Matrix::zeros(n, n);
+    for (jnew, &jold) in idx.iter().enumerate() {
+        for i in 0..n {
+            v[(i, jnew)] = zt[(jold, i)];
+        }
+    }
+    (w, v)
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form,
+/// accumulating the orthogonal transform in `a` (EISPACK tred2).
+fn tred2(a: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += a[(i, k)].abs();
+            }
+            if scale == 0.0 {
+                e[i] = a[(i, l)];
+            } else {
+                for k in 0..=l {
+                    a[(i, k)] /= scale;
+                    h += a[(i, k)] * a[(i, k)];
+                }
+                let f = a[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                a[(i, l)] = f - g;
+                let mut f_acc = 0.0;
+                for j in 0..=l {
+                    a[(j, i)] = a[(i, j)] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += a[(j, k)] * a[(i, k)];
+                    }
+                    for k in (j + 1)..=l {
+                        g += a[(k, j)] * a[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f_acc += e[j] * a[(i, j)];
+                }
+                let hh = f_acc / (h + h);
+                for j in 0..=l {
+                    let f = a[(i, j)];
+                    let gj = e[j] - hh * f;
+                    e[j] = gj;
+                    for k in 0..=j {
+                        let delta = f * e[k] + gj * a[(i, k)];
+                        a[(j, k)] -= delta;
+                    }
+                }
+            }
+        } else {
+            e[i] = a[(i, l)];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += a[(i, k)] * a[(k, j)];
+                }
+                for k in 0..i {
+                    let delta = g * a[(k, i)];
+                    a[(k, j)] -= delta;
+                }
+            }
+        }
+        d[i] = a[(i, i)];
+        a[(i, i)] = 1.0;
+        for j in 0..i {
+            a[(j, i)] = 0.0;
+            a[(i, j)] = 0.0;
+        }
+    }
+}
+
+/// Implicit-shift QL iteration for a symmetric tridiagonal matrix with
+/// eigenvector accumulation (EISPACK tql2), operating on the TRANSPOSED
+/// transform (eigenvectors as rows) so each Givens rotation is two
+/// contiguous row updates. d = diagonal, e = subdiagonal (e[0] unused).
+fn tql2_rows(zt: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find a negligible subdiagonal element
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter <= 64, "tql2: no convergence");
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sign_r = if g >= 0.0 { r.abs() } else { -r.abs() };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0;
+            let mut underflow = false;
+            for i in (l..m).rev() {
+                let f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate the rotation: rows i and i+1 of zt, both
+                // contiguous in memory
+                {
+                    let (row_i, row_i1) = {
+                        let base = zt.data_mut();
+                        let (lo, hi) = base.split_at_mut((i + 1) * n);
+                        (&mut lo[i * n..], &mut hi[..n])
+                    };
+                    for k in 0..n {
+                        let f2 = row_i1[k];
+                        row_i1[k] = s * row_i[k] + c * f2;
+                        row_i[k] = c * row_i[k] - s * f2;
+                    }
+                }
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+}
+
+/// Cyclic-Jacobi reference implementation (slow, backward-stable).
+pub fn eigh_jacobi(a: &Matrix) -> (Vec<f64>, Matrix) {
+    assert_eq!(a.rows(), a.cols(), "eigh needs square input");
+    let n = a.rows();
+    let mut m = a.symmetrize();
+    let mut v = Matrix::eye(n);
+    let max_sweeps = 64;
+    let eps = 1e-14;
+
+    for _sweep in 0..max_sweeps {
+        // Frobenius norm of the strict upper triangle.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        let scale: f64 = m.frob2().max(1e-300);
+        if off <= eps * eps * scale {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                // threshold Jacobi (§Perf): skip rotations already below
+                // the final relative accuracy — cuts late-sweep work ~n²
+                let scale = (m[(p, p)].abs() * m[(q, q)].abs()).sqrt();
+                if apq.abs() <= 1e-13 * scale.max(1e-300) {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum()
+                    / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply rotation G(p,q,θ) on both sides: m = Gᵀ m G.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    let mut idx: Vec<usize> = (0..n).collect();
+    let w: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    idx.sort_by(|&i, &j| w[i].partial_cmp(&w[j]).unwrap());
+    let wv: Vec<f64> = idx.iter().map(|&i| w[i]).collect();
+    let vv = v.select_cols(&idx);
+    (wv, vv)
+}
+
+/// Top-k eigenvectors of a symmetric matrix, returned as ROWS (k×n) —
+/// this is Algorithm 1's `RightSingular_k[·]` on a PSD accumulation.
+pub fn topk_eigvecs(a: &Matrix, k: usize) -> Matrix {
+    let (w, v) = eigh(a);
+    let n = w.len();
+    let k = k.min(n);
+    // eigenvalues ascend; take the last k, largest first.
+    let idx: Vec<usize> = (0..k).map(|i| n - 1 - i).collect();
+    v.select_cols(&idx).transpose()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn reconstruct(w: &[f64], v: &Matrix) -> Matrix {
+        let n = w.len();
+        let mut s = Matrix::zeros(n, n);
+        for i in 0..n {
+            s[(i, i)] = w[i];
+        }
+        v.matmul(&s).matmul_bt(v)
+    }
+
+    #[test]
+    fn eigh_reconstructs() {
+        let mut rng = Rng::new(1);
+        for n in [1usize, 2, 3, 8, 24] {
+            let g = rng.normal_matrix(n, n);
+            let a = g.matmul_bt(&g); // PSD
+            let (w, v) = eigh(&a);
+            assert!(reconstruct(&w, &v).max_abs_diff(&a) < 1e-8 * (n as f64),
+                    "n={n}");
+            // orthonormal columns
+            let vtv = v.matmul_at(&v);
+            assert!(vtv.max_abs_diff(&Matrix::eye(n)) < 1e-9);
+            // ascending
+            for i in 1..n {
+                assert!(w[i] >= w[i - 1] - 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn eigh_known_values() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let (w, _) = eigh(&a);
+        assert!((w[0] - 1.0).abs() < 1e-12);
+        assert!((w[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topk_rows_orthonormal_and_principal() {
+        let mut rng = Rng::new(5);
+        let g = rng.normal_matrix(12, 30);
+        let a = g.matmul_bt(&g);
+        let top = topk_eigvecs(&a, 4); // 4x12
+        let tt = top.matmul_bt(&top);
+        assert!(tt.max_abs_diff(&Matrix::eye(4)) < 1e-9);
+        // Rayleigh quotients should match the top eigenvalues.
+        let (w, _) = eigh(&a);
+        let r0: f64 = {
+            let v: Vec<f64> = top.row(0).to_vec();
+            let av = a.matvec(&v);
+            v.iter().zip(&av).map(|(x, y)| x * y).sum()
+        };
+        assert!((r0 - w[11]).abs() < 1e-6 * w[11].abs().max(1.0));
+    }
+}
+
+#[cfg(test)]
+mod tred_tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fast_eigh_matches_jacobi_reference() {
+        let mut rng = Rng::new(77);
+        for n in [5usize, 9, 16, 33, 64] {
+            let g = rng.normal_matrix(n, n);
+            let a = g.matmul_bt(&g);
+            let (wf, vf) = eigh(&a);
+            let (wj, _) = eigh_jacobi(&a);
+            for (x, y) in wf.iter().zip(&wj) {
+                assert!((x - y).abs() < 1e-8 * (1.0 + y.abs()),
+                        "n={n}: {x} vs {y}");
+            }
+            // reconstruction + orthogonality
+            let mut s = Matrix::zeros(n, n);
+            for i in 0..n {
+                s[(i, i)] = wf[i];
+            }
+            let rec = vf.matmul(&s).matmul_bt(&vf);
+            assert!(rec.max_abs_diff(&a) < 1e-7 * (n as f64), "n={n}");
+            let vtv = vf.matmul_at(&vf);
+            assert!(vtv.max_abs_diff(&Matrix::eye(n)) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn fast_eigh_handles_degenerate() {
+        // repeated eigenvalues + zero rows
+        let mut a = Matrix::eye(8);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = 3.0;
+        a[(7, 7)] = 0.0;
+        let (w, v) = eigh(&a);
+        assert!((w[0] - 0.0).abs() < 1e-12);
+        assert!((w[7] - 3.0).abs() < 1e-12);
+        let vtv = v.matmul_at(&v);
+        assert!(vtv.max_abs_diff(&Matrix::eye(8)) < 1e-10);
+    }
+}

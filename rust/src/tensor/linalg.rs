@@ -1,0 +1,250 @@
+//! Higher-level decompositions on top of eigh/svd: PSD square roots (the
+//! optimal pre-conditioner P = C^{1/2}, paper §3.2), Moore–Penrose
+//! pseudo-inverse, Cholesky, and linear solves.
+
+use super::eig::eigh;
+use super::matrix::Matrix;
+use super::svd::svd;
+
+/// Symmetric PSD square root via eigendecomposition.
+pub fn sqrtm_psd(c: &Matrix) -> Matrix {
+    let (w, v) = eigh(c);
+    scaled_outer(&v, &w.iter().map(|&x| x.max(0.0).sqrt()).collect::<Vec<_>>())
+}
+
+/// (C^{1/2}, C^{-1/2}) from a single eigendecomposition — the root-cov
+/// pre-conditioner pair (§Perf: halves the dominant eigh cost).
+pub fn sqrt_and_invsqrt_psd(c: &Matrix) -> (Matrix, Matrix) {
+    let (w, v) = eigh(c);
+    let wmax = w.last().copied().unwrap_or(0.0).max(0.0);
+    let roots: Vec<f64> = w.iter().map(|&x| x.max(0.0).sqrt()).collect();
+    let invs: Vec<f64> = w.iter()
+        .map(|&x| {
+            if x > 1e-10 * wmax.max(1.0) {
+                1.0 / x.max(0.0).sqrt()
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    (scaled_outer(&v, &roots), scaled_outer(&v, &invs))
+}
+
+/// Pseudo-inverse of a symmetric PSD matrix via eigendecomposition
+/// (§Perf: much cheaper than the SVD-based general `pinv`).
+pub fn pinv_psd(c: &Matrix) -> Matrix {
+    let (w, v) = eigh(c);
+    let wmax = w.last().copied().unwrap_or(0.0).max(0.0);
+    let inv: Vec<f64> = w.iter()
+        .map(|&x| if x > 1e-12 * wmax.max(1.0) { 1.0 / x } else { 0.0 })
+        .collect();
+    scaled_outer(&v, &inv)
+}
+
+/// Pseudo-inverse square root of a symmetric PSD matrix.
+pub fn invsqrtm_psd(c: &Matrix) -> Matrix {
+    let (w, v) = eigh(c);
+    let wmax = w.last().copied().unwrap_or(0.0).max(0.0);
+    let inv: Vec<f64> = w
+        .iter()
+        .map(|&x| {
+            if x > 1e-10 * wmax.max(1.0) {
+                1.0 / x.max(0.0).sqrt()
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    scaled_outer(&v, &inv)
+}
+
+/// V diag(s) Vᵀ.
+fn scaled_outer(v: &Matrix, s: &[f64]) -> Matrix {
+    let n = v.rows();
+    let mut vs = v.clone();
+    for j in 0..s.len() {
+        for i in 0..n {
+            vs[(i, j)] *= s[j];
+        }
+    }
+    vs.matmul_bt(v)
+}
+
+/// Moore–Penrose pseudo-inverse via SVD.
+pub fn pinv(a: &Matrix) -> Matrix {
+    let f = svd(a);
+    let smax = f.s.first().copied().unwrap_or(0.0);
+    let cutoff = 1e-12 * smax.max(1.0);
+    // A⁺ = V S⁺ Uᵀ
+    let mut v = f.vt.transpose();
+    for j in 0..f.s.len() {
+        let inv = if f.s[j] > cutoff { 1.0 / f.s[j] } else { 0.0 };
+        for i in 0..v.rows() {
+            v[(i, j)] *= inv;
+        }
+    }
+    v.matmul_bt(&f.u)
+}
+
+/// Cholesky factor L with A = L Lᵀ (lower). Returns None if not PD.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows(), a.cols());
+    let n = a.rows();
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[(i, i)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve A X = B for square A (partial-pivot LU). Panics if singular.
+pub fn solve(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), a.cols());
+    assert_eq!(a.rows(), b.rows());
+    let n = a.rows();
+    let m = b.cols();
+    let mut lu = a.clone();
+    let mut x = b.clone();
+    for k in 0..n {
+        // pivot
+        let mut p = k;
+        for i in (k + 1)..n {
+            if lu[(i, k)].abs() > lu[(p, k)].abs() {
+                p = i;
+            }
+        }
+        if lu[(p, k)].abs() < 1e-300 {
+            panic!("solve: singular matrix");
+        }
+        if p != k {
+            for j in 0..n {
+                let t = lu[(k, j)];
+                lu[(k, j)] = lu[(p, j)];
+                lu[(p, j)] = t;
+            }
+            for j in 0..m {
+                let t = x[(k, j)];
+                x[(k, j)] = x[(p, j)];
+                x[(p, j)] = t;
+            }
+        }
+        let piv = lu[(k, k)];
+        for i in (k + 1)..n {
+            let f = lu[(i, k)] / piv;
+            if f == 0.0 {
+                continue;
+            }
+            lu[(i, k)] = f;
+            for j in (k + 1)..n {
+                lu[(i, j)] -= f * lu[(k, j)];
+            }
+            for j in 0..m {
+                x[(i, j)] -= f * x[(k, j)];
+            }
+        }
+    }
+    // back substitution
+    for k in (0..n).rev() {
+        let piv = lu[(k, k)];
+        for j in 0..m {
+            x[(k, j)] /= piv;
+        }
+        for i in 0..k {
+            let f = lu[(i, k)];
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..m {
+                x[(i, j)] -= f * x[(k, j)];
+            }
+        }
+    }
+    x
+}
+
+/// Activation-aware loss tr[(W−Ŵ) C (W−Ŵ)ᵀ]  (paper Eq 4/35).
+pub fn act_loss(w: &Matrix, w_hat: &Matrix, c: &Matrix) -> f64 {
+    let d = w.sub(w_hat);
+    d.matmul(c).matmul_bt(&d).trace()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sqrtm_squares_back() {
+        let mut rng = Rng::new(8);
+        let g = rng.normal_matrix(10, 16);
+        let c = g.matmul_bt(&g);
+        let r = sqrtm_psd(&c);
+        assert!(r.matmul(&r).max_abs_diff(&c) < 1e-8);
+        assert!(r.max_abs_diff(&r.symmetrize()) < 1e-10);
+    }
+
+    #[test]
+    fn invsqrtm_whitens() {
+        let mut rng = Rng::new(9);
+        let g = rng.normal_matrix(8, 24);
+        let c = g.matmul_bt(&g);
+        let ri = invsqrtm_psd(&c);
+        let r = sqrtm_psd(&c);
+        // ri * c * ri ≈ I (c is full rank a.s.)
+        let w = ri.matmul(&c).matmul(&ri);
+        assert!(w.max_abs_diff(&Matrix::eye(8)) < 1e-8);
+        // ri ≈ inverse of r
+        assert!(ri.matmul(&r).max_abs_diff(&Matrix::eye(8)) < 1e-8);
+    }
+
+    #[test]
+    fn pinv_moore_penrose() {
+        let mut rng = Rng::new(10);
+        for (m, n) in [(6, 4), (4, 6), (5, 5)] {
+            let a = rng.normal_matrix(m, n);
+            let p = pinv(&a);
+            // A A⁺ A = A ;  A⁺ A A⁺ = A⁺
+            assert!(a.matmul(&p).matmul(&a).max_abs_diff(&a) < 1e-9);
+            assert!(p.matmul(&a).matmul(&p).max_abs_diff(&p) < 1e-9);
+            // symmetry of projectors
+            let ap = a.matmul(&p);
+            assert!(ap.max_abs_diff(&ap.transpose()) < 1e-9);
+            let pa = p.matmul(&a);
+            assert!(pa.max_abs_diff(&pa.transpose()) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn cholesky_roundtrip_and_rejects_indefinite() {
+        let mut rng = Rng::new(11);
+        let g = rng.normal_matrix(7, 14);
+        let c = g.matmul_bt(&g);
+        let l = cholesky(&c).unwrap();
+        assert!(l.matmul_bt(&l).max_abs_diff(&c) < 1e-9);
+        let mut ind = Matrix::eye(3);
+        ind[(2, 2)] = -1.0;
+        assert!(cholesky(&ind).is_none());
+    }
+
+    #[test]
+    fn solve_matches_pinv_for_square() {
+        let mut rng = Rng::new(12);
+        let a = rng.normal_matrix(6, 6);
+        let b = rng.normal_matrix(6, 3);
+        let x = solve(&a, &b);
+        assert!(a.matmul(&x).max_abs_diff(&b) < 1e-9);
+    }
+}

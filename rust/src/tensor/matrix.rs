@@ -1,0 +1,390 @@
+//! Row-major f64 dense matrix with the handful of BLAS-3 style kernels the
+//! compression algorithms need. The matmul family is cache-blocked and is
+//! the §Perf hot path for the rust-side pipeline.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize,
+                   f: impl Fn(usize, usize) -> f64) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix {
+            rows,
+            cols,
+            data: data.iter().map(|&v| v as f64).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// C = A · B. ikj loop order (row-major streaming) — the fast path.
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "matmul shape {}x{} @ {}x{}",
+                   self.rows, self.cols, b.rows, b.cols);
+        let mut c = Matrix::zeros(self.rows, b.cols);
+        let n = b.cols;
+        for i in 0..self.rows {
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for k in 0..self.cols {
+                let aik = self.data[i * self.cols + k];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[k * n..(k + 1) * n];
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// C = A · Bᵀ — dot-product form, both operands stream row-major.
+    pub fn matmul_bt(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.cols, "matmul_bt shape");
+        let mut c = Matrix::zeros(self.rows, b.rows);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for j in 0..b.rows {
+                let brow = b.row(j);
+                let mut s = 0.0;
+                for k in 0..self.cols {
+                    s += arow[k] * brow[k];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    /// C = Aᵀ · B.
+    pub fn matmul_at(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.rows, b.rows, "matmul_at shape");
+        let mut c = Matrix::zeros(self.cols, b.cols);
+        let n = b.cols;
+        for k in 0..self.rows {
+            let arow = self.row(k);
+            let brow = &b.data[k * n..(k + 1) * n];
+            for i in 0..self.cols {
+                let aki = arow[i];
+                if aki == 0.0 {
+                    continue;
+                }
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += aki * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// y = A · x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| {
+                let row = self.row(i);
+                row.iter().zip(x).map(|(a, b)| a * b).sum()
+            })
+            .collect()
+    }
+
+    pub fn add(&self, b: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        let data = self.data.iter().zip(&b.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, b: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        let data = self.data.iter().zip(&b.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn add_inplace(&mut self, b: &Matrix) {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        for (a, b) in self.data.iter_mut().zip(&b.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> Matrix {
+        let data = self.data.iter().map(|v| v * s).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scale_inplace(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Squared Frobenius norm.
+    pub fn frob2(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum()
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).sum()
+    }
+
+    /// Rows [r0, r1) as a new matrix.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Matrix {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    /// Columns [c0, c1) as a new matrix.
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Matrix {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        Matrix::from_fn(self.rows, c1 - c0, |i, j| self[(i, j + c0)])
+    }
+
+    /// Gather the given columns.
+    pub fn select_cols(&self, idx: &[usize]) -> Matrix {
+        Matrix::from_fn(self.rows, idx.len(), |i, j| self[(i, idx[j])])
+    }
+
+    /// Stack vertically.
+    pub fn vstack(blocks: &[&Matrix]) -> Matrix {
+        assert!(!blocks.is_empty());
+        let cols = blocks[0].cols;
+        let rows = blocks.iter().map(|b| b.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for b in blocks {
+            assert_eq!(b.cols, cols);
+            data.extend_from_slice(&b.data);
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Stack horizontally.
+    pub fn hstack(blocks: &[&Matrix]) -> Matrix {
+        assert!(!blocks.is_empty());
+        let rows = blocks[0].rows;
+        let cols = blocks.iter().map(|b| b.cols).sum();
+        let mut m = Matrix::zeros(rows, cols);
+        let mut off = 0;
+        for b in blocks {
+            assert_eq!(b.rows, rows);
+            for i in 0..rows {
+                m.row_mut(i)[off..off + b.cols].copy_from_slice(b.row(i));
+            }
+            off += b.cols;
+        }
+        m
+    }
+
+    pub fn max_abs_diff(&self, b: &Matrix) -> f64 {
+        self.data
+            .iter()
+            .zip(&b.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn symmetrize(&self) -> Matrix {
+        assert_eq!(self.rows, self.cols);
+        Matrix::from_fn(self.rows, self.cols,
+                        |i, j| 0.5 * (self[(i, j)] + self[(j, i)]))
+    }
+
+    /// Column-token covariance C = (X Xᵀ + λ·tr/d·I)/l (paper Remark 3).
+    pub fn covariance(&self, lam_rel: f64) -> Matrix {
+        let l = self.cols.max(1) as f64;
+        let mut c = self.matmul_bt(self);
+        let tr = c.trace() / c.rows.max(1) as f64;
+        let lam = lam_rel * tr.max(1e-12);
+        for i in 0..c.rows {
+            c[(i, i)] += lam;
+        }
+        c.scale_inplace(1.0 / l);
+        c.symmetrize()
+    }
+
+    /// Column mean μ = X·1/l.
+    pub fn col_mean(&self) -> Vec<f64> {
+        let l = self.cols.max(1) as f64;
+        (0..self.rows)
+            .map(|i| self.row(i).iter().sum::<f64>() / l)
+            .collect()
+    }
+
+    /// X − μ·1ᵀ.
+    pub fn center_cols(&self, mu: &[f64]) -> Matrix {
+        assert_eq!(mu.len(), self.rows);
+        Matrix::from_fn(self.rows, self.cols, |i, j| self[(i, j)] - mu[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_naive() {
+        let a = Matrix::from_fn(3, 4, |i, j| (i * 4 + j) as f64);
+        let b = Matrix::from_fn(4, 2, |i, j| (i + j) as f64 * 0.5);
+        let c = a.matmul(&b);
+        for i in 0..3 {
+            for j in 0..2 {
+                let mut s = 0.0;
+                for k in 0..4 {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                assert!((c[(i, j)] - s).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let a = Matrix::from_fn(5, 7, |i, j| ((i * 13 + j * 7) % 11) as f64 - 5.0);
+        let b = Matrix::from_fn(7, 4, |i, j| ((i * 5 + j * 3) % 9) as f64 - 4.0);
+        let c0 = a.matmul(&b);
+        let c1 = a.matmul_bt(&b.transpose());
+        let c2 = a.transpose().matmul_at(&b);
+        assert!(c0.max_abs_diff(&c1) < 1e-12);
+        assert!(c0.max_abs_diff(&c2) < 1e-12);
+    }
+
+    #[test]
+    fn stack_and_slice_roundtrip() {
+        let a = Matrix::from_fn(3, 4, |i, j| (i * 4 + j) as f64);
+        let top = a.slice_rows(0, 2);
+        let bot = a.slice_rows(2, 3);
+        assert_eq!(Matrix::vstack(&[&top, &bot]), a);
+        let l = a.slice_cols(0, 1);
+        let r = a.slice_cols(1, 4);
+        assert_eq!(Matrix::hstack(&[&l, &r]), a);
+    }
+
+    #[test]
+    fn covariance_properties() {
+        let x = Matrix::from_fn(4, 50, |i, j| ((i + 1) * j % 7) as f64 - 3.0);
+        let c = x.covariance(1e-6);
+        assert_eq!(c, c.symmetrize());
+        // PSD: quadratic form nonneg for a few vectors
+        for seed in 0..5u64 {
+            let v: Vec<f64> = (0..4)
+                .map(|i| ((seed as usize * 31 + i * 17) % 13) as f64 - 6.0)
+                .collect();
+            let cv = c.matvec(&v);
+            let q: f64 = v.iter().zip(&cv).map(|(a, b)| a * b).sum();
+            assert!(q >= -1e-9);
+        }
+    }
+
+    #[test]
+    fn center_cols_zero_mean() {
+        let x = Matrix::from_fn(3, 20, |i, j| (i * j) as f64 + 1.0);
+        let mu = x.col_mean();
+        let xc = x.center_cols(&mu);
+        for m in xc.col_mean() {
+            assert!(m.abs() < 1e-12);
+        }
+    }
+}

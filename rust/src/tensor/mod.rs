@@ -1,0 +1,13 @@
+//! Dense linear-algebra substrate (no BLAS/LAPACK in this environment —
+//! built from scratch, property-tested; see DESIGN.md §2).
+
+pub mod eig;
+pub mod linalg;
+pub mod matrix;
+pub mod svd;
+
+pub use eig::{eigh, topk_eigvecs};
+pub use linalg::{cholesky, invsqrtm_psd, pinv, pinv_psd, solve,
+                 sqrt_and_invsqrt_psd, sqrtm_psd};
+pub use matrix::Matrix;
+pub use svd::{svd, svd_truncated, Svd};

@@ -1,0 +1,123 @@
+//! Micro-benchmark substrate (criterion is unavailable offline).
+//!
+//! `Bench::run` measures a closure with warmup, adaptive iteration count,
+//! and reports min/mean/p50/p95 wall time. All `cargo bench` targets
+//! (harness = false) are built on this.
+
+use std::time::Instant;
+
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Stats {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  min {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bench {
+    /// Target total measurement time per case (seconds).
+    pub budget_s: f64,
+    /// Hard cap on iterations.
+    pub max_iters: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { budget_s: 1.0, max_iters: 1000, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(budget_s: f64) -> Self {
+        Bench { budget_s, ..Default::default() }
+    }
+
+    /// Measure `f`, printing the stats line immediately.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Stats {
+        // warmup + calibration
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let cap = self.max_iters.max(1);
+        let iters = ((self.budget_s / once) as usize)
+            .clamp(3.min(cap), cap);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = Stats {
+            name: name.to_string(),
+            iters,
+            mean_ns: samples.iter().sum::<f64>() / iters as f64,
+            min_ns: samples[0],
+            p50_ns: samples[iters / 2],
+            p95_ns: samples[(iters * 95) / 100..].first().copied()
+                .unwrap_or(samples[iters - 1]),
+        };
+        println!("{}", stats.line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new(0.01);
+        let s = b.run("noop-ish", || {
+            let mut x = 0u64;
+            for i in 0..100u64 {
+                x = x.wrapping_add(i * i);
+            }
+            x
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.mean_ns * 1.5);
+    }
+
+    #[test]
+    fn formats_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5.0e4).ends_with("µs"));
+        assert!(fmt_ns(5.0e7).ends_with("ms"));
+        assert!(fmt_ns(5.0e9).ends_with("s"));
+    }
+}

@@ -1,0 +1,416 @@
+//! Minimal JSON substrate (serde is unavailable offline): a `Value` tree,
+//! a recursive-descent parser, and a writer. Handles everything the
+//! artifacts pipeline emits (manifest.json, goldens.json) plus the report
+//! outputs this crate writes.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn idx(&self, i: usize) -> Option<&Value> {
+        match self {
+            Value::Arr(a) => a.get(i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Path lookup: `v.path(&["models", "opt-mini-m", "base_ppl"])`.
+    pub fn path(&self, keys: &[&str]) -> Option<&Value> {
+        let mut cur = self;
+        for k in keys {
+            cur = cur.get(k)?;
+        }
+        Some(cur)
+    }
+
+    pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+        Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn to_string_pretty(&self) -> String {
+        let mut s = String::new();
+        write_value(&mut s, self, 0, true);
+        s
+    }
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Num(v)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Self {
+        Value::Num(v as f64)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::Str(v)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+impl From<Vec<f64>> for Value {
+    fn from(v: Vec<f64>) -> Self {
+        Value::Arr(v.into_iter().map(Value::Num).collect())
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn write_num(out: &mut String, n: f64) {
+    if n.is_finite() {
+        if n == n.trunc() && n.abs() < 1e15 {
+            let _ = write!(out, "{}", n as i64);
+        } else {
+            let _ = write!(out, "{}", n);
+        }
+    } else {
+        out.push_str("null"); // JSON has no NaN/Inf
+    }
+}
+
+fn write_value(out: &mut String, v: &Value, indent: usize, pretty: bool) {
+    let pad = if pretty { "  ".repeat(indent + 1) } else { String::new() };
+    let padc = if pretty { "  ".repeat(indent) } else { String::new() };
+    let nl = if pretty { "\n" } else { "" };
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Num(n) => write_num(out, *n),
+        Value::Str(s) => write_escaped(out, s),
+        Value::Arr(a) => {
+            if a.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(nl);
+                out.push_str(&pad);
+                write_value(out, item, indent + 1, pretty);
+            }
+            out.push_str(nl);
+            out.push_str(&padc);
+            out.push(']');
+        }
+        Value::Obj(m) => {
+            if m.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, item)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(nl);
+                out.push_str(&pad);
+                write_escaped(out, k);
+                out.push_str(": ");
+                write_value(out, item, indent + 1, pretty);
+            }
+            out.push_str(nl);
+            out.push_str(&padc);
+            out.push('}');
+        }
+    }
+}
+
+pub fn parse(text: &str) -> Result<Value> {
+    let bytes = text.as_bytes();
+    let mut pos = 0;
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        bail!("trailing characters at {pos}");
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<()> {
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        bail!("expected {:?} at {}", c as char, pos)
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Value> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        bail!("unexpected end of input");
+    }
+    match b[*pos] {
+        b'{' => {
+            *pos += 1;
+            let mut m = BTreeMap::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == b'}' {
+                *pos += 1;
+                return Ok(Value::Obj(m));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = match parse_value(b, pos)? {
+                    Value::Str(s) => s,
+                    _ => bail!("object key must be string"),
+                };
+                expect(b, pos, b':')?;
+                let v = parse_value(b, pos)?;
+                m.insert(key, v);
+                skip_ws(b, pos);
+                if *pos >= b.len() {
+                    bail!("unterminated object");
+                }
+                match b[*pos] {
+                    b',' => *pos += 1,
+                    b'}' => {
+                        *pos += 1;
+                        return Ok(Value::Obj(m));
+                    }
+                    c => bail!("bad object separator {:?}", c as char),
+                }
+            }
+        }
+        b'[' => {
+            *pos += 1;
+            let mut a = Vec::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == b']' {
+                *pos += 1;
+                return Ok(Value::Arr(a));
+            }
+            loop {
+                a.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                if *pos >= b.len() {
+                    bail!("unterminated array");
+                }
+                match b[*pos] {
+                    b',' => *pos += 1,
+                    b']' => {
+                        *pos += 1;
+                        return Ok(Value::Arr(a));
+                    }
+                    c => bail!("bad array separator {:?}", c as char),
+                }
+            }
+        }
+        b'"' => parse_string(b, pos).map(Value::Str),
+        b't' => {
+            literal(b, pos, "true")?;
+            Ok(Value::Bool(true))
+        }
+        b'f' => {
+            literal(b, pos, "false")?;
+            Ok(Value::Bool(false))
+        }
+        b'n' => {
+            literal(b, pos, "null")?;
+            Ok(Value::Null)
+        }
+        _ => parse_number(b, pos),
+    }
+}
+
+fn literal(b: &[u8], pos: &mut usize, lit: &str) -> Result<()> {
+    if b.len() - *pos >= lit.len() && &b[*pos..*pos + lit.len()] == lit.as_bytes() {
+        *pos += lit.len();
+        Ok(())
+    } else {
+        bail!("bad literal at {pos}")
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    debug_assert_eq!(b[*pos], b'"');
+    *pos += 1;
+    let mut s = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(s);
+            }
+            b'\\' => {
+                *pos += 1;
+                if *pos >= b.len() {
+                    bail!("bad escape");
+                }
+                match b[*pos] {
+                    b'"' => s.push('"'),
+                    b'\\' => s.push('\\'),
+                    b'/' => s.push('/'),
+                    b'n' => s.push('\n'),
+                    b't' => s.push('\t'),
+                    b'r' => s.push('\r'),
+                    b'b' => s.push('\u{8}'),
+                    b'f' => s.push('\u{c}'),
+                    b'u' => {
+                        if *pos + 4 >= b.len() {
+                            bail!("bad \\u escape");
+                        }
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
+                        let code = u32::from_str_radix(hex, 16)?;
+                        s.push(char::from_u32(code)
+                            .ok_or_else(|| anyhow!("bad codepoint"))?);
+                        *pos += 4;
+                    }
+                    c => bail!("unknown escape {:?}", c as char),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // copy a UTF-8 run
+                let start = *pos;
+                while *pos < b.len() && b[*pos] != b'"' && b[*pos] != b'\\' {
+                    *pos += 1;
+                }
+                s.push_str(std::str::from_utf8(&b[start..*pos])?);
+            }
+        }
+    }
+    bail!("unterminated string")
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Value> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos],
+                    b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*pos])?;
+    let n: f64 = text.parse().map_err(|_| anyhow!("bad number {text:?}"))?;
+    Ok(Value::Num(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let v = Value::obj(vec![
+            ("name", "latentllm".into()),
+            ("ratio", 0.3.into()),
+            ("flags", Value::Arr(vec![true.into(), Value::Null, 42.0.into()])),
+            ("nested", Value::obj(vec![("k", "v\n\"q\"".into())])),
+        ]);
+        let text = v.to_string_pretty();
+        let back = parse(&text).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn parses_scientific_and_negative() {
+        let v = parse("[-1.5e-3, 2E4, 0.0, -7]").unwrap();
+        let a = v.as_arr().unwrap();
+        assert!((a[0].as_f64().unwrap() + 0.0015).abs() < 1e-12);
+        assert_eq!(a[1].as_f64().unwrap(), 20000.0);
+        assert_eq!(a[3].as_f64().unwrap(), -7.0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,,2]").is_err());
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("{\"a\":1} trailing").is_err());
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        let v = parse("\"\\u00e9\\n\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "é\n");
+    }
+}

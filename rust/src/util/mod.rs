@@ -1,0 +1,9 @@
+//! Substrate utilities built in-repo (the environment is offline, so the
+//! usual crates — serde, rand, proptest, criterion — are replaced by these
+//! small, tested implementations; see DESIGN.md §2).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod toml;

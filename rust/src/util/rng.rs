@@ -1,0 +1,190 @@
+//! Deterministic RNG substrate: xoshiro256++ seeded via SplitMix64,
+//! Gaussian sampling (Box–Muller), and the Wishart-correlated problem
+//! generators used by the appendix figures (Figs 7–16: "correlation is
+//! sampled from Wishart distribution with covariance of identity or
+//! off-diagonal decaying of 0.9 factor").
+
+use crate::tensor::Matrix;
+
+/// xoshiro256++ — fast, high-quality, reproducible across platforms.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    spare: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [splitmix64(&mut sm), splitmix64(&mut sm),
+                 splitmix64(&mut sm), splitmix64(&mut sm)];
+        Rng { s, spare: None }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (with cached spare).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let th = 2.0 * std::f64::consts::PI * u2;
+            self.spare = Some(r * th.sin());
+            return r * th.cos();
+        }
+    }
+
+    pub fn normal_matrix(&mut self, rows: usize, cols: usize) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for v in m.data_mut() {
+            *v = self.normal();
+        }
+        m
+    }
+
+    /// Random permutation of 0..n (Fisher–Yates).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            p.swap(i, self.below(i + 1));
+        }
+        p
+    }
+}
+
+/// Σ with Σᵢⱼ = decay^|i−j| — the appendix figures' base covariance.
+pub fn decaying_covariance(d: usize, decay: f64) -> Matrix {
+    let mut c = Matrix::zeros(d, d);
+    for i in 0..d {
+        for j in 0..d {
+            c[(i, j)] = decay.powi((i as i64 - j as i64).unsigned_abs() as i32);
+        }
+    }
+    c
+}
+
+/// Wishart sample with scale Σ and `dof` degrees of freedom, normalized:
+/// C = (L G)(L G)ᵀ / dof where Σ = L Lᵀ.
+pub fn wishart(rng: &mut Rng, sigma: &Matrix, dof: usize) -> Matrix {
+    let l = crate::tensor::linalg::cholesky(sigma)
+        .expect("wishart scale must be PD");
+    let g = rng.normal_matrix(sigma.rows(), dof);
+    let lg = l.matmul(&g);
+    let mut c = lg.matmul_bt(&lg);
+    c.scale_inplace(1.0 / dof as f64);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::new(7);
+        let mut sum = 0.0;
+        for _ in 0..20_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / 20_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 50_000;
+        let (mut m, mut v) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            m += x;
+            v += x * x;
+        }
+        m /= n as f64;
+        v = v / n as f64 - m * m;
+        assert!(m.abs() < 0.03, "mean {m}");
+        assert!((v - 1.0).abs() < 0.05, "var {v}");
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Rng::new(9);
+        let p = r.permutation(57);
+        let mut seen = vec![false; 57];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+    }
+
+    #[test]
+    fn wishart_is_psd_and_near_sigma() {
+        let mut r = Rng::new(11);
+        let sigma = decaying_covariance(16, 0.9);
+        let c = wishart(&mut r, &sigma, 1024);
+        // symmetric
+        for i in 0..16 {
+            for j in 0..16 {
+                assert!((c[(i, j)] - c[(j, i)]).abs() < 1e-12);
+            }
+        }
+        // concentrates around sigma for large dof
+        let mut err = 0.0;
+        for i in 0..16 {
+            for j in 0..16 {
+                err += (c[(i, j)] - sigma[(i, j)]).powi(2);
+            }
+        }
+        assert!(err.sqrt() < 1.5, "deviation {err}");
+    }
+}

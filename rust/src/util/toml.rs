@@ -1,0 +1,186 @@
+//! TOML-lite parser — the coordinator's config-file substrate.
+//!
+//! Supports the subset a deployment config needs: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / integer / float /
+//! bool / homogeneous-array values, `#` comments. Produces a flat
+//! `section.key -> Value` map (dotted paths).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+}
+
+pub type Table = BTreeMap<String, Value>;
+
+pub fn parse(text: &str) -> Result<Table> {
+    let mut out = Table::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: bad section header", lineno + 1);
+            };
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected key = value", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {}", lineno + 1, e))?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.insert(full, val);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            bail!("unterminated string");
+        };
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")
+            .replace("\\n", "\n")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let Some(inner) = rest.strip_suffix(']') else {
+            bail!("unterminated array");
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: Result<Vec<Value>> =
+            split_top(inner).iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+fn split_top(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let (mut depth, mut in_str, mut start) = (0usize, false, 0usize);
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = parse(
+            "# top comment\n\
+             title = \"latentllm\"\n\
+             [serve]\n\
+             max_batch = 8   # inline comment\n\
+             max_wait_ms = 5.5\n\
+             methods = [\"plain\", \"latentllm\"]\n\
+             verbose = false\n\
+             [serve.deep]\n\
+             x = [1, 2, 3]\n",
+        )
+        .unwrap();
+        assert_eq!(t["title"].as_str().unwrap(), "latentllm");
+        assert_eq!(t["serve.max_batch"].as_i64().unwrap(), 8);
+        assert_eq!(t["serve.max_wait_ms"].as_f64().unwrap(), 5.5);
+        assert_eq!(t["serve.verbose"].as_bool().unwrap(), false);
+        match &t["serve.methods"] {
+            Value::Arr(a) => assert_eq!(a.len(), 2),
+            _ => panic!(),
+        }
+        match &t["serve.deep.x"] {
+            Value::Arr(a) => assert_eq!(a[2], Value::Int(3)),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("novalue\n").is_err());
+        assert!(parse("k = [1, \"x\"\n").is_err());
+    }
+}

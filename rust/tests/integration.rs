@@ -1,0 +1,181 @@
+//! Integration tests over the real artifacts: PJRT program execution,
+//! python↔rust golden cross-checks, and the full compress→score loop.
+//! All tests skip gracefully when artifacts are absent (CI without
+//! `make artifacts`), but `make test` runs them for real.
+
+use latentllm::compress::pipeline::{compress_model, Method};
+use latentllm::data::{CalibSet, Corpus};
+use latentllm::eval;
+use latentllm::model::config::mini_by_name;
+use latentllm::model::Weights;
+use latentllm::runtime::Engine;
+use latentllm::util::json;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    for cand in ["artifacts", "../artifacts"] {
+        let p = std::path::PathBuf::from(cand);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    eprintln!("[integration] artifacts missing — skipping");
+    None
+}
+
+#[test]
+fn base_perplexity_matches_python() {
+    let Some(art) = artifacts() else { return };
+    let engine = Engine::new(&art).unwrap();
+    // manifest records the python-side base ppl per corpus
+    for model in ["opt-mini-s", "opt-mini-m"] {
+        let weights =
+            Weights::load(art.join(format!("model_{model}.ltw"))).unwrap();
+        let corpus =
+            Corpus::load(art.join("corpora.ltw"), "synthwiki", "test")
+                .unwrap();
+        let got = eval::perplexity(&engine, &format!("score_{model}"),
+                                   &weights, &corpus, 8, 128, 24).unwrap();
+        let want = engine.manifest()
+            .path(&["models", model, "base_ppl", "synthwiki"])
+            .and_then(|v| v.as_f64()).unwrap();
+        let rel = (got.ppl - want).abs() / want;
+        assert!(rel < 0.02, "{model}: rust {} vs python {want}", got.ppl);
+    }
+}
+
+#[test]
+fn rust_compression_matches_python_goldens() {
+    let Some(art) = artifacts() else { return };
+    let engine = Engine::new(&art).unwrap();
+    let gold: json::Value = json::parse(
+        &std::fs::read_to_string(art.join("goldens.json")).unwrap())
+        .unwrap();
+    let model = gold.get("model").unwrap().as_str().unwrap().to_string();
+    let cfg = mini_by_name(&model).unwrap();
+    let weights = Weights::load(art.join(format!("model_{model}.ltw")))
+        .unwrap();
+    let calib = CalibSet::load(art.join(format!("calib_{model}.ltw")),
+                               cfg.n_layers).unwrap();
+    let corpus = Corpus::load(art.join("corpora.ltw"), "synthwiki", "test")
+        .unwrap();
+    let mut ppls = std::collections::BTreeMap::new();
+    for e in gold.get("entries").unwrap().as_arr().unwrap() {
+        let method = Method::from_name(
+            e.get("method").unwrap().as_str().unwrap()).unwrap();
+        let ratio = e.get("ratio").unwrap().as_f64().unwrap();
+        if ratio != 0.2 {
+            continue; // one ratio is enough for the cross-check; speed
+        }
+        let want = e.get("ppl").unwrap().as_f64().unwrap();
+        let (nw, rep) = compress_model(cfg, &weights, &calib, method, ratio,
+                                       8, 4).unwrap();
+        let got = eval::perplexity(&engine, &format!("score_{model}"), &nw,
+                                   &corpus, 8, 128, 24).unwrap();
+        let rel = (got.ppl - want).abs() / want;
+        // rust and python implement the same math but not bitwise-identical
+        // SVDs; ppl agreement within a few percent is the contract.
+        assert!(rel < 0.05,
+                "{method:?}@{ratio}: rust {} vs python {want}", got.ppl);
+        let ach = rep.achieved_ratio();
+        assert!((ach - ratio).abs() < 0.05, "{method:?} ratio {ach}");
+        ppls.insert(method.name(), got.ppl);
+    }
+    // the paper's ordering must hold in the rust pipeline too
+    assert!(ppls["latentllm"] <= ppls["asvd_rootcov"] * 1.02);
+    assert!(ppls["asvd_rootcov"] <= ppls["plain"] * 1.02);
+}
+
+#[test]
+fn latent_program_matches_dense_reconstruction() {
+    let Some(art) = artifacts() else { return };
+    let engine = Engine::new(&art).unwrap();
+    let man = engine.manifest();
+    let Some(tag) = man.path(&["latent_demo", "tag"])
+        .and_then(|v| v.as_str()) else { return };
+    let model = man.path(&["latent_demo", "model"]).unwrap()
+        .as_str().unwrap();
+    let lat_w = Weights::load(art.join(format!("latent_model_{tag}.ltw")))
+        .unwrap();
+    let corpus = Corpus::load(art.join("corpora.ltw"), "synthwiki", "test")
+        .unwrap();
+    let lat = eval::perplexity(&engine, &format!("latent_score_{tag}"),
+                               &lat_w, &corpus, 8, 128, 6).unwrap();
+    // python recorded latent-vs-reconstructed ppl equality at build time;
+    // here we verify the rust-executed latent program agrees with it and
+    // sits above the uncompressed baseline.
+    let base = man.path(&["models", model, "base_ppl", "synthwiki"])
+        .and_then(|v| v.as_f64()).unwrap();
+    assert!(lat.ppl.is_finite() && lat.ppl > 0.0);
+    assert!(lat.ppl >= base * 0.95,
+            "compressed ppl {} should not beat base {base} by much",
+            lat.ppl);
+    assert!(lat.ppl < base * 3.0,
+            "latent program ppl {} looks broken vs base {base}", lat.ppl);
+}
+
+#[test]
+fn mm_accuracy_matches_python_baseline() {
+    let Some(art) = artifacts() else { return };
+    let engine = Engine::new(&art).unwrap();
+    let weights = Weights::load(art.join("mm_model.ltw")).unwrap();
+    let data = latentllm::model::io::read_ltw(art.join("mm_data.ltw"))
+        .unwrap();
+    let r = eval::evaluate_mm(&engine, "mm_score_llava-mini", &weights,
+                              &data, 16).unwrap();
+    let want = engine.manifest().path(&["mm", "base_acc", "Avg"])
+        .and_then(|v| v.as_f64()).unwrap();
+    assert!((r.avg - want).abs() < 0.02,
+            "rust {} vs python {want}", r.avg);
+    // category orderings from the synthetic design
+    // TXT (direct give-away) must be the easiest modality
+    assert!(r.by_modality[0] >= r.by_modality[2],
+            "TXT {} < NO {}", r.by_modality[0], r.by_modality[2]);
+}
+
+#[test]
+fn serving_stack_end_to_end() {
+    use latentllm::coordinator::batcher::BatcherConfig;
+    use latentllm::coordinator::kvcache::{CacheKind, KvCacheManager};
+    use latentllm::coordinator::router::{ModelVariant, Policy, Router};
+    use latentllm::coordinator::server::{ScoreRequest, Server,
+                                         ServerConfig};
+    let Some(art) = artifacts() else { return };
+    let model = "opt-mini-s";
+    let cfg = mini_by_name(model).unwrap();
+    let weights = Weights::load(art.join(format!("model_{model}.ltw")))
+        .unwrap();
+    let corpus = Corpus::load(art.join("corpora.ltw"), "synthwiki", "test")
+        .unwrap();
+    let variants = vec![ModelVariant {
+        name: "dense".into(),
+        score_program: format!("score_{model}"),
+        weights,
+        cache: KvCacheManager::new(CacheKind::Dense { d: cfg.d },
+                                   cfg.n_layers, 2, 32 << 20),
+    }];
+    let server = Server::start(art.clone(),
+                               Router::new(variants, Policy::RoundRobin),
+                               ServerConfig {
+                                   batcher: BatcherConfig::default(),
+                                   policy: Policy::RoundRobin,
+                                   program_batch: 8,
+                                   seq_len: 128,
+                               });
+    let reqs = corpus.calibration(24, 128, 5);
+    let rxs: Vec<_> = reqs.into_iter().enumerate()
+        .map(|(i, tokens)| server.submit(ScoreRequest { id: i as u64,
+                                                        tokens }))
+        .collect();
+    let mut got = 0;
+    for rx in rxs {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(120))
+            .expect("response");
+        assert!(resp.nll.is_finite());
+        got += 1;
+    }
+    assert_eq!(got, 24);
+    let m = server.shutdown();
+    assert_eq!(m.counter("requests"), 24);
+    assert!(m.counter("batches") >= 3);
+    assert_eq!(m.counter("batch_errors"), 0);
+}

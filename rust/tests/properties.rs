@@ -1,0 +1,246 @@
+//! Randomized property suites over the numeric substrate and the
+//! compression algorithms (the in-repo prop harness; seeds are reported on
+//! failure for exact reproduction).
+
+use latentllm::compress::asvd::{self, AsvdOpts};
+use latentllm::compress::junction::Junction;
+use latentllm::compress::precond::Precond;
+use latentllm::compress::{joint_qk, rank};
+use latentllm::prop_assert;
+use latentllm::tensor::{eigh, pinv, pinv_psd, sqrt_and_invsqrt_psd,
+                        svd_truncated};
+use latentllm::util::prop::{dim, run_cases};
+use latentllm::Matrix;
+
+#[test]
+fn prop_svd_truncation_is_eckart_young() {
+    run_cases("svd-eckart-young", 25, 0xA1, |rng, _| {
+        let m = dim(rng, 5, 40);
+        let n = dim(rng, 5, 40);
+        let a = rng.normal_matrix(m, n);
+        let k = m.min(n);
+        let full = latentllm::tensor::svd(&a);
+        let r = 1 + rng.below(k);
+        let t = svd_truncated(&a, r);
+        let err = a.sub(&t.reconstruct()).frob2();
+        let tail: f64 = full.s[r.min(k)..].iter().map(|s| s * s).sum();
+        prop_assert!((err - tail).abs() < 1e-6 * (1.0 + tail),
+                     "m={m} n={n} r={r}: err {err} tail {tail}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eigh_reconstruction_and_orthogonality() {
+    run_cases("eigh-reconstruct", 20, 0xA2, |rng, _| {
+        let n = dim(rng, 5, 64);
+        let extra = dim(rng, 0, 8);
+        let g = rng.normal_matrix(n, n + extra);
+        let a = g.matmul_bt(&g);
+        let (w, v) = eigh(&a);
+        let mut s = Matrix::zeros(n, n);
+        for i in 0..n {
+            s[(i, i)] = w[i];
+            prop_assert!(w[i] >= -1e-8, "n={n}: negative eig {}", w[i]);
+        }
+        let rec = v.matmul(&s).matmul_bt(&v);
+        prop_assert!(rec.max_abs_diff(&a) < 1e-7 * n as f64,
+                     "n={n}: reconstruction");
+        let vtv = v.matmul_at(&v);
+        prop_assert!(vtv.max_abs_diff(&Matrix::eye(n)) < 1e-8,
+                     "n={n}: orthogonality");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sqrt_pair_consistency() {
+    run_cases("sqrt-invsqrt", 15, 0xA3, |rng, _| {
+        let n = dim(rng, 4, 48);
+        let g = rng.normal_matrix(n, n + 4);
+        let c = g.matmul_bt(&g);
+        let (p, p_inv) = sqrt_and_invsqrt_psd(&c);
+        prop_assert!(p.matmul(&p).max_abs_diff(&c) < 1e-6 * n as f64,
+                     "n={n}: P² ≠ C");
+        prop_assert!(p.matmul(&p_inv).max_abs_diff(&Matrix::eye(n))
+                     < 1e-6 * n as f64, "n={n}: P·P⁻¹ ≠ I");
+        let pp = pinv_psd(&c);
+        prop_assert!(c.matmul(&pp).matmul(&c).max_abs_diff(&c)
+                     < 1e-6 * n as f64, "n={n}: C C⁺ C ≠ C");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pinv_moore_penrose_rectangular() {
+    run_cases("pinv-mp", 15, 0xA4, |rng, _| {
+        let m = dim(rng, 3, 24);
+        let n = dim(rng, 3, 24);
+        let a = rng.normal_matrix(m, n);
+        let p = pinv(&a);
+        prop_assert!(a.matmul(&p).matmul(&a).max_abs_diff(&a) < 1e-8,
+                     "{m}x{n}: A A⁺ A");
+        prop_assert!(p.matmul(&a).matmul(&p).max_abs_diff(&p) < 1e-8,
+                     "{m}x{n}: A⁺ A A⁺");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_junction_loss_invariance() {
+    run_cases("junction-invariance", 20, 0xA5, |rng, _| {
+        let d_out = dim(rng, 4, 24);
+        let d_in = dim(rng, 4, 24);
+        let r = 1 + rng.below(d_out.min(d_in));
+        let w = rng.normal_matrix(d_out, d_in);
+        let mut w_hats = Vec::new();
+        for junction in [Junction::Left, Junction::Right, Junction::Sym,
+                         Junction::BlockId] {
+            let res = asvd::compress(&w, r, &AsvdOpts {
+                kind: Precond::Identity, junction, ..Default::default() });
+            w_hats.push(res.w_hat);
+        }
+        for other in &w_hats[1..] {
+            prop_assert!(w_hats[0].max_abs_diff(other) < 1e-7,
+                         "junction changed Ŵ ({d_out}x{d_in} r={r})");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rootcov_never_loses() {
+    run_cases("rootcov-optimal", 12, 0xA6, |rng, _| {
+        let d = dim(rng, 6, 20);
+        let dof = 2 * d;
+        let sigma = latentllm::util::rng::decaying_covariance(
+            d, 0.5 + 0.45 * rng.uniform());
+        let c = latentllm::util::rng::wishart(rng, &sigma, dof);
+        let rows = dim(rng, 4, 16);
+        let w = rng.normal_matrix(rows, d);
+        let r = 1 + rng.below(w.rows().min(d) - 1).max(1);
+        let mut best_other = f64::INFINITY;
+        let mut root = f64::NAN;
+        for kind in latentllm::compress::precond::ALL {
+            let res = asvd::compress_with_cov(
+                &w, r, &c, &vec![0.0; d],
+                &AsvdOpts { kind, junction: Junction::Left,
+                            ..Default::default() });
+            if kind == Precond::RootCov {
+                root = res.loss;
+            } else {
+                best_other = best_other.min(res.loss);
+            }
+        }
+        prop_assert!(root <= best_other * (1.0 + 1e-9),
+                     "rootcov {root} vs best-other {best_other} (d={d})");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_joint_qk_never_increases_loss_over_iterations() {
+    run_cases("alg1-monotone", 10, 0xA7, |rng, _| {
+        let h = 1 + rng.below(4);
+        let dh = 2 + rng.below(6);
+        let d = h * dh * (1 + rng.below(2));
+        let wq = rng.normal_matrix(h * dh, d);
+        let wk = rng.normal_matrix(h * dh, d);
+        let r = 1 + rng.below(d);
+        let res = joint_qk::compress(
+            &wq, &wk, h, dh, r, r,
+            &joint_qk::JointQkOpts { kind: Precond::Identity, n_iter: 5,
+                                     ..Default::default() });
+        // absolute tolerance floor: at (near-)full rank the loss is ~0 and
+        // pure fp noise, so compare with an epsilon scaled by the energy
+        let scale: f64 = 1e-9 * (1.0 + wq.frob2() * wk.frob2());
+        for w in res.losses.windows(2) {
+            prop_assert!(w[1] <= w[0] * (1.0 + 1e-9) + scale,
+                         "h={h} dh={dh} d={d} r={r}: {:?}", res.losses);
+        }
+        prop_assert!(res.losses[0].is_finite(), "finite losses");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rank_accounting_consistent() {
+    run_cases("rank-accounting", 30, 0xA8, |rng, _| {
+        let d = 8 * (1 + rng.below(24));
+        let h = [2usize, 4, 8][rng.below(3)];
+        if d % h != 0 {
+            return Ok(());
+        }
+        let dh = d / h;
+        let keep = 0.3 + 0.65 * rng.uniform();
+        let r = rank::joint_qk_rank(d, dh, h, h, keep, true);
+        let p = rank::joint_qk_params(d, dh, h, h, r, r, true);
+        let orig = 2 * d * d;
+        prop_assert!(p <= orig, "params {p} exceed original {orig}");
+        prop_assert!(r >= 1 && r <= d, "rank {r} out of range");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ltw_roundtrip_random() {
+    use latentllm::model::io::{parse_ltw, write_ltw, Tensor, TensorMap};
+    run_cases("ltw-roundtrip", 15, 0xA9, |rng, case| {
+        let mut map = TensorMap::new();
+        let n_tensors = 1 + rng.below(6);
+        for t in 0..n_tensors {
+            let name = format!("t{case}.{t}.w");
+            let ndim = 1 + rng.below(3);
+            let shape: Vec<usize> =
+                (0..ndim).map(|_| 1 + rng.below(6)).collect();
+            let count: usize = shape.iter().product();
+            if rng.below(2) == 0 {
+                map.insert(name, Tensor::F32 {
+                    shape,
+                    data: (0..count).map(|_| rng.normal() as f32).collect(),
+                });
+            } else {
+                map.insert(name, Tensor::I32 {
+                    shape,
+                    data: (0..count)
+                        .map(|_| rng.below(1000) as i32 - 500).collect(),
+                });
+            }
+        }
+        let path = std::env::temp_dir()
+            .join(format!("prop_ltw_{case}.ltw"));
+        write_ltw(&path, &map).map_err(|e| e.to_string())?;
+        let buf = std::fs::read(&path).map_err(|e| e.to_string())?;
+        let back = parse_ltw(&buf).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        prop_assert!(back == map, "roundtrip mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random() {
+    use latentllm::util::json::{parse, Value};
+    fn random_value(rng: &mut latentllm::util::rng::Rng, depth: usize)
+                    -> Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.below(2) == 0),
+            2 => Value::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => Value::Str(format!("s{}-\"esc\"\n{}", rng.below(100),
+                                    rng.below(10))),
+            4 => Value::Arr((0..rng.below(5))
+                .map(|_| random_value(rng, depth - 1)).collect()),
+            _ => Value::Obj((0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_value(rng, depth - 1)))
+                .collect()),
+        }
+    }
+    run_cases("json-roundtrip", 40, 0xAA, |rng, _| {
+        let v = random_value(rng, 3);
+        let text = v.to_string_pretty();
+        let back = parse(&text).map_err(|e| e.to_string())?;
+        prop_assert!(back == v, "roundtrip through {text}");
+        Ok(())
+    });
+}
