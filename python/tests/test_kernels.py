@@ -6,7 +6,10 @@ hypothesis sweeps shapes; allclose against ref.py.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis unavailable in this environment")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from compile.kernels import attention, gram, lowrank, ref
 

@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis unavailable in this environment")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from compile.latentllm import asvd, junction, linalg, precond
 

@@ -1,5 +1,7 @@
-//! PJRT runtime benches: program compile time and scoring-program execution
-//! throughput (tokens/s), dense vs latent-architecture programs.
+//! Runtime benches: program compile/load time and scoring-program
+//! execution throughput (tokens/s), dense vs latent-architecture programs,
+//! on the engine's configured backend (RefBackend by default, PJRT via
+//! `--features pjrt` + `LATENTLLM_BACKEND=pjrt`).
 //! Requires artifacts (`make artifacts`); skips gracefully otherwise.
 
 use latentllm::data::Corpus;
@@ -25,7 +27,7 @@ fn main() {
     let batch = corpus.batches(b, t).into_iter().next().unwrap();
 
     let mut bench = Bench::new(1.0);
-    println!("== PJRT runtime ==");
+    println!("== runtime (backend: {}) ==", engine.backend_name());
     bench.run("compile score program (cold-ish)", || {
         // compile cache makes repeats cheap; measure the cached fetch too
         engine.program(&format!("score_{model}")).unwrap()

@@ -1,11 +1,11 @@
 //! The serving loop: a worker thread drains the dynamic batcher, routes
 //! each flush to a model variant, pads to the program's fixed batch shape,
-//! executes on PJRT, and replies per request. std::thread + mpsc (tokio is
-//! unavailable offline; the control flow is identical).
+//! executes on the engine's backend, and replies per request. std::thread +
+//! mpsc (tokio is unavailable offline; the control flow is identical).
 //!
-//! The PJRT client is `Rc`-based (not Send), so the worker thread builds
-//! and owns its own [`Engine`] — requests/responses cross the channel,
-//! executables never do.
+//! Backends need not be Send (the PJRT client is `Rc`-based), so the
+//! worker thread builds and owns its own [`Engine`] — requests/responses
+//! cross the channel, executables never do.
 
 use std::path::PathBuf;
 use std::sync::mpsc;

@@ -1,8 +1,9 @@
 //! Evaluators: perplexity over token corpora (Table 2 / Figs 4–5) and
 //! multimodal accuracy with the paper's category breakdown (Table 4 /
-//! Fig 6). Both drive the dense scoring programs through the PJRT engine,
-//! so *any* weight set — in particular rust-compressed ones — is evaluated
-//! through the exact same compiled computation.
+//! Fig 6). Both drive the scoring programs through the [`crate::runtime`]
+//! engine (reference interpreter by default, PJRT behind `pjrt`), so *any*
+//! weight set — in particular rust-compressed ones — is evaluated through
+//! the exact same program semantics.
 
 pub mod accuracy;
 pub mod generate;

@@ -3,11 +3,28 @@
 //!
 //! This crate is layer 3: the production coordinator. It re-implements the
 //! paper's full compression suite over its own dense linear-algebra
-//! substrate ([`tensor`]), loads AOT-compiled HLO programs through PJRT
-//! ([`runtime`]), evaluates perplexity / multimodal accuracy ([`eval`]),
-//! serves batched requests with an MLA-aware KV-cache accounting
-//! ([`coordinator`]), and regenerates every table and figure of the paper
-//! ([`reports`]). Python/JAX runs only at `make artifacts` time.
+//! substrate ([`tensor`]), executes the artifact programs through a
+//! pluggable backend ([`runtime`]) — a pure-rust reference interpreter by
+//! default, PJRT/HLO behind `--features pjrt` — evaluates perplexity /
+//! multimodal accuracy ([`eval`]), serves batched requests with an
+//! MLA-aware KV-cache accounting ([`coordinator`]), and regenerates every
+//! table and figure of the paper ([`reports`]). Python/JAX runs only at
+//! `make artifacts` time.
+//!
+//! Execution backends (`runtime::backend::Backend`):
+//!
+//! * `runtime::RefBackend` — interprets score / step / latent / multimodal
+//!   programs directly on [`tensor`]; default, fully offline;
+//! * `runtime::pjrt::PjrtBackend` — compiles the AOT HLO text through the
+//!   `xla` crate (gated behind `feature = "pjrt"`; select at runtime with
+//!   `LATENTLLM_BACKEND=pjrt`).
+
+// Numeric-kernel idioms used pervasively by the hand-rolled substrate:
+// index-heavy loops over `Matrix`, in-place pivot swaps, and solver entry
+// points whose arity mirrors the paper's equations.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_swap)]
+#![allow(clippy::too_many_arguments)]
 
 pub mod compress;
 pub mod config;

@@ -8,7 +8,7 @@
 //!   info      — print configs, artifact manifest summary
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::exit;
 
 use anyhow::{bail, Context, Result};
@@ -120,7 +120,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
     }
 }
 
-fn info(artifacts: &PathBuf) -> Result<()> {
+fn info(artifacts: &Path) -> Result<()> {
     println!("mini family:");
     for c in MINI_FAMILY {
         println!("  {:<12} d={} L={} h={} d_i={} linear={}",
@@ -150,7 +150,7 @@ fn info(artifacts: &PathBuf) -> Result<()> {
     Ok(())
 }
 
-fn load_model(artifacts: &PathBuf, model: &str)
+fn load_model(artifacts: &Path, model: &str)
               -> Result<(&'static latentllm::model::MiniConfig, Weights,
                          CalibSet)> {
     let cfg = mini_by_name(model)
@@ -161,7 +161,7 @@ fn load_model(artifacts: &PathBuf, model: &str)
     Ok((cfg, w, cal))
 }
 
-fn compress_cmd(args: &Args, artifacts: &PathBuf) -> Result<()> {
+fn compress_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     let model = args.flag("model", "opt-mini-m");
     let method = Method::from_name(&args.flag("method", "latentllm"))
         .context("unknown method")?;
@@ -191,7 +191,7 @@ fn compress_cmd(args: &Args, artifacts: &PathBuf) -> Result<()> {
     Ok(())
 }
 
-fn eval_cmd(args: &Args, artifacts: &PathBuf) -> Result<()> {
+fn eval_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     let model = args.flag("model", "opt-mini-m");
     let corpus_name = args.flag("corpus", "synthwiki");
     let (_, base_w, _) = load_model(artifacts, &model)?;
@@ -210,7 +210,7 @@ fn eval_cmd(args: &Args, artifacts: &PathBuf) -> Result<()> {
     Ok(())
 }
 
-fn generate_cmd(args: &Args, artifacts: &PathBuf) -> Result<()> {
+fn generate_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     use latentllm::eval::generate::{generate, GenerateOpts};
     let model = args.flag("model", "opt-mini-m");
     let n_prompts = args.usize_flag("prompts", 8).min(8);
@@ -247,7 +247,7 @@ fn generate_cmd(args: &Args, artifacts: &PathBuf) -> Result<()> {
     Ok(())
 }
 
-fn serve_cmd(args: &Args, artifacts: &PathBuf) -> Result<()> {
+fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     let file_cfg = match args.flags.get("config") {
         Some(p) => latentllm::config::Config::load(p)?,
         None => latentllm::config::Config::default(),
@@ -288,7 +288,7 @@ fn serve_cmd(args: &Args, artifacts: &PathBuf) -> Result<()> {
         },
     ];
     let router = Router::new(variants, policy);
-    let server = Server::start(artifacts.clone(), router, ServerConfig {
+    let server = Server::start(artifacts.to_path_buf(), router, ServerConfig {
         batcher: file_cfg.serve.batcher,
         policy,
         program_batch: file_cfg.serve.program_batch,
@@ -317,7 +317,7 @@ fn serve_cmd(args: &Args, artifacts: &PathBuf) -> Result<()> {
     Ok(())
 }
 
-fn report_cmd(args: &Args, artifacts: &PathBuf) -> Result<()> {
+fn report_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     let what = args.positional.first().map(String::as_str).unwrap_or("all");
     let out_dir = PathBuf::from(args.flag("out", "reports"));
     std::fs::create_dir_all(&out_dir)?;
@@ -388,7 +388,7 @@ fn report_cmd(args: &Args, artifacts: &PathBuf) -> Result<()> {
     let engine = Engine::new(artifacts)?;
     let ctx = tables::TableCtx {
         engine: &engine,
-        artifacts: artifacts.clone(),
+        artifacts: artifacts.to_path_buf(),
         max_batches: args.usize_flag("max-batches", 12),
         qk_iters: args.usize_flag("qk-iters", 8),
         ud_iters: args.usize_flag("ud-iters", 4),

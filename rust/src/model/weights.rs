@@ -2,23 +2,44 @@
 //! ordered flattening used to feed the PJRT programs (parameter order comes
 //! from the artifact manifest and must match python's `param_names`).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use anyhow::{anyhow, Context, Result};
 
 use super::io::{Tensor, TensorMap};
 use crate::Matrix;
 
+/// Monotonic id source for [`Weights::cache_id`].
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
 #[derive(Clone, Debug)]
 pub struct Weights {
     map: TensorMap,
+    /// Content-lineage id: assigned at construction, re-assigned by every
+    /// mutating accessor; clones share the id until either side mutates.
+    /// Equal ids therefore imply equal content — the invariant execution
+    /// backends use to memoize per-weight-set state.
+    id: u64,
 }
 
 impl Weights {
     pub fn new(map: TensorMap) -> Self {
-        Weights { map }
+        Weights { map, id: fresh_id() }
     }
 
     pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
-        Ok(Weights { map: super::io::read_ltw(path)? })
+        Ok(Weights::new(super::io::read_ltw(path)?))
+    }
+
+    /// Cache key for backend-side memoization: two `Weights` with the same
+    /// id are guaranteed to hold identical tensors (the converse is not
+    /// required).
+    pub fn cache_id(&self) -> u64 {
+        self.id
     }
 
     pub fn map(&self) -> &TensorMap {
@@ -45,6 +66,7 @@ impl Weights {
 
     /// Replace a 2-D weight (keeps f32 storage).
     pub fn set_matrix(&mut self, name: &str, m: &Matrix) {
+        self.id = fresh_id();
         self.map.insert(name.to_string(), Tensor::F32 {
             shape: vec![m.rows(), m.cols()],
             data: m.to_f32(),
@@ -52,6 +74,7 @@ impl Weights {
     }
 
     pub fn set_bias(&mut self, name: &str, b: &[f64]) {
+        self.id = fresh_id();
         self.map.insert(name.to_string(), Tensor::F32 {
             shape: vec![b.len()],
             data: b.iter().map(|&v| v as f32).collect(),
@@ -59,6 +82,7 @@ impl Weights {
     }
 
     pub fn set_tensor(&mut self, name: &str, t: Tensor) {
+        self.id = fresh_id();
         self.map.insert(name.to_string(), t);
     }
 
@@ -93,6 +117,19 @@ mod tests {
         assert_eq!(w.bias("b").unwrap(), vec![5.0, 6.0]);
         assert!(w.matrix("nope").is_err());
         assert_eq!(w.n_elements(), 6);
+    }
+
+    #[test]
+    fn cache_id_tracks_mutation_lineage() {
+        let w = sample();
+        let clone = w.clone();
+        assert_eq!(w.cache_id(), clone.cache_id(),
+                   "clones share content, so they may share the id");
+        let mut diverged = w.clone();
+        diverged.set_bias("b", &[9.0, 9.0]);
+        assert_ne!(diverged.cache_id(), w.cache_id(),
+                   "mutation must invalidate the id");
+        assert_ne!(sample().cache_id(), sample().cache_id());
     }
 
     #[test]

@@ -1,0 +1,47 @@
+//! Pluggable execution backend for the artifact programs.
+//!
+//! A [`Backend`] turns a manifest program name into an [`Executable`];
+//! [`crate::runtime::Engine`] owns one backend plus the compile cache and
+//! stays agnostic of *how* a program runs. Two implementations exist:
+//!
+//! * [`crate::runtime::RefBackend`] — pure-rust interpreter over the
+//!   [`crate::tensor`] substrate (default; always available, offline);
+//! * `PjrtBackend` (`--features pjrt`) — loads the AOT-compiled HLO text
+//!   through the `xla` crate and executes on the CPU PJRT client.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::literal::ParamValue;
+use crate::model::Weights;
+use crate::util::json::Value;
+
+/// Everything a backend needs to materialize one program.
+pub struct ProgramCtx<'a> {
+    /// manifest program name (e.g. `score_opt-mini-m`, `step_opt-mini-m`,
+    /// `latent_score_<tag>`, `mm_score_llava-mini`)
+    pub name: &'a str,
+    /// artifacts directory (HLO files live here for the PJRT backend)
+    pub artifacts: &'a Path,
+    /// parsed artifacts manifest (program table, model configs)
+    pub manifest: &'a Value,
+    /// manifest-declared parameter names, in call order
+    pub param_order: &'a [String],
+}
+
+/// A compiled/loaded program ready to execute. `weight_order` is the
+/// manifest parameter order *minus* the leading inputs, so the backend can
+/// marshal weights positionally (PJRT) or look them up by name (reference).
+pub trait Executable {
+    fn execute(&self, leading: &[ParamValue], weights: &Weights,
+               weight_order: &[String]) -> Result<Vec<f32>>;
+}
+
+/// Compiles manifest programs into executables.
+pub trait Backend {
+    /// Stable short name for logs/metrics ("ref", "pjrt").
+    fn name(&self) -> &'static str;
+
+    fn compile(&self, ctx: &ProgramCtx) -> Result<Box<dyn Executable>>;
+}

@@ -1,76 +1,102 @@
-//! The PJRT engine: HLO-text → compile → execute, with a program cache.
+//! The execution engine: manifest program name → [`Program`] through a
+//! pluggable [`Backend`], with a per-name compile cache. The default
+//! backend is the pure-rust [`RefBackend`]; builds with `--features pjrt`
+//! can select the PJRT/HLO path via `LATENTLLM_BACKEND=pjrt`.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use super::backend::{Backend, Executable, ProgramCtx};
 use super::literal::ParamValue;
+use super::refbackend::RefBackend;
 use crate::model::io::Tensor;
 use crate::model::Weights;
 use crate::util::json::{self, Value};
 
-/// A compiled PJRT executable plus its parameter-order metadata.
+/// A loaded program plus its parameter-order metadata.
 pub struct Program {
     pub name: String,
     /// manifest-declared parameter names, in call order
     pub param_order: Vec<String>,
-    exe: xla::PjRtLoadedExecutable,
+    exe: Box<dyn Executable>,
 }
 
 impl Program {
     /// Execute with explicit leading inputs (tokens, lens, images, …)
     /// followed by the weight tensors in manifest order. Returns the
-    /// flattened f32 outputs of the 1-tuple result.
+    /// flattened f32 outputs.
     pub fn run_f32(&self, leading: &[ParamValue], weights: &Weights)
                    -> Result<Vec<f32>> {
-        let lit = self.execute(leading, weights)?;
-        let out = lit.to_tuple1().context("program output tuple")?;
-        Ok(out.to_vec::<f32>()?)
-    }
-
-    fn execute(&self, leading: &[ParamValue], weights: &Weights)
-               -> Result<xla::Literal> {
-        let mut args: Vec<xla::Literal> = Vec::with_capacity(
-            self.param_order.len());
-        for p in leading {
-            args.push(p.to_literal()?);
+        if leading.len() > self.param_order.len() {
+            bail!("program {}: {} leading inputs exceed the {}-parameter \
+                   signature", self.name, leading.len(),
+                  self.param_order.len());
         }
-        let weight_names = &self.param_order[leading.len()..];
-        for name in weight_names {
-            let t = weights.tensor(name)
-                .with_context(|| format!("program {}", self.name))?;
-            args.push(super::literal::tensor_to_literal(t)?);
-        }
-        let result = self.exe.execute::<xla::Literal>(&args)?;
-        Ok(result[0][0].to_literal_sync()?)
+        let weight_order = &self.param_order[leading.len()..];
+        self.exe
+            .execute(leading, weights, weight_order)
+            .with_context(|| format!("execute program {}", self.name))
     }
 }
 
-/// PJRT CPU engine with a compile cache keyed by program name.
+/// Engine with a compile cache keyed by program name, generic over the
+/// execution [`Backend`].
 pub struct Engine {
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
     artifacts: PathBuf,
     manifest: Value,
-    cache: Mutex<HashMap<String, std::sync::Arc<Program>>>,
+    cache: Mutex<HashMap<String, Arc<Program>>>,
+}
+
+/// Pick the backend for [`Engine::new`]: the reference interpreter unless
+/// `LATENTLLM_BACKEND=pjrt` is set (which requires `--features pjrt`).
+fn default_backend() -> Result<Box<dyn Backend>> {
+    match std::env::var("LATENTLLM_BACKEND").as_deref() {
+        Ok("pjrt") => {
+            #[cfg(feature = "pjrt")]
+            {
+                Ok(Box::new(super::pjrt::PjrtBackend::new()?))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                bail!("LATENTLLM_BACKEND=pjrt but this binary was built \
+                       without the `pjrt` feature (cargo build --features \
+                       pjrt)")
+            }
+        }
+        Ok("ref") | Ok("") | Err(_) => Ok(Box::new(RefBackend::new())),
+        Ok(other) => bail!("unknown LATENTLLM_BACKEND {other:?} \
+                            (expected \"ref\" or \"pjrt\")"),
+    }
 }
 
 impl Engine {
+    /// Engine over the default backend (see [`default_backend`]).
     pub fn new(artifacts: impl AsRef<Path>) -> Result<Self> {
+        Engine::with_backend(artifacts, default_backend()?)
+    }
+
+    /// Engine over an explicit backend.
+    pub fn with_backend(artifacts: impl AsRef<Path>,
+                        backend: Box<dyn Backend>) -> Result<Self> {
         let artifacts = artifacts.as_ref().to_path_buf();
         let manifest_text =
             std::fs::read_to_string(artifacts.join("manifest.json"))
                 .context("read manifest.json (run `make artifacts`)")?;
         let manifest = json::parse(&manifest_text)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
         Ok(Engine {
-            client,
+            backend,
             artifacts,
             manifest,
             cache: Mutex::new(HashMap::new()),
         })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn manifest(&self) -> &Value {
@@ -82,9 +108,8 @@ impl Engine {
     }
 
     /// Parameter order for a program from the manifest
-    /// (`programs.<name>.<kind>` is a list of names).
+    /// (`programs.<name>` is a list of names).
     fn param_order(&self, prog: &str) -> Result<Vec<String>> {
-        // manifest["programs"] maps e.g. "score_opt-mini-m" -> [names...]
         let programs = self.manifest.get("programs")
             .ok_or_else(|| anyhow!("manifest missing programs"))?;
         let entry = programs.get(prog)
@@ -97,27 +122,35 @@ impl Engine {
             .collect()
     }
 
-    /// Load + compile (or fetch from cache) a program by name; the HLO file
-    /// is `<name>.hlo.txt` under the artifacts directory.
-    pub fn program(&self, name: &str) -> Result<std::sync::Arc<Program>> {
+    /// Load/compile (or fetch from cache) a program by name. Repeated
+    /// calls return the same `Arc` — the compile cache the serving loop
+    /// and the eval paths rely on.
+    pub fn program(&self, name: &str) -> Result<Arc<Program>> {
         if let Some(p) = self.cache.lock().unwrap().get(name) {
             return Ok(p.clone());
         }
-        let path = self.artifacts.join(format!("{name}.hlo.txt"));
         let param_order = self.param_order(name)?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?)
-            .map_err(|e| anyhow!("load {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        let prog = std::sync::Arc::new(Program {
+        let ctx = ProgramCtx {
+            name,
+            artifacts: &self.artifacts,
+            manifest: &self.manifest,
+            param_order: &param_order,
+        };
+        let exe = self.backend.compile(&ctx)
+            .with_context(|| format!("backend {} compile {name:?}",
+                                     self.backend.name()))?;
+        let prog = Arc::new(Program {
             name: name.to_string(),
             param_order,
             exe,
         });
         self.cache.lock().unwrap().insert(name.to_string(), prog.clone());
         Ok(prog)
+    }
+
+    /// Number of programs currently in the compile cache.
+    pub fn cached_programs(&self) -> usize {
+        self.cache.lock().unwrap().len()
     }
 
     /// Convenience: i32 leading input from a flat buffer.
@@ -156,7 +189,7 @@ impl Engine {
     }
 }
 
-/// Pure helper used by tests without a PJRT client.
+/// Pure helper used by tests without an engine.
 pub fn tensor_param(t: &Tensor) -> ParamValue {
     ParamValue::from_tensor(t)
 }

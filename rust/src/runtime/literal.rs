@@ -1,10 +1,10 @@
-//! Marshalling between LTW tensors / rust buffers and xla Literals.
-
-use anyhow::Result;
+//! Program input values: typed shape+buffer pairs marshalled by whichever
+//! backend executes the program (flattened into `xla::Literal`s on the
+//! PJRT path, interpreted directly by the reference backend).
 
 use crate::model::io::Tensor;
 
-/// An input value for a PJRT program parameter.
+/// An input value for a program parameter.
 #[derive(Clone, Debug)]
 pub enum ParamValue {
     I32 { shape: Vec<usize>, data: Vec<i32> },
@@ -23,21 +23,33 @@ impl ParamValue {
         }
     }
 
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = match self {
-            ParamValue::F32 { shape, data } => {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(data).reshape(&dims)?
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            ParamValue::I32 { shape, .. } | ParamValue::F32 { shape, .. } => {
+                shape
             }
-            ParamValue::I32 { shape, data } => {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(data).reshape(&dims)?
-            }
-        };
-        Ok(lit)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    ParamValue::from_tensor(t).to_literal()
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_tensor_preserves_shape() {
+        let t = Tensor::I32 { shape: vec![2, 3], data: vec![0; 6] };
+        let p = ParamValue::from_tensor(&t);
+        assert_eq!(p.shape(), &[2, 3]);
+        assert_eq!(p.len(), 6);
+        assert!(!p.is_empty());
+    }
 }

@@ -1,13 +1,25 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text programs emitted by
-//! python/compile/aot.py and executes them on the CPU PJRT client through
-//! the `xla` crate. One compiled executable per program signature, cached.
+//! Program runtime with a pluggable execution backend.
 //!
-//! HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
-//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! [`Engine`] resolves manifest program names to compiled [`Program`]s
+//! through a [`Backend`] and caches them. Two backends exist:
+//!
+//! * [`RefBackend`] (default) — pure-rust interpreter over the
+//!   [`crate::tensor`] substrate; mirrors the python reference kernels so
+//!   scoring, decode, latent/MLA, and multimodal programs run end-to-end
+//!   offline with no artifacts beyond `manifest.json` + weights;
+//! * `PjrtBackend` (`--features pjrt`, `LATENTLLM_BACKEND=pjrt`) — loads
+//!   the AOT-compiled HLO-text programs through the `xla` crate on the CPU
+//!   PJRT client. Offline builds type-gate against the vendored stub in
+//!   rust/vendor/xla.
 
+pub mod backend;
 pub mod engine;
 pub mod literal;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod refbackend;
 
-pub use engine::{Engine, Program};
-pub use literal::{tensor_to_literal, ParamValue};
+pub use backend::{Backend, Executable, ProgramCtx};
+pub use engine::{tensor_param, Engine, Program};
+pub use literal::ParamValue;
+pub use refbackend::RefBackend;

@@ -1,0 +1,94 @@
+//! PJRT execution backend (`--features pjrt`): loads the AOT-compiled
+//! HLO-text programs emitted by python/compile/aot.py and executes them on
+//! the CPU PJRT client through the `xla` crate.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids.
+//!
+//! In this offline tree the `xla` dependency is the vendored type-gating
+//! stub (rust/vendor/xla): the module compiles and the backend constructs
+//! errors at runtime. Swap the path dependency for a real xla/PJRT crate
+//! to execute HLO for real.
+
+use anyhow::{anyhow, Context, Result};
+
+use super::backend::{Backend, Executable, ProgramCtx};
+use super::literal::ParamValue;
+use crate::model::io::Tensor;
+use crate::model::Weights;
+
+/// Backend over the CPU PJRT client.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtBackend { client })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn compile(&self, ctx: &ProgramCtx) -> Result<Box<dyn Executable>> {
+        let path = ctx.artifacts.join(format!("{}.hlo.txt", ctx.name));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?)
+            .map_err(|e| anyhow!("load {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", ctx.name))?;
+        Ok(Box::new(PjrtExecutable { name: ctx.name.to_string(), exe }))
+    }
+}
+
+struct PjrtExecutable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable for PjrtExecutable {
+    fn execute(&self, leading: &[ParamValue], weights: &Weights,
+               weight_order: &[String]) -> Result<Vec<f32>> {
+        let mut args: Vec<xla::Literal> =
+            Vec::with_capacity(leading.len() + weight_order.len());
+        for p in leading {
+            args.push(to_literal(p)?);
+        }
+        for name in weight_order {
+            let t = weights.tensor(name)
+                .with_context(|| format!("program {}", self.name))?;
+            args.push(tensor_to_literal(t)?);
+        }
+        let result = self.exe.execute(&args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = result[0][0].to_literal_sync()?;
+        let out = lit.to_tuple1().context("program output tuple")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Marshal a [`ParamValue`] into an `xla::Literal`.
+pub fn to_literal(p: &ParamValue) -> Result<xla::Literal> {
+    let lit = match p {
+        ParamValue::F32 { shape, data } => {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(data).reshape(&dims)?
+        }
+        ParamValue::I32 { shape, data } => {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(data).reshape(&dims)?
+        }
+    };
+    Ok(lit)
+}
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    to_literal(&ParamValue::from_tensor(t))
+}

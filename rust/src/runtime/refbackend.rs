@@ -1,0 +1,1245 @@
+//! Reference execution backend: a pure-rust interpreter for the artifact
+//! programs, mirroring the python oracles (`python/compile/kernels/ref.py`
+//! and the `model.py`/`multimodal.py` forwards) on the [`crate::tensor`]
+//! substrate. No XLA, no HLO files — only the manifest's program table and
+//! model configs are needed, so the whole serving/eval stack runs offline.
+//!
+//! Interpreted program families (names match `python/compile/aot.py`):
+//!
+//! * `score_<model>`        — (tokens[b,t]) → per-sequence mean NLL [b]
+//! * `step_<model>`         — (tokens[b,t], lens[b]) → next-token logits
+//! * `latent_score_<tag>`   — MLA architecture scoring (factored weights)
+//! * `latent_step_<tag>`    — MLA architecture decode step
+//! * `mm_score_<name>`      — (images[b,16,16], tokens[b,l]) → answer logits
+//!
+//! Numerics: f64 end to end (the substrate's dtype); the python programs
+//! run f32, so agreement is to f32 round-off, well inside the goldens'
+//! cross-check tolerance.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::backend::{Backend, Executable, ProgramCtx};
+use super::literal::ParamValue;
+use crate::model::io::Tensor;
+use crate::model::Weights;
+use crate::util::json::Value;
+use crate::Matrix;
+
+/// The default backend: interprets programs directly.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RefBackend;
+
+impl RefBackend {
+    pub fn new() -> RefBackend {
+        RefBackend
+    }
+}
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "ref"
+    }
+
+    fn compile(&self, ctx: &ProgramCtx) -> Result<Box<dyn Executable>> {
+        let kind = parse_program(ctx.name, ctx.manifest)
+            .with_context(|| format!("ref backend: program {:?}", ctx.name))?;
+        Ok(Box::new(RefExecutable {
+            kind,
+            cache: std::sync::Mutex::new(ModelCache::new()),
+        }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Program resolution from the manifest
+// ---------------------------------------------------------------------------
+
+/// Transformer dims the interpreter needs (factor ranks and layer shapes
+/// are read off the weight tensors at execution time).
+#[derive(Clone, Debug)]
+struct LmCfg {
+    vocab: usize,
+    d: usize,
+    n_layers: usize,
+    n_heads: usize,
+}
+
+#[derive(Clone, Debug)]
+struct VisCfg {
+    img: usize,
+    patch: usize,
+    d: usize,
+    n_layers: usize,
+    n_heads: usize,
+}
+
+#[derive(Clone, Debug)]
+struct MmCfg {
+    lm: LmCfg,
+    vision: VisCfg,
+    n_answers: usize,
+    text_len: usize,
+}
+
+#[derive(Clone, Debug)]
+enum RefProgram {
+    Score(LmCfg),
+    Step(LmCfg),
+    LatentScore(LmCfg),
+    LatentStep(LmCfg),
+    MmScore(MmCfg),
+}
+
+fn cfg_usize(v: &Value, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(|x| x.as_usize())
+        .ok_or_else(|| anyhow!("manifest config missing field {key:?}"))
+}
+
+fn lm_cfg(v: &Value) -> Result<LmCfg> {
+    let cfg = LmCfg {
+        vocab: cfg_usize(v, "vocab")?,
+        d: cfg_usize(v, "d")?,
+        n_layers: cfg_usize(v, "n_layers")?,
+        n_heads: cfg_usize(v, "n_heads")?,
+    };
+    if cfg.n_heads == 0 || cfg.d % cfg.n_heads != 0 {
+        bail!("config d={} is not divisible into n_heads={} \
+               (the python reference rejects this shape too)",
+              cfg.d, cfg.n_heads);
+    }
+    Ok(cfg)
+}
+
+fn model_cfg(manifest: &Value, model: &str) -> Result<LmCfg> {
+    let v = manifest
+        .path(&["models", model, "config"])
+        .ok_or_else(|| anyhow!("manifest has no config for model {model:?}"))?;
+    lm_cfg(v)
+}
+
+/// Resolve a latent program tag to its base model config via the
+/// manifest's `latent_demo` record.
+fn latent_cfg(manifest: &Value, tag: &str) -> Result<LmCfg> {
+    let demo = manifest
+        .get("latent_demo")
+        .ok_or_else(|| anyhow!("manifest has no latent_demo record"))?;
+    let known = demo.get("tag").and_then(|v| v.as_str()).unwrap_or("");
+    if known != tag {
+        bail!("latent tag {tag:?} not in manifest (latent_demo is {known:?})");
+    }
+    let model = demo
+        .get("model")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("latent_demo missing model"))?;
+    model_cfg(manifest, model)
+}
+
+fn mm_cfg(manifest: &Value) -> Result<MmCfg> {
+    let mm = manifest
+        .get("mm")
+        .ok_or_else(|| anyhow!("manifest has no mm record"))?;
+    let cfg = mm
+        .get("config")
+        .ok_or_else(|| anyhow!("mm record missing config"))?;
+    let lmv = cfg.get("lm").ok_or_else(|| anyhow!("mm config missing lm"))?;
+    let vv = cfg
+        .get("vision")
+        .ok_or_else(|| anyhow!("mm config missing vision"))?;
+    let vision = VisCfg {
+        img: cfg_usize(vv, "img")?,
+        patch: cfg_usize(vv, "patch")?,
+        d: cfg_usize(vv, "d")?,
+        n_layers: cfg_usize(vv, "n_layers")?,
+        n_heads: cfg_usize(vv, "n_heads")?,
+    };
+    if vision.n_heads == 0 || vision.d % vision.n_heads != 0 {
+        bail!("vision config d={} is not divisible into n_heads={}",
+              vision.d, vision.n_heads);
+    }
+    if vision.patch == 0 || vision.img % vision.patch != 0 {
+        bail!("vision config img={} does not tile into patch={}",
+              vision.img, vision.patch);
+    }
+    Ok(MmCfg {
+        lm: lm_cfg(lmv)?,
+        vision,
+        n_answers: cfg_usize(cfg, "n_answers")?,
+        text_len: cfg_usize(mm, "text_len")?,
+    })
+}
+
+fn parse_program(name: &str, manifest: &Value) -> Result<RefProgram> {
+    if let Some(tag) = name.strip_prefix("latent_score_") {
+        return Ok(RefProgram::LatentScore(latent_cfg(manifest, tag)?));
+    }
+    if let Some(tag) = name.strip_prefix("latent_step_") {
+        return Ok(RefProgram::LatentStep(latent_cfg(manifest, tag)?));
+    }
+    if let Some(model) = name.strip_prefix("score_") {
+        return Ok(RefProgram::Score(model_cfg(manifest, model)?));
+    }
+    if let Some(model) = name.strip_prefix("step_") {
+        return Ok(RefProgram::Step(model_cfg(manifest, model)?));
+    }
+    if name.strip_prefix("mm_score_").is_some() {
+        return Ok(RefProgram::MmScore(mm_cfg(manifest)?));
+    }
+    bail!("no reference interpreter for program family of {name:?}")
+}
+
+// ---------------------------------------------------------------------------
+// Shared numeric kernels (mirrors python/compile/kernels/ref.py)
+// ---------------------------------------------------------------------------
+
+const LN_EPS: f64 = 1e-5;
+
+/// Row-wise layer norm over the feature axis.
+fn layer_norm(x: &Matrix, g: &[f64], b: &[f64]) -> Matrix {
+    let (t, d) = (x.rows(), x.cols());
+    let mut out = Matrix::zeros(t, d);
+    for i in 0..t {
+        let row = x.row(i);
+        let mu = row.iter().sum::<f64>() / d as f64;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f64>()
+            / d as f64;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        let orow = out.row_mut(i);
+        for j in 0..d {
+            orow[j] = (row[j] - mu) * inv * g[j] + b[j];
+        }
+    }
+    out
+}
+
+/// y = x Wᵀ (+ b): the linear-layer application in the paper's W[out, in]
+/// convention.
+fn linear(x: &Matrix, w: &Matrix, b: Option<&[f64]>) -> Matrix {
+    let mut y = x.matmul_bt(w);
+    if let Some(b) = b {
+        add_row_bias(&mut y, b);
+    }
+    y
+}
+
+fn add_row_bias(m: &mut Matrix, b: &[f64]) {
+    for i in 0..m.rows() {
+        for (v, bj) in m.row_mut(i).iter_mut().zip(b) {
+            *v += bj;
+        }
+    }
+}
+
+fn relu_inplace(m: &mut Matrix) {
+    for v in m.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// In-place masked softmax over each row of a [t, s] score matrix.
+fn softmax_rows(s: &mut Matrix, causal: bool) {
+    for i in 0..s.rows() {
+        let row = s.row_mut(i);
+        if causal {
+            for v in row.iter_mut().skip(i + 1) {
+                *v = f64::NEG_INFINITY;
+            }
+        }
+        let max = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut total = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            total += *v;
+        }
+        let inv = 1.0 / total.max(1e-300);
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Standard multi-head attention over [t, d] activations (ref.mha).
+fn mha(q: &Matrix, k: &Matrix, v: &Matrix, h: usize, causal: bool)
+       -> Matrix {
+    let t = q.rows();
+    let d = q.cols();
+    // loud failure beats silently dropping the trailing columns a
+    // truncating division would ignore (configs are validated upstream;
+    // this guards weight tensors that disagree with the config)
+    assert_eq!(d % h, 0, "attention width {d} not divisible by {h} heads");
+    let dh = d / h;
+    let scale = 1.0 / (dh as f64).sqrt();
+    let mut ctx = Matrix::zeros(t, d);
+    for head in 0..h {
+        let qh = q.slice_cols(head * dh, (head + 1) * dh);
+        let kh = k.slice_cols(head * dh, (head + 1) * dh);
+        let vh = v.slice_cols(head * dh, (head + 1) * dh);
+        let mut s = qh.matmul_bt(&kh).scale(scale);
+        softmax_rows(&mut s, causal);
+        let ch = s.matmul(&vh);
+        for i in 0..t {
+            ctx.row_mut(i)[head * dh..(head + 1) * dh]
+                .copy_from_slice(ch.row(i));
+        }
+    }
+    ctx
+}
+
+/// Mean next-token NLL of one sequence (python model.nll).
+fn mean_nll(logits: &Matrix, tokens: &[i32]) -> f64 {
+    let t = logits.rows().min(tokens.len());
+    if t < 2 {
+        return 0.0;
+    }
+    let vocab = logits.cols();
+    let mut total = 0.0;
+    for i in 0..t - 1 {
+        let row = logits.row(i);
+        let max = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let lse = row.iter().map(|v| (v - max).exp()).sum::<f64>().ln() + max;
+        let tgt = clamp_token(tokens[i + 1], vocab);
+        total += lse - row[tgt];
+    }
+    total / (t - 1) as f64
+}
+
+fn clamp_token(tok: i32, vocab: usize) -> usize {
+    (tok.max(0) as usize).min(vocab.saturating_sub(1))
+}
+
+/// The embedding table is the one tensor whose shape the manifest config
+/// fully determines — validate it so a weights/config mismatch fails with
+/// a message instead of garbage numerics.
+fn check_emb(tok_emb: &Matrix, cfg: &LmCfg) -> Result<()> {
+    if tok_emb.rows() != cfg.vocab || tok_emb.cols() != cfg.d {
+        bail!("tok_emb is {}x{} but the manifest config says vocab={} d={}",
+              tok_emb.rows(), tok_emb.cols(), cfg.vocab, cfg.d);
+    }
+    Ok(())
+}
+
+/// Attention weight rows must split evenly into heads; catching it at
+/// load time keeps [`mha`]'s internal assert unreachable through any
+/// loader (a panic there would kill the serve worker thread, whereas an
+/// Err is counted and reported per batch).
+fn check_heads(layers: &[DenseLayer], h: usize, what: &str) -> Result<()> {
+    for (i, l) in layers.iter().enumerate() {
+        let d = l.wq.rows();
+        if l.wk.rows() != d || l.wv.rows() != d || h == 0 || d % h != 0 {
+            bail!("{what} layer {i}: attn widths q={} k={} v={} do not \
+                   split into {h} heads", l.wq.rows(), l.wk.rows(),
+                  l.wv.rows());
+        }
+    }
+    Ok(())
+}
+
+/// Token + learned-positional embedding rows (python: `tok_emb[tokens] +
+/// pos_emb[:t]`) — shared by the dense and latent forwards.
+fn embed_tokens(tok_emb: &Matrix, pos_emb: &Matrix, tokens: &[i32])
+                -> Matrix {
+    let t = tokens.len();
+    let d = tok_emb.cols();
+    let vocab = tok_emb.rows();
+    let mut x = Matrix::zeros(t, d);
+    for (i, &tok) in tokens.iter().enumerate() {
+        let e = tok_emb.row(clamp_token(tok, vocab));
+        let p = pos_emb.row(i.min(pos_emb.rows() - 1));
+        let row = x.row_mut(i);
+        for j in 0..d {
+            row[j] = e[j] + p[j];
+        }
+    }
+    x
+}
+
+/// Final layer norm + tied LM head (python: `_ln(x, lnf) @ tok_emb.T`).
+fn tied_head(x: &Matrix, lnf_g: &[f64], lnf_b: &[f64], tok_emb: &Matrix)
+             -> Matrix {
+    layer_norm(x, lnf_g, lnf_b).matmul_bt(tok_emb)
+}
+
+/// Sequences longer than the learned positional table would silently
+/// reuse its last row (quietly wrong logits) where the compiled PJRT
+/// program rejects the shape — reject them here too.
+fn check_seq_len(t: usize, pos_rows: usize) -> Result<()> {
+    if t > pos_rows {
+        bail!("sequence length {t} exceeds the model's positional table \
+               ({pos_rows} rows / max_len)");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Weight views
+// ---------------------------------------------------------------------------
+
+fn mat(w: &Weights, name: &str) -> Result<Matrix> {
+    w.matrix(name)
+}
+
+fn vecf(w: &Weights, name: &str) -> Result<Vec<f64>> {
+    w.bias(name)
+}
+
+/// Split a [h, a, b] tensor into h dense [a, b] matrices.
+fn head_matrices(t: &Tensor, name: &str) -> Result<Vec<Matrix>> {
+    let shape = t.shape().to_vec();
+    if shape.len() != 3 {
+        bail!("{name}: expected 3-D head tensor, got {shape:?}");
+    }
+    let (h, a, b) = (shape[0], shape[1], shape[2]);
+    let data = t.as_f32().with_context(|| name.to_string())?;
+    Ok((0..h)
+        .map(|i| {
+            Matrix::from_fn(a, b, |r, c| {
+                data[i * a * b + r * b + c] as f64
+            })
+        })
+        .collect())
+}
+
+/// One pre-LN transformer block's dense weights (shared by the LM, the
+/// ViT tower, and the multimodal LM tower via key prefixes).
+struct DenseLayer {
+    ln1_g: Vec<f64>,
+    ln1_b: Vec<f64>,
+    wq: Matrix,
+    bq: Vec<f64>,
+    wk: Matrix,
+    bk: Vec<f64>,
+    wv: Matrix,
+    bv: Vec<f64>,
+    wo: Matrix,
+    bo: Vec<f64>,
+    ln2_g: Vec<f64>,
+    ln2_b: Vec<f64>,
+    wu: Matrix,
+    bu: Vec<f64>,
+    wd: Matrix,
+    bd: Vec<f64>,
+}
+
+impl DenseLayer {
+    fn load(w: &Weights, prefix: &str) -> Result<DenseLayer> {
+        Ok(DenseLayer {
+            ln1_g: vecf(w, &format!("{prefix}ln1.g"))?,
+            ln1_b: vecf(w, &format!("{prefix}ln1.b"))?,
+            wq: mat(w, &format!("{prefix}attn.wq"))?,
+            bq: vecf(w, &format!("{prefix}attn.bq"))?,
+            wk: mat(w, &format!("{prefix}attn.wk"))?,
+            bk: vecf(w, &format!("{prefix}attn.bk"))?,
+            wv: mat(w, &format!("{prefix}attn.wv"))?,
+            bv: vecf(w, &format!("{prefix}attn.bv"))?,
+            wo: mat(w, &format!("{prefix}attn.wo"))?,
+            bo: vecf(w, &format!("{prefix}attn.bo"))?,
+            ln2_g: vecf(w, &format!("{prefix}ln2.g"))?,
+            ln2_b: vecf(w, &format!("{prefix}ln2.b"))?,
+            wu: mat(w, &format!("{prefix}mlp.wu"))?,
+            bu: vecf(w, &format!("{prefix}mlp.bu"))?,
+            wd: mat(w, &format!("{prefix}mlp.wd"))?,
+            bd: vecf(w, &format!("{prefix}mlp.bd"))?,
+        })
+    }
+
+    /// One pre-LN block over [t, d] tokens (python model.forward body /
+    /// multimodal._block).
+    fn forward(&self, x: Matrix, h: usize, causal: bool) -> Matrix {
+        let xa = layer_norm(&x, &self.ln1_g, &self.ln1_b);
+        let q = linear(&xa, &self.wq, Some(&self.bq));
+        let k = linear(&xa, &self.wk, Some(&self.bk));
+        let v = linear(&xa, &self.wv, Some(&self.bv));
+        let ctx = mha(&q, &k, &v, h, causal);
+        let mut x = x.add(&linear(&ctx, &self.wo, Some(&self.bo)));
+        let xm = layer_norm(&x, &self.ln2_g, &self.ln2_b);
+        let mut z = linear(&xm, &self.wu, Some(&self.bu));
+        relu_inplace(&mut z);
+        x.add_inplace(&linear(&z, &self.wd, Some(&self.bd)));
+        x
+    }
+}
+
+struct DenseModel {
+    tok_emb: Matrix,
+    pos_emb: Matrix,
+    layers: Vec<DenseLayer>,
+    lnf_g: Vec<f64>,
+    lnf_b: Vec<f64>,
+    n_heads: usize,
+}
+
+impl DenseModel {
+    fn load(w: &Weights, cfg: &LmCfg) -> Result<DenseModel> {
+        let tok_emb = mat(w, "tok_emb")?;
+        check_emb(&tok_emb, cfg)?;
+        let layers = (0..cfg.n_layers)
+            .map(|i| DenseLayer::load(w, &format!("layers.{i}.")))
+            .collect::<Result<Vec<_>>>()?;
+        check_heads(&layers, cfg.n_heads, "dense")?;
+        Ok(DenseModel {
+            tok_emb,
+            pos_emb: mat(w, "pos_emb")?,
+            layers,
+            lnf_g: vecf(w, "lnf.g")?,
+            lnf_b: vecf(w, "lnf.b")?,
+            n_heads: cfg.n_heads,
+        })
+    }
+
+    /// tokens [t] → logits [t, vocab] (tied LM head).
+    fn forward(&self, tokens: &[i32]) -> Matrix {
+        let mut x = embed_tokens(&self.tok_emb, &self.pos_emb, tokens);
+        for layer in &self.layers {
+            x = layer.forward(x, self.n_heads, true);
+        }
+        tied_head(&x, &self.lnf_g, &self.lnf_b, &self.tok_emb)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Latent (MLA) model — python model.latent_forward
+// ---------------------------------------------------------------------------
+
+struct LatentLayer {
+    ln1_g: Vec<f64>,
+    ln1_b: Vec<f64>,
+    aq: Matrix,
+    ak: Matrix,
+    av: Matrix,
+    /// per-head augmented score core [rq+1, rk+1] (bias-absorbed)
+    h_aug: Vec<Matrix>,
+    /// per-head augmented value decompressor [dh, rv+1]
+    bv_aug: Vec<Matrix>,
+    ao_heads: Matrix,
+    bo_mat: Matrix,
+    bo: Vec<f64>,
+    ln2_g: Vec<f64>,
+    ln2_b: Vec<f64>,
+    au: Matrix,
+    bu_mat: Matrix,
+    bu: Vec<f64>,
+    ad: Matrix,
+    bd_mat: Matrix,
+    bd: Vec<f64>,
+}
+
+impl LatentLayer {
+    fn load(w: &Weights, prefix: &str, h: usize, dh: usize)
+            -> Result<LatentLayer> {
+        let bq_heads = head_matrices(
+            w.tensor(&format!("{prefix}attn.bq_heads"))?,
+            &format!("{prefix}attn.bq_heads"))?;
+        let bk_heads = head_matrices(
+            w.tensor(&format!("{prefix}attn.bk_heads"))?,
+            &format!("{prefix}attn.bk_heads"))?;
+        let bv_heads = head_matrices(
+            w.tensor(&format!("{prefix}attn.bv_heads"))?,
+            &format!("{prefix}attn.bv_heads"))?;
+        let bq_b = vecf(w, &format!("{prefix}attn.bq"))?;
+        let bk_b = vecf(w, &format!("{prefix}attn.bk"))?;
+        let bv_b = vecf(w, &format!("{prefix}attn.bv"))?;
+        if bq_heads.len() != h || bk_heads.len() != h || bv_heads.len() != h {
+            bail!("{prefix}: head tensors disagree with n_heads={h}");
+        }
+        // the per-head slicing below assumes full-width [d] biases
+        for (name, b) in [("bq", &bq_b), ("bk", &bk_b), ("bv", &bv_b)] {
+            if b.len() != h * dh {
+                bail!("{prefix}attn.{name} has {} entries, expected \
+                       n_heads*d_h = {}", b.len(), h * dh);
+            }
+        }
+
+        // QKV biases survive the latent path through bilinear augmentation
+        // (python latent_forward): per head
+        //   H̃ᵢ = [[BqᵢᵀBkᵢ, Bqᵢᵀbkᵢ], [bqᵢᵀBkᵢ, bqᵢᵀbkᵢ]]
+        //   B̃vᵢ = [Bvᵢ  bvᵢ]
+        let mut h_aug = Vec::with_capacity(h);
+        let mut bv_aug = Vec::with_capacity(h);
+        for i in 0..h {
+            let bqh = &bq_heads[i]; // [dh, rq]
+            let bkh = &bk_heads[i]; // [dh, rk]
+            let bvh = &bv_heads[i]; // [dh, rv]
+            if bqh.rows() != dh || bkh.rows() != dh || bvh.rows() != dh {
+                bail!("{prefix} head {i}: decompressor rows q={} k={} v={} \
+                       disagree with d_h={dh}", bqh.rows(), bkh.rows(),
+                      bvh.rows());
+            }
+            let (rq, rk) = (bqh.cols(), bkh.cols());
+            let bq_i = &bq_b[i * dh..(i + 1) * dh];
+            let bk_i = &bk_b[i * dh..(i + 1) * dh];
+            let bv_i = &bv_b[i * dh..(i + 1) * dh];
+            let core = bqh.matmul_at(bkh); // [rq, rk]
+            let mut aug = Matrix::zeros(rq + 1, rk + 1);
+            for q in 0..rq {
+                for k in 0..rk {
+                    aug[(q, k)] = core[(q, k)];
+                }
+                aug[(q, rk)] = (0..dh)
+                    .map(|dd| bqh[(dd, q)] * bk_i[dd])
+                    .sum();
+            }
+            for k in 0..rk {
+                aug[(rq, k)] = (0..dh)
+                    .map(|dd| bq_i[dd] * bkh[(dd, k)])
+                    .sum();
+            }
+            aug[(rq, rk)] = (0..dh).map(|dd| bq_i[dd] * bk_i[dd]).sum();
+            h_aug.push(aug);
+
+            let rv = bvh.cols();
+            let mut va = Matrix::zeros(dh, rv + 1);
+            for dd in 0..dh {
+                for r in 0..rv {
+                    va[(dd, r)] = bvh[(dd, r)];
+                }
+                va[(dd, rv)] = bv_i[dd];
+            }
+            bv_aug.push(va);
+        }
+
+        // the compression planes must agree with the per-head
+        // decompressors on the latent ranks, or forward()'s matmuls
+        // panic instead of erroring (same contract as check_heads)
+        let aq = mat(w, &format!("{prefix}attn.aq"))?;
+        let ak = mat(w, &format!("{prefix}attn.ak"))?;
+        let av = mat(w, &format!("{prefix}attn.av"))?;
+        for (name, plane, heads) in [("q", &aq, &bq_heads),
+                                     ("k", &ak, &bk_heads),
+                                     ("v", &av, &bv_heads)] {
+            if heads.iter().any(|m| m.cols() != plane.rows()) {
+                bail!("{prefix}attn.a{name} has rank {} but a \
+                       b{name}_heads slice disagrees", plane.rows());
+            }
+        }
+        let ao_heads = mat(w, &format!("{prefix}attn.ao_heads"))?;
+        if ao_heads.cols() != h * dh {
+            bail!("{prefix}attn.ao_heads spans {} features, expected \
+                   n_heads*d_h = {}", ao_heads.cols(), h * dh);
+        }
+        Ok(LatentLayer {
+            ln1_g: vecf(w, &format!("{prefix}ln1.g"))?,
+            ln1_b: vecf(w, &format!("{prefix}ln1.b"))?,
+            aq,
+            ak,
+            av,
+            h_aug,
+            bv_aug,
+            ao_heads,
+            bo_mat: mat(w, &format!("{prefix}attn.bo_mat"))?,
+            bo: vecf(w, &format!("{prefix}attn.bo"))?,
+            ln2_g: vecf(w, &format!("{prefix}ln2.g"))?,
+            ln2_b: vecf(w, &format!("{prefix}ln2.b"))?,
+            au: mat(w, &format!("{prefix}mlp.au"))?,
+            bu_mat: mat(w, &format!("{prefix}mlp.bu_mat"))?,
+            bu: vecf(w, &format!("{prefix}mlp.bu"))?,
+            ad: mat(w, &format!("{prefix}mlp.ad"))?,
+            bd_mat: mat(w, &format!("{prefix}mlp.bd_mat"))?,
+            bd: vecf(w, &format!("{prefix}mlp.bd"))?,
+        })
+    }
+
+    fn forward(&self, x: Matrix, h: usize, dh: usize) -> Matrix {
+        let t = x.rows();
+        let xa = layer_norm(&x, &self.ln1_g, &self.ln1_b);
+        // latent projections + augmented ones column
+        let append_ones = |m: Matrix| -> Matrix {
+            let mut out = Matrix::zeros(m.rows(), m.cols() + 1);
+            for i in 0..m.rows() {
+                out.row_mut(i)[..m.cols()].copy_from_slice(m.row(i));
+                out[(i, m.cols())] = 1.0;
+            }
+            out
+        };
+        let q_aug = append_ones(linear(&xa, &self.aq, None)); // [t, rq+1]
+        let ck_aug = append_ones(linear(&xa, &self.ak, None)); // [t, rk+1]
+        let cv_aug = append_ones(linear(&xa, &self.av, None)); // [t, rv+1]
+
+        // latent attention per head: scores never materialize full K
+        // (ref.latent_attention)
+        let scale = 1.0 / (dh as f64).sqrt();
+        let mut ctx = Matrix::zeros(t, h * dh);
+        for head in 0..h {
+            let mut s = q_aug
+                .matmul(&self.h_aug[head])
+                .matmul_bt(&ck_aug)
+                .scale(scale);
+            softmax_rows(&mut s, true);
+            let ctx_lat = s.matmul(&cv_aug); // [t, rv+1]
+            let ch = ctx_lat.matmul_bt(&self.bv_aug[head]); // [t, dh]
+            for i in 0..t {
+                ctx.row_mut(i)[head * dh..(head + 1) * dh]
+                    .copy_from_slice(ch.row(i));
+            }
+        }
+        // low-rank output projection: (ctx Aoᵀ) Boᵀ + bo
+        let mut x = x.add(&linear(
+            &linear(&ctx, &self.ao_heads, None),
+            &self.bo_mat,
+            Some(&self.bo),
+        ));
+        // low-rank MLP (ref.lowrank_matmul)
+        let xm = layer_norm(&x, &self.ln2_g, &self.ln2_b);
+        let mut z = linear(&linear(&xm, &self.au, None), &self.bu_mat,
+                           Some(&self.bu));
+        relu_inplace(&mut z);
+        let y = linear(&linear(&z, &self.ad, None), &self.bd_mat,
+                       Some(&self.bd));
+        x.add_inplace(&y);
+        x
+    }
+}
+
+struct LatentModel {
+    tok_emb: Matrix,
+    pos_emb: Matrix,
+    layers: Vec<LatentLayer>,
+    lnf_g: Vec<f64>,
+    lnf_b: Vec<f64>,
+    n_heads: usize,
+    d_h: usize,
+}
+
+impl LatentModel {
+    fn load(w: &Weights, cfg: &LmCfg) -> Result<LatentModel> {
+        let dh = cfg.d / cfg.n_heads.max(1);
+        let tok_emb = mat(w, "tok_emb")?;
+        check_emb(&tok_emb, cfg)?;
+        let layers = (0..cfg.n_layers)
+            .map(|i| {
+                LatentLayer::load(w, &format!("layers.{i}."), cfg.n_heads, dh)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(LatentModel {
+            tok_emb,
+            pos_emb: mat(w, "pos_emb")?,
+            layers,
+            lnf_g: vecf(w, "lnf.g")?,
+            lnf_b: vecf(w, "lnf.b")?,
+            n_heads: cfg.n_heads,
+            d_h: dh,
+        })
+    }
+
+    fn forward(&self, tokens: &[i32]) -> Matrix {
+        let mut x = embed_tokens(&self.tok_emb, &self.pos_emb, tokens);
+        for layer in &self.layers {
+            x = layer.forward(x, self.n_heads, self.d_h);
+        }
+        tied_head(&x, &self.lnf_g, &self.lnf_b, &self.tok_emb)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multimodal model — python multimodal.forward
+// ---------------------------------------------------------------------------
+
+struct MmModel {
+    patch_w: Matrix,
+    patch_b: Vec<f64>,
+    vit_pos: Matrix,
+    vit_layers: Vec<DenseLayer>,
+    vit_lnf_g: Vec<f64>,
+    vit_lnf_b: Vec<f64>,
+    proj_w: Matrix,
+    proj_b: Vec<f64>,
+    lm_tok_emb: Matrix,
+    lm_pos_emb: Matrix,
+    lm_layers: Vec<DenseLayer>,
+    lm_lnf_g: Vec<f64>,
+    lm_lnf_b: Vec<f64>,
+    ans_w: Matrix,
+    ans_b: Vec<f64>,
+    cfg: MmCfg,
+}
+
+impl MmModel {
+    fn load(w: &Weights, cfg: &MmCfg) -> Result<MmModel> {
+        let vit_layers = (0..cfg.vision.n_layers)
+            .map(|i| DenseLayer::load(w, &format!("vit.layers.{i}.")))
+            .collect::<Result<Vec<_>>>()?;
+        check_heads(&vit_layers, cfg.vision.n_heads, "vit")?;
+        let lm_layers = (0..cfg.lm.n_layers)
+            .map(|i| DenseLayer::load(w, &format!("lm.layers.{i}.")))
+            .collect::<Result<Vec<_>>>()?;
+        check_heads(&lm_layers, cfg.lm.n_heads, "mm-lm")?;
+        let vit_pos = mat(w, "vit.pos")?;
+        let grid = cfg.vision.img / cfg.vision.patch.max(1);
+        let n_patches = grid * grid;
+        if vit_pos.rows() < n_patches {
+            bail!("vit.pos has {} rows but the vision config implies \
+                   {n_patches} patches", vit_pos.rows());
+        }
+        let patch_w = mat(w, "vit.patch.w")?;
+        if patch_w.rows() != cfg.vision.d {
+            bail!("vit.patch.w emits {} features but the vision config \
+                   says d={}", patch_w.rows(), cfg.vision.d);
+        }
+        let proj_w = mat(w, "proj.w")?;
+        if proj_w.rows() != cfg.lm.d || proj_w.cols() != cfg.vision.d {
+            bail!("proj.w is {}x{} but the configs say lm.d={} vision.d={}",
+                  proj_w.rows(), proj_w.cols(), cfg.lm.d, cfg.vision.d);
+        }
+        let lm_tok_emb = mat(w, "lm.tok_emb")?;
+        check_emb(&lm_tok_emb, &cfg.lm)?;
+        let lm_pos_emb = mat(w, "lm.pos_emb")?;
+        check_seq_len(n_patches + cfg.text_len, lm_pos_emb.rows())?;
+        Ok(MmModel {
+            patch_w,
+            patch_b: vecf(w, "vit.patch.b")?,
+            vit_pos,
+            vit_layers,
+            vit_lnf_g: vecf(w, "vit.lnf.g")?,
+            vit_lnf_b: vecf(w, "vit.lnf.b")?,
+            proj_w,
+            proj_b: vecf(w, "proj.b")?,
+            lm_tok_emb,
+            lm_pos_emb,
+            lm_layers,
+            lm_lnf_g: vecf(w, "lm.lnf.g")?,
+            lm_lnf_b: vecf(w, "lm.lnf.b")?,
+            ans_w: mat(w, "ans.w")?,
+            ans_b: vecf(w, "ans.b")?,
+            cfg: cfg.clone(),
+        })
+    }
+
+    /// image [img*img] row-major, tokens [text_len] → answer logits.
+    fn forward(&self, image: &[f32], tokens: &[i32]) -> Vec<f64> {
+        let v = &self.cfg.vision;
+        let grid = v.img / v.patch;
+        let n_patches = grid * grid;
+        let patch_dim = v.patch * v.patch;
+        // patchify: patch (pi, pj) flattened row-major (multimodal.forward)
+        let mut patches = Matrix::zeros(n_patches, patch_dim);
+        for pi in 0..grid {
+            for pj in 0..grid {
+                let row = patches.row_mut(pi * grid + pj);
+                for a in 0..v.patch {
+                    for b in 0..v.patch {
+                        row[a * v.patch + b] =
+                            image[(pi * v.patch + a) * v.img
+                                  + pj * v.patch + b] as f64;
+                    }
+                }
+            }
+        }
+        let mut x = linear(&patches, &self.patch_w, Some(&self.patch_b));
+        for i in 0..x.rows() {
+            let pos = self.vit_pos.row(i);
+            for (a, p) in x.row_mut(i).iter_mut().zip(pos) {
+                *a += p;
+            }
+        }
+        for layer in &self.vit_layers {
+            x = layer.forward(x, v.n_heads, false);
+        }
+        let x = layer_norm(&x, &self.vit_lnf_g, &self.vit_lnf_b);
+        let vis = linear(&x, &self.proj_w, Some(&self.proj_b));
+
+        let d_lm = self.lm_tok_emb.cols();
+        let vocab = self.lm_tok_emb.rows();
+        let seq_t = n_patches + tokens.len();
+        let mut seq = Matrix::zeros(seq_t, d_lm);
+        for i in 0..n_patches {
+            seq.row_mut(i).copy_from_slice(vis.row(i));
+        }
+        for (i, &tok) in tokens.iter().enumerate() {
+            seq.row_mut(n_patches + i)
+                .copy_from_slice(self.lm_tok_emb.row(clamp_token(tok, vocab)));
+        }
+        for i in 0..seq_t {
+            let pos = self.lm_pos_emb.row(i.min(self.lm_pos_emb.rows() - 1));
+            for (a, p) in seq.row_mut(i).iter_mut().zip(pos) {
+                *a += p;
+            }
+        }
+        for layer in &self.lm_layers {
+            seq = layer.forward(seq, self.cfg.lm.n_heads, true);
+        }
+        let seq = layer_norm(&seq, &self.lm_lnf_g, &self.lm_lnf_b);
+        let last: Vec<f64> = seq.row(seq_t - 1).to_vec();
+        let mut out = self.ans_w.matvec(&last);
+        for (o, b) in out.iter_mut().zip(&self.ans_b) {
+            *o += b;
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executable dispatch
+// ---------------------------------------------------------------------------
+
+/// Models converted from a specific weight set (f32 → f64, per-head bias
+/// augmentation precomputed).
+enum LoadedModel {
+    Dense(DenseModel),
+    Latent(LatentModel),
+    Mm(MmModel),
+}
+
+/// Few-entry memo map: the serve path alternates two weight sets (dense +
+/// latent variant) on ONE program name, so a single-slot cache would
+/// thrash; report sweeps create many transient weight sets, so an
+/// unbounded map would hoard memory. Cap small and reset when exceeded.
+const MODEL_CACHE_CAP: usize = 4;
+type ModelCache = std::collections::HashMap<u64, LoadedModel>;
+
+struct RefExecutable {
+    kind: RefProgram,
+    /// Memoized models keyed by [`Weights::cache_id`]: weights are program
+    /// *parameters* (they arrive at execute time, not compile time), but
+    /// the decode loop and the serving path call execute repeatedly with
+    /// the same set(s) — rebuilding per call would cost O(tokens × params).
+    cache: std::sync::Mutex<ModelCache>,
+}
+
+impl RefExecutable {
+    /// Lock the model cache, (re)loading from `weights` when no entry for
+    /// this weight set exists.
+    fn loaded(&self, weights: &Weights)
+              -> Result<(std::sync::MutexGuard<'_, ModelCache>, u64)> {
+        let mut g = self.cache.lock().unwrap();
+        let id = weights.cache_id();
+        if !g.contains_key(&id) {
+            let model = match &self.kind {
+                RefProgram::Score(cfg) | RefProgram::Step(cfg) => {
+                    LoadedModel::Dense(DenseModel::load(weights, cfg)?)
+                }
+                RefProgram::LatentScore(cfg)
+                | RefProgram::LatentStep(cfg) => {
+                    LoadedModel::Latent(LatentModel::load(weights, cfg)?)
+                }
+                RefProgram::MmScore(cfg) => {
+                    LoadedModel::Mm(MmModel::load(weights, cfg)?)
+                }
+            };
+            if g.len() >= MODEL_CACHE_CAP {
+                g.clear();
+            }
+            g.insert(id, model);
+        }
+        Ok((g, id))
+    }
+}
+
+/// Buffer length must match the declared shape — callers can build
+/// arbitrary [`ParamValue`]s, and a short buffer would otherwise panic at
+/// the lane slicing below instead of returning an error.
+fn check_len(shape: &[usize], len: usize, what: &str) -> Result<()> {
+    let want: usize = shape.iter().product();
+    if len != want {
+        bail!("{what}: shape {shape:?} implies {want} elements, buffer \
+               has {len}");
+    }
+    Ok(())
+}
+
+fn tokens_2d(p: &ParamValue) -> Result<(usize, usize, &[i32])> {
+    match p {
+        ParamValue::I32 { shape, data } if shape.len() == 2 => {
+            check_len(shape, data.len(), "tokens")?;
+            Ok((shape[0], shape[1], data))
+        }
+        other => bail!("expected i32 [b, t] tokens input, got {:?}",
+                       other.shape()),
+    }
+}
+
+fn lens_1d(p: &ParamValue) -> Result<&[i32]> {
+    match p {
+        ParamValue::I32 { shape, data } if shape.len() == 1 => {
+            check_len(shape, data.len(), "lens")?;
+            Ok(data)
+        }
+        other => bail!("expected i32 [b] lens input, got {:?}", other.shape()),
+    }
+}
+
+fn images_3d(p: &ParamValue) -> Result<(usize, usize, &[f32])> {
+    match p {
+        ParamValue::F32 { shape, data } if shape.len() == 3 => {
+            check_len(shape, data.len(), "images")?;
+            Ok((shape[0], shape[1] * shape[2], data))
+        }
+        other => bail!("expected f32 [b, h, w] images input, got {:?}",
+                       other.shape()),
+    }
+}
+
+fn want_leading(leading: &[ParamValue], n: usize, prog: &str) -> Result<()> {
+    if leading.len() != n {
+        bail!("{prog}: expected {n} leading input(s), got {}", leading.len());
+    }
+    Ok(())
+}
+
+/// Next-token logits row per lane (python model.step_logits). The lens
+/// vector must cover every token lane — a short one would silently decode
+/// from padding where the PJRT program signature would reject the shape.
+fn step_rows(logits_of: impl Fn(&[i32]) -> Matrix, b: usize, t: usize,
+             tokens: &[i32], lens: &[i32]) -> Result<Vec<f32>> {
+    if lens.len() != b {
+        bail!("step: lens has {} entries for a batch of {b}", lens.len());
+    }
+    let mut out = Vec::new();
+    for lane in 0..b {
+        let seq = &tokens[lane * t..(lane + 1) * t];
+        let logits = logits_of(seq);
+        let idx = ((lens[lane] - 1).max(0) as usize)
+            .min(t.saturating_sub(1));
+        out.extend(logits.row(idx).iter().map(|&v| v as f32));
+    }
+    Ok(out)
+}
+
+impl Executable for RefExecutable {
+    fn execute(&self, leading: &[ParamValue], weights: &Weights,
+               _weight_order: &[String]) -> Result<Vec<f32>> {
+        match &self.kind {
+            RefProgram::Score(_) => {
+                want_leading(leading, 1, "score")?;
+                let (b, t, tokens) = tokens_2d(&leading[0])?;
+                let (guard, wid) = self.loaded(weights)?;
+                let Some(LoadedModel::Dense(model)) = guard.get(&wid)
+                else {
+                    bail!("score: cached model kind mismatch");
+                };
+                check_seq_len(t, model.pos_emb.rows())?;
+                let mut out = Vec::with_capacity(b);
+                for lane in 0..b {
+                    let seq = &tokens[lane * t..(lane + 1) * t];
+                    out.push(mean_nll(&model.forward(seq), seq) as f32);
+                }
+                Ok(out)
+            }
+            RefProgram::Step(_) => {
+                want_leading(leading, 2, "step")?;
+                let (b, t, tokens) = tokens_2d(&leading[0])?;
+                let lens = lens_1d(&leading[1])?;
+                let (guard, wid) = self.loaded(weights)?;
+                let Some(LoadedModel::Dense(model)) = guard.get(&wid)
+                else {
+                    bail!("step: cached model kind mismatch");
+                };
+                check_seq_len(t, model.pos_emb.rows())?;
+                step_rows(|seq| model.forward(seq), b, t, tokens, lens)
+            }
+            RefProgram::LatentScore(_) => {
+                want_leading(leading, 1, "latent_score")?;
+                let (b, t, tokens) = tokens_2d(&leading[0])?;
+                let (guard, wid) = self.loaded(weights)?;
+                let Some(LoadedModel::Latent(model)) = guard.get(&wid)
+                else {
+                    bail!("latent_score: cached model kind mismatch");
+                };
+                check_seq_len(t, model.pos_emb.rows())?;
+                let mut out = Vec::with_capacity(b);
+                for lane in 0..b {
+                    let seq = &tokens[lane * t..(lane + 1) * t];
+                    out.push(mean_nll(&model.forward(seq), seq) as f32);
+                }
+                Ok(out)
+            }
+            RefProgram::LatentStep(_) => {
+                want_leading(leading, 2, "latent_step")?;
+                let (b, t, tokens) = tokens_2d(&leading[0])?;
+                let lens = lens_1d(&leading[1])?;
+                let (guard, wid) = self.loaded(weights)?;
+                let Some(LoadedModel::Latent(model)) = guard.get(&wid)
+                else {
+                    bail!("latent_step: cached model kind mismatch");
+                };
+                check_seq_len(t, model.pos_emb.rows())?;
+                step_rows(|seq| model.forward(seq), b, t, tokens, lens)
+            }
+            RefProgram::MmScore(cfg) => {
+                want_leading(leading, 2, "mm_score")?;
+                let (b, img_hw, images) = images_3d(&leading[0])?;
+                let (bt, text_len, tokens) = tokens_2d(&leading[1])?;
+                if bt != b {
+                    bail!("mm_score: image batch {b} != token batch {bt}");
+                }
+                if text_len != cfg.text_len {
+                    bail!("mm_score: tokens are [.., {text_len}] but the \
+                           manifest says text_len={}", cfg.text_len);
+                }
+                // check both image dims, not just the pixel count: an
+                // [b, 8, 32] tensor has the right count but the wrong row
+                // stride and would patchify into garbage silently
+                let ishape = leading[0].shape();
+                if ishape[1] != cfg.vision.img || ishape[2] != cfg.vision.img {
+                    bail!("mm_score: images are [.., {}, {}] but the \
+                           manifest vision config says img={}",
+                          ishape[1], ishape[2], cfg.vision.img);
+                }
+                let (guard, wid) = self.loaded(weights)?;
+                let Some(LoadedModel::Mm(model)) = guard.get(&wid)
+                else {
+                    bail!("mm_score: cached model kind mismatch");
+                };
+                let mut out = Vec::with_capacity(b * cfg.n_answers);
+                for lane in 0..b {
+                    let im = &images[lane * img_hw..(lane + 1) * img_hw];
+                    let tk = &tokens[lane * text_len..(lane + 1) * text_len];
+                    let logits = model.forward(im, tk);
+                    out.extend(logits.iter().map(|&v| v as f32));
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::pipeline::tests_support::random_weights;
+    use crate::model::config::MiniConfig;
+
+    const TINY: MiniConfig = MiniConfig {
+        name: "tiny", vocab: 40, d: 16, n_layers: 2, n_heads: 2,
+        d_i: 32, max_len: 24,
+    };
+
+    fn tiny_cfg() -> LmCfg {
+        LmCfg { vocab: TINY.vocab, d: TINY.d, n_layers: TINY.n_layers,
+                n_heads: TINY.n_heads }
+    }
+
+    #[test]
+    fn zero_model_scores_uniform_nll() {
+        // all-zero weights ⇒ logits identically 0 ⇒ NLL = ln(vocab),
+        // an exact analytic anchor for the whole forward pass.
+        let mut w = random_weights(&TINY, 1);
+        let names: Vec<String> = w.names().cloned().collect();
+        for name in names {
+            let shape = match w.tensor(&name).unwrap() {
+                Tensor::F32 { shape, .. } => shape.clone(),
+                Tensor::I32 { .. } => continue,
+            };
+            let n: usize = shape.iter().product();
+            let fill = if name.ends_with(".g") { 1.0 } else { 0.0 };
+            w.set_tensor(&name, Tensor::F32 {
+                shape,
+                data: vec![fill; n],
+            });
+        }
+        let model = DenseModel::load(&w, &tiny_cfg()).unwrap();
+        let tokens: Vec<i32> = (0..12).map(|i| i % TINY.vocab as i32)
+            .collect();
+        let nll = mean_nll(&model.forward(&tokens), &tokens);
+        let want = (TINY.vocab as f64).ln();
+        assert!((nll - want).abs() < 1e-9, "nll {nll} vs ln(V) {want}");
+    }
+
+    #[test]
+    fn causal_mask_isolates_future_tokens() {
+        // logits at position k must not depend on tokens after k.
+        let w = random_weights(&TINY, 2);
+        let model = DenseModel::load(&w, &tiny_cfg()).unwrap();
+        let a: Vec<i32> = (0..10).map(|i| (i * 3) % 40).collect();
+        let mut b = a.clone();
+        for v in b.iter_mut().skip(6) {
+            *v = 39 - *v;
+        }
+        let la = model.forward(&a);
+        let lb = model.forward(&b);
+        for i in 0..6 {
+            for j in 0..TINY.vocab {
+                assert!((la[(i, j)] - lb[(i, j)]).abs() < 1e-9,
+                        "row {i} differs");
+            }
+        }
+        // and positions ≥ 6 DO see the change
+        let mut any = 0.0f64;
+        for j in 0..TINY.vocab {
+            any += (la[(7, j)] - lb[(7, j)]).abs();
+        }
+        assert!(any > 1e-9, "future rows should differ");
+    }
+
+    #[test]
+    fn softmax_rows_are_distributions() {
+        let mut s = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f64 * 0.3);
+        softmax_rows(&mut s, true);
+        for i in 0..4 {
+            let sum: f64 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12);
+            for j in (i + 1)..4 {
+                assert_eq!(s[(i, j)], 0.0, "causal leak at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn layer_norm_matches_definition() {
+        let x = Matrix::from_fn(2, 4, |i, j| (i as f64 + 1.0) * j as f64);
+        let g = vec![2.0; 4];
+        let b = vec![0.5; 4];
+        let y = layer_norm(&x, &g, &b);
+        for i in 0..2 {
+            let mean: f64 = y.row(i).iter().sum::<f64>() / 4.0;
+            // g uniform, b uniform ⇒ normalized rows keep mean b
+            assert!((mean - 0.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn parse_program_rejects_unknown_families() {
+        let manifest = Value::obj(vec![]);
+        assert!(parse_program("gibberish", &manifest).is_err());
+        assert!(parse_program("score_missing", &manifest).is_err());
+    }
+
+    #[test]
+    fn executable_memoizes_per_weight_set() {
+        let exe = RefExecutable {
+            kind: RefProgram::Score(tiny_cfg()),
+            cache: std::sync::Mutex::new(ModelCache::new()),
+        };
+        let w = random_weights(&TINY, 5);
+        let tokens = ParamValue::I32 {
+            shape: vec![1, 8],
+            data: (0..8).collect(),
+        };
+        let out1 = exe.execute(&[tokens.clone()], &w, &[]).unwrap();
+        assert!(matches!(exe.cache.lock().unwrap().get(&w.cache_id()),
+                         Some(LoadedModel::Dense(_))),
+                "first execute must populate the cache");
+        let out2 = exe.execute(&[tokens.clone()], &w, &[]).unwrap();
+        assert_eq!(out1, out2, "cache hit must not change results");
+        // a mutated weight set carries a fresh id → a second entry, so
+        // two variants alternating on one program both stay hot
+        let mut w2 = w.clone();
+        let bump = vec![0.5f64; TINY.d];
+        w2.set_bias("lnf.b", &bump);
+        let _ = exe.execute(&[tokens.clone()], &w2, &[]).unwrap();
+        {
+            let g = exe.cache.lock().unwrap();
+            assert!(g.contains_key(&w.cache_id()));
+            assert!(g.contains_key(&w2.cache_id()));
+            assert_eq!(g.len(), 2);
+        }
+        // the cap bounds the map: a burst of fresh weight sets resets it
+        for seed in 100..100 + (MODEL_CACHE_CAP as u64) {
+            let wn = random_weights(&TINY, seed);
+            let _ = exe.execute(&[tokens.clone()], &wn, &[]).unwrap();
+        }
+        assert!(exe.cache.lock().unwrap().len() <= MODEL_CACHE_CAP,
+                "cache must stay bounded");
+    }
+
+    #[test]
+    fn short_buffers_error_instead_of_panicking() {
+        let bad = ParamValue::I32 { shape: vec![4, 12], data: vec![0; 10] };
+        assert!(tokens_2d(&bad).is_err());
+        let bad_img = ParamValue::F32 { shape: vec![2, 16, 16],
+                                        data: vec![0.0; 100] };
+        assert!(images_3d(&bad_img).is_err());
+        let bad_lens = ParamValue::I32 { shape: vec![3], data: vec![1] };
+        assert!(lens_1d(&bad_lens).is_err());
+    }
+}

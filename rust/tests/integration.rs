@@ -1,7 +1,9 @@
-//! Integration tests over the real artifacts: PJRT program execution,
-//! python↔rust golden cross-checks, and the full compress→score loop.
-//! All tests skip gracefully when artifacts are absent (CI without
-//! `make artifacts`), but `make test` runs them for real.
+//! Integration tests over the real artifacts: program execution on the
+//! engine's backend (RefBackend by default, PJRT with `--features pjrt`
+//! and `LATENTLLM_BACKEND=pjrt`), python↔rust golden cross-checks, and
+//! the full compress→score loop. All tests skip gracefully when artifacts
+//! are absent (CI without `make artifacts`), but `make test` runs them
+//! for real. Artifact-free RefBackend coverage lives in refbackend.rs.
 
 use latentllm::compress::pipeline::{compress_model, Method};
 use latentllm::data::{CalibSet, Corpus};

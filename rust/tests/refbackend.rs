@@ -1,0 +1,389 @@
+//! Reference-backend tests: no artifacts directory needed — each test
+//! synthesizes a tiny manifest (+ in-memory weights) in a tempdir and runs
+//! the full Engine / eval / coordinator stack on [`RefBackend`].
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use latentllm::compress::pipeline::tests_support::random_weights;
+use latentllm::coordinator::batcher::BatcherConfig;
+use latentllm::coordinator::kvcache::{CacheKind, KvCacheManager};
+use latentllm::coordinator::router::{ModelVariant, Policy, Router};
+use latentllm::coordinator::server::{ScoreRequest, Server, ServerConfig};
+use latentllm::data::Corpus;
+use latentllm::eval;
+use latentllm::model::config::MiniConfig;
+use latentllm::model::io::{Tensor, TensorMap};
+use latentllm::model::Weights;
+use latentllm::runtime::Engine;
+use latentllm::util::json::Value;
+use latentllm::util::rng::Rng;
+
+const TINY: MiniConfig = MiniConfig {
+    name: "tiny", vocab: 40, d: 16, n_layers: 2, n_heads: 2,
+    d_i: 32, max_len: 24,
+};
+const SEQ: usize = 12;
+const BATCH: usize = 4;
+
+fn num(v: usize) -> Value {
+    Value::Num(v as f64)
+}
+
+fn obj(pairs: Vec<(String, Value)>) -> Value {
+    Value::Obj(pairs.into_iter().collect::<BTreeMap<String, Value>>())
+}
+
+fn s(v: &str) -> Value {
+    Value::Str(v.to_string())
+}
+
+fn lm_config_json(cfg: &MiniConfig) -> Value {
+    obj(vec![
+        ("name".to_string(), s(cfg.name)),
+        ("vocab".to_string(), num(cfg.vocab)),
+        ("d".to_string(), num(cfg.d)),
+        ("n_layers".to_string(), num(cfg.n_layers)),
+        ("n_heads".to_string(), num(cfg.n_heads)),
+        ("d_i".to_string(), num(cfg.d_i)),
+        ("max_len".to_string(), num(cfg.max_len)),
+    ])
+}
+
+fn str_list(names: &[&str]) -> Value {
+    Value::Arr(names.iter().map(|n| s(n)).collect())
+}
+
+/// Write a synthetic manifest.json for the tiny model (score/step/latent/
+/// mm program table) into a fresh tempdir; returns the artifacts path.
+fn synth_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("latentllm_refbackend_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut score_order = vec!["tokens".to_string()];
+    score_order.extend(TINY.param_names());
+    let mut step_order = vec!["tokens".to_string(), "lens".to_string()];
+    step_order.extend(TINY.param_names());
+    let as_arr = |v: &[String]| {
+        Value::Arr(v.iter().map(|n| s(n)).collect())
+    };
+
+    let programs = obj(vec![
+        ("score_tiny".to_string(), as_arr(&score_order)),
+        ("step_tiny".to_string(), as_arr(&step_order)),
+        ("latent_score_tinytag".to_string(), str_list(&["tokens"])),
+        ("latent_step_tinytag".to_string(),
+         str_list(&["tokens", "lens"])),
+        ("mm_score_mini".to_string(), str_list(&["images", "tokens"])),
+    ]);
+    let models = obj(vec![(
+        "tiny".to_string(),
+        obj(vec![("config".to_string(), lm_config_json(&TINY))]),
+    )]);
+    let latent_demo = obj(vec![
+        ("tag".to_string(), s("tinytag")),
+        ("model".to_string(), s("tiny")),
+    ]);
+    let mm_lm = MiniConfig {
+        name: "mm-lm", vocab: 32, d: 8, n_layers: 1, n_heads: 2,
+        d_i: 16, max_len: 24,
+    };
+    let mm = obj(vec![
+        ("config".to_string(), obj(vec![
+            ("name".to_string(), s("mini")),
+            ("lm".to_string(), lm_config_json(&mm_lm)),
+            ("vision".to_string(), obj(vec![
+                ("img".to_string(), num(16)),
+                ("patch".to_string(), num(4)),
+                ("d".to_string(), num(8)),
+                ("n_layers".to_string(), num(1)),
+                ("n_heads".to_string(), num(2)),
+                ("d_i".to_string(), num(16)),
+            ])),
+            ("n_answers".to_string(), num(4)),
+        ])),
+        ("text_len".to_string(), num(6)),
+    ]);
+    let manifest = obj(vec![
+        ("seq_len".to_string(), num(SEQ)),
+        ("score_batch".to_string(), num(BATCH)),
+        ("vocab".to_string(), num(TINY.vocab)),
+        ("programs".to_string(), programs),
+        ("models".to_string(), models),
+        ("latent_demo".to_string(), latent_demo),
+        ("mm".to_string(), mm),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.to_string_pretty())
+        .unwrap();
+    dir
+}
+
+fn rand_t(rng: &mut Rng, shape: &[usize], scale: f64) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::F32 {
+        shape: shape.to_vec(),
+        data: (0..n).map(|_| (rng.normal() * scale) as f32).collect(),
+    }
+}
+
+fn const_t(shape: &[usize], v: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::F32 { shape: shape.to_vec(), data: vec![v; n] }
+}
+
+fn corpus(n: usize) -> Corpus {
+    let mut rng = Rng::new(7);
+    Corpus {
+        name: "synth".to_string(),
+        tokens: (0..n).map(|_| rng.below(TINY.vocab) as i32).collect(),
+    }
+}
+
+#[test]
+fn engine_program_cache_shares_instances() {
+    let art = synth_artifacts("cache");
+    let engine = Engine::new(&art).unwrap();
+    assert_eq!(engine.backend_name(), "ref");
+    assert_eq!(engine.cached_programs(), 0);
+    let p1 = engine.program("score_tiny").unwrap();
+    let p2 = engine.program("score_tiny").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&p1, &p2), "cache must share programs");
+    assert_eq!(engine.cached_programs(), 1);
+    let p3 = engine.program("step_tiny").unwrap();
+    assert_eq!(p3.param_order[..2], ["tokens".to_string(),
+                                     "lens".to_string()]);
+    assert_eq!(engine.cached_programs(), 2);
+    assert_eq!(Engine::leading_count(&p3.param_order), 2);
+    assert!(engine.program("score_nonexistent").is_err());
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn zero_weights_score_uniform_perplexity() {
+    // all-zero weights ⇒ uniform logits ⇒ ppl == vocab exactly: an
+    // analytic anchor through Engine + eval::perplexity on RefBackend.
+    let art = synth_artifacts("uniform");
+    let engine = Engine::new(&art).unwrap();
+    let mut map = TensorMap::new();
+    let shapes_src = random_weights(&TINY, 3);
+    for name in shapes_src.names() {
+        let t = shapes_src.tensor(name).unwrap();
+        let fill = if name.ends_with(".g") { 1.0 } else { 0.0 };
+        map.insert(name.clone(), const_t(t.shape(), fill));
+    }
+    let weights = Weights::new(map);
+    let r = eval::perplexity(&engine, "score_tiny", &weights, &corpus(600),
+                             BATCH, SEQ, 3).unwrap();
+    assert!((r.ppl - TINY.vocab as f64).abs() < 1e-3,
+            "uniform ppl {} vs vocab {}", r.ppl, TINY.vocab);
+    assert_eq!(r.n_sequences, 3 * BATCH);
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn score_and_generate_end_to_end() {
+    let art = synth_artifacts("e2e");
+    let engine = Engine::new(&art).unwrap();
+    let weights = random_weights(&TINY, 11);
+    let r = eval::perplexity(&engine, "score_tiny", &weights, &corpus(600),
+                             BATCH, SEQ, 2).unwrap();
+    assert!(r.ppl.is_finite() && r.ppl > 1.0, "ppl {}", r.ppl);
+
+    let prompts: Vec<Vec<i32>> = vec![vec![1, 2, 3], vec![4, 5, 6, 7]];
+    let opts = eval::GenerateOpts { max_new: 4, temperature: 0.0, seed: 3 };
+    let res = eval::generate(&engine, "step_tiny", &weights, &prompts,
+                             BATCH, SEQ, TINY.vocab, &opts).unwrap();
+    assert_eq!(res.sequences.len(), 2);
+    assert_eq!(res.sequences[0].len(), 3 + 4);
+    assert_eq!(res.sequences[1].len(), 4 + 4);
+    assert_eq!(res.tokens_generated, 2 * 4);
+    for seq in &res.sequences {
+        assert!(seq.iter().all(|&t| (0..TINY.vocab as i32).contains(&t)));
+    }
+    // greedy decode is deterministic
+    let res2 = eval::generate(&engine, "step_tiny", &weights, &prompts,
+                              BATCH, SEQ, TINY.vocab, &opts).unwrap();
+    assert_eq!(res.sequences, res2.sequences);
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn server_pads_short_requests_through_batcher() {
+    // coordinator::batcher padding path: submit more (short) requests
+    // than one flush holds; execute_batch pads each to [program_batch,
+    // seq_len] before the RefBackend scoring program runs.
+    let art = synth_artifacts("serve");
+    let weights = random_weights(&TINY, 21);
+    let variants = vec![ModelVariant {
+        name: "dense".to_string(),
+        score_program: "score_tiny".to_string(),
+        weights,
+        cache: KvCacheManager::new(CacheKind::Dense { d: TINY.d },
+                                   TINY.n_layers, 2, 8 << 20),
+    }];
+    let server = Server::start(
+        art.clone(),
+        Router::new(variants, Policy::RoundRobin),
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 3,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            policy: Policy::RoundRobin,
+            program_batch: BATCH,
+            seq_len: SEQ,
+        });
+    // ragged, shorter-than-seq_len requests exercise the padding fill
+    let reqs: Vec<Vec<i32>> = (0..7)
+        .map(|i| (0..(3 + i % 4)).map(|j| ((i * 5 + j) % 40) as i32)
+            .collect())
+        .collect();
+    let rxs: Vec<_> = reqs.into_iter().enumerate()
+        .map(|(i, tokens)| server.submit(ScoreRequest { id: i as u64,
+                                                        tokens }))
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60))
+            .expect("response");
+        assert!(resp.nll.is_finite(), "padded request must score");
+    }
+    let m = server.shutdown();
+    assert_eq!(m.counter("requests"), 7);
+    assert_eq!(m.counter("batch_errors"), 0);
+    assert!(m.counter("batches") >= 3, "max_batch=3 forces ≥3 flushes");
+    std::fs::remove_dir_all(&art).ok();
+}
+
+/// Random latent/MLA weight set in the python `latent_shapes` layout.
+fn random_latent_weights(seed: u64) -> Weights {
+    let (d, h, di) = (TINY.d, TINY.n_heads, TINY.d_i);
+    let dh = d / h;
+    let (rq, rk, rv, ro, ru, rd) = (5, 5, 4, 4, 6, 6);
+    let mut rng = Rng::new(seed);
+    let sc = 0.5 / (d as f64).sqrt();
+    let mut map = TensorMap::new();
+    map.insert("tok_emb".to_string(),
+               rand_t(&mut rng, &[TINY.vocab, d], sc));
+    map.insert("pos_emb".to_string(),
+               rand_t(&mut rng, &[TINY.max_len, d], sc));
+    for i in 0..TINY.n_layers {
+        let p = format!("layers.{i}.");
+        map.insert(format!("{p}ln1.g"), const_t(&[d], 1.0));
+        map.insert(format!("{p}ln1.b"), const_t(&[d], 0.0));
+        map.insert(format!("{p}attn.aq"), rand_t(&mut rng, &[rq, d], sc));
+        map.insert(format!("{p}attn.bq_heads"),
+                   rand_t(&mut rng, &[h, dh, rq], sc));
+        map.insert(format!("{p}attn.bq"), const_t(&[d], 0.01));
+        map.insert(format!("{p}attn.ak"), rand_t(&mut rng, &[rk, d], sc));
+        map.insert(format!("{p}attn.bk_heads"),
+                   rand_t(&mut rng, &[h, dh, rk], sc));
+        map.insert(format!("{p}attn.bk"), const_t(&[d], 0.01));
+        map.insert(format!("{p}attn.av"), rand_t(&mut rng, &[rv, d], sc));
+        map.insert(format!("{p}attn.bv_heads"),
+                   rand_t(&mut rng, &[h, dh, rv], sc));
+        map.insert(format!("{p}attn.bv"), const_t(&[d], 0.01));
+        map.insert(format!("{p}attn.ao_heads"),
+                   rand_t(&mut rng, &[ro, h * dh], sc));
+        map.insert(format!("{p}attn.bo_mat"), rand_t(&mut rng, &[d, ro], sc));
+        map.insert(format!("{p}attn.bo"), const_t(&[d], 0.0));
+        map.insert(format!("{p}ln2.g"), const_t(&[d], 1.0));
+        map.insert(format!("{p}ln2.b"), const_t(&[d], 0.0));
+        map.insert(format!("{p}mlp.au"), rand_t(&mut rng, &[ru, d], sc));
+        map.insert(format!("{p}mlp.bu_mat"),
+                   rand_t(&mut rng, &[di, ru], sc));
+        map.insert(format!("{p}mlp.bu"), const_t(&[di], 0.01));
+        map.insert(format!("{p}mlp.ad"), rand_t(&mut rng, &[rd, di], sc));
+        map.insert(format!("{p}mlp.bd_mat"),
+                   rand_t(&mut rng, &[d, rd], sc));
+        map.insert(format!("{p}mlp.bd"), const_t(&[d], 0.0));
+    }
+    map.insert("lnf.g".to_string(), const_t(&[d], 1.0));
+    map.insert("lnf.b".to_string(), const_t(&[d], 0.0));
+    Weights::new(map)
+}
+
+#[test]
+fn latent_mla_programs_run_end_to_end() {
+    let art = synth_artifacts("latent");
+    let engine = Engine::new(&art).unwrap();
+    let weights = random_latent_weights(31);
+    let r = eval::perplexity(&engine, "latent_score_tinytag", &weights,
+                             &corpus(600), BATCH, SEQ, 2).unwrap();
+    assert!(r.ppl.is_finite() && r.ppl > 1.0, "latent ppl {}", r.ppl);
+
+    let prompts: Vec<Vec<i32>> = vec![vec![2, 4, 6]];
+    let opts = eval::GenerateOpts { max_new: 3, temperature: 0.0, seed: 5 };
+    let res = eval::generate(&engine, "latent_step_tinytag", &weights,
+                             &prompts, BATCH, SEQ, TINY.vocab, &opts)
+        .unwrap();
+    assert_eq!(res.sequences[0].len(), 3 + 3);
+    // unknown latent tags must be rejected, not misinterpreted
+    assert!(engine.program("latent_score_othertag").is_err());
+    std::fs::remove_dir_all(&art).ok();
+}
+
+/// Random llava-mini-style weight set (vit tower + projector + lm tower).
+fn random_mm_weights(seed: u64) -> Weights {
+    let vit_cfg = MiniConfig {
+        name: "mm-vit", vocab: 4, d: 8, n_layers: 1, n_heads: 2,
+        d_i: 16, max_len: 16,
+    };
+    let lm_cfg = MiniConfig {
+        name: "mm-lm", vocab: 32, d: 8, n_layers: 1, n_heads: 2,
+        d_i: 16, max_len: 24,
+    };
+    let mut rng = Rng::new(seed);
+    let mut map = TensorMap::new();
+    map.insert("vit.patch.w".to_string(), rand_t(&mut rng, &[8, 16], 0.2));
+    map.insert("vit.patch.b".to_string(), const_t(&[8], 0.0));
+    map.insert("vit.pos".to_string(), rand_t(&mut rng, &[16, 8], 0.02));
+    let vit = random_weights(&vit_cfg, seed + 1);
+    for name in vit.names() {
+        if name.starts_with("layers.") {
+            map.insert(format!("vit.{name}"), vit.tensor(name).unwrap()
+                .clone());
+        }
+    }
+    map.insert("vit.lnf.g".to_string(), const_t(&[8], 1.0));
+    map.insert("vit.lnf.b".to_string(), const_t(&[8], 0.0));
+    map.insert("proj.w".to_string(), rand_t(&mut rng, &[8, 8], 0.3));
+    map.insert("proj.b".to_string(), const_t(&[8], 0.0));
+    let lm = random_weights(&lm_cfg, seed + 2);
+    for name in lm.names() {
+        map.insert(format!("lm.{name}"), lm.tensor(name).unwrap().clone());
+    }
+    map.insert("ans.w".to_string(), rand_t(&mut rng, &[4, 8], 0.3));
+    map.insert("ans.b".to_string(), const_t(&[4], 0.0));
+    Weights::new(map)
+}
+
+#[test]
+fn multimodal_program_scores_batches() {
+    let art = synth_artifacts("mm");
+    let engine = Engine::new(&art).unwrap();
+    let weights = random_mm_weights(41);
+    let mut rng = Rng::new(9);
+    let n = 5usize; // not a multiple of batch: exercises final-batch pad
+    let text_len = 6usize;
+    let mut data = TensorMap::new();
+    data.insert("images".to_string(),
+                rand_t(&mut rng, &[n, 16, 16], 1.0));
+    data.insert("tokens".to_string(), Tensor::I32 {
+        shape: vec![n, text_len],
+        data: (0..n * text_len).map(|i| (i % 32) as i32).collect(),
+    });
+    data.insert("labels".to_string(), Tensor::I32 {
+        shape: vec![n],
+        data: (0..n).map(|i| (i % 4) as i32).collect(),
+    });
+    data.insert("cats".to_string(), Tensor::I32 {
+        shape: vec![n, 3],
+        data: (0..n * 3).map(|i| (i % 2) as i32).collect(),
+    });
+    let r = eval::evaluate_mm(&engine, "mm_score_mini", &weights, &data, 2)
+        .unwrap();
+    assert_eq!(r.n, n);
+    assert!((0.0..=1.0).contains(&r.avg), "accuracy {}", r.avg);
+    std::fs::remove_dir_all(&art).ok();
+}

@@ -1,0 +1,154 @@
+//! Offline type-gating stub for the `xla`/PJRT crate.
+//!
+//! This build environment has no XLA runtime, but the `pjrt` feature of
+//! the `latentllm` crate must still *type-check* (`cargo check --features
+//! pjrt`). This stub mirrors the API surface `runtime::pjrt` uses; every
+//! entry point returns [`XlaError`] at runtime. Deploying against a real
+//! PJRT requires swapping this path dependency for an actual xla crate
+//! with the same surface.
+
+use std::fmt;
+
+/// Error type standing in for the real crate's error enum.
+#[derive(Debug)]
+pub struct XlaError {
+    msg: String,
+}
+
+impl XlaError {
+    fn unavailable(what: &str) -> Self {
+        XlaError {
+            msg: format!(
+                "{what}: xla/PJRT runtime is not linked into this build \
+                 (offline stub; see rust/vendor/xla)"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// Element types the marshalling layer supports.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// Host-side literal (stub: holds nothing).
+#[derive(Debug, Default)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(XlaError::unavailable("Literal::reshape"))
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(XlaError::unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(XlaError::unavailable("Literal::to_vec"))
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(XlaError::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation handle (stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-side buffer (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L])
+                                      -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client (stub: construction always fails so callers fall back).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err}").contains("stub"));
+    }
+}
