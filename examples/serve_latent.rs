@@ -53,10 +53,12 @@ fn main() -> Result<()> {
     let variants = vec![
         ModelVariant { name: "dense".into(),
                        score_program: format!("score_{model}"),
-                       weights, cache: dense_cache },
+                       weights: std::sync::Arc::new(weights),
+                       cache: dense_cache },
         ModelVariant { name: "latent30".into(),
                        score_program: format!("score_{model}"),
-                       weights: latent_w, cache: latent_cache },
+                       weights: std::sync::Arc::new(latent_w),
+                       cache: latent_cache },
     ];
     let server = Server::start(
         artifacts.clone(),
@@ -66,17 +68,19 @@ fn main() -> Result<()> {
             policy: Policy::CacheAware,
             program_batch: 8,
             seq_len: 128,
-        });
+            workers: 2,
+        })?;
 
     let corpus = Corpus::load(artifacts.join("corpora.ltw"), "synthwiki",
                               "test")?;
     let reqs = corpus.calibration(n_requests, 128, 1234);
-    println!("\nsubmitting {n_requests} scoring requests...");
+    println!("\nsubmitting {n_requests} scoring requests across {} \
+              workers...", server.live_workers());
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = reqs.into_iter().enumerate()
-        .map(|(i, tokens)| server.submit(ScoreRequest { id: i as u64,
-                                                        tokens }))
-        .collect();
+    let mut rxs = Vec::with_capacity(n_requests);
+    for (i, tokens) in reqs.into_iter().enumerate() {
+        rxs.push(server.submit(ScoreRequest { id: i as u64, tokens })?);
+    }
     let mut per_variant = std::collections::BTreeMap::new();
     for rx in rxs {
         let resp = rx.recv()?;

@@ -1,0 +1,76 @@
+//! Parallel-subsystem bench: speedup of the pool-backed paths over their
+//! serial baselines — row-parallel matmul, layer-parallel compress_model,
+//! and the Table-2-sized method sweep (the acceptance target is >1.5×
+//! at 4 threads on the sweep). Thread counts are pinned in-process via
+//! `pool::set_global_threads`, so the numbers are comparable regardless
+//! of `LATENTLLM_THREADS`.
+//!
+//! Run: cargo bench --bench bench_parallel
+
+use latentllm::compress::pipeline::{self, tests_support::random_weights,
+                                    Method, TABLE2_METHODS};
+use latentllm::data::CalibSet;
+use latentllm::model::config::OPT_MINI_M;
+use latentllm::util::bench::Bench;
+use latentllm::util::pool::{self, Pool};
+use latentllm::util::rng::Rng;
+
+const THREADS: usize = 4;
+
+fn main() {
+    println!("== parallel subsystem (1 vs {THREADS} threads) ==");
+
+    // --- row-parallel matmul
+    let mut rng = Rng::new(5);
+    let n = 384;
+    let a = rng.normal_matrix(n, n);
+    let b = rng.normal_matrix(n, n);
+    let mut bench = Bench::new(0.4);
+    pool::set_global_threads(1);
+    let m1 = bench.run(&format!("matmul {n}x{n} threads=1"),
+                       || a.matmul(&b)).mean_ns;
+    pool::set_global_threads(THREADS);
+    let mt = bench.run(&format!("matmul {n}x{n} threads={THREADS}"),
+                       || a.matmul(&b)).mean_ns;
+    println!("  -> matmul speedup {:.2}x", m1 / mt);
+
+    // --- layer-parallel whole-model pipeline (opt-mini-m, 4 layers)
+    let cfg = OPT_MINI_M;
+    let weights = random_weights(&cfg, 7);
+    let cal = CalibSet::synthetic(cfg.n_layers, cfg.d, 256, 3);
+    let mut bp = Bench::new(0.1);
+    bp.max_iters = 3;
+    pool::set_global_threads(1);
+    let p1 = bp.run("pipeline latentllm@30% threads=1", || {
+        pipeline::compress_model(&cfg, &weights, &cal, Method::LatentLlm,
+                                 0.3, 4, 2).unwrap()
+    }).mean_ns;
+    pool::set_global_threads(THREADS);
+    let pt = bp.run(&format!("pipeline latentllm@30% threads={THREADS}"),
+                    || {
+        pipeline::compress_model(&cfg, &weights, &cal, Method::LatentLlm,
+                                 0.3, 4, 2).unwrap()
+    }).mean_ns;
+    println!("  -> pipeline speedup {:.2}x", p1 / pt);
+
+    // --- Table-2-sized sweep: all six methods at 30%, compressed
+    // concurrently the way reports::table2 does
+    let sweep = || {
+        Pool::global().run(TABLE2_METHODS.len(), |i| {
+            pipeline::compress_model(&cfg, &weights, &cal,
+                                     TABLE2_METHODS[i], 0.3, 2, 1)
+                .unwrap().1.achieved_ratio()
+        })
+    };
+    let mut bs = Bench::new(0.1);
+    bs.max_iters = 3;
+    pool::set_global_threads(1);
+    let s1 = bs.run("table2 sweep (6 methods) threads=1", || sweep())
+        .mean_ns;
+    pool::set_global_threads(THREADS);
+    let st = bs.run(&format!("table2 sweep (6 methods) threads={THREADS}"),
+                    || sweep()).mean_ns;
+    let speedup = s1 / st;
+    println!("  -> sweep speedup {speedup:.2}x (target >1.5x)");
+    pool::set_global_threads(pool::configured_threads());
+}

@@ -27,8 +27,11 @@ fn main() {
                               "synthwiki", "test").unwrap();
     let n_requests = 64usize;
 
-    println!("== serving e2e (batcher sweep) ==");
-    for (max_batch, wait_ms) in [(1usize, 0u64), (4, 2), (8, 5), (8, 20)] {
+    println!("== serving e2e (batcher × worker sweep) ==");
+    let weights = std::sync::Arc::new(weights);
+    for (workers, max_batch, wait_ms) in
+        [(1usize, 1usize, 0u64), (1, 4, 2), (1, 8, 5), (1, 8, 20),
+         (2, 8, 5), (4, 8, 5)] {
         let variants = vec![ModelVariant {
             name: "dense".into(),
             score_program: format!("score_{model}"),
@@ -47,12 +50,14 @@ fn main() {
                 policy: Policy::RoundRobin,
                 program_batch: 8,
                 seq_len: 128,
-            });
+                workers,
+            })
+            .expect("server start");
         let reqs = corpus.calibration(n_requests, 128, 42);
         let t0 = std::time::Instant::now();
         let rxs: Vec<_> = reqs.into_iter().enumerate()
             .map(|(i, tokens)| server.submit(ScoreRequest {
-                id: i as u64, tokens }))
+                id: i as u64, tokens }).expect("submit"))
             .collect();
         for rx in rxs {
             let _ = rx.recv();
@@ -61,7 +66,8 @@ fn main() {
         let m = server.shutdown();
         let (p50, p95, p99) = m.quantiles("request_us")
             .unwrap_or((0.0, 0.0, 0.0));
-        println!("max_batch={max_batch:<2} wait={wait_ms:>2}ms: \
+        println!("workers={workers} max_batch={max_batch:<2} \
+                  wait={wait_ms:>2}ms: \
                   {:>6.1} req/s  p50={:>7.0}µs p95={:>7.0}µs p99={:>7.0}µs \
                   batches={}",
                  n_requests as f64 / dt, p50, p95, p99,

@@ -1,7 +1,7 @@
 //! Whole-model compression pipeline (paper §5 protocol — the Table 2 rows).
 //! Mirrors python/compile/latentllm/pipeline.py.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::asvd::{self, AsvdOpts};
 use super::joint_qk::{self, JointQkOpts};
@@ -12,6 +12,7 @@ use super::precond::Precond;
 use super::rank;
 use crate::data::CalibSet;
 use crate::model::{MiniConfig, Weights};
+use crate::util::pool::Pool;
 use crate::Matrix;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -110,155 +111,197 @@ impl Report {
     }
 }
 
-/// Compress every MHA/MLP linear of `weights` to the target ratio.
-/// Returns the effective (reconstructed Ŵ + updated biases) weight set —
-/// evaluated through the dense scoring program — plus the report.
-pub fn compress_model(cfg: &MiniConfig, weights: &Weights, calib: &CalibSet,
-                      method: Method, ratio: f64, qk_iters: usize,
-                      ud_iters: usize) -> Result<(Weights, Report)> {
+/// One layer's compression output, staged for the deterministic merge:
+/// tensors are *named*, not written, so layers can run on any thread.
+struct LayerOut {
+    rep: LayerReport,
+    mats: Vec<(String, Matrix)>,
+    biases: Vec<(String, Vec<f64>)>,
+}
+
+/// Compress layer `i` of the model — pure w.r.t. `weights`/`calib` (reads
+/// only the source weight set), so every layer is independent and the
+/// pipeline parallelizes across layers without changing any arithmetic.
+fn compress_layer(cfg: &MiniConfig, weights: &Weights, calib: &CalibSet,
+                  method: Method, ratio: f64, qk_iters: usize,
+                  ud_iters: usize, i: usize) -> Result<LayerOut> {
     let keep = 1.0 - ratio;
     let pk = method.precond();
     let latent = method.is_latent();
     let junction = if latent { Junction::BlockId } else { Junction::Left };
     let (d, dh, h, di) = (cfg.d, cfg.d_h(), cfg.n_heads, cfg.d_i);
 
-    let mut out = weights.clone();
+    let p = format!("layers.{i}.");
+    let x_attn = calib.x(i, "attn_x");
+    let x_o = calib.x(i, "o_x");
+    let x_mlp = calib.x(i, "mlp_x");
+    let mut lrep = LayerReport { layer: i, ..Default::default() };
+    let mut mats: Vec<(String, Matrix)> = Vec::new();
+    let mut biases: Vec<(String, Vec<f64>)> = Vec::new();
+
+    let wq = weights.matrix(&format!("{p}attn.wq"))?;
+    let wk = weights.matrix(&format!("{p}attn.wk"))?;
+    let wv = weights.matrix(&format!("{p}attn.wv"))?;
+    let wo = weights.matrix(&format!("{p}attn.wo"))?;
+    let bq = weights.bias(&format!("{p}attn.bq"))?;
+    let bk = weights.bias(&format!("{p}attn.bk"))?;
+    let bv = weights.bias(&format!("{p}attn.bv"))?;
+    let bo = weights.bias(&format!("{p}attn.bo"))?;
+    let wu = weights.matrix(&format!("{p}mlp.wu"))?;
+    let wd = weights.matrix(&format!("{p}mlp.wd"))?;
+    let bu = weights.bias(&format!("{p}mlp.bu"))?;
+    let bd = weights.bias(&format!("{p}mlp.bd"))?;
+
+    if latent {
+        // ---- joint QK (§4.1, Alg 1)
+        let r_qk = rank::joint_qk_rank(d, dh, h, h, keep, true);
+        let jq = joint_qk::compress(&wq, &wk, h, dh, r_qk, r_qk,
+                                    &JointQkOpts {
+                                        kind: pk, n_iter: qk_iters,
+                                        x: Some(x_attn),
+                                        bq: Some(&bq), bk: Some(&bk),
+                                        ..Default::default()
+                                    });
+        mats.push((format!("{p}attn.wq"), jq.wq_hat));
+        mats.push((format!("{p}attn.wk"), jq.wk_hat));
+        biases.push((format!("{p}attn.bq"), jq.bq_bias.unwrap()));
+        biases.push((format!("{p}attn.bk"), jq.bk_bias.unwrap()));
+        lrep.qk_rank = r_qk;
+        lrep.qk_loss = *jq.losses.last().unwrap();
+        let mut layer_params = jq.params;
+
+        // ---- V / O
+        if method == Method::LatentLlmJointVo {
+            let r_vo = rank::local_rank(d, d, keep, true);
+            let jv = joint_vo::compress(&wv, &wo, h, dh, r_vo, r_vo,
+                                        &JointVoOpts {
+                                            kind: pk, n_iter: ud_iters,
+                                            x: Some(x_attn),
+                                            bv: Some(&bv), bo: Some(&bo),
+                                            ..Default::default()
+                                        });
+            mats.push((format!("{p}attn.wv"), jv.wv_hat));
+            mats.push((format!("{p}attn.wo"), jv.wo_hat));
+            biases.push((format!("{p}attn.bo"), jv.bo_bias.unwrap()));
+            layer_params += jv.params;
+        } else {
+            // paper default: split V/O, root-cov + block identity
+            let r_v = rank::local_rank(d, d, keep, true);
+            let rv = asvd::compress(&wv, r_v, &AsvdOpts {
+                kind: pk, junction, x: Some(x_attn), bias: Some(&bv),
+                ..Default::default()
+            });
+            let r_o = rank::local_rank(d, d, keep, true);
+            let ro = asvd::compress(&wo, r_o, &AsvdOpts {
+                kind: pk, junction, x: Some(x_o), bias: Some(&bo),
+                ..Default::default()
+            });
+            mats.push((format!("{p}attn.wv"), rv.w_hat));
+            biases.push((format!("{p}attn.bv"), rv.bias.unwrap()));
+            mats.push((format!("{p}attn.wo"), ro.w_hat));
+            biases.push((format!("{p}attn.bo"), ro.bias.unwrap()));
+            layer_params += rv.params + ro.params;
+        }
+
+        // ---- joint UD (§4.3)
+        let r_u = rank::local_rank(di, d, keep, true);
+        let r_d = rank::local_rank(d, di, keep, true);
+        let ud = joint_ud::compress(&wu, &bu, &wd, &bd, x_mlp, r_u, r_d,
+                                    &JointUdOpts {
+                                        n_iter: ud_iters,
+                                        junction,
+                                        ..Default::default()
+                                    });
+        mats.push((format!("{p}mlp.wu"), ud.wu_hat));
+        biases.push((format!("{p}mlp.bu"), ud.bu));
+        mats.push((format!("{p}mlp.wd"), ud.wd_hat));
+        biases.push((format!("{p}mlp.bd"), ud.bd));
+        lrep.ud_loss = *ud.losses.iter()
+            .fold(&f64::INFINITY, |m, v| if v < m { v } else { m });
+        layer_params += ud.params;
+        lrep.params = layer_params;
+    } else {
+        // local compression of each of the six linears
+        let mut layer_params = 0usize;
+        let jobs: [(&str, &Matrix, &[f64], &Matrix); 5] = [
+            ("attn.wq", &wq, &bq, x_attn),
+            ("attn.wk", &wk, &bk, x_attn),
+            ("attn.wv", &wv, &bv, x_attn),
+            ("attn.wo", &wo, &bo, x_o),
+            ("mlp.wu", &wu, &bu, x_mlp),
+        ];
+        for (name, w, b, x) in jobs {
+            let r = rank::local_rank(w.rows(), w.cols(), keep, false);
+            let res = asvd::compress(w, r, &AsvdOpts {
+                kind: pk, junction, x: Some(x), bias: Some(b),
+                ..Default::default()
+            });
+            mats.push((format!("{p}{name}"), res.w_hat));
+            let bname = format!("{p}{}", name.replace('w', "b"));
+            biases.push((bname, res.bias.unwrap()));
+            layer_params += res.params;
+        }
+        // wd sees σ(Wu_orig x + bu)
+        let mut z = wu.matmul(x_mlp);
+        for r in 0..z.rows() {
+            let bi = bu[r];
+            for v in z.row_mut(r) {
+                *v = (*v + bi).max(0.0);
+            }
+        }
+        let r = rank::local_rank(d, di, keep, false);
+        let res = asvd::compress(&wd, r, &AsvdOpts {
+            kind: pk, junction, x: Some(&z), bias: Some(&bd),
+            ..Default::default()
+        });
+        mats.push((format!("{p}mlp.wd"), res.w_hat));
+        biases.push((format!("{p}mlp.bd"), res.bias.unwrap()));
+        layer_params += res.params;
+        lrep.params = layer_params;
+    }
+    Ok(LayerOut { rep: lrep, mats, biases })
+}
+
+/// Compress every MHA/MLP linear of `weights` to the target ratio.
+/// Returns the effective (reconstructed Ŵ + updated biases) weight set —
+/// evaluated through the dense scoring program — plus the report.
+///
+/// Layers run in parallel on the global [`Pool`] (`LATENTLLM_THREADS`);
+/// results merge in layer order, so the output is bit-identical to the
+/// serial path (pinned by the `layer_parallel_matches_serial_bitwise`
+/// test).
+pub fn compress_model(cfg: &MiniConfig, weights: &Weights, calib: &CalibSet,
+                      method: Method, ratio: f64, qk_iters: usize,
+                      ud_iters: usize) -> Result<(Weights, Report)> {
+    compress_model_on(&Pool::global(), cfg, weights, calib, method, ratio,
+                      qk_iters, ud_iters)
+}
+
+/// [`compress_model`] on an explicit pool (tests/benches pin the width).
+pub fn compress_model_on(pool: &Pool, cfg: &MiniConfig, weights: &Weights,
+                         calib: &CalibSet, method: Method, ratio: f64,
+                         qk_iters: usize, ud_iters: usize)
+                         -> Result<(Weights, Report)> {
     let mut report = Report {
         method, ratio, layers: Vec::new(),
         orig_linear_params: cfg.linear_params(),
         new_linear_params: 0,
     };
-
-    for i in 0..cfg.n_layers {
-        let p = format!("layers.{i}.");
-        let x_attn = calib.x(i, "attn_x");
-        let x_o = calib.x(i, "o_x");
-        let x_mlp = calib.x(i, "mlp_x");
-        let mut lrep = LayerReport { layer: i, ..Default::default() };
-
-        let wq = weights.matrix(&format!("{p}attn.wq"))?;
-        let wk = weights.matrix(&format!("{p}attn.wk"))?;
-        let wv = weights.matrix(&format!("{p}attn.wv"))?;
-        let wo = weights.matrix(&format!("{p}attn.wo"))?;
-        let bq = weights.bias(&format!("{p}attn.bq"))?;
-        let bk = weights.bias(&format!("{p}attn.bk"))?;
-        let bv = weights.bias(&format!("{p}attn.bv"))?;
-        let bo = weights.bias(&format!("{p}attn.bo"))?;
-        let wu = weights.matrix(&format!("{p}mlp.wu"))?;
-        let wd = weights.matrix(&format!("{p}mlp.wd"))?;
-        let bu = weights.bias(&format!("{p}mlp.bu"))?;
-        let bd = weights.bias(&format!("{p}mlp.bd"))?;
-
-        if latent {
-            // ---- joint QK (§4.1, Alg 1)
-            let r_qk = rank::joint_qk_rank(d, dh, h, h, keep, true);
-            let jq = joint_qk::compress(&wq, &wk, h, dh, r_qk, r_qk,
-                                        &JointQkOpts {
-                                            kind: pk, n_iter: qk_iters,
-                                            x: Some(x_attn),
-                                            bq: Some(&bq), bk: Some(&bk),
-                                            ..Default::default()
-                                        });
-            out.set_matrix(&format!("{p}attn.wq"), &jq.wq_hat);
-            out.set_matrix(&format!("{p}attn.wk"), &jq.wk_hat);
-            out.set_bias(&format!("{p}attn.bq"), jq.bq_bias.as_ref().unwrap());
-            out.set_bias(&format!("{p}attn.bk"), jq.bk_bias.as_ref().unwrap());
-            lrep.qk_rank = r_qk;
-            lrep.qk_loss = *jq.losses.last().unwrap();
-            let mut layer_params = jq.params;
-
-            // ---- V / O
-            if method == Method::LatentLlmJointVo {
-                let r_vo = rank::local_rank(d, d, keep, true);
-                let jv = joint_vo::compress(&wv, &wo, h, dh, r_vo, r_vo,
-                                            &JointVoOpts {
-                                                kind: pk, n_iter: ud_iters,
-                                                x: Some(x_attn),
-                                                bv: Some(&bv), bo: Some(&bo),
-                                                ..Default::default()
-                                            });
-                out.set_matrix(&format!("{p}attn.wv"), &jv.wv_hat);
-                out.set_matrix(&format!("{p}attn.wo"), &jv.wo_hat);
-                out.set_bias(&format!("{p}attn.bo"),
-                             jv.bo_bias.as_ref().unwrap());
-                layer_params += jv.params;
-            } else {
-                // paper default: split V/O, root-cov + block identity
-                let r_v = rank::local_rank(d, d, keep, true);
-                let rv = asvd::compress(&wv, r_v, &AsvdOpts {
-                    kind: pk, junction, x: Some(x_attn), bias: Some(&bv),
-                    ..Default::default()
-                });
-                let r_o = rank::local_rank(d, d, keep, true);
-                let ro = asvd::compress(&wo, r_o, &AsvdOpts {
-                    kind: pk, junction, x: Some(x_o), bias: Some(&bo),
-                    ..Default::default()
-                });
-                out.set_matrix(&format!("{p}attn.wv"), &rv.w_hat);
-                out.set_bias(&format!("{p}attn.bv"), rv.bias.as_ref().unwrap());
-                out.set_matrix(&format!("{p}attn.wo"), &ro.w_hat);
-                out.set_bias(&format!("{p}attn.bo"), ro.bias.as_ref().unwrap());
-                layer_params += rv.params + ro.params;
-            }
-
-            // ---- joint UD (§4.3)
-            let r_u = rank::local_rank(di, d, keep, true);
-            let r_d = rank::local_rank(d, di, keep, true);
-            let ud = joint_ud::compress(&wu, &bu, &wd, &bd, x_mlp, r_u, r_d,
-                                        &JointUdOpts {
-                                            n_iter: ud_iters,
-                                            junction,
-                                            ..Default::default()
-                                        });
-            out.set_matrix(&format!("{p}mlp.wu"), &ud.wu_hat);
-            out.set_bias(&format!("{p}mlp.bu"), &ud.bu);
-            out.set_matrix(&format!("{p}mlp.wd"), &ud.wd_hat);
-            out.set_bias(&format!("{p}mlp.bd"), &ud.bd);
-            lrep.ud_loss = *ud.losses.iter()
-                .fold(&f64::INFINITY, |m, v| if v < m { v } else { m });
-            layer_params += ud.params;
-            lrep.params = layer_params;
-        } else {
-            // local compression of each of the six linears
-            let mut layer_params = 0usize;
-            let jobs: [(&str, &Matrix, &[f64], &Matrix); 5] = [
-                ("attn.wq", &wq, &bq, x_attn),
-                ("attn.wk", &wk, &bk, x_attn),
-                ("attn.wv", &wv, &bv, x_attn),
-                ("attn.wo", &wo, &bo, x_o),
-                ("mlp.wu", &wu, &bu, x_mlp),
-            ];
-            for (name, w, b, x) in jobs {
-                let r = rank::local_rank(w.rows(), w.cols(), keep, false);
-                let res = asvd::compress(w, r, &AsvdOpts {
-                    kind: pk, junction, x: Some(x), bias: Some(b),
-                    ..Default::default()
-                });
-                out.set_matrix(&format!("{p}{name}"), &res.w_hat);
-                let bname = format!("{p}{}", name.replace('w', "b"));
-                out.set_bias(&bname, res.bias.as_ref().unwrap());
-                layer_params += res.params;
-            }
-            // wd sees σ(Wu_orig x + bu)
-            let mut z = wu.matmul(x_mlp);
-            for r in 0..z.rows() {
-                let bi = bu[r];
-                for v in z.row_mut(r) {
-                    *v = (*v + bi).max(0.0);
-                }
-            }
-            let r = rank::local_rank(d, di, keep, false);
-            let res = asvd::compress(&wd, r, &AsvdOpts {
-                kind: pk, junction, x: Some(&z), bias: Some(&bd),
-                ..Default::default()
-            });
-            out.set_matrix(&format!("{p}mlp.wd"), &res.w_hat);
-            out.set_bias(&format!("{p}mlp.bd"), res.bias.as_ref().unwrap());
-            layer_params += res.params;
-            lrep.params = layer_params;
+    let layer_outs = pool.run(cfg.n_layers, |i| {
+        compress_layer(cfg, weights, calib, method, ratio, qk_iters,
+                       ud_iters, i)
+    });
+    let mut out = weights.clone();
+    for (i, res) in layer_outs.into_iter().enumerate() {
+        let lo = res.with_context(|| format!("compress layer {i}"))?;
+        for (name, m) in &lo.mats {
+            out.set_matrix(name, m);
         }
-        report.new_linear_params += lrep.params;
-        report.layers.push(lrep);
+        for (name, b) in &lo.biases {
+            out.set_bias(name, b);
+        }
+        report.new_linear_params += lo.rep.params;
+        report.layers.push(lo.rep);
     }
     Ok((out, report))
 }
@@ -340,6 +383,37 @@ mod tests {
         let r_dense = rank::local_rank(cfg.d, cfg.d, keep, false);
         let r_block = rank::local_rank(cfg.d, cfg.d, keep, true);
         assert!(r_block > r_dense, "{r_block} vs {r_dense}");
+    }
+
+    #[test]
+    fn layer_parallel_matches_serial_bitwise() {
+        // the acceptance bar for the parallel pipeline: byte-for-byte
+        // identical tensors at every pool width
+        let cfg = OPT_MINI_S;
+        let w = random_weights(&cfg, 55);
+        let cal = CalibSet::synthetic(cfg.n_layers, cfg.d, 192, 5);
+        for method in [Method::LatentLlm, Method::AsvdRootCov] {
+            let (w1, r1) = compress_model_on(&Pool::new(1), &cfg, &w, &cal,
+                                             method, 0.3, 2, 1).unwrap();
+            let (w4, r4) = compress_model_on(&Pool::new(4), &cfg, &w, &cal,
+                                             method, 0.3, 2, 1).unwrap();
+            assert_eq!(w1.names().count(), w4.names().count());
+            for name in w1.names() {
+                let a = w1.tensor(name).unwrap().as_f32().unwrap();
+                let b = w4.tensor(name).unwrap().as_f32().unwrap();
+                assert!(a.iter().zip(b.iter())
+                            .all(|(x, y)| x.to_bits() == y.to_bits()),
+                        "{method:?}: {name} diverged between serial and \
+                         parallel compression");
+            }
+            assert_eq!(r1.new_linear_params, r4.new_linear_params);
+            assert_eq!(r1.layers.len(), r4.layers.len());
+            for (l1, l4) in r1.layers.iter().zip(&r4.layers) {
+                assert_eq!(l1.layer, l4.layer);
+                assert_eq!(l1.params, l4.params);
+                assert_eq!(l1.qk_loss.to_bits(), l4.qk_loss.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub fn hard_topk(m: &Matrix, k: usize) -> Matrix {
         return m.clone();
     }
     let mut mags: Vec<f64> = m.data().iter().map(|v| v.abs()).collect();
-    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    mags.sort_by(|a, b| b.total_cmp(a));
     let thresh = mags[k - 1];
     let mut out = m.clone();
     let mut kept = 0usize;

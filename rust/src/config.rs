@@ -10,6 +10,7 @@
 //! max_wait_ms = 5
 //! kv_budget_mb = 8
 //! latent_ratio = 0.3
+//! workers = 2
 //! [report]
 //! max_batches = 12
 //! qk_iters = 8
@@ -33,6 +34,8 @@ pub struct ServeSettings {
     pub latent_ratio: f64,
     pub program_batch: usize,
     pub seq_len: usize,
+    /// server worker threads, each with its own engine ([serve] workers)
+    pub workers: usize,
 }
 
 impl Default for ServeSettings {
@@ -45,6 +48,7 @@ impl Default for ServeSettings {
             latent_ratio: 0.3,
             program_batch: 8,
             seq_len: 128,
+            workers: 2,
         }
     }
 }
@@ -110,6 +114,8 @@ impl Config {
         cfg.serve.program_batch =
             get_usize("serve.program_batch", cfg.serve.program_batch);
         cfg.serve.seq_len = get_usize("serve.seq_len", cfg.serve.seq_len);
+        cfg.serve.workers =
+            get_usize("serve.workers", cfg.serve.workers).max(1);
         cfg.report.max_batches =
             get_usize("report.max_batches", cfg.report.max_batches);
         cfg.report.qk_iters = get_usize("report.qk_iters",

@@ -42,7 +42,7 @@ impl Metrics {
         if v.is_empty() {
             return None;
         }
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         let q = |p: f64| v[((v.len() as f64 - 1.0) * p) as usize];
         Some((q(0.50), q(0.95), q(0.99)))
     }

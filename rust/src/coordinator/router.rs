@@ -5,14 +5,18 @@
 //! keeps admitting requests to the latent variant long after dense is
 //! saturated. Policies are deterministic and unit-tested.
 
+use std::sync::Arc;
+
 use super::kvcache::KvCacheManager;
 
-/// One deployable model variant.
+/// One deployable model variant. Weights are `Arc`-shared so every server
+/// worker executes against the same read-only tensor set without holding
+/// the router lock across an execution.
 pub struct ModelVariant {
     pub name: String,
     /// PJRT program name for scoring (e.g. "score_opt-mini-m")
     pub score_program: String,
-    pub weights: crate::model::Weights,
+    pub weights: Arc<crate::model::Weights>,
     pub cache: KvCacheManager,
 }
 
@@ -96,7 +100,7 @@ mod tests {
         ModelVariant {
             name: name.into(),
             score_program: format!("score_{name}"),
-            weights: Weights::new(TensorMap::new()),
+            weights: Arc::new(Weights::new(TensorMap::new())),
             cache: KvCacheManager::new(kind, 4, 2, budget),
         }
     }

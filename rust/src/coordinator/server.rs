@@ -1,18 +1,29 @@
-//! The serving loop: a worker thread drains the dynamic batcher, routes
-//! each flush to a model variant, pads to the program's fixed batch shape,
-//! executes on the engine's backend, and replies per request. std::thread +
-//! mpsc (tokio is unavailable offline; the control flow is identical).
+//! The serving loop: N worker threads drain a shared request queue, each
+//! with its own dynamic batcher; every flush is routed to a model variant,
+//! padded to the program's fixed batch shape, executed on that worker's
+//! backend, and replied per request. std::thread + Mutex/Condvar (tokio is
+//! unavailable offline; the control flow is identical).
 //!
-//! Backends need not be Send (the PJRT client is `Rc`-based), so the
+//! Backends need not be Send (the PJRT client is `Rc`-based), so each
 //! worker thread builds and owns its own [`Engine`] — requests/responses
-//! cross the channel, executables never do.
+//! cross the queue, executables never do. Variant weights are shared
+//! read-only (`Arc`) through the router; router admission state is the
+//! only cross-worker lock on the hot path and is held for routing
+//! decisions only, never across an execution.
+//!
+//! Failure containment: engine-init failures surface from
+//! [`Server::start`]; malformed requests (empty or over-long token lists)
+//! get an error-carrying response instead of killing the worker; flushes
+//! larger than the program batch split into multiple executions
+//! (`batch_overflow` metric) instead of silently NaN-ing the overflow.
 
+use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
@@ -31,6 +42,9 @@ pub struct ScoreResponse {
     pub nll: f32,
     pub variant: String,
     pub latency: Duration,
+    /// Per-request failure (empty token list, over-long request, …);
+    /// `nll` is NaN when set.
+    pub error: Option<String>,
 }
 
 pub struct ServerConfig {
@@ -39,63 +53,8 @@ pub struct ServerConfig {
     /// fixed program batch (manifest score_batch)
     pub program_batch: usize,
     pub seq_len: usize,
-}
-
-enum Msg {
-    Req(ScoreRequest, mpsc::Sender<ScoreResponse>),
-    Shutdown,
-}
-
-pub struct Server {
-    tx: mpsc::Sender<Msg>,
-    handle: Option<std::thread::JoinHandle<()>>,
-    pub metrics: Arc<Metrics>,
-}
-
-impl Server {
-    /// Start the worker thread; it constructs its own PJRT engine from the
-    /// artifacts directory (the client is not Send).
-    pub fn start(artifacts: PathBuf, router: Router, cfg: ServerConfig)
-                 -> Server {
-        let metrics = Arc::new(Metrics::new());
-        let m = metrics.clone();
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let handle = std::thread::spawn(move || {
-            let engine = match Engine::new(&artifacts) {
-                Ok(e) => e,
-                Err(e) => {
-                    eprintln!("[server] engine init failed: {e:#}");
-                    return;
-                }
-            };
-            serve_loop(engine, router, cfg, rx, m);
-        });
-        Server { tx, handle: Some(handle), metrics }
-    }
-
-    pub fn submit(&self, req: ScoreRequest)
-                  -> mpsc::Receiver<ScoreResponse> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx.send(Msg::Req(req, rtx)).expect("server alive");
-        rrx
-    }
-
-    pub fn shutdown(mut self) -> Arc<Metrics> {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-        self.metrics.clone()
-    }
-}
-
-impl Drop for Server {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
+    /// worker threads, each owning its own Engine (min 1)
+    pub workers: usize,
 }
 
 struct Entry {
@@ -104,88 +63,372 @@ struct Entry {
     t_submit: Instant,
 }
 
-fn serve_loop(engine: Engine, mut router: Router, cfg: ServerConfig,
-              rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>) {
-    let mut batcher: Batcher<Entry> = Batcher::new(cfg.batcher);
-    let mut running = true;
-    while running || !batcher.is_empty() {
-        // Collect messages until flush condition or shutdown.
-        let now = Instant::now();
-        let timeout = if batcher.is_empty() {
-            Duration::from_millis(50)
-        } else {
-            batcher.deadline()
-                .map(|d| d.saturating_duration_since(now))
-                .unwrap_or(Duration::ZERO)
-        };
-        if running {
-            match rx.recv_timeout(timeout) {
-                Ok(Msg::Req(req, reply)) => {
-                    metrics.incr("requests", 1);
-                    batcher.push(Entry { req, reply, t_submit: Instant::now() },
-                                 Instant::now());
+/// State shared between submitters and workers: the request queue plus
+/// lifecycle flags.
+struct Shared {
+    queue: Mutex<VecDeque<Entry>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    /// workers that finished engine init and are serving
+    live: AtomicUsize,
+}
+
+/// Decrements `Shared::live` on drop — including a worker panic (e.g. a
+/// poisoned lock), so `submit` starts refusing once no thread can serve
+/// instead of queueing requests nobody will answer.
+struct LiveGuard(Arc<Shared>);
+
+impl Drop for LiveGuard {
+    fn drop(&mut self) {
+        self.0.live.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+enum Pop {
+    Job(Box<Entry>),
+    Timeout,
+    Shutdown,
+}
+
+fn pop(shared: &Shared, timeout: Duration) -> Pop {
+    let mut q = shared.queue.lock().unwrap();
+    if let Some(e) = q.pop_front() {
+        return Pop::Job(Box::new(e));
+    }
+    if shared.shutdown.load(Ordering::SeqCst) {
+        return Pop::Shutdown;
+    }
+    if timeout.is_zero() {
+        return Pop::Timeout;
+    }
+    let (mut q, _res) = shared.cv.wait_timeout(q, timeout).unwrap();
+    if let Some(e) = q.pop_front() {
+        return Pop::Job(Box::new(e));
+    }
+    if shared.shutdown.load(Ordering::SeqCst) {
+        Pop::Shutdown
+    } else {
+        Pop::Timeout
+    }
+}
+
+pub struct Server {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Server {
+    /// Start `cfg.workers` worker threads; each constructs its own engine
+    /// from the artifacts directory (the backend client is not Send).
+    /// Fails — instead of leaving a dead server behind — when any worker's
+    /// engine init fails.
+    pub fn start(artifacts: PathBuf, router: Router, cfg: ServerConfig)
+                 -> Result<Server> {
+        // sanitize once; every downstream use relies on these minimums
+        let mut cfg = cfg;
+        cfg.workers = cfg.workers.max(1);
+        cfg.program_batch = cfg.program_batch.max(1);
+        let workers = cfg.workers;
+        let metrics = Arc::new(Metrics::new());
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            live: AtomicUsize::new(0),
+        });
+        let router = Arc::new(Mutex::new(router));
+        let cfg = Arc::new(cfg);
+        let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let shared = shared.clone();
+            let router = router.clone();
+            let cfg = cfg.clone();
+            let metrics = metrics.clone();
+            let artifacts = artifacts.clone();
+            let init_tx = init_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("latentllm-serve-{w}"))
+                .spawn(move || {
+                    let engine = match Engine::new(&artifacts) {
+                        Ok(e) => e,
+                        Err(e) => {
+                            let _ = init_tx.send(Err(e.context(format!(
+                                "worker {w} engine init"))));
+                            return;
+                        }
+                    };
+                    // count live *before* reporting Ok so a submit racing
+                    // with start() never sees zero workers spuriously
+                    shared.live.fetch_add(1, Ordering::SeqCst);
+                    let _live = LiveGuard(shared.clone());
+                    let _ = init_tx.send(Ok(()));
+                    drop(init_tx);
+                    worker_loop(w, &engine, &shared, &router, &cfg,
+                                &metrics);
+                })
+                .expect("spawn server worker");
+            handles.push(handle);
+        }
+        drop(init_tx);
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..workers {
+            match init_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
                 }
-                Ok(Msg::Shutdown) => running = false,
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => running = false,
+                Err(_) => {
+                    first_err.get_or_insert(anyhow::anyhow!(
+                        "server worker exited before engine init"));
+                }
             }
         }
-        let now = Instant::now();
-        if batcher.ready(now) || (!running && !batcher.is_empty()) {
-            let entries = batcher.flush(now);
-            if let Err(e) = execute_batch(&engine, &mut router, &cfg,
-                                          entries, &metrics) {
-                metrics.incr("batch_errors", 1);
-                eprintln!("[server] batch error: {e:#}");
+        if let Some(e) = first_err {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.cv.notify_all();
+            for h in handles {
+                let _ = h.join();
             }
+            return Err(e.context("server start"));
+        }
+        Ok(Server { shared, handles, metrics })
+    }
+
+    /// Enqueue a request; the response arrives on the returned channel.
+    /// Errors when the server is shutting down or no worker survived —
+    /// callers keep their own thread alive either way.
+    pub fn submit(&self, req: ScoreRequest)
+                  -> Result<mpsc::Receiver<ScoreResponse>> {
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            bail!("server is shutting down");
+        }
+        if self.shared.live.load(Ordering::SeqCst) == 0 {
+            bail!("no live server workers");
+        }
+        let (rtx, rrx) = mpsc::channel();
+        self.shared.queue.lock().unwrap().push_back(Entry {
+            req,
+            reply: rtx,
+            t_submit: Instant::now(),
+        });
+        self.shared.cv.notify_one();
+        Ok(rrx)
+    }
+
+    /// Number of workers currently serving.
+    pub fn live_workers(&self) -> usize {
+        self.shared.live.load(Ordering::SeqCst)
+    }
+
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        self.stop();
+        self.metrics.clone()
+    }
+
+    fn stop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
         }
     }
 }
 
-fn execute_batch(engine: &Engine, router: &mut Router, cfg: &ServerConfig,
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn worker_loop(widx: usize, engine: &Engine, shared: &Shared,
+               router: &Mutex<Router>, cfg: &ServerConfig,
+               metrics: &Arc<Metrics>) {
+    if cfg.workers.max(1) > 1 {
+        // parallelism comes from the workers themselves; keep each
+        // worker's tensor kernels serial instead of workers×pool-width
+        // threads contending for the same cores
+        crate::util::pool::Pool::mark_worker_thread();
+    }
+    let mut batcher: Batcher<Entry> = Batcher::new(cfg.batcher);
+    let mut draining = false;
+    loop {
+        let timeout = if draining {
+            Duration::ZERO
+        } else if batcher.is_empty() {
+            Duration::from_millis(50)
+        } else {
+            batcher.deadline()
+                .map(|d| d.saturating_duration_since(Instant::now()))
+                .unwrap_or(Duration::ZERO)
+        };
+        match pop(shared, timeout) {
+            Pop::Job(e) => {
+                metrics.incr("requests", 1);
+                batcher.push(*e, Instant::now());
+            }
+            Pop::Timeout => {}
+            Pop::Shutdown => draining = true,
+        }
+        let now = Instant::now();
+        if batcher.ready(now) || (draining && !batcher.is_empty()) {
+            let entries = batcher.flush(now);
+            if let Err(e) = execute_batch(engine, router, cfg, entries,
+                                          metrics) {
+                metrics.incr("batch_errors", 1);
+                eprintln!("[server worker {widx}] batch error: {e:#}");
+            } else {
+                metrics.incr(&format!("worker_{widx}_batches"), 1);
+            }
+        }
+        if draining && batcher.is_empty()
+            && shared.queue.lock().unwrap().is_empty() {
+            break;
+        }
+    }
+}
+
+/// Reject a request the program can never score; the caller gets a
+/// response (with `error` set) rather than a silently-NaN score or a dead
+/// worker thread.
+fn validate(req: &ScoreRequest, seq_len: usize) -> Option<String> {
+    if req.tokens.is_empty() {
+        return Some("empty token list".to_string());
+    }
+    if req.tokens.len() > seq_len {
+        return Some(format!("request length {} exceeds program seq_len \
+                             {seq_len}", req.tokens.len()));
+    }
+    None
+}
+
+fn execute_batch(engine: &Engine, router: &Mutex<Router>,
+                 cfg: &ServerConfig,
                  entries: Vec<super::batcher::Pending<Entry>>,
                  metrics: &Arc<Metrics>) -> Result<()> {
     if entries.is_empty() {
         return Ok(());
     }
-    // route the whole flush to one variant (vLLM-style per-batch placement)
-    let seq_id = entries[0].item.req.id;
-    let vidx = router.route(seq_id, cfg.seq_len).unwrap_or(0);
-    let (program, vname) = {
-        let v = &router.variants[vidx];
-        (v.score_program.clone(), v.name.clone())
-    };
-    let prog = engine.program(&program)?;
-
-    let b = cfg.program_batch;
-    let t = cfg.seq_len;
-    let mut flat = vec![0i32; b * t];
-    for (i, e) in entries.iter().enumerate().take(b) {
-        let toks = &e.item.req.tokens;
-        let n = toks.len().min(t);
-        flat[i * t..i * t + n].copy_from_slice(&toks[..n]);
-        // left-fill short requests by repeating (keeps shapes static)
-        for j in n..t {
-            flat[i * t + j] = toks[j % n.max(1)];
+    let mut valid = Vec::with_capacity(entries.len());
+    for e in entries {
+        match validate(&e.item.req, cfg.seq_len) {
+            Some(reason) => {
+                metrics.incr("request_errors", 1);
+                let resp = ScoreResponse {
+                    id: e.item.req.id,
+                    nll: f32::NAN,
+                    variant: String::new(),
+                    latency: e.item.t_submit.elapsed(),
+                    error: Some(reason),
+                };
+                let _ = e.item.reply.send(resp);
+            }
+            None => valid.push(e),
         }
     }
-    let tokens = ParamValue::I32 { shape: vec![b, t], data: flat };
-    let t_exec = Instant::now();
-    let nll = prog.run_f32(&[tokens], &router.variants[vidx].weights)?;
-    metrics.observe("exec_us", t_exec.elapsed());
-    metrics.incr("batches", 1);
-    metrics.incr(&format!("variant_{vname}"), entries.len() as u64);
-
-    for (i, e) in entries.into_iter().enumerate() {
-        let resp = ScoreResponse {
-            id: e.item.req.id,
-            nll: nll.get(i).copied().unwrap_or(f32::NAN),
-            variant: vname.clone(),
-            latency: e.item.t_submit.elapsed(),
-        };
-        metrics.observe("request_us", resp.latency);
-        let _ = e.item.reply.send(resp);
+    let b = cfg.program_batch;
+    if valid.len() > b {
+        // batcher misconfigured beyond the program shape: split rather
+        // than silently NaN the overflow
+        metrics.incr("batch_overflow", 1);
     }
-    router.release(vidx, seq_id);
-    Ok(())
+    // groups are independent requests: one group's failure must not drop
+    // the later groups (nor their replies) on the floor
+    let mut first_err: Option<anyhow::Error> = None;
+    let mut rest = valid;
+    while !rest.is_empty() {
+        let take = rest.len().min(b);
+        let group: Vec<_> = rest.drain(..take).collect();
+        if let Err(e) = execute_group(engine, router, cfg, group, metrics) {
+            first_err.get_or_insert(e);
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Execute one program-shaped group (≤ program_batch entries, all
+/// validated non-empty). Every entry gets a response — error-carrying
+/// when the execution itself fails — so callers never block on a dropped
+/// reply sender.
+fn execute_group(engine: &Engine, router: &Mutex<Router>,
+                 cfg: &ServerConfig,
+                 entries: Vec<super::batcher::Pending<Entry>>,
+                 metrics: &Arc<Metrics>) -> Result<()> {
+    let seq_id = entries[0].item.req.id;
+    match score_group(engine, router, cfg, &entries, seq_id, metrics) {
+        Ok((nll, vname)) => {
+            metrics.incr("batches", 1);
+            metrics.incr(&format!("variant_{vname}"),
+                         entries.len() as u64);
+            for (i, e) in entries.into_iter().enumerate() {
+                let resp = ScoreResponse {
+                    id: e.item.req.id,
+                    nll: nll.get(i).copied().unwrap_or(f32::NAN),
+                    variant: vname.clone(),
+                    latency: e.item.t_submit.elapsed(),
+                    error: None,
+                };
+                metrics.observe("request_us", resp.latency);
+                let _ = e.item.reply.send(resp);
+            }
+            Ok(())
+        }
+        Err(err) => {
+            let msg = format!("batch execution failed: {err:#}");
+            for e in entries {
+                let _ = e.item.reply.send(ScoreResponse {
+                    id: e.item.req.id,
+                    nll: f32::NAN,
+                    variant: String::new(),
+                    latency: e.item.t_submit.elapsed(),
+                    error: Some(msg.clone()),
+                });
+            }
+            Err(err)
+        }
+    }
+}
+
+/// Route + pad + execute one group; returns the per-slot nll vector and
+/// the chosen variant name. Cache admission is released on every path
+/// (the pre-split code leaked the admission when execution failed).
+fn score_group(engine: &Engine, router: &Mutex<Router>,
+               cfg: &ServerConfig,
+               entries: &[super::batcher::Pending<Entry>], seq_id: u64,
+               metrics: &Arc<Metrics>) -> Result<(Vec<f32>, String)> {
+    // route the whole group to one variant (vLLM-style per-batch
+    // placement); weights are Arc-shared so the router lock is not held
+    // across the execution
+    let (vidx, program, vname, weights) = {
+        let mut r = router.lock().unwrap();
+        let vidx = r.route(seq_id, cfg.seq_len).unwrap_or(0);
+        let v = &r.variants[vidx];
+        (vidx, v.score_program.clone(), v.name.clone(), v.weights.clone())
+    };
+    let result: Result<Vec<f32>> = (|| {
+        let prog = engine.program(&program)?;
+        let b = cfg.program_batch;
+        let t = cfg.seq_len;
+        let mut flat = vec![0i32; b * t];
+        for (i, e) in entries.iter().enumerate().take(b) {
+            let toks = &e.item.req.tokens;
+            let n = toks.len().min(t);
+            flat[i * t..i * t + n].copy_from_slice(&toks[..n]);
+            // left-fill short requests by repeating (keeps shapes static)
+            for j in n..t {
+                flat[i * t + j] = toks[j % n.max(1)];
+            }
+        }
+        let tokens = ParamValue::I32 { shape: vec![b, t], data: flat };
+        let t_exec = Instant::now();
+        let nll = prog.run_f32(&[tokens], &weights)?;
+        metrics.observe("exec_us", t_exec.elapsed());
+        Ok(nll)
+    })();
+    router.lock().unwrap().release(vidx, seq_id);
+    result.map(|nll| (nll, vname))
 }

@@ -64,7 +64,7 @@ pub fn evaluate_mm(engine: &Engine, program: &str, weights: &Weights,
         for (bi, item) in (s..e).enumerate() {
             let row = &logits[bi * n_ans..(bi + 1) * n_ans];
             let pred = row.iter().enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i as i32).unwrap_or(-1);
             correct[item] = pred == labels[item];
         }

@@ -81,7 +81,7 @@ pub fn generate(engine: &Engine, program: &str, weights: &Weights,
 
 fn argmax(row: &[f32]) -> usize {
     row.iter().enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i).unwrap_or(0)
 }
 

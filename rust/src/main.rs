@@ -75,7 +75,7 @@ USAGE:
   latentllm eval      --model opt-mini-m [--weights FILE.ltw]
                       [--corpus synthwiki] [--artifacts DIR]
   latentllm serve     [--requests N] [--policy cache_aware|prefer_latent|rr]
-                      [--config FILE.toml] [--artifacts DIR]
+                      [--workers N] [--config FILE.toml] [--artifacts DIR]
   latentllm generate  --model opt-mini-m [--prompts 8] [--new 32]
                       [--temperature 0.8] [--latent] [--artifacts DIR]
   latentllm report    all|table2|table3|table4|fig4|fig5|fig7..fig16|ablations
@@ -274,39 +274,42 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
         ModelVariant {
             name: "dense".into(),
             score_program: format!("score_{model}"),
-            weights,
+            weights: std::sync::Arc::new(weights),
             cache: KvCacheManager::new(CacheKind::Dense { d: cfg.d },
                                        cfg.n_layers, 2, budget),
         },
         ModelVariant {
             name: "latent30".into(),
             score_program: format!("score_{model}"),
-            weights: latent_w,
+            weights: std::sync::Arc::new(latent_w),
             cache: KvCacheManager::new(
                 CacheKind::Latent { rk: r_lat, rv: r_lat },
                 cfg.n_layers, 2, budget),
         },
     ];
     let router = Router::new(variants, policy);
+    let workers = args.usize_flag("workers", file_cfg.serve.workers).max(1);
     let server = Server::start(artifacts.to_path_buf(), router, ServerConfig {
         batcher: file_cfg.serve.batcher,
         policy,
         program_batch: file_cfg.serve.program_batch,
         seq_len: file_cfg.serve.seq_len,
-    });
+        workers,
+    })?;
+    println!("serving with {} worker(s)", server.live_workers());
     let corpus = Corpus::load(artifacts.join("corpora.ltw"), "synthwiki",
                               "test")?;
-    let reqs = corpus.calibration(n_requests, 128, 99);
+    let reqs = corpus.calibration(n_requests, file_cfg.serve.seq_len, 99);
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = reqs.into_iter().enumerate()
-        .map(|(i, tokens)| server.submit(ScoreRequest {
-            id: i as u64, tokens,
-        }))
-        .collect();
+    let mut rxs = Vec::with_capacity(n_requests);
+    for (i, tokens) in reqs.into_iter().enumerate() {
+        rxs.push(server.submit(ScoreRequest { id: i as u64, tokens })?);
+    }
     let mut ok = 0;
     for rx in rxs {
-        if rx.recv().is_ok() {
-            ok += 1;
+        match rx.recv() {
+            Ok(resp) if resp.error.is_none() => ok += 1,
+            _ => {}
         }
     }
     let dt = t0.elapsed();

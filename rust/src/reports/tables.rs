@@ -14,6 +14,7 @@ use crate::model::config::{mini_by_name, MiniConfig, OPT_FAMILY};
 use crate::model::Weights;
 use crate::runtime::Engine;
 use crate::util::json::Value;
+use crate::util::pool::Pool;
 
 pub struct TableCtx<'a> {
     pub engine: &'a Engine,
@@ -41,6 +42,11 @@ fn corpora(ctx: &TableCtx) -> Result<Vec<Corpus>> {
 
 /// Table 2: perplexity of each model size × method × ratio on the three
 /// synthetic corpora (paper: OPT family on WT2/PTB/C4 at 10–40%).
+///
+/// The compression sweep (the dominant cost) runs method×ratio combos
+/// concurrently on the global [`Pool`]; evaluation stays on this thread
+/// (execution backends are not `Sync`) and rows emit in the same
+/// deterministic method-major order as the serial sweep.
 pub fn table2(ctx: &TableCtx, sizes: &[&str], ratios: &[f64],
               methods: &[Method]) -> Result<Value> {
     let (batch, seq_len) = score_dims(ctx.engine);
@@ -51,6 +57,7 @@ pub fn table2(ctx: &TableCtx, sizes: &[&str], ratios: &[f64],
         h.extend(corp.iter().map(|c| c.name.as_str()));
         h
     });
+    let (qk_iters, ud_iters) = (ctx.qk_iters, ctx.ud_iters);
     for size in sizes {
         let cfg = mini_by_name(size).context("unknown size")?;
         let (weights, cal) = load_model(ctx, cfg)?;
@@ -64,11 +71,22 @@ pub fn table2(ctx: &TableCtx, sizes: &[&str], ratios: &[f64],
         }
         rows.push(row_value(size, "original", 0.0, &base));
         out.row(render_row(size, "original", 0.0, &base));
-        for &method in methods {
-            for &ratio in ratios {
-                let (nw, _rep) = pipeline::compress_model(
-                    cfg, &weights, &cal, method, ratio,
-                    ctx.qk_iters, ctx.ud_iters)?;
+        let combos: Vec<(Method, f64)> = methods.iter()
+            .flat_map(|&m| ratios.iter().map(move |&r| (m, r)))
+            .collect();
+        // compress in pool-width waves: full parallel speedup but only
+        // one wave of compressed Weights alive at a time (the whole grid
+        // at once would scale peak memory with methods×ratios)
+        let wave = Pool::global().threads().max(1);
+        for chunk in combos.chunks(wave) {
+            let compressed = Pool::global().run(chunk.len(), |ci| {
+                let (method, ratio) = chunk[ci];
+                pipeline::compress_model(cfg, &weights, &cal, method,
+                                         ratio, qk_iters, ud_iters)
+            });
+            for ((method, ratio), res) in chunk.iter().zip(compressed) {
+                let (nw, _rep) = res.with_context(
+                    || format!("compress {size} {method:?}@{ratio}"))?;
                 let mut ppls = vec![];
                 for c in &corp {
                     let r = eval::perplexity(ctx.engine, &program, &nw, c,
@@ -76,8 +94,8 @@ pub fn table2(ctx: &TableCtx, sizes: &[&str], ratios: &[f64],
                                              ctx.max_batches)?;
                     ppls.push(r.ppl);
                 }
-                rows.push(row_value(size, method.label(), ratio, &ppls));
-                out.row(render_row(size, method.label(), ratio, &ppls));
+                rows.push(row_value(size, method.label(), *ratio, &ppls));
+                out.row(render_row(size, method.label(), *ratio, &ppls));
             }
         }
     }

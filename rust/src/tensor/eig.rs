@@ -34,7 +34,7 @@ pub fn eigh(a: &Matrix) -> (Vec<f64>, Matrix) {
     tql2_rows(&mut zt, &mut d, &mut e);
     // sort ascending (tql2 output is not guaranteed sorted)
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    idx.sort_by(|&i, &j| d[i].total_cmp(&d[j]));
     let w: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
     let mut v = Matrix::zeros(n, n);
     for (jnew, &jold) in idx.iter().enumerate() {
@@ -261,7 +261,7 @@ pub fn eigh_jacobi(a: &Matrix) -> (Vec<f64>, Matrix) {
 
     let mut idx: Vec<usize> = (0..n).collect();
     let w: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
-    idx.sort_by(|&i, &j| w[i].partial_cmp(&w[j]).unwrap());
+    idx.sort_by(|&i, &j| w[i].total_cmp(&w[j]));
     let wv: Vec<f64> = idx.iter().map(|&i| w[i]).collect();
     let vv = v.select_cols(&idx);
     (wv, vv)

@@ -1,9 +1,40 @@
 //! Row-major f64 dense matrix with the handful of BLAS-3 style kernels the
 //! compression algorithms need. The matmul family is cache-blocked and is
 //! the §Perf hot path for the rust-side pipeline.
+//!
+//! Above [`PAR_MIN_FLOPS`] the matmul family parallelizes over row blocks
+//! of the output on the global [`Pool`]. Each output row is computed with
+//! exactly the serial loop's per-row arithmetic (same k order, same
+//! zero-skip), so parallel results are bit-identical to serial at any
+//! thread count — the property the compress-pipeline determinism test
+//! pins down.
 
 use std::fmt;
 use std::ops::{Index, IndexMut};
+
+use crate::util::pool::Pool;
+
+/// Below this many multiply-adds the fork-join overhead dominates; run
+/// serially. ~128³.
+const PAR_MIN_FLOPS: usize = 2 << 20;
+
+/// Row-parallel execution plan: `Some((pool, block_rows))` when the
+/// product is big enough and a multi-thread pool is available.
+fn par_plan(out_rows: usize, out_cols: usize, flops: usize)
+            -> Option<(Pool, usize)> {
+    if out_rows < 2 || out_cols == 0 || flops < PAR_MIN_FLOPS
+        || Pool::in_worker() {
+        return None;
+    }
+    let pool = Pool::global();
+    let t = pool.threads();
+    if t <= 1 {
+        return None;
+    }
+    // ~4 blocks per thread: dynamic-ish balance with static assignment
+    let blocks = (t * 4).min(out_rows);
+    Some((pool, out_rows.div_ceil(blocks)))
+}
 
 #[derive(Clone, PartialEq)]
 pub struct Matrix {
@@ -115,51 +146,116 @@ impl Matrix {
         t
     }
 
+    /// One output row of C = A · B: ikj order with the zero-skip — the
+    /// single source of truth for both the serial and parallel paths.
+    #[inline]
+    fn matmul_row_into(&self, b: &Matrix, i: usize, crow: &mut [f64]) {
+        let n = b.cols;
+        for k in 0..self.cols {
+            let aik = self.data[i * self.cols + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b.data[k * n..(k + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+
     /// C = A · B. ikj loop order (row-major streaming) — the fast path.
+    /// Row-block-parallel above [`PAR_MIN_FLOPS`]; bit-identical to the
+    /// serial path at any thread count.
     pub fn matmul(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.cols, b.rows, "matmul shape {}x{} @ {}x{}",
                    self.rows, self.cols, b.rows, b.cols);
         let mut c = Matrix::zeros(self.rows, b.cols);
         let n = b.cols;
-        for i in 0..self.rows {
-            let crow = &mut c.data[i * n..(i + 1) * n];
-            for k in 0..self.cols {
-                let aik = self.data[i * self.cols + k];
-                if aik == 0.0 {
-                    continue;
+        let flops = self.rows * self.cols * n;
+        if let Some((pool, block)) = par_plan(self.rows, n, flops) {
+            pool.par_chunks(&mut c.data, block * n, |bi, chunk| {
+                for (di, crow) in chunk.chunks_mut(n).enumerate() {
+                    self.matmul_row_into(b, bi * block + di, crow);
                 }
-                let brow = &b.data[k * n..(k + 1) * n];
-                for j in 0..n {
-                    crow[j] += aik * brow[j];
-                }
+            });
+        } else {
+            for i in 0..self.rows {
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                self.matmul_row_into(b, i, crow);
             }
         }
         c
+    }
+
+    /// One output row of C = A · Bᵀ (dot-product form).
+    #[inline]
+    fn matmul_bt_row_into(&self, b: &Matrix, i: usize, crow: &mut [f64]) {
+        let arow = self.row(i);
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = b.row(j);
+            let mut s = 0.0;
+            for k in 0..self.cols {
+                s += arow[k] * brow[k];
+            }
+            *cv = s;
+        }
     }
 
     /// C = A · Bᵀ — dot-product form, both operands stream row-major.
+    /// Row-block-parallel above [`PAR_MIN_FLOPS`].
     pub fn matmul_bt(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.cols, b.cols, "matmul_bt shape");
         let mut c = Matrix::zeros(self.rows, b.rows);
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            for j in 0..b.rows {
-                let brow = b.row(j);
-                let mut s = 0.0;
-                for k in 0..self.cols {
-                    s += arow[k] * brow[k];
+        let n = b.rows;
+        let flops = self.rows * self.cols * n;
+        if let Some((pool, block)) = par_plan(self.rows, n, flops) {
+            pool.par_chunks(&mut c.data, block * n, |bi, chunk| {
+                for (di, crow) in chunk.chunks_mut(n).enumerate() {
+                    self.matmul_bt_row_into(b, bi * block + di, crow);
                 }
-                c[(i, j)] = s;
+            });
+        } else {
+            for i in 0..self.rows {
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                self.matmul_bt_row_into(b, i, crow);
             }
         }
         c
     }
 
-    /// C = Aᵀ · B.
+    /// One output row i of C = Aᵀ · B: k ascending with the zero-skip —
+    /// the same per-(i,j) accumulation sequence as the serial k-outer
+    /// loop, so the row-parallel path stays bit-identical.
+    #[inline]
+    fn matmul_at_row_into(&self, b: &Matrix, i: usize, crow: &mut [f64]) {
+        let n = b.cols;
+        for k in 0..self.rows {
+            let aki = self.data[k * self.cols + i];
+            if aki == 0.0 {
+                continue;
+            }
+            let brow = &b.data[k * n..(k + 1) * n];
+            for j in 0..n {
+                crow[j] += aki * brow[j];
+            }
+        }
+    }
+
+    /// C = Aᵀ · B. Row-block-parallel above [`PAR_MIN_FLOPS`]; the serial
+    /// path keeps the k-outer streaming order.
     pub fn matmul_at(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.rows, b.rows, "matmul_at shape");
         let mut c = Matrix::zeros(self.cols, b.cols);
         let n = b.cols;
+        let flops = self.rows * self.cols * n;
+        if let Some((pool, block)) = par_plan(self.cols, n, flops) {
+            pool.par_chunks(&mut c.data, block * n, |bi, chunk| {
+                for (di, crow) in chunk.chunks_mut(n).enumerate() {
+                    self.matmul_at_row_into(b, bi * block + di, crow);
+                }
+            });
+            return c;
+        }
         for k in 0..self.rows {
             let arow = self.row(k);
             let brow = &b.data[k * n..(k + 1) * n];
@@ -376,6 +472,55 @@ mod tests {
             let q: f64 = v.iter().zip(&cv).map(|(a, b)| a * b).sum();
             assert!(q >= -1e-9);
         }
+    }
+
+    /// ikj-order reference with the same zero-skip as the kernels; any
+    /// deviation in the parallel path shows up as a bit difference.
+    fn matmul_reference(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for k in 0..a.cols() {
+                let aik = a[(i, k)];
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..b.cols() {
+                    c[(i, j)] += aik * b[(k, j)];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn parallel_matmul_is_bit_identical() {
+        // 160³ ≈ 4M flops > PAR_MIN_FLOPS: exercises the row-parallel
+        // path whenever the machine has >1 thread; the small case stays
+        // serial. Both must match the reference exactly (not within eps).
+        let mut rng = crate::util::rng::Rng::new(17);
+        for n in [24usize, 160] {
+            let a = rng.normal_matrix(n, n);
+            let b = rng.normal_matrix(n, n);
+            let c = a.matmul(&b);
+            let r = matmul_reference(&a, &b);
+            assert_eq!(c.data(), r.data(), "matmul n={n} diverged bitwise");
+
+            let cbt = a.matmul_bt(&b.transpose());
+            assert_eq!(cbt.data(), r.data(), "matmul_bt n={n}");
+
+            let cat = a.transpose().matmul_at(&b);
+            assert_eq!(cat.data(), r.data(), "matmul_at n={n}");
+        }
+    }
+
+    #[test]
+    fn parallel_matmul_handles_ragged_row_blocks() {
+        // rows not divisible by the block size: the final short chunk
+        // must still land on the right rows
+        let mut rng = crate::util::rng::Rng::new(23);
+        let a = rng.normal_matrix(157, 160);
+        let b = rng.normal_matrix(160, 163);
+        assert_eq!(a.matmul(&b).data(), matmul_reference(&a, &b).data());
     }
 
     #[test]

@@ -85,7 +85,11 @@ fn svd_tall(a: &Matrix) -> Svd {
             (s.sqrt(), j)
         })
         .collect();
-    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    // total_cmp: a non-finite value from a degenerate Gram matrix must
+    // sort deterministically, not panic. (+NaN orders above +inf, so a
+    // NaN norm sorts *first* here — visible to callers via the finite-
+    // weights checks rather than a crashed pipeline thread.)
+    sv.sort_by(|a, b| b.0.total_cmp(&a.0));
     let idx: Vec<usize> = sv.iter().map(|&(_, j)| j).collect();
     let s: Vec<f64> = sv.iter().map(|&(v, _)| v).collect();
     let mut u_sorted = u.select_cols(&idx);

@@ -75,7 +75,7 @@ impl Bench {
             std::hint::black_box(f());
             samples.push(t.elapsed().as_nanos() as f64);
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(|a, b| a.total_cmp(b));
         let stats = Stats {
             name: name.to_string(),
             iters,

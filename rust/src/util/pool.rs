@@ -1,0 +1,258 @@
+//! Scoped thread pool for the compression and serving hot paths.
+//!
+//! std-only (rayon is unavailable offline): every parallel operation is a
+//! fork-join over `std::thread::scope`, so no worker threads outlive a
+//! call and closures may borrow from the caller's stack freely. Sizing
+//! comes from `LATENTLLM_THREADS` when set, else
+//! `std::thread::available_parallelism`.
+//!
+//! Determinism contract: `run` returns results in job order and
+//! `par_chunks` hands each closure a disjoint chunk, so callers that keep
+//! per-job arithmetic identical to their serial path (the `tensor` matmul
+//! family and `compress::pipeline` do) produce bit-identical output at any
+//! thread count.
+//!
+//! Nesting: closures executing on a pool worker are flagged thread-local;
+//! nested pool calls from inside a worker degrade to the serial path
+//! instead of oversubscribing the machine quadratically (layer-parallel
+//! `compress_model` on top of row-parallel `matmul` is the motivating
+//! stack).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Process-wide thread-count override; 0 = not yet resolved.
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Thread count from the environment: `LATENTLLM_THREADS` when it parses
+/// to a positive integer, else `available_parallelism`, else 1.
+pub fn configured_threads() -> usize {
+    if let Ok(v) = std::env::var("LATENTLLM_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n.min(256);
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Override the global pool size (benches and tests; takes effect for all
+/// subsequent [`Pool::global`] calls in this process).
+pub fn set_global_threads(n: usize) {
+    GLOBAL_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// A fork-join executor of fixed width. `Pool` is a value type (one
+/// `usize`): construction never spawns threads, each parallel call does.
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Pool {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// The process-wide pool: sized by [`configured_threads`] on first
+    /// use, overridable with [`set_global_threads`].
+    pub fn global() -> Pool {
+        let mut n = GLOBAL_THREADS.load(Ordering::Relaxed);
+        if n == 0 {
+            n = configured_threads();
+            GLOBAL_THREADS.store(n, Ordering::Relaxed);
+        }
+        Pool::new(n)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// True when called from a closure already running on a pool worker
+    /// (nested parallel calls run serially).
+    pub fn in_worker() -> bool {
+        IN_WORKER.with(|f| f.get())
+    }
+
+    /// Mark the *current* thread as a pool-style worker: every pool call
+    /// made from it runs serially. Long-lived compute threads that exist
+    /// in multiples (the serving workers) use this so N of them don't
+    /// each fan out a full pool on top of each other.
+    pub fn mark_worker_thread() {
+        IN_WORKER.with(|f| f.set(true));
+    }
+
+    /// Run `f(0), f(1), …, f(jobs-1)` across the pool and return the
+    /// results **in job order**. Jobs are claimed dynamically (atomic
+    /// counter), so imbalanced jobs still fill all workers.
+    pub fn run<T, F>(&self, jobs: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let workers = self.threads.min(jobs);
+        if workers <= 1 || Pool::in_worker() {
+            return (0..jobs).map(f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let next = &next;
+                let f = &f;
+                s.spawn(move || {
+                    IN_WORKER.with(|flag| flag.set(true));
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs {
+                            break;
+                        }
+                        if tx.send((i, f(i))).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            let mut out: Vec<Option<T>> = (0..jobs).map(|_| None).collect();
+            for (i, v) in rx {
+                out[i] = Some(v);
+            }
+            out.into_iter()
+                .map(|v| v.expect("pool worker completed every job"))
+                .collect()
+        })
+    }
+
+    /// Split `data` into consecutive chunks of `chunk_len` elements (the
+    /// last may be shorter) and run `f(chunk_index, chunk)` across the
+    /// pool. Chunks are disjoint, so writes race-free by construction.
+    pub fn par_chunks<T, F>(&self, data: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk_len > 0, "par_chunks needs chunk_len >= 1");
+        let n_chunks = data.len().div_ceil(chunk_len);
+        let workers = self.threads.min(n_chunks);
+        if workers <= 1 || Pool::in_worker() {
+            for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+                f(i, c);
+            }
+            return;
+        }
+        std::thread::scope(|s| {
+            // static round-robin: uniform chunks (the matmul row blocks)
+            // balance without a shared queue
+            let mut buckets: Vec<Vec<(usize, &mut [T])>> =
+                (0..workers).map(|_| Vec::new()).collect();
+            for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+                buckets[i % workers].push((i, c));
+            }
+            for bucket in buckets {
+                let f = &f;
+                s.spawn(move || {
+                    IN_WORKER.with(|flag| flag.set(true));
+                    for (i, c) in bucket {
+                        f(i, c);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Raw fork-join escape hatch for shapes `run`/`par_chunks` can't
+    /// express (heterogeneous task sets). Serial when the pool is width-1
+    /// or the caller is already a pool worker is NOT applied here — the
+    /// closure decides what to spawn, capped at [`Pool::threads`] tasks
+    /// by contract (asserted nowhere; prefer `run` when a cap matters).
+    pub fn scope<'env, F, T>(&self, f: F) -> T
+    where
+        F: for<'scope> FnOnce(&'scope std::thread::Scope<'scope, 'env>) -> T,
+    {
+        std::thread::scope(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_returns_results_in_order() {
+        for threads in [1, 2, 4, 9] {
+            let pool = Pool::new(threads);
+            let out = pool.run(23, |i| i * i);
+            assert_eq!(out, (0..23).map(|i| i * i).collect::<Vec<_>>(),
+                       "threads={threads}");
+        }
+        assert!(Pool::new(4).run(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn run_borrows_caller_state() {
+        let data: Vec<u64> = (0..100).collect();
+        let sums = Pool::new(3).run(10, |i| {
+            data[i * 10..(i + 1) * 10].iter().sum::<u64>()
+        });
+        assert_eq!(sums.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn par_chunks_writes_every_chunk() {
+        let mut v = vec![0usize; 37];
+        Pool::new(4).par_chunks(&mut v, 5, |ci, chunk| {
+            for (k, x) in chunk.iter_mut().enumerate() {
+                *x = ci * 5 + k;
+            }
+        });
+        assert_eq!(v, (0..37).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_run_degrades_to_serial() {
+        let pool = Pool::new(4);
+        let nested = pool.run(4, |_| {
+            assert!(Pool::in_worker());
+            // nested call must not deadlock or explode; serial fallback
+            Pool::new(4).run(3, |j| j + 1)
+        });
+        for v in nested {
+            assert_eq!(v, vec![1, 2, 3]);
+        }
+        assert!(!Pool::in_worker(), "flag is per-worker, not the caller");
+    }
+
+    #[test]
+    fn scope_joins_heterogeneous_tasks() {
+        let pool = Pool::new(2);
+        let mut left = 0u64;
+        let mut right = String::new();
+        pool.scope(|s| {
+            s.spawn(|| left = 41 + 1);
+            s.spawn(|| right.push_str("done"));
+        });
+        assert_eq!(left, 42);
+        assert_eq!(right, "done");
+    }
+
+    #[test]
+    fn env_override_parses() {
+        // configured_threads falls back to available_parallelism; the
+        // global override wins afterwards
+        set_global_threads(3);
+        assert_eq!(Pool::global().threads(), 3);
+        set_global_threads(1);
+        assert_eq!(Pool::global().threads(), 1);
+        // restore discovery default for other tests in this process
+        set_global_threads(configured_threads());
+    }
+}

@@ -151,7 +151,7 @@ fn serving_stack_end_to_end() {
     let variants = vec![ModelVariant {
         name: "dense".into(),
         score_program: format!("score_{model}"),
-        weights,
+        weights: std::sync::Arc::new(weights),
         cache: KvCacheManager::new(CacheKind::Dense { d: cfg.d },
                                    cfg.n_layers, 2, 32 << 20),
     }];
@@ -162,11 +162,14 @@ fn serving_stack_end_to_end() {
                                    policy: Policy::RoundRobin,
                                    program_batch: 8,
                                    seq_len: 128,
-                               });
+                                   workers: 2,
+                               })
+        .expect("server start");
     let reqs = corpus.calibration(24, 128, 5);
     let rxs: Vec<_> = reqs.into_iter().enumerate()
         .map(|(i, tokens)| server.submit(ScoreRequest { id: i as u64,
-                                                        tokens }))
+                                                        tokens })
+            .expect("submit"))
         .collect();
     let mut got = 0;
     for rx in rxs {

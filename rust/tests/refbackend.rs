@@ -208,23 +208,26 @@ fn score_and_generate_end_to_end() {
     std::fs::remove_dir_all(&art).ok();
 }
 
+/// Dense tiny-model variant over random weights (server test fixture).
+fn tiny_variant(seed: u64) -> ModelVariant {
+    ModelVariant {
+        name: "dense".to_string(),
+        score_program: "score_tiny".to_string(),
+        weights: std::sync::Arc::new(random_weights(&TINY, seed)),
+        cache: KvCacheManager::new(CacheKind::Dense { d: TINY.d },
+                                   TINY.n_layers, 2, 8 << 20),
+    }
+}
+
 #[test]
 fn server_pads_short_requests_through_batcher() {
     // coordinator::batcher padding path: submit more (short) requests
     // than one flush holds; execute_batch pads each to [program_batch,
     // seq_len] before the RefBackend scoring program runs.
     let art = synth_artifacts("serve");
-    let weights = random_weights(&TINY, 21);
-    let variants = vec![ModelVariant {
-        name: "dense".to_string(),
-        score_program: "score_tiny".to_string(),
-        weights,
-        cache: KvCacheManager::new(CacheKind::Dense { d: TINY.d },
-                                   TINY.n_layers, 2, 8 << 20),
-    }];
     let server = Server::start(
         art.clone(),
-        Router::new(variants, Policy::RoundRobin),
+        Router::new(vec![tiny_variant(21)], Policy::RoundRobin),
         ServerConfig {
             batcher: BatcherConfig {
                 max_batch: 3,
@@ -233,7 +236,10 @@ fn server_pads_short_requests_through_batcher() {
             policy: Policy::RoundRobin,
             program_batch: BATCH,
             seq_len: SEQ,
-        });
+            workers: 2,
+        })
+        .expect("server start");
+    assert_eq!(server.live_workers(), 2);
     // ragged, shorter-than-seq_len requests exercise the padding fill
     let reqs: Vec<Vec<i32>> = (0..7)
         .map(|i| (0..(3 + i % 4)).map(|j| ((i * 5 + j) % 40) as i32)
@@ -241,7 +247,8 @@ fn server_pads_short_requests_through_batcher() {
         .collect();
     let rxs: Vec<_> = reqs.into_iter().enumerate()
         .map(|(i, tokens)| server.submit(ScoreRequest { id: i as u64,
-                                                        tokens }))
+                                                        tokens })
+            .expect("submit"))
         .collect();
     for rx in rxs {
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60))
@@ -253,6 +260,174 @@ fn server_pads_short_requests_through_batcher() {
     assert_eq!(m.counter("batch_errors"), 0);
     assert!(m.counter("batches") >= 3, "max_batch=3 forces ≥3 flushes");
     std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn overflow_flush_splits_instead_of_nan() {
+    // regression: a batcher flush larger than program_batch used to pack
+    // only the first `program_batch` requests but reply to all of them —
+    // the overflow silently got nll = NaN. The server must now split the
+    // flush into program-shaped executions and score every request.
+    let art = synth_artifacts("overflow");
+    let server = Server::start(
+        art.clone(),
+        Router::new(vec![tiny_variant(22)], Policy::RoundRobin),
+        ServerConfig {
+            batcher: BatcherConfig {
+                // misconfigured: twice the program batch
+                max_batch: 2 * BATCH,
+                max_wait: std::time::Duration::from_millis(500),
+            },
+            policy: Policy::RoundRobin,
+            program_batch: BATCH,
+            seq_len: SEQ,
+            workers: 1,
+        })
+        .expect("server start");
+    // submit 2×BATCH requests quickly so one flush exceeds program_batch
+    let rxs: Vec<_> = (0..2 * BATCH)
+        .map(|i| server.submit(ScoreRequest {
+            id: i as u64,
+            tokens: (0..SEQ).map(|j| ((i * 7 + j) % 40) as i32).collect(),
+        }).expect("submit"))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60))
+            .expect("response");
+        assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
+        assert!(resp.nll.is_finite(),
+                "request {i} got NaN — overflow entries must be scored");
+    }
+    let m = server.shutdown();
+    assert_eq!(m.counter("requests"), 2 * BATCH as u64);
+    assert_eq!(m.counter("batch_errors"), 0);
+    assert!(m.counter("batch_overflow") >= 1,
+            "oversized flush must be counted");
+    assert!(m.counter("batches") >= 2, "split must execute ≥2 programs");
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn invalid_requests_get_error_responses_not_a_dead_worker() {
+    // regression: an empty token list used to index toks[0] and panic the
+    // serve thread; every later request then hung. Now empty (and
+    // over-long) requests get an error-carrying response and the worker
+    // keeps serving.
+    let art = synth_artifacts("invalid");
+    let server = Server::start(
+        art.clone(),
+        Router::new(vec![tiny_variant(23)], Policy::RoundRobin),
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: BATCH,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            policy: Policy::RoundRobin,
+            program_batch: BATCH,
+            seq_len: SEQ,
+            workers: 1,
+        })
+        .expect("server start");
+    let timeout = std::time::Duration::from_secs(60);
+
+    let empty = server.submit(ScoreRequest { id: 0, tokens: vec![] })
+        .expect("submit");
+    let resp = empty.recv_timeout(timeout).expect("error response");
+    assert!(resp.error.is_some(), "empty request must carry an error");
+    assert!(resp.nll.is_nan());
+
+    let too_long = server.submit(ScoreRequest {
+        id: 1,
+        tokens: vec![1; SEQ + 5],
+    }).expect("submit");
+    let resp = too_long.recv_timeout(timeout).expect("error response");
+    assert!(resp.error.is_some(), "over-long request must carry an error");
+
+    // the worker must still be alive and scoring
+    let ok = server.submit(ScoreRequest {
+        id: 2,
+        tokens: vec![3, 5, 7],
+    }).expect("submit");
+    let resp = ok.recv_timeout(timeout).expect("worker survived");
+    assert!(resp.error.is_none());
+    assert!(resp.nll.is_finite());
+
+    let m = server.shutdown();
+    assert_eq!(m.counter("request_errors"), 2);
+    assert_eq!(m.counter("batch_errors"), 0);
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn failed_batch_execution_replies_with_errors() {
+    // a variant pointing at a program the manifest doesn't have: every
+    // request in the batch must get an error-carrying response (not a
+    // dropped reply channel) and the worker must count a batch_error
+    let art = synth_artifacts("badprog");
+    let variant = ModelVariant {
+        name: "broken".to_string(),
+        score_program: "score_nonexistent".to_string(),
+        weights: std::sync::Arc::new(random_weights(&TINY, 25)),
+        cache: KvCacheManager::new(CacheKind::Dense { d: TINY.d },
+                                   TINY.n_layers, 2, 8 << 20),
+    };
+    let server = Server::start(
+        art.clone(),
+        Router::new(vec![variant], Policy::RoundRobin),
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 2,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            policy: Policy::RoundRobin,
+            program_batch: BATCH,
+            seq_len: SEQ,
+            workers: 1,
+        })
+        .expect("server start (engine init itself is fine)");
+    let rxs: Vec<_> = (0..3u64)
+        .map(|i| server.submit(ScoreRequest {
+            id: i,
+            tokens: vec![1, 2, 3],
+        }).expect("submit"))
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60))
+            .expect("error response, not a dropped channel");
+        assert!(resp.error.is_some());
+        assert!(resp.error.unwrap().contains("batch execution failed"));
+        assert!(resp.nll.is_nan());
+    }
+    let m = server.shutdown();
+    assert!(m.counter("batch_errors") >= 1);
+    assert_eq!(m.counter("batches"), 0, "nothing actually executed");
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn failed_engine_init_surfaces_from_start() {
+    // regression: Engine::new failing in the worker used to leave a dead
+    // server whose submit() panicked the *caller*. start() must return
+    // the init error instead.
+    let missing = std::env::temp_dir()
+        .join(format!("latentllm_refbackend_no_such_artifacts_{}",
+                      std::process::id()));
+    std::fs::remove_dir_all(&missing).ok();
+    let res = Server::start(
+        missing,
+        Router::new(vec![tiny_variant(24)], Policy::RoundRobin),
+        ServerConfig {
+            batcher: BatcherConfig::default(),
+            policy: Policy::RoundRobin,
+            program_batch: BATCH,
+            seq_len: SEQ,
+            workers: 3,
+        });
+    let err = match res {
+        Ok(_) => panic!("start must fail without a manifest"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("engine init"), "unexpected error chain: {err}");
 }
 
 /// Random latent/MLA weight set in the python `latent_shapes` layout.
