@@ -24,8 +24,8 @@ fn main() -> Result<()> {
     println!("llava-mini synthetic-ScienceQA accuracy \
               (NAT/SOC/LAN | TXT/IMG/NO | G1-6/G7-12 | Avg):\n");
     let v = table4(&ctx, &[0.3],
-                   &[Method::Plain, Method::AsvdRootCov,
-                     Method::LatentLlm])?;
+                   &[Method::Plain.plan(), Method::AsvdRootCov.plan(),
+                     Method::LatentLlm.plan()])?;
     std::fs::create_dir_all("reports")?;
     std::fs::write("reports/mm_example.json", v.to_string_pretty())?;
     println!("\nexpected shape (paper Table 4): plain collapses, rootcov \

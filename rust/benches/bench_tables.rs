@@ -38,11 +38,13 @@ fn main() {
         b2.max_iters = 1;
         b2.run("table2 (1 size, 1 ratio, 2 methods)", || {
             tables::table2(&ctx, &["opt-mini-s"], &[0.3],
-                           &[Method::AsvdRootCov, Method::LatentLlm])
+                           &[Method::AsvdRootCov.plan(),
+                             Method::LatentLlm.plan()])
                 .unwrap()
         });
         b2.run("table4 (1 ratio, 1 method)", || {
-            tables::table4(&ctx, &[0.3], &[Method::LatentLlm]).unwrap()
+            tables::table4(&ctx, &[0.3], &[Method::LatentLlm.plan()])
+                .unwrap()
         });
     } else {
         println!("(artifacts missing: table2/table4 skipped — run `make \

@@ -134,8 +134,8 @@ pub fn compress(wv: &Matrix, wo: &Matrix, n_heads: usize, d_h: usize,
         None
     };
 
-    let mut params = rv * d + ro * d_out + n_heads * d_h * (rv + ro);
-    params = params.saturating_sub(rv * rv + ro * ro + d_h * d_h * n_heads);
+    let params = super::rank::joint_vo_params(d, d_out, n_heads, d_h,
+                                              rv, ro);
     JointVoResult {
         av: av_f, bv: bv_f, ao, bo: bo_m, bo_bias,
         wv_hat, wo_hat, losses, rv, ro, params,

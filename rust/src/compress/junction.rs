@@ -19,6 +19,25 @@ pub enum Junction {
     BlockId,
 }
 
+pub const ALL: [Junction; 4] =
+    [Junction::Left, Junction::Right, Junction::Sym, Junction::BlockId];
+
+impl Junction {
+    /// Stable name used by the plan TOML schema.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Junction::Left => "left",
+            Junction::Right => "right",
+            Junction::Sym => "sym",
+            Junction::BlockId => "blockid",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Junction> {
+        ALL.iter().copied().find(|j| j.name() == s)
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct Factors {
     pub b: Matrix,
@@ -205,6 +224,14 @@ mod tests {
         }
         // params credit
         assert_eq!(fac.params(), 4 * (10 + 10) - 16);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for j in ALL {
+            assert_eq!(Junction::from_name(j.name()), Some(j));
+        }
+        assert_eq!(Junction::from_name("nope"), None);
     }
 
     #[test]

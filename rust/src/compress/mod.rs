@@ -13,7 +13,10 @@
 //! * [`quant`] — quantization-aware factor distillation (App I.1)
 //! * [`rope`] — RoPE-aware attention-map loss (App F.3, Fig 12)
 //! * [`rank`] — compression-ratio → rank solvers (§3.3 accounting)
-//! * [`pipeline`] — whole-model compression (§5 protocol, Table 2 rows)
+//! * [`plan`] — composable whole-model plans: `Compressor` stages +
+//!   registry, `CompressionPlan` (TOML serde, per-layer ratios, rank
+//!   overrides, sparse/quant post-stages), `compress_plan`
+//! * [`pipeline`] — the §5 protocol presets (`Method` shim over [`plan`])
 
 pub mod asvd;
 pub mod joint_qk;
@@ -21,6 +24,7 @@ pub mod joint_ud;
 pub mod joint_vo;
 pub mod junction;
 pub mod pipeline;
+pub mod plan;
 pub mod precond;
 pub mod quant;
 pub mod rank;
@@ -28,4 +32,5 @@ pub mod rope;
 pub mod sparse;
 
 pub use pipeline::{compress_model, Method};
+pub use plan::{compress_plan, CompressionPlan, Compressor, Registry};
 pub use precond::Precond;

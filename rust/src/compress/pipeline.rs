@@ -1,19 +1,23 @@
-//! Whole-model compression pipeline (paper §5 protocol — the Table 2 rows).
+//! Whole-model compression presets (paper §5 protocol — the Table 2 rows).
 //! Mirrors python/compile/latentllm/pipeline.py.
+//!
+//! Since the plan refactor this module is a thin compatibility shim: the
+//! eight historical [`Method`]s are presets over [`super::plan`]
+//! ([`Method::plan`]), and [`compress_model`] / [`compress_model_on`]
+//! wrap [`plan::compress_plan_on`]. New scenarios (per-layer ratio
+//! schedules, sparse/quant hybrids, custom stages) are expressed as
+//! [`CompressionPlan`]s directly — no new enum arms.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use super::asvd::{self, AsvdOpts};
-use super::joint_qk::{self, JointQkOpts};
-use super::joint_ud::{self, JointUdOpts};
-use super::joint_vo::{self, JointVoOpts};
 use super::junction::Junction;
+use super::plan::{self, CompressionPlan, Registry};
 use super::precond::Precond;
-use super::rank;
 use crate::data::CalibSet;
 use crate::model::{MiniConfig, Weights};
 use crate::util::pool::Pool;
-use crate::Matrix;
+
+pub use super::plan::{LayerReport, Report};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Method {
@@ -84,187 +88,42 @@ impl Method {
             Method::LatentLlmJointVo => "LatentLLM (JointVO)",
         }
     }
-}
 
-#[derive(Clone, Debug, Default)]
-pub struct LayerReport {
-    pub layer: usize,
-    pub qk_rank: usize,
-    pub qk_loss: f64,
-    pub ud_loss: f64,
-    pub params: usize,
-}
-
-#[derive(Clone, Debug)]
-pub struct Report {
-    pub method: Method,
-    pub ratio: f64,
-    pub layers: Vec<LayerReport>,
-    pub orig_linear_params: usize,
-    pub new_linear_params: usize,
-}
-
-impl Report {
-    pub fn achieved_ratio(&self) -> f64 {
-        1.0 - self.new_linear_params as f64
-            / self.orig_linear_params.max(1) as f64
+    /// The preset expressed as a [`CompressionPlan`] — bit-identical to
+    /// the historical enum pipeline (pinned by `tests/plan.rs`).
+    pub fn plan(&self) -> CompressionPlan {
+        let latent = self.is_latent();
+        CompressionPlan {
+            name: self.name().into(),
+            label: Some(self.label().into()),
+            attn: if *self == Method::LatentLlmJointVo {
+                plan::ATTN_LATENT_JOINTVO.into()
+            } else if latent {
+                plan::ATTN_LATENT.into()
+            } else {
+                plan::ATTN_LOCAL.into()
+            },
+            mlp: if latent {
+                plan::MLP_JOINT_UD.into()
+            } else {
+                plan::MLP_LOCAL.into()
+            },
+            precond: self.precond(),
+            junction: if latent { Junction::BlockId } else { Junction::Left },
+            ..CompressionPlan::default()
+        }
     }
 }
 
-/// One layer's compression output, staged for the deterministic merge:
-/// tensors are *named*, not written, so layers can run on any thread.
-struct LayerOut {
-    rep: LayerReport,
-    mats: Vec<(String, Matrix)>,
-    biases: Vec<(String, Vec<f64>)>,
+/// The Table 2 method set as plans (report sweeps, benches).
+pub fn table2_plans() -> Vec<CompressionPlan> {
+    TABLE2_METHODS.iter().map(|m| m.plan()).collect()
 }
 
-/// Compress layer `i` of the model — pure w.r.t. `weights`/`calib` (reads
-/// only the source weight set), so every layer is independent and the
-/// pipeline parallelizes across layers without changing any arithmetic.
-fn compress_layer(cfg: &MiniConfig, weights: &Weights, calib: &CalibSet,
-                  method: Method, ratio: f64, qk_iters: usize,
-                  ud_iters: usize, i: usize) -> Result<LayerOut> {
-    let keep = 1.0 - ratio;
-    let pk = method.precond();
-    let latent = method.is_latent();
-    let junction = if latent { Junction::BlockId } else { Junction::Left };
-    let (d, dh, h, di) = (cfg.d, cfg.d_h(), cfg.n_heads, cfg.d_i);
-
-    let p = format!("layers.{i}.");
-    let x_attn = calib.x(i, "attn_x");
-    let x_o = calib.x(i, "o_x");
-    let x_mlp = calib.x(i, "mlp_x");
-    let mut lrep = LayerReport { layer: i, ..Default::default() };
-    let mut mats: Vec<(String, Matrix)> = Vec::new();
-    let mut biases: Vec<(String, Vec<f64>)> = Vec::new();
-
-    let wq = weights.matrix(&format!("{p}attn.wq"))?;
-    let wk = weights.matrix(&format!("{p}attn.wk"))?;
-    let wv = weights.matrix(&format!("{p}attn.wv"))?;
-    let wo = weights.matrix(&format!("{p}attn.wo"))?;
-    let bq = weights.bias(&format!("{p}attn.bq"))?;
-    let bk = weights.bias(&format!("{p}attn.bk"))?;
-    let bv = weights.bias(&format!("{p}attn.bv"))?;
-    let bo = weights.bias(&format!("{p}attn.bo"))?;
-    let wu = weights.matrix(&format!("{p}mlp.wu"))?;
-    let wd = weights.matrix(&format!("{p}mlp.wd"))?;
-    let bu = weights.bias(&format!("{p}mlp.bu"))?;
-    let bd = weights.bias(&format!("{p}mlp.bd"))?;
-
-    if latent {
-        // ---- joint QK (§4.1, Alg 1)
-        let r_qk = rank::joint_qk_rank(d, dh, h, h, keep, true);
-        let jq = joint_qk::compress(&wq, &wk, h, dh, r_qk, r_qk,
-                                    &JointQkOpts {
-                                        kind: pk, n_iter: qk_iters,
-                                        x: Some(x_attn),
-                                        bq: Some(&bq), bk: Some(&bk),
-                                        ..Default::default()
-                                    });
-        mats.push((format!("{p}attn.wq"), jq.wq_hat));
-        mats.push((format!("{p}attn.wk"), jq.wk_hat));
-        biases.push((format!("{p}attn.bq"), jq.bq_bias.unwrap()));
-        biases.push((format!("{p}attn.bk"), jq.bk_bias.unwrap()));
-        lrep.qk_rank = r_qk;
-        lrep.qk_loss = *jq.losses.last().unwrap();
-        let mut layer_params = jq.params;
-
-        // ---- V / O
-        if method == Method::LatentLlmJointVo {
-            let r_vo = rank::local_rank(d, d, keep, true);
-            let jv = joint_vo::compress(&wv, &wo, h, dh, r_vo, r_vo,
-                                        &JointVoOpts {
-                                            kind: pk, n_iter: ud_iters,
-                                            x: Some(x_attn),
-                                            bv: Some(&bv), bo: Some(&bo),
-                                            ..Default::default()
-                                        });
-            mats.push((format!("{p}attn.wv"), jv.wv_hat));
-            mats.push((format!("{p}attn.wo"), jv.wo_hat));
-            biases.push((format!("{p}attn.bo"), jv.bo_bias.unwrap()));
-            layer_params += jv.params;
-        } else {
-            // paper default: split V/O, root-cov + block identity
-            let r_v = rank::local_rank(d, d, keep, true);
-            let rv = asvd::compress(&wv, r_v, &AsvdOpts {
-                kind: pk, junction, x: Some(x_attn), bias: Some(&bv),
-                ..Default::default()
-            });
-            let r_o = rank::local_rank(d, d, keep, true);
-            let ro = asvd::compress(&wo, r_o, &AsvdOpts {
-                kind: pk, junction, x: Some(x_o), bias: Some(&bo),
-                ..Default::default()
-            });
-            mats.push((format!("{p}attn.wv"), rv.w_hat));
-            biases.push((format!("{p}attn.bv"), rv.bias.unwrap()));
-            mats.push((format!("{p}attn.wo"), ro.w_hat));
-            biases.push((format!("{p}attn.bo"), ro.bias.unwrap()));
-            layer_params += rv.params + ro.params;
-        }
-
-        // ---- joint UD (§4.3)
-        let r_u = rank::local_rank(di, d, keep, true);
-        let r_d = rank::local_rank(d, di, keep, true);
-        let ud = joint_ud::compress(&wu, &bu, &wd, &bd, x_mlp, r_u, r_d,
-                                    &JointUdOpts {
-                                        n_iter: ud_iters,
-                                        junction,
-                                        ..Default::default()
-                                    });
-        mats.push((format!("{p}mlp.wu"), ud.wu_hat));
-        biases.push((format!("{p}mlp.bu"), ud.bu));
-        mats.push((format!("{p}mlp.wd"), ud.wd_hat));
-        biases.push((format!("{p}mlp.bd"), ud.bd));
-        lrep.ud_loss = *ud.losses.iter()
-            .fold(&f64::INFINITY, |m, v| if v < m { v } else { m });
-        layer_params += ud.params;
-        lrep.params = layer_params;
-    } else {
-        // local compression of each of the six linears
-        let mut layer_params = 0usize;
-        let jobs: [(&str, &Matrix, &[f64], &Matrix); 5] = [
-            ("attn.wq", &wq, &bq, x_attn),
-            ("attn.wk", &wk, &bk, x_attn),
-            ("attn.wv", &wv, &bv, x_attn),
-            ("attn.wo", &wo, &bo, x_o),
-            ("mlp.wu", &wu, &bu, x_mlp),
-        ];
-        for (name, w, b, x) in jobs {
-            let r = rank::local_rank(w.rows(), w.cols(), keep, false);
-            let res = asvd::compress(w, r, &AsvdOpts {
-                kind: pk, junction, x: Some(x), bias: Some(b),
-                ..Default::default()
-            });
-            mats.push((format!("{p}{name}"), res.w_hat));
-            let bname = format!("{p}{}", name.replace('w', "b"));
-            biases.push((bname, res.bias.unwrap()));
-            layer_params += res.params;
-        }
-        // wd sees σ(Wu_orig x + bu)
-        let mut z = wu.matmul(x_mlp);
-        for r in 0..z.rows() {
-            let bi = bu[r];
-            for v in z.row_mut(r) {
-                *v = (*v + bi).max(0.0);
-            }
-        }
-        let r = rank::local_rank(d, di, keep, false);
-        let res = asvd::compress(&wd, r, &AsvdOpts {
-            kind: pk, junction, x: Some(&z), bias: Some(&bd),
-            ..Default::default()
-        });
-        mats.push((format!("{p}mlp.wd"), res.w_hat));
-        biases.push((format!("{p}mlp.bd"), res.bias.unwrap()));
-        layer_params += res.params;
-        lrep.params = layer_params;
-    }
-    Ok(LayerOut { rep: lrep, mats, biases })
-}
-
-/// Compress every MHA/MLP linear of `weights` to the target ratio.
-/// Returns the effective (reconstructed Ŵ + updated biases) weight set —
-/// evaluated through the dense scoring program — plus the report.
+/// Compress every MHA/MLP linear of `weights` to the target ratio with a
+/// [`Method`] preset. Returns the effective (reconstructed Ŵ + updated
+/// biases) weight set — evaluated through the dense scoring program —
+/// plus the report. Thin wrapper over [`plan::compress_plan`].
 ///
 /// Layers run in parallel on the global [`Pool`] (`LATENTLLM_THREADS`);
 /// results merge in layer order, so the output is bit-identical to the
@@ -282,28 +141,9 @@ pub fn compress_model_on(pool: &Pool, cfg: &MiniConfig, weights: &Weights,
                          calib: &CalibSet, method: Method, ratio: f64,
                          qk_iters: usize, ud_iters: usize)
                          -> Result<(Weights, Report)> {
-    let mut report = Report {
-        method, ratio, layers: Vec::new(),
-        orig_linear_params: cfg.linear_params(),
-        new_linear_params: 0,
-    };
-    let layer_outs = pool.run(cfg.n_layers, |i| {
-        compress_layer(cfg, weights, calib, method, ratio, qk_iters,
-                       ud_iters, i)
-    });
-    let mut out = weights.clone();
-    for (i, res) in layer_outs.into_iter().enumerate() {
-        let lo = res.with_context(|| format!("compress layer {i}"))?;
-        for (name, m) in &lo.mats {
-            out.set_matrix(name, m);
-        }
-        for (name, b) in &lo.biases {
-            out.set_bias(name, b);
-        }
-        report.new_linear_params += lo.rep.params;
-        report.layers.push(lo.rep);
-    }
-    Ok((out, report))
+    let p = method.plan().with_ratio(ratio).with_iters(qk_iters, ud_iters);
+    plan::compress_plan_on(pool, &Registry::builtin(), cfg, weights, calib,
+                           &p, None)
 }
 
 /// Support for tests and benches: random weight sets in the exact
@@ -357,6 +197,7 @@ pub mod tests_support {
 mod tests {
     use super::tests_support::random_weights;
     use super::*;
+    use crate::compress::rank;
     use crate::model::config::OPT_MINI_S;
 
     #[test]
@@ -383,6 +224,27 @@ mod tests {
         let r_dense = rank::local_rank(cfg.d, cfg.d, keep, false);
         let r_block = rank::local_rank(cfg.d, cfg.d, keep, true);
         assert!(r_block > r_dense, "{r_block} vs {r_dense}");
+    }
+
+    #[test]
+    fn method_plans_pick_the_right_stages() {
+        for m in [Method::Plain, Method::AsvdHessian, Method::AsvdL1,
+                  Method::AsvdL2, Method::AsvdCov, Method::AsvdRootCov] {
+            let p = m.plan();
+            assert_eq!(p.attn, plan::ATTN_LOCAL);
+            assert_eq!(p.mlp, plan::MLP_LOCAL);
+            assert_eq!(p.junction, Junction::Left);
+            assert_eq!(p.precond, m.precond());
+            assert_eq!(p.name, m.name());
+        }
+        let p = Method::LatentLlm.plan();
+        assert_eq!(p.attn, plan::ATTN_LATENT);
+        assert_eq!(p.mlp, plan::MLP_JOINT_UD);
+        assert_eq!(p.junction, Junction::BlockId);
+        let p = Method::LatentLlmJointVo.plan();
+        assert_eq!(p.attn, plan::ATTN_LATENT_JOINTVO);
+        assert_eq!(p.mlp, plan::MLP_JOINT_UD);
+        assert_eq!(table2_plans().len(), TABLE2_METHODS.len());
     }
 
     #[test]

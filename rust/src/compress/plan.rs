@@ -1,0 +1,1215 @@
+//! Composable compression plans — the subsystem's public API.
+//!
+//! A [`CompressionPlan`] describes *what* to do to every layer as data: an
+//! attention stage and an MLP stage (names resolved through a [`Registry`]
+//! of [`Compressor`]s), a pre-conditioner, a junction, a target ratio or
+//! per-layer ratio schedule, per-module rank overrides, iteration budgets,
+//! and optional post-stages ([`PostOp`]) that wire the App I sparse/quant
+//! machinery into the whole-model path. [`compress_plan`] executes a plan
+//! layer-parallel on the [`Pool`] with the same bit-identical merge
+//! contract as the historical `compress_model` (which is now a thin shim:
+//! `Method::plan()` in [`super::pipeline`]).
+//!
+//! Plans have TOML serde ([`CompressionPlan::load`] /
+//! [`CompressionPlan::to_toml`]) so `latentllm compress --plan plan.toml`,
+//! `[compress]` config sections, and the report sweeps all speak the same
+//! schema. `latentllm compress --plan … --dry-run` resolves ranks without
+//! compressing (see [`CompressionPlan::resolve`]).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::asvd::{self, AsvdOpts};
+use super::joint_qk::{self, JointQkOpts};
+use super::joint_ud::{self, JointUdOpts};
+use super::joint_vo::{self, JointVoOpts};
+use super::junction::Junction;
+use super::precond::Precond;
+use super::{quant, rank, sparse};
+use crate::data::CalibSet;
+use crate::model::{MiniConfig, Weights};
+use crate::util::pool::Pool;
+use crate::util::toml::{self, Table, Value};
+use crate::Matrix;
+
+// ---------------------------------------------------------------------------
+// per-layer report / output containers
+
+#[derive(Clone, Debug, Default)]
+pub struct LayerReport {
+    pub layer: usize,
+    pub qk_rank: usize,
+    pub qk_loss: f64,
+    pub ud_loss: f64,
+    pub params: usize,
+}
+
+/// Whole-model compression report (one per [`compress_plan`] run).
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// display label of the plan that produced this report
+    pub plan: String,
+    /// the plan's base target ratio (per-layer schedules may deviate)
+    pub ratio: f64,
+    pub layers: Vec<LayerReport>,
+    pub orig_linear_params: usize,
+    pub new_linear_params: usize,
+}
+
+impl Report {
+    pub fn achieved_ratio(&self) -> f64 {
+        1.0 - self.new_linear_params as f64
+            / self.orig_linear_params.max(1) as f64
+    }
+}
+
+/// One layer's compression output, staged for the deterministic merge:
+/// tensors are *named*, not written, so layers can run on any thread.
+#[derive(Clone, Debug)]
+pub struct LayerOut {
+    pub rep: LayerReport,
+    pub mats: Vec<(String, Matrix)>,
+    pub biases: Vec<(String, Vec<f64>)>,
+}
+
+impl LayerOut {
+    pub fn new(layer: usize) -> LayerOut {
+        LayerOut {
+            rep: LayerReport { layer, ..Default::default() },
+            mats: Vec::new(),
+            biases: Vec::new(),
+        }
+    }
+
+    /// Merge another stage's output for the same layer (params add; the
+    /// QK/UD diagnostics come from whichever stage produced them).
+    pub fn absorb(&mut self, other: LayerOut) {
+        self.mats.extend(other.mats);
+        self.biases.extend(other.biases);
+        self.rep.params += other.rep.params;
+        if other.rep.qk_rank != 0 {
+            self.rep.qk_rank = other.rep.qk_rank;
+        }
+        if other.rep.qk_loss != 0.0 {
+            self.rep.qk_loss = other.rep.qk_loss;
+        }
+        if other.rep.ud_loss != 0.0 {
+            self.rep.ud_loss = other.rep.ud_loss;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// layer context
+
+/// Everything a [`Compressor`] may read while compressing one layer.
+pub struct LayerCtx<'a> {
+    pub cfg: &'a MiniConfig,
+    pub weights: &'a Weights,
+    pub calib: &'a CalibSet,
+    pub layer: usize,
+    /// resolved keep fraction for this layer (1 − ratio)
+    pub keep: f64,
+    pub plan: &'a CompressionPlan,
+}
+
+impl LayerCtx<'_> {
+    /// Tensor-name prefix of this layer (`layers.<i>.`).
+    pub fn prefix(&self) -> String {
+        format!("layers.{}.", self.layer)
+    }
+
+    /// Per-module rank: the plan's override if present, else `default`.
+    pub fn rank_for(&self, module: &str, default: usize) -> usize {
+        self.plan.rank_override(module).unwrap_or(default)
+    }
+
+    pub fn matrix(&self, module: &str) -> Result<Matrix> {
+        self.weights.matrix(&format!("{}{module}", self.prefix()))
+    }
+
+    pub fn bias(&self, module: &str) -> Result<Vec<f64>> {
+        self.weights.bias(&format!("{}{module}", self.prefix()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the Compressor trait + registry
+
+/// Resolved rank/param schedule entry for one module (dry-run output).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ResolvedModule {
+    pub module: String,
+    pub rank: usize,
+    pub params: usize,
+}
+
+/// Resolved schedule for one layer.
+#[derive(Clone, Debug)]
+pub struct ResolvedLayer {
+    pub layer: usize,
+    pub ratio: f64,
+    pub modules: Vec<ResolvedModule>,
+}
+
+impl ResolvedLayer {
+    pub fn params(&self) -> usize {
+        self.modules.iter().map(|m| m.params).sum()
+    }
+}
+
+/// A per-layer compression stage. Implementations must be pure w.r.t. the
+/// context (read `ctx.weights`/`ctx.calib`, return named tensors) so the
+/// pipeline can run layers on any thread and still merge bit-identically.
+pub trait Compressor: Send + Sync {
+    /// Registry key (also the TOML stage name).
+    fn name(&self) -> &'static str;
+
+    /// Compress one layer's modules; returns the staged output.
+    fn compress(&self, ctx: &LayerCtx) -> Result<LayerOut>;
+
+    /// Rank/param schedule without touching weights (dry-run validation).
+    fn resolve(&self, cfg: &MiniConfig, plan: &CompressionPlan, keep: f64)
+               -> Vec<ResolvedModule> {
+        let _ = (cfg, plan, keep);
+        Vec::new()
+    }
+}
+
+pub const ATTN_LOCAL: &str = "attn_local";
+pub const ATTN_LATENT: &str = "attn_latent";
+pub const ATTN_LATENT_JOINTVO: &str = "attn_latent_jointvo";
+pub const MLP_LOCAL: &str = "mlp_local";
+pub const MLP_JOINT_UD: &str = "mlp_joint_ud";
+
+/// Every stage registered by [`Registry::builtin`].
+pub const BUILTIN_STAGES: [&str; 5] = [
+    ATTN_LOCAL, ATTN_LATENT, ATTN_LATENT_JOINTVO, MLP_LOCAL, MLP_JOINT_UD,
+];
+
+/// Name-keyed compressor registry. [`Registry::builtin`] holds the paper's
+/// stages; callers may [`Registry::register`] their own before executing a
+/// plan that names them.
+pub struct Registry {
+    map: BTreeMap<String, Arc<dyn Compressor>>,
+}
+
+impl Registry {
+    pub fn empty() -> Registry {
+        Registry { map: BTreeMap::new() }
+    }
+
+    pub fn builtin() -> Registry {
+        let mut r = Registry::empty();
+        r.register(Arc::new(AttnLocal));
+        r.register(Arc::new(AttnLatent { joint_vo: false }));
+        r.register(Arc::new(AttnLatent { joint_vo: true }));
+        r.register(Arc::new(MlpLocal));
+        r.register(Arc::new(MlpJointUd));
+        r
+    }
+
+    pub fn register(&mut self, c: Arc<dyn Compressor>) {
+        self.map.insert(c.name().to_string(), c);
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<dyn Compressor>> {
+        self.map.get(name).cloned().ok_or_else(|| {
+            anyhow!("unknown compressor {name:?} (available: {})",
+                    self.names().join(", "))
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.map.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// built-in stages
+
+/// Local ASVD of the four attention linears (§3.2 baselines).
+struct AttnLocal;
+
+impl Compressor for AttnLocal {
+    fn name(&self) -> &'static str {
+        ATTN_LOCAL
+    }
+
+    fn compress(&self, ctx: &LayerCtx) -> Result<LayerOut> {
+        let p = ctx.prefix();
+        let pk = ctx.plan.precond;
+        let junction = ctx.plan.junction;
+        let blockid = junction == Junction::BlockId;
+        let x_attn = ctx.calib.x(ctx.layer, "attn_x");
+        let x_o = ctx.calib.x(ctx.layer, "o_x");
+        let mut out = LayerOut::new(ctx.layer);
+        // explicit (weight, bias) name pairs — never derived by string
+        // substitution, so weight keys containing 'w' cannot corrupt the
+        // merge
+        let jobs: [(&str, &str); 4] = [
+            ("attn.wq", "attn.bq"), ("attn.wk", "attn.bk"),
+            ("attn.wv", "attn.bv"), ("attn.wo", "attn.bo"),
+        ];
+        for (wname, bname) in jobs {
+            let w = ctx.matrix(wname)?;
+            let b = ctx.bias(bname)?;
+            let x = if wname == "attn.wo" { x_o } else { x_attn };
+            let r = ctx.rank_for(
+                wname, rank::local_rank(w.rows(), w.cols(), ctx.keep,
+                                        blockid));
+            let res = asvd::compress(&w, r, &AsvdOpts {
+                kind: pk, junction, x: Some(x), bias: Some(&b),
+                ..Default::default()
+            });
+            let bias = res.bias.with_context(|| {
+                format!("local ASVD of {p}{wname} returned no bias update")
+            })?;
+            out.mats.push((format!("{p}{wname}"), res.w_hat));
+            out.biases.push((format!("{p}{bname}"), bias));
+            out.rep.params += res.params;
+        }
+        Ok(out)
+    }
+
+    fn resolve(&self, cfg: &MiniConfig, plan: &CompressionPlan, keep: f64)
+               -> Vec<ResolvedModule> {
+        let blockid = plan.junction == Junction::BlockId;
+        let d = cfg.d;
+        ["attn.wq", "attn.wk", "attn.wv", "attn.wo"].iter().map(|m| {
+            let r = plan.rank_override(m)
+                .unwrap_or_else(|| rank::local_rank(d, d, keep, blockid))
+                .clamp(1, d);
+            ResolvedModule {
+                module: (*m).to_string(),
+                rank: r,
+                params: rank::local_params(d, d, r, blockid),
+            }
+        }).collect()
+    }
+}
+
+/// Joint QK Tucker/HOSVD (§4.1 Algorithm 1) plus either split V/O
+/// (paper default) or joint VO (Remark 11 ablation).
+struct AttnLatent {
+    joint_vo: bool,
+}
+
+impl Compressor for AttnLatent {
+    fn name(&self) -> &'static str {
+        if self.joint_vo { ATTN_LATENT_JOINTVO } else { ATTN_LATENT }
+    }
+
+    fn compress(&self, ctx: &LayerCtx) -> Result<LayerOut> {
+        let cfg = ctx.cfg;
+        let (d, dh, h) = (cfg.d, cfg.d_h(), cfg.n_heads);
+        let p = ctx.prefix();
+        let pk = ctx.plan.precond;
+        let junction = ctx.plan.junction;
+        let blockid = junction == Junction::BlockId;
+        let x_attn = ctx.calib.x(ctx.layer, "attn_x");
+        let x_o = ctx.calib.x(ctx.layer, "o_x");
+        let mut out = LayerOut::new(ctx.layer);
+
+        let wq = ctx.matrix("attn.wq")?;
+        let wk = ctx.matrix("attn.wk")?;
+        let wv = ctx.matrix("attn.wv")?;
+        let wo = ctx.matrix("attn.wo")?;
+        let bq = ctx.bias("attn.bq")?;
+        let bk = ctx.bias("attn.bk")?;
+        let bv = ctx.bias("attn.bv")?;
+        let bo = ctx.bias("attn.bo")?;
+
+        // ---- joint QK (§4.1, Alg 1)
+        let r_qk = ctx.rank_for(
+            "attn.qk", rank::joint_qk_rank(d, dh, h, h, ctx.keep, blockid));
+        let jq = joint_qk::compress(&wq, &wk, h, dh, r_qk, r_qk,
+                                    &JointQkOpts {
+                                        kind: pk,
+                                        n_iter: ctx.plan.qk_iters,
+                                        x: Some(x_attn),
+                                        bq: Some(&bq), bk: Some(&bk),
+                                        ..Default::default()
+                                    });
+        let layer_tag = ctx.layer;
+        out.mats.push((format!("{p}attn.wq"), jq.wq_hat));
+        out.mats.push((format!("{p}attn.wk"), jq.wk_hat));
+        out.biases.push((format!("{p}attn.bq"), jq.bq_bias.with_context(
+            || format!("joint QK on layer {layer_tag} produced no bias \
+                        update (calibration activations missing?)"))?));
+        out.biases.push((format!("{p}attn.bk"), jq.bk_bias.with_context(
+            || format!("joint QK on layer {layer_tag} produced no bk bias \
+                        update"))?));
+        out.rep.qk_rank = r_qk;
+        out.rep.qk_loss = *jq.losses.last().with_context(
+            || format!("joint QK on layer {layer_tag} recorded no \
+                        attention-map loss (zero iterations?)"))?;
+        out.rep.params += jq.params;
+
+        // ---- V / O
+        if self.joint_vo {
+            let r_vo = ctx.rank_for(
+                "attn.vo", rank::local_rank(d, d, ctx.keep, blockid));
+            let jv = joint_vo::compress(&wv, &wo, h, dh, r_vo, r_vo,
+                                        &JointVoOpts {
+                                            kind: pk,
+                                            n_iter: ctx.plan.ud_iters,
+                                            x: Some(x_attn),
+                                            bv: Some(&bv), bo: Some(&bo),
+                                            ..Default::default()
+                                        });
+            out.mats.push((format!("{p}attn.wv"), jv.wv_hat));
+            out.mats.push((format!("{p}attn.wo"), jv.wo_hat));
+            out.biases.push((format!("{p}attn.bo"), jv.bo_bias
+                .with_context(|| format!("joint VO on layer {layer_tag} \
+                                          produced no bias update"))?));
+            out.rep.params += jv.params;
+        } else {
+            // paper default: split V/O at the latent junction
+            let r_v = ctx.rank_for(
+                "attn.wv", rank::local_rank(d, d, ctx.keep, blockid));
+            let rv = asvd::compress(&wv, r_v, &AsvdOpts {
+                kind: pk, junction, x: Some(x_attn), bias: Some(&bv),
+                ..Default::default()
+            });
+            let r_o = ctx.rank_for(
+                "attn.wo", rank::local_rank(d, d, ctx.keep, blockid));
+            let ro = asvd::compress(&wo, r_o, &AsvdOpts {
+                kind: pk, junction, x: Some(x_o), bias: Some(&bo),
+                ..Default::default()
+            });
+            out.mats.push((format!("{p}attn.wv"), rv.w_hat));
+            out.biases.push((format!("{p}attn.bv"), rv.bias.with_context(
+                || format!("V compression on layer {layer_tag} returned \
+                            no bias"))?));
+            out.mats.push((format!("{p}attn.wo"), ro.w_hat));
+            out.biases.push((format!("{p}attn.bo"), ro.bias.with_context(
+                || format!("O compression on layer {layer_tag} returned \
+                            no bias"))?));
+            out.rep.params += rv.params + ro.params;
+        }
+        Ok(out)
+    }
+
+    fn resolve(&self, cfg: &MiniConfig, plan: &CompressionPlan, keep: f64)
+               -> Vec<ResolvedModule> {
+        let blockid = plan.junction == Junction::BlockId;
+        let (d, dh, h) = (cfg.d, cfg.d_h(), cfg.n_heads);
+        let r_qk = plan.rank_override("attn.qk")
+            .unwrap_or_else(|| rank::joint_qk_rank(d, dh, h, h, keep,
+                                                   blockid))
+            .clamp(1, d);
+        let mut out = vec![ResolvedModule {
+            module: "attn.qk".into(),
+            rank: r_qk,
+            params: rank::joint_qk_params(d, dh, h, h, r_qk, r_qk, blockid),
+        }];
+        if self.joint_vo {
+            let r_vo = plan.rank_override("attn.vo")
+                .unwrap_or_else(|| rank::local_rank(d, d, keep, blockid))
+                .clamp(1, d);
+            out.push(ResolvedModule {
+                module: "attn.vo".into(),
+                rank: r_vo,
+                params: rank::joint_vo_params(d, d, h, dh, r_vo, r_vo),
+            });
+        } else {
+            for m in ["attn.wv", "attn.wo"] {
+                let r = plan.rank_override(m)
+                    .unwrap_or_else(|| rank::local_rank(d, d, keep, blockid))
+                    .clamp(1, d);
+                out.push(ResolvedModule {
+                    module: m.to_string(),
+                    rank: r,
+                    params: rank::local_params(d, d, r, blockid),
+                });
+            }
+        }
+        out
+    }
+}
+
+/// Local ASVD of the MLP pair; the down-projection is fit against the
+/// post-activation hidden state σ(Wu x + bu) of the *original* Wu.
+struct MlpLocal;
+
+impl Compressor for MlpLocal {
+    fn name(&self) -> &'static str {
+        MLP_LOCAL
+    }
+
+    fn compress(&self, ctx: &LayerCtx) -> Result<LayerOut> {
+        let p = ctx.prefix();
+        let pk = ctx.plan.precond;
+        let junction = ctx.plan.junction;
+        let blockid = junction == Junction::BlockId;
+        let x_mlp = ctx.calib.x(ctx.layer, "mlp_x");
+        let mut out = LayerOut::new(ctx.layer);
+
+        let wu = ctx.matrix("mlp.wu")?;
+        let bu = ctx.bias("mlp.bu")?;
+        let wd = ctx.matrix("mlp.wd")?;
+        let bd = ctx.bias("mlp.bd")?;
+
+        let r_u = ctx.rank_for(
+            "mlp.wu", rank::local_rank(wu.rows(), wu.cols(), ctx.keep,
+                                       blockid));
+        let res_u = asvd::compress(&wu, r_u, &AsvdOpts {
+            kind: pk, junction, x: Some(x_mlp), bias: Some(&bu),
+            ..Default::default()
+        });
+        out.mats.push((format!("{p}mlp.wu"), res_u.w_hat));
+        out.biases.push((format!("{p}mlp.bu"), res_u.bias.with_context(
+            || format!("Wu compression on layer {} returned no bias",
+                       ctx.layer))?));
+        out.rep.params += res_u.params;
+
+        // wd sees σ(Wu_orig x + bu)
+        let z = mlp_hidden(ctx)?;
+        let r_d = ctx.rank_for(
+            "mlp.wd", rank::local_rank(wd.rows(), wd.cols(), ctx.keep,
+                                       blockid));
+        let res_d = asvd::compress(&wd, r_d, &AsvdOpts {
+            kind: pk, junction, x: Some(&z), bias: Some(&bd),
+            ..Default::default()
+        });
+        out.mats.push((format!("{p}mlp.wd"), res_d.w_hat));
+        out.biases.push((format!("{p}mlp.bd"), res_d.bias.with_context(
+            || format!("Wd compression on layer {} returned no bias",
+                       ctx.layer))?));
+        out.rep.params += res_d.params;
+        Ok(out)
+    }
+
+    fn resolve(&self, cfg: &MiniConfig, plan: &CompressionPlan, keep: f64)
+               -> Vec<ResolvedModule> {
+        resolve_mlp(cfg, plan, keep)
+    }
+}
+
+/// SparseLLM-style decoupled joint Up/Down compression (§4.3).
+struct MlpJointUd;
+
+impl Compressor for MlpJointUd {
+    fn name(&self) -> &'static str {
+        MLP_JOINT_UD
+    }
+
+    fn compress(&self, ctx: &LayerCtx) -> Result<LayerOut> {
+        let cfg = ctx.cfg;
+        let (d, di) = (cfg.d, cfg.d_i);
+        let p = ctx.prefix();
+        let junction = ctx.plan.junction;
+        let blockid = junction == Junction::BlockId;
+        let x_mlp = ctx.calib.x(ctx.layer, "mlp_x");
+        let mut out = LayerOut::new(ctx.layer);
+
+        let wu = ctx.matrix("mlp.wu")?;
+        let bu = ctx.bias("mlp.bu")?;
+        let wd = ctx.matrix("mlp.wd")?;
+        let bd = ctx.bias("mlp.bd")?;
+
+        let r_u = ctx.rank_for(
+            "mlp.wu", rank::local_rank(di, d, ctx.keep, blockid));
+        let r_d = ctx.rank_for(
+            "mlp.wd", rank::local_rank(d, di, ctx.keep, blockid));
+        let ud = joint_ud::compress(&wu, &bu, &wd, &bd, x_mlp, r_u, r_d,
+                                    &JointUdOpts {
+                                        n_iter: ctx.plan.ud_iters,
+                                        junction,
+                                        ..Default::default()
+                                    });
+        out.mats.push((format!("{p}mlp.wu"), ud.wu_hat));
+        out.biases.push((format!("{p}mlp.bu"), ud.bu));
+        out.mats.push((format!("{p}mlp.wd"), ud.wd_hat));
+        out.biases.push((format!("{p}mlp.bd"), ud.bd));
+        out.rep.ud_loss = ud.losses.iter().copied()
+            .fold(f64::INFINITY, f64::min);
+        out.rep.params += ud.params;
+        Ok(out)
+    }
+
+    fn resolve(&self, cfg: &MiniConfig, plan: &CompressionPlan, keep: f64)
+               -> Vec<ResolvedModule> {
+        resolve_mlp(cfg, plan, keep)
+    }
+}
+
+/// Both MLP stages share the rank/param schedule (the joint refit keeps
+/// the same factor shapes).
+fn resolve_mlp(cfg: &MiniConfig, plan: &CompressionPlan, keep: f64)
+               -> Vec<ResolvedModule> {
+    let blockid = plan.junction == Junction::BlockId;
+    let (d, di) = (cfg.d, cfg.d_i);
+    let r_u = plan.rank_override("mlp.wu")
+        .unwrap_or_else(|| rank::local_rank(di, d, keep, blockid))
+        .clamp(1, d.min(di));
+    let r_d = plan.rank_override("mlp.wd")
+        .unwrap_or_else(|| rank::local_rank(d, di, keep, blockid))
+        .clamp(1, d.min(di));
+    vec![
+        ResolvedModule { module: "mlp.wu".into(), rank: r_u,
+                         params: rank::local_params(di, d, r_u, blockid) },
+        ResolvedModule { module: "mlp.wd".into(), rank: r_d,
+                         params: rank::local_params(d, di, r_d, blockid) },
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// post-stages (App I wiring)
+
+/// A whole-model post-stage applied to every compressed weight of a layer
+/// after the attention/MLP stages ran.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PostOp {
+    /// Add a sparse correction D to each compressed Ŵ: hard top-κ
+    /// projected GD on the residual W − Ŵ against the module's activation
+    /// covariance (App I, Eq 237). κ = `keep_frac` · numel; the kept
+    /// entries count toward the layer's parameter total.
+    Sparse { keep_frac: f64, n_iter: usize },
+    /// Chunk-wise `bits`-bit uniform quantization of each compressed
+    /// weight (App I.1, Eq 242) — quantization-aware serving variants.
+    Quant { bits: u32, chunk: usize },
+}
+
+impl PostOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PostOp::Sparse { .. } => "sparse",
+            PostOp::Quant { .. } => "quant",
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            PostOp::Sparse { keep_frac, n_iter } => {
+                ensure!((0.0..=1.0).contains(keep_frac) && *keep_frac > 0.0,
+                        "sparse keep_frac {keep_frac} outside (0, 1]");
+                ensure!(*n_iter >= 1, "sparse n_iter must be >= 1");
+            }
+            PostOp::Quant { bits, chunk } => {
+                ensure!((1..=16).contains(bits),
+                        "quant bits {bits} outside 1..=16");
+                ensure!(*chunk >= 1, "quant chunk must be >= 1");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn apply(&self, ctx: &LayerCtx, out: &mut LayerOut) -> Result<()> {
+        match self {
+            PostOp::Sparse { keep_frac, n_iter } => {
+                let prefix = ctx.prefix();
+                // one covariance per distinct calibration input — the
+                // q/k/v modules all share attn_x
+                let mut covs: BTreeMap<&'static str, Matrix> =
+                    BTreeMap::new();
+                let mut added = 0usize;
+                for (name, m) in out.mats.iter_mut() {
+                    let name = name.clone();
+                    let module =
+                        name.strip_prefix(&prefix).unwrap_or(name.as_str());
+                    let kind = sparse_input_kind(module)?;
+                    if !covs.contains_key(kind) {
+                        let x = module_input(ctx, module)?;
+                        covs.insert(kind, x.covariance(1e-6));
+                    }
+                    let c = covs.get(kind).expect("inserted above");
+                    let w = ctx.weights.matrix(&name)?;
+                    let resid = w.sub(m);
+                    let kappa = ((keep_frac * resid.data().len() as f64)
+                        as usize).max(1);
+                    let (dmat, _) =
+                        sparse::projected_gd(&resid, c, kappa, *n_iter);
+                    added += sparse::nnz(&dmat);
+                    *m = m.add(&dmat);
+                }
+                out.rep.params += added;
+            }
+            PostOp::Quant { bits, chunk } => {
+                for (_, m) in out.mats.iter_mut() {
+                    *m = quant::quantize_uniform(m, *bits, *chunk);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Which calibration stream a module's input comes from (cache key for
+/// the sparse post-stage).
+fn sparse_input_kind(module: &str) -> Result<&'static str> {
+    Ok(match module {
+        "attn.wq" | "attn.wk" | "attn.wv" => "attn_x",
+        "attn.wo" => "o_x",
+        "mlp.wu" => "mlp_x",
+        "mlp.wd" => "mlp_z",
+        other => bail!("no calibration input known for module {other:?}"),
+    })
+}
+
+/// σ(Wu x + bu) through the *original* up-projection — the input the
+/// down-projection sees (shared by [`MlpLocal`] and the sparse
+/// post-stage).
+fn mlp_hidden(ctx: &LayerCtx) -> Result<Matrix> {
+    let wu = ctx.matrix("mlp.wu")?;
+    let bu = ctx.bias("mlp.bu")?;
+    let mut z = wu.matmul(ctx.calib.x(ctx.layer, "mlp_x"));
+    for r in 0..z.rows() {
+        let bi = bu[r];
+        for v in z.row_mut(r) {
+            *v = (*v + bi).max(0.0);
+        }
+    }
+    Ok(z)
+}
+
+/// Calibration input of a module (the activations its weight multiplies).
+fn module_input(ctx: &LayerCtx, module: &str) -> Result<Matrix> {
+    Ok(match sparse_input_kind(module)? {
+        "mlp_z" => mlp_hidden(ctx)?,
+        kind => ctx.calib.x(ctx.layer, kind).clone(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// the plan
+
+/// A whole-model compression recipe as data. See the module docs for the
+/// TOML schema; [`super::pipeline::Method::plan`] builds the eight
+/// historical presets.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompressionPlan {
+    /// identifier (report rows, filenames)
+    pub name: String,
+    /// optional pretty display label (falls back to `name`)
+    pub label: Option<String>,
+    /// attention-stage registry name
+    pub attn: String,
+    /// MLP-stage registry name
+    pub mlp: String,
+    pub precond: Precond,
+    pub junction: Junction,
+    /// default target compression ratio (fraction of params removed)
+    pub ratio: f64,
+    /// optional per-layer ratio schedule; layer `i` uses entry
+    /// `min(i, len-1)`, empty = uniform `ratio`
+    pub layer_ratios: Vec<f64>,
+    /// per-module rank overrides, keyed by module (`attn.wq`, `attn.qk`,
+    /// `attn.vo`, `mlp.wu`, `mlp.wd`)
+    pub ranks: BTreeMap<String, usize>,
+    pub qk_iters: usize,
+    pub ud_iters: usize,
+    /// post-stages applied in order after the attention/MLP stages
+    pub post: Vec<PostOp>,
+}
+
+impl Default for CompressionPlan {
+    /// The paper's §5 protocol (LatentLLM / RootCov / block identity).
+    fn default() -> Self {
+        CompressionPlan {
+            name: "latentllm".into(),
+            label: None,
+            attn: ATTN_LATENT.into(),
+            mlp: MLP_JOINT_UD.into(),
+            precond: Precond::RootCov,
+            junction: Junction::BlockId,
+            ratio: 0.3,
+            layer_ratios: Vec::new(),
+            ranks: BTreeMap::new(),
+            qk_iters: 8,
+            ud_iters: 4,
+            post: Vec::new(),
+        }
+    }
+}
+
+impl CompressionPlan {
+    pub fn named(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    pub fn labeled(mut self, label: &str) -> Self {
+        self.label = Some(label.to_string());
+        self
+    }
+
+    /// Re-target the plan at a uniform `ratio`. Clears any per-layer
+    /// schedule so the new target actually takes effect (set
+    /// [`Self::with_layer_ratios`] *after* this to combine both).
+    pub fn with_ratio(mut self, ratio: f64) -> Self {
+        self.ratio = ratio;
+        self.layer_ratios.clear();
+        self
+    }
+
+    pub fn with_layer_ratios(mut self, ratios: Vec<f64>) -> Self {
+        self.layer_ratios = ratios;
+        self
+    }
+
+    pub fn with_iters(mut self, qk: usize, ud: usize) -> Self {
+        self.qk_iters = qk;
+        self.ud_iters = ud;
+        self
+    }
+
+    pub fn with_post(mut self, op: PostOp) -> Self {
+        self.post.push(op);
+        self
+    }
+
+    pub fn with_rank(mut self, module: &str, rank: usize) -> Self {
+        self.ranks.insert(module.to_string(), rank);
+        self
+    }
+
+    pub fn display_label(&self) -> &str {
+        self.label.as_deref().unwrap_or(&self.name)
+    }
+
+    pub fn rank_override(&self, module: &str) -> Option<usize> {
+        self.ranks.get(module).copied()
+    }
+
+    /// Target ratio of layer `i` under the schedule.
+    pub fn layer_ratio(&self, layer: usize) -> f64 {
+        if self.layer_ratios.is_empty() {
+            self.ratio
+        } else {
+            self.layer_ratios[layer.min(self.layer_ratios.len() - 1)]
+        }
+    }
+
+    /// Cheap structural validation (stage names, ratio bounds, post-op
+    /// parameters). Run by [`compress_plan_on`] and `--dry-run`.
+    pub fn validate(&self, registry: &Registry) -> Result<()> {
+        registry.get(&self.attn).context("attention stage")?;
+        registry.get(&self.mlp).context("mlp stage")?;
+        for r in self.layer_ratios.iter().chain(std::iter::once(&self.ratio))
+        {
+            ensure!((0.0..1.0).contains(r),
+                    "compression ratio {r} outside [0, 1)");
+        }
+        ensure!(self.qk_iters >= 1, "qk_iters must be >= 1");
+        ensure!(self.ud_iters >= 1, "ud_iters must be >= 1");
+        for (module, r) in &self.ranks {
+            ensure!(*r >= 1, "rank override for {module:?} must be >= 1");
+        }
+        for op in &self.post {
+            op.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Resolve the full rank/param schedule without touching weights.
+    pub fn resolve(&self, registry: &Registry, cfg: &MiniConfig)
+                   -> Result<Vec<ResolvedLayer>> {
+        self.validate(registry)?;
+        let attn = registry.get(&self.attn)?;
+        let mlp = registry.get(&self.mlp)?;
+        Ok((0..cfg.n_layers).map(|i| {
+            let ratio = self.layer_ratio(i);
+            let keep = 1.0 - ratio;
+            let mut modules = attn.resolve(cfg, self, keep);
+            modules.extend(mlp.resolve(cfg, self, keep));
+            ResolvedLayer { layer: i, ratio, modules }
+        }).collect())
+    }
+
+    // -- TOML serde ---------------------------------------------------------
+
+    /// Parse from a flat TOML table under `prefix` (e.g. `plan` for
+    /// standalone files, `compress` for config sections), starting from
+    /// `defaults`. Absent keys keep their default.
+    pub fn from_table_with(t: &Table, prefix: &str,
+                           mut plan: CompressionPlan)
+                           -> Result<CompressionPlan> {
+        let key = |k: &str| -> String {
+            if prefix.is_empty() { k.to_string() } else {
+                format!("{prefix}.{k}")
+            }
+        };
+        if let Some(v) = t.get(&key("name")).and_then(|v| v.as_str()) {
+            plan.name = v.to_string();
+        }
+        if let Some(v) = t.get(&key("label")).and_then(|v| v.as_str()) {
+            plan.label = Some(v.to_string());
+        }
+        if let Some(v) = t.get(&key("attn")).and_then(|v| v.as_str()) {
+            plan.attn = v.to_string();
+        }
+        if let Some(v) = t.get(&key("mlp")).and_then(|v| v.as_str()) {
+            plan.mlp = v.to_string();
+        }
+        if let Some(v) = t.get(&key("precond")).and_then(|v| v.as_str()) {
+            plan.precond = Precond::from_name(v)
+                .with_context(|| format!("unknown precond {v:?}"))?;
+        }
+        if let Some(v) = t.get(&key("junction")).and_then(|v| v.as_str()) {
+            plan.junction = Junction::from_name(v)
+                .with_context(|| format!("unknown junction {v:?}"))?;
+        }
+        if let Some(v) = t.get(&key("ratio")).and_then(|v| v.as_f64()) {
+            plan.ratio = v;
+        }
+        if let Some(Value::Arr(a)) = t.get(&key("layer_ratios")) {
+            plan.layer_ratios = a.iter()
+                .map(|v| v.as_f64()
+                    .context("layer_ratios entries must be numbers"))
+                .collect::<Result<Vec<f64>>>()?;
+        }
+        if let Some(v) = t.get(&key("qk_iters")).and_then(|v| v.as_i64()) {
+            ensure!(v >= 1, "qk_iters must be >= 1");
+            plan.qk_iters = v as usize;
+        }
+        if let Some(v) = t.get(&key("ud_iters")).and_then(|v| v.as_i64()) {
+            ensure!(v >= 1, "ud_iters must be >= 1");
+            plan.ud_iters = v as usize;
+        }
+        // [<prefix>.ranks]: module = rank
+        let rank_prefix = format!("{}.", key("ranks"));
+        for (k, v) in t.iter() {
+            if let Some(module) = k.strip_prefix(&rank_prefix) {
+                let r = v.as_i64().with_context(
+                    || format!("rank override {k} must be an integer"))?;
+                ensure!(r >= 1, "rank override {k} must be >= 1");
+                plan.ranks.insert(module.to_string(), r as usize);
+            }
+        }
+        // post = ["sparse", "quant"], parameters in [<prefix>.sparse] /
+        // [<prefix>.quant]
+        if let Some(Value::Arr(a)) = t.get(&key("post")) {
+            plan.post.clear();
+            for v in a {
+                let name = v.as_str()
+                    .context("post entries must be stage names")?;
+                let op = match name {
+                    "sparse" => PostOp::Sparse {
+                        keep_frac: t.get(&key("sparse.keep_frac"))
+                            .and_then(|v| v.as_f64()).unwrap_or(0.05),
+                        n_iter: t.get(&key("sparse.n_iter"))
+                            .and_then(|v| v.as_i64()).unwrap_or(30)
+                            .max(1) as usize,
+                    },
+                    "quant" => PostOp::Quant {
+                        bits: t.get(&key("quant.bits"))
+                            .and_then(|v| v.as_i64()).unwrap_or(8)
+                            .clamp(1, 16) as u32,
+                        chunk: t.get(&key("quant.chunk"))
+                            .and_then(|v| v.as_i64()).unwrap_or(64)
+                            .max(1) as usize,
+                    },
+                    other => bail!("unknown post stage {other:?} \
+                                    (expected sparse|quant)"),
+                };
+                plan.post.push(op);
+            }
+        }
+        Ok(plan)
+    }
+
+    pub fn from_table(t: &Table, prefix: &str) -> Result<CompressionPlan> {
+        Self::from_table_with(t, prefix, CompressionPlan::default())
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<CompressionPlan>
+    {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read plan {}", path.display()))?;
+        Self::from_table(&toml::parse(&text)?, "plan")
+            .with_context(|| format!("parse plan {}", path.display()))
+    }
+
+    /// Serialize to the `[plan]` TOML schema ([`CompressionPlan::load`]
+    /// round-trips it).
+    pub fn to_toml(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "[plan]");
+        let _ = writeln!(s, "name = \"{}\"", self.name);
+        if let Some(l) = &self.label {
+            let _ = writeln!(s, "label = \"{l}\"");
+        }
+        let _ = writeln!(s, "attn = \"{}\"", self.attn);
+        let _ = writeln!(s, "mlp = \"{}\"", self.mlp);
+        let _ = writeln!(s, "precond = \"{}\"", self.precond.name());
+        let _ = writeln!(s, "junction = \"{}\"", self.junction.name());
+        let _ = writeln!(s, "ratio = {}", self.ratio);
+        if !self.layer_ratios.is_empty() {
+            let items: Vec<String> = self.layer_ratios.iter()
+                .map(|r| format!("{r}")).collect();
+            let _ = writeln!(s, "layer_ratios = [{}]", items.join(", "));
+        }
+        let _ = writeln!(s, "qk_iters = {}", self.qk_iters);
+        let _ = writeln!(s, "ud_iters = {}", self.ud_iters);
+        if !self.post.is_empty() {
+            let items: Vec<String> = self.post.iter()
+                .map(|op| format!("\"{}\"", op.name())).collect();
+            let _ = writeln!(s, "post = [{}]", items.join(", "));
+            for op in &self.post {
+                match op {
+                    PostOp::Sparse { keep_frac, n_iter } => {
+                        let _ = writeln!(s, "\n[plan.sparse]");
+                        let _ = writeln!(s, "keep_frac = {keep_frac}");
+                        let _ = writeln!(s, "n_iter = {n_iter}");
+                    }
+                    PostOp::Quant { bits, chunk } => {
+                        let _ = writeln!(s, "\n[plan.quant]");
+                        let _ = writeln!(s, "bits = {bits}");
+                        let _ = writeln!(s, "chunk = {chunk}");
+                    }
+                }
+            }
+        }
+        if !self.ranks.is_empty() {
+            let _ = writeln!(s, "\n[plan.ranks]");
+            for (module, r) in &self.ranks {
+                let _ = writeln!(s, "{module} = {r}");
+            }
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// execution
+
+/// Layer-completion hook; the layer-parallel pool invokes it from worker
+/// threads as each layer finishes (hence `Send + Sync`). Completion order
+/// is pool order, not necessarily layer order.
+pub trait ProgressObserver: Send + Sync {
+    fn layer_done(&self, layer: usize, n_layers: usize, rep: &LayerReport);
+}
+
+/// Execute `plan` over every layer of `weights` on the global [`Pool`]
+/// with the builtin [`Registry`]. Returns the effective (reconstructed
+/// Ŵ + updated biases) weight set plus the report.
+pub fn compress_plan(cfg: &MiniConfig, weights: &Weights, calib: &CalibSet,
+                     plan: &CompressionPlan) -> Result<(Weights, Report)> {
+    compress_plan_on(&Pool::global(), &Registry::builtin(), cfg, weights,
+                     calib, plan, None)
+}
+
+/// [`compress_plan`] with an explicit pool, registry, and optional
+/// progress observer. Layers run in parallel; results merge in layer
+/// order, so the output is bit-identical to the serial path at any pool
+/// width (pinned by `layer_parallel_matches_serial_bitwise`).
+pub fn compress_plan_on(pool: &Pool, registry: &Registry, cfg: &MiniConfig,
+                        weights: &Weights, calib: &CalibSet,
+                        plan: &CompressionPlan,
+                        observer: Option<&dyn ProgressObserver>)
+                        -> Result<(Weights, Report)> {
+    plan.validate(registry)?;
+    let attn = registry.get(&plan.attn)?;
+    let mlp = registry.get(&plan.mlp)?;
+    let n_layers = cfg.n_layers;
+    let layer_outs = pool.run(n_layers, |i| -> Result<LayerOut> {
+        let ctx = LayerCtx {
+            cfg, weights, calib,
+            layer: i,
+            keep: 1.0 - plan.layer_ratio(i),
+            plan,
+        };
+        let mut out = attn.compress(&ctx)
+            .with_context(|| format!("stage {} on layer {i}", plan.attn))?;
+        out.absorb(mlp.compress(&ctx)
+            .with_context(|| format!("stage {} on layer {i}", plan.mlp))?);
+        for op in &plan.post {
+            op.apply(&ctx, &mut out).with_context(
+                || format!("post stage {} on layer {i}", op.name()))?;
+        }
+        if let Some(obs) = observer {
+            obs.layer_done(i, n_layers, &out.rep);
+        }
+        Ok(out)
+    });
+    let mut report = Report {
+        plan: plan.display_label().to_string(),
+        ratio: plan.ratio,
+        layers: Vec::new(),
+        orig_linear_params: cfg.linear_params(),
+        new_linear_params: 0,
+    };
+    let mut out = weights.clone();
+    for (i, res) in layer_outs.into_iter().enumerate() {
+        let lo = res.with_context(|| format!("compress layer {i}"))?;
+        for (name, m) in &lo.mats {
+            out.set_matrix(name, m);
+        }
+        for (name, b) in &lo.biases {
+            out.set_bias(name, b);
+        }
+        report.new_linear_params += lo.rep.params;
+        report.layers.push(lo.rep);
+    }
+    Ok((out, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::pipeline::tests_support::random_weights;
+    use crate::model::config::OPT_MINI_S;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn full_plan() -> CompressionPlan {
+        CompressionPlan::default()
+            .named("mixed")
+            .labeled("Mixed sweep")
+            .with_ratio(0.25)
+            .with_layer_ratios(vec![0.2, 0.5])
+            .with_iters(3, 2)
+            .with_rank("attn.qk", 48)
+            .with_rank("mlp.wu", 24)
+            .with_post(PostOp::Sparse { keep_frac: 0.02, n_iter: 10 })
+            .with_post(PostOp::Quant { bits: 8, chunk: 64 })
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        let plan = full_plan();
+        let text = plan.to_toml();
+        let parsed = CompressionPlan::from_table(
+            &toml::parse(&text).unwrap(), "plan").unwrap();
+        assert_eq!(plan, parsed, "plan ↔ TOML round trip:\n{text}");
+        // a second round trip is a fixed point
+        assert_eq!(parsed.to_toml(), text);
+    }
+
+    #[test]
+    fn registry_resolves_every_builtin() {
+        let reg = Registry::builtin();
+        for name in BUILTIN_STAGES {
+            let c = reg.get(name).unwrap();
+            assert_eq!(c.name(), name);
+        }
+        assert_eq!(reg.names().len(), BUILTIN_STAGES.len());
+        let err = reg.get("nope").unwrap_err().to_string();
+        assert!(err.contains("attn_latent"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_malformed_plans() {
+        let reg = Registry::builtin();
+        let bad_stage = CompressionPlan {
+            attn: "nope".into(), ..CompressionPlan::default()
+        };
+        assert!(bad_stage.validate(&reg).is_err());
+        let bad_ratio = CompressionPlan::default().with_ratio(1.5);
+        assert!(bad_ratio.validate(&reg).is_err());
+        let bad_layer = CompressionPlan::default()
+            .with_layer_ratios(vec![0.2, -0.1]);
+        assert!(bad_layer.validate(&reg).is_err());
+        let bad_post = CompressionPlan::default()
+            .with_post(PostOp::Sparse { keep_frac: 0.0, n_iter: 5 });
+        assert!(bad_post.validate(&reg).is_err());
+        let bad_quant = CompressionPlan::default()
+            .with_post(PostOp::Quant { bits: 32, chunk: 64 });
+        assert!(bad_quant.validate(&reg).is_err());
+        assert!(full_plan().validate(&reg).is_ok());
+    }
+
+    #[test]
+    fn resolve_hits_param_target() {
+        let cfg = OPT_MINI_S;
+        let reg = Registry::builtin();
+        for plan in [CompressionPlan::default().with_ratio(0.3),
+                     CompressionPlan {
+                         attn: ATTN_LOCAL.into(),
+                         mlp: MLP_LOCAL.into(),
+                         junction: Junction::Left,
+                         ..CompressionPlan::default()
+                     }.with_ratio(0.3)] {
+            let layers = plan.resolve(&reg, &cfg).unwrap();
+            assert_eq!(layers.len(), cfg.n_layers);
+            let total: usize = layers.iter().map(|l| l.params()).sum();
+            let target = 0.7 * cfg.linear_params() as f64;
+            let rel = (total as f64 - target).abs() / target;
+            assert!(rel < 0.1,
+                    "{}: resolved {total} vs target {target}", plan.attn);
+        }
+    }
+
+    #[test]
+    fn with_ratio_retargets_uniformly() {
+        // a stale per-layer schedule must not silently swallow the new
+        // target (--ratio overrides, table2/fig5 ratio sweeps)
+        let p = CompressionPlan::default()
+            .with_layer_ratios(vec![0.1, 0.7])
+            .with_ratio(0.4);
+        assert!(p.layer_ratios.is_empty());
+        assert_eq!(p.layer_ratio(0), 0.4);
+        assert_eq!(p.layer_ratio(1), 0.4);
+    }
+
+    #[test]
+    fn resolve_respects_overrides_and_schedule() {
+        let cfg = OPT_MINI_S;
+        let reg = Registry::builtin();
+        let plan = CompressionPlan::default()
+            .with_layer_ratios(vec![0.2, 0.6])
+            .with_rank("mlp.wu", 17);
+        let layers = plan.resolve(&reg, &cfg).unwrap();
+        assert_eq!(layers[0].ratio, 0.2);
+        assert_eq!(layers[1].ratio, 0.6);
+        // the shallow layer keeps a larger QK rank than the deep one
+        let qk = |l: &ResolvedLayer| l.modules.iter()
+            .find(|m| m.module == "attn.qk").unwrap().rank;
+        assert!(qk(&layers[0]) > qk(&layers[1]));
+        for l in &layers {
+            let wu = l.modules.iter().find(|m| m.module == "mlp.wu")
+                .unwrap();
+            assert_eq!(wu.rank, 17, "override applies to every layer");
+        }
+    }
+
+    struct Counter(AtomicUsize);
+    impl ProgressObserver for Counter {
+        fn layer_done(&self, _layer: usize, _n: usize, rep: &LayerReport) {
+            assert!(rep.params > 0);
+            self.0.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    #[test]
+    fn observer_reports_every_layer() {
+        let cfg = OPT_MINI_S;
+        let w = random_weights(&cfg, 71);
+        let cal = CalibSet::synthetic(cfg.n_layers, cfg.d, 160, 3);
+        let plan = CompressionPlan::default().with_ratio(0.3)
+            .with_iters(2, 1);
+        let obs = Counter(AtomicUsize::new(0));
+        let (_, rep) = compress_plan_on(&Pool::new(2), &Registry::builtin(),
+                                        &cfg, &w, &cal, &plan, Some(&obs))
+            .unwrap();
+        assert_eq!(obs.0.load(Ordering::SeqCst), cfg.n_layers);
+        assert_eq!(rep.layers.len(), cfg.n_layers);
+    }
+
+    #[test]
+    fn per_layer_schedule_changes_ranks() {
+        let cfg = OPT_MINI_S;
+        let w = random_weights(&cfg, 72);
+        let cal = CalibSet::synthetic(cfg.n_layers, cfg.d, 160, 4);
+        let plan = CompressionPlan::default()
+            .with_layer_ratios(vec![0.15, 0.6])
+            .with_iters(2, 1);
+        let (nw, rep) = compress_plan(&cfg, &w, &cal, &plan).unwrap();
+        assert!(rep.layers[0].qk_rank > rep.layers[1].qk_rank,
+                "lighter ratio must buy a larger rank: {} vs {}",
+                rep.layers[0].qk_rank, rep.layers[1].qk_rank);
+        assert!(rep.layers[0].params > rep.layers[1].params);
+        for name in nw.names() {
+            let t = nw.tensor(name).unwrap();
+            if let Ok(data) = t.as_f32() {
+                assert!(data.iter().all(|v| v.is_finite()),
+                        "{name} has non-finite values");
+            }
+        }
+    }
+}

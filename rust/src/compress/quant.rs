@@ -1,6 +1,10 @@
 //! Quantization-aware distillation of low-rank factors (paper App I.1):
 //! chunk-wise q-bit uniform quantization (Eq 242) + STE-style projected
 //! gradient refinement of (B, A) against the activation loss.
+//!
+//! The whole-model path reaches this through the `quant` post-stage of
+//! [`super::plan`] (`PostOp::Quant` applies [`quantize_uniform`] to every
+//! compressed effective weight).
 
 use crate::tensor::eig::eigh;
 use crate::tensor::linalg::act_loss;

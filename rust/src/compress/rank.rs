@@ -55,6 +55,15 @@ pub fn joint_qk_params(d: usize, d_h: usize, n_q: usize, n_kv: usize,
     }
 }
 
+/// Joint VO parameter count (§4.2): shared Av (rv×d) + Bo (d'×ro) plus
+/// per-head Bv/Ao factors, with the identity-junction credit — the single
+/// source of truth for `joint_vo::compress` and the plan dry-run.
+pub fn joint_vo_params(d: usize, d_out: usize, n_heads: usize, d_h: usize,
+                       rv: usize, ro: usize) -> usize {
+    let n = rv * d + ro * d_out + n_heads * d_h * (rv + ro);
+    n.saturating_sub(rv * rv + ro * ro + d_h * d_h * n_heads)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,6 +112,18 @@ mod tests {
         let r = 3 * d / 4;
         assert_eq!(local_params(d, d, r, false), 3 * d * d / 2);
         assert_eq!(local_params(d, d, r, true), 15 * d * d / 16);
+    }
+
+    #[test]
+    fn joint_vo_params_formula() {
+        let (d, dh, h) = (96usize, 24usize, 4usize);
+        let r = 40usize;
+        let manual = (r * d + r * d + h * dh * 2 * r)
+            - (2 * r * r + dh * dh * h);
+        assert_eq!(joint_vo_params(d, d, h, dh, r, r), manual);
+        // credit can never underflow to a huge value
+        assert_eq!(joint_vo_params(4, 4, 2, 2, 1, 1), 16usize
+                       .saturating_sub(1 + 1 + 8));
     }
 
     #[test]

@@ -2,6 +2,10 @@
 //! FISTA soft-shrink (Eqs 233–235), projected-GD hard top-κ (the STE
 //! variant, Eq 237), WandA-style diagonal one-shot (Eq 238), alternating
 //! low-rank+sparse, and factor sparsification — backing Figs 11/13/14/15/16.
+//!
+//! The whole-model path reaches these through the `sparse` post-stage of
+//! [`super::plan`] (`PostOp::Sparse` runs [`projected_gd`] on each
+//! module's low-rank residual).
 
 use super::asvd::{self, AsvdOpts};
 use super::junction::Junction;

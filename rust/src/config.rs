@@ -15,12 +15,18 @@
 //! max_batches = 12
 //! qk_iters = 8
 //! ud_iters = 4
+//! [compress]            # plan for serve's in-process latent variant —
+//! attn = "attn_latent"  # same schema as `latentllm compress --plan`
+//! mlp = "mlp_joint_ud"  # (see compress::plan), section optional
+//! qk_iters = 4
+//! ud_iters = 2
 //! ```
 
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::compress::plan::CompressionPlan;
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::router::Policy;
 use crate::util::toml::{self, Table};
@@ -66,10 +72,25 @@ impl Default for ReportSettings {
     }
 }
 
-#[derive(Clone, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Config {
     pub serve: ServeSettings,
     pub report: ReportSettings,
+    /// `[compress]` — the plan used when serving builds its in-process
+    /// latent variant (ratio comes from `serve.latent_ratio`). Defaults
+    /// to the LatentLLM preset at light iteration budgets (4/2) so
+    /// startup stays fast.
+    pub compress: CompressionPlan,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            serve: ServeSettings::default(),
+            report: ReportSettings::default(),
+            compress: CompressionPlan::default().with_iters(4, 2),
+        }
+    }
 }
 
 fn policy_from_str(s: &str) -> Option<Policy> {
@@ -122,6 +143,8 @@ impl Config {
                                         cfg.report.qk_iters);
         cfg.report.ud_iters = get_usize("report.ud_iters",
                                         cfg.report.ud_iters);
+        cfg.compress = CompressionPlan::from_table_with(
+            t, "compress", cfg.compress.clone())?;
         Ok(cfg)
     }
 
@@ -165,5 +188,22 @@ mod tests {
         assert!(Config::from_table(&t).is_err());
         let t = toml::parse("[serve]\nlatent_ratio = 1.5\n").unwrap();
         assert!(Config::from_table(&t).is_err());
+        let t = toml::parse("[compress]\nprecond = \"nope\"\n").unwrap();
+        assert!(Config::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn parses_compress_section() {
+        let t = toml::parse(
+            "[compress]\nattn = \"attn_local\"\nmlp = \"mlp_local\"\n\
+             precond = \"cov\"\njunction = \"left\"\nqk_iters = 6\n")
+            .unwrap();
+        let c = Config::from_table(&t).unwrap();
+        assert_eq!(c.compress.attn, "attn_local");
+        assert_eq!(c.compress.mlp, "mlp_local");
+        assert_eq!(c.compress.precond, crate::compress::Precond::Cov);
+        assert_eq!(c.compress.qk_iters, 6);
+        assert_eq!(c.compress.ud_iters, 2,
+                   "serve default iteration budget survives");
     }
 }

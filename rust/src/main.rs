@@ -13,7 +13,9 @@ use std::process::exit;
 
 use anyhow::{bail, Context, Result};
 
-use latentllm::compress::pipeline::{self, Method, TABLE2_METHODS};
+use latentllm::compress::pipeline::{self, Method};
+use latentllm::compress::plan::{self, CompressionPlan, ProgressObserver,
+                                Registry};
 use latentllm::coordinator::{
     kvcache::CacheKind, kvcache::KvCacheManager,
     router::{ModelVariant, Policy, Router},
@@ -71,6 +73,7 @@ latentllm — attention-aware joint tensor compression (paper reproduction)
 USAGE:
   latentllm info      [--artifacts DIR]
   latentllm compress  --model opt-mini-m --method latentllm --ratio 0.3
+                      [--plan FILE.toml] [--dry-run]
                       [--artifacts DIR] [--out FILE.ltw]
   latentllm eval      --model opt-mini-m [--weights FILE.ltw]
                       [--corpus synthwiki] [--artifacts DIR]
@@ -81,8 +84,14 @@ USAGE:
   latentllm report    all|table2|table3|table4|fig4|fig5|fig7..fig16|ablations
                       [--artifacts DIR] [--out DIR] [--max-batches N]
 
-Methods: plain asvd_hessian asvd_l1 asvd_l2 asvd_cov asvd_rootcov
-         latentllm latentllm_jointvo
+Methods (presets): plain asvd_hessian asvd_l1 asvd_l2 asvd_cov asvd_rootcov
+                   latentllm latentllm_jointvo
+Plans: --plan FILE.toml loads a [plan] compression plan (stages, per-layer
+       ratios, rank overrides, sparse/quant post-stages; see README
+       §Compression plans + examples/plan_latentllm.toml). --dry-run
+       validates the plan and prints the resolved rank schedule without
+       artifacts. --ratio/--qk-iters/--ud-iters override the plan's values
+       (--ratio re-targets uniformly, replacing any per-layer schedule).
 ";
 
 fn main() {
@@ -161,18 +170,95 @@ fn load_model(artifacts: &Path, model: &str)
     Ok((cfg, w, cal))
 }
 
+/// Layer-completion reporter for the CLI: the layer-parallel pool calls
+/// it from worker threads as layers finish.
+struct StderrProgress;
+
+impl ProgressObserver for StderrProgress {
+    fn layer_done(&self, layer: usize, n_layers: usize,
+                  rep: &latentllm::compress::plan::LayerReport) {
+        eprintln!("  layer {}/{} done ({} params)", layer + 1, n_layers,
+                  rep.params);
+    }
+}
+
+/// Resolve the plan from `--plan FILE.toml` or the `--method` preset,
+/// with explicit `--ratio`/`--qk-iters`/`--ud-iters` flags overriding.
+fn plan_from_args(args: &Args) -> Result<CompressionPlan> {
+    let mut cplan = match args.flags.get("plan") {
+        Some(p) => CompressionPlan::load(p)?,
+        None => Method::from_name(&args.flag("method", "latentllm"))
+            .context("unknown method")?
+            .plan(),
+    };
+    if let Some(r) = args.flags.get("ratio")
+        .and_then(|v| v.parse::<f64>().ok()) {
+        // explicit re-target: also clears any per-layer schedule so the
+        // flag actually takes effect
+        cplan = cplan.with_ratio(r);
+    }
+    if let Some(n) = args.flags.get("qk-iters")
+        .and_then(|v| v.parse::<usize>().ok()) {
+        cplan.qk_iters = n;
+    }
+    if let Some(n) = args.flags.get("ud-iters")
+        .and_then(|v| v.parse::<usize>().ok()) {
+        cplan.ud_iters = n;
+    }
+    Ok(cplan)
+}
+
+/// `--dry-run`: validate the plan and print the resolved rank schedule —
+/// needs only the model config, no artifacts.
+fn dry_run(cplan: &CompressionPlan, registry: &Registry,
+           cfg: &latentllm::model::MiniConfig) -> Result<()> {
+    let layers = cplan.resolve(registry, cfg)?;
+    println!("plan {} on {} ({} layers): stages {} + {}{}",
+             cplan.display_label(), cfg.name, cfg.n_layers, cplan.attn,
+             cplan.mlp,
+             if cplan.post.is_empty() { String::new() } else {
+                 format!(" + post [{}]",
+                         cplan.post.iter().map(|p| p.name())
+                             .collect::<Vec<_>>().join(", "))
+             });
+    let mut table = latentllm::reports::TextTable::new(
+        &["layer", "ratio", "module", "rank", "params"]);
+    let mut total = 0usize;
+    for l in &layers {
+        for m in &l.modules {
+            table.row(vec![l.layer.to_string(),
+                           format!("{:.0}%", l.ratio * 100.0),
+                           m.module.clone(), m.rank.to_string(),
+                           flops::human(m.params as f64)]);
+        }
+        total += l.params();
+    }
+    println!("{}", table.render());
+    let orig = cfg.linear_params();
+    println!("resolved linear params {} -> {} (target ratio {:.3}; \
+              low-rank estimate, post-stages excluded)",
+             flops::human(orig as f64), flops::human(total as f64),
+             1.0 - total as f64 / orig.max(1) as f64);
+    Ok(())
+}
+
 fn compress_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     let model = args.flag("model", "opt-mini-m");
-    let method = Method::from_name(&args.flag("method", "latentllm"))
-        .context("unknown method")?;
-    let ratio = args.f64_flag("ratio", 0.3);
-    let (cfg, w, cal) = load_model(artifacts, &model)?;
+    let cfg = latentllm::model::config::mini_by_name(&model)
+        .with_context(|| format!("unknown model {model:?}"))?;
+    let registry = Registry::builtin();
+    let cplan = plan_from_args(args)?;
+    if args.flags.contains_key("dry-run") {
+        return dry_run(&cplan, &registry, cfg);
+    }
+    let (_, w, cal) = load_model(artifacts, &model)?;
     let t0 = std::time::Instant::now();
-    let (nw, rep) = pipeline::compress_model(cfg, &w, &cal, method, ratio,
-                                             args.usize_flag("qk-iters", 8),
-                                             args.usize_flag("ud-iters", 4))?;
+    let (nw, rep) = plan::compress_plan_on(
+        &latentllm::util::pool::Pool::global(), &registry, cfg, &w, &cal,
+        &cplan, Some(&StderrProgress))?;
     println!("compressed {model} with {} @ {:.0}% in {:.2}s",
-             method.label(), ratio * 100.0, t0.elapsed().as_secs_f64());
+             cplan.display_label(), cplan.ratio * 100.0,
+             t0.elapsed().as_secs_f64());
     println!("  linear params {} -> {} (achieved ratio {:.3})",
              flops::human(rep.orig_linear_params as f64),
              flops::human(rep.new_linear_params as f64),
@@ -181,7 +267,7 @@ fn compress_cmd(args: &Args, artifacts: &Path) -> Result<()> {
         latentllm::model::io::write_ltw(out, nw.map())?;
         println!("  wrote {out}");
     }
-    // quick ppl check through the PJRT scoring program
+    // quick ppl check through the scoring program
     let engine = Engine::new(artifacts)?;
     let corpus = Corpus::load(artifacts.join("corpora.ltw"), "synthwiki",
                               "test")?;
@@ -261,12 +347,18 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
         _ => file_cfg.serve.policy,
     };
     let (cfg, weights, cal) = load_model(artifacts, &model)?;
-    // latent variant: compress in-process at the configured ratio
+    // latent variant: compress in-process with the [compress] plan. A
+    // per-layer schedule in the config wins over serve.latent_ratio
+    // (which then only sizes the KV-cache estimate below).
     let ratio = file_cfg.serve.latent_ratio;
-    let (latent_w, rep) = pipeline::compress_model(
-        cfg, &weights, &cal, Method::LatentLlm, ratio, 4, 2)?;
-    println!("built latent variant (achieved ratio {:.3})",
-             rep.achieved_ratio());
+    let cplan = if file_cfg.compress.layer_ratios.is_empty() {
+        file_cfg.compress.clone().with_ratio(ratio)
+    } else {
+        file_cfg.compress.clone()
+    };
+    let (latent_w, rep) = plan::compress_plan(cfg, &weights, &cal, &cplan)?;
+    println!("built latent variant with plan {} (achieved ratio {:.3})",
+             cplan.display_label(), rep.achieved_ratio());
     let budget = file_cfg.serve.kv_budget_bytes;
     let r_lat = latentllm::compress::rank::local_rank(cfg.d, cfg.d,
                                                       1.0 - ratio, true);
@@ -423,7 +515,7 @@ fn report_cmd(args: &Args, artifacts: &Path) -> Result<()> {
                                    &["opt-mini-s", "opt-mini-m",
                                      "opt-mini-l"],
                                    &[0.1, 0.2, 0.3, 0.4],
-                                   &TABLE2_METHODS)?;
+                                   &pipeline::table2_plans())?;
             save("table2", &v)
         }
         "table4" => {
@@ -433,14 +525,15 @@ fn report_cmd(args: &Args, artifacts: &Path) -> Result<()> {
                 .filter_map(|s| s.trim().parse().ok())
                 .collect();
             let v = tables::table4(&ctx, &ratios,
-                                   &[Method::Plain, Method::AsvdRootCov,
-                                     Method::LatentLlm])?;
+                                   &[Method::Plain.plan(),
+                                     Method::AsvdRootCov.plan(),
+                                     Method::LatentLlm.plan()])?;
             save("table4", &v)
         }
         "fig4" => {
             let v = tables::fig4(&ctx, &["opt-mini-m"],
-                                 &[Method::AsvdRootCov,
-                                   Method::LatentLlm])?;
+                                 &[Method::AsvdRootCov.plan(),
+                                   Method::LatentLlm.plan()])?;
             save("fig4", &v)
         }
         "fig5" => {

@@ -4,7 +4,8 @@
 //!    (block identity buys a higher rank → lower ppl);
 //!  * joint-VO vs split-V/O (paper Remark 11);
 //!  * Algorithm 1 iteration count (paper used 8 for QK, 4 for UD);
-//!  * calibration sample budget (paper: 64 × 2048 tokens).
+//!  * calibration sample budget (paper: 64 × 2048 tokens);
+//!  * per-layer ratio schedules (front/back-loaded compression plans).
 
 use anyhow::Result;
 
@@ -12,7 +13,8 @@ use super::tables::TableCtx;
 use crate::compress::asvd::{self, AsvdOpts};
 use crate::compress::joint_qk::{self, JointQkOpts};
 use crate::compress::junction::Junction;
-use crate::compress::pipeline::{compress_model, Method};
+use crate::compress::pipeline::Method;
+use crate::compress::plan::compress_plan;
 use crate::compress::precond::Precond;
 use crate::data::{CalibSet, Corpus};
 use crate::eval;
@@ -65,8 +67,9 @@ pub fn run(ctx: &TableCtx, model: &str, ratio: f64) -> Result<Value> {
     // ---- joint-VO vs split-V/O (Remark 11)
     for (name, method) in [("split_vo", Method::LatentLlm),
                            ("joint_vo", Method::LatentLlmJointVo)] {
-        let (nw, rep) = compress_model(cfg, &weights, &calib, method, ratio,
-                                       ctx.qk_iters, ctx.ud_iters)?;
+        let p = method.plan().with_ratio(ratio)
+            .with_iters(ctx.qk_iters, ctx.ud_iters);
+        let (nw, rep) = compress_plan(cfg, &weights, &calib, &p)?;
         let ppl = ppl_of(&nw)?;
         println!("{name}: ppl {ppl:.3} (achieved {:.3})",
                  rep.achieved_ratio());
@@ -91,9 +94,9 @@ pub fn run(ctx: &TableCtx, model: &str, ratio: f64) -> Result<Value> {
                                                    ..Default::default() });
         let loss = if iters == 0 { jq.losses[0] }
                    else { *jq.losses.last().unwrap() };
-        let (nw, _) = compress_model(cfg, &weights, &calib,
-                                     Method::LatentLlm, ratio,
-                                     iters.max(1), ctx.ud_iters)?;
+        let p = Method::LatentLlm.plan().with_ratio(ratio)
+            .with_iters(iters.max(1), ctx.ud_iters);
+        let (nw, _) = compress_plan(cfg, &weights, &calib, &p)?;
         let ppl = ppl_of(&nw)?;
         println!("qk_iters={iters}: attn-loss {loss:.4e}  ppl {ppl:.3}");
         out.push(Value::obj(vec![
@@ -107,9 +110,9 @@ pub fn run(ctx: &TableCtx, model: &str, ratio: f64) -> Result<Value> {
     // ---- calibration budget sweep
     for cols in [128usize, 384, 1024] {
         let cal_small = subsample(&calib, cfg.n_layers, cols);
-        let (nw, _) = compress_model(cfg, &weights, &cal_small,
-                                     Method::LatentLlm, ratio,
-                                     ctx.qk_iters, ctx.ud_iters)?;
+        let p = Method::LatentLlm.plan().with_ratio(ratio)
+            .with_iters(ctx.qk_iters, ctx.ud_iters);
+        let (nw, _) = compress_plan(cfg, &weights, &cal_small, &p)?;
         let ppl = ppl_of(&nw)?;
         println!("calib_cols={cols}: ppl {ppl:.3}");
         out.push(Value::obj(vec![
@@ -117,6 +120,36 @@ pub fn run(ctx: &TableCtx, model: &str, ratio: f64) -> Result<Value> {
             ("cols", cols.into()),
             ("ppl", ppl.into()),
         ]));
+    }
+
+    // ---- per-layer ratio schedule (plan-only scenario): front-loaded vs
+    // back-loaded vs uniform at (approximately) the same global budget
+    {
+        let n = cfg.n_layers;
+        let spread = (ratio * 0.5).min(1.0 - ratio - 0.01).max(0.0);
+        let front: Vec<f64> = (0..n).map(|i| if i < n / 2 {
+            ratio + spread
+        } else {
+            ratio - spread
+        }).collect();
+        let back: Vec<f64> = front.iter().rev().copied().collect();
+        for (name, sched) in [("uniform", Vec::new()),
+                              ("front_loaded", front),
+                              ("back_loaded", back)] {
+            let p = Method::LatentLlm.plan().with_ratio(ratio)
+                .with_layer_ratios(sched)
+                .with_iters(ctx.qk_iters, ctx.ud_iters);
+            let (nw, rep) = compress_plan(cfg, &weights, &calib, &p)?;
+            let ppl = ppl_of(&nw)?;
+            println!("layer_schedule={name}: ppl {ppl:.3} (achieved \
+                      {:.3})", rep.achieved_ratio());
+            out.push(Value::obj(vec![
+                ("ablation", "layer_schedule".into()),
+                ("variant", name.into()),
+                ("ppl", ppl.into()),
+                ("achieved_ratio", rep.achieved_ratio().into()),
+            ]));
+        }
     }
 
     Ok(Value::obj(vec![("report", "ablations".into()),

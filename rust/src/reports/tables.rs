@@ -6,7 +6,8 @@
 use anyhow::{Context, Result};
 
 use super::table::TextTable;
-use crate::compress::pipeline::{self, Method, TABLE2_METHODS};
+use crate::compress::pipeline::{self, Method};
+use crate::compress::plan::{self, CompressionPlan};
 use crate::data::{CalibSet, Corpus};
 use crate::eval;
 use crate::flops;
@@ -40,15 +41,18 @@ fn corpora(ctx: &TableCtx) -> Result<Vec<Corpus>> {
         .collect()
 }
 
-/// Table 2: perplexity of each model size × method × ratio on the three
+/// Table 2: perplexity of each model size × plan × ratio on the three
 /// synthetic corpora (paper: OPT family on WT2/PTB/C4 at 10–40%).
 ///
-/// The compression sweep (the dominant cost) runs method×ratio combos
+/// Plans come in as data (the historical method set is
+/// `pipeline::table2_plans()`); each is re-targeted with
+/// [`CompressionPlan::with_ratio`] and the ctx iteration budgets. The
+/// compression sweep (the dominant cost) runs plan×ratio combos
 /// concurrently on the global [`Pool`]; evaluation stays on this thread
 /// (execution backends are not `Sync`) and rows emit in the same
-/// deterministic method-major order as the serial sweep.
+/// deterministic plan-major order as the serial sweep.
 pub fn table2(ctx: &TableCtx, sizes: &[&str], ratios: &[f64],
-              methods: &[Method]) -> Result<Value> {
+              plans: &[CompressionPlan]) -> Result<Value> {
     let (batch, seq_len) = score_dims(ctx.engine);
     let corp = corpora(ctx)?;
     let mut rows = Vec::new();
@@ -71,22 +75,24 @@ pub fn table2(ctx: &TableCtx, sizes: &[&str], ratios: &[f64],
         }
         rows.push(row_value(size, "original", 0.0, &base));
         out.row(render_row(size, "original", 0.0, &base));
-        let combos: Vec<(Method, f64)> = methods.iter()
-            .flat_map(|&m| ratios.iter().map(move |&r| (m, r)))
+        let combos: Vec<(usize, f64)> = (0..plans.len())
+            .flat_map(|p| ratios.iter().map(move |&r| (p, r)))
             .collect();
         // compress in pool-width waves: full parallel speedup but only
         // one wave of compressed Weights alive at a time (the whole grid
-        // at once would scale peak memory with methods×ratios)
+        // at once would scale peak memory with plans×ratios)
         let wave = Pool::global().threads().max(1);
         for chunk in combos.chunks(wave) {
             let compressed = Pool::global().run(chunk.len(), |ci| {
-                let (method, ratio) = chunk[ci];
-                pipeline::compress_model(cfg, &weights, &cal, method,
-                                         ratio, qk_iters, ud_iters)
+                let (pi, ratio) = chunk[ci];
+                let p = plans[pi].clone().with_ratio(ratio)
+                    .with_iters(qk_iters, ud_iters);
+                plan::compress_plan(cfg, &weights, &cal, &p)
             });
-            for ((method, ratio), res) in chunk.iter().zip(compressed) {
+            for ((pi, ratio), res) in chunk.iter().zip(compressed) {
+                let label = plans[*pi].display_label();
                 let (nw, _rep) = res.with_context(
-                    || format!("compress {size} {method:?}@{ratio}"))?;
+                    || format!("compress {size} {label}@{ratio}"))?;
                 let mut ppls = vec![];
                 for c in &corp {
                     let r = eval::perplexity(ctx.engine, &program, &nw, c,
@@ -94,8 +100,8 @@ pub fn table2(ctx: &TableCtx, sizes: &[&str], ratios: &[f64],
                                              ctx.max_batches)?;
                     ppls.push(r.ppl);
                 }
-                rows.push(row_value(size, method.label(), *ratio, &ppls));
-                out.row(render_row(size, method.label(), *ratio, &ppls));
+                rows.push(row_value(size, label, *ratio, &ppls));
+                out.row(render_row(size, label, *ratio, &ppls));
             }
         }
     }
@@ -151,10 +157,10 @@ pub fn table3() -> Value {
 }
 
 /// Fig 4 (ppl vs ratio, wide sweep) — reuses the Table 2 machinery.
-pub fn fig4(ctx: &TableCtx, sizes: &[&str], methods: &[Method])
+pub fn fig4(ctx: &TableCtx, sizes: &[&str], plans: &[CompressionPlan])
             -> Result<Value> {
     let ratios: Vec<f64> = (1..=7).map(|i| i as f64 * 0.1).collect();
-    let v = table2(ctx, sizes, &ratios, methods)?;
+    let v = table2(ctx, sizes, &ratios, plans)?;
     Ok(Value::obj(vec![("figure", "fig4".into()),
                        ("data", v)]))
 }
@@ -177,9 +183,9 @@ pub fn fig5(ctx: &TableCtx, sizes: &[&str]) -> Result<Value> {
             let w = if ratio == 0.0 {
                 weights.clone()
             } else {
-                pipeline::compress_model(cfg, &weights, &cal,
-                                         Method::LatentLlm, ratio,
-                                         ctx.qk_iters, ctx.ud_iters)?.0
+                let p = Method::LatentLlm.plan().with_ratio(ratio)
+                    .with_iters(ctx.qk_iters, ctx.ud_iters);
+                plan::compress_plan(cfg, &weights, &cal, &p)?.0
             };
             let r = eval::perplexity(ctx.engine, &program, &w, &corp,
                                      batch, seq_len, ctx.max_batches)?;
@@ -202,7 +208,7 @@ pub fn fig5(ctx: &TableCtx, sizes: &[&str]) -> Result<Value> {
 /// headline table; here we *evaluate* rust-compressed LM towers as well —
 /// compressing both towers in rust requires the mm pipeline, which reuses
 /// the per-tower MiniConfig path.
-pub fn table4(ctx: &TableCtx, ratios: &[f64], methods: &[Method])
+pub fn table4(ctx: &TableCtx, ratios: &[f64], plans: &[CompressionPlan])
               -> Result<Value> {
     use crate::model::io::read_ltw;
     let data = read_ltw(ctx.artifacts.join("mm_data.ltw"))?;
@@ -228,16 +234,16 @@ pub fn table4(ctx: &TableCtx, ratios: &[f64], methods: &[Method])
     push_mm_row(&mut out, &mut rows, "Original un-compressed", 0.0, &base);
 
     for &ratio in ratios {
-        for &method in methods {
+        for base_plan in plans {
+            let p = base_plan.clone().with_ratio(ratio)
+                .with_iters(ctx.qk_iters, ctx.ud_iters);
             let mut nw = weights.clone();
             for (tower, cfg) in [("vit", &vit_cfg), ("lm", &lm_cfg)] {
                 let sub = tower_weights(&weights, tower)?;
                 let cal = CalibSet::from_map(&calib,
                                              &format!("{tower}."),
                                              cfg.n_layers)?;
-                let (cw, _) = pipeline::compress_model(
-                    cfg, &sub, &cal, method, ratio,
-                    ctx.qk_iters, ctx.ud_iters)?;
+                let (cw, _) = plan::compress_plan(cfg, &sub, &cal, &p)?;
                 for name in cw.names() {
                     nw.set_tensor(&format!("{tower}.{name}"),
                                   cw.tensor(name)?.clone());
@@ -245,7 +251,8 @@ pub fn table4(ctx: &TableCtx, ratios: &[f64], methods: &[Method])
             }
             let r = eval::evaluate_mm(ctx.engine, program, &nw, &data,
                                       mm_batch)?;
-            push_mm_row(&mut out, &mut rows, method.label(), ratio, &r);
+            push_mm_row(&mut out, &mut rows, base_plan.display_label(),
+                        ratio, &r);
         }
     }
     println!("{}", out.render());
@@ -319,11 +326,11 @@ pub fn run_all(ctx: &TableCtx, out_dir: &std::path::Path) -> Result<()> {
     save("table3", &table3())?;
     println!("=== Table 2 (perplexity grid) ===");
     let t2 = table2(ctx, &["opt-mini-s", "opt-mini-m", "opt-mini-l"],
-                    &[0.1, 0.2, 0.3, 0.4], &TABLE2_METHODS)?;
+                    &[0.1, 0.2, 0.3, 0.4], &pipeline::table2_plans())?;
     save("table2", &t2)?;
     println!("=== Fig 4 (ppl vs ratio, latentllm + rootcov) ===");
     let f4 = fig4(ctx, &["opt-mini-m"],
-                  &[Method::AsvdRootCov, Method::LatentLlm])?;
+                  &[Method::AsvdRootCov.plan(), Method::LatentLlm.plan()])?;
     save("fig4", &f4)?;
     println!("=== Fig 5 (ppl vs FLOPs) ===");
     let f5 = fig5(ctx, &["opt-mini-s", "opt-mini-m", "opt-mini-l"])?;
@@ -334,8 +341,8 @@ pub fn run_all(ctx: &TableCtx, out_dir: &std::path::Path) -> Result<()> {
     // appears) sits at deeper ratios than the paper's 10-50% — sweep
     // through the transition (see EXPERIMENTS.md).
     let t4 = table4(ctx, &[0.3, 0.6, 0.8, 0.9, 0.95],
-                    &[Method::Plain, Method::AsvdRootCov,
-                      Method::LatentLlm])?;
+                    &[Method::Plain.plan(), Method::AsvdRootCov.plan(),
+                      Method::LatentLlm.plan()])?;
     save("table4", &t4)?;
     Ok(())
 }

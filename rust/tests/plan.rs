@@ -1,0 +1,336 @@
+//! Plan-API regression suite (artifact-free).
+//!
+//! The heart is `shim_matches_reference_bitwise`: a verbatim copy of the
+//! pre-refactor enum pipeline (`reference_compress`) is pinned against
+//! `compress_model` — now a `Method::plan()` shim over
+//! `plan::compress_plan` — with byte-for-byte tensor equality, so the
+//! stage decomposition can never drift arithmetically from the §5
+//! protocol. The rest covers plan TOML files on disk, custom stage
+//! registration, and the mixed per-layer-ratio + sparse/quant scenarios
+//! the Method enum could not express.
+
+use latentllm::compress::asvd::{self, AsvdOpts};
+use latentllm::compress::joint_qk::{self, JointQkOpts};
+use latentllm::compress::joint_ud::{self, JointUdOpts};
+use latentllm::compress::joint_vo::{self, JointVoOpts};
+use latentllm::compress::junction::Junction;
+use latentllm::compress::pipeline::{compress_model, tests_support, Method,
+                                    TABLE2_METHODS};
+use latentllm::compress::plan::{compress_plan, compress_plan_on,
+                                CompressionPlan, Compressor, LayerCtx,
+                                LayerOut, PostOp, Registry};
+use latentllm::compress::rank;
+use latentllm::data::CalibSet;
+use latentllm::model::config::OPT_MINI_S;
+use latentllm::model::{MiniConfig, Weights};
+use latentllm::util::pool::Pool;
+use latentllm::Matrix;
+
+// ---------------------------------------------------------------------------
+// verbatim copy of the pre-refactor §5 pipeline (serial)
+
+fn reference_compress(cfg: &MiniConfig, weights: &Weights, calib: &CalibSet,
+                      method: Method, ratio: f64, qk_iters: usize,
+                      ud_iters: usize) -> Weights {
+    let keep = 1.0 - ratio;
+    let pk = method.precond();
+    let latent = method.is_latent();
+    let junction = if latent { Junction::BlockId } else { Junction::Left };
+    let (d, dh, h, di) = (cfg.d, cfg.d_h(), cfg.n_heads, cfg.d_i);
+    let mut out = weights.clone();
+
+    for i in 0..cfg.n_layers {
+        let p = format!("layers.{i}.");
+        let x_attn = calib.x(i, "attn_x");
+        let x_o = calib.x(i, "o_x");
+        let x_mlp = calib.x(i, "mlp_x");
+
+        let wq = weights.matrix(&format!("{p}attn.wq")).unwrap();
+        let wk = weights.matrix(&format!("{p}attn.wk")).unwrap();
+        let wv = weights.matrix(&format!("{p}attn.wv")).unwrap();
+        let wo = weights.matrix(&format!("{p}attn.wo")).unwrap();
+        let bq = weights.bias(&format!("{p}attn.bq")).unwrap();
+        let bk = weights.bias(&format!("{p}attn.bk")).unwrap();
+        let bv = weights.bias(&format!("{p}attn.bv")).unwrap();
+        let bo = weights.bias(&format!("{p}attn.bo")).unwrap();
+        let wu = weights.matrix(&format!("{p}mlp.wu")).unwrap();
+        let wd = weights.matrix(&format!("{p}mlp.wd")).unwrap();
+        let bu = weights.bias(&format!("{p}mlp.bu")).unwrap();
+        let bd = weights.bias(&format!("{p}mlp.bd")).unwrap();
+
+        if latent {
+            // ---- joint QK (§4.1, Alg 1)
+            let r_qk = rank::joint_qk_rank(d, dh, h, h, keep, true);
+            let jq = joint_qk::compress(&wq, &wk, h, dh, r_qk, r_qk,
+                                        &JointQkOpts {
+                                            kind: pk, n_iter: qk_iters,
+                                            x: Some(x_attn),
+                                            bq: Some(&bq), bk: Some(&bk),
+                                            ..Default::default()
+                                        });
+            out.set_matrix(&format!("{p}attn.wq"), &jq.wq_hat);
+            out.set_matrix(&format!("{p}attn.wk"), &jq.wk_hat);
+            out.set_bias(&format!("{p}attn.bq"), &jq.bq_bias.unwrap());
+            out.set_bias(&format!("{p}attn.bk"), &jq.bk_bias.unwrap());
+
+            // ---- V / O
+            if method == Method::LatentLlmJointVo {
+                let r_vo = rank::local_rank(d, d, keep, true);
+                let jv = joint_vo::compress(&wv, &wo, h, dh, r_vo, r_vo,
+                                            &JointVoOpts {
+                                                kind: pk, n_iter: ud_iters,
+                                                x: Some(x_attn),
+                                                bv: Some(&bv),
+                                                bo: Some(&bo),
+                                                ..Default::default()
+                                            });
+                out.set_matrix(&format!("{p}attn.wv"), &jv.wv_hat);
+                out.set_matrix(&format!("{p}attn.wo"), &jv.wo_hat);
+                out.set_bias(&format!("{p}attn.bo"), &jv.bo_bias.unwrap());
+            } else {
+                // paper default: split V/O, root-cov + block identity
+                let r_v = rank::local_rank(d, d, keep, true);
+                let rv = asvd::compress(&wv, r_v, &AsvdOpts {
+                    kind: pk, junction, x: Some(x_attn), bias: Some(&bv),
+                    ..Default::default()
+                });
+                let r_o = rank::local_rank(d, d, keep, true);
+                let ro = asvd::compress(&wo, r_o, &AsvdOpts {
+                    kind: pk, junction, x: Some(x_o), bias: Some(&bo),
+                    ..Default::default()
+                });
+                out.set_matrix(&format!("{p}attn.wv"), &rv.w_hat);
+                out.set_bias(&format!("{p}attn.bv"), &rv.bias.unwrap());
+                out.set_matrix(&format!("{p}attn.wo"), &ro.w_hat);
+                out.set_bias(&format!("{p}attn.bo"), &ro.bias.unwrap());
+            }
+
+            // ---- joint UD (§4.3)
+            let r_u = rank::local_rank(di, d, keep, true);
+            let r_d = rank::local_rank(d, di, keep, true);
+            let ud = joint_ud::compress(&wu, &bu, &wd, &bd, x_mlp, r_u,
+                                        r_d,
+                                        &JointUdOpts {
+                                            n_iter: ud_iters,
+                                            junction,
+                                            ..Default::default()
+                                        });
+            out.set_matrix(&format!("{p}mlp.wu"), &ud.wu_hat);
+            out.set_bias(&format!("{p}mlp.bu"), &ud.bu);
+            out.set_matrix(&format!("{p}mlp.wd"), &ud.wd_hat);
+            out.set_bias(&format!("{p}mlp.bd"), &ud.bd);
+        } else {
+            // local compression of each of the six linears
+            let jobs: [(&str, &Matrix, &[f64], &Matrix); 5] = [
+                ("attn.wq", &wq, &bq, x_attn),
+                ("attn.wk", &wk, &bk, x_attn),
+                ("attn.wv", &wv, &bv, x_attn),
+                ("attn.wo", &wo, &bo, x_o),
+                ("mlp.wu", &wu, &bu, x_mlp),
+            ];
+            for (name, w, b, x) in jobs {
+                let r = rank::local_rank(w.rows(), w.cols(), keep, false);
+                let res = asvd::compress(w, r, &AsvdOpts {
+                    kind: pk, junction, x: Some(x), bias: Some(b),
+                    ..Default::default()
+                });
+                out.set_matrix(&format!("{p}{name}"), &res.w_hat);
+                let bname = format!("{p}{}", name.replace('w', "b"));
+                out.set_bias(&bname, &res.bias.unwrap());
+            }
+            // wd sees σ(Wu_orig x + bu)
+            let mut z = wu.matmul(x_mlp);
+            for r in 0..z.rows() {
+                let bi = bu[r];
+                for v in z.row_mut(r) {
+                    *v = (*v + bi).max(0.0);
+                }
+            }
+            let r = rank::local_rank(d, di, keep, false);
+            let res = asvd::compress(&wd, r, &AsvdOpts {
+                kind: pk, junction, x: Some(&z), bias: Some(&bd),
+                ..Default::default()
+            });
+            out.set_matrix(&format!("{p}mlp.wd"), &res.w_hat);
+            out.set_bias(&format!("{p}mlp.bd"), &res.bias.unwrap());
+        }
+    }
+    out
+}
+
+fn assert_bitwise_equal(a: &Weights, b: &Weights, tag: &str) {
+    assert_eq!(a.names().count(), b.names().count(), "{tag}: name sets");
+    for name in a.names() {
+        let ta = a.tensor(name).unwrap().as_f32().unwrap();
+        let tb = b.tensor(name).unwrap().as_f32().unwrap();
+        assert_eq!(ta.len(), tb.len(), "{tag}: {name} length");
+        assert!(ta.iter().zip(tb.iter())
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{tag}: {name} diverged from the pre-refactor pipeline");
+    }
+}
+
+fn setup() -> (MiniConfig, Weights, CalibSet) {
+    let cfg = OPT_MINI_S;
+    let w = tests_support::random_weights(&cfg, 2024);
+    let cal = CalibSet::synthetic(cfg.n_layers, cfg.d, 192, 11);
+    (cfg, w, cal)
+}
+
+#[test]
+fn shim_matches_reference_bitwise() {
+    let (cfg, w, cal) = setup();
+    // acceptance bar: every TABLE2 method at ratio 0.5, plus the joint-VO
+    // ablation arm, plus a second ratio for the two §5 headline methods
+    let mut cases: Vec<(Method, f64)> =
+        TABLE2_METHODS.iter().map(|&m| (m, 0.5)).collect();
+    cases.push((Method::LatentLlmJointVo, 0.5));
+    cases.push((Method::LatentLlm, 0.25));
+    cases.push((Method::AsvdRootCov, 0.25));
+    for (method, ratio) in cases {
+        let want = reference_compress(&cfg, &w, &cal, method, ratio, 2, 1);
+        let (got, rep) = compress_model(&cfg, &w, &cal, method, ratio, 2, 1)
+            .unwrap();
+        assert_bitwise_equal(&want, &got,
+                             &format!("{method:?}@{ratio}"));
+        assert!((rep.achieved_ratio() - ratio).abs() < 0.06,
+                "{method:?}@{ratio}: achieved {}", rep.achieved_ratio());
+    }
+}
+
+#[test]
+fn plan_file_round_trips_through_disk() {
+    let plan = Method::LatentLlm.plan()
+        .named("disk-trip")
+        .with_ratio(0.35)
+        .with_layer_ratios(vec![0.2, 0.45])
+        .with_iters(3, 2)
+        .with_rank("attn.qk", 40)
+        .with_post(PostOp::Sparse { keep_frac: 0.03, n_iter: 12 })
+        .with_post(PostOp::Quant { bits: 6, chunk: 32 });
+    let path = std::env::temp_dir().join(format!(
+        "latentllm_plan_{}.toml", std::process::id()));
+    std::fs::write(&path, plan.to_toml()).unwrap();
+    let loaded = CompressionPlan::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(plan, loaded);
+}
+
+#[test]
+fn example_plans_parse_and_resolve() {
+    // the same files CI dry-runs; resolving them validates stage names,
+    // ratio bounds, and rank overrides against a real config
+    let reg = Registry::builtin();
+    for file in ["plan_latentllm.toml", "plan_mixed.toml"] {
+        let path = ["examples", "../examples"].iter()
+            .map(|d| std::path::Path::new(d).join(file))
+            .find(|p| p.exists())
+            .unwrap_or_else(|| panic!("{file} not found from {:?}",
+                                      std::env::current_dir()));
+        let plan = CompressionPlan::load(&path).unwrap();
+        let layers = plan.resolve(&reg, &OPT_MINI_S).unwrap();
+        assert_eq!(layers.len(), OPT_MINI_S.n_layers);
+        assert!(layers.iter().all(|l| !l.modules.is_empty()));
+    }
+}
+
+#[test]
+fn mixed_ratio_sparse_plan_end_to_end() {
+    let (cfg, w, cal) = setup();
+    let base = Method::LatentLlm.plan()
+        .with_layer_ratios(vec![0.2, 0.5])
+        .with_iters(2, 1);
+    let sparse = base.clone()
+        .with_post(PostOp::Sparse { keep_frac: 0.02, n_iter: 10 });
+    let (nw_base, rep_base) = compress_plan(&cfg, &w, &cal, &base).unwrap();
+    let (nw, rep) = compress_plan(&cfg, &w, &cal, &sparse).unwrap();
+    // per-layer schedule took effect
+    assert!(rep.layers[0].qk_rank > rep.layers[1].qk_rank);
+    // the sparse correction adds params and moves the weights
+    assert!(rep.new_linear_params > rep_base.new_linear_params,
+            "sparse post-stage must count its κ entries");
+    let a = nw.matrix("layers.0.attn.wv").unwrap();
+    let b = nw_base.matrix("layers.0.attn.wv").unwrap();
+    assert!(a.max_abs_diff(&b) > 0.0,
+            "sparse correction should perturb the low-rank Ŵ");
+    for name in nw.names() {
+        let t = nw.tensor(name).unwrap();
+        if let Ok(data) = t.as_f32() {
+            assert!(data.iter().all(|v| v.is_finite()),
+                    "{name} has non-finite values");
+        }
+    }
+}
+
+#[test]
+fn quant_post_stage_quantizes_weights() {
+    let (cfg, w, cal) = setup();
+    let plan = Method::AsvdRootCov.plan()
+        .with_ratio(0.3)
+        .with_iters(2, 1)
+        .with_post(PostOp::Quant { bits: 4, chunk: 64 });
+    let (nw, rep) = compress_plan(&cfg, &w, &cal, &plan).unwrap();
+    assert!((rep.achieved_ratio() - 0.3).abs() < 0.06);
+    // 4-bit chunks: each 64-value chunk holds at most 16 distinct levels
+    let m = nw.matrix("layers.0.attn.wq").unwrap();
+    let chunk: Vec<i64> = m.data()[..64].iter()
+        .map(|v| (v * 1e9).round() as i64).collect();
+    let uniq: std::collections::BTreeSet<i64> =
+        chunk.into_iter().collect();
+    assert!(uniq.len() <= 16, "got {} distinct levels", uniq.len());
+}
+
+/// A custom stage registered at runtime: leaves the MLP uncompressed.
+struct MlpKeep;
+
+impl Compressor for MlpKeep {
+    fn name(&self) -> &'static str {
+        "mlp_keep"
+    }
+
+    fn compress(&self, ctx: &LayerCtx) -> anyhow::Result<LayerOut> {
+        let p = ctx.prefix();
+        let mut out = LayerOut::new(ctx.layer);
+        // re-emit the original tensors; params = full dense count
+        for (wname, bname) in [("mlp.wu", "mlp.bu"), ("mlp.wd", "mlp.bd")] {
+            let w = ctx.matrix(wname)?;
+            out.rep.params += w.rows() * w.cols();
+            out.mats.push((format!("{p}{wname}"), w));
+            out.biases.push((format!("{p}{bname}"), ctx.bias(bname)?));
+        }
+        Ok(out)
+    }
+}
+
+#[test]
+fn custom_compressor_via_registry() {
+    let (cfg, w, cal) = setup();
+    let mut reg = Registry::builtin();
+    reg.register(std::sync::Arc::new(MlpKeep));
+    let mut plan = Method::LatentLlm.plan().with_ratio(0.4)
+        .with_iters(2, 1);
+    plan.mlp = "mlp_keep".into();
+    let (nw, rep) = compress_plan_on(&Pool::new(2), &reg, &cfg, &w, &cal,
+                                     &plan, None).unwrap();
+    // the MLP survived bit-identically; attention was compressed
+    for name in ["layers.0.mlp.wu", "layers.1.mlp.wd"] {
+        let a = nw.tensor(name).unwrap().as_f32().unwrap();
+        let b = w.tensor(name).unwrap().as_f32().unwrap();
+        assert!(a.iter().zip(b.iter())
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{name} should be untouched by mlp_keep");
+    }
+    let wq_new = nw.matrix("layers.0.attn.wq").unwrap();
+    let wq_old = w.matrix("layers.0.attn.wq").unwrap();
+    assert!(wq_new.max_abs_diff(&wq_old) > 0.0);
+    // dense MLP params + compressed attention params
+    let dense_mlp = 2 * cfg.d * cfg.d_i * cfg.n_layers;
+    assert!(rep.new_linear_params > dense_mlp);
+    // an unregistered stage name fails with a useful error
+    let plain_reg = Registry::builtin();
+    let err = compress_plan_on(&Pool::new(1), &plain_reg, &cfg, &w, &cal,
+                               &plan, None).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("mlp_keep"),
+            "error should name the missing stage: {msg}");
+}
