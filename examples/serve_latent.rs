@@ -14,7 +14,8 @@ use latentllm::compress::rank;
 use latentllm::coordinator::batcher::BatcherConfig;
 use latentllm::coordinator::kvcache::{CacheKind, KvCacheManager};
 use latentllm::coordinator::router::{ModelVariant, Policy, Router};
-use latentllm::coordinator::server::{ScoreRequest, Server, ServerConfig};
+use latentllm::coordinator::server::{GenerateRequest, ScoreRequest, Server,
+                                     ServerConfig};
 use latentllm::data::{CalibSet, Corpus};
 use latentllm::model::config::mini_by_name;
 use latentllm::model::Weights;
@@ -53,10 +54,12 @@ fn main() -> Result<()> {
     let variants = vec![
         ModelVariant { name: "dense".into(),
                        score_program: format!("score_{model}"),
+                       step_program: format!("step_{model}"),
                        weights: std::sync::Arc::new(weights),
                        cache: dense_cache },
         ModelVariant { name: "latent30".into(),
                        score_program: format!("score_{model}"),
+                       step_program: format!("step_{model}"),
                        weights: std::sync::Arc::new(latent_w),
                        cache: latent_cache },
     ];
@@ -81,14 +84,36 @@ fn main() -> Result<()> {
     for (i, tokens) in reqs.into_iter().enumerate() {
         rxs.push(server.submit(ScoreRequest { id: i as u64, tokens })?);
     }
+    // decode sessions ride the same queue: each request prefills its
+    // prompt into real per-layer cache state under the KV budget above
+    let gen_prompts = corpus.calibration(8, 16, 4321);
+    let mut gen_rxs = Vec::new();
+    for (i, prompt) in gen_prompts.into_iter().enumerate() {
+        gen_rxs.push(server.submit_generate(GenerateRequest {
+            id: i as u64,
+            prompt,
+            max_new: 16,
+            temperature: 0.0,
+            seed: i as u64,
+        })?);
+    }
     let mut per_variant = std::collections::BTreeMap::new();
     for rx in rxs {
         let resp = rx.recv()?;
         *per_variant.entry(resp.variant).or_insert(0usize) += 1;
     }
+    let n_generate = gen_rxs.len();
+    let mut gen_ok = 0;
+    for rx in gen_rxs {
+        if rx.recv()?.error.is_none() {
+            gen_ok += 1;
+        }
+    }
     let dt = t0.elapsed();
     println!("served {n_requests} requests in {:.2}s ({:.1} req/s)",
              dt.as_secs_f64(), n_requests as f64 / dt.as_secs_f64());
+    println!("decoded {gen_ok}/{n_generate} generate requests through \
+              cached sessions");
     println!("variant placement: {per_variant:?}");
     let metrics = server.shutdown();
     println!("metrics:\n{}", metrics.summary());

@@ -35,6 +35,7 @@ fn main() {
         let variants = vec![ModelVariant {
             name: "dense".into(),
             score_program: format!("score_{model}"),
+            step_program: format!("step_{model}"),
             weights: weights.clone(),
             cache: KvCacheManager::new(CacheKind::Dense { d: cfg.d },
                                        cfg.n_layers, 2, 64 << 20),

@@ -3,29 +3,27 @@
 //! a latent layer caches only r_k + r_v. The manager tracks per-sequence
 //! allocations against a byte budget and admits/evicts accordingly —
 //! the piece of a serving stack the paper's compression directly enlarges.
+//!
+//! Since the decode refactor this is no longer paper arithmetic on the
+//! side: the footprints it budgets are the [`crate::runtime::DecodeState`]
+//! tensors server workers actually hold ([`CacheKind`] lives in
+//! `runtime::decode` and is re-exported here), and its verdicts have
+//! teeth — a failed [`KvCacheManager::extend`] mid-decode drops the
+//! worker's live session and the request gets an eviction error
+//! (`coordinator::server::run_generate`).
 
 use std::collections::HashMap;
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum CacheKind {
-    /// dense MHA: 2·d per token per layer
-    Dense { d: usize },
-    /// MLA: r_k + r_v per token per layer
-    Latent { rk: usize, rv: usize },
-}
-
-impl CacheKind {
-    pub fn bytes_per_token_layer(&self, bytes_per_el: usize) -> usize {
-        match self {
-            CacheKind::Dense { d } => 2 * d * bytes_per_el,
-            CacheKind::Latent { rk, rv } => (rk + rv) * bytes_per_el,
-        }
-    }
-}
+pub use crate::runtime::decode::CacheKind;
 
 #[derive(Clone, Debug)]
 struct SeqAlloc {
     tokens: usize,
+    /// the rate this sequence is billed at — usually the variant's
+    /// nominal [`KvCacheManager::bytes_per_token`], but decode sessions
+    /// are charged what their `DecodeState` actually holds
+    /// ([`KvCacheManager::admit_with`])
+    bytes_per_token: usize,
 }
 
 /// Byte-budgeted cache accounting for one model variant.
@@ -55,29 +53,58 @@ impl KvCacheManager {
         self.kind.bytes_per_token_layer(self.bytes_per_el) * self.n_layers
     }
 
-    /// Try to reserve `tokens` cache slots for a sequence. Returns false if
-    /// the budget cannot fit it even after evicting nothing (admission
-    /// control — the batcher backs off).
+    /// Bytes/token this manager charges for a session with the given
+    /// footprint descriptor and layer count — what a decode session's
+    /// real state costs, which may differ from the variant's nominal
+    /// kind (e.g. serve's latent-accounted variant running dense-layout
+    /// compressed weights).
+    pub fn bytes_per_token_for(&self, kind: CacheKind, n_layers: usize)
+                               -> usize {
+        kind.bytes_per_token_layer(self.bytes_per_el) * n_layers
+    }
+
+    /// Try to reserve `tokens` cache slots for a sequence at the
+    /// variant's nominal rate. Returns false if the budget cannot fit it
+    /// even after evicting nothing (admission control — the batcher
+    /// backs off). Re-admitting a live `seq_id` replaces its allocation:
+    /// release-then-reserve, so the old reservation cannot leak (the
+    /// pre-fix `HashMap::insert` overwrote the `SeqAlloc` while
+    /// `used_bytes` kept counting it, permanently shrinking the budget).
     pub fn admit(&mut self, seq_id: u64, tokens: usize) -> bool {
-        let need = tokens * self.bytes_per_token();
+        let bpt = self.bytes_per_token();
+        self.admit_with(seq_id, tokens, bpt)
+    }
+
+    /// [`KvCacheManager::admit`] at an explicit per-token rate: the
+    /// decode path re-admits each session at the bytes its
+    /// [`crate::runtime::DecodeState`] actually holds
+    /// ([`KvCacheManager::bytes_per_token_for`] of the *session's*
+    /// cache kind), so a variant whose step program runs a different
+    /// architecture than its nominal accounting is still billed
+    /// honestly.
+    pub fn admit_with(&mut self, seq_id: u64, tokens: usize,
+                      bytes_per_token: usize) -> bool {
+        self.release(seq_id);
+        let need = tokens * bytes_per_token;
         if self.used_bytes + need > self.budget_bytes {
             return false;
         }
         self.used_bytes += need;
         self.peak_bytes = self.peak_bytes.max(self.used_bytes);
-        self.seqs.insert(seq_id, SeqAlloc { tokens });
+        self.seqs.insert(seq_id, SeqAlloc { tokens, bytes_per_token });
         true
     }
 
-    /// Grow a sequence by one decoded token; evicts the sequence and
-    /// reports false if the budget is exhausted.
+    /// Grow a sequence by one decoded token (billed at its admission
+    /// rate); evicts the sequence and reports false if the budget is
+    /// exhausted.
     pub fn extend(&mut self, seq_id: u64) -> bool {
-        let bpt = self.bytes_per_token();
         match self.seqs.get_mut(&seq_id) {
             Some(s) => {
+                let bpt = s.bytes_per_token;
                 if self.used_bytes + bpt > self.budget_bytes {
-                    let tokens = s.tokens;
-                    self.used_bytes -= tokens * bpt;
+                    let bytes = s.tokens * bpt;
+                    self.used_bytes -= bytes;
                     self.seqs.remove(&seq_id);
                     self.evictions += 1;
                     return false;
@@ -93,7 +120,7 @@ impl KvCacheManager {
 
     pub fn release(&mut self, seq_id: u64) {
         if let Some(s) = self.seqs.remove(&seq_id) {
-            self.used_bytes -= s.tokens * self.bytes_per_token();
+            self.used_bytes -= s.tokens * s.bytes_per_token;
         }
     }
 
@@ -148,6 +175,51 @@ mod tests {
         m.release(1);
         assert_eq!(m.used_bytes(), 5 * m.bytes_per_token());
         m.release(2);
+        assert_eq!(m.used_bytes(), 0);
+    }
+
+    #[test]
+    fn readmitting_live_seq_releases_old_reservation() {
+        // regression: admit() used to HashMap::insert over a live
+        // allocation without returning its bytes — every re-admission
+        // leaked used_bytes until the budget was permanently exhausted.
+        let mut m = KvCacheManager::new(CacheKind::Dense { d: 8 }, 2, 2,
+                                        1 << 16);
+        assert!(m.admit(1, 10));
+        assert!(m.admit(1, 4), "re-admission must fit");
+        assert_eq!(m.used_bytes(), 4 * m.bytes_per_token(),
+                   "old reservation must be released, not leaked");
+        m.release(1);
+        assert_eq!(m.used_bytes(), 0, "release must return every byte");
+        // repeated churn on one id must never creep used_bytes upward
+        for _ in 0..100 {
+            assert!(m.admit(7, 12));
+        }
+        m.release(7);
+        assert_eq!(m.used_bytes(), 0);
+    }
+
+    #[test]
+    fn admit_with_bills_the_actual_footprint() {
+        // a latent-accounted variant running dense sessions must charge
+        // the dense rate: admission, extension, and release all follow
+        // the per-sequence rate, not the nominal one
+        let mut m = KvCacheManager::new(
+            CacheKind::Latent { rk: 4, rv: 4 }, 2, 2, 1 << 12);
+        let dense_bpt = m.bytes_per_token_for(CacheKind::Dense { d: 16 }, 2);
+        assert_eq!(dense_bpt, 2 * 16 * 2 * 2);
+        assert!(dense_bpt > m.bytes_per_token(), "dense must cost more");
+        assert!(m.admit_with(1, 5, dense_bpt));
+        assert_eq!(m.used_bytes(), 5 * dense_bpt);
+        assert!(m.extend(1));
+        assert_eq!(m.used_bytes(), 6 * dense_bpt,
+                   "extend must grow at the admitted rate");
+        m.release(1);
+        assert_eq!(m.used_bytes(), 0);
+        // eviction at the admitted rate returns every byte too
+        let cap = (1 << 12) / dense_bpt;
+        assert!(m.admit_with(2, cap, dense_bpt));
+        assert!(!m.extend(2), "over budget must evict");
         assert_eq!(m.used_bytes(), 0);
     }
 

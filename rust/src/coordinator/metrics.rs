@@ -9,6 +9,8 @@ use std::time::Duration;
 struct Inner {
     counters: BTreeMap<String, u64>,
     latencies: BTreeMap<String, Vec<f64>>, // micros
+    /// high-water gauges (e.g. peak cache bytes across workers)
+    gauges: BTreeMap<String, u64>,
 }
 
 #[derive(Default)]
@@ -28,6 +30,19 @@ impl Metrics {
 
     pub fn counter(&self, name: &str) -> u64 {
         self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Record a high-water mark: the gauge keeps the max value observed
+    /// (cache bytes are sampled by every worker; the fleet peak is what
+    /// capacity planning reads).
+    pub fn set_max(&self, name: &str, value: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.gauges.entry(name.to_string()).or_insert(0);
+        *e = (*e).max(value);
+    }
+
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().gauges.get(name).copied().unwrap_or(0)
     }
 
     pub fn observe(&self, name: &str, d: Duration) {
@@ -58,6 +73,9 @@ impl Metrics {
         let mut out = String::new();
         for (k, v) in &g.counters {
             out.push_str(&format!("  {k}: {v}\n"));
+        }
+        for (k, v) in &g.gauges {
+            out.push_str(&format!("  {k}: {v} (peak)\n"));
         }
         drop(g);
         let names: Vec<String> = {
@@ -93,6 +111,17 @@ mod tests {
         assert!((p95 - 95.0).abs() <= 2.0);
         assert!((p99 - 99.0).abs() <= 2.0);
         assert!(m.quantiles("missing").is_none());
+    }
+
+    #[test]
+    fn gauges_keep_the_high_water_mark() {
+        let m = Metrics::new();
+        m.set_max("cache_bytes", 100);
+        m.set_max("cache_bytes", 40);
+        m.set_max("cache_bytes", 250);
+        assert_eq!(m.gauge("cache_bytes"), 250);
+        assert_eq!(m.gauge("missing"), 0);
+        assert!(m.summary().contains("cache_bytes: 250 (peak)"));
     }
 
     #[test]

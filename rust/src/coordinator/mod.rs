@@ -14,4 +14,4 @@ pub use batcher::{Batcher, BatcherConfig};
 pub use kvcache::{CacheKind, KvCacheManager};
 pub use metrics::Metrics;
 pub use router::{ModelVariant, Router};
-pub use server::{Server, ServerConfig};
+pub use server::{GenerateRequest, GenerateResponse, Server, ServerConfig};

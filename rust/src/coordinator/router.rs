@@ -14,8 +14,11 @@ use super::kvcache::KvCacheManager;
 /// the router lock across an execution.
 pub struct ModelVariant {
     pub name: String,
-    /// PJRT program name for scoring (e.g. "score_opt-mini-m")
+    /// program name for scoring (e.g. "score_opt-mini-m")
     pub score_program: String,
+    /// program name for incremental decode sessions
+    /// (e.g. "step_opt-mini-m" / "latent_step_<tag>")
+    pub step_program: String,
     pub weights: Arc<crate::model::Weights>,
     pub cache: KvCacheManager,
 }
@@ -100,6 +103,7 @@ mod tests {
         ModelVariant {
             name: name.into(),
             score_program: format!("score_{name}"),
+            step_program: format!("step_{name}"),
             weights: Arc::new(Weights::new(TensorMap::new())),
             cache: KvCacheManager::new(kind, 4, 2, budget),
         }

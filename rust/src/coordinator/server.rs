@@ -4,6 +4,15 @@
 //! backend, and replied per request. std::thread + Mutex/Condvar (tokio is
 //! unavailable offline; the control flow is identical).
 //!
+//! Two request kinds share the queue: [`ScoreRequest`]s batch through the
+//! scoring programs as before, and [`GenerateRequest`]s run incremental
+//! decode sessions ([`crate::runtime::DecodeSession`]) on the popping
+//! worker — prompt admitted to the routed variant's [`KvCacheManager`] up
+//! front, every decoded token `extend`ed against the byte budget, and an
+//! eviction verdict mid-decode drops the live session and errors that
+//! request alone. Cache bytes, decode tokens, and evictions are
+//! aggregated per worker in [`Metrics`].
+//!
 //! Backends need not be Send (the PJRT client is `Rc`-based), so each
 //! worker thread builds and owns its own [`Engine`] — requests/responses
 //! cross the queue, executables never do. Variant weights are shared
@@ -19,7 +28,7 @@
 
 use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -47,6 +56,31 @@ pub struct ScoreResponse {
     pub error: Option<String>,
 }
 
+/// Autoregressive decode request: prefill `prompt`, emit `max_new`
+/// tokens through a cached decode session on the routed variant.
+#[derive(Clone, Debug)]
+pub struct GenerateRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    /// 0.0 = greedy; otherwise softmax temperature sampling
+    pub temperature: f64,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenerateResponse {
+    pub id: u64,
+    /// generated continuation (prompt excluded); empty when `error` set
+    pub tokens: Vec<i32>,
+    pub variant: String,
+    pub latency: Duration,
+    /// set when the request failed; `evicted` distinguishes a KV-budget
+    /// eviction (retry later / shorter) from a hard failure
+    pub error: Option<String>,
+    pub evicted: bool,
+}
+
 pub struct ServerConfig {
     pub batcher: BatcherConfig,
     pub policy: Policy,
@@ -63,14 +97,47 @@ struct Entry {
     t_submit: Instant,
 }
 
+struct GenEntry {
+    req: GenerateRequest,
+    reply: mpsc::Sender<GenerateResponse>,
+    t_submit: Instant,
+    /// server-internal cache-accounting key — disjoint from score-path
+    /// seq ids so one kind's release can never free the other's bytes
+    cache_key: u64,
+}
+
+/// One queued unit of work.
+enum Job {
+    Score(Entry),
+    Generate(GenEntry),
+}
+
+/// Cache-accounting keys for generate sessions live at and above this
+/// base; score-batch admissions draw server-internal keys *below* it
+/// ([`next_score_key`]) — neither kind is ever derived from a
+/// caller-chosen request id, so no submitted id can collide with (and
+/// release) another request's live reservation.
+const GEN_SEQ_BASE: u64 = 1 << 48;
+
+/// Server-internal admission key for one score batch, strictly below
+/// [`GEN_SEQ_BASE`]. Process-wide counter: uniqueness matters, identity
+/// does not (the key lives only from route to release within one
+/// group's execution).
+fn next_score_key() -> u64 {
+    static SCORE_SEQ: AtomicU64 = AtomicU64::new(0);
+    SCORE_SEQ.fetch_add(1, Ordering::Relaxed) & (GEN_SEQ_BASE - 1)
+}
+
 /// State shared between submitters and workers: the request queue plus
 /// lifecycle flags.
 struct Shared {
-    queue: Mutex<VecDeque<Entry>>,
+    queue: Mutex<VecDeque<Job>>,
     cv: Condvar,
     shutdown: AtomicBool,
     /// workers that finished engine init and are serving
     live: AtomicUsize,
+    /// next generate cache-accounting key (see [`GEN_SEQ_BASE`])
+    gen_seq: AtomicU64,
 }
 
 /// Decrements `Shared::live` on drop — including a worker panic (e.g. a
@@ -85,7 +152,7 @@ impl Drop for LiveGuard {
 }
 
 enum Pop {
-    Job(Box<Entry>),
+    Job(Box<Job>),
     Timeout,
     Shutdown,
 }
@@ -136,6 +203,7 @@ impl Server {
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             live: AtomicUsize::new(0),
+            gen_seq: AtomicU64::new(GEN_SEQ_BASE),
         });
         let router = Arc::new(Mutex::new(router));
         let cfg = Arc::new(cfg);
@@ -201,20 +269,43 @@ impl Server {
     /// callers keep their own thread alive either way.
     pub fn submit(&self, req: ScoreRequest)
                   -> Result<mpsc::Receiver<ScoreResponse>> {
+        self.check_accepting()?;
+        let (rtx, rrx) = mpsc::channel();
+        self.shared.queue.lock().unwrap().push_back(Job::Score(Entry {
+            req,
+            reply: rtx,
+            t_submit: Instant::now(),
+        }));
+        self.shared.cv.notify_one();
+        Ok(rrx)
+    }
+
+    /// Enqueue an autoregressive decode request; the popping worker runs
+    /// the whole prefill+step session and replies once.
+    pub fn submit_generate(&self, req: GenerateRequest)
+                           -> Result<mpsc::Receiver<GenerateResponse>> {
+        self.check_accepting()?;
+        let cache_key = self.shared.gen_seq.fetch_add(1, Ordering::SeqCst);
+        let (rtx, rrx) = mpsc::channel();
+        self.shared.queue.lock().unwrap().push_back(
+            Job::Generate(GenEntry {
+                req,
+                reply: rtx,
+                t_submit: Instant::now(),
+                cache_key,
+            }));
+        self.shared.cv.notify_one();
+        Ok(rrx)
+    }
+
+    fn check_accepting(&self) -> Result<()> {
         if self.shared.shutdown.load(Ordering::SeqCst) {
             bail!("server is shutting down");
         }
         if self.shared.live.load(Ordering::SeqCst) == 0 {
             bail!("no live server workers");
         }
-        let (rtx, rrx) = mpsc::channel();
-        self.shared.queue.lock().unwrap().push_back(Entry {
-            req,
-            reply: rtx,
-            t_submit: Instant::now(),
-        });
-        self.shared.cv.notify_one();
-        Ok(rrx)
+        Ok(())
     }
 
     /// Number of workers currently serving.
@@ -264,29 +355,229 @@ fn worker_loop(widx: usize, engine: &Engine, shared: &Shared,
                 .unwrap_or(Duration::ZERO)
         };
         match pop(shared, timeout) {
-            Pop::Job(e) => {
-                metrics.incr("requests", 1);
-                batcher.push(*e, Instant::now());
-            }
+            Pop::Job(job) => match *job {
+                Job::Score(e) => {
+                    metrics.incr("requests", 1);
+                    batcher.push(e, Instant::now());
+                }
+                Job::Generate(g) => {
+                    // decode sessions run on the popping worker, between
+                    // that worker's score flushes; other workers keep
+                    // draining the queue meanwhile. A session can run
+                    // for many steps, so flush any score batch whose
+                    // deadline already passed *first* — its replies must
+                    // not wait behind the whole decode.
+                    metrics.incr("gen_requests", 1);
+                    flush_due(widx, engine, router, cfg, metrics,
+                              &mut batcher, false);
+                    run_generate(widx, engine, router, g, metrics);
+                }
+            },
             Pop::Timeout => {}
             Pop::Shutdown => draining = true,
         }
-        let now = Instant::now();
-        if batcher.ready(now) || (draining && !batcher.is_empty()) {
-            let entries = batcher.flush(now);
-            if let Err(e) = execute_batch(engine, router, cfg, entries,
-                                          metrics) {
-                metrics.incr("batch_errors", 1);
-                eprintln!("[server worker {widx}] batch error: {e:#}");
-            } else {
-                metrics.incr(&format!("worker_{widx}_batches"), 1);
-            }
-        }
+        flush_due(widx, engine, router, cfg, metrics, &mut batcher,
+                  draining);
         if draining && batcher.is_empty()
             && shared.queue.lock().unwrap().is_empty() {
             break;
         }
     }
+}
+
+/// Flush the worker's batcher when its deadline/size trigger has fired
+/// (or unconditionally while draining) and execute the batch.
+fn flush_due(widx: usize, engine: &Engine, router: &Mutex<Router>,
+             cfg: &ServerConfig, metrics: &Arc<Metrics>,
+             batcher: &mut Batcher<Entry>, draining: bool) {
+    let now = Instant::now();
+    if batcher.ready(now) || (draining && !batcher.is_empty()) {
+        let entries = batcher.flush(now);
+        if let Err(e) = execute_batch(engine, router, cfg, entries,
+                                      metrics) {
+            metrics.incr("batch_errors", 1);
+            eprintln!("[server worker {widx}] batch error: {e:#}");
+        } else {
+            metrics.incr(&format!("worker_{widx}_batches"), 1);
+        }
+    }
+}
+
+/// Run one decode request end to end on this worker: route + admit the
+/// prompt, open a cached decode session on the variant's step program,
+/// then sample/extend token by token with every cache-growing step
+/// charged to the variant's [`super::kvcache::KvCacheManager`]. A false
+/// `extend` verdict means the manager evicted this sequence: the live
+/// session is dropped (its tensors go with it) and the request gets an
+/// eviction error — other requests are untouched.
+fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
+                g: GenEntry, metrics: &Arc<Metrics>) {
+    use crate::eval::generate::pick_token;
+    use crate::util::rng::Rng;
+
+    // decode sessions are windowless — cfg.seq_len is the *score*
+    // program's window and does not bound them. The real capacity check
+    // (prompt + max_new - 1 vs session.max_tokens()) runs right after
+    // the session opens, before any prefill cost.
+    if g.req.prompt.is_empty() {
+        metrics.incr("request_errors", 1);
+        let _ = g.reply.send(GenerateResponse {
+            id: g.req.id,
+            tokens: vec![],
+            variant: String::new(),
+            latency: g.t_submit.elapsed(),
+            error: Some("empty prompt".to_string()),
+            evicted: false,
+        });
+        return;
+    }
+    // admission: reserve the prompt's cache footprint on a variant (the
+    // router lock is held for the routing decision only, never across
+    // the decode)
+    let routed = {
+        let mut r = router.lock().unwrap();
+        match r.route(g.cache_key, g.req.prompt.len()) {
+            Some(vidx) => {
+                let v = &r.variants[vidx];
+                (Some(vidx), v.step_program.clone(), v.name.clone(),
+                 Some(v.weights.clone()))
+            }
+            None => (None, String::new(), String::new(), None),
+        }
+    };
+    let (Some(vidx), program, vname, Some(weights)) = routed else {
+        metrics.incr("gen_rejected", 1);
+        let _ = g.reply.send(GenerateResponse {
+            id: g.req.id,
+            tokens: vec![],
+            variant: String::new(),
+            latency: g.t_submit.elapsed(),
+            error: Some(format!(
+                "cache admission rejected: no variant has KV budget for \
+                 {} prompt tokens", g.req.prompt.len())),
+            evicted: false,
+        });
+        return;
+    };
+    let mut rng = Rng::new(g.req.seed);
+    let mut tokens: Vec<i32> = Vec::with_capacity(g.req.max_new);
+    let mut evicted = false;
+    let result: Result<()> = (|| {
+        let mut session =
+            engine.program(&program)?.decode_session(&weights)?;
+        // sessions are windowless but bounded by the model's positional
+        // table: reject an overshooting request before paying the
+        // prefill it would waste (the final sampled token is never fed
+        // back, hence the -1)
+        let need = g.req.prompt.len() + g.req.max_new.saturating_sub(1);
+        if need > session.max_tokens() {
+            bail!("prompt {} + {} new tokens needs {need} positions but \
+                   the model's context holds {}", g.req.prompt.len(),
+                  g.req.max_new, session.max_tokens());
+        }
+        // re-admit at the session's REAL footprint: the variant's
+        // nominal CacheKind routed the request, but what the budget
+        // must cover is the DecodeState this session actually holds
+        // (serve's latent-accounted variant may run dense-layout
+        // compressed weights, 2d/token instead of rk+rv)
+        let admitted = {
+            let mut r = router.lock().unwrap();
+            let cache = &mut r.variants[vidx].cache;
+            let actual_bpt = cache.bytes_per_token_for(
+                session.cache_kind(), session.n_layers());
+            cache.admit_with(g.cache_key, g.req.prompt.len(), actual_bpt)
+        };
+        if !admitted {
+            // admit_with released the nominal reservation before
+            // failing, so there is nothing left to return
+            evicted = true;
+            bail!("evicted: {}-token prompt does not fit the KV budget \
+                   at the session's real footprint", g.req.prompt.len());
+        }
+        let mut logits = session.prefill(&g.req.prompt)?;
+        for step in 0..g.req.max_new {
+            let next =
+                pick_token(&logits, g.req.temperature, &mut rng) as i32;
+            tokens.push(next);
+            if step + 1 == g.req.max_new {
+                // the final token is never fed back: its logits would go
+                // unused and its cache row was never reserved
+                break;
+            }
+            let alive = {
+                let mut r = router.lock().unwrap();
+                r.variants[vidx].cache.extend(g.cache_key)
+            };
+            if !alive {
+                evicted = true;
+                bail!("evicted: KV cache budget exhausted after {} of {} \
+                       tokens", tokens.len(), g.req.max_new);
+            }
+            logits = session.step(next)?;
+        }
+        Ok(())
+    })();
+    // a failed extend already removed the sequence and returned its
+    // bytes; every other exit releases the admission here. The manager's
+    // peak_bytes is exact and monotone, so one gauge sample per request
+    // captures every admit/extend that preceded it — no per-token
+    // metrics traffic, no sampling site to forget.
+    {
+        let mut r = router.lock().unwrap();
+        if !evicted {
+            r.release(vidx, g.cache_key);
+        }
+        sample_cache_peaks(&r, metrics);
+    }
+    let latency = g.t_submit.elapsed();
+    match result {
+        Ok(()) => {
+            metrics.incr("gen_tokens", tokens.len() as u64);
+            metrics.incr(&format!("worker_{widx}_gen_tokens"),
+                         tokens.len() as u64);
+            metrics.observe("gen_us", latency);
+            let _ = g.reply.send(GenerateResponse {
+                id: g.req.id,
+                tokens,
+                variant: vname,
+                latency,
+                error: None,
+                evicted: false,
+            });
+        }
+        Err(e) => {
+            if evicted {
+                metrics.incr("gen_evictions", 1);
+                metrics.incr(&format!("worker_{widx}_evictions"), 1);
+            } else {
+                metrics.incr("gen_errors", 1);
+            }
+            let _ = g.reply.send(GenerateResponse {
+                id: g.req.id,
+                tokens: vec![],
+                variant: vname,
+                latency,
+                error: Some(format!("{e:#}")),
+                evicted,
+            });
+        }
+    }
+}
+
+/// Publish each variant's exact, monotone `peak_bytes` plus their sum
+/// as the fleet gauge — one sample per completed request captures every
+/// admit/extend that preceded it, with no per-token metrics traffic and
+/// no sampling site to forget. (The sum of per-variant peaks is the
+/// budget-relevant capacity number: each variant holds its own budget.)
+fn sample_cache_peaks(r: &Router, metrics: &Arc<Metrics>) {
+    let mut fleet = 0usize;
+    for v in &r.variants {
+        let peak = v.cache.peak_bytes;
+        fleet += peak;
+        metrics.set_max(&format!("cache_bytes_peak_{}", v.name),
+                        peak as u64);
+    }
+    metrics.set_max("cache_bytes_peak", fleet as u64);
 }
 
 /// Reject a request the program can never score; the caller gets a
@@ -358,8 +649,7 @@ fn execute_group(engine: &Engine, router: &Mutex<Router>,
                  cfg: &ServerConfig,
                  entries: Vec<super::batcher::Pending<Entry>>,
                  metrics: &Arc<Metrics>) -> Result<()> {
-    let seq_id = entries[0].item.req.id;
-    match score_group(engine, router, cfg, &entries, seq_id, metrics) {
+    match score_group(engine, router, cfg, &entries, metrics) {
         Ok((nll, vname)) => {
             metrics.incr("batches", 1);
             metrics.incr(&format!("variant_{vname}"),
@@ -398,14 +688,16 @@ fn execute_group(engine: &Engine, router: &Mutex<Router>,
 /// (the pre-split code leaked the admission when execution failed).
 fn score_group(engine: &Engine, router: &Mutex<Router>,
                cfg: &ServerConfig,
-               entries: &[super::batcher::Pending<Entry>], seq_id: u64,
+               entries: &[super::batcher::Pending<Entry>],
                metrics: &Arc<Metrics>) -> Result<(Vec<f32>, String)> {
     // route the whole group to one variant (vLLM-style per-batch
     // placement); weights are Arc-shared so the router lock is not held
-    // across the execution
+    // across the execution. The admission key is server-internal,
+    // namespaced away from decode-session keys (see next_score_key).
+    let admit_key = next_score_key();
     let (vidx, program, vname, weights) = {
         let mut r = router.lock().unwrap();
-        let vidx = r.route(seq_id, cfg.seq_len).unwrap_or(0);
+        let vidx = r.route(admit_key, cfg.seq_len).unwrap_or(0);
         let v = &r.variants[vidx];
         (vidx, v.score_program.clone(), v.name.clone(), v.weights.clone())
     };
@@ -429,6 +721,10 @@ fn score_group(engine: &Engine, router: &Mutex<Router>,
         metrics.observe("exec_us", t_exec.elapsed());
         Ok(nll)
     })();
-    router.lock().unwrap().release(vidx, seq_id);
+    {
+        let mut r = router.lock().unwrap();
+        r.release(vidx, admit_key);
+        sample_cache_peaks(&r, metrics);
+    }
     result.map(|nll| (nll, vname))
 }

@@ -1,8 +1,19 @@
 //! Rust-side synthetic corpus generator — the same topic-switching bigram
 //! family as python/compile/data.py (different seeds; used by unit tests,
 //! benches, and the serving example's request generator so they don't
-//! depend on artifacts being present).
+//! depend on artifacts being present) — plus a full offline artifacts
+//! synthesizer ([`write_test_artifacts`]): manifest + random dense and
+//! latent weight sets + corpora + calibration in a directory, so the CLI
+//! (`latentllm synth-artifacts`), bench_decode, and CI smoke runs drive
+//! the real Engine/serving stack with zero python in the loop.
 
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::model::config::MiniConfig;
+use crate::model::io::{write_ltw, Tensor, TensorMap};
+use crate::util::json::Value;
 use crate::util::rng::Rng;
 
 pub struct SynthCorpus {
@@ -54,6 +65,183 @@ impl SynthCorpus {
         }
         out
     }
+}
+
+// ---------------------------------------------------------------------------
+// Offline artifacts synthesizer
+// ---------------------------------------------------------------------------
+
+fn num(v: usize) -> Value {
+    Value::Num(v as f64)
+}
+
+fn s(v: &str) -> Value {
+    Value::Str(v.to_string())
+}
+
+fn str_arr(names: &[&str]) -> Value {
+    Value::Arr(names.iter().map(|n| s(n)).collect())
+}
+
+fn lm_config_json(cfg: &MiniConfig) -> Value {
+    Value::obj(vec![
+        ("name", s(cfg.name)),
+        ("vocab", num(cfg.vocab)),
+        ("d", num(cfg.d)),
+        ("n_layers", num(cfg.n_layers)),
+        ("n_heads", num(cfg.n_heads)),
+        ("d_i", num(cfg.d_i)),
+        ("max_len", num(cfg.max_len)),
+    ])
+}
+
+/// Random latent/MLA weight set in the python `latent_shapes` layout
+/// (compression planes `a*`, per-head decompressors `b*_heads`, low-rank
+/// output/MLP factors). Ranks scale with the model width.
+pub fn random_latent_weights(cfg: &MiniConfig, seed: u64) -> crate::model::Weights {
+    let (d, h, di) = (cfg.d, cfg.n_heads, cfg.d_i);
+    let dh = d / h.max(1);
+    // the single source for the latent ranks — admission accounting
+    // reads the same function, so weights and CacheKind cannot drift
+    let (r_qkv, _) = latent_demo_ranks(d);
+    let r_low = (d / 6).max(2);
+    let mut rng = Rng::new(seed);
+    let sc = 0.5 / (d as f64).sqrt();
+    let mut map = TensorMap::new();
+    let rand_t = |rng: &mut Rng, shape: &[usize], scale: f64| {
+        let n: usize = shape.iter().product();
+        Tensor::F32 {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| (rng.normal() * scale) as f32).collect(),
+        }
+    };
+    let const_t = |shape: &[usize], v: f32| {
+        let n: usize = shape.iter().product();
+        Tensor::F32 { shape: shape.to_vec(), data: vec![v; n] }
+    };
+    map.insert("tok_emb".to_string(),
+               rand_t(&mut rng, &[cfg.vocab, d], sc));
+    map.insert("pos_emb".to_string(),
+               rand_t(&mut rng, &[cfg.max_len, d], sc));
+    for i in 0..cfg.n_layers {
+        let p = format!("layers.{i}.");
+        map.insert(format!("{p}ln1.g"), const_t(&[d], 1.0));
+        map.insert(format!("{p}ln1.b"), const_t(&[d], 0.0));
+        for (a, b, bias) in [("aq", "bq_heads", "bq"),
+                             ("ak", "bk_heads", "bk"),
+                             ("av", "bv_heads", "bv")] {
+            map.insert(format!("{p}attn.{a}"),
+                       rand_t(&mut rng, &[r_qkv, d], sc));
+            map.insert(format!("{p}attn.{b}"),
+                       rand_t(&mut rng, &[h, dh, r_qkv], sc));
+            map.insert(format!("{p}attn.{bias}"), const_t(&[d], 0.01));
+        }
+        map.insert(format!("{p}attn.ao_heads"),
+                   rand_t(&mut rng, &[r_low, h * dh], sc));
+        map.insert(format!("{p}attn.bo_mat"),
+                   rand_t(&mut rng, &[d, r_low], sc));
+        map.insert(format!("{p}attn.bo"), const_t(&[d], 0.0));
+        map.insert(format!("{p}ln2.g"), const_t(&[d], 1.0));
+        map.insert(format!("{p}ln2.b"), const_t(&[d], 0.0));
+        map.insert(format!("{p}mlp.au"), rand_t(&mut rng, &[r_low, d], sc));
+        map.insert(format!("{p}mlp.bu_mat"),
+                   rand_t(&mut rng, &[di, r_low], sc));
+        map.insert(format!("{p}mlp.bu"), const_t(&[di], 0.01));
+        map.insert(format!("{p}mlp.ad"), rand_t(&mut rng, &[r_low, di], sc));
+        map.insert(format!("{p}mlp.bd_mat"),
+                   rand_t(&mut rng, &[d, r_low], sc));
+        map.insert(format!("{p}mlp.bd"), const_t(&[d], 0.0));
+    }
+    map.insert("lnf.g".to_string(), const_t(&[d], 1.0));
+    map.insert("lnf.b".to_string(), const_t(&[d], 0.0));
+    crate::model::Weights::new(map)
+}
+
+/// Latent ranks [`random_latent_weights`] bakes into a width-`d` model —
+/// what a `CacheKind::Latent` admission for its decode sessions should
+/// use.
+pub fn latent_demo_ranks(d: usize) -> (usize, usize) {
+    let r = (d / 8).max(2);
+    (r, r)
+}
+
+/// Write a complete synthetic artifacts directory for `cfg`:
+/// `manifest.json` (score/step + latent score/step program table, model
+/// config, `latent_demo` record), `model_<name>.ltw` (random dense
+/// weights), `latent_model_<tag>.ltw`, `corpora.ltw`
+/// (`synthwiki.{train,test}` streams), and `calib_<name>.ltw`. Returns
+/// the latent demo tag. Everything downstream of `make artifacts` that
+/// the rust stack needs, generated offline in milliseconds.
+pub fn write_test_artifacts(dir: impl AsRef<Path>, cfg: &MiniConfig,
+                            seed: u64) -> Result<String> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let name = cfg.name;
+    let tag = format!("{name}-demo");
+
+    let as_arr = |v: &[String]| {
+        Value::Arr(v.iter().map(|n| s(n)).collect())
+    };
+    let mut score_order = vec!["tokens".to_string()];
+    score_order.extend(cfg.param_names());
+    let mut step_order = vec!["tokens".to_string(), "lens".to_string()];
+    step_order.extend(cfg.param_names());
+    let mut programs = std::collections::BTreeMap::new();
+    programs.insert(format!("score_{name}"), as_arr(&score_order));
+    programs.insert(format!("step_{name}"), as_arr(&step_order));
+    programs.insert(format!("latent_score_{tag}"), str_arr(&["tokens"]));
+    programs.insert(format!("latent_step_{tag}"),
+                    str_arr(&["tokens", "lens"]));
+    let programs = Value::Obj(programs);
+    let manifest = Value::obj(vec![
+        ("seq_len", num(cfg.max_len)),
+        ("score_batch", num(8)),
+        ("vocab", num(cfg.vocab)),
+        ("programs", programs),
+        ("models", Value::obj(vec![(
+            name, Value::obj(vec![("config", lm_config_json(cfg))]),
+        )])),
+        ("latent_demo", Value::obj(vec![
+            ("tag", s(&tag)),
+            ("model", s(name)),
+        ])),
+        ("synthesized", Value::Bool(true)),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.to_string_pretty())?;
+
+    let dense = crate::compress::pipeline::tests_support::random_weights(
+        cfg, seed);
+    write_ltw(dir.join(format!("model_{name}.ltw")), dense.map())?;
+    let latent = random_latent_weights(cfg, seed + 1);
+    write_ltw(dir.join(format!("latent_model_{tag}.ltw")), latent.map())?;
+
+    // topic-switching bigram corpus, train + test splits
+    let gen = SynthCorpus::new(cfg.vocab, 4, 8, 1.2, 0.02, seed + 2);
+    let mut corpora = TensorMap::new();
+    for (split, n, walk) in [("train", 20_000usize, 1u64), ("test", 8_000, 2)]
+    {
+        corpora.insert(format!("synthwiki.{split}"), Tensor::I32 {
+            shape: vec![n],
+            data: gen.generate(n, walk),
+        });
+    }
+    write_ltw(dir.join("corpora.ltw"), &corpora)?;
+
+    // calibration activations: correlated Gaussians, [d × l] per module
+    let mut rng = Rng::new(seed + 3);
+    let mut calib = TensorMap::new();
+    let l = 64usize;
+    for i in 0..cfg.n_layers {
+        for kind in ["attn_x", "o_x", "mlp_x"] {
+            let m = rng.normal_matrix(cfg.d, l);
+            calib.insert(format!("layers.{i}.{kind}"), Tensor::F32 {
+                shape: vec![cfg.d, l],
+                data: m.to_f32(),
+            });
+        }
+    }
+    write_ltw(dir.join(format!("calib_{name}.ltw")), &calib)?;
+    Ok(tag)
 }
 
 #[cfg(test)]

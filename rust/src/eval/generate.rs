@@ -1,10 +1,26 @@
-//! Batched autoregressive generation through the `step_*` programs —
-//! the serving decode path. The program signature is fixed
-//! (tokens [B,T], lens [B], weights…) → next-token logits [B,V], so the
-//! generator keeps a sliding window of the last T tokens per sequence and
-//! decodes all B lanes in lockstep (static-shape continuous decode).
+//! Batched autoregressive generation — the serving decode path.
+//!
+//! Two modes share one entry point:
+//!
+//! * **Incremental (default)** — one [`crate::runtime::DecodeSession`]
+//!   per lane: the prompt is prefilled once, then each new token is a
+//!   single-row forward against the per-layer KV/latent caches — O(d·T)
+//!   per token, O(T) total scaling (bench_decode). Context is windowless:
+//!   sessions extend absolute positions up to the model's positional
+//!   table.
+//! * **Full-window recompute (`use_cache = false`, CLI `--no-cache`)** —
+//!   the pre-session reference path through the `step_*` programs
+//!   (tokens [B,T], lens [B] → next-token logits [B,V]): a sliding
+//!   window of the last T tokens re-executed every step, O(T²) per
+//!   emitted token. Kept as the equivalence oracle — greedy decode is
+//!   pinned token-for-token identical to the cached path by
+//!   tests/decode.rs — and for sequences that must slide past the
+//!   positional table.
+//!
+//! Both modes consume the sampling RNG in the same lane-major order, so
+//! temperature sampling is also reproducible across modes.
 
-use anyhow::Result;
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::model::Weights;
 use crate::runtime::{Engine, ParamValue};
@@ -15,11 +31,15 @@ pub struct GenerateOpts {
     /// 0.0 = greedy; otherwise softmax temperature sampling
     pub temperature: f64,
     pub seed: u64,
+    /// incremental KV-cached decode (default); false = full-window
+    /// recompute reference
+    pub use_cache: bool,
 }
 
 impl Default for GenerateOpts {
     fn default() -> Self {
-        GenerateOpts { max_new: 32, temperature: 0.0, seed: 0 }
+        GenerateOpts { max_new: 32, temperature: 0.0, seed: 0,
+                       use_cache: true }
     }
 }
 
@@ -28,17 +48,103 @@ pub struct GenerateResult {
     pub tokens_generated: usize,
     pub seconds: f64,
     pub tokens_per_sec: f64,
+    /// peak cached floats across all lanes' sessions (0 on the
+    /// recompute path, which holds no state)
+    pub peak_cache_elements: usize,
 }
 
 /// Decode `prompts` (≤ program batch) for `opts.max_new` steps.
 pub fn generate(engine: &Engine, program: &str, weights: &Weights,
                 prompts: &[Vec<i32>], batch: usize, seq_len: usize,
                 vocab: usize, opts: &GenerateOpts) -> Result<GenerateResult> {
-    assert!(prompts.len() <= batch, "at most {batch} lanes");
+    if prompts.is_empty() {
+        bail!("generate: no prompts");
+    }
+    if prompts.len() > batch {
+        bail!("generate: {} prompts exceed the program batch of {batch} \
+               lanes", prompts.len());
+    }
+    // an empty prompt would reach the program as lens = 0 and decode
+    // from padding — reject it up front with the lane index
+    for (i, p) in prompts.iter().enumerate() {
+        if p.is_empty() {
+            bail!("generate: prompt {i} is empty");
+        }
+    }
+    if opts.use_cache {
+        generate_cached(engine, program, weights, prompts, vocab, opts)
+    } else {
+        generate_recompute(engine, program, weights, prompts, batch,
+                           seq_len, vocab, opts)
+    }
+}
+
+/// Incremental path: prefill each lane's session once, then lockstep
+/// single-token steps (lane-major, matching the recompute path's RNG
+/// consumption order).
+fn generate_cached(engine: &Engine, program: &str, weights: &Weights,
+                   prompts: &[Vec<i32>], vocab: usize, opts: &GenerateOpts)
+                   -> Result<GenerateResult> {
     let prog = engine.program(program)?;
     let mut rng = Rng::new(opts.seed);
     let mut seqs: Vec<Vec<i32>> = prompts.to_vec();
-    let active = seqs.len();
+    let t0 = std::time::Instant::now();
+
+    let mut lanes = Vec::with_capacity(prompts.len());
+    for (i, p) in prompts.iter().enumerate() {
+        let mut session = prog.decode_session(weights)
+            .with_context(|| format!("lane {i}"))?;
+        // fail fast: an overshooting request would pay the prefill and
+        // most of the decode before the positional table bails (the
+        // final sampled token is never fed back, hence the -1)
+        let need = p.len() + opts.max_new.saturating_sub(1);
+        ensure!(need <= session.max_tokens(),
+                "lane {i}: prompt {} + {} new tokens needs {need} \
+                 positions but the model's context holds {} — the \
+                 recompute path (use_cache = false / --no-cache) slides \
+                 instead", p.len(), opts.max_new, session.max_tokens());
+        let logits = session.prefill(p)
+            .with_context(|| format!("lane {i}: prefill {} tokens",
+                                     p.len()))?;
+        ensure!(logits.len() == vocab,
+                "lane {i}: prefill returned {} logits, expected vocab \
+                 {vocab}", logits.len());
+        lanes.push((session, logits));
+    }
+    let live_elements = |lanes: &[(Box<dyn crate::runtime::DecodeSession>,
+                                   Vec<f32>)]| {
+        lanes.iter().map(|(s, _)| s.cache_elements()).sum::<usize>()
+    };
+    let mut peak_cache = live_elements(&lanes);
+    for step in 0..opts.max_new {
+        for (i, (session, logits)) in lanes.iter_mut().enumerate() {
+            let next = pick_token(logits, opts.temperature, &mut rng) as i32;
+            seqs[i].push(next);
+            // the final sampled token is never fed back: its logits
+            // would go unused
+            if step + 1 < opts.max_new {
+                *logits = session.step(next)
+                    .with_context(|| format!("lane {i}: step {step}"))?;
+                ensure!(logits.len() == vocab,
+                        "lane {i}: step returned {} logits, expected \
+                         vocab {vocab}", logits.len());
+            }
+        }
+        // all concurrently live sessions count toward the footprint
+        peak_cache = peak_cache.max(live_elements(&lanes));
+    }
+    Ok(finish(seqs, prompts.len(), opts.max_new, t0, peak_cache))
+}
+
+/// Full-window reference path: re-feed the last `seq_len` tokens of
+/// every lane through the fixed-shape step program each round.
+fn generate_recompute(engine: &Engine, program: &str, weights: &Weights,
+                      prompts: &[Vec<i32>], batch: usize, seq_len: usize,
+                      vocab: usize, opts: &GenerateOpts)
+                      -> Result<GenerateResult> {
+    let prog = engine.program(program)?;
+    let mut rng = Rng::new(opts.seed);
+    let mut seqs: Vec<Vec<i32>> = prompts.to_vec();
     let t0 = std::time::Instant::now();
 
     for _ in 0..opts.max_new {
@@ -58,25 +164,40 @@ pub fn generate(engine: &Engine, program: &str, weights: &Weights,
             &[ParamValue::I32 { shape: vec![batch, seq_len], data: flat },
               ParamValue::I32 { shape: vec![batch], data: lens }],
             weights)?;
-        assert_eq!(logits.len(), batch * vocab, "logits shape");
+        ensure!(logits.len() == batch * vocab,
+                "step program returned {} logits for batch {batch} × \
+                 vocab {vocab}", logits.len());
         for (i, s) in seqs.iter_mut().enumerate() {
             let row = &logits[i * vocab..(i + 1) * vocab];
-            let next = if opts.temperature <= 0.0 {
-                argmax(row)
-            } else {
-                sample(row, opts.temperature, &mut rng)
-            };
-            s.push(next as i32);
+            s.push(pick_token(row, opts.temperature, &mut rng) as i32);
         }
     }
+    Ok(finish(seqs, prompts.len(), opts.max_new, t0, 0))
+}
+
+fn finish(seqs: Vec<Vec<i32>>, active: usize, max_new: usize,
+          t0: std::time::Instant, peak_cache_elements: usize)
+          -> GenerateResult {
     let seconds = t0.elapsed().as_secs_f64();
-    let tokens_generated = active * opts.max_new;
-    Ok(GenerateResult {
+    let tokens_generated = active * max_new;
+    GenerateResult {
         sequences: seqs,
         tokens_generated,
         seconds,
         tokens_per_sec: tokens_generated as f64 / seconds.max(1e-9),
-    })
+        peak_cache_elements,
+    }
+}
+
+/// Greedy argmax at temperature ≤ 0, softmax sampling otherwise. Public
+/// so the server's decode path picks tokens identically to the eval
+/// loops.
+pub fn pick_token(row: &[f32], temperature: f64, rng: &mut Rng) -> usize {
+    if temperature <= 0.0 {
+        argmax(row)
+    } else {
+        sample(row, temperature, rng)
+    }
 }
 
 fn argmax(row: &[f32]) -> usize {
@@ -121,5 +242,6 @@ mod tests {
         for _ in 0..50 {
             assert_eq!(sample(&row, 1e-6, &mut rng), 1);
         }
+        assert_eq!(pick_token(&row, 0.0, &mut rng), 1);
     }
 }

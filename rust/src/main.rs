@@ -19,7 +19,7 @@ use latentllm::compress::plan::{self, CompressionPlan, ProgressObserver,
 use latentllm::coordinator::{
     kvcache::CacheKind, kvcache::KvCacheManager,
     router::{ModelVariant, Policy, Router},
-    server::{ScoreRequest, Server, ServerConfig},
+    server::{GenerateRequest, ScoreRequest, Server, ServerConfig},
 };
 use latentllm::data::{CalibSet, Corpus};
 use latentllm::model::config::{mini_by_name, MINI_FAMILY, OPT_FAMILY};
@@ -77,12 +77,21 @@ USAGE:
                       [--artifacts DIR] [--out FILE.ltw]
   latentllm eval      --model opt-mini-m [--weights FILE.ltw]
                       [--corpus synthwiki] [--artifacts DIR]
-  latentllm serve     [--requests N] [--policy cache_aware|prefer_latent|rr]
+  latentllm serve     [--requests N] [--generate N]
+                      [--policy cache_aware|prefer_latent|rr]
                       [--workers N] [--config FILE.toml] [--artifacts DIR]
   latentllm generate  --model opt-mini-m [--prompts 8] [--new 32]
-                      [--temperature 0.8] [--latent] [--artifacts DIR]
+                      [--temperature 0.8] [--latent] [--no-cache]
+                      [--artifacts DIR]
+  latentllm synth-artifacts [--out DIR] [--model opt-mini-s] [--seed N]
   latentllm report    all|table2|table3|table4|fig4|fig5|fig7..fig16|ablations
                       [--artifacts DIR] [--out DIR] [--max-batches N]
+
+Decoding: generate runs incremental KV-cached decode sessions (O(d·T)
+       per token) by default; --no-cache keeps the full-window recompute
+       reference. synth-artifacts writes a complete offline artifacts
+       dir (manifest + random dense/latent weights + corpora + calib) so
+       generate/eval/serve run without the python pipeline.
 
 Methods (presets): plain asvd_hessian asvd_l1 asvd_l2 asvd_cov asvd_rootcov
                    latentllm latentllm_jointvo
@@ -120,6 +129,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "eval" => eval_cmd(args, &artifacts),
         "serve" => serve_cmd(args, &artifacts),
         "generate" => generate_cmd(args, &artifacts),
+        "synth-artifacts" => synth_cmd(args),
         "report" => report_cmd(args, &artifacts),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -299,10 +309,14 @@ fn eval_cmd(args: &Args, artifacts: &Path) -> Result<()> {
 fn generate_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     use latentllm::eval::generate::{generate, GenerateOpts};
     let model = args.flag("model", "opt-mini-m");
-    let n_prompts = args.usize_flag("prompts", 8).min(8);
     let engine = Engine::new(artifacts)?;
     let vocab = engine.manifest().get("vocab")
         .and_then(|v| v.as_usize()).unwrap_or(512);
+    let seq_len = engine.manifest().get("seq_len")
+        .and_then(|v| v.as_usize()).unwrap_or(128);
+    let batch = engine.manifest().get("score_batch")
+        .and_then(|v| v.as_usize()).unwrap_or(8);
+    let n_prompts = args.usize_flag("prompts", batch.min(8)).min(batch);
     let corpus = Corpus::load(artifacts.join("corpora.ltw"), "synthwiki",
                               "test")?;
     let prompts: Vec<Vec<i32>> = corpus.calibration(n_prompts, 16, 7);
@@ -310,6 +324,7 @@ fn generate_cmd(args: &Args, artifacts: &Path) -> Result<()> {
         max_new: args.usize_flag("new", 32),
         temperature: args.f64_flag("temperature", 0.0),
         seed: 11,
+        use_cache: !args.flags.contains_key("no-cache"),
     };
     let (program, weights) = if args.flags.contains_key("latent") {
         let tag = engine.manifest().path(&["latent_demo", "tag"])
@@ -320,16 +335,38 @@ fn generate_cmd(args: &Args, artifacts: &Path) -> Result<()> {
         (format!("step_{model}"),
          Weights::load(artifacts.join(format!("model_{model}.ltw")))?)
     };
-    let res = generate(&engine, &program, &weights, &prompts, 8, 128,
-                       vocab, &opts)?;
+    let res = generate(&engine, &program, &weights, &prompts, batch,
+                       seq_len, vocab, &opts)?;
     for (i, s) in res.sequences.iter().enumerate() {
         let tail: Vec<i32> = s[s.len().saturating_sub(opts.max_new)..]
             .to_vec();
         println!("seq {i}: ...{tail:?}");
     }
-    println!("generated {} tokens in {:.2}s — {:.1} tok/s (program {})",
-             res.tokens_generated, res.seconds, res.tokens_per_sec,
-             program);
+    let mode = if opts.use_cache { "incremental KV-cached" }
+               else { "full-window recompute" };
+    println!("generated {} tokens in {:.2}s — {:.1} tok/s \
+              (program {program}, {mode})",
+             res.tokens_generated, res.seconds, res.tokens_per_sec);
+    if opts.use_cache {
+        println!("  peak cache: {} floats across {} lane(s)",
+                 res.peak_cache_elements, res.sequences.len());
+    }
+    Ok(())
+}
+
+/// Write a complete synthetic artifacts directory (manifest + random
+/// dense/latent weights + corpora + calibration) — the offline stand-in
+/// for `make artifacts`, used by CI smoke runs and quick local demos.
+fn synth_cmd(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.flag("out", "artifacts-synth"));
+    let model = args.flag("model", "opt-mini-s");
+    let cfg = mini_by_name(&model)
+        .with_context(|| format!("unknown model {model:?}"))?;
+    let seed = args.usize_flag("seed", 7) as u64;
+    let tag = latentllm::data::synth::write_test_artifacts(&out, cfg,
+                                                           seed)?;
+    println!("wrote synthetic artifacts for {model} (latent tag {tag}) \
+              to {}", out.display());
     Ok(())
 }
 
@@ -366,6 +403,7 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
         ModelVariant {
             name: "dense".into(),
             score_program: format!("score_{model}"),
+            step_program: format!("step_{model}"),
             weights: std::sync::Arc::new(weights),
             cache: KvCacheManager::new(CacheKind::Dense { d: cfg.d },
                                        cfg.n_layers, 2, budget),
@@ -373,6 +411,7 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
         ModelVariant {
             name: "latent30".into(),
             score_program: format!("score_{model}"),
+            step_program: format!("step_{model}"),
             weights: std::sync::Arc::new(latent_w),
             cache: KvCacheManager::new(
                 CacheKind::Latent { rk: r_lat, rv: r_lat },
@@ -392,10 +431,24 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     let corpus = Corpus::load(artifacts.join("corpora.ltw"), "synthwiki",
                               "test")?;
     let reqs = corpus.calibration(n_requests, file_cfg.serve.seq_len, 99);
+    let n_generate = args.usize_flag("generate", 8);
+    let gen_prompts = corpus.calibration(n_generate, 16, 101);
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::with_capacity(n_requests);
     for (i, tokens) in reqs.into_iter().enumerate() {
         rxs.push(server.submit(ScoreRequest { id: i as u64, tokens })?);
+    }
+    // decode traffic rides alongside the score batches: each request is
+    // a full prefill+step session against the variant's KV budget
+    let mut gen_rxs = Vec::with_capacity(n_generate);
+    for (i, prompt) in gen_prompts.into_iter().enumerate() {
+        gen_rxs.push(server.submit_generate(GenerateRequest {
+            id: i as u64,
+            prompt,
+            max_new: args.usize_flag("new", 16),
+            temperature: 0.0,
+            seed: 13 + i as u64,
+        })?);
     }
     let mut ok = 0;
     for rx in rxs {
@@ -404,10 +457,28 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
             _ => {}
         }
     }
+    let mut gen_ok = 0;
+    let mut gen_evicted = 0;
+    for rx in gen_rxs {
+        match rx.recv() {
+            Ok(resp) if resp.error.is_none() => gen_ok += 1,
+            Ok(resp) if resp.evicted => gen_evicted += 1,
+            _ => {}
+        }
+    }
     let dt = t0.elapsed();
     let metrics = server.shutdown();
-    println!("served {ok}/{n_requests} in {:.2}s ({:.1} req/s)",
+    println!("served {ok}/{n_requests} score requests in {:.2}s \
+              ({:.1} req/s)",
              dt.as_secs_f64(), ok as f64 / dt.as_secs_f64());
+    if n_generate > 0 {
+        let gen_tokens = metrics.counter("gen_tokens");
+        println!("decoded {gen_ok}/{n_generate} generate requests \
+                  ({gen_evicted} evicted) — {gen_tokens} tokens, \
+                  {:.1} tok/s, peak cache {} bytes",
+                 gen_tokens as f64 / dt.as_secs_f64().max(1e-9),
+                 metrics.gauge("cache_bytes_peak"));
+    }
     print!("{}", metrics.summary());
     Ok(())
 }

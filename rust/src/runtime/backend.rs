@@ -11,8 +11,9 @@
 
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use super::decode::CacheKind;
 use super::literal::ParamValue;
 use crate::model::Weights;
 use crate::util::json::Value;
@@ -36,6 +37,59 @@ pub struct ProgramCtx<'a> {
 pub trait Executable {
     fn execute(&self, leading: &[ParamValue], weights: &Weights,
                weight_order: &[String]) -> Result<Vec<f32>>;
+
+    /// Open a stateful incremental-decode session over this program's
+    /// model with the given weights. Meaningful for the decode families
+    /// (`step_*`, `latent_step_*`); backends without an incremental path
+    /// keep this default error and callers fall back to the full-window
+    /// recompute loop.
+    fn open_session(&self, _weights: &Weights)
+                    -> Result<Box<dyn DecodeSession>> {
+        bail!("this backend does not support incremental decode sessions")
+    }
+}
+
+/// A stateful autoregressive decode over one sequence: prefill the prompt
+/// once, then extend one token at a time against per-layer cache tensors
+/// ([`crate::runtime::decode::DecodeState`]). Each step is O(d·T) — prior
+/// tokens' K/V (dense) or latents (MLA) are read from the cache, never
+/// recomputed — versus the O(T²)-per-token full-window re-execution.
+///
+/// Sessions are single-sequence and not required to be `Send` (the PJRT
+/// client is `Rc`-based); server workers create and drive them on their
+/// own thread.
+pub trait DecodeSession {
+    /// Feed the whole prompt through every layer, populating the caches.
+    /// Returns the next-token logits ([vocab]). Errors on an empty
+    /// prompt, a second prefill, or a prompt longer than the model's
+    /// positional table.
+    fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// Append one token and return the next-token logits ([vocab]).
+    /// Errors before prefill or past the positional table (incremental
+    /// decode is windowless — it extends absolute positions rather than
+    /// sliding, so the table bounds the session length).
+    fn step(&mut self, token: i32) -> Result<Vec<f32>>;
+
+    /// Tokens currently held in the caches.
+    fn cached_tokens(&self) -> usize;
+
+    /// Hard capacity of this session in tokens (the model's positional
+    /// table): prefill + steps whose cached positions would exceed it
+    /// error. Callers reject `prompt + max_new - 1 > max_tokens()`
+    /// up front instead of paying a prefill that must fail mid-decode.
+    fn max_tokens(&self) -> usize;
+
+    /// Footprint descriptor for admission accounting (layer-0 ranks when
+    /// latent ranks vary per layer; [`DecodeSession::cache_elements`] is
+    /// exact).
+    fn cache_kind(&self) -> CacheKind;
+
+    /// Attention layers holding cache state.
+    fn n_layers(&self) -> usize;
+
+    /// Exact cached floats across all layers.
+    fn cache_elements(&self) -> usize;
 }
 
 /// Compiles manifest programs into executables.

@@ -1,0 +1,150 @@
+//! Per-layer decode cache state — the tensors behind an incremental
+//! [`crate::runtime::backend::DecodeSession`].
+//!
+//! The paper's serving benefit (ii) made real: a dense MHA layer caches
+//! the projected K/V rows (`2·d` floats per token per layer) while a
+//! latent MLA layer caches only the compressed latent vectors (`r_k +
+//! r_v` floats per token per layer). The coordinator's
+//! [`crate::coordinator::kvcache::KvCacheManager`] budgets admission
+//! against exactly these footprints ([`CacheKind`] lives here so the
+//! runtime that *holds* the state and the coordinator that *accounts* it
+//! agree by construction).
+
+use crate::Matrix;
+
+/// Cache-footprint descriptor for one model variant's attention layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheKind {
+    /// dense MHA: 2·d per token per layer
+    Dense { d: usize },
+    /// MLA: r_k + r_v per token per layer
+    Latent { rk: usize, rv: usize },
+}
+
+impl CacheKind {
+    pub fn bytes_per_token_layer(&self, bytes_per_el: usize) -> usize {
+        self.elements_per_token() * bytes_per_el
+    }
+
+    /// Cached floats per token per layer (the paper's footprint).
+    pub fn elements_per_token(&self) -> usize {
+        match self {
+            CacheKind::Dense { d } => 2 * d,
+            CacheKind::Latent { rk, rv } => rk + rv,
+        }
+    }
+}
+
+/// One attention layer's cache tensors, one row per cached token.
+pub enum LayerCache {
+    /// projected K/V rows: `k`/`v` are [t, d]
+    Dense { k: Matrix, v: Matrix },
+    /// compressed latents: `ck` is [t, r_k], `cv` is [t, r_v] — the
+    /// decompressors stay in the weights, never in the cache
+    Latent { ck: Matrix, cv: Matrix },
+}
+
+impl LayerCache {
+    pub fn dense(d: usize) -> LayerCache {
+        LayerCache::Dense { k: Matrix::zeros(0, d), v: Matrix::zeros(0, d) }
+    }
+
+    pub fn latent(rk: usize, rv: usize) -> LayerCache {
+        LayerCache::Latent {
+            ck: Matrix::zeros(0, rk),
+            cv: Matrix::zeros(0, rv),
+        }
+    }
+
+    /// Tokens currently cached in this layer.
+    pub fn tokens(&self) -> usize {
+        match self {
+            LayerCache::Dense { k, .. } => k.rows(),
+            LayerCache::Latent { ck, .. } => ck.rows(),
+        }
+    }
+
+    /// Cached floats per token (2·d dense, r_k + r_v latent).
+    pub fn elements_per_token(&self) -> usize {
+        match self {
+            LayerCache::Dense { k, v } => k.cols() + v.cols(),
+            LayerCache::Latent { ck, cv } => ck.cols() + cv.cols(),
+        }
+    }
+}
+
+/// Whole-model decode state: one [`LayerCache`] per attention layer plus
+/// the absolute token position (which indexes the positional table).
+pub struct DecodeState {
+    pub layers: Vec<LayerCache>,
+    tokens: usize,
+}
+
+impl DecodeState {
+    pub fn new(layers: Vec<LayerCache>) -> DecodeState {
+        DecodeState { layers, tokens: 0 }
+    }
+
+    /// Tokens fed through prefill + step so far (the next token's
+    /// absolute position).
+    pub fn cached_tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// Record that `n` more tokens were appended to every layer cache.
+    pub fn advance(&mut self, n: usize) {
+        self.tokens += n;
+    }
+
+    /// Total cached floats across all layers (exact, even when latent
+    /// ranks differ per layer).
+    pub fn cache_elements(&self) -> usize {
+        self.layers.iter()
+            .map(|l| l.tokens() * l.elements_per_token())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn footprints_match_the_paper() {
+        // benefit (ii): dense caches 2d, latent caches rk+rv per
+        // token-layer — the latent/dense ratio IS (rk+rv)/(2d).
+        assert_eq!(CacheKind::Dense { d: 128 }.elements_per_token(), 256);
+        assert_eq!(CacheKind::Latent { rk: 16, rv: 16 }.elements_per_token(),
+                   32);
+        assert_eq!(CacheKind::Dense { d: 128 }.bytes_per_token_layer(2), 512);
+    }
+
+    #[test]
+    fn state_tracks_growth() {
+        let mut st = DecodeState::new(vec![
+            LayerCache::dense(8),
+            LayerCache::latent(3, 2),
+        ]);
+        assert_eq!(st.cached_tokens(), 0);
+        assert_eq!(st.cache_elements(), 0);
+        let grow = Matrix::zeros(4, 8);
+        match &mut st.layers[0] {
+            LayerCache::Dense { k, v } => {
+                k.push_rows(&grow);
+                v.push_rows(&grow);
+            }
+            _ => unreachable!(),
+        }
+        match &mut st.layers[1] {
+            LayerCache::Latent { ck, cv } => {
+                ck.push_rows(&Matrix::zeros(4, 3));
+                cv.push_rows(&Matrix::zeros(4, 2));
+            }
+            _ => unreachable!(),
+        }
+        st.advance(4);
+        assert_eq!(st.cached_tokens(), 4);
+        // 4 tokens × (2·8 dense + (3+2) latent)
+        assert_eq!(st.cache_elements(), 4 * (16 + 5));
+    }
+}

@@ -40,6 +40,19 @@ impl Program {
             .execute(leading, weights, weight_order)
             .with_context(|| format!("execute program {}", self.name))
     }
+
+    /// Open a stateful incremental-decode session (prefill once, then
+    /// step token by token against per-layer KV/latent caches). Only the
+    /// decode program families support this; score/multimodal programs
+    /// and backends without an incremental path return an error — callers
+    /// fall back to the full-window recompute loop.
+    pub fn decode_session(&self, weights: &Weights)
+                          -> Result<Box<dyn super::backend::DecodeSession>> {
+        self.exe
+            .open_session(weights)
+            .with_context(|| format!("decode session for program {}",
+                                     self.name))
+    }
 }
 
 /// Engine with a compile cache keyed by program name, generic over the

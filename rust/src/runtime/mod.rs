@@ -1,7 +1,11 @@
 //! Program runtime with a pluggable execution backend.
 //!
 //! [`Engine`] resolves manifest program names to compiled [`Program`]s
-//! through a [`Backend`] and caches them. Two backends exist:
+//! through a [`Backend`] and caches them. Decode programs additionally
+//! open stateful [`DecodeSession`]s (`Program::decode_session`): prefill
+//! once, then step token by token against per-layer cache tensors
+//! ([`decode`]) — dense layers cache K/V rows, latent layers only the
+//! compressed latents. Two backends exist:
 //!
 //! * [`RefBackend`] (default) — pure-rust interpreter over the
 //!   [`crate::tensor`] substrate; mirrors the python reference kernels so
@@ -13,13 +17,15 @@
 //!   rust/vendor/xla.
 
 pub mod backend;
+pub mod decode;
 pub mod engine;
 pub mod literal;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod refbackend;
 
-pub use backend::{Backend, Executable, ProgramCtx};
+pub use backend::{Backend, DecodeSession, Executable, ProgramCtx};
+pub use decode::{CacheKind, DecodeState, LayerCache};
 pub use engine::{tensor_param, Engine, Program};
 pub use literal::ParamValue;
 pub use refbackend::RefBackend;

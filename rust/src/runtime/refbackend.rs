@@ -18,7 +18,8 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::backend::{Backend, Executable, ProgramCtx};
+use super::backend::{Backend, DecodeSession, Executable, ProgramCtx};
+use super::decode::{CacheKind, DecodeState, LayerCache};
 use super::literal::ParamValue;
 use crate::model::io::Tensor;
 use crate::model::Weights;
@@ -238,12 +239,16 @@ fn relu_inplace(m: &mut Matrix) {
     }
 }
 
-/// In-place masked softmax over each row of a [t, s] score matrix.
-fn softmax_rows(s: &mut Matrix, causal: bool) {
+/// In-place masked softmax over each row of a [m, n] score matrix.
+/// `causal_from = Some(p)`: query row i sits at absolute position `p + i`
+/// and sees key columns `..= p + i` (the full-window causal mask is the
+/// `p = 0` case; a cached decode step is the one-row, `p = n - 1` case).
+/// `None` is unmasked (the ViT tower).
+fn softmax_rows(s: &mut Matrix, causal_from: Option<usize>) {
     for i in 0..s.rows() {
         let row = s.row_mut(i);
-        if causal {
-            for v in row.iter_mut().skip(i + 1) {
+        if let Some(p) = causal_from {
+            for v in row.iter_mut().skip(p + i + 1) {
                 *v = f64::NEG_INFINITY;
             }
         }
@@ -260,9 +265,12 @@ fn softmax_rows(s: &mut Matrix, causal: bool) {
     }
 }
 
-/// Standard multi-head attention over [t, d] activations (ref.mha).
-fn mha(q: &Matrix, k: &Matrix, v: &Matrix, h: usize, causal: bool)
-       -> Matrix {
+/// Multi-head attention of `q` rows against the full `k`/`v` histories
+/// (ref.mha). `q` may be fewer rows than `k`/`v`: the decode paths pass
+/// only the *new* queries against all cached keys — `causal_from` places
+/// them (see [`softmax_rows`]).
+fn mha(q: &Matrix, k: &Matrix, v: &Matrix, h: usize,
+       causal_from: Option<usize>) -> Matrix {
     let t = q.rows();
     let d = q.cols();
     // loud failure beats silently dropping the trailing columns a
@@ -277,7 +285,7 @@ fn mha(q: &Matrix, k: &Matrix, v: &Matrix, h: usize, causal: bool)
         let kh = k.slice_cols(head * dh, (head + 1) * dh);
         let vh = v.slice_cols(head * dh, (head + 1) * dh);
         let mut s = qh.matmul_bt(&kh).scale(scale);
-        softmax_rows(&mut s, causal);
+        softmax_rows(&mut s, causal_from);
         let ch = s.matmul(&vh);
         for i in 0..t {
             ctx.row_mut(i)[head * dh..(head + 1) * dh]
@@ -285,6 +293,81 @@ fn mha(q: &Matrix, k: &Matrix, v: &Matrix, h: usize, causal: bool)
         }
     }
     ctx
+}
+
+// --- augmented (bias-absorbing) products for the latent path ----------
+//
+// The MLA forward works on *raw* latent vectors plus an implicit
+// trailing 1 — the augmentation column never materializes, so the decode
+// cache stores exactly r_k / r_v floats per token (the paper's
+// footprint). Accumulation is k-ascending with the ones term last,
+// matching what an explicit append-ones + matmul/matmul_bt would do.
+
+/// ([x | 1]) · a — `a` is [x.cols()+1, n], its last row multiplying the
+/// implicit ones column.
+fn matmul_ones_a(x: &Matrix, a: &Matrix) -> Matrix {
+    let (m, r) = (x.rows(), x.cols());
+    assert_eq!(a.rows(), r + 1, "augmented operand height");
+    let n = a.cols();
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        let xi = x.row(i);
+        let oi = out.row_mut(i);
+        for c in 0..n {
+            let mut acc = 0.0;
+            for (k, &xv) in xi.iter().enumerate() {
+                acc += xv * a[(k, c)];
+            }
+            oi[c] = acc + a[(r, c)];
+        }
+    }
+    out
+}
+
+/// ([x | 1]) · bᵀ — `b` is [n, x.cols()+1], its last column multiplying
+/// the implicit ones column.
+fn matmul_ones_bt(x: &Matrix, b: &Matrix) -> Matrix {
+    let (m, r) = (x.rows(), x.cols());
+    assert_eq!(b.cols(), r + 1, "augmented operand width");
+    let n = b.rows();
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        let xi = x.row(i);
+        let oi = out.row_mut(i);
+        for (j, ov) in oi.iter_mut().enumerate() {
+            let bj = b.row(j);
+            let mut acc = 0.0;
+            for k in 0..r {
+                acc += xi[k] * bj[k];
+            }
+            *ov = acc + bj[r];
+        }
+    }
+    out
+}
+
+/// x · ([b | 1])ᵀ — each *row of b* carries an implicit trailing 1;
+/// `x` is [m, b.cols()+1], its last column multiplying those ones. The
+/// latent score kernel: augmented queries against raw cached latents.
+fn matmul_bt_ones(x: &Matrix, b: &Matrix) -> Matrix {
+    let (m, w) = (x.rows(), x.cols());
+    let r = b.cols();
+    assert_eq!(w, r + 1, "augmented operand width");
+    let n = b.rows();
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        let xi = x.row(i);
+        let oi = out.row_mut(i);
+        for (j, ov) in oi.iter_mut().enumerate() {
+            let bj = b.row(j);
+            let mut acc = 0.0;
+            for k in 0..r {
+                acc += xi[k] * bj[k];
+            }
+            *ov = acc + xi[r];
+        }
+    }
+    out
 }
 
 /// Mean next-token NLL of one sequence (python model.nll).
@@ -336,17 +419,19 @@ fn check_heads(layers: &[DenseLayer], h: usize, what: &str) -> Result<()> {
     Ok(())
 }
 
-/// Token + learned-positional embedding rows (python: `tok_emb[tokens] +
-/// pos_emb[:t]`) — shared by the dense and latent forwards.
-fn embed_tokens(tok_emb: &Matrix, pos_emb: &Matrix, tokens: &[i32])
-                -> Matrix {
+/// Token + learned-positional embedding rows at absolute positions
+/// `pos0..pos0 + tokens.len()` (python: `tok_emb[tokens] + pos_emb[:t]`
+/// is the `pos0 = 0` case) — shared by the dense and latent forwards and
+/// the incremental decode sessions.
+fn embed_tokens(tok_emb: &Matrix, pos_emb: &Matrix, tokens: &[i32],
+                pos0: usize) -> Matrix {
     let t = tokens.len();
     let d = tok_emb.cols();
     let vocab = tok_emb.rows();
     let mut x = Matrix::zeros(t, d);
     for (i, &tok) in tokens.iter().enumerate() {
         let e = tok_emb.row(clamp_token(tok, vocab));
-        let p = pos_emb.row(i.min(pos_emb.rows() - 1));
+        let p = pos_emb.row((pos0 + i).min(pos_emb.rows() - 1));
         let row = x.row_mut(i);
         for j in 0..d {
             row[j] = e[j] + p[j];
@@ -444,20 +529,36 @@ impl DenseLayer {
         })
     }
 
-    /// One pre-LN block over [t, d] tokens (python model.forward body /
-    /// multimodal._block).
-    fn forward(&self, x: Matrix, h: usize, causal: bool) -> Matrix {
+    /// One pre-LN block over `x` rows, reading and *extending* the
+    /// `kc`/`vc` caches: the rows' K/V projections are appended, then
+    /// their queries attend over the whole cache. With a fresh cache this
+    /// IS the full-window forward; with a populated one it is the decode
+    /// prefill/step — one body, so the paths cannot drift. Causal rows
+    /// sit at absolute positions `kc.rows()..`; non-causal (the ViT
+    /// tower) attends everything.
+    fn forward_cached(&self, x: Matrix, h: usize, causal: bool,
+                      kc: &mut Matrix, vc: &mut Matrix) -> Matrix {
+        let pos0 = kc.rows();
         let xa = layer_norm(&x, &self.ln1_g, &self.ln1_b);
         let q = linear(&xa, &self.wq, Some(&self.bq));
-        let k = linear(&xa, &self.wk, Some(&self.bk));
-        let v = linear(&xa, &self.wv, Some(&self.bv));
-        let ctx = mha(&q, &k, &v, h, causal);
+        kc.push_rows(&linear(&xa, &self.wk, Some(&self.bk)));
+        vc.push_rows(&linear(&xa, &self.wv, Some(&self.bv)));
+        let ctx = mha(&q, kc, vc, h, causal.then_some(pos0));
         let mut x = x.add(&linear(&ctx, &self.wo, Some(&self.bo)));
         let xm = layer_norm(&x, &self.ln2_g, &self.ln2_b);
         let mut z = linear(&xm, &self.wu, Some(&self.bu));
         relu_inplace(&mut z);
         x.add_inplace(&linear(&z, &self.wd, Some(&self.bd)));
         x
+    }
+
+    /// One pre-LN block over [t, d] tokens (python model.forward body /
+    /// multimodal._block): [`DenseLayer::forward_cached`] against a
+    /// throwaway cache.
+    fn forward(&self, x: Matrix, h: usize, causal: bool) -> Matrix {
+        let mut kc = Matrix::zeros(0, self.wk.rows());
+        let mut vc = Matrix::zeros(0, self.wv.rows());
+        self.forward_cached(x, h, causal, &mut kc, &mut vc)
     }
 }
 
@@ -490,7 +591,7 @@ impl DenseModel {
 
     /// tokens [t] → logits [t, vocab] (tied LM head).
     fn forward(&self, tokens: &[i32]) -> Matrix {
-        let mut x = embed_tokens(&self.tok_emb, &self.pos_emb, tokens);
+        let mut x = embed_tokens(&self.tok_emb, &self.pos_emb, tokens, 0);
         for layer in &self.layers {
             x = layer.forward(x, self.n_heads, true);
         }
@@ -640,34 +741,33 @@ impl LatentLayer {
         })
     }
 
-    fn forward(&self, x: Matrix, h: usize, dh: usize) -> Matrix {
+    /// The MLA block over `x` rows, reading and *extending* the latent
+    /// caches (`ck` [t, r_k], `cv` [t, r_v] — raw latents; the ones
+    /// augmentation stays implicit, see the `matmul_*ones*` kernels).
+    /// Fresh caches give the full-window forward, populated ones the
+    /// decode prefill/step — one body, so the paths cannot drift.
+    fn forward_cached(&self, x: Matrix, h: usize, dh: usize,
+                      ck: &mut Matrix, cv: &mut Matrix) -> Matrix {
         let t = x.rows();
+        let pos0 = ck.rows();
         let xa = layer_norm(&x, &self.ln1_g, &self.ln1_b);
-        // latent projections + augmented ones column
-        let append_ones = |m: Matrix| -> Matrix {
-            let mut out = Matrix::zeros(m.rows(), m.cols() + 1);
-            for i in 0..m.rows() {
-                out.row_mut(i)[..m.cols()].copy_from_slice(m.row(i));
-                out[(i, m.cols())] = 1.0;
-            }
-            out
-        };
-        let q_aug = append_ones(linear(&xa, &self.aq, None)); // [t, rq+1]
-        let ck_aug = append_ones(linear(&xa, &self.ak, None)); // [t, rk+1]
-        let cv_aug = append_ones(linear(&xa, &self.av, None)); // [t, rv+1]
+        let q = linear(&xa, &self.aq, None); // [t, rq]
+        ck.push_rows(&linear(&xa, &self.ak, None));
+        cv.push_rows(&linear(&xa, &self.av, None));
 
         // latent attention per head: scores never materialize full K
-        // (ref.latent_attention)
+        // (ref.latent_attention); only the compressed latents are read
         let scale = 1.0 / (dh as f64).sqrt();
         let mut ctx = Matrix::zeros(t, h * dh);
         for head in 0..h {
-            let mut s = q_aug
-                .matmul(&self.h_aug[head])
-                .matmul_bt(&ck_aug)
-                .scale(scale);
-            softmax_rows(&mut s, true);
-            let ctx_lat = s.matmul(&cv_aug); // [t, rv+1]
-            let ch = ctx_lat.matmul_bt(&self.bv_aug[head]); // [t, dh]
+            // ũ = [q|1]·H̃ per head, then scores against cached latents
+            let u = matmul_ones_a(&q, &self.h_aug[head]); // [t, rk+1]
+            let mut s = matmul_bt_ones(&u, ck).scale(scale);
+            softmax_rows(&mut s, Some(pos0));
+            let ctx_lat = s.matmul(cv); // [t, rv]
+            // softmax rows sum to one, so the augmented ones column
+            // contributes exactly B̃v's bias column
+            let ch = matmul_ones_bt(&ctx_lat, &self.bv_aug[head]); // [t, dh]
             for i in 0..t {
                 ctx.row_mut(i)[head * dh..(head + 1) * dh]
                     .copy_from_slice(ch.row(i));
@@ -688,6 +788,14 @@ impl LatentLayer {
                        Some(&self.bd));
         x.add_inplace(&y);
         x
+    }
+
+    /// Full-window MLA block: [`LatentLayer::forward_cached`] against a
+    /// throwaway cache.
+    fn forward(&self, x: Matrix, h: usize, dh: usize) -> Matrix {
+        let mut ck = Matrix::zeros(0, self.ak.rows());
+        let mut cv = Matrix::zeros(0, self.av.rows());
+        self.forward_cached(x, h, dh, &mut ck, &mut cv)
     }
 }
 
@@ -723,7 +831,7 @@ impl LatentModel {
     }
 
     fn forward(&self, tokens: &[i32]) -> Matrix {
-        let mut x = embed_tokens(&self.tok_emb, &self.pos_emb, tokens);
+        let mut x = embed_tokens(&self.tok_emb, &self.pos_emb, tokens, 0);
         for layer in &self.layers {
             x = layer.forward(x, self.n_heads, self.d_h);
         }
@@ -884,8 +992,10 @@ enum LoadedModel {
 /// latent variant) on ONE program name, so a single-slot cache would
 /// thrash; report sweeps create many transient weight sets, so an
 /// unbounded map would hoard memory. Cap small and reset when exceeded.
+/// Values are `Arc` so live decode sessions keep their model alive across
+/// a cache reset.
 const MODEL_CACHE_CAP: usize = 4;
-type ModelCache = std::collections::HashMap<u64, LoadedModel>;
+type ModelCache = std::collections::HashMap<u64, std::sync::Arc<LoadedModel>>;
 
 struct RefExecutable {
     kind: RefProgram,
@@ -897,31 +1007,163 @@ struct RefExecutable {
 }
 
 impl RefExecutable {
-    /// Lock the model cache, (re)loading from `weights` when no entry for
-    /// this weight set exists.
+    /// The loaded model for this weight set, (re)loading into the memo
+    /// map on a miss.
     fn loaded(&self, weights: &Weights)
-              -> Result<(std::sync::MutexGuard<'_, ModelCache>, u64)> {
+              -> Result<std::sync::Arc<LoadedModel>> {
         let mut g = self.cache.lock().unwrap();
         let id = weights.cache_id();
-        if !g.contains_key(&id) {
-            let model = match &self.kind {
-                RefProgram::Score(cfg) | RefProgram::Step(cfg) => {
-                    LoadedModel::Dense(DenseModel::load(weights, cfg)?)
-                }
-                RefProgram::LatentScore(cfg)
-                | RefProgram::LatentStep(cfg) => {
-                    LoadedModel::Latent(LatentModel::load(weights, cfg)?)
-                }
-                RefProgram::MmScore(cfg) => {
-                    LoadedModel::Mm(MmModel::load(weights, cfg)?)
-                }
-            };
-            if g.len() >= MODEL_CACHE_CAP {
-                g.clear();
-            }
-            g.insert(id, model);
+        if let Some(m) = g.get(&id) {
+            return Ok(m.clone());
         }
-        Ok((g, id))
+        let model = match &self.kind {
+            RefProgram::Score(cfg) | RefProgram::Step(cfg) => {
+                LoadedModel::Dense(DenseModel::load(weights, cfg)?)
+            }
+            RefProgram::LatentScore(cfg)
+            | RefProgram::LatentStep(cfg) => {
+                LoadedModel::Latent(LatentModel::load(weights, cfg)?)
+            }
+            RefProgram::MmScore(cfg) => {
+                LoadedModel::Mm(MmModel::load(weights, cfg)?)
+            }
+        };
+        if g.len() >= MODEL_CACHE_CAP {
+            g.clear();
+        }
+        let model = std::sync::Arc::new(model);
+        g.insert(id, model.clone());
+        Ok(model)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Incremental decode sessions
+// ---------------------------------------------------------------------------
+
+/// Stateful single-sequence decode over a loaded dense or latent model:
+/// the cache tensors live in [`DecodeState`]; every forward goes through
+/// the same `forward_cached` layer bodies as the full-window programs, so
+/// prefill+step is token-for-token identical to recompute (pinned by
+/// tests/decode.rs).
+struct RefDecodeSession {
+    model: std::sync::Arc<LoadedModel>,
+    state: DecodeState,
+    kind: CacheKind,
+    /// positional-table rows — the session's hard token capacity
+    max_tokens: usize,
+}
+
+impl RefDecodeSession {
+    fn open(model: std::sync::Arc<LoadedModel>)
+            -> Result<RefDecodeSession> {
+        let (layers, kind, max_tokens) = match &*model {
+            LoadedModel::Dense(m) => {
+                let layers: Vec<LayerCache> = m.layers.iter()
+                    .map(|l| LayerCache::dense(l.wk.rows()))
+                    .collect();
+                let d = m.layers.first().map(|l| l.wk.rows()).unwrap_or(0);
+                (layers, CacheKind::Dense { d }, m.pos_emb.rows())
+            }
+            LoadedModel::Latent(m) => {
+                let layers: Vec<LayerCache> = m.layers.iter()
+                    .map(|l| LayerCache::latent(l.ak.rows(), l.av.rows()))
+                    .collect();
+                let (rk, rv) = m.layers.first()
+                    .map(|l| (l.ak.rows(), l.av.rows()))
+                    .unwrap_or((0, 0));
+                (layers, CacheKind::Latent { rk, rv }, m.pos_emb.rows())
+            }
+            LoadedModel::Mm(_) => {
+                bail!("multimodal programs have no decode sessions")
+            }
+        };
+        Ok(RefDecodeSession {
+            model,
+            state: DecodeState::new(layers),
+            kind,
+            max_tokens,
+        })
+    }
+
+    /// Run `tokens` (the prompt at prefill, one token per step) through
+    /// every layer at absolute positions `cached..`, extending the layer
+    /// caches, and return the last row's logits.
+    fn forward_new(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let pos0 = self.state.cached_tokens();
+        let x = match &*self.model {
+            LoadedModel::Dense(m) => {
+                check_seq_len(pos0 + tokens.len(), m.pos_emb.rows())?;
+                let mut x = embed_tokens(&m.tok_emb, &m.pos_emb, tokens,
+                                         pos0);
+                for (layer, cache) in
+                    m.layers.iter().zip(self.state.layers.iter_mut()) {
+                    let LayerCache::Dense { k, v } = cache else {
+                        bail!("dense session holds a latent cache");
+                    };
+                    x = layer.forward_cached(x, m.n_heads, true, k, v);
+                }
+                tied_head(&x.slice_rows(x.rows() - 1, x.rows()),
+                          &m.lnf_g, &m.lnf_b, &m.tok_emb)
+            }
+            LoadedModel::Latent(m) => {
+                check_seq_len(pos0 + tokens.len(), m.pos_emb.rows())?;
+                let mut x = embed_tokens(&m.tok_emb, &m.pos_emb, tokens,
+                                         pos0);
+                for (layer, cache) in
+                    m.layers.iter().zip(self.state.layers.iter_mut()) {
+                    let LayerCache::Latent { ck, cv } = cache else {
+                        bail!("latent session holds a dense cache");
+                    };
+                    x = layer.forward_cached(x, m.n_heads, m.d_h, ck, cv);
+                }
+                tied_head(&x.slice_rows(x.rows() - 1, x.rows()),
+                          &m.lnf_g, &m.lnf_b, &m.tok_emb)
+            }
+            LoadedModel::Mm(_) => bail!("multimodal session is unreachable"),
+        };
+        self.state.advance(tokens.len());
+        Ok(x.row(0).iter().map(|&v| v as f32).collect())
+    }
+}
+
+impl DecodeSession for RefDecodeSession {
+    fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        if self.state.cached_tokens() != 0 {
+            bail!("session already prefilled ({} tokens cached)",
+                  self.state.cached_tokens());
+        }
+        if tokens.is_empty() {
+            bail!("cannot prefill an empty prompt");
+        }
+        self.forward_new(tokens).context("prefill")
+    }
+
+    fn step(&mut self, token: i32) -> Result<Vec<f32>> {
+        if self.state.cached_tokens() == 0 {
+            bail!("step before prefill — feed the prompt first");
+        }
+        self.forward_new(&[token]).context("decode step")
+    }
+
+    fn cached_tokens(&self) -> usize {
+        self.state.cached_tokens()
+    }
+
+    fn max_tokens(&self) -> usize {
+        self.max_tokens
+    }
+
+    fn cache_kind(&self) -> CacheKind {
+        self.kind
+    }
+
+    fn n_layers(&self) -> usize {
+        self.state.layers.len()
+    }
+
+    fn cache_elements(&self) -> usize {
+        self.state.cache_elements()
     }
 }
 
@@ -1002,9 +1244,8 @@ impl Executable for RefExecutable {
             RefProgram::Score(_) => {
                 want_leading(leading, 1, "score")?;
                 let (b, t, tokens) = tokens_2d(&leading[0])?;
-                let (guard, wid) = self.loaded(weights)?;
-                let Some(LoadedModel::Dense(model)) = guard.get(&wid)
-                else {
+                let loaded = self.loaded(weights)?;
+                let LoadedModel::Dense(model) = &*loaded else {
                     bail!("score: cached model kind mismatch");
                 };
                 check_seq_len(t, model.pos_emb.rows())?;
@@ -1019,9 +1260,8 @@ impl Executable for RefExecutable {
                 want_leading(leading, 2, "step")?;
                 let (b, t, tokens) = tokens_2d(&leading[0])?;
                 let lens = lens_1d(&leading[1])?;
-                let (guard, wid) = self.loaded(weights)?;
-                let Some(LoadedModel::Dense(model)) = guard.get(&wid)
-                else {
+                let loaded = self.loaded(weights)?;
+                let LoadedModel::Dense(model) = &*loaded else {
                     bail!("step: cached model kind mismatch");
                 };
                 check_seq_len(t, model.pos_emb.rows())?;
@@ -1030,9 +1270,8 @@ impl Executable for RefExecutable {
             RefProgram::LatentScore(_) => {
                 want_leading(leading, 1, "latent_score")?;
                 let (b, t, tokens) = tokens_2d(&leading[0])?;
-                let (guard, wid) = self.loaded(weights)?;
-                let Some(LoadedModel::Latent(model)) = guard.get(&wid)
-                else {
+                let loaded = self.loaded(weights)?;
+                let LoadedModel::Latent(model) = &*loaded else {
                     bail!("latent_score: cached model kind mismatch");
                 };
                 check_seq_len(t, model.pos_emb.rows())?;
@@ -1047,9 +1286,8 @@ impl Executable for RefExecutable {
                 want_leading(leading, 2, "latent_step")?;
                 let (b, t, tokens) = tokens_2d(&leading[0])?;
                 let lens = lens_1d(&leading[1])?;
-                let (guard, wid) = self.loaded(weights)?;
-                let Some(LoadedModel::Latent(model)) = guard.get(&wid)
-                else {
+                let loaded = self.loaded(weights)?;
+                let LoadedModel::Latent(model) = &*loaded else {
                     bail!("latent_step: cached model kind mismatch");
                 };
                 check_seq_len(t, model.pos_emb.rows())?;
@@ -1075,9 +1313,8 @@ impl Executable for RefExecutable {
                            manifest vision config says img={}",
                           ishape[1], ishape[2], cfg.vision.img);
                 }
-                let (guard, wid) = self.loaded(weights)?;
-                let Some(LoadedModel::Mm(model)) = guard.get(&wid)
-                else {
+                let loaded = self.loaded(weights)?;
+                let LoadedModel::Mm(model) = &*loaded else {
                     bail!("mm_score: cached model kind mismatch");
                 };
                 let mut out = Vec::with_capacity(b * cfg.n_answers);
@@ -1090,6 +1327,24 @@ impl Executable for RefExecutable {
                 Ok(out)
             }
         }
+    }
+
+    fn open_session(&self, weights: &Weights)
+                    -> Result<Box<dyn DecodeSession>> {
+        // only the decode families carry the (tokens, lens) signature a
+        // session replaces; scoring/multimodal programs have no
+        // incremental semantics
+        let family = match &self.kind {
+            RefProgram::Step(_) | RefProgram::LatentStep(_) => None,
+            RefProgram::Score(_) => Some("score"),
+            RefProgram::LatentScore(_) => Some("latent_score"),
+            RefProgram::MmScore(_) => Some("mm_score"),
+        };
+        if let Some(f) = family {
+            bail!("{f} programs do not support decode sessions \
+                   (use a step_* / latent_step_* program)");
+        }
+        Ok(Box::new(RefDecodeSession::open(self.loaded(weights)?)?))
     }
 }
 
@@ -1164,7 +1419,7 @@ mod tests {
     #[test]
     fn softmax_rows_are_distributions() {
         let mut s = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f64 * 0.3);
-        softmax_rows(&mut s, true);
+        softmax_rows(&mut s, Some(0));
         for i in 0..4 {
             let sum: f64 = s.row(i).iter().sum();
             assert!((sum - 1.0).abs() < 1e-12);
@@ -1188,6 +1443,52 @@ mod tests {
     }
 
     #[test]
+    fn cached_attention_matches_full_window_exactly() {
+        // one query row against a growing K/V prefix must reproduce the
+        // full causal attention row-for-row, bit for bit — the identity
+        // the whole incremental decode path rests on.
+        let mut rng = crate::util::rng::Rng::new(17);
+        let (t, d, h) = (6, 8, 2);
+        let q = rng.normal_matrix(t, d);
+        let k = rng.normal_matrix(t, d);
+        let v = rng.normal_matrix(t, d);
+        let full = mha(&q, &k, &v, h, Some(0));
+        for i in 0..t {
+            let qi = q.slice_rows(i, i + 1);
+            let kp = k.slice_rows(0, i + 1);
+            let vp = v.slice_rows(0, i + 1);
+            let step = mha(&qi, &kp, &vp, h, Some(i));
+            assert_eq!(step.row(0), full.row(i), "row {i} diverged");
+        }
+    }
+
+    #[test]
+    fn augmented_products_match_explicit_ones_column() {
+        let mut rng = crate::util::rng::Rng::new(23);
+        let x = rng.normal_matrix(3, 4);
+        let a = rng.normal_matrix(5, 6);
+        let append_ones = |m: &Matrix| {
+            let mut out = Matrix::zeros(m.rows(), m.cols() + 1);
+            for i in 0..m.rows() {
+                out.row_mut(i)[..m.cols()].copy_from_slice(m.row(i));
+                out[(i, m.cols())] = 1.0;
+            }
+            out
+        };
+        let want = append_ones(&x).matmul(&a);
+        assert!(matmul_ones_a(&x, &a).max_abs_diff(&want) < 1e-12);
+
+        let b = rng.normal_matrix(7, 5);
+        let want = append_ones(&x).matmul_bt(&b);
+        assert!(matmul_ones_bt(&x, &b).max_abs_diff(&want) < 1e-12);
+
+        let xa = rng.normal_matrix(3, 5); // already-augmented side
+        let braw = rng.normal_matrix(7, 4);
+        let want = xa.matmul_bt(&append_ones(&braw));
+        assert!(matmul_bt_ones(&xa, &braw).max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
     fn parse_program_rejects_unknown_families() {
         let manifest = Value::obj(vec![]);
         assert!(parse_program("gibberish", &manifest).is_err());
@@ -1206,8 +1507,10 @@ mod tests {
             data: (0..8).collect(),
         };
         let out1 = exe.execute(&[tokens.clone()], &w, &[]).unwrap();
-        assert!(matches!(exe.cache.lock().unwrap().get(&w.cache_id()),
-                         Some(LoadedModel::Dense(_))),
+        assert!(matches!(
+                    exe.cache.lock().unwrap().get(&w.cache_id())
+                        .map(|m| &**m),
+                    Some(LoadedModel::Dense(_))),
                 "first execute must populate the cache");
         let out2 = exe.execute(&[tokens.clone()], &w, &[]).unwrap();
         assert_eq!(out1, out2, "cache hit must not change results");

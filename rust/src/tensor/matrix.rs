@@ -333,6 +333,17 @@ impl Matrix {
         }
     }
 
+    /// Append `b`'s rows in place (same width). The grow operation of the
+    /// decode KV caches: row-major layout makes this a buffer extend, so
+    /// per-token cache growth is O(width) amortized, never a reallocation
+    /// of prior tokens' state.
+    pub fn push_rows(&mut self, b: &Matrix) {
+        assert_eq!(self.cols, b.cols, "push_rows width {} vs {}", self.cols,
+                   b.cols);
+        self.data.extend_from_slice(&b.data);
+        self.rows += b.rows;
+    }
+
     /// Columns [c0, c1) as a new matrix.
     pub fn slice_cols(&self, c0: usize, c1: usize) -> Matrix {
         assert!(c0 <= c1 && c1 <= self.cols);
@@ -434,6 +445,17 @@ mod tests {
                 assert!((c[(i, j)] - s).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn push_rows_grows_from_empty() {
+        let mut m = Matrix::zeros(0, 3);
+        assert_eq!(m.rows(), 0);
+        m.push_rows(&Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f64));
+        m.push_rows(&Matrix::from_fn(1, 3, |_, j| 10.0 + j as f64));
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(m.row(2), &[10.0, 11.0, 12.0]);
     }
 
     #[test]

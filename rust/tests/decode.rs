@@ -1,0 +1,330 @@
+//! Incremental-decode tests: the cached prefill+step path must be
+//! token-for-token identical to the full-window recompute reference on
+//! dense *and* latent programs, sessions must enforce their lifecycle,
+//! and the server's generate lane must admit/evict real session state
+//! against the KV byte budget without poisoning neighbouring requests.
+
+use std::path::PathBuf;
+
+use latentllm::coordinator::batcher::BatcherConfig;
+use latentllm::coordinator::kvcache::{CacheKind, KvCacheManager};
+use latentllm::coordinator::router::{ModelVariant, Policy, Router};
+use latentllm::coordinator::server::{GenerateRequest, ScoreRequest, Server,
+                                     ServerConfig};
+use latentllm::data::synth::{latent_demo_ranks, write_test_artifacts};
+use latentllm::eval::generate::{generate, GenerateOpts};
+use latentllm::model::config::MiniConfig;
+use latentllm::model::Weights;
+use latentllm::runtime::Engine;
+
+const TINY: MiniConfig = MiniConfig {
+    name: "tiny", vocab: 48, d: 16, n_layers: 2, n_heads: 2,
+    d_i: 32, max_len: 32,
+};
+const SEQ: usize = 32; // manifest seq_len == cfg.max_len
+const BATCH: usize = 8;
+
+/// Synthesize a full artifacts dir in a fresh tempdir; returns
+/// (dir, latent tag).
+fn synth(tag: &str) -> (PathBuf, String) {
+    let dir = std::env::temp_dir()
+        .join(format!("latentllm_decode_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let latent_tag = write_test_artifacts(&dir, &TINY, 91).unwrap();
+    (dir, latent_tag)
+}
+
+fn opts(max_new: usize, temperature: f64, use_cache: bool) -> GenerateOpts {
+    GenerateOpts { max_new, temperature, seed: 5, use_cache }
+}
+
+fn prompts() -> Vec<Vec<i32>> {
+    vec![
+        vec![1, 2, 3],
+        vec![7, 11, 13, 17, 19],
+        vec![40, 2, 40, 2],
+    ]
+}
+
+#[test]
+fn cached_decode_matches_recompute_dense_and_latent() {
+    let (art, tag) = synth("equiv");
+    let engine = Engine::new(&art).unwrap();
+    let cases = [
+        (format!("step_{}", TINY.name),
+         Weights::load(art.join(format!("model_{}.ltw", TINY.name)))
+             .unwrap()),
+        (format!("latent_step_{tag}"),
+         Weights::load(art.join(format!("latent_model_{tag}.ltw")))
+             .unwrap()),
+    ];
+    for (program, weights) in &cases {
+        // greedy: the acceptance criterion — token-for-token identical
+        let cached = generate(&engine, program, weights, &prompts(), BATCH,
+                              SEQ, TINY.vocab, &opts(10, 0.0, true))
+            .unwrap();
+        let recompute = generate(&engine, program, weights, &prompts(),
+                                 BATCH, SEQ, TINY.vocab,
+                                 &opts(10, 0.0, false))
+            .unwrap();
+        assert_eq!(cached.sequences, recompute.sequences,
+                   "{program}: greedy cached vs recompute diverged");
+        assert!(cached.peak_cache_elements > 0,
+                "{program}: cached path must hold real state");
+        assert_eq!(recompute.peak_cache_elements, 0);
+
+        // temperature sampling: both modes consume the RNG lane-major,
+        // so the sampled sequences agree too
+        let c = generate(&engine, program, weights, &prompts(), BATCH, SEQ,
+                         TINY.vocab, &opts(8, 0.8, true)).unwrap();
+        let r = generate(&engine, program, weights, &prompts(), BATCH, SEQ,
+                         TINY.vocab, &opts(8, 0.8, false)).unwrap();
+        assert_eq!(c.sequences, r.sequences,
+                   "{program}: sampled cached vs recompute diverged");
+    }
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn session_logits_match_step_program_exactly() {
+    // drive the session API directly: prefill+step logits must equal the
+    // full-window step program's next-token row at every position.
+    let (art, _tag) = synth("logits");
+    let engine = Engine::new(&art).unwrap();
+    let weights = Weights::load(
+        art.join(format!("model_{}.ltw", TINY.name))).unwrap();
+    let prog = engine.program(&format!("step_{}", TINY.name)).unwrap();
+    let seq: Vec<i32> = (0..12).map(|i| (i * 5) % TINY.vocab as i32)
+        .collect();
+    let mut session = prog.decode_session(&weights).unwrap();
+    let mut got = vec![session.prefill(&seq[..4]).unwrap()];
+    for &t in &seq[4..] {
+        got.push(session.step(t).unwrap());
+    }
+    for (n, got_row) in got.iter().enumerate() {
+        let len = 4 + n;
+        let mut flat = vec![0i32; SEQ];
+        flat[..len].copy_from_slice(&seq[..len]);
+        let want = prog.run_f32(
+            &[Engine::i32_input(&[1, SEQ], flat),
+              Engine::i32_input(&[1], vec![len as i32])],
+            &weights).unwrap();
+        assert_eq!(got_row, &want,
+                   "logits after {len} tokens diverged from the program");
+    }
+    assert_eq!(session.cached_tokens(), seq.len());
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn session_lifecycle_and_footprint() {
+    let (art, tag) = synth("lifecycle");
+    let engine = Engine::new(&art).unwrap();
+    let dense_w = Weights::load(
+        art.join(format!("model_{}.ltw", TINY.name))).unwrap();
+    let latent_w = Weights::load(
+        art.join(format!("latent_model_{tag}.ltw"))).unwrap();
+    let dense_prog = engine.program(&format!("step_{}", TINY.name)).unwrap();
+    let latent_prog = engine.program(&format!("latent_step_{tag}"))
+        .unwrap();
+
+    // score programs have no incremental semantics
+    let score = engine.program(&format!("score_{}", TINY.name)).unwrap();
+    assert!(score.decode_session(&dense_w).is_err());
+
+    let mut s = dense_prog.decode_session(&dense_w).unwrap();
+    assert!(s.prefill(&[]).is_err(), "empty prefill must error");
+    assert!(s.step(1).is_err(), "step before prefill must error");
+    s.prefill(&[1, 2, 3, 4]).unwrap();
+    assert!(s.prefill(&[1]).is_err(), "double prefill must error");
+    assert_eq!(s.cached_tokens(), 4);
+    assert_eq!(s.max_tokens(), TINY.max_len,
+               "capacity must be the positional table");
+    // dense footprint: 2·d per token per layer, exactly
+    assert_eq!(s.cache_elements(), 2 * TINY.d * TINY.n_layers * 4);
+    assert_eq!(s.cache_kind(), CacheKind::Dense { d: TINY.d });
+    assert_eq!(s.n_layers(), TINY.n_layers);
+
+    // a session is windowless but bounded by the positional table
+    for t in 0..(TINY.max_len - 4) {
+        s.step((t % 7) as i32).unwrap();
+    }
+    let err = s.step(0).unwrap_err();
+    assert!(format!("{err:#}").contains("positional table"),
+            "overflow must name the bound: {err:#}");
+
+    // latent footprint: r_k + r_v per token per layer — the paper's
+    // compression of the cache itself
+    let (rk, rv) = latent_demo_ranks(TINY.d);
+    let mut s = latent_prog.decode_session(&latent_w).unwrap();
+    s.prefill(&[1, 2, 3, 4]).unwrap();
+    assert_eq!(s.cache_elements(), (rk + rv) * TINY.n_layers * 4);
+    assert_eq!(s.cache_kind(), CacheKind::Latent { rk, rv });
+    assert!(s.cache_elements()
+            < 2 * TINY.d * TINY.n_layers * 4,
+            "latent cache must be smaller than dense at equal tokens");
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn generate_rejects_bad_prompt_sets() {
+    let (art, _tag) = synth("badprompts");
+    let engine = Engine::new(&art).unwrap();
+    let weights = Weights::load(
+        art.join(format!("model_{}.ltw", TINY.name))).unwrap();
+    let program = format!("step_{}", TINY.name);
+    for use_cache in [true, false] {
+        let o = opts(4, 0.0, use_cache);
+        let empty: Vec<Vec<i32>> = vec![];
+        assert!(generate(&engine, &program, &weights, &empty, BATCH, SEQ,
+                         TINY.vocab, &o).is_err(),
+                "no prompts must error");
+        let holes = vec![vec![1, 2], vec![]];
+        let err = generate(&engine, &program, &weights, &holes, BATCH, SEQ,
+                           TINY.vocab, &o).unwrap_err();
+        assert!(format!("{err:#}").contains("prompt 1 is empty"),
+                "bad error: {err:#}");
+        let too_many: Vec<Vec<i32>> = (0..BATCH + 1).map(|_| vec![1])
+            .collect();
+        let err = generate(&engine, &program, &weights, &too_many, BATCH,
+                           SEQ, TINY.vocab, &o).unwrap_err();
+        assert!(format!("{err:#}").contains("exceed the program batch"),
+                "bad error: {err:#}");
+    }
+    std::fs::remove_dir_all(&art).ok();
+}
+
+fn tiny_server(art: PathBuf, budget: usize, workers: usize) -> Server {
+    let weights = Weights::load(
+        art.join(format!("model_{}.ltw", TINY.name))).unwrap();
+    let variants = vec![ModelVariant {
+        name: "dense".to_string(),
+        score_program: format!("score_{}", TINY.name),
+        step_program: format!("step_{}", TINY.name),
+        weights: std::sync::Arc::new(weights),
+        cache: KvCacheManager::new(CacheKind::Dense { d: TINY.d },
+                                   TINY.n_layers, 2, budget),
+    }];
+    Server::start(
+        art,
+        Router::new(variants, Policy::RoundRobin),
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            policy: Policy::RoundRobin,
+            program_batch: BATCH,
+            seq_len: SEQ,
+            workers,
+        })
+        .expect("server start")
+}
+
+#[test]
+fn server_decodes_alongside_score_batches() {
+    let (art, _tag) = synth("servegen");
+    let engine = Engine::new(&art).unwrap();
+    let weights = Weights::load(
+        art.join(format!("model_{}.ltw", TINY.name))).unwrap();
+    let server = tiny_server(art.clone(), 8 << 20, 2);
+    let timeout = std::time::Duration::from_secs(60);
+
+    let prompt = vec![3, 5, 7, 9];
+    let gen_rx = server.submit_generate(GenerateRequest {
+        id: 1, prompt: prompt.clone(), max_new: 6, temperature: 0.0,
+        seed: 0,
+    }).expect("submit_generate");
+    let score_rxs: Vec<_> = (0..5)
+        .map(|i| server.submit(ScoreRequest {
+            id: i, tokens: vec![1, 2, 3, 4],
+        }).expect("submit"))
+        .collect();
+
+    let resp = gen_rx.recv_timeout(timeout).expect("gen response");
+    assert!(resp.error.is_none(), "decode failed: {:?}", resp.error);
+    assert_eq!(resp.tokens.len(), 6);
+    assert_eq!(resp.variant, "dense");
+    // the served continuation is exactly the eval-path greedy decode
+    let want = generate(&engine, &format!("step_{}", TINY.name), &weights,
+                        &[prompt.clone()], BATCH, SEQ, TINY.vocab,
+                        &opts(6, 0.0, true)).unwrap();
+    assert_eq!(resp.tokens, want.sequences[0][prompt.len()..].to_vec());
+    for rx in score_rxs {
+        let r = rx.recv_timeout(timeout).expect("score response");
+        assert!(r.error.is_none());
+        assert!(r.nll.is_finite());
+    }
+
+    // malformed decode requests get error responses, not dead workers
+    let bad = server.submit_generate(GenerateRequest {
+        id: 9, prompt: vec![], max_new: 4, temperature: 0.0, seed: 0,
+    }).unwrap();
+    let r = bad.recv_timeout(timeout).expect("error response");
+    assert!(r.error.as_deref() == Some("empty prompt"), "{:?}", r.error);
+    let long = server.submit_generate(GenerateRequest {
+        id: 10, prompt: vec![1; SEQ + 1], max_new: 4, temperature: 0.0,
+        seed: 0,
+    }).unwrap();
+    let r = long.recv_timeout(timeout).expect("error response");
+    assert!(r.error.is_some());
+    // a request that would overflow the model context mid-decode is
+    // rejected before the prefill is paid for
+    let overshoot = server.submit_generate(GenerateRequest {
+        id: 11, prompt: vec![1, 2, 3, 4], max_new: SEQ, temperature: 0.0,
+        seed: 0,
+    }).unwrap();
+    let r = overshoot.recv_timeout(timeout).expect("error response");
+    assert!(r.error.as_deref().unwrap_or("").contains("context holds"),
+            "{:?}", r.error);
+    assert!(!r.evicted);
+
+    let m = server.shutdown();
+    assert_eq!(m.counter("gen_requests"), 4);
+    assert_eq!(m.counter("gen_tokens"), 6);
+    assert_eq!(m.counter("gen_evictions"), 0);
+    assert!(m.gauge("cache_bytes_peak") > 0,
+            "admission must be visible in the cache gauge");
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn eviction_under_tight_budget_errors_one_lane_only() {
+    let (art, _tag) = synth("evict");
+    // bytes/token = 2·d·2B·n_layers = 128; budget of 8 tokens: a 4-token
+    // prompt admits, but decoding 20 more must hit the wall mid-flight
+    let bpt = 2 * TINY.d * 2 * TINY.n_layers;
+    let server = tiny_server(art.clone(), 8 * bpt, 1);
+    let timeout = std::time::Duration::from_secs(60);
+
+    let rx = server.submit_generate(GenerateRequest {
+        id: 1, prompt: vec![1, 2, 3, 4], max_new: 20, temperature: 0.0,
+        seed: 0,
+    }).unwrap();
+    let resp = rx.recv_timeout(timeout).expect("response");
+    assert!(resp.evicted, "budget exhaustion must evict: {:?}", resp.error);
+    assert!(resp.error.as_deref().unwrap_or("").contains("evicted"),
+            "{:?}", resp.error);
+
+    // the eviction returned every byte: a request needing the whole
+    // budget must now succeed — no poisoned lane, no leaked reservation
+    let rx = server.submit_generate(GenerateRequest {
+        id: 2, prompt: vec![1, 2, 3, 4], max_new: 4, temperature: 0.0,
+        seed: 0,
+    }).unwrap();
+    let resp = rx.recv_timeout(timeout).expect("response");
+    assert!(resp.error.is_none(),
+            "post-eviction decode failed: {:?}", resp.error);
+    assert_eq!(resp.tokens.len(), 4);
+
+    // and score traffic on the same worker still flows
+    let rx = server.submit(ScoreRequest { id: 3, tokens: vec![2, 4, 6] })
+        .unwrap();
+    let r = rx.recv_timeout(timeout).expect("score response");
+    assert!(r.error.is_none());
+
+    let m = server.shutdown();
+    assert_eq!(m.counter("gen_evictions"), 1);
+    assert_eq!(m.counter("worker_0_evictions"), 1);
+    std::fs::remove_dir_all(&art).ok();
+}

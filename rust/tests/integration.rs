@@ -151,6 +151,7 @@ fn serving_stack_end_to_end() {
     let variants = vec![ModelVariant {
         name: "dense".into(),
         score_program: format!("score_{model}"),
+        step_program: format!("step_{model}"),
         weights: std::sync::Arc::new(weights),
         cache: KvCacheManager::new(CacheKind::Dense { d: cfg.d },
                                    cfg.n_layers, 2, 32 << 20),

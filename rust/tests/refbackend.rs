@@ -191,7 +191,8 @@ fn score_and_generate_end_to_end() {
     assert!(r.ppl.is_finite() && r.ppl > 1.0, "ppl {}", r.ppl);
 
     let prompts: Vec<Vec<i32>> = vec![vec![1, 2, 3], vec![4, 5, 6, 7]];
-    let opts = eval::GenerateOpts { max_new: 4, temperature: 0.0, seed: 3 };
+    let opts = eval::GenerateOpts { max_new: 4, temperature: 0.0, seed: 3,
+                                    ..Default::default() };
     let res = eval::generate(&engine, "step_tiny", &weights, &prompts,
                              BATCH, SEQ, TINY.vocab, &opts).unwrap();
     assert_eq!(res.sequences.len(), 2);
@@ -213,6 +214,7 @@ fn tiny_variant(seed: u64) -> ModelVariant {
     ModelVariant {
         name: "dense".to_string(),
         score_program: "score_tiny".to_string(),
+        step_program: "step_tiny".to_string(),
         weights: std::sync::Arc::new(random_weights(&TINY, seed)),
         cache: KvCacheManager::new(CacheKind::Dense { d: TINY.d },
                                    TINY.n_layers, 2, 8 << 20),
@@ -367,6 +369,7 @@ fn failed_batch_execution_replies_with_errors() {
     let variant = ModelVariant {
         name: "broken".to_string(),
         score_program: "score_nonexistent".to_string(),
+        step_program: "step_nonexistent".to_string(),
         weights: std::sync::Arc::new(random_weights(&TINY, 25)),
         cache: KvCacheManager::new(CacheKind::Dense { d: TINY.d },
                                    TINY.n_layers, 2, 8 << 20),
@@ -488,7 +491,8 @@ fn latent_mla_programs_run_end_to_end() {
     assert!(r.ppl.is_finite() && r.ppl > 1.0, "latent ppl {}", r.ppl);
 
     let prompts: Vec<Vec<i32>> = vec![vec![2, 4, 6]];
-    let opts = eval::GenerateOpts { max_new: 3, temperature: 0.0, seed: 5 };
+    let opts = eval::GenerateOpts { max_new: 3, temperature: 0.0, seed: 5,
+                                    ..Default::default() };
     let res = eval::generate(&engine, "latent_step_tinytag", &weights,
                              &prompts, BATCH, SEQ, TINY.vocab, &opts)
         .unwrap();
