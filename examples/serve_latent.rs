@@ -14,6 +14,7 @@ use latentllm::compress::rank;
 use latentllm::coordinator::batcher::BatcherConfig;
 use latentllm::coordinator::kvcache::{CacheKind, KvCacheManager};
 use latentllm::coordinator::router::{ModelVariant, Policy, Router};
+use latentllm::coordinator::scheduler::SchedulerConfig;
 use latentllm::coordinator::server::{GenerateRequest, ScoreRequest, Server,
                                      ServerConfig};
 use latentllm::data::{CalibSet, Corpus};
@@ -38,11 +39,16 @@ fn main() -> Result<()> {
     println!("  achieved ratio {:.3}", rep.achieved_ratio());
 
     let r_lat = rank::local_rank(cfg.d, cfg.d, 0.7, true);
-    let budget = 4 << 20; // 4 MiB of KV per variant
-    let dense_cache = KvCacheManager::new(CacheKind::Dense { d: cfg.d },
-                                          cfg.n_layers, 2, budget);
-    let latent_cache = KvCacheManager::new(
-        CacheKind::Latent { rk: r_lat, rv: r_lat }, cfg.n_layers, 2, budget);
+    let budget = 4 << 20; // 4 MiB of KV pages per variant
+    // one SchedulerConfig drives both the scheduler AND the page size
+    // the variants' pools are built with — they must agree
+    let sched = SchedulerConfig::default();
+    let dense_cache = KvCacheManager::with_block_tokens(
+        CacheKind::Dense { d: cfg.d }, cfg.n_layers, 2, budget,
+        sched.block_tokens);
+    let latent_cache = KvCacheManager::with_block_tokens(
+        CacheKind::Latent { rk: r_lat, rv: r_lat }, cfg.n_layers, 2,
+        budget, sched.block_tokens);
     println!("KV cache accounting at a {budget}-byte budget:");
     println!("  dense : {} bytes/token  -> {} token capacity",
              dense_cache.bytes_per_token(), dense_cache.capacity_tokens());
@@ -50,6 +56,10 @@ fn main() -> Result<()> {
              latent_cache.bytes_per_token(), latent_cache.capacity_tokens(),
              latent_cache.capacity_tokens() as f64
                  / dense_cache.capacity_tokens() as f64);
+    println!("  pages : {} dense blocks of {} B vs {} latent blocks of \
+              {} B — same budget, more live latent sessions",
+             dense_cache.total_blocks(), dense_cache.block_bytes(),
+             latent_cache.total_blocks(), latent_cache.block_bytes());
 
     let variants = vec![
         ModelVariant { name: "dense".into(),
@@ -72,6 +82,9 @@ fn main() -> Result<()> {
             program_batch: 8,
             seq_len: 128,
             workers: 2,
+            // continuous batching: decode requests share each worker's
+            // iteration as a live session set over the paged KV pool
+            sched: Some(sched),
         })?;
 
     let corpus = Corpus::load(artifacts.join("corpora.ltw"), "synthwiki",

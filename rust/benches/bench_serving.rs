@@ -1,22 +1,187 @@
 //! End-to-end serving bench: throughput and latency quantiles of the
-//! coordinator (batcher + router + PJRT worker) under a closed-loop load,
-//! across batcher configurations — the L3 target of EXPERIMENTS.md §Perf.
+//! coordinator under closed-loop load — the L3 target of EXPERIMENTS.md
+//! §Perf.
+//!
+//! Two sections:
+//!
+//! * **Mixed score+generate** (always runs; artifacts synthesized into a
+//!   tempdir): the same concurrent workload driven once through the
+//!   continuous-batching scheduler and once through sequential
+//!   one-session-per-worker decode, at a page budget tight enough that
+//!   sessions contend. Reports completed requests, successful decode
+//!   tokens/sec, and p50/p95 queue wait — the scheduler's preemption
+//!   (requeue + resume) versus the sequential path's evictions (failed
+//!   requests) is the headline number. Plus the capacity probe: live
+//!   sessions a matched page budget admits, dense vs latent.
+//! * **Score-only batcher×worker sweep** (needs real `artifacts/`,
+//!   skipped otherwise) — the original closed-loop scoring bench.
 
 use std::time::Duration;
 
 use latentllm::coordinator::batcher::BatcherConfig;
 use latentllm::coordinator::kvcache::{CacheKind, KvCacheManager};
 use latentllm::coordinator::router::{ModelVariant, Policy, Router};
-use latentllm::coordinator::server::{ScoreRequest, Server, ServerConfig};
+use latentllm::coordinator::scheduler::SchedulerConfig;
+use latentllm::coordinator::server::{GenerateRequest, ScoreRequest, Server,
+                                     ServerConfig};
+use latentllm::data::synth::{latent_demo_ranks, write_test_artifacts};
 use latentllm::data::Corpus;
-use latentllm::model::config::mini_by_name;
+use latentllm::model::config::{mini_by_name, MiniConfig};
 use latentllm::model::Weights;
 
+const MIX_CFG: MiniConfig = MiniConfig {
+    name: "bench-serve", vocab: 96, d: 32, n_layers: 2, n_heads: 4,
+    d_i: 64, max_len: 64,
+};
+const PROMPT_LEN: usize = 8;
+const MAX_NEW: usize = 24;
+const N_GEN: usize = 6;
+const N_SCORE: usize = 12;
+const BLOCK_TOKENS: usize = 4;
+
 fn main() {
+    mixed_workload();
+    score_sweep();
+}
+
+/// Build the tight-budget single-variant server for the mixed bench.
+fn mix_server(art: &std::path::Path, weights: &std::sync::Arc<Weights>,
+              budget: usize, sched: Option<SchedulerConfig>) -> Server {
+    let variants = vec![ModelVariant {
+        name: "dense".into(),
+        score_program: format!("score_{}", MIX_CFG.name),
+        step_program: format!("step_{}", MIX_CFG.name),
+        weights: weights.clone(),
+        cache: KvCacheManager::with_block_tokens(
+            CacheKind::Dense { d: MIX_CFG.d }, MIX_CFG.n_layers, 2,
+            budget, BLOCK_TOKENS),
+    }];
+    Server::start(
+        art.to_path_buf(),
+        Router::new(variants, Policy::RoundRobin),
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+            },
+            policy: Policy::RoundRobin,
+            program_batch: 8,
+            seq_len: MIX_CFG.max_len,
+            workers: 2,
+            sched,
+        })
+        .expect("server start")
+}
+
+fn mixed_workload() {
+    let dir = std::env::temp_dir()
+        .join(format!("latentllm_bench_serving_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    write_test_artifacts(&dir, &MIX_CFG, 11).expect("synth artifacts");
+    let weights = std::sync::Arc::new(Weights::load(
+        dir.join(format!("model_{}.ltw", MIX_CFG.name))).unwrap());
+
+    // page pool for ~1.5 full decodes: each request needs
+    // ceil((PROMPT_LEN + MAX_NEW - 1) · bpt / block) = 8 blocks, so
+    // concurrent sessions contend and the two modes diverge: sequential
+    // decode EVICTS the loser (failed request, tokens wasted) while the
+    // scheduler preempts + requeues it (all requests finish)
+    let bpt = 2 * MIX_CFG.d * 2 * MIX_CFG.n_layers;
+    let budget = 12 * BLOCK_TOKENS * bpt;
+
+    println!("== mixed score+generate: continuous batching vs sequential \
+              sessions ==");
+    println!("model {} (d={}, L={}), 2 workers, {N_GEN} generate \
+              (prompt {PROMPT_LEN}, max_new {MAX_NEW}) + {N_SCORE} score, \
+              {}-block pool of {} tokens",
+             MIX_CFG.name, MIX_CFG.d, MIX_CFG.n_layers,
+             budget / (BLOCK_TOKENS * bpt), BLOCK_TOKENS);
+    for (label, sched) in [
+        ("sequential", None),
+        ("scheduler ",
+         Some(SchedulerConfig { max_live: 4, block_tokens: BLOCK_TOKENS,
+                                prefill_chunk: 8 })),
+    ] {
+        let server = mix_server(&dir, &weights, budget, sched);
+        let t0 = std::time::Instant::now();
+        let gen_rxs: Vec<_> = (0..N_GEN)
+            .map(|i| server.submit_generate(GenerateRequest {
+                id: i as u64,
+                prompt: (0..PROMPT_LEN)
+                    .map(|j| ((i * 13 + j * 5) % MIX_CFG.vocab) as i32)
+                    .collect(),
+                max_new: MAX_NEW,
+                temperature: 0.0,
+                seed: i as u64,
+            }).expect("submit_generate"))
+            .collect();
+        let score_rxs: Vec<_> = (0..N_SCORE)
+            .map(|i| server.submit(ScoreRequest {
+                id: 1000 + i as u64,
+                tokens: (0..16)
+                    .map(|j| ((i * 7 + j) % MIX_CFG.vocab) as i32)
+                    .collect(),
+            }).expect("submit"))
+            .collect();
+        let mut gen_ok = 0usize;
+        let mut gen_failed = 0usize;
+        for rx in gen_rxs {
+            match rx.recv() {
+                Ok(r) if r.error.is_none() => gen_ok += 1,
+                _ => gen_failed += 1,
+            }
+        }
+        let mut score_ok = 0usize;
+        for rx in score_rxs {
+            if let Ok(r) = rx.recv() {
+                if r.error.is_none() {
+                    score_ok += 1;
+                }
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let m = server.shutdown();
+        let tokens = m.counter("gen_tokens");
+        let (p50, p95, _) = m.quantiles("gen_queue_us")
+            .unwrap_or((0.0, 0.0, 0.0));
+        println!("  {label}: gen {gen_ok}/{N_GEN} ok ({gen_failed} \
+                  failed), score {score_ok}/{N_SCORE}, \
+                  {tokens} tokens in {dt:.2}s = {:>6.1} tok/s | \
+                  queue wait p50={:.0}µs p95={:.0}µs | \
+                  preempt={} evict={} occupancy={}",
+                 tokens as f64 / dt.max(1e-9), p50, p95,
+                 m.counter("gen_preemptions"),
+                 m.counter("gen_evictions"),
+                 m.ratio_pct("sched_steps", "sched_slots"));
+    }
+
+    // capacity probe (paper benefit (ii), paged): live sessions a
+    // matched pool admits at the full per-request footprint
+    let (rk, rv) = latent_demo_ranks(MIX_CFG.d);
+    let need = PROMPT_LEN + MAX_NEW - 1;
+    let mut line = String::new();
+    for (name, kind) in [("dense ", CacheKind::Dense { d: MIX_CFG.d }),
+                         ("latent", CacheKind::Latent { rk, rv })] {
+        let mut c = KvCacheManager::with_block_tokens(
+            kind, MIX_CFG.n_layers, 2, budget, BLOCK_TOKENS);
+        let mut n = 0u64;
+        while c.admit(n, need) {
+            n += 1;
+        }
+        line.push_str(&format!("  {name}: {n} live sessions \
+                                ({} blocks of {} B)\n",
+                               c.total_blocks(), c.block_bytes()));
+    }
+    println!("capacity at a matched {budget}-byte page budget, \
+              {need}-token sessions:\n{line}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn score_sweep() {
     let artifacts = std::env::var("LATENTLLM_ARTIFACTS")
         .unwrap_or_else(|_| "artifacts".to_string());
     if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
-        println!("bench_serving: no artifacts — skipping");
+        println!("score sweep: no artifacts — skipping");
         return;
     }
     let model = "opt-mini-m";
@@ -52,6 +217,7 @@ fn main() {
                 program_batch: 8,
                 seq_len: 128,
                 workers,
+                sched: None,
             })
             .expect("server start");
         let reqs = corpus.calibration(n_requests, 128, 42);

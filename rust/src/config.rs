@@ -11,6 +11,10 @@
 //! kv_budget_mb = 8
 //! latent_ratio = 0.3
 //! workers = 2
+//! sched = true          # continuous-batching scheduler (default on)
+//! sched_live = 8        # live decode sessions per worker
+//! sched_block = 4       # KV page size in tokens (nominal rate)
+//! sched_chunk = 16      # prefill tokens fed per scheduler iteration
 //! [report]
 //! max_batches = 12
 //! qk_iters = 8
@@ -29,6 +33,7 @@ use anyhow::{Context, Result};
 use crate::compress::plan::CompressionPlan;
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::router::Policy;
+use crate::coordinator::scheduler::SchedulerConfig;
 use crate::util::toml::{self, Table};
 
 #[derive(Clone, Debug, PartialEq)]
@@ -42,6 +47,11 @@ pub struct ServeSettings {
     pub seq_len: usize,
     /// server worker threads, each with its own engine ([serve] workers)
     pub workers: usize,
+    /// continuous-batching scheduler for generate traffic ([serve]
+    /// sched = false falls back to sequential sessions); the knobs
+    /// mirror `--sched-live/--sched-block/--sched-chunk`
+    pub sched: bool,
+    pub scheduler: SchedulerConfig,
 }
 
 impl Default for ServeSettings {
@@ -55,6 +65,8 @@ impl Default for ServeSettings {
             program_batch: 8,
             seq_len: 128,
             workers: 2,
+            sched: true,
+            scheduler: SchedulerConfig::default(),
         }
     }
 }
@@ -137,6 +149,18 @@ impl Config {
         cfg.serve.seq_len = get_usize("serve.seq_len", cfg.serve.seq_len);
         cfg.serve.workers =
             get_usize("serve.workers", cfg.serve.workers).max(1);
+        if let Some(b) = t.get("serve.sched").and_then(|v| v.as_bool()) {
+            cfg.serve.sched = b;
+        }
+        cfg.serve.scheduler.max_live =
+            get_usize("serve.sched_live",
+                      cfg.serve.scheduler.max_live).max(1);
+        cfg.serve.scheduler.block_tokens =
+            get_usize("serve.sched_block",
+                      cfg.serve.scheduler.block_tokens).max(1);
+        cfg.serve.scheduler.prefill_chunk =
+            get_usize("serve.sched_chunk",
+                      cfg.serve.scheduler.prefill_chunk).max(1);
         cfg.report.max_batches =
             get_usize("report.max_batches", cfg.report.max_batches);
         cfg.report.qk_iters = get_usize("report.qk_iters",
@@ -190,6 +214,22 @@ mod tests {
         assert!(Config::from_table(&t).is_err());
         let t = toml::parse("[compress]\nprecond = \"nope\"\n").unwrap();
         assert!(Config::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn parses_scheduler_knobs() {
+        let t = toml::parse(
+            "[serve]\nsched = false\nsched_live = 12\nsched_block = 8\n\
+             sched_chunk = 32\n").unwrap();
+        let c = Config::from_table(&t).unwrap();
+        assert!(!c.serve.sched);
+        assert_eq!(c.serve.scheduler.max_live, 12);
+        assert_eq!(c.serve.scheduler.block_tokens, 8);
+        assert_eq!(c.serve.scheduler.prefill_chunk, 32);
+        // defaults: scheduler on at the SchedulerConfig defaults
+        let d = Config::from_table(&Table::new()).unwrap();
+        assert!(d.serve.sched);
+        assert_eq!(d.serve.scheduler, SchedulerConfig::default());
     }
 
     #[test]

@@ -1,51 +1,69 @@
 //! KV-cache manager with MLA-aware accounting (paper benefit (ii) and the
 //! DeepSeek-V3 motivation): a dense MHA layer caches 2·d floats per token;
-//! a latent layer caches only r_k + r_v. The manager tracks per-sequence
-//! allocations against a byte budget and admits/evicts accordingly —
-//! the piece of a serving stack the paper's compression directly enlarges.
+//! a latent layer caches only r_k + r_v. Since the scheduler PR the
+//! manager is *paged*: its byte budget is carved into fixed-size blocks
+//! ([`crate::coordinator::pages::PageAllocator`], vLLM/PagedAttention
+//! style) of `block_tokens` tokens at the variant's nominal byte-rate,
+//! and admission/growth is accounted in whole blocks off a free list —
+//! which is what makes preemption-by-requeue cheap and exact, and what
+//! the latent variants exploit: at `r_k + r_v` bytes/token each block
+//! packs `2·d / (r_k + r_v)`× more tokens, so a matched pool admits that
+//! many more live sessions.
 //!
-//! Since the decode refactor this is no longer paper arithmetic on the
-//! side: the footprints it budgets are the [`crate::runtime::DecodeState`]
+//! The footprints it budgets are the [`crate::runtime::DecodeState`]
 //! tensors server workers actually hold ([`CacheKind`] lives in
-//! `runtime::decode` and is re-exported here), and its verdicts have
-//! teeth — a failed [`KvCacheManager::extend`] mid-decode drops the
-//! worker's live session and the request gets an eviction error
-//! (`coordinator::server::run_generate`).
+//! `runtime::decode` and is re-exported here). Its verdicts have teeth
+//! in two modes: the sequential decode path treats a failed
+//! [`KvCacheManager::extend`] as an eviction (session dropped, request
+//! errored — `coordinator::server::run_generate`), while the
+//! continuous-batching scheduler uses [`KvCacheManager::try_extend`] and
+//! answers a refusal with preemption-by-requeue
+//! (`coordinator::scheduler`).
 
-use std::collections::HashMap;
-
+use super::pages::PageAllocator;
 pub use crate::runtime::decode::CacheKind;
 
-#[derive(Clone, Debug)]
-struct SeqAlloc {
-    tokens: usize,
-    /// the rate this sequence is billed at — usually the variant's
-    /// nominal [`KvCacheManager::bytes_per_token`], but decode sessions
-    /// are charged what their `DecodeState` actually holds
-    /// ([`KvCacheManager::admit_with`])
-    bytes_per_token: usize,
-}
+/// Default page size in tokens (at the variant's nominal byte-rate) —
+/// small because the mini models' contexts are short; `latentllm serve
+/// --sched-block` overrides it.
+pub const DEFAULT_BLOCK_TOKENS: usize = 4;
 
-/// Byte-budgeted cache accounting for one model variant.
+/// Paged, byte-budgeted cache accounting for one model variant.
 #[derive(Debug)]
 pub struct KvCacheManager {
     kind: CacheKind,
     n_layers: usize,
     bytes_per_el: usize,
-    budget_bytes: usize,
-    used_bytes: usize,
-    seqs: HashMap<u64, SeqAlloc>,
+    pages: PageAllocator,
     pub peak_bytes: usize,
     pub evictions: u64,
 }
 
 impl KvCacheManager {
+    /// Pool with the default page size ([`DEFAULT_BLOCK_TOKENS`]).
     pub fn new(kind: CacheKind, n_layers: usize, bytes_per_el: usize,
                budget_bytes: usize) -> Self {
+        KvCacheManager::with_block_tokens(kind, n_layers, bytes_per_el,
+                                          budget_bytes,
+                                          DEFAULT_BLOCK_TOKENS)
+    }
+
+    /// Pool whose blocks hold `block_tokens` tokens at this variant's
+    /// nominal byte-rate (sequences billed at a different real footprint
+    /// are charged byte-honestly in whole blocks).
+    pub fn with_block_tokens(kind: CacheKind, n_layers: usize,
+                             bytes_per_el: usize, budget_bytes: usize,
+                             block_tokens: usize) -> Self {
+        let bpt =
+            kind.bytes_per_token_layer(bytes_per_el) * n_layers;
+        let block_bytes = (block_tokens.max(1) * bpt.max(1)).max(1);
         KvCacheManager {
-            kind, n_layers, bytes_per_el, budget_bytes,
-            used_bytes: 0, seqs: HashMap::new(),
-            peak_bytes: 0, evictions: 0,
+            kind,
+            n_layers,
+            bytes_per_el,
+            pages: PageAllocator::new(budget_bytes, block_bytes),
+            peak_bytes: 0,
+            evictions: 0,
         }
     }
 
@@ -63,77 +81,113 @@ impl KvCacheManager {
         kind.bytes_per_token_layer(self.bytes_per_el) * n_layers
     }
 
-    /// Try to reserve `tokens` cache slots for a sequence at the
-    /// variant's nominal rate. Returns false if the budget cannot fit it
-    /// even after evicting nothing (admission control — the batcher
-    /// backs off). Re-admitting a live `seq_id` replaces its allocation:
-    /// release-then-reserve, so the old reservation cannot leak (the
-    /// pre-fix `HashMap::insert` overwrote the `SeqAlloc` while
-    /// `used_bytes` kept counting it, permanently shrinking the budget).
+    /// Try to reserve pages for `tokens` cache slots at the variant's
+    /// nominal rate. Returns false if the free list cannot cover it
+    /// (admission control — the batcher backs off). Re-admitting a live
+    /// `seq_id` replaces its allocation release-then-reserve, so the old
+    /// reservation cannot leak.
     pub fn admit(&mut self, seq_id: u64, tokens: usize) -> bool {
         let bpt = self.bytes_per_token();
         self.admit_with(seq_id, tokens, bpt)
     }
 
     /// [`KvCacheManager::admit`] at an explicit per-token rate: the
-    /// decode path re-admits each session at the bytes its
+    /// decode paths re-admit each session at the bytes its
     /// [`crate::runtime::DecodeState`] actually holds
     /// ([`KvCacheManager::bytes_per_token_for`] of the *session's*
     /// cache kind), so a variant whose step program runs a different
     /// architecture than its nominal accounting is still billed
-    /// honestly.
+    /// honestly — in whole blocks.
     pub fn admit_with(&mut self, seq_id: u64, tokens: usize,
                       bytes_per_token: usize) -> bool {
-        self.release(seq_id);
-        let need = tokens * bytes_per_token;
-        if self.used_bytes + need > self.budget_bytes {
-            return false;
-        }
-        self.used_bytes += need;
-        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
-        self.seqs.insert(seq_id, SeqAlloc { tokens, bytes_per_token });
-        true
+        let ok = self.pages.admit(seq_id, tokens, bytes_per_token);
+        self.note_peak();
+        ok
     }
 
     /// Grow a sequence by one decoded token (billed at its admission
-    /// rate); evicts the sequence and reports false if the budget is
-    /// exhausted.
+    /// rate); evicts the sequence — returning its blocks — and reports
+    /// false when no free block remains. The sequential decode path's
+    /// semantics; the scheduler uses [`KvCacheManager::try_extend`] and
+    /// preempts a *chosen* victim instead.
     pub fn extend(&mut self, seq_id: u64) -> bool {
-        match self.seqs.get_mut(&seq_id) {
-            Some(s) => {
-                let bpt = s.bytes_per_token;
-                if self.used_bytes + bpt > self.budget_bytes {
-                    let bytes = s.tokens * bpt;
-                    self.used_bytes -= bytes;
-                    self.seqs.remove(&seq_id);
-                    self.evictions += 1;
-                    return false;
-                }
-                s.tokens += 1;
-                self.used_bytes += bpt;
-                self.peak_bytes = self.peak_bytes.max(self.used_bytes);
-                true
-            }
-            None => false,
+        if self.pages.extend(seq_id) {
+            self.note_peak();
+            return true;
         }
+        if self.pages.contains(seq_id) {
+            self.pages.release(seq_id);
+            self.evictions += 1;
+        }
+        false
+    }
+
+    /// Non-destructive [`KvCacheManager::extend`]: a refusal leaves the
+    /// sequence's pages untouched so the caller can preempt some other
+    /// victim and retry. False for unknown sequences too.
+    pub fn try_extend(&mut self, seq_id: u64) -> bool {
+        let ok = self.pages.extend(seq_id);
+        self.note_peak();
+        ok
     }
 
     pub fn release(&mut self, seq_id: u64) {
-        if let Some(s) = self.seqs.remove(&seq_id) {
-            self.used_bytes -= s.tokens * s.bytes_per_token;
-        }
+        self.pages.release(seq_id);
     }
 
+    /// Could a sequence of `tokens` tokens at `bytes_per_token` ever fit
+    /// this pool, even with every block free? Separates
+    /// requeue-and-retry from reject-now.
+    pub fn fits_total(&self, tokens: usize, bytes_per_token: usize) -> bool {
+        self.pages.fits_total(tokens, bytes_per_token)
+    }
+
+    /// Bytes pinned by in-use blocks (block-quantized).
     pub fn used_bytes(&self) -> usize {
-        self.used_bytes
+        self.pages.used_bytes()
     }
 
+    /// Whole-pool token capacity at the nominal rate.
     pub fn capacity_tokens(&self) -> usize {
-        self.budget_bytes / self.bytes_per_token().max(1)
+        self.pages.total_blocks() * self.pages.block_bytes()
+            / self.bytes_per_token().max(1)
+    }
+
+    /// Tokens (at the nominal rate) the free list still covers — the
+    /// cache-aware router's headroom signal.
+    pub fn free_tokens(&self) -> usize {
+        self.pages.free_blocks() * self.pages.block_bytes()
+            / self.bytes_per_token().max(1)
+    }
+
+    pub fn block_bytes(&self) -> usize {
+        self.pages.block_bytes()
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.pages.total_blocks()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.pages.free_blocks()
+    }
+
+    pub fn blocks_of(&self, seq_id: u64) -> usize {
+        self.pages.blocks_of(seq_id)
     }
 
     pub fn active_sequences(&self) -> usize {
-        self.seqs.len()
+        self.pages.active_sequences()
+    }
+
+    /// The underlying allocator (invariant audits in tests).
+    pub fn pages(&self) -> &PageAllocator {
+        &self.pages
+    }
+
+    fn note_peak(&mut self) {
+        self.peak_bytes = self.peak_bytes
+            .max(self.pages.peak_blocks * self.pages.block_bytes());
     }
 }
 
@@ -143,7 +197,8 @@ mod tests {
 
     #[test]
     fn latent_cache_fits_more_sequences() {
-        // paper benefit (ii): MLA cache is (rk+rv)/(2d) of dense.
+        // paper benefit (ii) in pages: MLA blocks pack (2d)/(rk+rv) more
+        // tokens, so a matched pool admits that many more sessions.
         let budget = 1 << 20;
         let mut dense = KvCacheManager::new(CacheKind::Dense { d: 128 }, 4,
                                             2, budget);
@@ -159,82 +214,113 @@ mod tests {
         }
         assert_eq!(dense.bytes_per_token(), 4 * 2 * 128 * 2);
         assert_eq!(latent.bytes_per_token(), 4 * 64 * 2);
+        assert!(n_dense > 0);
         assert_eq!(n_latent, n_dense * 4, "2d/(rk+rv) = 4x capacity");
+        assert_eq!(latent.capacity_tokens(), dense.capacity_tokens() * 4);
     }
 
     #[test]
-    fn accounting_balances() {
+    fn accounting_is_block_granular_and_balances() {
         let mut m = KvCacheManager::new(CacheKind::Dense { d: 8 }, 2, 2,
                                         1 << 16);
-        assert!(m.admit(1, 10));
-        assert!(m.admit(2, 5));
-        let used = m.used_bytes();
-        assert_eq!(used, 15 * m.bytes_per_token());
-        assert!(m.extend(1));
-        assert_eq!(m.used_bytes(), 16 * m.bytes_per_token());
+        let bpt = m.bytes_per_token();
+        let bb = m.block_bytes();
+        assert_eq!(bb, DEFAULT_BLOCK_TOKENS * bpt);
+        assert!(m.admit(1, 10)); // 10 tokens -> 3 blocks of 4
+        assert!(m.admit(2, 5)); // 2 blocks
+        assert_eq!(m.used_bytes(), 5 * bb);
+        assert!(m.extend(1)); // 11th token fits block 3
+        assert_eq!(m.used_bytes(), 5 * bb);
+        assert!(m.extend(1)); // 12th fills it
+        assert!(m.extend(1)); // 13th opens block 4
+        assert_eq!(m.used_bytes(), 6 * bb);
         m.release(1);
-        assert_eq!(m.used_bytes(), 5 * m.bytes_per_token());
+        assert_eq!(m.used_bytes(), 2 * bb);
         m.release(2);
         assert_eq!(m.used_bytes(), 0);
+        assert_eq!(m.free_tokens(), m.capacity_tokens());
+        m.pages().check_invariants().unwrap();
     }
 
     #[test]
     fn readmitting_live_seq_releases_old_reservation() {
-        // regression: admit() used to HashMap::insert over a live
-        // allocation without returning its bytes — every re-admission
-        // leaked used_bytes until the budget was permanently exhausted.
+        // regression (pre-pages): admit() used to overwrite a live
+        // allocation without returning its bytes. Pages make the leak
+        // structurally impossible; pin it anyway.
         let mut m = KvCacheManager::new(CacheKind::Dense { d: 8 }, 2, 2,
                                         1 << 16);
         assert!(m.admit(1, 10));
         assert!(m.admit(1, 4), "re-admission must fit");
-        assert_eq!(m.used_bytes(), 4 * m.bytes_per_token(),
-                   "old reservation must be released, not leaked");
+        assert_eq!(m.used_bytes(), m.block_bytes(),
+                   "old blocks must be freed, not leaked");
         m.release(1);
-        assert_eq!(m.used_bytes(), 0, "release must return every byte");
-        // repeated churn on one id must never creep used_bytes upward
+        assert_eq!(m.used_bytes(), 0, "release must return every block");
         for _ in 0..100 {
             assert!(m.admit(7, 12));
         }
         m.release(7);
         assert_eq!(m.used_bytes(), 0);
+        m.pages().check_invariants().unwrap();
     }
 
     #[test]
     fn admit_with_bills_the_actual_footprint() {
         // a latent-accounted variant running dense sessions must charge
-        // the dense rate: admission, extension, and release all follow
-        // the per-sequence rate, not the nominal one
+        // the dense rate: the same block pool, byte-honest block counts
         let mut m = KvCacheManager::new(
             CacheKind::Latent { rk: 4, rv: 4 }, 2, 2, 1 << 12);
         let dense_bpt = m.bytes_per_token_for(CacheKind::Dense { d: 16 }, 2);
         assert_eq!(dense_bpt, 2 * 16 * 2 * 2);
         assert!(dense_bpt > m.bytes_per_token(), "dense must cost more");
+        let bb = m.block_bytes(); // 4 tokens at the *latent* rate
         assert!(m.admit_with(1, 5, dense_bpt));
-        assert_eq!(m.used_bytes(), 5 * dense_bpt);
-        assert!(m.extend(1));
-        assert_eq!(m.used_bytes(), 6 * dense_bpt,
+        assert_eq!(m.used_bytes(),
+                   (5 * dense_bpt).div_ceil(bb) * bb);
+        assert!(m.try_extend(1));
+        assert_eq!(m.used_bytes(),
+                   (6 * dense_bpt).div_ceil(bb) * bb,
                    "extend must grow at the admitted rate");
         m.release(1);
         assert_eq!(m.used_bytes(), 0);
-        // eviction at the admitted rate returns every byte too
+        // eviction at the admitted rate returns every block too
         let cap = (1 << 12) / dense_bpt;
         assert!(m.admit_with(2, cap, dense_bpt));
         assert!(!m.extend(2), "over budget must evict");
         assert_eq!(m.used_bytes(), 0);
+        assert_eq!(m.evictions, 1);
     }
 
     #[test]
-    fn admission_control_and_eviction() {
+    fn admission_control_eviction_and_try_extend() {
+        // 1 layer of d=8 at 2 B -> 32 B/token; 2-block pool of 4 tokens
         let mut m = KvCacheManager::new(CacheKind::Dense { d: 8 }, 1, 2,
-                                        32 * 10); // 10 tokens budget
-        assert!(m.admit(1, 8));
-        assert!(!m.admit(2, 8), "over budget must be rejected");
+                                        32 * 8);
+        assert_eq!(m.total_blocks(), 2);
+        assert!(m.admit(1, 5)); // both blocks
+        assert!(!m.admit(2, 1), "no free block must reject admission");
+        assert!(m.extend(1)); // 6..8 fit the held blocks
         assert!(m.extend(1));
         assert!(m.extend(1));
-        // budget full: next extend evicts
+        // pool full: try_extend refuses but keeps the sequence alive
+        assert!(!m.try_extend(1));
+        assert_eq!(m.active_sequences(), 1);
+        assert_eq!(m.evictions, 0);
+        // ... while extend() evicts it
         assert!(!m.extend(1));
         assert_eq!(m.evictions, 1);
         assert_eq!(m.active_sequences(), 0);
         assert_eq!(m.used_bytes(), 0);
+        assert!(!m.try_extend(99), "unknown sequences refuse");
+    }
+
+    #[test]
+    fn fits_total_separates_never_from_not_now() {
+        let mut m = KvCacheManager::new(CacheKind::Dense { d: 8 }, 1, 2,
+                                        32 * 8); // 8-token pool
+        assert!(m.fits_total(8, m.bytes_per_token()));
+        assert!(!m.fits_total(9, m.bytes_per_token()));
+        assert!(m.admit(1, 8));
+        // not-now: would fit an empty pool, but blocks are held
+        assert!(!m.admit(2, 4) && m.fits_total(4, m.bytes_per_token()));
     }
 }

@@ -11,6 +11,9 @@ struct Inner {
     latencies: BTreeMap<String, Vec<f64>>, // micros
     /// high-water gauges (e.g. peak cache bytes across workers)
     gauges: BTreeMap<String, u64>,
+    /// level gauges adjusted by +/- deltas (queue depth, live sessions);
+    /// each also records its high-water mark under `<name>_peak`
+    levels: BTreeMap<String, i64>,
 }
 
 #[derive(Default)]
@@ -45,6 +48,38 @@ impl Metrics {
         self.inner.lock().unwrap().gauges.get(name).copied().unwrap_or(0)
     }
 
+    /// Adjust a level gauge by a signed delta (queue depth, live decode
+    /// sessions) and record its high-water mark under `<name>_peak` —
+    /// one call site per transition, no separate peak bookkeeping to
+    /// forget.
+    pub fn gauge_add(&self, name: &str, delta: i64) {
+        let mut g = self.inner.lock().unwrap();
+        let level = g.levels.entry(name.to_string()).or_insert(0);
+        *level += delta;
+        let now = *level;
+        if now > 0 {
+            let peak = g.gauges.entry(format!("{name}_peak")).or_insert(0);
+            *peak = (*peak).max(now as u64);
+        }
+    }
+
+    /// Current value of a level gauge (0 if never touched).
+    pub fn level(&self, name: &str) -> i64 {
+        self.inner.lock().unwrap().levels.get(name).copied().unwrap_or(0)
+    }
+
+    /// Ratio of two counters as a percentage string, `"n/a"` when the
+    /// denominator is zero — the batch-occupancy readout
+    /// (`sched_steps` over `sched_slots`) shared by the serve summary
+    /// and the benches, so the derived metric has one definition.
+    pub fn ratio_pct(&self, num: &str, den: &str) -> String {
+        match self.counter(den) {
+            0 => "n/a".to_string(),
+            d => format!("{:.0}%",
+                         100.0 * self.counter(num) as f64 / d as f64),
+        }
+    }
+
     pub fn observe(&self, name: &str, d: Duration) {
         let mut g = self.inner.lock().unwrap();
         g.latencies.entry(name.to_string()).or_default()
@@ -76,6 +111,11 @@ impl Metrics {
         }
         for (k, v) in &g.gauges {
             out.push_str(&format!("  {k}: {v} (peak)\n"));
+        }
+        for (k, v) in &g.levels {
+            if *v != 0 {
+                out.push_str(&format!("  {k}: {v} (now)\n"));
+            }
         }
         drop(g);
         let names: Vec<String> = {
@@ -122,6 +162,23 @@ mod tests {
         assert_eq!(m.gauge("cache_bytes"), 250);
         assert_eq!(m.gauge("missing"), 0);
         assert!(m.summary().contains("cache_bytes: 250 (peak)"));
+    }
+
+    #[test]
+    fn level_gauges_track_current_and_peak() {
+        let m = Metrics::new();
+        assert_eq!(m.level("queue"), 0);
+        m.gauge_add("queue", 3);
+        m.gauge_add("queue", 2);
+        m.gauge_add("queue", -4);
+        assert_eq!(m.level("queue"), 1);
+        assert_eq!(m.gauge("queue_peak"), 5);
+        m.gauge_add("queue", -1);
+        assert_eq!(m.level("queue"), 0);
+        assert_eq!(m.gauge("queue_peak"), 5, "peak survives the drain");
+        assert!(m.summary().contains("queue_peak: 5 (peak)"));
+        assert!(!m.summary().contains("queue: 0 (now)"),
+                "zero levels stay out of the summary");
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! L3 serving coordinator: request router, dynamic batcher, KV-cache
-//! manager with MLA-aware accounting, worker pool over PJRT executables,
+//! L3 serving coordinator: request router, dynamic batcher, paged
+//! KV-cache manager with MLA-aware accounting, a step-level
+//! continuous-batching scheduler, worker pool over pluggable backends,
 //! and a metrics registry — the vLLM-router-shaped stack the paper's
 //! compressed models plug into (std::thread + mpsc; tokio is unavailable
 //! offline, see DESIGN.md §2).
@@ -7,11 +8,15 @@
 pub mod batcher;
 pub mod kvcache;
 pub mod metrics;
+pub mod pages;
 pub mod router;
+pub mod scheduler;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use kvcache::{CacheKind, KvCacheManager};
 pub use metrics::Metrics;
+pub use pages::PageAllocator;
 pub use router::{ModelVariant, Router};
+pub use scheduler::{SchedulerConfig, WorkerScheduler};
 pub use server::{GenerateRequest, GenerateResponse, Server, ServerConfig};

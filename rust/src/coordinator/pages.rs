@@ -1,0 +1,299 @@
+//! Paged KV-cache block allocator — the vLLM/PagedAttention-shaped
+//! replacement for byte-counter admission.
+//!
+//! The pool is a fixed set of equal-sized physical blocks carved out of
+//! the variant's byte budget. A block is sized in *tokens at the
+//! variant's nominal per-layer byte-rate* (`block_tokens ×
+//! bytes/token`), so for nominally-billed sequences it is exactly a
+//! vLLM-style fixed-size token block; sequences billed at a different
+//! real footprint ([`crate::coordinator::kvcache::KvCacheManager::admit_with`])
+//! are charged byte-honestly — `ceil(tokens × rate / block_bytes)`
+//! blocks — which is where the paper's differentiator shows up: a latent
+//! layer's `r_k + r_v` floats/token pack many more tokens into each
+//! block than a dense layer's `2·d`, so the same pool admits more live
+//! latent sessions than dense ones.
+//!
+//! The allocator only *accounts* — the tensors live in each session's
+//! [`crate::runtime::decode::DecodeState`] and are freed by dropping the
+//! session. Invariants (each block owned by exactly one sequence or the
+//! free list, no double-frees, churn conserves the pool) are enforced
+//! structurally and re-checkable via [`PageAllocator::check_invariants`]
+//! (property-tested in `tests/properties.rs`).
+
+use std::collections::HashMap;
+
+#[derive(Debug)]
+struct SeqPages {
+    blocks: Vec<u32>,
+    tokens: usize,
+    /// the byte-rate this sequence is billed at (admission rate; see
+    /// `KvCacheManager::admit_with`)
+    bytes_per_token: usize,
+}
+
+/// Fixed-pool block allocator with LIFO free-list reuse.
+#[derive(Debug)]
+pub struct PageAllocator {
+    block_bytes: usize,
+    total_blocks: usize,
+    /// LIFO: the most recently freed block is handed out first, keeping
+    /// hot blocks hot
+    free: Vec<u32>,
+    seqs: HashMap<u64, SeqPages>,
+    blocks_in_use: usize,
+    /// high-water mark of `blocks_in_use`, monotone
+    pub peak_blocks: usize,
+}
+
+impl PageAllocator {
+    /// Carve `budget_bytes` into blocks of `block_bytes` (the remainder
+    /// is unusable, as in any paged pool).
+    pub fn new(budget_bytes: usize, block_bytes: usize) -> PageAllocator {
+        let block_bytes = block_bytes.max(1);
+        let total_blocks = budget_bytes / block_bytes;
+        // reversed so block 0 pops first (free-list pops from the back)
+        let free: Vec<u32> = (0..total_blocks as u32).rev().collect();
+        PageAllocator {
+            block_bytes,
+            total_blocks,
+            free,
+            seqs: HashMap::new(),
+            blocks_in_use: 0,
+            peak_blocks: 0,
+        }
+    }
+
+    /// Blocks a sequence of `tokens` tokens at `bytes_per_token` needs.
+    pub fn blocks_for(&self, tokens: usize, bytes_per_token: usize)
+                      -> usize {
+        let bytes = tokens * bytes_per_token;
+        bytes.div_ceil(self.block_bytes)
+    }
+
+    /// Reserve blocks for `tokens` tokens at `bytes_per_token`. A live
+    /// `seq_id` is replaced release-then-reserve (re-admission after
+    /// preemption), so a stale reservation can never leak. Returns false
+    /// — leaving the sequence unregistered — when the free list cannot
+    /// cover it.
+    pub fn admit(&mut self, seq_id: u64, tokens: usize,
+                 bytes_per_token: usize) -> bool {
+        self.release(seq_id);
+        let need = self.blocks_for(tokens, bytes_per_token);
+        if need > self.free.len() {
+            return false;
+        }
+        let at = self.free.len() - need;
+        let blocks = self.free.split_off(at);
+        self.blocks_in_use += need;
+        self.peak_blocks = self.peak_blocks.max(self.blocks_in_use);
+        self.seqs.insert(seq_id,
+                         SeqPages { blocks, tokens, bytes_per_token });
+        true
+    }
+
+    /// Grow a sequence by one token, allocating a fresh block when it
+    /// crosses a block boundary. Returns false — without touching the
+    /// sequence — when the sequence is unknown or the pool has no free
+    /// block; the *caller* decides between eviction and
+    /// preemption-by-requeue.
+    pub fn extend(&mut self, seq_id: u64) -> bool {
+        let Some(s) = self.seqs.get_mut(&seq_id) else {
+            return false;
+        };
+        let bpt = s.bytes_per_token;
+        let need = (s.tokens + 1) * bpt;
+        let have = s.blocks.len() * self.block_bytes;
+        if need <= have {
+            s.tokens += 1;
+            return true;
+        }
+        let grow = (need - have).div_ceil(self.block_bytes);
+        if grow > self.free.len() {
+            return false;
+        }
+        let at = self.free.len() - grow;
+        s.blocks.extend(self.free.drain(at..));
+        s.tokens += 1;
+        self.blocks_in_use += grow;
+        self.peak_blocks = self.peak_blocks.max(self.blocks_in_use);
+        true
+    }
+
+    /// Return every block a sequence holds to the free list. Unknown ids
+    /// are a no-op — release is idempotent, so a double-release cannot
+    /// double-free.
+    pub fn release(&mut self, seq_id: u64) {
+        if let Some(s) = self.seqs.remove(&seq_id) {
+            self.blocks_in_use -= s.blocks.len();
+            self.free.extend(s.blocks);
+        }
+    }
+
+    /// Whether a sequence of `tokens` tokens at `bytes_per_token` could
+    /// fit the pool even with every block free — the "can this request
+    /// EVER run" admission pre-check that separates requeue-and-wait
+    /// from reject-now.
+    pub fn fits_total(&self, tokens: usize, bytes_per_token: usize) -> bool {
+        self.blocks_for(tokens, bytes_per_token) <= self.total_blocks
+    }
+
+    pub fn block_bytes(&self) -> usize {
+        self.block_bytes
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.blocks_in_use
+    }
+
+    /// Bytes the in-use blocks pin (block-quantized — a page pool cannot
+    /// hand out fractions of a block).
+    pub fn used_bytes(&self) -> usize {
+        self.blocks_in_use * self.block_bytes
+    }
+
+    /// Whether a sequence is currently registered.
+    pub fn contains(&self, seq_id: u64) -> bool {
+        self.seqs.contains_key(&seq_id)
+    }
+
+    /// Blocks a live sequence currently holds (0 for unknown ids).
+    pub fn blocks_of(&self, seq_id: u64) -> usize {
+        self.seqs.get(&seq_id).map(|s| s.blocks.len()).unwrap_or(0)
+    }
+
+    /// Tokens a live sequence is billed for (0 for unknown ids).
+    pub fn tokens_of(&self, seq_id: u64) -> usize {
+        self.seqs.get(&seq_id).map(|s| s.tokens).unwrap_or(0)
+    }
+
+    pub fn active_sequences(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Exhaustive ownership audit: every block id in range, owned by
+    /// exactly one sequence or the free list, and the pool conserved.
+    /// O(total²) worst case — a test/debug tool, not a hot-path check.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.total_blocks];
+        let mut own = |b: u32, who: &str| -> Result<(), String> {
+            let i = b as usize;
+            if i >= self.total_blocks {
+                return Err(format!("{who} holds out-of-range block {b}"));
+            }
+            if seen[i] {
+                return Err(format!("block {b} owned twice (second: {who})"));
+            }
+            seen[i] = true;
+            Ok(())
+        };
+        for &b in &self.free {
+            own(b, "free list")?;
+        }
+        for (id, s) in &self.seqs {
+            for &b in &s.blocks {
+                own(b, &format!("seq {id}"))?;
+            }
+            let need = self.blocks_for(s.tokens, s.bytes_per_token);
+            if s.blocks.len() < need {
+                return Err(format!(
+                    "seq {id}: {} tokens at {} B/tok need {need} blocks \
+                     but only {} are held",
+                    s.tokens, s.bytes_per_token, s.blocks.len()));
+            }
+        }
+        let owned = self.free.len() + self.blocks_in_use;
+        if owned != self.total_blocks || seen.iter().any(|s| !s) {
+            return Err(format!(
+                "pool not conserved: {} free + {} in use != {} total",
+                self.free.len(), self.blocks_in_use, self.total_blocks));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_in_block_granularity() {
+        // 8 blocks of 64 B; at 16 B/token a block holds 4 tokens
+        let mut p = PageAllocator::new(512, 64);
+        assert_eq!(p.total_blocks(), 8);
+        assert_eq!(p.blocks_for(4, 16), 1);
+        assert_eq!(p.blocks_for(5, 16), 2);
+        assert!(p.admit(1, 5, 16));
+        assert_eq!(p.blocks_of(1), 2);
+        assert_eq!(p.free_blocks(), 6);
+        assert_eq!(p.used_bytes(), 128);
+        // a 7th..8th token fits the held blocks; the 9th needs a third
+        assert!(p.extend(1) && p.extend(1) && p.extend(1));
+        assert_eq!(p.blocks_of(1), 2);
+        assert!(p.extend(1));
+        assert_eq!(p.blocks_of(1), 3);
+        assert_eq!(p.tokens_of(1), 9);
+        p.release(1);
+        assert_eq!(p.free_blocks(), 8);
+        assert_eq!(p.used_blocks(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn exhaustion_and_recovery() {
+        let mut p = PageAllocator::new(256, 64); // 4 blocks
+        assert!(p.admit(1, 4, 16)); // 1 block
+        assert!(p.admit(2, 12, 16)); // 3 blocks
+        assert_eq!(p.free_blocks(), 0);
+        assert!(!p.extend(1), "no free block: extend must refuse");
+        assert_eq!(p.tokens_of(1), 4, "a refused extend changes nothing");
+        assert!(!p.admit(3, 1, 16), "full pool refuses admission");
+        assert!(p.blocks_of(3) == 0);
+        p.release(2);
+        assert!(p.admit(3, 8, 16));
+        p.check_invariants().unwrap();
+        assert!(!p.extend(99), "unknown sequences refuse");
+    }
+
+    #[test]
+    fn latent_rate_packs_more_tokens_per_block() {
+        // the paper's benefit (ii) in paging terms: at 1/4 the byte-rate
+        // a latent sequence needs 1/4 the blocks for the same tokens
+        let p = PageAllocator::new(4096, 256);
+        assert_eq!(p.blocks_for(32, 64), 8); // dense-ish rate
+        assert_eq!(p.blocks_for(32, 16), 2); // latent rate
+        assert!(p.fits_total(64, 64));
+        assert!(!p.fits_total(65, 64));
+        assert!(p.fits_total(256, 16));
+    }
+
+    #[test]
+    fn readmission_replaces_and_release_is_idempotent() {
+        let mut p = PageAllocator::new(512, 64);
+        assert!(p.admit(7, 16, 16)); // 4 blocks
+        assert!(p.admit(7, 4, 16), "re-admission must release first");
+        assert_eq!(p.blocks_of(7), 1);
+        assert_eq!(p.used_blocks(), 1);
+        p.release(7);
+        p.release(7); // idempotent — no double-free
+        assert_eq!(p.free_blocks(), 8);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn zero_block_pool_refuses_everything() {
+        let mut p = PageAllocator::new(63, 64);
+        assert_eq!(p.total_blocks(), 0);
+        assert!(!p.admit(1, 1, 1));
+        assert!(!p.fits_total(1, 1));
+        assert!(p.admit(2, 0, 16), "an empty reservation needs no blocks");
+        p.check_invariants().unwrap();
+    }
+}

@@ -50,6 +50,15 @@ impl Router {
     /// Choose a variant index for a request of `tokens` length; accounts
     /// the admission in the chosen variant's cache. None = all saturated.
     pub fn route(&mut self, seq_id: u64, tokens: usize) -> Option<usize> {
+        self.route_excluding(seq_id, tokens, &[])
+    }
+
+    /// [`Router::route`] skipping `excluded` variant indices — the
+    /// scheduler uses it to re-route a request whose *real* session
+    /// footprint proved too large for a pool it was previously placed
+    /// on, instead of bouncing against that pool forever.
+    pub fn route_excluding(&mut self, seq_id: u64, tokens: usize,
+                           excluded: &[usize]) -> Option<usize> {
         let n = self.variants.len();
         if n == 0 {
             return None;
@@ -71,15 +80,17 @@ impl Router {
             Policy::CacheAware => {
                 let mut idx: Vec<usize> = (0..n).collect();
                 idx.sort_by_key(|&i| {
-                    let c = &self.variants[i].cache;
-                    let free = c.capacity_tokens().saturating_sub(
-                        c.used_bytes() / c.bytes_per_token().max(1));
-                    std::cmp::Reverse(free)
+                    // free-list headroom in nominal tokens: the paged
+                    // equivalent of capacity minus used
+                    std::cmp::Reverse(self.variants[i].cache.free_tokens())
                 });
                 idx
             }
         };
         for i in order {
+            if excluded.contains(&i) {
+                continue;
+            }
             if self.variants[i].cache.admit(seq_id, tokens) {
                 return Some(i);
             }
@@ -162,6 +173,20 @@ mod tests {
     fn variant_with_budget(name: &str, kind: CacheKind, budget: usize)
                            -> ModelVariant {
         variant(name, kind, budget)
+    }
+
+    #[test]
+    fn route_excluding_skips_named_variants() {
+        let vs = vec![
+            variant("a", CacheKind::Dense { d: 64 }, 1 << 22),
+            variant("b", CacheKind::Dense { d: 64 }, 1 << 22),
+        ];
+        let mut r = Router::new(vs, Policy::RoundRobin);
+        // round-robin would pick 0 first; exclusion forces 1
+        assert_eq!(r.route_excluding(0, 16, &[0]), Some(1));
+        assert_eq!(r.route_excluding(1, 16, &[1]), Some(0));
+        assert_eq!(r.route_excluding(2, 16, &[0, 1]), None,
+                   "everything excluded routes nowhere");
     }
 
     #[test]

@@ -1,0 +1,629 @@
+//! Step-level continuous-batching scheduler: Orca-style iteration
+//! scheduling over the paged latent KV cache.
+//!
+//! The sequential decode path (PR 4) runs one [`GenerateRequest`] to
+//! completion per worker — a long decode monopolizes its worker and
+//! mixed traffic queues behind it. Here each worker instead keeps a
+//! *live session set* and pulls **scheduler iterations**: every
+//! iteration admits waiting requests from the shared [`SchedQueue`]
+//! (pages reserved on the routed variant's paged
+//! [`super::kvcache::KvCacheManager`]), feeds at most one prefill chunk
+//! per not-yet-ready sequence, forms one mixed batch of single-token
+//! decode steps for every ready sequence, and runs it through the
+//! worker's [`BatchedDecodeState`]. Score batches keep flowing between
+//! iterations on the same worker.
+//!
+//! **Preemption-by-eviction.** When a decode step cannot reserve its
+//! next cache block, the newest live sequence *on the refusing
+//! variant's pool* is preempted (releasing another variant's pages
+//! would free nothing in the pool that refused): its
+//! session (and the cache tensors inside) is dropped, its pages return
+//! to the free list, and its request — with the tokens generated so far
+//! and its sampling RNG state — is requeued at the queue head to resume
+//! later by re-prefilling `prompt ++ generated`. Nothing errors unless
+//! a request could never fit the pool even when empty. Because cached
+//! decode is bit-identical to recompute (`runtime::refbackend`), and
+//! each request samples from its own seeded RNG, the token stream is
+//! **identical to the sequential path** regardless of batch composition
+//! or how many preempt→requeue→resume cycles a request survives
+//! (pinned by `tests/decode.rs`).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::kvcache::DEFAULT_BLOCK_TOKENS;
+use super::metrics::Metrics;
+use super::router::Router;
+use super::server::{sample_cache_peaks, GenerateRequest, GenerateResponse};
+use crate::eval::generate::pick_token;
+use crate::runtime::decode::BatchedDecodeState;
+use crate::runtime::Engine;
+use crate::util::lock_unpoisoned;
+use crate::util::rng::Rng;
+
+/// Continuous-batching knobs (`latentllm serve --sched-*`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedulerConfig {
+    /// live decode sessions per worker — the iteration's batch width
+    pub max_live: usize,
+    /// page size in tokens at each variant's nominal byte-rate. NOTE:
+    /// this is a *pool-construction* parameter — pass it to
+    /// [`super::kvcache::KvCacheManager::with_block_tokens`] when
+    /// building the variants (as `latentllm serve` does); the scheduler
+    /// loop itself reads only `max_live` and `prefill_chunk`, so a
+    /// value that disagrees with the caches silently does nothing
+    pub block_tokens: usize,
+    /// max prompt/resume tokens fed per sequence per iteration, so one
+    /// giant prefill cannot starve its batch-mates' decode steps
+    pub prefill_chunk: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_live: 8,
+            block_tokens: DEFAULT_BLOCK_TOKENS,
+            prefill_chunk: 16,
+        }
+    }
+}
+
+/// One generate request's scheduler state — everything that must
+/// survive a preempt→requeue→resume cycle. The session itself is
+/// deliberately absent: preemption drops it and resume re-prefills
+/// `prompt ++ generated`, which reproduces the dropped cache (and its
+/// next-token logits) exactly.
+pub struct GenTask {
+    pub req: GenerateRequest,
+    pub reply: std::sync::mpsc::Sender<GenerateResponse>,
+    pub t_submit: Instant,
+    /// server-internal cache-accounting key (see server::GEN_SEQ_BASE)
+    pub cache_key: u64,
+    /// continuation decoded so far, across preemptions
+    pub generated: Vec<i32>,
+    /// per-request sampling stream — what makes sampled decode
+    /// batch-composition-independent
+    pub rng: Rng,
+    pub preemptions: u32,
+    /// set at first admission (queue-wait metric observes once)
+    pub t_first_admit: Option<Instant>,
+    /// variants whose pool can never hold this request at the *real*
+    /// session footprint (learned by opening a session there); routing
+    /// excludes them so the request lands elsewhere instead of bouncing
+    /// against the same pool forever
+    pub no_fit: Vec<usize>,
+}
+
+impl GenTask {
+    pub fn new(req: GenerateRequest,
+               reply: std::sync::mpsc::Sender<GenerateResponse>,
+               cache_key: u64) -> GenTask {
+        let rng = Rng::new(req.seed);
+        GenTask {
+            req,
+            reply,
+            t_submit: Instant::now(),
+            cache_key,
+            generated: Vec::new(),
+            rng,
+            preemptions: 0,
+            t_first_admit: None,
+            no_fit: Vec::new(),
+        }
+    }
+
+    /// Tokens a (re)admitted session must hold: the prompt plus the
+    /// continuation so far.
+    fn total_feed(&self) -> usize {
+        self.req.prompt.len() + self.generated.len()
+    }
+}
+
+/// Shared admission queue feeding every worker's scheduler: new requests
+/// arrive at the back, preempted (resumable) requests re-enter at the
+/// front — they hold queue seniority, vLLM-style.
+#[derive(Default)]
+pub struct SchedQueue {
+    q: Mutex<VecDeque<GenTask>>,
+}
+
+impl SchedQueue {
+    pub fn new() -> SchedQueue {
+        SchedQueue::default()
+    }
+
+    pub fn push_back(&self, t: GenTask) {
+        lock_unpoisoned(&self.q).push_back(t);
+    }
+
+    pub fn push_front(&self, t: GenTask) {
+        lock_unpoisoned(&self.q).push_front(t);
+    }
+
+    pub fn pop(&self) -> Option<GenTask> {
+        lock_unpoisoned(&self.q).pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        lock_unpoisoned(&self.q).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One live sequence on a worker.
+struct LiveSeq {
+    task: GenTask,
+    /// slot in the worker's [`BatchedDecodeState`]
+    slot: usize,
+    vidx: usize,
+    vname: String,
+    /// tokens of `prompt ++ generated` fed to the session so far
+    fed: usize,
+    /// next-token logits, present once the feed is complete
+    logits: Option<Vec<f32>>,
+}
+
+enum Admitted {
+    /// admitted into the live set
+    Live,
+    /// a response was sent (validation error, can-never-fit, ...)
+    Replied,
+    /// no room right now but possible later — put it back
+    Requeue(GenTask),
+}
+
+/// Per-worker continuous-batching engine. Owns the worker's live
+/// session set (sessions are not `Send`, so they never cross threads —
+/// preemption and resume move only the [`GenTask`]).
+pub struct WorkerScheduler {
+    widx: usize,
+    cfg: SchedulerConfig,
+    batch: BatchedDecodeState,
+    /// admission order, oldest first — the preemption victim is always
+    /// the newest, so the oldest always progresses and the set drains
+    live: Vec<LiveSeq>,
+}
+
+impl WorkerScheduler {
+    pub fn new(widx: usize, cfg: SchedulerConfig) -> WorkerScheduler {
+        WorkerScheduler {
+            widx,
+            cfg,
+            batch: BatchedDecodeState::new(),
+            live: Vec::new(),
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    pub fn live_sessions(&self) -> usize {
+        self.live.len()
+    }
+
+    /// One scheduler iteration: admit → prefill chunks → sample/extend →
+    /// one mixed step batch → retire. Returns whether any work was done
+    /// (the worker loop uses it to pace its queue polling).
+    pub fn iteration(&mut self, engine: &Engine, router: &Mutex<Router>,
+                     queue: &SchedQueue, metrics: &Arc<Metrics>) -> bool {
+        let mut progress = false;
+        // --- admission: fill free slots from the shared queue (FCFS —
+        // a head that doesn't fit parks rather than being overtaken) ---
+        while self.live.len() < self.cfg.max_live.max(1) {
+            let Some(task) = queue.pop() else { break };
+            metrics.gauge_add("gen_queue_depth", -1);
+            match self.admit(engine, router, task, metrics) {
+                Admitted::Live | Admitted::Replied => progress = true,
+                Admitted::Requeue(task) => {
+                    metrics.gauge_add("gen_queue_depth", 1);
+                    queue.push_front(task);
+                    break;
+                }
+            }
+        }
+        if self.live.is_empty() {
+            return progress;
+        }
+        metrics.incr("sched_slots", self.cfg.max_live.max(1) as u64);
+
+        // --- per-sequence scheduling, admission order ---
+        let mut steps: Vec<(usize, i32)> = Vec::new();
+        let mut i = 0;
+        while i < self.live.len() {
+            if self.live[i].logits.is_none() {
+                // prefill (or resume re-prefill), one chunk per iteration
+                progress = true;
+                match self.feed_chunk(i) {
+                    Ok(()) => {
+                        metrics.incr("sched_prefill_chunks", 1);
+                        i += 1;
+                    }
+                    Err(e) => {
+                        metrics.incr("gen_errors", 1);
+                        self.fail(i, router, metrics, format!("{e:#}"));
+                        // the next sequence shifted into index i
+                    }
+                }
+                continue;
+            }
+            // decode: the final sampled token is never fed back (its
+            // logits would go unused and its row was never reserved) —
+            // exactly the sequential path's loop shape
+            if self.live[i].task.generated.len()
+                >= self.live[i].task.req.max_new {
+                progress = true;
+                self.finish(i, router, metrics);
+                continue;
+            }
+            let (next, done) = {
+                let l = &mut self.live[i];
+                let next = pick_token(l.logits.as_ref().expect("ready"),
+                                      l.task.req.temperature,
+                                      &mut l.task.rng) as i32;
+                l.task.generated.push(next);
+                (next, l.task.generated.len() >= l.task.req.max_new)
+            };
+            progress = true;
+            if done {
+                self.finish(i, router, metrics);
+                continue;
+            }
+            // reserve the next cache row; on refusal preempt the newest
+            // live sequence ON THE SAME VARIANT (only its pages feed the
+            // pool that refused us) and retry — preempting ourselves
+            // parks the request (tokens + RNG intact) instead of
+            // erroring it
+            let (vidx, key) = (self.live[i].vidx,
+                               self.live[i].task.cache_key);
+            loop {
+                let ok = {
+                    let mut r = lock_unpoisoned(router);
+                    r.variants[vidx].cache.try_extend(key)
+                };
+                if ok {
+                    steps.push((i, next));
+                    i += 1;
+                    break;
+                }
+                // newest same-variant victim; falls back to `i` itself
+                // (we share our own variant), never below — indices < i
+                // may hold pending steps and already-sampled state
+                let victim = (i..self.live.len()).rev()
+                    .find(|&j| self.live[j].vidx == vidx)
+                    .unwrap_or(i);
+                self.preempt(victim, router, queue, metrics);
+                if victim == i {
+                    break; // we preempted ourselves; i now points past
+                }
+            }
+        }
+
+        // --- one mixed batch of single-token steps ---
+        if !steps.is_empty() {
+            metrics.incr("sched_steps", steps.len() as u64);
+            let batch_steps: Vec<(usize, i32)> = steps.iter()
+                .map(|&(idx, tok)| (self.live[idx].slot, tok))
+                .collect();
+            let results = self.batch.step_many(&batch_steps);
+            let mut dead: Vec<(usize, String)> = Vec::new();
+            for (&(idx, _), res) in steps.iter().zip(results) {
+                match res {
+                    Ok(row) => self.live[idx].logits = Some(row),
+                    Err(e) => dead.push((idx, format!("{e:#}"))),
+                }
+            }
+            // remove highest-index first so earlier indices stay valid
+            for (idx, msg) in dead.into_iter().rev() {
+                metrics.incr("gen_errors", 1);
+                self.fail(idx, router, metrics, msg);
+            }
+        }
+        progress
+    }
+
+    /// Route + page-admit + open a session for a waiting task. Mirrors
+    /// the sequential path's admission ladder (nominal route, session
+    /// capacity check, re-admission at the session's *real* footprint)
+    /// with one difference: a request that doesn't fit *right now* but
+    /// could ever fit is requeued, not rejected.
+    fn admit(&mut self, engine: &Engine, router: &Mutex<Router>,
+             mut task: GenTask, metrics: &Arc<Metrics>) -> Admitted {
+        if task.req.prompt.is_empty() {
+            metrics.incr("request_errors", 1);
+            send_response(task, String::new(), vec![],
+                          Some("empty prompt".to_string()), false);
+            return Admitted::Replied;
+        }
+        let feed_len = task.total_feed();
+        let total_need = task.req.prompt.len()
+            + task.req.max_new.saturating_sub(1);
+        let routed = {
+            let mut r = lock_unpoisoned(router);
+            match r.route_excluding(task.cache_key, feed_len,
+                                    &task.no_fit) {
+                Some(vidx) => {
+                    let v = &r.variants[vidx];
+                    Some((vidx, v.step_program.clone(), v.name.clone(),
+                          v.weights.clone()))
+                }
+                None => None,
+            }
+        };
+        let Some((vidx, program, vname, weights)) = routed else {
+            // not routable right now: requeue if some still-eligible
+            // variant could EVER hold it (best-effort nominal-rate
+            // estimate — the real rate is only knowable after opening a
+            // session there, and a too-optimistic guess just means one
+            // more bounce that lands that variant in `no_fit`)
+            if any_pool_could_ever_fit(router, &task.no_fit, total_need) {
+                return Admitted::Requeue(task);
+            }
+            // can-never-fit anywhere, same contract as the post-route
+            // check below: evicted=true so callers can tell
+            // "shrink/retry won't help at this budget" from hard
+            // failures
+            metrics.incr("gen_evictions", 1);
+            metrics.incr(&format!("worker_{}_evictions", self.widx), 1);
+            send_response(task, String::new(), vec![], Some(format!(
+                "evicted: no variant's paged KV budget can ever hold \
+                 {total_need} tokens")), true);
+            return Admitted::Replied;
+        };
+        let session = match engine.program(&program)
+            .and_then(|p| p.decode_session(&weights)) {
+            Ok(s) => s,
+            Err(e) => {
+                lock_unpoisoned(router).release(vidx, task.cache_key);
+                metrics.incr("gen_errors", 1);
+                send_response(task, vname, vec![],
+                              Some(format!("{e:#}")), false);
+                return Admitted::Replied;
+            }
+        };
+        // sessions are windowless but bounded by the positional table —
+        // reject an overshooting request before paying any prefill
+        if total_need > session.max_tokens() {
+            lock_unpoisoned(router).release(vidx, task.cache_key);
+            metrics.incr("gen_errors", 1);
+            send_response(task, vname, vec![], Some(format!(
+                "prompt {} + {} new tokens needs {total_need} positions \
+                 but the model's context holds {}",
+                task.req.prompt.len(), task.req.max_new,
+                session.max_tokens())), false);
+            return Admitted::Replied;
+        }
+        // re-admit at the session's REAL footprint (a latent-accounted
+        // variant may run dense-layout weights) — and decide now whether
+        // the whole request could ever fit THIS pool at that rate
+        let (admitted, never_fits_here) = {
+            let mut r = lock_unpoisoned(router);
+            let cache = &mut r.variants[vidx].cache;
+            let actual_bpt = cache.bytes_per_token_for(
+                session.cache_kind(), session.n_layers());
+            if !cache.fits_total(total_need, actual_bpt) {
+                cache.release(task.cache_key);
+                (false, true)
+            } else {
+                (cache.admit_with(task.cache_key, feed_len, actual_bpt),
+                 false)
+            }
+        };
+        if never_fits_here {
+            // this pool can never hold the request — exclude it from
+            // future routing; only when EVERY variant is excluded (or
+            // could never fit even nominally) is the request terminally
+            // rejected, since another variant's pool may still hold it
+            if !task.no_fit.contains(&vidx) {
+                task.no_fit.push(vidx);
+            }
+            if any_pool_could_ever_fit(router, &task.no_fit, total_need) {
+                return Admitted::Requeue(task);
+            }
+            metrics.incr("gen_evictions", 1);
+            metrics.incr(&format!("worker_{}_evictions", self.widx), 1);
+            send_response(task, vname, vec![], Some(format!(
+                "evicted: {total_need}-token request can never fit any \
+                 variant's paged KV budget at its real session \
+                 footprint")), true);
+            return Admitted::Replied;
+        }
+        if !admitted {
+            // pages are held elsewhere right now — resume later
+            return Admitted::Requeue(task);
+        }
+        if task.t_first_admit.is_none() {
+            task.t_first_admit = Some(Instant::now());
+            metrics.observe("gen_queue_us", task.t_submit.elapsed());
+        }
+        let slot = self.batch.insert(task.cache_key, session);
+        metrics.gauge_add("live_sessions", 1);
+        self.live.push(LiveSeq {
+            task,
+            slot,
+            vidx,
+            vname,
+            fed: 0,
+            logits: None,
+        });
+        Admitted::Live
+    }
+
+    /// Feed the next `prefill_chunk` tokens of `prompt ++ generated` to
+    /// sequence `i`'s session; the final chunk's last row becomes the
+    /// sequence's next-token logits. Chunking is bit-transparent: rows
+    /// depend only on cache contents before them, so any chunk split
+    /// yields the same logits as one whole-prompt prefill.
+    fn feed_chunk(&mut self, i: usize) -> Result<()> {
+        let l = &mut self.live[i];
+        let prompt = &l.task.req.prompt;
+        let gen = &l.task.generated;
+        let total = prompt.len() + gen.len();
+        let start = l.fed;
+        let end = total.min(start + self.cfg.prefill_chunk.max(1));
+        let mut chunk: Vec<i32> = Vec::with_capacity(end - start);
+        for pos in start..end {
+            chunk.push(if pos < prompt.len() {
+                prompt[pos]
+            } else {
+                gen[pos - prompt.len()]
+            });
+        }
+        let slot = l.slot;
+        let sess = self.batch.session_mut(slot)
+            .ok_or_else(|| anyhow!("live sequence lost slot {slot}"))?;
+        let mut rows = if start == 0 {
+            vec![sess.prefill(&chunk)?]
+        } else {
+            sess.step_many(&chunk)?
+        };
+        l.fed = end;
+        if l.fed == total {
+            l.logits = Some(rows.pop()
+                .ok_or_else(|| anyhow!("empty feed chunk"))?);
+        }
+        Ok(())
+    }
+
+    /// Retire a completed sequence: reply, free pages + session.
+    fn finish(&mut self, i: usize, router: &Mutex<Router>,
+              metrics: &Arc<Metrics>) {
+        let mut l = self.live.remove(i);
+        self.batch.remove(l.slot);
+        {
+            let mut r = lock_unpoisoned(router);
+            r.release(l.vidx, l.task.cache_key);
+            sample_cache_peaks(&r, metrics);
+        }
+        metrics.gauge_add("live_sessions", -1);
+        let tokens = std::mem::take(&mut l.task.generated);
+        metrics.incr("gen_tokens", tokens.len() as u64);
+        metrics.incr(&format!("worker_{}_gen_tokens", self.widx),
+                     tokens.len() as u64);
+        metrics.observe("gen_us", l.task.t_submit.elapsed());
+        if l.task.preemptions > 0 {
+            metrics.incr("gen_resumed_ok", 1);
+        }
+        send_response(l.task, l.vname, tokens, None, false);
+    }
+
+    /// Preempt a live sequence: drop its session (the cache tensors go
+    /// with it), return its pages, park the task at the queue head.
+    fn preempt(&mut self, i: usize, router: &Mutex<Router>,
+               queue: &SchedQueue, metrics: &Arc<Metrics>) {
+        let mut l = self.live.remove(i);
+        self.batch.remove(l.slot);
+        lock_unpoisoned(router).release(l.vidx, l.task.cache_key);
+        l.task.preemptions += 1;
+        metrics.incr("gen_preemptions", 1);
+        metrics.gauge_add("live_sessions", -1);
+        metrics.gauge_add("gen_queue_depth", 1);
+        queue.push_front(l.task);
+    }
+
+    /// Hard per-sequence failure: reply with the error, free everything.
+    fn fail(&mut self, i: usize, router: &Mutex<Router>,
+            metrics: &Arc<Metrics>, msg: String) {
+        let l = self.live.remove(i);
+        self.batch.remove(l.slot);
+        {
+            let mut r = lock_unpoisoned(router);
+            r.release(l.vidx, l.task.cache_key);
+            sample_cache_peaks(&r, metrics);
+        }
+        metrics.gauge_add("live_sessions", -1);
+        send_response(l.task, l.vname, vec![], Some(msg), false);
+    }
+}
+
+/// Could any variant NOT in `no_fit` ever hold `total_need` tokens,
+/// estimated at each pool's nominal byte-rate? The shared
+/// requeue-vs-terminal-reject predicate for both admission failure
+/// paths (unroutable, and real-footprint misfit on the routed pool).
+fn any_pool_could_ever_fit(router: &Mutex<Router>, no_fit: &[usize],
+                           total_need: usize) -> bool {
+    let r = lock_unpoisoned(router);
+    r.variants.iter().enumerate().any(|(i, v)| {
+        !no_fit.contains(&i)
+            && v.cache.fits_total(total_need, v.cache.bytes_per_token())
+    })
+}
+
+/// Send the terminal [`GenerateResponse`] for a task (the receiver may
+/// have hung up — that's its problem, not the worker's).
+fn send_response(task: GenTask, variant: String, tokens: Vec<i32>,
+                 error: Option<String>, evicted: bool) {
+    let latency = task.t_submit.elapsed();
+    let _ = task.reply.send(GenerateResponse {
+        id: task.req.id,
+        tokens,
+        variant,
+        latency,
+        error,
+        evicted,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let c = SchedulerConfig::default();
+        assert!(c.max_live >= 1);
+        assert_eq!(c.block_tokens, DEFAULT_BLOCK_TOKENS);
+        assert!(c.prefill_chunk >= 1);
+    }
+
+    #[test]
+    fn queue_is_fifo_with_front_resume() {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let mk = |id: u64| GenTask::new(GenerateRequest {
+            id,
+            prompt: vec![1],
+            max_new: 1,
+            temperature: 0.0,
+            seed: id,
+        }, tx.clone(), id);
+        let q = SchedQueue::new();
+        assert!(q.is_empty());
+        q.push_back(mk(1));
+        q.push_back(mk(2));
+        q.push_front(mk(3)); // a preempted task resumes first
+        assert_eq!(q.len(), 3);
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop())
+            .map(|t| t.req.id)
+            .collect();
+        assert_eq!(order, vec![3, 1, 2]);
+    }
+
+    #[test]
+    fn task_state_survives_requeue_shape() {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let mut t = GenTask::new(GenerateRequest {
+            id: 9,
+            prompt: vec![1, 2, 3],
+            max_new: 8,
+            temperature: 0.7,
+            seed: 42,
+        }, tx, 1000);
+        assert_eq!(t.total_feed(), 3);
+        let r1 = t.rng.uniform();
+        t.generated.push(7);
+        t.preemptions += 1;
+        assert_eq!(t.total_feed(), 4);
+        // the RNG stream continues — it is NOT reseeded on resume
+        let r2 = t.rng.uniform();
+        assert_ne!(r1, r2);
+        let mut fresh = Rng::new(42);
+        assert_eq!(fresh.uniform(), r1, "stream starts at the seed");
+        assert_eq!(fresh.uniform(), r2, "and continues across preemption");
+    }
+}

@@ -5,12 +5,22 @@
 //! unavailable offline; the control flow is identical).
 //!
 //! Two request kinds share the queue: [`ScoreRequest`]s batch through the
-//! scoring programs as before, and [`GenerateRequest`]s run incremental
-//! decode sessions ([`crate::runtime::DecodeSession`]) on the popping
-//! worker — prompt admitted to the routed variant's [`KvCacheManager`] up
-//! front, every decoded token `extend`ed against the byte budget, and an
-//! eviction verdict mid-decode drops the live session and errors that
-//! request alone. Cache bytes, decode tokens, and evictions are
+//! scoring programs as before, and [`GenerateRequest`]s decode through
+//! incremental sessions ([`crate::runtime::DecodeSession`]) in one of two
+//! modes selected by [`ServerConfig::sched`]:
+//!
+//! * **Continuous batching (default)** — requests land in a shared
+//!   [`super::scheduler::SchedQueue`]; each worker keeps a live session
+//!   set and pulls *scheduler iterations* (admit → prefill chunk → one
+//!   mixed batch of single-token steps) between its score flushes, with
+//!   paged admission and preemption-by-requeue
+//!   (`coordinator::scheduler`).
+//! * **Sequential (`sched: None`)** — the popping worker runs one
+//!   session to completion: prompt admitted up front, every decoded
+//!   token `extend`ed against the paged budget, and an eviction verdict
+//!   mid-decode drops the live session and errors that request alone.
+//!
+//! Cache pages, decode tokens, preemptions, and evictions are
 //! aggregated per worker in [`Metrics`].
 //!
 //! Backends need not be Send (the PJRT client is `Rc`-based), so each
@@ -37,7 +47,10 @@ use anyhow::{bail, Result};
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::router::{Policy, Router};
+use super::scheduler::{GenTask, SchedQueue, SchedulerConfig,
+                       WorkerScheduler};
 use crate::runtime::{Engine, ParamValue};
+use crate::util::lock_unpoisoned;
 
 #[derive(Clone, Debug)]
 pub struct ScoreRequest {
@@ -89,6 +102,10 @@ pub struct ServerConfig {
     pub seq_len: usize,
     /// worker threads, each owning its own Engine (min 1)
     pub workers: usize,
+    /// continuous-batching scheduler for generate traffic; `None` runs
+    /// the sequential one-session-per-worker path (the PR 4 behavior,
+    /// kept as the equivalence oracle and bench baseline)
+    pub sched: Option<SchedulerConfig>,
 }
 
 struct Entry {
@@ -138,6 +155,9 @@ struct Shared {
     live: AtomicUsize,
     /// next generate cache-accounting key (see [`GEN_SEQ_BASE`])
     gen_seq: AtomicU64,
+    /// scheduler-mode generate admissions (new at the back, preempted
+    /// resumes at the front); unused when `ServerConfig::sched` is None
+    gen_queue: SchedQueue,
 }
 
 /// Decrements `Shared::live` on drop — including a worker panic (e.g. a
@@ -183,6 +203,7 @@ pub struct Server {
     shared: Arc<Shared>,
     handles: Vec<std::thread::JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
+    cfg: Arc<ServerConfig>,
 }
 
 impl Server {
@@ -197,6 +218,24 @@ impl Server {
         cfg.workers = cfg.workers.max(1);
         cfg.program_batch = cfg.program_batch.max(1);
         let workers = cfg.workers;
+        // the sched.block_tokens knob only takes effect through the
+        // variants' pool construction (KvCacheManager::with_block_tokens)
+        // — surface a disagreement instead of silently paging at a
+        // different granularity than the operator configured
+        if let Some(sc) = cfg.sched {
+            for v in &router.variants {
+                let want = (sc.block_tokens.max(1)
+                            * v.cache.bytes_per_token().max(1)).max(1);
+                if v.cache.block_bytes() != want {
+                    eprintln!("[server] warning: variant {:?} pages are \
+                               {} B but sched.block_tokens={} implies \
+                               {} B — build the variant's KvCacheManager \
+                               with with_block_tokens(sched.block_tokens)",
+                              v.name, v.cache.block_bytes(),
+                              sc.block_tokens, want);
+                }
+            }
+        }
         let metrics = Arc::new(Metrics::new());
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
@@ -204,6 +243,7 @@ impl Server {
             shutdown: AtomicBool::new(false),
             live: AtomicUsize::new(0),
             gen_seq: AtomicU64::new(GEN_SEQ_BASE),
+            gen_queue: SchedQueue::new(),
         });
         let router = Arc::new(Mutex::new(router));
         let cfg = Arc::new(cfg);
@@ -261,7 +301,7 @@ impl Server {
             }
             return Err(e.context("server start"));
         }
-        Ok(Server { shared, handles, metrics })
+        Ok(Server { shared, handles, metrics, cfg })
     }
 
     /// Enqueue a request; the response arrives on the returned channel.
@@ -280,20 +320,30 @@ impl Server {
         Ok(rrx)
     }
 
-    /// Enqueue an autoregressive decode request; the popping worker runs
-    /// the whole prefill+step session and replies once.
+    /// Enqueue an autoregressive decode request; the response arrives on
+    /// the returned channel once. With the scheduler enabled the request
+    /// joins the shared admission queue and decodes step-interleaved
+    /// with other live sessions; without it, the popping worker runs the
+    /// whole prefill+step session to completion.
     pub fn submit_generate(&self, req: GenerateRequest)
                            -> Result<mpsc::Receiver<GenerateResponse>> {
         self.check_accepting()?;
         let cache_key = self.shared.gen_seq.fetch_add(1, Ordering::SeqCst);
         let (rtx, rrx) = mpsc::channel();
-        self.shared.queue.lock().unwrap().push_back(
-            Job::Generate(GenEntry {
-                req,
-                reply: rtx,
-                t_submit: Instant::now(),
-                cache_key,
-            }));
+        if self.cfg.sched.is_some() {
+            self.metrics.incr("gen_requests", 1);
+            self.metrics.gauge_add("gen_queue_depth", 1);
+            self.shared.gen_queue.push_back(GenTask::new(req, rtx,
+                                                         cache_key));
+        } else {
+            self.shared.queue.lock().unwrap().push_back(
+                Job::Generate(GenEntry {
+                    req,
+                    reply: rtx,
+                    t_submit: Instant::now(),
+                    cache_key,
+                }));
+        }
         self.shared.cv.notify_one();
         Ok(rrx)
     }
@@ -343,10 +393,22 @@ fn worker_loop(widx: usize, engine: &Engine, shared: &Shared,
         crate::util::pool::Pool::mark_worker_thread();
     }
     let mut batcher: Batcher<Entry> = Batcher::new(cfg.batcher);
+    let mut sched = cfg.sched.map(|sc| WorkerScheduler::new(widx, sc));
     let mut draining = false;
+    // did the previous scheduler iteration do work? Then don't sleep at
+    // all — drain any queued jobs and go straight to the next iteration
+    // (decode throughput must not be clocked by the poll interval).
+    let mut sched_active = false;
     loop {
-        let timeout = if draining {
+        // with live sessions (or admittable work) the worker must keep
+        // iterating the scheduler — poll the job queue with a short
+        // timeout instead of parking on the condvar
+        let sched_busy = sched.as_ref().is_some_and(|s| !s.is_idle())
+            || (sched.is_some() && !shared.gen_queue.is_empty());
+        let timeout = if draining || sched_active {
             Duration::ZERO
+        } else if sched_busy {
+            Duration::from_millis(1)
         } else if batcher.is_empty() {
             Duration::from_millis(50)
         } else {
@@ -361,12 +423,13 @@ fn worker_loop(widx: usize, engine: &Engine, shared: &Shared,
                     batcher.push(e, Instant::now());
                 }
                 Job::Generate(g) => {
-                    // decode sessions run on the popping worker, between
-                    // that worker's score flushes; other workers keep
-                    // draining the queue meanwhile. A session can run
-                    // for many steps, so flush any score batch whose
-                    // deadline already passed *first* — its replies must
-                    // not wait behind the whole decode.
+                    // sequential mode only (the scheduler path enqueues
+                    // GenTasks on gen_queue instead): the decode session
+                    // runs on the popping worker, between that worker's
+                    // score flushes. A session can run for many steps,
+                    // so flush any score batch whose deadline already
+                    // passed *first* — its replies must not wait behind
+                    // the whole decode.
                     metrics.incr("gen_requests", 1);
                     flush_due(widx, engine, router, cfg, metrics,
                               &mut batcher, false);
@@ -378,8 +441,16 @@ fn worker_loop(widx: usize, engine: &Engine, shared: &Shared,
         }
         flush_due(widx, engine, router, cfg, metrics, &mut batcher,
                   draining);
+        // one scheduler iteration between score flushes: admit, feed a
+        // prefill chunk per pending sequence, run one mixed step batch
+        if let Some(s) = sched.as_mut() {
+            sched_active = s.iteration(engine, router, &shared.gen_queue,
+                                       metrics);
+        }
         if draining && batcher.is_empty()
-            && shared.queue.lock().unwrap().is_empty() {
+            && shared.queue.lock().unwrap().is_empty()
+            && shared.gen_queue.is_empty()
+            && sched.as_ref().is_none_or(|s| s.is_idle()) {
             break;
         }
     }
@@ -415,6 +486,9 @@ fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
     use crate::eval::generate::pick_token;
     use crate::util::rng::Rng;
 
+    // queue wait = submit → a worker actually starting the decode (the
+    // scheduler path observes the same metric at first admission)
+    metrics.observe("gen_queue_us", g.t_submit.elapsed());
     // decode sessions are windowless — cfg.seq_len is the *score*
     // program's window and does not bound them. The real capacity check
     // (prompt + max_new - 1 vs session.max_tokens()) runs right after
@@ -435,7 +509,7 @@ fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
     // router lock is held for the routing decision only, never across
     // the decode)
     let routed = {
-        let mut r = router.lock().unwrap();
+        let mut r = lock_unpoisoned(router);
         match r.route(g.cache_key, g.req.prompt.len()) {
             Some(vidx) => {
                 let v = &r.variants[vidx];
@@ -481,7 +555,7 @@ fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
         // (serve's latent-accounted variant may run dense-layout
         // compressed weights, 2d/token instead of rk+rv)
         let admitted = {
-            let mut r = router.lock().unwrap();
+            let mut r = lock_unpoisoned(router);
             let cache = &mut r.variants[vidx].cache;
             let actual_bpt = cache.bytes_per_token_for(
                 session.cache_kind(), session.n_layers());
@@ -505,7 +579,7 @@ fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
                 break;
             }
             let alive = {
-                let mut r = router.lock().unwrap();
+                let mut r = lock_unpoisoned(router);
                 r.variants[vidx].cache.extend(g.cache_key)
             };
             if !alive {
@@ -523,7 +597,7 @@ fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
     // captures every admit/extend that preceded it — no per-token
     // metrics traffic, no sampling site to forget.
     {
-        let mut r = router.lock().unwrap();
+        let mut r = lock_unpoisoned(router);
         if !evicted {
             r.release(vidx, g.cache_key);
         }
@@ -569,7 +643,7 @@ fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
 /// admit/extend that preceded it, with no per-token metrics traffic and
 /// no sampling site to forget. (The sum of per-variant peaks is the
 /// budget-relevant capacity number: each variant holds its own budget.)
-fn sample_cache_peaks(r: &Router, metrics: &Arc<Metrics>) {
+pub(crate) fn sample_cache_peaks(r: &Router, metrics: &Arc<Metrics>) {
     let mut fleet = 0usize;
     for v in &r.variants {
         let peak = v.cache.peak_bytes;
@@ -696,7 +770,7 @@ fn score_group(engine: &Engine, router: &Mutex<Router>,
     // namespaced away from decode-session keys (see next_score_key).
     let admit_key = next_score_key();
     let (vidx, program, vname, weights) = {
-        let mut r = router.lock().unwrap();
+        let mut r = lock_unpoisoned(router);
         let vidx = r.route(admit_key, cfg.seq_len).unwrap_or(0);
         let v = &r.variants[vidx];
         (vidx, v.score_program.clone(), v.name.clone(), v.weights.clone())
@@ -722,7 +796,7 @@ fn score_group(engine: &Engine, router: &Mutex<Router>,
         Ok(nll)
     })();
     {
-        let mut r = router.lock().unwrap();
+        let mut r = lock_unpoisoned(router);
         r.release(vidx, admit_key);
         sample_cache_peaks(&r, metrics);
     }

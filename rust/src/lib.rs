@@ -6,10 +6,10 @@
 //! substrate ([`tensor`]), executes the artifact programs through a
 //! pluggable backend ([`runtime`]) — a pure-rust reference interpreter by
 //! default, PJRT/HLO behind `--features pjrt` — evaluates perplexity /
-//! multimodal accuracy ([`eval`]), serves batched requests with an
-//! MLA-aware KV-cache accounting ([`coordinator`]), and regenerates every
-//! table and figure of the paper ([`reports`]). Python/JAX runs only at
-//! `make artifacts` time.
+//! multimodal accuracy ([`eval`]), serves batched requests through a
+//! continuous-batching scheduler over a paged, MLA-aware KV cache
+//! ([`coordinator`]), and regenerates every table and figure of the
+//! paper ([`reports`]). Python/JAX runs only at `make artifacts` time.
 //!
 //! Execution backends (`runtime::backend::Backend`):
 //!

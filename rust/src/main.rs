@@ -79,7 +79,9 @@ USAGE:
                       [--corpus synthwiki] [--artifacts DIR]
   latentllm serve     [--requests N] [--generate N]
                       [--policy cache_aware|prefer_latent|rr]
-                      [--workers N] [--config FILE.toml] [--artifacts DIR]
+                      [--workers N] [--kv-mb N] [--no-sched]
+                      [--sched-live N] [--sched-block T] [--sched-chunk T]
+                      [--config FILE.toml] [--artifacts DIR]
   latentllm generate  --model opt-mini-m [--prompts 8] [--new 32]
                       [--temperature 0.8] [--latent] [--no-cache]
                       [--artifacts DIR]
@@ -92,6 +94,12 @@ Decoding: generate runs incremental KV-cached decode sessions (O(d·T)
        reference. synth-artifacts writes a complete offline artifacts
        dir (manifest + random dense/latent weights + corpora + calib) so
        generate/eval/serve run without the python pipeline.
+Serving: generate traffic runs under a continuous-batching scheduler
+       with a paged KV-cache allocator — --sched-live bounds live
+       sessions per worker, --sched-block sizes the KV pages in tokens,
+       --sched-chunk bounds prefill tokens per iteration, --kv-mb sets
+       each variant's page-pool budget, and --no-sched falls back to
+       sequential one-session-per-worker decode.
 
 Methods (presets): plain asvd_hessian asvd_l1 asvd_l2 asvd_cov asvd_rootcov
                    latentllm latentllm_jointvo
@@ -396,28 +404,60 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     let (latent_w, rep) = plan::compress_plan(cfg, &weights, &cal, &cplan)?;
     println!("built latent variant with plan {} (achieved ratio {:.3})",
              cplan.display_label(), rep.achieved_ratio());
-    let budget = file_cfg.serve.kv_budget_bytes;
+    // scheduler knobs: CLI over config over defaults; --no-sched falls
+    // back to the sequential one-session-per-worker decode path
+    let mut sched_cfg = file_cfg.serve.scheduler;
+    sched_cfg.max_live =
+        args.usize_flag("sched-live", sched_cfg.max_live).max(1);
+    sched_cfg.block_tokens =
+        args.usize_flag("sched-block", sched_cfg.block_tokens).max(1);
+    sched_cfg.prefill_chunk =
+        args.usize_flag("sched-chunk", sched_cfg.prefill_chunk).max(1);
+    let use_sched = !args.flags.contains_key("no-sched")
+        && file_cfg.serve.sched;
+    let budget = match args.flags.get("kv-mb") {
+        Some(v) => {
+            let mb = v.parse::<f64>()
+                .context("--kv-mb must be a number of MiB")?;
+            // a negative/NaN value would cast-saturate to a 0-byte
+            // pool and fail every request with a capacity error
+            anyhow::ensure!(mb.is_finite() && mb > 0.0,
+                            "--kv-mb must be a positive number of MiB \
+                             (got {v})");
+            (mb * (1 << 20) as f64) as usize
+        }
+        None => file_cfg.serve.kv_budget_bytes,
+    };
     let r_lat = latentllm::compress::rank::local_rank(cfg.d, cfg.d,
                                                       1.0 - ratio, true);
+    let bt = sched_cfg.block_tokens;
     let variants = vec![
         ModelVariant {
             name: "dense".into(),
             score_program: format!("score_{model}"),
             step_program: format!("step_{model}"),
             weights: std::sync::Arc::new(weights),
-            cache: KvCacheManager::new(CacheKind::Dense { d: cfg.d },
-                                       cfg.n_layers, 2, budget),
+            cache: KvCacheManager::with_block_tokens(
+                CacheKind::Dense { d: cfg.d }, cfg.n_layers, 2, budget,
+                bt),
         },
         ModelVariant {
             name: "latent30".into(),
             score_program: format!("score_{model}"),
             step_program: format!("step_{model}"),
             weights: std::sync::Arc::new(latent_w),
-            cache: KvCacheManager::new(
+            cache: KvCacheManager::with_block_tokens(
                 CacheKind::Latent { rk: r_lat, rv: r_lat },
-                cfg.n_layers, 2, budget),
+                cfg.n_layers, 2, budget, bt),
         },
     ];
+    // the paged pool in one line: how many live sessions each variant's
+    // budget holds (the latent/dense gap IS the paper's benefit (ii))
+    for v in &variants {
+        println!("  {}: {} blocks of {} B ({} tokens/page nominal)",
+                 v.name, v.cache.total_blocks(), v.cache.block_bytes(),
+                 bt);
+    }
     let router = Router::new(variants, policy);
     let workers = args.usize_flag("workers", file_cfg.serve.workers).max(1);
     let server = Server::start(artifacts.to_path_buf(), router, ServerConfig {
@@ -426,8 +466,17 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
         program_batch: file_cfg.serve.program_batch,
         seq_len: file_cfg.serve.seq_len,
         workers,
+        sched: use_sched.then_some(sched_cfg),
     })?;
-    println!("serving with {} worker(s)", server.live_workers());
+    println!("serving with {} worker(s), scheduler {}",
+             server.live_workers(),
+             if use_sched {
+                 format!("on (live={} block={} chunk={})",
+                         sched_cfg.max_live, sched_cfg.block_tokens,
+                         sched_cfg.prefill_chunk)
+             } else {
+                 "off (sequential sessions)".to_string()
+             });
     let corpus = Corpus::load(artifacts.join("corpora.ltw"), "synthwiki",
                               "test")?;
     let reqs = corpus.calibration(n_requests, file_cfg.serve.seq_len, 99);
@@ -469,14 +518,24 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     let dt = t0.elapsed();
     let metrics = server.shutdown();
     println!("served {ok}/{n_requests} score requests in {:.2}s \
-              ({:.1} req/s)",
-             dt.as_secs_f64(), ok as f64 / dt.as_secs_f64());
+              ({:.1} req/s, failed={})",
+             dt.as_secs_f64(), ok as f64 / dt.as_secs_f64(),
+             n_requests - ok);
     if n_generate > 0 {
         let gen_tokens = metrics.counter("gen_tokens");
-        println!("decoded {gen_ok}/{n_generate} generate requests \
-                  ({gen_evicted} evicted) — {gen_tokens} tokens, \
-                  {:.1} tok/s, peak cache {} bytes",
+        // batch occupancy: decode steps actually scheduled over the
+        // batch slots the scheduler offered (continuous batching's
+        // utilization number); sequential mode has no slots
+        let occupancy = metrics.ratio_pct("sched_steps", "sched_slots");
+        println!("generate: ok={gen_ok}/{n_generate} \
+                  failed={} evicted={gen_evicted} requeued={} — \
+                  {gen_tokens} tokens, {:.1} tok/s, occupancy={occupancy}, \
+                  live_peak={}, queue_peak={}, peak cache {} bytes",
+                 n_generate - gen_ok,
+                 metrics.counter("gen_preemptions"),
                  gen_tokens as f64 / dt.as_secs_f64().max(1e-9),
+                 metrics.gauge("live_sessions_peak"),
+                 metrics.gauge("gen_queue_depth_peak"),
                  metrics.gauge("cache_bytes_peak"));
     }
     print!("{}", metrics.summary());

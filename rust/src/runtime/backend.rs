@@ -71,6 +71,17 @@ pub trait DecodeSession {
     /// sliding, so the table bounds the session length).
     fn step(&mut self, token: i32) -> Result<Vec<f32>>;
 
+    /// Append `tokens` in order, returning the next-token logits after
+    /// *each* of them (`tokens.len()` rows of [vocab]). Semantically —
+    /// and by default literally — repeated [`DecodeSession::step`];
+    /// backends override it with one multi-row forward per call (the
+    /// scheduler's prefill chunks and batched iterations), which stays
+    /// bit-identical because every row's arithmetic depends only on the
+    /// cache contents at positions before it. An empty slice is a no-op.
+    fn step_many(&mut self, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        tokens.iter().map(|&t| self.step(t)).collect()
+    }
+
     /// Tokens currently held in the caches.
     fn cached_tokens(&self) -> usize;
 

@@ -10,6 +10,9 @@
 //! runtime that *holds* the state and the coordinator that *accounts* it
 //! agree by construction).
 
+use anyhow::{anyhow, Result};
+
+use super::backend::DecodeSession;
 use crate::Matrix;
 
 /// Cache-footprint descriptor for one model variant's attention layers.
@@ -105,6 +108,100 @@ impl DecodeState {
     }
 }
 
+/// Multi-sequence decode state: the live session set one scheduler
+/// iteration steps as a single mixed batch. Slots are stable small
+/// integers (freed slots are reused lowest-first) so the coordinator can
+/// refer to a sequence across iterations without holding the session.
+///
+/// The reference backend's sessions interpret one sequence at a time, so
+/// [`BatchedDecodeState::step_many`] drives each named slot's
+/// [`DecodeSession::step`] in the caller's order — per-sequence logits
+/// are bit-identical to one-at-a-time stepping *by construction* (each
+/// session owns its own cache tensors; no cross-sequence state exists).
+/// A fused backend would override this seam, not the scheduler.
+///
+/// Not `Send` (sessions may hold `Rc`-based backend clients): it lives
+/// and dies on one worker thread, like the sessions themselves.
+#[derive(Default)]
+pub struct BatchedDecodeState {
+    slots: Vec<Option<SeqSlot>>,
+}
+
+struct SeqSlot {
+    seq: u64,
+    session: Box<dyn DecodeSession>,
+}
+
+impl BatchedDecodeState {
+    pub fn new() -> BatchedDecodeState {
+        BatchedDecodeState { slots: Vec::new() }
+    }
+
+    /// Adopt a prepared session for sequence `seq`; returns its slot.
+    pub fn insert(&mut self, seq: u64, session: Box<dyn DecodeSession>)
+                  -> usize {
+        let entry = SeqSlot { seq, session };
+        match self.slots.iter().position(Option::is_none) {
+            Some(i) => {
+                self.slots[i] = Some(entry);
+                i
+            }
+            None => {
+                self.slots.push(Some(entry));
+                self.slots.len() - 1
+            }
+        }
+    }
+
+    /// Drop a slot (the session's cache tensors go with it — this IS
+    /// preemption's memory release). Returns the sequence id it held.
+    pub fn remove(&mut self, slot: usize) -> Option<u64> {
+        self.slots.get_mut(slot)?.take().map(|e| e.seq)
+    }
+
+    pub fn seq(&self, slot: usize) -> Option<u64> {
+        self.slots.get(slot)?.as_ref().map(|e| e.seq)
+    }
+
+    /// Direct session access (prefill chunks are fed outside the step
+    /// batch).
+    pub fn session_mut(&mut self, slot: usize)
+                       -> Option<&mut dyn DecodeSession> {
+        match self.slots.get_mut(slot)? {
+            Some(e) => Some(e.session.as_mut()),
+            None => None,
+        }
+    }
+
+    /// One scheduler iteration's mixed batch: step each `(slot, token)`
+    /// pair in order, returning that sequence's next-token logits in the
+    /// same order. Failures are per-slot — one sequence erroring (or a
+    /// stale slot id) must not poison its batch-mates.
+    pub fn step_many(&mut self, steps: &[(usize, i32)])
+                     -> Vec<Result<Vec<f32>>> {
+        steps.iter()
+            .map(|&(slot, token)| match self.session_mut(slot) {
+                Some(s) => s.step(token),
+                None => Err(anyhow!("batched decode: slot {slot} is empty")),
+            })
+            .collect()
+    }
+
+    /// Live sequences.
+    pub fn len(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.iter().all(Option::is_none)
+    }
+
+    /// Exact cached floats across every live session.
+    pub fn cache_elements(&self) -> usize {
+        self.slots.iter().flatten().map(|e| e.session.cache_elements()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,5 +243,97 @@ mod tests {
         assert_eq!(st.cached_tokens(), 4);
         // 4 tokens × (2·8 dense + (3+2) latent)
         assert_eq!(st.cache_elements(), 4 * (16 + 5));
+    }
+
+    /// Deterministic stand-in session: logits echo (id, fed token,
+    /// position) so batched stepping is checkable without a model.
+    struct StubSession {
+        id: f32,
+        fed: Vec<i32>,
+    }
+
+    impl DecodeSession for StubSession {
+        fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+            self.fed.extend_from_slice(tokens);
+            Ok(vec![self.id, 0.0, self.fed.len() as f32])
+        }
+        fn step(&mut self, token: i32) -> Result<Vec<f32>> {
+            if self.fed.len() >= 8 {
+                return Err(anyhow!("stub capacity"));
+            }
+            self.fed.push(token);
+            Ok(vec![self.id, token as f32, self.fed.len() as f32])
+        }
+        fn cached_tokens(&self) -> usize {
+            self.fed.len()
+        }
+        fn max_tokens(&self) -> usize {
+            8
+        }
+        fn cache_kind(&self) -> CacheKind {
+            CacheKind::Dense { d: 1 }
+        }
+        fn n_layers(&self) -> usize {
+            1
+        }
+        fn cache_elements(&self) -> usize {
+            2 * self.fed.len()
+        }
+    }
+
+    fn stub(id: f32) -> Box<dyn DecodeSession> {
+        Box::new(StubSession { id, fed: vec![] })
+    }
+
+    #[test]
+    fn batched_state_slots_are_stable_and_reused() {
+        let mut b = BatchedDecodeState::new();
+        let s0 = b.insert(100, stub(0.0));
+        let s1 = b.insert(101, stub(1.0));
+        let s2 = b.insert(102, stub(2.0));
+        assert_eq!((s0, s1, s2), (0, 1, 2));
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.remove(s1), Some(101));
+        assert_eq!(b.seq(s1), None);
+        assert_eq!(b.seq(s2), Some(102), "later slots must not shift");
+        // freed slot is reused lowest-first
+        assert_eq!(b.insert(103, stub(3.0)), s1);
+        assert_eq!(b.len(), 3);
+        assert!(b.remove(99).is_none(), "out-of-range slot is None");
+    }
+
+    #[test]
+    fn batched_step_many_is_per_slot_and_order_preserving() {
+        let mut b = BatchedDecodeState::new();
+        let a = b.insert(7, stub(7.0));
+        let c = b.insert(9, stub(9.0));
+        b.session_mut(a).unwrap().prefill(&[1, 2]).unwrap();
+        b.session_mut(c).unwrap().prefill(&[3]).unwrap();
+        // mixed batch: results come back in the caller's order, one per
+        // (slot, token) pair, each from its own session's state
+        let out = b.step_many(&[(c, 40), (a, 50)]);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].as_ref().unwrap(), &vec![9.0, 40.0, 2.0]);
+        assert_eq!(out[1].as_ref().unwrap(), &vec![7.0, 50.0, 3.0]);
+        assert_eq!(b.cache_elements(), 2 * (3 + 2));
+        // a stale slot fails that entry alone, not its batch-mates
+        b.remove(c);
+        let out = b.step_many(&[(c, 1), (a, 60)]);
+        assert!(out[0].is_err());
+        assert_eq!(out[1].as_ref().unwrap(), &vec![7.0, 60.0, 4.0]);
+    }
+
+    #[test]
+    fn default_step_many_loops_step() {
+        let mut s = StubSession { id: 5.0, fed: vec![] };
+        s.prefill(&[1]).unwrap();
+        let rows = s.step_many(&[10, 11, 12]).unwrap();
+        assert_eq!(rows, vec![vec![5.0, 10.0, 2.0],
+                              vec![5.0, 11.0, 3.0],
+                              vec![5.0, 12.0, 4.0]]);
+        assert!(s.step_many(&[]).unwrap().is_empty());
+        // capacity error surfaces from the failing step
+        s.step_many(&[0, 0, 0, 0]).unwrap();
+        assert!(s.step_many(&[1]).is_err());
     }
 }

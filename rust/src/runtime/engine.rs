@@ -137,9 +137,12 @@ impl Engine {
 
     /// Load/compile (or fetch from cache) a program by name. Repeated
     /// calls return the same `Arc` — the compile cache the serving loop
-    /// and the eval paths rely on.
+    /// and the eval paths rely on. The cache lock is poison-tolerant
+    /// ([`crate::util::lock_unpoisoned`]): engines are shared across
+    /// server worker threads, and one worker panicking must not cascade
+    /// a `PoisonError` unwrap through every sibling's compile-cache hit.
     pub fn program(&self, name: &str) -> Result<Arc<Program>> {
-        if let Some(p) = self.cache.lock().unwrap().get(name) {
+        if let Some(p) = crate::util::lock_unpoisoned(&self.cache).get(name) {
             return Ok(p.clone());
         }
         let param_order = self.param_order(name)?;
@@ -157,13 +160,14 @@ impl Engine {
             param_order,
             exe,
         });
-        self.cache.lock().unwrap().insert(name.to_string(), prog.clone());
+        crate::util::lock_unpoisoned(&self.cache)
+            .insert(name.to_string(), prog.clone());
         Ok(prog)
     }
 
     /// Number of programs currently in the compile cache.
     pub fn cached_programs(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        crate::util::lock_unpoisoned(&self.cache).len()
     }
 
     /// Convenience: i32 leading input from a flat buffer.

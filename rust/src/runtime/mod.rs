@@ -25,7 +25,7 @@ pub mod pjrt;
 pub mod refbackend;
 
 pub use backend::{Backend, DecodeSession, Executable, ProgramCtx};
-pub use decode::{CacheKind, DecodeState, LayerCache};
+pub use decode::{BatchedDecodeState, CacheKind, DecodeState, LayerCache};
 pub use engine::{tensor_param, Engine, Program};
 pub use literal::ParamValue;
 pub use refbackend::RefBackend;

@@ -1008,12 +1008,16 @@ struct RefExecutable {
 
 impl RefExecutable {
     /// The loaded model for this weight set, (re)loading into the memo
-    /// map on a miss.
+    /// map on a miss. The lock is held only for map lookups/inserts —
+    /// never across a model build — and is taken poison-tolerantly
+    /// ([`crate::util::lock_unpoisoned`]): a worker thread panicking
+    /// mid-execution must not turn every sibling's cache access into a
+    /// `PoisonError` unwrap cascade. Two threads racing a miss may both
+    /// build; the second insert wins and the loser's Arc just drops.
     fn loaded(&self, weights: &Weights)
               -> Result<std::sync::Arc<LoadedModel>> {
-        let mut g = self.cache.lock().unwrap();
         let id = weights.cache_id();
-        if let Some(m) = g.get(&id) {
+        if let Some(m) = crate::util::lock_unpoisoned(&self.cache).get(&id) {
             return Ok(m.clone());
         }
         let model = match &self.kind {
@@ -1028,10 +1032,11 @@ impl RefExecutable {
                 LoadedModel::Mm(MmModel::load(weights, cfg)?)
             }
         };
+        let model = std::sync::Arc::new(model);
+        let mut g = crate::util::lock_unpoisoned(&self.cache);
         if g.len() >= MODEL_CACHE_CAP {
             g.clear();
         }
-        let model = std::sync::Arc::new(model);
         g.insert(id, model.clone());
         Ok(model)
     }
@@ -1086,12 +1091,25 @@ impl RefDecodeSession {
         })
     }
 
-    /// Run `tokens` (the prompt at prefill, one token per step) through
-    /// every layer at absolute positions `cached..`, extending the layer
-    /// caches, and return the last row's logits.
-    fn forward_new(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+    /// Run `tokens` (the prompt at prefill, one token per step, a chunk
+    /// in `step_many`) through every layer at absolute positions
+    /// `cached..`, extending the layer caches, and return the logits —
+    /// every fed row's when `all_rows`, else the final row only. The
+    /// rows are arithmetically independent given the cache contents
+    /// before them (causal masking zeroes the future *exactly*), so a
+    /// multi-row chunk is bit-identical to feeding its tokens one call
+    /// at a time.
+    fn forward_rows(&mut self, tokens: &[i32], all_rows: bool)
+                    -> Result<Matrix> {
         let pos0 = self.state.cached_tokens();
-        let x = match &*self.model {
+        let last_only = |x: Matrix| {
+            if all_rows {
+                x
+            } else {
+                x.slice_rows(x.rows() - 1, x.rows())
+            }
+        };
+        let logits = match &*self.model {
             LoadedModel::Dense(m) => {
                 check_seq_len(pos0 + tokens.len(), m.pos_emb.rows())?;
                 let mut x = embed_tokens(&m.tok_emb, &m.pos_emb, tokens,
@@ -1103,8 +1121,7 @@ impl RefDecodeSession {
                     };
                     x = layer.forward_cached(x, m.n_heads, true, k, v);
                 }
-                tied_head(&x.slice_rows(x.rows() - 1, x.rows()),
-                          &m.lnf_g, &m.lnf_b, &m.tok_emb)
+                tied_head(&last_only(x), &m.lnf_g, &m.lnf_b, &m.tok_emb)
             }
             LoadedModel::Latent(m) => {
                 check_seq_len(pos0 + tokens.len(), m.pos_emb.rows())?;
@@ -1117,13 +1134,17 @@ impl RefDecodeSession {
                     };
                     x = layer.forward_cached(x, m.n_heads, m.d_h, ck, cv);
                 }
-                tied_head(&x.slice_rows(x.rows() - 1, x.rows()),
-                          &m.lnf_g, &m.lnf_b, &m.tok_emb)
+                tied_head(&last_only(x), &m.lnf_g, &m.lnf_b, &m.tok_emb)
             }
             LoadedModel::Mm(_) => bail!("multimodal session is unreachable"),
         };
         self.state.advance(tokens.len());
-        Ok(x.row(0).iter().map(|&v| v as f32).collect())
+        Ok(logits)
+    }
+
+    fn forward_new(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let logits = self.forward_rows(tokens, false)?;
+        Ok(logits.row(0).iter().map(|&v| v as f32).collect())
     }
 }
 
@@ -1144,6 +1165,24 @@ impl DecodeSession for RefDecodeSession {
             bail!("step before prefill — feed the prompt first");
         }
         self.forward_new(&[token]).context("decode step")
+    }
+
+    /// Chunked append: one multi-row forward instead of `tokens.len()`
+    /// single-row passes — the scheduler's prefill chunks ride this.
+    /// Bit-identical to looping [`DecodeSession::step`] (see
+    /// [`RefDecodeSession::forward_rows`]).
+    fn step_many(&mut self, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        if tokens.is_empty() {
+            return Ok(Vec::new());
+        }
+        if self.state.cached_tokens() == 0 {
+            bail!("step_many before prefill — feed the prompt first");
+        }
+        let logits = self.forward_rows(tokens, true)
+            .context("decode step_many")?;
+        Ok((0..logits.rows())
+            .map(|i| logits.row(i).iter().map(|&v| v as f32).collect())
+            .collect())
     }
 
     fn cached_tokens(&self) -> usize {

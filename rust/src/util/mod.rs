@@ -8,3 +8,41 @@ pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod toml;
+
+/// Lock a mutex, recovering from poisoning instead of propagating the
+/// panic. For pure memo caches (the engine's program cache, the ref
+/// backend's model cache, shared queues of owned values) every reachable
+/// state is valid — the poison flag only records that *some* thread
+/// panicked while holding the guard, and un-poisoning costs at worst a
+/// recomputed cache entry. Without this, one worker's panic turns every
+/// sibling's `.lock().unwrap()` into a cascade that kills the whole
+/// server.
+pub fn lock_unpoisoned<T: ?Sized>(m: &std::sync::Mutex<T>)
+                                  -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::{Arc, Mutex};
+
+    use super::lock_unpoisoned;
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_a_holder_panics() {
+        let m = Arc::new(Mutex::new(41));
+        let m2 = m.clone();
+        // poison: panic while holding the guard on another thread
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "the mutex must actually be poisoned");
+        let mut g = lock_unpoisoned(&m);
+        assert_eq!(*g, 41, "state survives — the panic left it valid");
+        *g += 1;
+        drop(g);
+        assert_eq!(*lock_unpoisoned(&m), 42);
+    }
+}

@@ -9,6 +9,7 @@ use std::path::PathBuf;
 use latentllm::coordinator::batcher::BatcherConfig;
 use latentllm::coordinator::kvcache::{CacheKind, KvCacheManager};
 use latentllm::coordinator::router::{ModelVariant, Policy, Router};
+use latentllm::coordinator::scheduler::SchedulerConfig;
 use latentllm::coordinator::server::{GenerateRequest, ScoreRequest, Server,
                                      ServerConfig};
 use latentllm::data::synth::{latent_demo_ranks, write_test_artifacts};
@@ -194,20 +195,48 @@ fn generate_rejects_bad_prompt_sets() {
     std::fs::remove_dir_all(&art).ok();
 }
 
+/// Dense-variant server; `sched: None` = the sequential PR 4 decode
+/// path (the equivalence oracle the scheduler tests pin against).
 fn tiny_server(art: PathBuf, budget: usize, workers: usize) -> Server {
-    let weights = Weights::load(
-        art.join(format!("model_{}.ltw", TINY.name))).unwrap();
-    let variants = vec![ModelVariant {
-        name: "dense".to_string(),
-        score_program: format!("score_{}", TINY.name),
-        step_program: format!("step_{}", TINY.name),
-        weights: std::sync::Arc::new(weights),
-        cache: KvCacheManager::new(CacheKind::Dense { d: TINY.d },
-                                   TINY.n_layers, 2, budget),
-    }];
+    tiny_server_with(art, budget, workers, None, "dense")
+}
+
+/// Server over one tiny variant ("dense" or "latent") with an optional
+/// continuous-batching scheduler. One variant keeps routing out of the
+/// picture so token streams are attributable.
+fn tiny_server_with(art: PathBuf, budget: usize, workers: usize,
+                    sched: Option<SchedulerConfig>, variant: &str)
+                    -> Server {
+    let tag = latent_tag(&art);
+    let block_tokens = sched.map(|s| s.block_tokens)
+        .unwrap_or(latentllm::coordinator::kvcache::DEFAULT_BLOCK_TOKENS);
+    let (rk, rv) = latent_demo_ranks(TINY.d);
+    let v = if variant == "latent" {
+        ModelVariant {
+            name: "latent".to_string(),
+            score_program: format!("latent_score_{tag}"),
+            step_program: format!("latent_step_{tag}"),
+            weights: std::sync::Arc::new(Weights::load(
+                art.join(format!("latent_model_{tag}.ltw"))).unwrap()),
+            cache: KvCacheManager::with_block_tokens(
+                CacheKind::Latent { rk, rv }, TINY.n_layers, 2, budget,
+                block_tokens),
+        }
+    } else {
+        ModelVariant {
+            name: "dense".to_string(),
+            score_program: format!("score_{}", TINY.name),
+            step_program: format!("step_{}", TINY.name),
+            weights: std::sync::Arc::new(Weights::load(
+                art.join(format!("model_{}.ltw", TINY.name))).unwrap()),
+            cache: KvCacheManager::with_block_tokens(
+                CacheKind::Dense { d: TINY.d }, TINY.n_layers, 2, budget,
+                block_tokens),
+        }
+    };
     Server::start(
         art,
-        Router::new(variants, Policy::RoundRobin),
+        Router::new(vec![v], Policy::RoundRobin),
         ServerConfig {
             batcher: BatcherConfig {
                 max_batch: 4,
@@ -217,8 +246,16 @@ fn tiny_server(art: PathBuf, budget: usize, workers: usize) -> Server {
             program_batch: BATCH,
             seq_len: SEQ,
             workers,
+            sched,
         })
         .expect("server start")
+}
+
+/// The latent demo tag recorded in a synthesized artifacts manifest.
+fn latent_tag(art: &std::path::Path) -> String {
+    let engine = Engine::new(art).unwrap();
+    engine.manifest().path(&["latent_demo", "tag"])
+        .and_then(|v| v.as_str()).expect("latent_demo tag").to_string()
 }
 
 #[test]
@@ -326,5 +363,253 @@ fn eviction_under_tight_budget_errors_one_lane_only() {
     let m = server.shutdown();
     assert_eq!(m.counter("gen_evictions"), 1);
     assert_eq!(m.counter("worker_0_evictions"), 1);
+    std::fs::remove_dir_all(&art).ok();
+}
+
+/// Mixed greedy + sampled decode traffic with per-request seeds.
+fn sched_requests() -> Vec<GenerateRequest> {
+    vec![
+        GenerateRequest { id: 0, prompt: vec![1, 2, 3], max_new: 8,
+                          temperature: 0.0, seed: 0 },
+        GenerateRequest { id: 1, prompt: vec![7, 11, 13, 17], max_new: 10,
+                          temperature: 0.8, seed: 21 },
+        GenerateRequest { id: 2, prompt: vec![40, 2], max_new: 6,
+                          temperature: 0.0, seed: 0 },
+        GenerateRequest { id: 3, prompt: vec![5, 9, 4, 33, 8], max_new: 9,
+                          temperature: 0.6, seed: 99 },
+        GenerateRequest { id: 4, prompt: vec![3, 3, 3], max_new: 7,
+                          temperature: 0.0, seed: 0 },
+    ]
+}
+
+fn run_decodes(server: &Server, reqs: &[GenerateRequest])
+               -> Vec<(Vec<i32>, Option<String>, bool)> {
+    let timeout = std::time::Duration::from_secs(120);
+    let rxs: Vec<_> = reqs.iter()
+        .map(|r| server.submit_generate(r.clone()).expect("submit"))
+        .collect();
+    rxs.into_iter()
+        .map(|rx| {
+            let r = rx.recv_timeout(timeout).expect("gen response");
+            (r.tokens, r.error, r.evicted)
+        })
+        .collect()
+}
+
+#[test]
+fn scheduler_decode_is_token_identical_to_sequential_sessions() {
+    // the acceptance criterion: continuous batching (greedy AND
+    // sampled) must emit exactly the sequential path's tokens, on the
+    // dense and the latent program — batch composition must not be able
+    // to leak between sequences.
+    let (art, _tag) = synth("schedeq");
+    let reqs = sched_requests();
+    for variant in ["dense", "latent"] {
+        let sequential = tiny_server_with(art.clone(), 8 << 20, 1, None,
+                                          variant);
+        let want = run_decodes(&sequential, &reqs);
+        sequential.shutdown();
+        for (t, err, _) in &want {
+            assert!(err.is_none(), "{variant} sequential failed: {err:?}");
+            assert!(!t.is_empty());
+        }
+        let sched = tiny_server_with(
+            art.clone(), 8 << 20, 1,
+            Some(SchedulerConfig { max_live: 4, block_tokens: 2,
+                                   prefill_chunk: 2 }),
+            variant);
+        let got = run_decodes(&sched, &reqs);
+        let m = sched.shutdown();
+        assert_eq!(got, want,
+                   "{variant}: scheduler diverged from sequential");
+        assert_eq!(m.counter("gen_requests"), reqs.len() as u64);
+        assert!(m.counter("sched_steps") > 0, "steps must be batched");
+        assert!(m.gauge("live_sessions_peak") >= 2,
+                "{variant}: sessions must actually overlap");
+    }
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn scheduler_preempts_requeues_and_stays_token_identical() {
+    // tight page pool: three sessions admit (2 blocks each) but cannot
+    // all grow to completion, so the newest gets preempted — its pages
+    // freed, its request requeued — and resumes by re-prefilling
+    // prompt ++ generated. Every request still finishes with exactly
+    // the tokens an unconstrained sequential server emits, and nothing
+    // is evicted-errored (each fits the pool alone).
+    let (art, _tag) = synth("schedpre");
+    let reqs = sched_requests();
+    let oracle = tiny_server(art.clone(), 8 << 20, 1);
+    let want = run_decodes(&oracle, &reqs);
+    oracle.shutdown();
+    // dense bytes/token = 2·16·2B·2L = 128; 2-token blocks of 256 B.
+    // 12 blocks = 24 tokens: each request needs ≤ 13 cached tokens
+    // (prompt+max_new-1 ≤ 8 blocks), so any one fits alone but three
+    // cannot finish together.
+    let bpt = 2 * TINY.d * 2 * TINY.n_layers;
+    let sched = tiny_server_with(
+        art.clone(), 12 * 2 * bpt, 1,
+        Some(SchedulerConfig { max_live: 3, block_tokens: 2,
+                               prefill_chunk: 4 }),
+        "dense");
+    let got = run_decodes(&sched, &reqs);
+    let m = sched.shutdown();
+    assert_eq!(got, want,
+               "preempt→requeue→resume must not change a single token");
+    assert!(m.counter("gen_preemptions") >= 1,
+            "the tight pool must actually preempt \
+             (preemptions={}, evictions={})",
+            m.counter("gen_preemptions"), m.counter("gen_evictions"));
+    assert_eq!(m.counter("gen_evictions"), 0,
+               "requests that fit alone must never be evicted-errored");
+    assert!(m.counter("gen_resumed_ok") >= 1,
+            "a preempted request must resume and finish");
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn scheduler_rejects_only_what_can_never_fit() {
+    let (art, _tag) = synth("schednofit");
+    // 2 blocks of 2 tokens = 4-token pool
+    let bpt = 2 * TINY.d * 2 * TINY.n_layers;
+    let sched_cfg = SchedulerConfig { max_live: 2, block_tokens: 2,
+                                      prefill_chunk: 4 };
+    let server = tiny_server_with(art.clone(), 4 * bpt, 1,
+                                  Some(sched_cfg), "dense");
+    let timeout = std::time::Duration::from_secs(60);
+    // needs 3 + 9 = 12 positions > 4-token pool: evicted-reject
+    let rx = server.submit_generate(GenerateRequest {
+        id: 1, prompt: vec![1, 2, 3], max_new: 10, temperature: 0.0,
+        seed: 0,
+    }).unwrap();
+    let r = rx.recv_timeout(timeout).expect("response");
+    assert!(r.evicted, "can-never-fit must reject as evicted: {:?}",
+            r.error);
+    assert!(r.error.as_deref().unwrap_or("").contains("never fit"),
+            "{:?}", r.error);
+    // a request that fits exactly still completes
+    let rx = server.submit_generate(GenerateRequest {
+        id: 2, prompt: vec![1, 2], max_new: 3, temperature: 0.0, seed: 0,
+    }).unwrap();
+    let r = rx.recv_timeout(timeout).expect("response");
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.tokens.len(), 3);
+    // empty prompts and positional-table overshoots error like the
+    // sequential path
+    let rx = server.submit_generate(GenerateRequest {
+        id: 3, prompt: vec![], max_new: 2, temperature: 0.0, seed: 0,
+    }).unwrap();
+    let r = rx.recv_timeout(timeout).expect("response");
+    assert_eq!(r.error.as_deref(), Some("empty prompt"));
+    let m = server.shutdown();
+    assert_eq!(m.counter("gen_evictions"), 1);
+    assert_eq!(m.counter("gen_tokens"), 3);
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn scheduler_reroutes_off_a_pool_that_can_never_hold_it() {
+    // two pools of very different sizes share one server: a request the
+    // small pool can never hold must not be terminally rejected there —
+    // the scheduler learns the real-footprint misfit, excludes that
+    // variant from routing, and the request completes on the big pool.
+    let (art, _tag) = synth("schedreroute");
+    let weights = std::sync::Arc::new(Weights::load(
+        art.join(format!("model_{}.ltw", TINY.name))).unwrap());
+    let bpt = 2 * TINY.d * 2 * TINY.n_layers; // 128 B/token
+    let mk_variant = |name: &str, blocks: usize| ModelVariant {
+        name: name.to_string(),
+        score_program: format!("score_{}", TINY.name),
+        step_program: format!("step_{}", TINY.name),
+        weights: weights.clone(),
+        cache: KvCacheManager::with_block_tokens(
+            CacheKind::Dense { d: TINY.d }, TINY.n_layers, 2,
+            blocks * 2 * bpt, 2), // 2-token blocks
+    };
+    let server = Server::start(
+        art.clone(),
+        // round-robin places the first request on "small" first
+        Router::new(vec![mk_variant("small", 4), mk_variant("big", 12)],
+                    Policy::RoundRobin),
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            policy: Policy::RoundRobin,
+            program_batch: BATCH,
+            seq_len: SEQ,
+            workers: 1,
+            sched: Some(SchedulerConfig { max_live: 2, block_tokens: 2,
+                                          prefill_chunk: 4 }),
+        })
+        .expect("server start");
+    let timeout = std::time::Duration::from_secs(120);
+    // needs 4 + 10 - 1 = 13 tokens = 7 two-token blocks: never fits the
+    // 4-block pool, comfortably fits the 12-block one
+    let rx = server.submit_generate(GenerateRequest {
+        id: 1, prompt: vec![1, 2, 3, 4], max_new: 10, temperature: 0.0,
+        seed: 0,
+    }).unwrap();
+    let r = rx.recv_timeout(timeout).expect("response");
+    assert!(r.error.is_none(),
+            "a pool that fits elsewhere must not reject: {:?}", r.error);
+    assert_eq!(r.variant, "big", "must complete on the fitting pool");
+    assert_eq!(r.tokens.len(), 10);
+    // a request no pool can ever hold is still terminally rejected
+    // (29 tokens: inside the positional table, beyond both pools)
+    let rx = server.submit_generate(GenerateRequest {
+        id: 2, prompt: vec![1, 2, 3, 4], max_new: 26, temperature: 0.0,
+        seed: 0,
+    }).unwrap();
+    let r = rx.recv_timeout(timeout).expect("response");
+    assert!(r.evicted, "nowhere-fits must reject as evicted: {:?}",
+            r.error);
+    let m = server.shutdown();
+    assert_eq!(m.counter("gen_evictions"), 1);
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn step_many_chunks_match_single_steps_exactly() {
+    // the batched-step seam itself: chunked prefill + step_many must
+    // reproduce the one-token-at-a-time logits bit for bit (what makes
+    // scheduler preemption/resume and prefill chunking token-safe).
+    let (art, tag) = synth("stepmany");
+    let engine = Engine::new(&art).unwrap();
+    let cases = [
+        (format!("step_{}", TINY.name),
+         Weights::load(art.join(format!("model_{}.ltw", TINY.name)))
+             .unwrap()),
+        (format!("latent_step_{tag}"),
+         Weights::load(art.join(format!("latent_model_{tag}.ltw")))
+             .unwrap()),
+    ];
+    let seq: Vec<i32> = (0..14).map(|i| (i * 3) % TINY.vocab as i32)
+        .collect();
+    for (program, weights) in &cases {
+        let prog = engine.program(program).unwrap();
+        // reference: prefill 4, then 10 single steps
+        let mut a = prog.decode_session(weights).unwrap();
+        let mut want = vec![a.prefill(&seq[..4]).unwrap()];
+        for &t in &seq[4..] {
+            want.push(a.step(t).unwrap());
+        }
+        // chunked: prefill 2, then step_many in ragged chunks
+        let mut b = prog.decode_session(weights).unwrap();
+        let mut got = vec![b.prefill(&seq[..2]).unwrap()];
+        for chunk in seq[2..].chunks(3) {
+            got.extend(b.step_many(chunk).unwrap());
+        }
+        assert_eq!(b.cached_tokens(), seq.len());
+        // the chunked path sees logits after EVERY token; the reference
+        // after tokens 4.. — align on the common suffix
+        assert_eq!(got.len(), seq.len() - 1);
+        assert_eq!(want.len(), seq.len() - 3);
+        assert_eq!(&got[2..], &want[..],
+                   "{program}: chunked logits diverged from single steps");
+        assert!(b.step_many(&[]).unwrap().is_empty());
+    }
     std::fs::remove_dir_all(&art).ok();
 }

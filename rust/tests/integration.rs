@@ -164,6 +164,7 @@ fn serving_stack_end_to_end() {
                                    program_batch: 8,
                                    seq_len: 128,
                                    workers: 2,
+                                   sched: None,
                                })
         .expect("server start");
     let reqs = corpus.calibration(24, 128, 5);

@@ -244,3 +244,93 @@ fn prop_json_roundtrip_random() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_page_allocator_never_double_books_and_conserves_blocks() {
+    // the paged KV allocator's safety contract under arbitrary churn:
+    // no block is ever owned by two sequences (or a sequence and the
+    // free list), releases never double-free, and free+alloc churn
+    // conserves the pool exactly. Mixed byte-rates model dense and
+    // latent sessions sharing one pool.
+    use latentllm::coordinator::pages::PageAllocator;
+    run_cases("page-allocator-churn", 30, 0xB7, |rng, _| {
+        let block_bytes = 16 * (1 + rng.below(8)); // 16..128
+        let total = (1 + rng.below(32)) * block_bytes; // 1..32 blocks
+        let mut p = PageAllocator::new(total, block_bytes);
+        let n_blocks = p.total_blocks();
+        let rates = [4usize, 8, 16, 32, 64];
+        let mut live: Vec<u64> = Vec::new();
+        for op in 0..200 {
+            match rng.below(10) {
+                // admit (sometimes re-admitting a live id)
+                0..=3 => {
+                    let id = rng.below(12) as u64;
+                    let rate = rates[rng.below(rates.len())];
+                    let tokens = rng.below(24);
+                    let free_before = p.free_blocks();
+                    let had = p.blocks_of(id);
+                    let ok = p.admit(id, tokens, rate);
+                    let need = p.blocks_for(tokens, rate);
+                    prop_assert!(ok == (need <= free_before + had),
+                                 "op {op}: admit verdict wrong \
+                                  (need {need}, free {free_before}, \
+                                  held {had})");
+                    if ok {
+                        prop_assert!(p.blocks_of(id) == need,
+                                     "op {op}: wrong block count");
+                        if !live.contains(&id) {
+                            live.push(id);
+                        }
+                    } else {
+                        prop_assert!(p.blocks_of(id) == 0,
+                                     "op {op}: failed admit must \
+                                      deregister");
+                        live.retain(|&l| l != id);
+                    }
+                }
+                // extend a live sequence
+                4..=6 => {
+                    if let Some(&id) = live.get(rng.below(live.len()
+                                                          .max(1))) {
+                        let before = (p.tokens_of(id), p.blocks_of(id));
+                        let ok = p.extend(id);
+                        if ok {
+                            prop_assert!(p.tokens_of(id) == before.0 + 1,
+                                         "op {op}: extend must add one \
+                                          token");
+                        } else {
+                            prop_assert!(
+                                (p.tokens_of(id), p.blocks_of(id))
+                                    == before,
+                                "op {op}: refused extend must change \
+                                 nothing");
+                        }
+                    }
+                }
+                // release (sometimes an unknown/already-released id —
+                // must be a no-op, never a double-free)
+                _ => {
+                    let id = rng.below(16) as u64;
+                    let others: usize = live.iter()
+                        .filter(|&&l| l != id)
+                        .map(|&l| p.blocks_of(l))
+                        .sum();
+                    p.release(id);
+                    p.release(id); // idempotent by contract
+                    live.retain(|&l| l != id);
+                    prop_assert!(p.used_blocks() == others,
+                                 "op {op}: release must return exactly \
+                                  this sequence's blocks");
+                }
+            }
+            // the global audit after EVERY operation
+            p.check_invariants().map_err(|e| format!("op {op}: {e}"))?;
+            let held: usize = live.iter().map(|&l| p.blocks_of(l)).sum();
+            prop_assert!(held == p.used_blocks(),
+                         "op {op}: live set and allocator disagree");
+            prop_assert!(p.free_blocks() + p.used_blocks() == n_blocks,
+                         "op {op}: churn must conserve total blocks");
+        }
+        Ok(())
+    });
+}

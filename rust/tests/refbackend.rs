@@ -239,6 +239,7 @@ fn server_pads_short_requests_through_batcher() {
             program_batch: BATCH,
             seq_len: SEQ,
             workers: 2,
+            sched: None,
         })
         .expect("server start");
     assert_eq!(server.live_workers(), 2);
@@ -284,6 +285,7 @@ fn overflow_flush_splits_instead_of_nan() {
             program_batch: BATCH,
             seq_len: SEQ,
             workers: 1,
+            sched: None,
         })
         .expect("server start");
     // submit 2×BATCH requests quickly so one flush exceeds program_batch
@@ -328,6 +330,7 @@ fn invalid_requests_get_error_responses_not_a_dead_worker() {
             program_batch: BATCH,
             seq_len: SEQ,
             workers: 1,
+            sched: None,
         })
         .expect("server start");
     let timeout = std::time::Duration::from_secs(60);
@@ -386,6 +389,7 @@ fn failed_batch_execution_replies_with_errors() {
             program_batch: BATCH,
             seq_len: SEQ,
             workers: 1,
+            sched: None,
         })
         .expect("server start (engine init itself is fine)");
     let rxs: Vec<_> = (0..3u64)
@@ -425,6 +429,7 @@ fn failed_engine_init_surfaces_from_start() {
             program_batch: BATCH,
             seq_len: SEQ,
             workers: 3,
+            sched: None,
         });
     let err = match res {
         Ok(_) => panic!("start must fail without a manifest"),
