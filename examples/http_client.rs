@@ -1,0 +1,198 @@
+//! Tiny std-only HTTP client for the CI http-smoke job: points at a
+//! running `latentllm serve --http ADDR`, exercises every endpoint
+//! (health, score, plain + streamed completions, metrics), then asks
+//! the server to drain via `/admin/shutdown`. Prints one summary line
+//! ending in `failed=N` and exits nonzero when N > 0.
+//!
+//! Run: cargo run --release --example http_client -- 127.0.0.1:PORT
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+use latentllm::util::json;
+
+fn main() -> Result<()> {
+    let addr = std::env::args().nth(1)
+        .context("usage: http_client ADDR (e.g. 127.0.0.1:8080)")?;
+    wait_healthy(&addr, Duration::from_secs(30))?;
+
+    let checks: [(&str, fn(&str) -> Result<String>); 5] = [
+        ("score", score),
+        ("completion", completion),
+        ("stream", streamed),
+        ("metrics", metrics),
+        ("shutdown", shutdown),
+    ];
+    let mut failed = 0usize;
+    for (name, check) in checks {
+        match check(&addr) {
+            Ok(msg) => println!("  {name}: ok ({msg})"),
+            Err(e) => {
+                failed += 1;
+                println!("  {name}: FAILED ({e:#})");
+            }
+        }
+    }
+
+    println!("http client: 5 checks failed={failed}");
+    if failed > 0 {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// Send one request (`Connection: close`) and return (status, body with
+/// chunked transfer decoded).
+fn request(addr: &str, method: &str, path: &str, body: &str)
+           -> Result<(u16, String)> {
+    let mut s = TcpStream::connect(addr)
+        .with_context(|| format!("connect {addr}"))?;
+    s.set_read_timeout(Some(Duration::from_secs(120)))?;
+    write!(s, "{method} {path} HTTP/1.1\r\nHost: ci\r\n\
+               Connection: close\r\nContent-Length: {}\r\n\r\n{body}",
+           body.len())?;
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).context("read response")?;
+    let split = raw.windows(4).position(|w| w == b"\r\n\r\n")
+        .context("no header/body split in response")?;
+    let head = std::str::from_utf8(&raw[..split])?;
+    let status: u16 = head.split_whitespace().nth(1)
+        .context("no status code")?.parse()?;
+    let chunked = head.lines().any(
+        |l| l.to_ascii_lowercase()
+            .starts_with("transfer-encoding: chunked"));
+    let body = if chunked {
+        dechunk(&raw[split + 4..])?
+    } else {
+        raw[split + 4..].to_vec()
+    };
+    Ok((status, String::from_utf8(body)?))
+}
+
+fn dechunk(raw: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    let mut pos = 0;
+    loop {
+        let nl = raw[pos..].windows(2).position(|w| w == b"\r\n")
+            .context("chunked body missing a size line")?;
+        let size = usize::from_str_radix(
+            std::str::from_utf8(&raw[pos..pos + nl])?.trim(), 16)
+            .context("bad chunk size")?;
+        pos += nl + 2;
+        if size == 0 {
+            return Ok(out);
+        }
+        if pos + size > raw.len() {
+            bail!("truncated chunk");
+        }
+        out.extend_from_slice(&raw[pos..pos + size]);
+        pos += size + 2;
+    }
+}
+
+fn wait_healthy(addr: &str, budget: Duration) -> Result<()> {
+    let t0 = Instant::now();
+    loop {
+        match request(addr, "GET", "/healthz", "") {
+            Ok((200, _)) => return Ok(()),
+            Ok((code, _)) if t0.elapsed() > budget => {
+                bail!("server still unhealthy ({code}) after {budget:?}")
+            }
+            Err(e) if t0.elapsed() > budget => {
+                bail!("server unreachable after {budget:?}: {e:#}")
+            }
+            _ => std::thread::sleep(Duration::from_millis(200)),
+        }
+    }
+}
+
+fn score(addr: &str) -> Result<String> {
+    let (status, body) = request(addr, "POST", "/v1/score",
+                                 "{\"tokens\": [1, 2, 3, 5, 7, 11]}")?;
+    if status != 200 {
+        bail!("status {status}: {body}");
+    }
+    let v = json::parse(&body)?;
+    let nll = v.get("nll").and_then(|x| x.as_f64())
+        .ok_or_else(|| anyhow!("no nll in {body}"))?;
+    if !nll.is_finite() {
+        bail!("non-finite nll {nll}");
+    }
+    Ok(format!("nll {nll:.3}"))
+}
+
+fn completion(addr: &str) -> Result<String> {
+    let (status, body) = request(
+        addr, "POST", "/v1/completions",
+        "{\"prompt\": [1, 2, 3], \"max_new\": 8}")?;
+    if status != 200 {
+        bail!("status {status}: {body}");
+    }
+    let v = json::parse(&body)?;
+    let n = v.get("tokens").and_then(|t| t.as_arr())
+        .ok_or_else(|| anyhow!("no tokens in {body}"))?.len();
+    if n != 8 {
+        bail!("wanted 8 tokens, got {n}");
+    }
+    Ok(format!("{n} tokens"))
+}
+
+fn streamed(addr: &str) -> Result<String> {
+    let (status, body) = request(
+        addr, "POST", "/v1/completions",
+        "{\"prompt\": [2, 3, 5], \"max_new\": 8, \"stream\": true}")?;
+    if status != 200 {
+        bail!("status {status}: {body}");
+    }
+    let events: Vec<&str> = body.split("\n\n")
+        .filter_map(|ev| ev.trim().strip_prefix("data: "))
+        .collect();
+    if events.last() != Some(&"[DONE]") {
+        bail!("stream did not end with [DONE]: {events:?}");
+    }
+    let tokens = events.iter().filter(|e| e.contains("\"token\""))
+        .count();
+    if tokens != 8 {
+        bail!("wanted 8 streamed tokens, got {tokens}: {events:?}");
+    }
+    let done = json::parse(events[events.len() - 2])?;
+    if done.get("error").is_some() {
+        bail!("terminal event carried an error: {}",
+              events[events.len() - 2]);
+    }
+    Ok(format!("{tokens} tokens + done event"))
+}
+
+fn metrics(addr: &str) -> Result<String> {
+    let (status, body) = request(addr, "GET", "/metrics", "")?;
+    if status != 200 {
+        bail!("status {status}");
+    }
+    let samples = body.lines()
+        .filter(|l| l.starts_with("latentllm_"))
+        .count();
+    if samples < 5 {
+        bail!("only {samples} samples:\n{body}");
+    }
+    for want in ["latentllm_requests_total",
+                 "latentllm_http_requests_total"] {
+        if !body.contains(want) {
+            bail!("missing {want}");
+        }
+    }
+    Ok(format!("{samples} samples"))
+}
+
+fn shutdown(addr: &str) -> Result<String> {
+    let (status, body) = request(addr, "POST", "/admin/shutdown", "")?;
+    if status != 200 {
+        bail!("status {status}: {body}");
+    }
+    let v = json::parse(&body)?;
+    if v.get("status").and_then(|s| s.as_str()) != Some("draining") {
+        bail!("unexpected shutdown reply {body}");
+    }
+    Ok("draining".to_string())
+}

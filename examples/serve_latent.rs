@@ -15,8 +15,8 @@ use latentllm::coordinator::batcher::BatcherConfig;
 use latentllm::coordinator::kvcache::{CacheKind, KvCacheManager};
 use latentllm::coordinator::router::{ModelVariant, Policy, Router};
 use latentllm::coordinator::scheduler::SchedulerConfig;
-use latentllm::coordinator::server::{GenerateRequest, ScoreRequest, Server,
-                                     ServerConfig};
+use latentllm::coordinator::server::{Drain, GenerateParams, ScoreParams,
+                                     Server, ServerConfig};
 use latentllm::data::{CalibSet, Corpus};
 use latentllm::model::config::mini_by_name;
 use latentllm::model::Weights;
@@ -94,16 +94,15 @@ fn main() -> Result<()> {
               workers...", server.live_workers());
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::with_capacity(n_requests);
-    for (i, tokens) in reqs.into_iter().enumerate() {
-        rxs.push(server.submit(ScoreRequest { id: i as u64, tokens })?);
+    for tokens in reqs {
+        rxs.push(server.submit_score(ScoreParams { tokens })?);
     }
     // decode sessions ride the same queue: each request prefills its
     // prompt into real per-layer cache state under the KV budget above
     let gen_prompts = corpus.calibration(8, 16, 4321);
     let mut gen_rxs = Vec::new();
     for (i, prompt) in gen_prompts.into_iter().enumerate() {
-        gen_rxs.push(server.submit_generate(GenerateRequest {
-            id: i as u64,
+        gen_rxs.push(server.submit_generate(GenerateParams {
             prompt,
             max_new: 16,
             temperature: 0.0,
@@ -118,7 +117,7 @@ fn main() -> Result<()> {
     let n_generate = gen_rxs.len();
     let mut gen_ok = 0;
     for rx in gen_rxs {
-        if rx.recv()?.error.is_none() {
+        if rx.recv()?.error().is_none() {
             gen_ok += 1;
         }
     }
@@ -128,7 +127,7 @@ fn main() -> Result<()> {
     println!("decoded {gen_ok}/{n_generate} generate requests through \
               cached sessions");
     println!("variant placement: {per_variant:?}");
-    let metrics = server.shutdown();
+    let metrics = server.shutdown(Drain::Graceful);
     println!("metrics:\n{}", metrics.summary());
     Ok(())
 }

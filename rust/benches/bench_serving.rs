@@ -22,8 +22,8 @@ use latentllm::coordinator::batcher::BatcherConfig;
 use latentllm::coordinator::kvcache::{CacheKind, KvCacheManager};
 use latentllm::coordinator::router::{ModelVariant, Policy, Router};
 use latentllm::coordinator::scheduler::SchedulerConfig;
-use latentllm::coordinator::server::{GenerateRequest, ScoreRequest, Server,
-                                     ServerConfig};
+use latentllm::coordinator::server::{Drain, GenerateParams, ScoreParams,
+                                     Server, ServerConfig};
 use latentllm::data::synth::{latent_demo_ranks, write_test_artifacts};
 use latentllm::data::Corpus;
 use latentllm::model::config::{mini_by_name, MiniConfig};
@@ -105,8 +105,7 @@ fn mixed_workload() {
         let server = mix_server(&dir, &weights, budget, sched);
         let t0 = std::time::Instant::now();
         let gen_rxs: Vec<_> = (0..N_GEN)
-            .map(|i| server.submit_generate(GenerateRequest {
-                id: i as u64,
+            .map(|i| server.submit_generate(GenerateParams {
                 prompt: (0..PROMPT_LEN)
                     .map(|j| ((i * 13 + j * 5) % MIX_CFG.vocab) as i32)
                     .collect(),
@@ -116,8 +115,7 @@ fn mixed_workload() {
             }).expect("submit_generate"))
             .collect();
         let score_rxs: Vec<_> = (0..N_SCORE)
-            .map(|i| server.submit(ScoreRequest {
-                id: 1000 + i as u64,
+            .map(|i| server.submit_score(ScoreParams {
                 tokens: (0..16)
                     .map(|j| ((i * 7 + j) % MIX_CFG.vocab) as i32)
                     .collect(),
@@ -127,20 +125,20 @@ fn mixed_workload() {
         let mut gen_failed = 0usize;
         for rx in gen_rxs {
             match rx.recv() {
-                Ok(r) if r.error.is_none() => gen_ok += 1,
+                Ok(r) if r.error().is_none() => gen_ok += 1,
                 _ => gen_failed += 1,
             }
         }
         let mut score_ok = 0usize;
         for rx in score_rxs {
             if let Ok(r) = rx.recv() {
-                if r.error.is_none() {
+                if r.error().is_none() {
                     score_ok += 1;
                 }
             }
         }
         let dt = t0.elapsed().as_secs_f64();
-        let m = server.shutdown();
+        let m = server.shutdown(Drain::Graceful);
         let tokens = m.counter("gen_tokens");
         let (p50, p95, _) = m.quantiles("gen_queue_us")
             .unwrap_or((0.0, 0.0, 0.0));
@@ -222,15 +220,15 @@ fn score_sweep() {
             .expect("server start");
         let reqs = corpus.calibration(n_requests, 128, 42);
         let t0 = std::time::Instant::now();
-        let rxs: Vec<_> = reqs.into_iter().enumerate()
-            .map(|(i, tokens)| server.submit(ScoreRequest {
-                id: i as u64, tokens }).expect("submit"))
+        let rxs: Vec<_> = reqs.into_iter()
+            .map(|tokens| server.submit_score(ScoreParams { tokens })
+                .expect("submit"))
             .collect();
         for rx in rxs {
             let _ = rx.recv();
         }
         let dt = t0.elapsed().as_secs_f64();
-        let m = server.shutdown();
+        let m = server.shutdown(Drain::Graceful);
         let (p50, p95, p99) = m.quantiles("request_us")
             .unwrap_or((0.0, 0.0, 0.0));
         println!("workers={workers} max_batch={max_batch:<2} \

@@ -24,6 +24,12 @@
 //! mlp = "mlp_joint_ud"  # (see compress::plan), section optional
 //! qk_iters = 4
 //! ud_iters = 2
+//! [http]                # HTTP/1.1 front door (off unless addr is set
+//! addr = "127.0.0.1:8080"  # or `serve --http ADDR` overrides it)
+//! threads = 4
+//! max_inflight = 64
+//! max_queue_depth = 1024
+//! retry_after_s = 1
 //! ```
 
 use std::time::Duration;
@@ -32,6 +38,7 @@ use anyhow::{Context, Result};
 
 use crate::compress::plan::CompressionPlan;
 use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::http::HttpConfig;
 use crate::coordinator::router::Policy;
 use crate::coordinator::scheduler::SchedulerConfig;
 use crate::util::toml::{self, Table};
@@ -93,6 +100,9 @@ pub struct Config {
     /// to the LatentLLM preset at light iteration budgets (4/2) so
     /// startup stays fast.
     pub compress: CompressionPlan,
+    /// `[http]` — the HTTP/1.1 front door. An empty `addr` (the config
+    /// default) leaves the listener off; `serve --http ADDR` overrides.
+    pub http: HttpConfig,
 }
 
 impl Default for Config {
@@ -101,6 +111,8 @@ impl Default for Config {
             serve: ServeSettings::default(),
             report: ReportSettings::default(),
             compress: CompressionPlan::default().with_iters(4, 2),
+            http: HttpConfig { addr: String::new(),
+                               ..HttpConfig::default() },
         }
     }
 }
@@ -161,6 +173,21 @@ impl Config {
         cfg.serve.scheduler.prefill_chunk =
             get_usize("serve.sched_chunk",
                       cfg.serve.scheduler.prefill_chunk).max(1);
+        if let Some(v) = t.get("http.addr").and_then(|v| v.as_str()) {
+            cfg.http.addr = v.to_string();
+        }
+        cfg.http.threads =
+            get_usize("http.threads", cfg.http.threads).max(1);
+        cfg.http.max_inflight =
+            get_usize("http.max_inflight", cfg.http.max_inflight).max(1);
+        if let Some(v) = t.get("http.max_queue_depth")
+            .and_then(|v| v.as_i64()) {
+            cfg.http.max_queue_depth = v.max(0);
+        }
+        if let Some(v) = t.get("http.retry_after_s")
+            .and_then(|v| v.as_i64()) {
+            cfg.http.retry_after_secs = v.max(0) as u64;
+        }
         cfg.report.max_batches =
             get_usize("report.max_batches", cfg.report.max_batches);
         cfg.report.qk_iters = get_usize("report.qk_iters",
@@ -230,6 +257,23 @@ mod tests {
         let d = Config::from_table(&Table::new()).unwrap();
         assert!(d.serve.sched);
         assert_eq!(d.serve.scheduler, SchedulerConfig::default());
+    }
+
+    #[test]
+    fn parses_http_section() {
+        let t = toml::parse(
+            "[http]\naddr = \"127.0.0.1:8080\"\nthreads = 2\n\
+             max_inflight = 7\nmax_queue_depth = 3\nretry_after_s = 5\n")
+            .unwrap();
+        let c = Config::from_table(&t).unwrap();
+        assert_eq!(c.http.addr, "127.0.0.1:8080");
+        assert_eq!(c.http.threads, 2);
+        assert_eq!(c.http.max_inflight, 7);
+        assert_eq!(c.http.max_queue_depth, 3);
+        assert_eq!(c.http.retry_after_secs, 5);
+        // the front door stays off until an address is configured
+        let d = Config::from_table(&Table::new()).unwrap();
+        assert!(d.http.addr.is_empty());
     }
 
     #[test]

@@ -1,0 +1,779 @@
+//! std-only HTTP/1.1 front door for the coordinator: OpenAI-style
+//! endpoints over the typed [`super::server`] API, hand-rolled on
+//! `std::net` (tokio/hyper are unavailable offline) with the crate's
+//! own JSON substrate (`util::json`) for bodies.
+//!
+//! | Endpoint               | Method | Purpose                         |
+//! |------------------------|--------|---------------------------------|
+//! | `/v1/completions`      | POST   | generate; `"stream": true` emits|
+//! |                        |        | tokens as decode steps retire   |
+//! | `/v1/score`            | POST   | sequence NLL through the batcher|
+//! | `/healthz`             | GET    | liveness + worker count         |
+//! | `/metrics`             | GET    | Prometheus text exposition      |
+//! | `/admin/shutdown`      | POST   | SIGTERM-equivalent: stop        |
+//! |                        |        | accepting, drain, exit `wait()` |
+//!
+//! **Threading.** A pool of [`HttpConfig::threads`] workers shares one
+//! nonblocking listener; each worker serves one connection at a time,
+//! serially (keep-alive honored). That makes graceful drain exactly
+//! "join the pool": when a shutdown is requested the workers stop
+//! accepting, finish the request (or token stream) they are writing,
+//! and exit — in-flight work is never cut off, which the drain test
+//! pins as zero lost requests.
+//!
+//! **Backpressure.** Two knobs: [`HttpConfig::max_inflight`] bounds
+//! concurrently-processed requests (excess gets `503` + `Retry-After`),
+//! and [`HttpConfig::max_queue_depth`] turns the server's
+//! `gen_queue_depth` level gauge into a `429 Too Many Requests` +
+//! `Retry-After` for new completions once the decode queue is that
+//! deep.
+//!
+//! **Streaming wire format.** `"stream": true` switches the response to
+//! `Transfer-Encoding: chunked` with `text/event-stream` framing: one
+//! `data: {"token": N}` event per decoded token (exactly the order and
+//! values of the in-process decode — the sender fires at the sampling
+//! site, once per token even across preemptions), a terminal
+//! `data: {"done": true, ...}` event carrying the id/variant (or the
+//! error), and a final `data: [DONE]` sentinel.
+//!
+//! Errors map [`ServeError`] onto status codes: `Empty`/`TooLong` → 400,
+//! `Rejected`/`Evicted`/`EngineInit` → 503, `Internal` → 500, with a
+//! JSON body `{"error": {"type": ..., "message": ...}}`.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::server::{GenerateParams, ScoreParams, ServeError, Server};
+use crate::util::json::{self, Value};
+
+/// Coordinator reply deadline before the listener answers 504 — far
+/// above any test decode, small enough that a wedged worker cannot pin
+/// a connection forever.
+const REQUEST_TIMEOUT: Duration = Duration::from_secs(120);
+/// Per-read socket timeout: the granularity at which idle keep-alive
+/// connections notice a drain request.
+const READ_TICK: Duration = Duration::from_millis(200);
+const MAX_BODY_BYTES: usize = 8 << 20;
+const MAX_HEADERS: usize = 100;
+
+/// Listener knobs (`[http]` in the serve config, `serve --http ADDR`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HttpConfig {
+    /// bind address; port 0 picks an ephemeral port (see
+    /// [`HttpServer::local_addr`])
+    pub addr: String,
+    /// connection-handling worker threads — also the max number of
+    /// concurrently-open connections (excess waits in the OS backlog)
+    pub threads: usize,
+    /// max concurrently-processed requests across the pool; beyond it
+    /// new requests get 503 + Retry-After
+    pub max_inflight: usize,
+    /// new completions get 429 + Retry-After once the server's
+    /// `gen_queue_depth` gauge reaches this (0 rejects all generates)
+    pub max_queue_depth: i64,
+    /// value of the `Retry-After` header on 429/503 backpressure
+    pub retry_after_secs: u64,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 4,
+            max_inflight: 64,
+            max_queue_depth: 1024,
+            retry_after_secs: 1,
+        }
+    }
+}
+
+struct Ctx {
+    server: Arc<Server>,
+    cfg: HttpConfig,
+    /// stop accepting new connections/requests (drain in progress)
+    stop: AtomicBool,
+    /// a client asked for shutdown via `/admin/shutdown`
+    shutdown_req: AtomicBool,
+    inflight: AtomicUsize,
+}
+
+/// RAII slot in the bounded in-flight set.
+struct InflightGuard(Arc<Ctx>);
+
+impl InflightGuard {
+    fn try_acquire(ctx: &Arc<Ctx>) -> Option<InflightGuard> {
+        let n = ctx.inflight.fetch_add(1, Ordering::SeqCst);
+        if n >= ctx.cfg.max_inflight.max(1) {
+            ctx.inflight.fetch_sub(1, Ordering::SeqCst);
+            return None;
+        }
+        Some(InflightGuard(ctx.clone()))
+    }
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The running listener. Dropping it drains: stop accepting, finish
+/// in-flight requests, join the worker pool.
+pub struct HttpServer {
+    addr: SocketAddr,
+    ctx: Arc<Ctx>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `cfg.addr` and start the worker pool. The coordinator
+    /// [`Server`] is shared — the in-process API keeps working next to
+    /// the listener.
+    pub fn start(server: Arc<Server>, cfg: HttpConfig)
+                 -> Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind http listener {}", cfg.addr))?;
+        listener.set_nonblocking(true)
+            .context("nonblocking http listener")?;
+        let addr = listener.local_addr().context("http local addr")?;
+        let listener = Arc::new(listener);
+        let ctx = Arc::new(Ctx {
+            server,
+            cfg: cfg.clone(),
+            stop: AtomicBool::new(false),
+            shutdown_req: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+        });
+        let mut workers = Vec::new();
+        for i in 0..cfg.threads.max(1) {
+            let listener = listener.clone();
+            let ctx = ctx.clone();
+            workers.push(std::thread::Builder::new()
+                .name(format!("latentllm-http-{i}"))
+                .spawn(move || accept_loop(&listener, &ctx))
+                .expect("spawn http worker"));
+        }
+        Ok(HttpServer { addr, ctx, workers })
+    }
+
+    /// The bound address — the real port when `addr` asked for port 0.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Has a client requested shutdown (`POST /admin/shutdown`)?
+    pub fn shutdown_requested(&self) -> bool {
+        self.ctx.shutdown_req.load(Ordering::SeqCst)
+    }
+
+    /// Block until a client requests shutdown, then drain gracefully:
+    /// stop accepting, let every in-flight request/stream finish, join
+    /// the pool. The SIGTERM-equivalent serve loop (std cannot trap
+    /// signals portably).
+    pub fn wait(mut self) {
+        while !self.ctx.shutdown_req.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        self.drain();
+    }
+
+    /// Programmatic graceful shutdown (same drain as [`Self::wait`]).
+    pub fn shutdown(mut self) {
+        self.drain();
+    }
+
+    fn drain(&mut self) {
+        self.ctx.stop.store(true, Ordering::SeqCst);
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock
+                       | std::io::ErrorKind::TimedOut)
+}
+
+fn accept_loop(listener: &TcpListener, ctx: &Arc<Ctx>) {
+    while !ctx.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                ctx.server.metrics.incr("http_conns", 1);
+                if let Err(e) = handle_conn(ctx, stream) {
+                    ctx.server.metrics.incr("http_conn_errors", 1);
+                    eprintln!("[http] connection error: {e:#}");
+                }
+            }
+            Err(ref e) if would_block(e) => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => {
+                eprintln!("[http] accept error: {e}");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// Serve one connection until the client closes, asks to close, or a
+/// drain begins (the request being handled always completes first).
+fn handle_conn(ctx: &Arc<Ctx>, stream: TcpStream) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(READ_TICK))
+        .context("set read timeout")?;
+    let mut writer = stream.try_clone().context("clone stream")?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let req = match read_request(&mut reader, ctx) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(()),
+            Err(e) => {
+                // malformed framing: answer 400 and drop the connection
+                let _ = respond_error(ctx, &mut writer, 400,
+                                      "bad_request", &format!("{e:#}"),
+                                      false, &[]);
+                return Ok(());
+            }
+        };
+        // once draining, answer this request and then close
+        let keep = !ctx.stop.load(Ordering::SeqCst)
+            && !req.header_is("connection", "close");
+        let keep = handle_request(ctx, &mut writer, req, keep)?;
+        if !keep {
+            return Ok(());
+        }
+    }
+}
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl HttpRequest {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn header_is(&self, name: &str, value: &str) -> bool {
+        self.header(name)
+            .is_some_and(|v| v.eq_ignore_ascii_case(value))
+    }
+}
+
+/// Read one line, tolerating up to `max_ticks` read-timeout ticks
+/// (idle keep-alive waits run through this with a large budget).
+fn read_line_retry(reader: &mut BufReader<TcpStream>, max_ticks: usize)
+                   -> Result<Option<String>> {
+    let mut line = String::new();
+    let mut ticks = 0;
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => {
+                if line.is_empty() {
+                    return Ok(None); // clean EOF
+                }
+                bail!("connection closed mid line");
+            }
+            Ok(_) => {
+                if line.ends_with('\n') {
+                    return Ok(Some(line));
+                }
+                bail!("truncated line");
+            }
+            Err(ref e) if would_block(e) => {
+                ticks += 1;
+                if ticks > max_ticks {
+                    bail!("timed out reading");
+                }
+            }
+            Err(e) => return Err(e).context("read line"),
+        }
+    }
+}
+
+/// Parse one request off the connection. `Ok(None)` means the client
+/// closed (or the server is draining and the connection is idle).
+fn read_request(reader: &mut BufReader<TcpStream>, ctx: &Ctx)
+                -> Result<Option<HttpRequest>> {
+    // wait for the request line; an idle wait ends quietly on drain,
+    // and a half-sent line gets the same tick budget as the rest of
+    // the request (a stalled client must not pin a worker)
+    let budget = (REQUEST_TIMEOUT.as_millis()
+                  / READ_TICK.as_millis().max(1)) as usize;
+    let mut line = String::new();
+    let mut ticks = 0;
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => {
+                if line.is_empty() {
+                    return Ok(None);
+                }
+                bail!("connection closed mid request line");
+            }
+            Ok(_) => {
+                if line.ends_with('\n') {
+                    break;
+                }
+                bail!("truncated request line");
+            }
+            Err(ref e) if would_block(e) => {
+                if line.is_empty() {
+                    if ctx.stop.load(Ordering::SeqCst) {
+                        return Ok(None);
+                    }
+                } else {
+                    ticks += 1;
+                    if ticks > budget {
+                        bail!("timed out reading the request line");
+                    }
+                }
+            }
+            Err(e) => return Err(e).context("read request line"),
+        }
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty()
+        || !version.starts_with("HTTP/1") {
+        bail!("malformed request line {line:?}");
+    }
+    // headers (bounded; the whole request must keep arriving)
+    let mut headers = Vec::new();
+    loop {
+        let Some(h) = read_line_retry(reader, budget)? else {
+            bail!("connection closed mid headers");
+        };
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            bail!("too many headers");
+        }
+        let (name, value) = h.split_once(':')
+            .ok_or_else(|| anyhow!("malformed header {h:?}"))?;
+        headers.push((name.trim().to_string(), value.trim().to_string()));
+    }
+    let req = HttpRequest { method, path, headers, body: Vec::new() };
+    let len: usize = match req.header("content-length") {
+        Some(v) => v.trim().parse()
+            .map_err(|_| anyhow!("bad content-length {v:?}"))?,
+        None => 0,
+    };
+    if len > MAX_BODY_BYTES {
+        bail!("body of {len} bytes exceeds the {MAX_BODY_BYTES} limit");
+    }
+    let mut body = vec![0u8; len];
+    let mut filled = 0;
+    let mut ticks = 0;
+    while filled < len {
+        match reader.read(&mut body[filled..]) {
+            Ok(0) => bail!("connection closed mid body"),
+            Ok(n) => {
+                filled += n;
+                ticks = 0;
+            }
+            Err(ref e) if would_block(e) => {
+                ticks += 1;
+                if ticks > budget {
+                    bail!("timed out reading body");
+                }
+            }
+            Err(e) => return Err(e).context("read body"),
+        }
+    }
+    Ok(Some(HttpRequest { body, ..req }))
+}
+
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+fn status_class(ctx: &Ctx, status: u16) {
+    ctx.server.metrics.incr("http_requests", 1);
+    let class = match status {
+        200..=299 => "http_2xx",
+        400..=499 => "http_4xx",
+        _ => "http_5xx",
+    };
+    ctx.server.metrics.incr(class, 1);
+}
+
+/// Write one fixed-length response (and account it in the metrics).
+fn respond_raw(ctx: &Ctx, w: &mut TcpStream, status: u16, ctype: &str,
+               body: &[u8], keep: bool, extra: &[(&str, String)])
+               -> Result<()> {
+    status_class(ctx, status);
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\n", reason_phrase(status), body.len());
+    for (k, v) in extra {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str(if keep {
+        "Connection: keep-alive\r\n\r\n"
+    } else {
+        "Connection: close\r\n\r\n"
+    });
+    w.write_all(head.as_bytes()).context("write head")?;
+    w.write_all(body).context("write body")?;
+    w.flush().context("flush response")
+}
+
+fn respond_json(ctx: &Ctx, w: &mut TcpStream, status: u16, body: &Value,
+                keep: bool, extra: &[(&str, String)]) -> Result<()> {
+    let mut text = body.to_string_compact();
+    text.push('\n');
+    respond_raw(ctx, w, status, "application/json", text.as_bytes(),
+                keep, extra)
+}
+
+fn respond_error(ctx: &Ctx, w: &mut TcpStream, status: u16, kind: &str,
+                 message: &str, keep: bool, extra: &[(&str, String)])
+                 -> Result<()> {
+    let body = Value::obj(vec![("error", Value::obj(vec![
+        ("type", kind.into()),
+        ("message", message.into()),
+    ]))]);
+    respond_json(ctx, w, status, &body, keep, extra)
+}
+
+/// Map a [`ServeError`] to `(status, error.type)` — the one place the
+/// typed taxonomy meets HTTP.
+fn status_for(err: &ServeError) -> (u16, &'static str) {
+    match err {
+        ServeError::Rejected { .. } => (503, "rejected"),
+        ServeError::Evicted { .. } => (503, "evicted"),
+        ServeError::TooLong { .. } => (400, "too_long"),
+        ServeError::Empty => (400, "empty"),
+        ServeError::EngineInit { .. } => (503, "engine_init"),
+        ServeError::Internal { .. } => (500, "internal"),
+    }
+}
+
+fn respond_serve_error(ctx: &Ctx, w: &mut TcpStream, err: &ServeError,
+                       keep: bool) -> Result<()> {
+    let (status, kind) = status_for(err);
+    respond_error(ctx, w, status, kind, &err.to_string(), keep, &[])
+}
+
+fn retry_after(ctx: &Ctx) -> Vec<(&'static str, String)> {
+    vec![("Retry-After", ctx.cfg.retry_after_secs.to_string())]
+}
+
+/// Dispatch one parsed request; returns whether to keep the connection.
+fn handle_request(ctx: &Arc<Ctx>, w: &mut TcpStream, req: HttpRequest,
+                  keep: bool) -> Result<bool> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let workers = ctx.server.live_workers();
+            let (status, state) =
+                if workers > 0 { (200, "ok") } else { (503, "down") };
+            let body = Value::obj(vec![
+                ("status", state.into()),
+                ("workers", workers.into()),
+            ]);
+            respond_json(ctx, w, status, &body, keep, &[])?;
+            Ok(keep)
+        }
+        ("GET", "/metrics") => {
+            let text = ctx.server.metrics.render_prometheus();
+            respond_raw(ctx, w, 200, "text/plain; version=0.0.4",
+                        text.as_bytes(), keep, &[])?;
+            Ok(keep)
+        }
+        ("POST", "/v1/score") => {
+            handle_score(ctx, w, &req, keep)?;
+            Ok(keep)
+        }
+        ("POST", "/v1/completions") => {
+            handle_completions(ctx, w, &req, keep)?;
+            Ok(keep)
+        }
+        (_, "/admin/shutdown") => {
+            // SIGTERM-equivalent: stop accepting, then `wait()` drains
+            ctx.shutdown_req.store(true, Ordering::SeqCst);
+            ctx.stop.store(true, Ordering::SeqCst);
+            let body = Value::obj(vec![("status", "draining".into())]);
+            respond_json(ctx, w, 200, &body, false, &[])?;
+            Ok(false)
+        }
+        _ => {
+            respond_error(ctx, w, 404, "not_found",
+                          &format!("no handler for {} {}", req.method,
+                                   req.path), keep, &[])?;
+            Ok(keep)
+        }
+    }
+}
+
+fn parse_body(req: &HttpRequest) -> Result<Value> {
+    let text = std::str::from_utf8(&req.body)
+        .context("request body is not UTF-8")?;
+    json::parse(text).context("request body is not valid JSON")
+}
+
+fn int_array(v: &Value, key: &str) -> Result<Vec<i32>> {
+    let arr = v.get(key).and_then(|a| a.as_arr())
+        .ok_or_else(|| anyhow!("missing or non-array field {key:?}"))?;
+    arr.iter()
+        .map(|t| t.as_f64().map(|f| f as i32)
+            .ok_or_else(|| anyhow!("non-numeric element in {key:?}")))
+        .collect()
+}
+
+fn handle_score(ctx: &Arc<Ctx>, w: &mut TcpStream, req: &HttpRequest,
+                keep: bool) -> Result<()> {
+    let Some(_slot) = InflightGuard::try_acquire(ctx) else {
+        return respond_error(ctx, w, 503, "overloaded",
+                             "too many in-flight requests", keep,
+                             &retry_after(ctx));
+    };
+    let params = match parse_body(req)
+        .and_then(|v| int_array(&v, "tokens").map(|tokens| {
+            ScoreParams { tokens }
+        })) {
+        Ok(p) => p,
+        Err(e) => {
+            return respond_error(ctx, w, 400, "bad_request",
+                                 &format!("{e:#}"), keep, &[]);
+        }
+    };
+    let handle = match ctx.server.submit_score(params) {
+        Ok(h) => h,
+        Err(e) => return respond_serve_error(ctx, w, &e, keep),
+    };
+    match handle.recv_timeout(REQUEST_TIMEOUT) {
+        Ok(resp) => match &resp.result {
+            Ok(out) => {
+                let body = Value::obj(vec![
+                    ("id", (resp.id as f64).into()),
+                    ("object", "score".into()),
+                    ("variant", resp.variant.as_str().into()),
+                    ("nll", f64::from(out.nll).into()),
+                ]);
+                respond_json(ctx, w, 200, &body, keep, &[])
+            }
+            Err(e) => respond_serve_error(ctx, w, e, keep),
+        },
+        Err(_) => respond_error(ctx, w, 504, "timeout",
+                                "no response from the coordinator in \
+                                 time", keep, &[]),
+    }
+}
+
+struct CompletionBody {
+    params: GenerateParams,
+    stream: bool,
+}
+
+fn parse_completion(req: &HttpRequest) -> Result<CompletionBody> {
+    let v = parse_body(req)?;
+    let prompt = int_array(&v, "prompt")?;
+    let max_new = v.get("max_new").and_then(|x| x.as_usize())
+        .unwrap_or(16);
+    let temperature = v.get("temperature").and_then(|x| x.as_f64())
+        .unwrap_or(0.0);
+    let seed = v.get("seed").and_then(|x| x.as_f64()).unwrap_or(0.0)
+        as u64;
+    let stream = matches!(v.get("stream"), Some(Value::Bool(true)));
+    Ok(CompletionBody {
+        params: GenerateParams { prompt, max_new, temperature, seed },
+        stream,
+    })
+}
+
+fn handle_completions(ctx: &Arc<Ctx>, w: &mut TcpStream,
+                      req: &HttpRequest, keep: bool) -> Result<()> {
+    let Some(_slot) = InflightGuard::try_acquire(ctx) else {
+        return respond_error(ctx, w, 503, "overloaded",
+                             "too many in-flight requests", keep,
+                             &retry_after(ctx));
+    };
+    let body = match parse_completion(req) {
+        Ok(b) => b,
+        Err(e) => {
+            return respond_error(ctx, w, 400, "bad_request",
+                                 &format!("{e:#}"), keep, &[]);
+        }
+    };
+    // backpressure: the decode queue's level gauge is the knob
+    let depth = ctx.server.metrics.level("gen_queue_depth");
+    if depth >= ctx.cfg.max_queue_depth.max(0) {
+        return respond_error(ctx, w, 429, "backpressure",
+                             &format!("generate queue depth {depth} at \
+                                       the limit; retry later"),
+                             keep, &retry_after(ctx));
+    }
+    if !body.stream {
+        let handle = match ctx.server.submit_generate(body.params) {
+            Ok(h) => h,
+            Err(e) => return respond_serve_error(ctx, w, &e, keep),
+        };
+        return match handle.recv_timeout(REQUEST_TIMEOUT) {
+            Ok(resp) => match &resp.result {
+                Ok(out) => {
+                    let toks = Value::Arr(out.tokens.iter()
+                        .map(|&t| Value::Num(t as f64)).collect());
+                    let body = Value::obj(vec![
+                        ("id", (resp.id as f64).into()),
+                        ("object", "completion".into()),
+                        ("variant", resp.variant.as_str().into()),
+                        ("tokens", toks),
+                    ]);
+                    respond_json(ctx, w, 200, &body, keep, &[])
+                }
+                Err(e) => respond_serve_error(ctx, w, e, keep),
+            },
+            Err(_) => respond_error(ctx, w, 504, "timeout",
+                                    "no response from the coordinator \
+                                     in time", keep, &[]),
+        };
+    }
+    // streaming: tokens flow as the scheduler retires decode steps
+    let (stx, srx) = mpsc::channel();
+    let handle = match ctx.server
+        .submit_generate_streaming(body.params, stx) {
+        Ok(h) => h,
+        Err(e) => return respond_serve_error(ctx, w, &e, keep),
+    };
+    status_class(ctx, 200);
+    let head = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+         Transfer-Encoding: chunked\r\nConnection: {}\r\n\r\n",
+        if keep { "keep-alive" } else { "close" });
+    w.write_all(head.as_bytes()).context("write stream head")?;
+    w.flush().context("flush stream head")?;
+    // the worker drops the sender when the request retires, so this
+    // loop ends on disconnect; each event is one sampled token
+    loop {
+        match srx.recv_timeout(REQUEST_TIMEOUT) {
+            Ok(tok) => {
+                let ev = Value::obj(vec![("token",
+                                          Value::Num(tok as f64))]);
+                write_event(w, &ev)?;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                let ev = Value::obj(vec![("error", Value::obj(vec![
+                    ("type", "timeout".into()),
+                    ("message", "decode stalled".into()),
+                ]))]);
+                write_event(w, &ev)?;
+                return end_stream(w);
+            }
+        }
+    }
+    let fin = match handle.recv_timeout(REQUEST_TIMEOUT) {
+        Ok(resp) => match &resp.result {
+            Ok(out) => Value::obj(vec![
+                ("done", true.into()),
+                ("id", (resp.id as f64).into()),
+                ("variant", resp.variant.as_str().into()),
+                ("count", out.tokens.len().into()),
+            ]),
+            Err(e) => {
+                let (_, kind) = status_for(e);
+                Value::obj(vec![
+                    ("done", true.into()),
+                    ("id", (resp.id as f64).into()),
+                    ("error", Value::obj(vec![
+                        ("type", kind.into()),
+                        ("message", e.to_string().into()),
+                    ])),
+                ])
+            }
+        },
+        Err(_) => Value::obj(vec![
+            ("done", true.into()),
+            ("error", Value::obj(vec![
+                ("type", "timeout".into()),
+                ("message", "no terminal response".into()),
+            ])),
+        ]),
+    };
+    write_event(w, &fin)?;
+    write_chunk(w, b"data: [DONE]\n\n")?;
+    end_stream(w)
+}
+
+fn write_event(w: &mut TcpStream, v: &Value) -> Result<()> {
+    let data = format!("data: {}\n\n", v.to_string_compact());
+    write_chunk(w, data.as_bytes())
+}
+
+fn write_chunk(w: &mut TcpStream, data: &[u8]) -> Result<()> {
+    write!(w, "{:x}\r\n", data.len()).context("write chunk size")?;
+    w.write_all(data).context("write chunk")?;
+    w.write_all(b"\r\n").context("write chunk end")?;
+    w.flush().context("flush chunk")
+}
+
+fn end_stream(w: &mut TcpStream) -> Result<()> {
+    w.write_all(b"0\r\n\r\n").context("write last chunk")?;
+    w.flush().context("flush last chunk")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let c = HttpConfig::default();
+        assert!(!c.addr.is_empty());
+        assert!(c.threads >= 1);
+        assert!(c.max_inflight >= 1);
+        assert!(c.max_queue_depth >= 1);
+    }
+
+    #[test]
+    fn serve_error_status_mapping() {
+        assert_eq!(status_for(&ServeError::Empty).0, 400);
+        assert_eq!(status_for(&ServeError::TooLong { need: 9, max: 4 }).0,
+                   400);
+        assert_eq!(status_for(&ServeError::Evicted {
+            reason: "x".into() }).0, 503);
+        assert_eq!(status_for(&ServeError::Rejected {
+            reason: "x".into() }).0, 503);
+        assert_eq!(status_for(&ServeError::Internal {
+            reason: "x".into() }).0, 500);
+    }
+
+    #[test]
+    fn int_array_parses_and_rejects() {
+        let v = json::parse("{\"tokens\": [1, 2, 3]}").unwrap();
+        assert_eq!(int_array(&v, "tokens").unwrap(), vec![1, 2, 3]);
+        assert!(int_array(&v, "missing").is_err());
+        let bad = json::parse("{\"tokens\": [1, \"x\"]}").unwrap();
+        assert!(int_array(&bad, "tokens").is_err());
+    }
+}

@@ -102,6 +102,59 @@ impl Metrics {
             .latencies.get(name).map(|v| v.len()).unwrap_or(0)
     }
 
+    /// Render the whole registry in Prometheus text exposition format
+    /// (what `GET /metrics` serves). Counters become
+    /// `latentllm_<name>_total`, high-water and level gauges become
+    /// `latentllm_<name>` gauges, and each latency series becomes a
+    /// summary with p50/p95/p99 quantiles plus `_count`/`_sum` (values
+    /// are microseconds, as the `_us` metric names say). Everything is
+    /// computed under one lock acquisition — the inner Mutex is not
+    /// reentrant, so this must not call the public getters.
+    pub fn render_prometheus(&self) -> String {
+        fn sanitize(name: &str) -> String {
+            name.chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+                .collect()
+        }
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (k, v) in &g.counters {
+            let n = sanitize(k);
+            out.push_str(&format!(
+                "# TYPE latentllm_{n}_total counter\n\
+                 latentllm_{n}_total {v}\n"));
+        }
+        for (k, v) in &g.gauges {
+            let n = sanitize(k);
+            out.push_str(&format!(
+                "# TYPE latentllm_{n} gauge\nlatentllm_{n} {v}\n"));
+        }
+        for (k, v) in &g.levels {
+            let n = sanitize(k);
+            out.push_str(&format!(
+                "# TYPE latentllm_{n} gauge\nlatentllm_{n} {v}\n"));
+        }
+        for (k, vals) in &g.latencies {
+            if vals.is_empty() {
+                continue;
+            }
+            let n = format!("latentllm_{}", sanitize(k));
+            let mut v = vals.clone();
+            v.sort_by(|a, b| a.total_cmp(b));
+            let q = |p: f64| v[((v.len() as f64 - 1.0) * p) as usize];
+            let sum: f64 = v.iter().sum();
+            out.push_str(&format!("# TYPE {n} summary\n"));
+            for (label, p) in [("0.5", 0.5), ("0.95", 0.95),
+                               ("0.99", 0.99)] {
+                out.push_str(&format!(
+                    "{n}{{quantile=\"{label}\"}} {}\n", q(p)));
+            }
+            out.push_str(&format!("{n}_sum {sum}\n"));
+            out.push_str(&format!("{n}_count {}\n", v.len()));
+        }
+        out
+    }
+
     /// Render a human summary (the server prints this on shutdown).
     pub fn summary(&self) -> String {
         let g = self.inner.lock().unwrap();
@@ -179,6 +232,38 @@ mod tests {
         assert!(m.summary().contains("queue_peak: 5 (peak)"));
         assert!(!m.summary().contains("queue: 0 (now)"),
                 "zero levels stay out of the summary");
+    }
+
+    #[test]
+    fn renders_prometheus_text() {
+        let m = Metrics::new();
+        m.incr("requests", 3);
+        m.set_max("cache_bytes_peak", 42);
+        m.gauge_add("gen_queue_depth", 2);
+        m.observe("request_us", Duration::from_micros(100));
+        m.observe("request_us", Duration::from_micros(300));
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE latentllm_requests_total counter"));
+        assert!(text.contains("latentllm_requests_total 3"));
+        assert!(text.contains("latentllm_cache_bytes_peak 42"));
+        assert!(text.contains("latentllm_gen_queue_depth 2"));
+        assert!(text.contains("# TYPE latentllm_request_us summary"));
+        assert!(text.contains("latentllm_request_us{quantile=\"0.5\"}"));
+        assert!(text.contains("latentllm_request_us_count 2"));
+        assert!(text.contains("latentllm_request_us_sum 400"));
+        // the exposition format contract: every non-comment line is
+        // exactly "name[{labels}] value" with a numeric value
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let name = parts.next().expect("metric name");
+            let val = parts.next().expect("metric value");
+            assert!(parts.next().is_none(), "extra field in {line:?}");
+            assert!(val.parse::<f64>().is_ok(), "value in {line:?}");
+            assert!(name.starts_with("latentllm_"), "prefix in {line:?}");
+        }
     }
 
     #[test]

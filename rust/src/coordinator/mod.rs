@@ -6,6 +6,7 @@
 //! offline, see DESIGN.md §2).
 
 pub mod batcher;
+pub mod http;
 pub mod kvcache;
 pub mod metrics;
 pub mod pages;
@@ -14,9 +15,13 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
+pub use http::{HttpConfig, HttpServer};
 pub use kvcache::{CacheKind, KvCacheManager};
 pub use metrics::Metrics;
 pub use pages::PageAllocator;
 pub use router::{ModelVariant, Router};
 pub use scheduler::{SchedulerConfig, WorkerScheduler};
-pub use server::{GenerateRequest, GenerateResponse, Server, ServerConfig};
+pub use server::{
+    Drain, GenerateParams, Handle, Output, Request, Response,
+    ScoreParams, ServeError, Server, ServerConfig,
+};

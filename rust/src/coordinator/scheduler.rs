@@ -1,7 +1,7 @@
 //! Step-level continuous-batching scheduler: Orca-style iteration
 //! scheduling over the paged latent KV cache.
 //!
-//! The sequential decode path (PR 4) runs one [`GenerateRequest`] to
+//! The sequential decode path (PR 4) runs one generate request to
 //! completion per worker — a long decode monopolizes its worker and
 //! mixed traffic queues behind it. Here each worker instead keeps a
 //! *live session set* and pulls **scheduler iterations**: every
@@ -27,6 +27,10 @@
 //! **identical to the sequential path** regardless of batch composition
 //! or how many preempt→requeue→resume cycles a request survives
 //! (pinned by `tests/decode.rs`).
+//!
+//! Each sampled token is pushed to the task's optional stream sender at
+//! the single sampling site — exactly once per token, because resume
+//! re-prefills the already-generated suffix without re-sampling it.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
@@ -37,7 +41,8 @@ use anyhow::{anyhow, Result};
 use super::kvcache::DEFAULT_BLOCK_TOKENS;
 use super::metrics::Metrics;
 use super::router::Router;
-use super::server::{sample_cache_peaks, GenerateRequest, GenerateResponse};
+use super::server::{sample_cache_peaks, GenerateOutput, GenerateParams,
+                    Output, Response, ServeError};
 use crate::eval::generate::pick_token;
 use crate::runtime::decode::BatchedDecodeState;
 use crate::runtime::Engine;
@@ -77,11 +82,13 @@ impl Default for SchedulerConfig {
 /// `prompt ++ generated`, which reproduces the dropped cache (and its
 /// next-token logits) exactly.
 pub struct GenTask {
-    pub req: GenerateRequest,
-    pub reply: std::sync::mpsc::Sender<GenerateResponse>,
+    /// server-minted request id — also the cache-accounting key
+    pub id: u64,
+    pub params: GenerateParams,
+    pub reply: std::sync::mpsc::Sender<Response<Output>>,
+    /// per-token stream: sampled tokens are sent as they are picked
+    pub stream: Option<std::sync::mpsc::Sender<i32>>,
     pub t_submit: Instant,
-    /// server-internal cache-accounting key (see server::GEN_SEQ_BASE)
-    pub cache_key: u64,
     /// continuation decoded so far, across preemptions
     pub generated: Vec<i32>,
     /// per-request sampling stream — what makes sampled decode
@@ -98,15 +105,16 @@ pub struct GenTask {
 }
 
 impl GenTask {
-    pub fn new(req: GenerateRequest,
-               reply: std::sync::mpsc::Sender<GenerateResponse>,
-               cache_key: u64) -> GenTask {
-        let rng = Rng::new(req.seed);
+    pub fn new(id: u64, params: GenerateParams,
+               reply: std::sync::mpsc::Sender<Response<Output>>,
+               stream: Option<std::sync::mpsc::Sender<i32>>) -> GenTask {
+        let rng = Rng::new(params.seed);
         GenTask {
-            req,
+            id,
+            params,
             reply,
+            stream,
             t_submit: Instant::now(),
-            cache_key,
             generated: Vec::new(),
             rng,
             preemptions: 0,
@@ -118,7 +126,7 @@ impl GenTask {
     /// Tokens a (re)admitted session must hold: the prompt plus the
     /// continuation so far.
     fn total_feed(&self) -> usize {
-        self.req.prompt.len() + self.generated.len()
+        self.params.prompt.len() + self.generated.len()
     }
 }
 
@@ -247,7 +255,9 @@ impl WorkerScheduler {
                     }
                     Err(e) => {
                         metrics.incr("gen_errors", 1);
-                        self.fail(i, router, metrics, format!("{e:#}"));
+                        self.fail(i, router, metrics, ServeError::Internal {
+                            reason: format!("{e:#}"),
+                        });
                         // the next sequence shifted into index i
                     }
                 }
@@ -257,7 +267,7 @@ impl WorkerScheduler {
             // logits would go unused and its row was never reserved) —
             // exactly the sequential path's loop shape
             if self.live[i].task.generated.len()
-                >= self.live[i].task.req.max_new {
+                >= self.live[i].task.params.max_new {
                 progress = true;
                 self.finish(i, router, metrics);
                 continue;
@@ -265,10 +275,13 @@ impl WorkerScheduler {
             let (next, done) = {
                 let l = &mut self.live[i];
                 let next = pick_token(l.logits.as_ref().expect("ready"),
-                                      l.task.req.temperature,
+                                      l.task.params.temperature,
                                       &mut l.task.rng) as i32;
                 l.task.generated.push(next);
-                (next, l.task.generated.len() >= l.task.req.max_new)
+                if let Some(s) = &l.task.stream {
+                    let _ = s.send(next);
+                }
+                (next, l.task.generated.len() >= l.task.params.max_new)
             };
             progress = true;
             if done {
@@ -280,8 +293,7 @@ impl WorkerScheduler {
             // pool that refused us) and retry — preempting ourselves
             // parks the request (tokens + RNG intact) instead of
             // erroring it
-            let (vidx, key) = (self.live[i].vidx,
-                               self.live[i].task.cache_key);
+            let (vidx, key) = (self.live[i].vidx, self.live[i].task.id);
             loop {
                 let ok = {
                     let mut r = lock_unpoisoned(router);
@@ -322,7 +334,8 @@ impl WorkerScheduler {
             // remove highest-index first so earlier indices stay valid
             for (idx, msg) in dead.into_iter().rev() {
                 metrics.incr("gen_errors", 1);
-                self.fail(idx, router, metrics, msg);
+                self.fail(idx, router, metrics,
+                          ServeError::Internal { reason: msg });
             }
         }
         progress
@@ -335,19 +348,17 @@ impl WorkerScheduler {
     /// could ever fit is requeued, not rejected.
     fn admit(&mut self, engine: &Engine, router: &Mutex<Router>,
              mut task: GenTask, metrics: &Arc<Metrics>) -> Admitted {
-        if task.req.prompt.is_empty() {
+        if task.params.prompt.is_empty() {
             metrics.incr("request_errors", 1);
-            send_response(task, String::new(), vec![],
-                          Some("empty prompt".to_string()), false);
+            send_response(task, String::new(), Err(ServeError::Empty));
             return Admitted::Replied;
         }
         let feed_len = task.total_feed();
-        let total_need = task.req.prompt.len()
-            + task.req.max_new.saturating_sub(1);
+        let total_need = task.params.prompt.len()
+            + task.params.max_new.saturating_sub(1);
         let routed = {
             let mut r = lock_unpoisoned(router);
-            match r.route_excluding(task.cache_key, feed_len,
-                                    &task.no_fit) {
+            match r.route_excluding(task.id, feed_len, &task.no_fit) {
                 Some(vidx) => {
                     let v = &r.variants[vidx];
                     Some((vidx, v.step_program.clone(), v.name.clone(),
@@ -366,37 +377,38 @@ impl WorkerScheduler {
                 return Admitted::Requeue(task);
             }
             // can-never-fit anywhere, same contract as the post-route
-            // check below: evicted=true so callers can tell
+            // check below: an Evicted response so callers can tell
             // "shrink/retry won't help at this budget" from hard
             // failures
             metrics.incr("gen_evictions", 1);
             metrics.incr(&format!("worker_{}_evictions", self.widx), 1);
-            send_response(task, String::new(), vec![], Some(format!(
-                "evicted: no variant's paged KV budget can ever hold \
-                 {total_need} tokens")), true);
+            send_response(task, String::new(), Err(ServeError::Evicted {
+                reason: format!("{total_need}-token request can never \
+                                 fit any variant's paged KV budget"),
+            }));
             return Admitted::Replied;
         };
         let session = match engine.program(&program)
             .and_then(|p| p.decode_session(&weights)) {
             Ok(s) => s,
             Err(e) => {
-                lock_unpoisoned(router).release(vidx, task.cache_key);
+                lock_unpoisoned(router).release(vidx, task.id);
                 metrics.incr("gen_errors", 1);
-                send_response(task, vname, vec![],
-                              Some(format!("{e:#}")), false);
+                send_response(task, vname, Err(ServeError::Internal {
+                    reason: format!("{e:#}"),
+                }));
                 return Admitted::Replied;
             }
         };
         // sessions are windowless but bounded by the positional table —
         // reject an overshooting request before paying any prefill
         if total_need > session.max_tokens() {
-            lock_unpoisoned(router).release(vidx, task.cache_key);
+            lock_unpoisoned(router).release(vidx, task.id);
             metrics.incr("gen_errors", 1);
-            send_response(task, vname, vec![], Some(format!(
-                "prompt {} + {} new tokens needs {total_need} positions \
-                 but the model's context holds {}",
-                task.req.prompt.len(), task.req.max_new,
-                session.max_tokens())), false);
+            send_response(task, vname, Err(ServeError::TooLong {
+                need: total_need,
+                max: session.max_tokens(),
+            }));
             return Admitted::Replied;
         }
         // re-admit at the session's REAL footprint (a latent-accounted
@@ -408,11 +420,10 @@ impl WorkerScheduler {
             let actual_bpt = cache.bytes_per_token_for(
                 session.cache_kind(), session.n_layers());
             if !cache.fits_total(total_need, actual_bpt) {
-                cache.release(task.cache_key);
+                cache.release(task.id);
                 (false, true)
             } else {
-                (cache.admit_with(task.cache_key, feed_len, actual_bpt),
-                 false)
+                (cache.admit_with(task.id, feed_len, actual_bpt), false)
             }
         };
         if never_fits_here {
@@ -428,10 +439,11 @@ impl WorkerScheduler {
             }
             metrics.incr("gen_evictions", 1);
             metrics.incr(&format!("worker_{}_evictions", self.widx), 1);
-            send_response(task, vname, vec![], Some(format!(
-                "evicted: {total_need}-token request can never fit any \
-                 variant's paged KV budget at its real session \
-                 footprint")), true);
+            send_response(task, vname, Err(ServeError::Evicted {
+                reason: format!("{total_need}-token request can never \
+                                 fit any variant's paged KV budget at \
+                                 its real session footprint"),
+            }));
             return Admitted::Replied;
         }
         if !admitted {
@@ -442,7 +454,7 @@ impl WorkerScheduler {
             task.t_first_admit = Some(Instant::now());
             metrics.observe("gen_queue_us", task.t_submit.elapsed());
         }
-        let slot = self.batch.insert(task.cache_key, session);
+        let slot = self.batch.insert(task.id, session);
         metrics.gauge_add("live_sessions", 1);
         self.live.push(LiveSeq {
             task,
@@ -462,7 +474,7 @@ impl WorkerScheduler {
     /// yields the same logits as one whole-prompt prefill.
     fn feed_chunk(&mut self, i: usize) -> Result<()> {
         let l = &mut self.live[i];
-        let prompt = &l.task.req.prompt;
+        let prompt = &l.task.params.prompt;
         let gen = &l.task.generated;
         let total = prompt.len() + gen.len();
         let start = l.fed;
@@ -498,7 +510,7 @@ impl WorkerScheduler {
         self.batch.remove(l.slot);
         {
             let mut r = lock_unpoisoned(router);
-            r.release(l.vidx, l.task.cache_key);
+            r.release(l.vidx, l.task.id);
             sample_cache_peaks(&r, metrics);
         }
         metrics.gauge_add("live_sessions", -1);
@@ -510,7 +522,7 @@ impl WorkerScheduler {
         if l.task.preemptions > 0 {
             metrics.incr("gen_resumed_ok", 1);
         }
-        send_response(l.task, l.vname, tokens, None, false);
+        send_response(l.task, l.vname, Ok(tokens));
     }
 
     /// Preempt a live sequence: drop its session (the cache tensors go
@@ -519,7 +531,7 @@ impl WorkerScheduler {
                queue: &SchedQueue, metrics: &Arc<Metrics>) {
         let mut l = self.live.remove(i);
         self.batch.remove(l.slot);
-        lock_unpoisoned(router).release(l.vidx, l.task.cache_key);
+        lock_unpoisoned(router).release(l.vidx, l.task.id);
         l.task.preemptions += 1;
         metrics.incr("gen_preemptions", 1);
         metrics.gauge_add("live_sessions", -1);
@@ -529,16 +541,27 @@ impl WorkerScheduler {
 
     /// Hard per-sequence failure: reply with the error, free everything.
     fn fail(&mut self, i: usize, router: &Mutex<Router>,
-            metrics: &Arc<Metrics>, msg: String) {
+            metrics: &Arc<Metrics>, err: ServeError) {
         let l = self.live.remove(i);
         self.batch.remove(l.slot);
         {
             let mut r = lock_unpoisoned(router);
-            r.release(l.vidx, l.task.cache_key);
+            r.release(l.vidx, l.task.id);
             sample_cache_peaks(&r, metrics);
         }
         metrics.gauge_add("live_sessions", -1);
-        send_response(l.task, l.vname, vec![], Some(msg), false);
+        send_response(l.task, l.vname, Err(err));
+    }
+
+    /// `Drain::Now`: abort every live sequence with a Rejected reply —
+    /// pages released, sessions dropped, callers unblocked.
+    pub fn abort_all(&mut self, router: &Mutex<Router>,
+                     metrics: &Arc<Metrics>) {
+        while !self.live.is_empty() {
+            self.fail(0, router, metrics, ServeError::Rejected {
+                reason: "server shut down mid-decode".to_string(),
+            });
+        }
     }
 }
 
@@ -555,19 +578,27 @@ fn any_pool_could_ever_fit(router: &Mutex<Router>, no_fit: &[usize],
     })
 }
 
-/// Send the terminal [`GenerateResponse`] for a task (the receiver may
-/// have hung up — that's its problem, not the worker's).
-fn send_response(task: GenTask, variant: String, tokens: Vec<i32>,
-                 error: Option<String>, evicted: bool) {
+/// Send the terminal [`Response`] for a task (the receiver may have
+/// hung up — that's its problem, not the worker's).
+fn send_response(task: GenTask, variant: String,
+                 result: std::result::Result<Vec<i32>, ServeError>) {
     let latency = task.t_submit.elapsed();
-    let _ = task.reply.send(GenerateResponse {
-        id: task.req.id,
-        tokens,
+    let _ = task.reply.send(Response {
+        id: task.id,
         variant,
         latency,
-        error,
-        evicted,
+        result: result.map(|tokens| {
+            Output::Generate(GenerateOutput { tokens })
+        }),
     });
+}
+
+/// Reply Rejected to a task that never reached a worker (queue drained
+/// at `Drain::Now` shutdown) so its caller does not block forever.
+pub(crate) fn abandon(task: GenTask) {
+    send_response(task, String::new(), Err(ServeError::Rejected {
+        reason: "server shut down before the request ran".to_string(),
+    }));
 }
 
 #[cfg(test)]
@@ -585,13 +616,12 @@ mod tests {
     #[test]
     fn queue_is_fifo_with_front_resume() {
         let (tx, _rx) = std::sync::mpsc::channel();
-        let mk = |id: u64| GenTask::new(GenerateRequest {
-            id,
+        let mk = |id: u64| GenTask::new(id, GenerateParams {
             prompt: vec![1],
             max_new: 1,
             temperature: 0.0,
             seed: id,
-        }, tx.clone(), id);
+        }, tx.clone(), None);
         let q = SchedQueue::new();
         assert!(q.is_empty());
         q.push_back(mk(1));
@@ -599,7 +629,7 @@ mod tests {
         q.push_front(mk(3)); // a preempted task resumes first
         assert_eq!(q.len(), 3);
         let order: Vec<u64> = std::iter::from_fn(|| q.pop())
-            .map(|t| t.req.id)
+            .map(|t| t.id)
             .collect();
         assert_eq!(order, vec![3, 1, 2]);
     }
@@ -607,13 +637,12 @@ mod tests {
     #[test]
     fn task_state_survives_requeue_shape() {
         let (tx, _rx) = std::sync::mpsc::channel();
-        let mut t = GenTask::new(GenerateRequest {
-            id: 9,
+        let mut t = GenTask::new(9, GenerateParams {
             prompt: vec![1, 2, 3],
             max_new: 8,
             temperature: 0.7,
             seed: 42,
-        }, tx, 1000);
+        }, tx, None);
         assert_eq!(t.total_feed(), 3);
         let r1 = t.rng.uniform();
         t.generated.push(7);
@@ -625,5 +654,28 @@ mod tests {
         let mut fresh = Rng::new(42);
         assert_eq!(fresh.uniform(), r1, "stream starts at the seed");
         assert_eq!(fresh.uniform(), r2, "and continues across preemption");
+    }
+
+    #[test]
+    fn streamed_tokens_arrive_per_sample_site() {
+        // the stream sender rides the task: what a worker pushes at the
+        // sampling site is what a receiver drains, in order, and the
+        // channel disconnects when the task (and its sender) drops
+        let (rtx, _rrx) = std::sync::mpsc::channel();
+        let (stx, srx) = std::sync::mpsc::channel();
+        let t = GenTask::new(1, GenerateParams {
+            prompt: vec![1],
+            max_new: 3,
+            temperature: 0.0,
+            seed: 0,
+        }, rtx, Some(stx));
+        for tok in [10, 11, 12] {
+            if let Some(s) = &t.stream {
+                let _ = s.send(tok);
+            }
+        }
+        drop(t);
+        let got: Vec<i32> = srx.iter().collect();
+        assert_eq!(got, vec![10, 11, 12]);
     }
 }

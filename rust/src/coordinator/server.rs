@@ -4,10 +4,19 @@
 //! backend, and replied per request. std::thread + Mutex/Condvar (tokio is
 //! unavailable offline; the control flow is identical).
 //!
-//! Two request kinds share the queue: [`ScoreRequest`]s batch through the
-//! scoring programs as before, and [`GenerateRequest`]s decode through
-//! incremental sessions ([`crate::runtime::DecodeSession`]) in one of two
-//! modes selected by [`ServerConfig::sched`]:
+//! **The typed surface.** Callers build a [`Request`] (or use the typed
+//! [`Server::submit_score`]/[`Server::submit_generate`] shortcuts) and get
+//! back a [`Handle`] carrying the *server-minted* request id; the terminal
+//! [`Response`] arrives on the handle exactly once, with
+//! `result: Result<_, ServeError>` instead of stringly `error`/`evicted`
+//! flags. The same [`ServeError`] enum is what `coordinator::http` maps to
+//! HTTP status codes, so in-process and network callers see one error
+//! taxonomy.
+//!
+//! Two request kinds share the queue: score requests batch through the
+//! scoring programs, and generate requests decode through incremental
+//! sessions ([`crate::runtime::DecodeSession`]) in one of two modes
+//! selected by [`ServerConfig::sched`]:
 //!
 //! * **Continuous batching (default)** — requests land in a shared
 //!   [`super::scheduler::SchedQueue`]; each worker keeps a live session
@@ -19,6 +28,12 @@
 //!   session to completion: prompt admitted up front, every decoded
 //!   token `extend`ed against the paged budget, and an eviction verdict
 //!   mid-decode drops the live session and errors that request alone.
+//!
+//! Generate submissions may carry a per-token stream sender
+//! ([`Server::submit_generate_streaming`]): each sampled token is sent
+//! the moment it is picked — exactly once per token even across
+//! preempt→resume cycles, because resume re-prefills without
+//! re-sampling.
 //!
 //! Cache pages, decode tokens, preemptions, and evictions are
 //! aggregated per worker in [`Metrics`].
@@ -35,45 +50,90 @@
 //! get an error-carrying response instead of killing the worker; flushes
 //! larger than the program batch split into multiple executions
 //! (`batch_overflow` metric) instead of silently NaN-ing the overflow.
+//!
+//! Shutdown is explicit: [`Server::shutdown`] takes a [`Drain`] mode.
+//! `Drain::Graceful` finishes every queued request and live session
+//! before returning; `Drain::Now` aborts live decodes and answers
+//! everything still queued with [`ServeError::Rejected`] — no caller is
+//! ever left blocking on a reply that will never come.
 
 use std::collections::VecDeque;
+use std::marker::PhantomData;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::router::{Policy, Router};
-use super::scheduler::{GenTask, SchedQueue, SchedulerConfig,
+use super::scheduler::{self, GenTask, SchedQueue, SchedulerConfig,
                        WorkerScheduler};
 use crate::runtime::{Engine, ParamValue};
 use crate::util::lock_unpoisoned;
 
+// ---------------------------------------------------------------------------
+// The typed request/response surface
+// ---------------------------------------------------------------------------
+
+/// Why a request failed — one taxonomy shared by the in-process API and
+/// the HTTP listener (which maps each variant to a status code). The
+/// old `error: Option<String>` + `evicted: bool` flags are these
+/// variants now.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// Refused before running: admission rejected, or the server shut
+    /// down while the request was still queued.
+    Rejected { reason: String },
+    /// KV-budget eviction — retrying later (or shorter) may succeed;
+    /// a "can never fit" reason means it will not at this budget.
+    Evicted { reason: String },
+    /// The request needs more positions than the program/model holds.
+    TooLong { need: usize, max: usize },
+    /// Empty prompt / token list.
+    Empty,
+    /// No worker engine is serving (failed init or all workers died).
+    EngineInit { reason: String },
+    /// Execution failure (batch run, session open/step).
+    Internal { reason: String },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Rejected { reason } => {
+                write!(f, "rejected: {reason}")
+            }
+            ServeError::Evicted { reason } => {
+                write!(f, "evicted: {reason}")
+            }
+            ServeError::TooLong { need, max } => {
+                write!(f, "request needs {need} positions but the \
+                           context holds {max}")
+            }
+            ServeError::Empty => write!(f, "empty request"),
+            ServeError::EngineInit { reason } => {
+                write!(f, "engine init: {reason}")
+            }
+            ServeError::Internal { reason } => write!(f, "{reason}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Score a token list through the routed variant's scoring program.
 #[derive(Clone, Debug)]
-pub struct ScoreRequest {
-    pub id: u64,
+pub struct ScoreParams {
     pub tokens: Vec<i32>,
 }
 
+/// Autoregressive decode: prefill `prompt`, emit `max_new` tokens
+/// through a cached decode session on the routed variant.
 #[derive(Clone, Debug)]
-pub struct ScoreResponse {
-    pub id: u64,
-    pub nll: f32,
-    pub variant: String,
-    pub latency: Duration,
-    /// Per-request failure (empty token list, over-long request, …);
-    /// `nll` is NaN when set.
-    pub error: Option<String>,
-}
-
-/// Autoregressive decode request: prefill `prompt`, emit `max_new`
-/// tokens through a cached decode session on the routed variant.
-#[derive(Clone, Debug)]
-pub struct GenerateRequest {
-    pub id: u64,
+pub struct GenerateParams {
     pub prompt: Vec<i32>,
     pub max_new: usize,
     /// 0.0 = greedy; otherwise softmax temperature sampling
@@ -81,18 +141,164 @@ pub struct GenerateRequest {
     pub seed: u64,
 }
 
+/// One unit of work. Ids are server-minted (returned in the submit
+/// [`Handle`]), never caller-chosen.
 #[derive(Clone, Debug)]
-pub struct GenerateResponse {
-    pub id: u64,
-    /// generated continuation (prompt excluded); empty when `error` set
+pub enum Request {
+    Score(ScoreParams),
+    Generate(GenerateParams),
+}
+
+#[derive(Clone, Debug)]
+pub struct ScoreOutput {
+    pub nll: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenerateOutput {
+    /// generated continuation (prompt excluded)
     pub tokens: Vec<i32>,
+}
+
+#[derive(Clone, Debug)]
+pub enum Output {
+    Score(ScoreOutput),
+    Generate(GenerateOutput),
+}
+
+/// Terminal reply for one request. `T` is [`Output`] for the unified
+/// [`Server::submit`] entry and the concrete output type for the typed
+/// shortcuts.
+#[derive(Clone, Debug)]
+pub struct Response<T = Output> {
+    /// the server-minted request id (same value as `Handle::id`)
+    pub id: u64,
+    /// variant that served the request (empty when it never routed)
     pub variant: String,
     pub latency: Duration,
-    /// set when the request failed; `evicted` distinguishes a KV-budget
-    /// eviction (retry later / shorter) from a hard failure
-    pub error: Option<String>,
-    pub evicted: bool,
+    pub result: std::result::Result<T, ServeError>,
 }
+
+impl<T> Response<T> {
+    /// Render the failure, if any (the old `error: Option<String>`).
+    pub fn error(&self) -> Option<String> {
+        self.result.as_ref().err().map(|e| e.to_string())
+    }
+
+    /// Was this a KV-budget eviction (the old `evicted: bool`)?
+    pub fn is_evicted(&self) -> bool {
+        matches!(self.result, Err(ServeError::Evicted { .. }))
+    }
+}
+
+impl Response<ScoreOutput> {
+    /// NaN on failure — the scoring convention callers already expect.
+    pub fn nll(&self) -> f32 {
+        self.result.as_ref().map(|o| o.nll).unwrap_or(f32::NAN)
+    }
+}
+
+impl Response<GenerateOutput> {
+    /// Empty on failure.
+    pub fn tokens(&self) -> &[i32] {
+        self.result.as_ref().map(|o| o.tokens.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn into_tokens(self) -> Vec<i32> {
+        self.result.map(|o| o.tokens).unwrap_or_default()
+    }
+}
+
+/// Narrow an [`Output`] to a concrete kind — only implemented for types
+/// a submit path can actually produce, so the conversion is total by
+/// construction.
+pub trait FromOutput: Sized {
+    fn from_output(out: Output) -> Self;
+}
+
+impl FromOutput for Output {
+    fn from_output(out: Output) -> Output {
+        out
+    }
+}
+
+impl FromOutput for ScoreOutput {
+    fn from_output(out: Output) -> ScoreOutput {
+        match out {
+            Output::Score(s) => s,
+            Output::Generate(_) => {
+                unreachable!("score handle received a generate output")
+            }
+        }
+    }
+}
+
+impl FromOutput for GenerateOutput {
+    fn from_output(out: Output) -> GenerateOutput {
+        match out {
+            Output::Generate(g) => g,
+            Output::Score(_) => {
+                unreachable!("generate handle received a score output")
+            }
+        }
+    }
+}
+
+impl Response<Output> {
+    fn narrow<T: FromOutput>(self) -> Response<T> {
+        Response {
+            id: self.id,
+            variant: self.variant,
+            latency: self.latency,
+            result: self.result.map(T::from_output),
+        }
+    }
+}
+
+/// The submit receipt: carries the server-minted id and receives the
+/// terminal [`Response`] exactly once.
+pub struct Handle<T = Output> {
+    id: u64,
+    rx: mpsc::Receiver<Response<Output>>,
+    _kind: PhantomData<fn() -> T>,
+}
+
+impl<T: FromOutput> Handle<T> {
+    fn new(id: u64, rx: mpsc::Receiver<Response<Output>>) -> Handle<T> {
+        Handle { id, rx, _kind: PhantomData }
+    }
+
+    /// The server-assigned request id (also what the response carries).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn recv(&self)
+                -> std::result::Result<Response<T>, mpsc::RecvError> {
+        self.rx.recv().map(Response::narrow)
+    }
+
+    pub fn recv_timeout(&self, timeout: Duration)
+                        -> std::result::Result<Response<T>,
+                                               mpsc::RecvTimeoutError> {
+        self.rx.recv_timeout(timeout).map(Response::narrow)
+    }
+}
+
+/// How [`Server::shutdown`] treats in-flight work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Drain {
+    /// Stop accepting, then finish every queued request and live decode
+    /// session before returning — no request is lost.
+    Graceful,
+    /// Stop accepting and abort: live decodes and everything still
+    /// queued get [`ServeError::Rejected`] replies instead of running.
+    Now,
+}
+
+// ---------------------------------------------------------------------------
+// Server internals
+// ---------------------------------------------------------------------------
 
 pub struct ServerConfig {
     pub batcher: BatcherConfig,
@@ -108,19 +314,22 @@ pub struct ServerConfig {
     pub sched: Option<SchedulerConfig>,
 }
 
-struct Entry {
-    req: ScoreRequest,
-    reply: mpsc::Sender<ScoreResponse>,
+pub(crate) struct Entry {
+    /// server-minted id — doubles as the group's cache-accounting key
+    /// (ids are unique across both request kinds, so no key collision)
+    id: u64,
+    tokens: Vec<i32>,
+    reply: mpsc::Sender<Response<Output>>,
     t_submit: Instant,
 }
 
 struct GenEntry {
-    req: GenerateRequest,
-    reply: mpsc::Sender<GenerateResponse>,
+    id: u64,
+    params: GenerateParams,
+    reply: mpsc::Sender<Response<Output>>,
+    /// per-token stream: each sampled token is sent as it is picked
+    stream: Option<mpsc::Sender<i32>>,
     t_submit: Instant,
-    /// server-internal cache-accounting key — disjoint from score-path
-    /// seq ids so one kind's release can never free the other's bytes
-    cache_key: u64,
 }
 
 /// One queued unit of work.
@@ -129,32 +338,20 @@ enum Job {
     Generate(GenEntry),
 }
 
-/// Cache-accounting keys for generate sessions live at and above this
-/// base; score-batch admissions draw server-internal keys *below* it
-/// ([`next_score_key`]) — neither kind is ever derived from a
-/// caller-chosen request id, so no submitted id can collide with (and
-/// release) another request's live reservation.
-const GEN_SEQ_BASE: u64 = 1 << 48;
-
-/// Server-internal admission key for one score batch, strictly below
-/// [`GEN_SEQ_BASE`]. Process-wide counter: uniqueness matters, identity
-/// does not (the key lives only from route to release within one
-/// group's execution).
-fn next_score_key() -> u64 {
-    static SCORE_SEQ: AtomicU64 = AtomicU64::new(0);
-    SCORE_SEQ.fetch_add(1, Ordering::Relaxed) & (GEN_SEQ_BASE - 1)
-}
-
 /// State shared between submitters and workers: the request queue plus
 /// lifecycle flags.
 struct Shared {
     queue: Mutex<VecDeque<Job>>,
     cv: Condvar,
     shutdown: AtomicBool,
+    /// `Drain::Now`: workers abort live work instead of draining
+    hard: AtomicBool,
     /// workers that finished engine init and are serving
     live: AtomicUsize,
-    /// next generate cache-accounting key (see [`GEN_SEQ_BASE`])
-    gen_seq: AtomicU64,
+    /// server-minted request ids; also the cache-accounting key, so one
+    /// counter guarantees no submitted request can ever collide with
+    /// (and release) another's live reservation
+    next_id: AtomicU64,
     /// scheduler-mode generate admissions (new at the back, preempted
     /// resumes at the front); unused when `ServerConfig::sched` is None
     gen_queue: SchedQueue,
@@ -241,8 +438,9 @@ impl Server {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            hard: AtomicBool::new(false),
             live: AtomicUsize::new(0),
-            gen_seq: AtomicU64::new(GEN_SEQ_BASE),
+            next_id: AtomicU64::new(1),
             gen_queue: SchedQueue::new(),
         });
         let router = Arc::new(Mutex::new(router));
@@ -304,56 +502,112 @@ impl Server {
         Ok(Server { shared, handles, metrics, cfg })
     }
 
-    /// Enqueue a request; the response arrives on the returned channel.
-    /// Errors when the server is shutting down or no worker survived —
-    /// callers keep their own thread alive either way.
-    pub fn submit(&self, req: ScoreRequest)
-                  -> Result<mpsc::Receiver<ScoreResponse>> {
+    fn mint_id(&self) -> u64 {
+        self.shared.next_id.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Enqueue any request; the terminal [`Response`] arrives on the
+    /// returned handle. Errors when the server is shutting down or no
+    /// worker survived — callers keep their own thread alive either way.
+    pub fn submit(&self, req: Request)
+                  -> std::result::Result<Handle<Output>, ServeError> {
+        match req {
+            Request::Score(p) => self.enqueue_score(p),
+            Request::Generate(p) => self.enqueue_generate(p, None),
+        }
+        .map(|(id, rx)| Handle::new(id, rx))
+    }
+
+    /// Typed score submit.
+    pub fn submit_score(&self, params: ScoreParams)
+                        -> std::result::Result<Handle<ScoreOutput>,
+                                               ServeError> {
+        self.enqueue_score(params).map(|(id, rx)| Handle::new(id, rx))
+    }
+
+    /// Typed generate submit. With the scheduler enabled the request
+    /// joins the shared admission queue and decodes step-interleaved
+    /// with other live sessions; without it, the popping worker runs
+    /// the whole prefill+step session to completion.
+    pub fn submit_generate(&self, params: GenerateParams)
+                           -> std::result::Result<Handle<GenerateOutput>,
+                                                  ServeError> {
+        self.enqueue_generate(params, None)
+            .map(|(id, rx)| Handle::new(id, rx))
+    }
+
+    /// Like [`Server::submit_generate`], but every sampled token is also
+    /// sent on `stream` the moment the decode step retires — exactly
+    /// once per token, even across preempt→resume cycles (resume
+    /// re-prefills without re-sampling). The sender is dropped when the
+    /// request finishes, so a receiver loop terminates on disconnect;
+    /// the terminal [`Response`] still arrives on the handle.
+    pub fn submit_generate_streaming(&self, params: GenerateParams,
+                                     stream: mpsc::Sender<i32>)
+                                     -> std::result::Result<
+                                         Handle<GenerateOutput>,
+                                         ServeError> {
+        self.enqueue_generate(params, Some(stream))
+            .map(|(id, rx)| Handle::new(id, rx))
+    }
+
+    fn enqueue_score(&self, params: ScoreParams)
+                     -> std::result::Result<
+                         (u64, mpsc::Receiver<Response<Output>>),
+                         ServeError> {
         self.check_accepting()?;
+        let id = self.mint_id();
         let (rtx, rrx) = mpsc::channel();
         self.shared.queue.lock().unwrap().push_back(Job::Score(Entry {
-            req,
+            id,
+            tokens: params.tokens,
             reply: rtx,
             t_submit: Instant::now(),
         }));
         self.shared.cv.notify_one();
-        Ok(rrx)
+        Ok((id, rrx))
     }
 
-    /// Enqueue an autoregressive decode request; the response arrives on
-    /// the returned channel once. With the scheduler enabled the request
-    /// joins the shared admission queue and decodes step-interleaved
-    /// with other live sessions; without it, the popping worker runs the
-    /// whole prefill+step session to completion.
-    pub fn submit_generate(&self, req: GenerateRequest)
-                           -> Result<mpsc::Receiver<GenerateResponse>> {
+    fn enqueue_generate(&self, params: GenerateParams,
+                        stream: Option<mpsc::Sender<i32>>)
+                        -> std::result::Result<
+                            (u64, mpsc::Receiver<Response<Output>>),
+                            ServeError> {
         self.check_accepting()?;
-        let cache_key = self.shared.gen_seq.fetch_add(1, Ordering::SeqCst);
+        let id = self.mint_id();
         let (rtx, rrx) = mpsc::channel();
+        // both decode modes account identically at submit, so the
+        // gen_queue_depth level gauge is a meaningful backpressure
+        // signal (the HTTP 429 knob) either way
+        self.metrics.incr("gen_requests", 1);
+        self.metrics.gauge_add("gen_queue_depth", 1);
         if self.cfg.sched.is_some() {
-            self.metrics.incr("gen_requests", 1);
-            self.metrics.gauge_add("gen_queue_depth", 1);
-            self.shared.gen_queue.push_back(GenTask::new(req, rtx,
-                                                         cache_key));
+            self.shared.gen_queue.push_back(
+                GenTask::new(id, params, rtx, stream));
         } else {
             self.shared.queue.lock().unwrap().push_back(
                 Job::Generate(GenEntry {
-                    req,
+                    id,
+                    params,
                     reply: rtx,
+                    stream,
                     t_submit: Instant::now(),
-                    cache_key,
                 }));
         }
         self.shared.cv.notify_one();
-        Ok(rrx)
+        Ok((id, rrx))
     }
 
-    fn check_accepting(&self) -> Result<()> {
+    fn check_accepting(&self) -> std::result::Result<(), ServeError> {
         if self.shared.shutdown.load(Ordering::SeqCst) {
-            bail!("server is shutting down");
+            return Err(ServeError::Rejected {
+                reason: "server is shutting down".to_string(),
+            });
         }
         if self.shared.live.load(Ordering::SeqCst) == 0 {
-            bail!("no live server workers");
+            return Err(ServeError::EngineInit {
+                reason: "no live server workers".to_string(),
+            });
         }
         Ok(())
     }
@@ -363,23 +617,65 @@ impl Server {
         self.shared.live.load(Ordering::SeqCst)
     }
 
-    pub fn shutdown(mut self) -> Arc<Metrics> {
-        self.stop();
+    /// Stop the server. `Drain::Graceful` finishes all queued and live
+    /// work first; `Drain::Now` aborts and answers the remainder with
+    /// [`ServeError::Rejected`].
+    pub fn shutdown(mut self, mode: Drain) -> Arc<Metrics> {
+        self.stop(mode);
         self.metrics.clone()
     }
 
-    fn stop(&mut self) {
+    fn stop(&mut self, mode: Drain) {
+        if mode == Drain::Now {
+            // order matters: workers re-check `hard` after seeing
+            // `shutdown`, so setting it first makes Now take effect on
+            // the first wakeup
+            self.shared.hard.store(true, Ordering::SeqCst);
+        }
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.cv.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
+        }
+        // after a graceful drain both queues are empty; after Now the
+        // leftovers get terminal replies so no caller blocks forever
+        let leftover: Vec<Job> =
+            self.shared.queue.lock().unwrap().drain(..).collect();
+        for job in leftover {
+            let rejected = ServeError::Rejected {
+                reason: "server shut down before the request ran"
+                    .to_string(),
+            };
+            match job {
+                Job::Score(e) => {
+                    let _ = e.reply.send(Response {
+                        id: e.id,
+                        variant: String::new(),
+                        latency: e.t_submit.elapsed(),
+                        result: Err(rejected),
+                    });
+                }
+                Job::Generate(g) => {
+                    self.metrics.gauge_add("gen_queue_depth", -1);
+                    let _ = g.reply.send(Response {
+                        id: g.id,
+                        variant: String::new(),
+                        latency: g.t_submit.elapsed(),
+                        result: Err(rejected),
+                    });
+                }
+            }
+        }
+        while let Some(task) = self.shared.gen_queue.pop() {
+            self.metrics.gauge_add("gen_queue_depth", -1);
+            scheduler::abandon(task);
         }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop();
+        self.stop(Drain::Graceful);
     }
 }
 
@@ -400,6 +696,16 @@ fn worker_loop(widx: usize, engine: &Engine, shared: &Shared,
     // (decode throughput must not be clocked by the poll interval).
     let mut sched_active = false;
     loop {
+        if shared.hard.load(Ordering::SeqCst) {
+            // Drain::Now — abort instead of draining: everything this
+            // worker holds gets a Rejected reply; what is still queued
+            // is answered by `Server::stop` after the join
+            abort_batcher(&mut batcher);
+            if let Some(s) = sched.as_mut() {
+                s.abort_all(router, metrics);
+            }
+            break;
+        }
         // with live sessions (or admittable work) the worker must keep
         // iterating the scheduler — poll the job queue with a short
         // timeout instead of parking on the condvar
@@ -430,7 +736,7 @@ fn worker_loop(widx: usize, engine: &Engine, shared: &Shared,
                     // so flush any score batch whose deadline already
                     // passed *first* — its replies must not wait behind
                     // the whole decode.
-                    metrics.incr("gen_requests", 1);
+                    metrics.gauge_add("gen_queue_depth", -1);
                     flush_due(widx, engine, router, cfg, metrics,
                               &mut batcher, false);
                     run_generate(widx, engine, router, g, metrics);
@@ -452,6 +758,24 @@ fn worker_loop(widx: usize, engine: &Engine, shared: &Shared,
             && shared.gen_queue.is_empty()
             && sched.as_ref().is_none_or(|s| s.is_idle()) {
             break;
+        }
+    }
+}
+
+/// `Drain::Now`: answer everything still sitting in this worker's
+/// batcher with a Rejected reply instead of executing it.
+fn abort_batcher(batcher: &mut Batcher<Entry>) {
+    while !batcher.is_empty() {
+        for e in batcher.flush(Instant::now()) {
+            let _ = e.item.reply.send(Response {
+                id: e.item.id,
+                variant: String::new(),
+                latency: e.item.t_submit.elapsed(),
+                result: Err(ServeError::Rejected {
+                    reason: "server shut down before the request ran"
+                        .to_string(),
+                }),
+            });
         }
     }
 }
@@ -493,24 +817,22 @@ fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
     // program's window and does not bound them. The real capacity check
     // (prompt + max_new - 1 vs session.max_tokens()) runs right after
     // the session opens, before any prefill cost.
-    if g.req.prompt.is_empty() {
+    if g.params.prompt.is_empty() {
         metrics.incr("request_errors", 1);
-        let _ = g.reply.send(GenerateResponse {
-            id: g.req.id,
-            tokens: vec![],
+        let _ = g.reply.send(Response {
+            id: g.id,
             variant: String::new(),
             latency: g.t_submit.elapsed(),
-            error: Some("empty prompt".to_string()),
-            evicted: false,
+            result: Err(ServeError::Empty),
         });
         return;
     }
     // admission: reserve the prompt's cache footprint on a variant (the
     // router lock is held for the routing decision only, never across
-    // the decode)
+    // the decode). The server-minted id is the accounting key.
     let routed = {
         let mut r = lock_unpoisoned(router);
-        match r.route(g.cache_key, g.req.prompt.len()) {
+        match r.route(g.id, g.params.prompt.len()) {
             Some(vidx) => {
                 let v = &r.variants[vidx];
                 (Some(vidx), v.step_program.clone(), v.name.clone(),
@@ -521,33 +843,38 @@ fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
     };
     let (Some(vidx), program, vname, Some(weights)) = routed else {
         metrics.incr("gen_rejected", 1);
-        let _ = g.reply.send(GenerateResponse {
-            id: g.req.id,
-            tokens: vec![],
+        let _ = g.reply.send(Response {
+            id: g.id,
             variant: String::new(),
             latency: g.t_submit.elapsed(),
-            error: Some(format!(
-                "cache admission rejected: no variant has KV budget for \
-                 {} prompt tokens", g.req.prompt.len())),
-            evicted: false,
+            result: Err(ServeError::Rejected {
+                reason: format!(
+                    "no variant has KV budget for {} prompt tokens",
+                    g.params.prompt.len()),
+            }),
         });
         return;
     };
-    let mut rng = Rng::new(g.req.seed);
-    let mut tokens: Vec<i32> = Vec::with_capacity(g.req.max_new);
-    let mut evicted = false;
-    let result: Result<()> = (|| {
-        let mut session =
-            engine.program(&program)?.decode_session(&weights)?;
+    let internal = |e: anyhow::Error| ServeError::Internal {
+        reason: format!("{e:#}"),
+    };
+    let mut rng = Rng::new(g.params.seed);
+    let mut tokens: Vec<i32> = Vec::with_capacity(g.params.max_new);
+    let result: std::result::Result<(), ServeError> = (|| {
+        let mut session = engine.program(&program)
+            .and_then(|p| p.decode_session(&weights))
+            .map_err(internal)?;
         // sessions are windowless but bounded by the model's positional
         // table: reject an overshooting request before paying the
         // prefill it would waste (the final sampled token is never fed
         // back, hence the -1)
-        let need = g.req.prompt.len() + g.req.max_new.saturating_sub(1);
+        let need = g.params.prompt.len()
+            + g.params.max_new.saturating_sub(1);
         if need > session.max_tokens() {
-            bail!("prompt {} + {} new tokens needs {need} positions but \
-                   the model's context holds {}", g.req.prompt.len(),
-                  g.req.max_new, session.max_tokens());
+            return Err(ServeError::TooLong {
+                need,
+                max: session.max_tokens(),
+            });
         }
         // re-admit at the session's REAL footprint: the variant's
         // nominal CacheKind routed the request, but what the budget
@@ -559,47 +886,57 @@ fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
             let cache = &mut r.variants[vidx].cache;
             let actual_bpt = cache.bytes_per_token_for(
                 session.cache_kind(), session.n_layers());
-            cache.admit_with(g.cache_key, g.req.prompt.len(), actual_bpt)
+            cache.admit_with(g.id, g.params.prompt.len(), actual_bpt)
         };
         if !admitted {
             // admit_with released the nominal reservation before
             // failing, so there is nothing left to return
-            evicted = true;
-            bail!("evicted: {}-token prompt does not fit the KV budget \
-                   at the session's real footprint", g.req.prompt.len());
+            return Err(ServeError::Evicted {
+                reason: format!(
+                    "{}-token prompt does not fit the KV budget at the \
+                     session's real footprint", g.params.prompt.len()),
+            });
         }
-        let mut logits = session.prefill(&g.req.prompt)?;
-        for step in 0..g.req.max_new {
+        let mut logits = session.prefill(&g.params.prompt)
+            .map_err(internal)?;
+        for step in 0..g.params.max_new {
             let next =
-                pick_token(&logits, g.req.temperature, &mut rng) as i32;
+                pick_token(&logits, g.params.temperature, &mut rng) as i32;
             tokens.push(next);
-            if step + 1 == g.req.max_new {
+            if let Some(s) = &g.stream {
+                let _ = s.send(next);
+            }
+            if step + 1 == g.params.max_new {
                 // the final token is never fed back: its logits would go
                 // unused and its cache row was never reserved
                 break;
             }
             let alive = {
                 let mut r = lock_unpoisoned(router);
-                r.variants[vidx].cache.extend(g.cache_key)
+                r.variants[vidx].cache.extend(g.id)
             };
             if !alive {
-                evicted = true;
-                bail!("evicted: KV cache budget exhausted after {} of {} \
-                       tokens", tokens.len(), g.req.max_new);
+                return Err(ServeError::Evicted {
+                    reason: format!(
+                        "KV cache budget exhausted after {} of {} tokens",
+                        tokens.len(), g.params.max_new),
+                });
             }
-            logits = session.step(next)?;
+            logits = session.step(next).map_err(internal)?;
         }
         Ok(())
     })();
-    // a failed extend already removed the sequence and returned its
-    // bytes; every other exit releases the admission here. The manager's
-    // peak_bytes is exact and monotone, so one gauge sample per request
-    // captures every admit/extend that preceded it — no per-token
-    // metrics traffic, no sampling site to forget.
+    let evicted = matches!(result, Err(ServeError::Evicted { .. }));
+    // a failed extend (and a failed admit_with) already removed the
+    // sequence and returned its bytes; every other exit releases the
+    // admission here. The manager's peak_bytes is exact and monotone, so
+    // one gauge sample per request captures every admit/extend that
+    // preceded it — no per-token metrics traffic, no sampling site to
+    // forget.
     {
         let mut r = lock_unpoisoned(router);
         if !evicted {
-            r.release(vidx, g.cache_key);
+            r.release(vidx, g.id);
         }
         sample_cache_peaks(&r, metrics);
     }
@@ -610,29 +947,25 @@ fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
             metrics.incr(&format!("worker_{widx}_gen_tokens"),
                          tokens.len() as u64);
             metrics.observe("gen_us", latency);
-            let _ = g.reply.send(GenerateResponse {
-                id: g.req.id,
-                tokens,
+            let _ = g.reply.send(Response {
+                id: g.id,
                 variant: vname,
                 latency,
-                error: None,
-                evicted: false,
+                result: Ok(Output::Generate(GenerateOutput { tokens })),
             });
         }
-        Err(e) => {
+        Err(err) => {
             if evicted {
                 metrics.incr("gen_evictions", 1);
                 metrics.incr(&format!("worker_{widx}_evictions"), 1);
             } else {
                 metrics.incr("gen_errors", 1);
             }
-            let _ = g.reply.send(GenerateResponse {
-                id: g.req.id,
-                tokens: vec![],
+            let _ = g.reply.send(Response {
+                id: g.id,
                 variant: vname,
                 latency,
-                error: Some(format!("{e:#}")),
-                evicted,
+                result: Err(err),
             });
         }
     }
@@ -655,15 +988,17 @@ pub(crate) fn sample_cache_peaks(r: &Router, metrics: &Arc<Metrics>) {
 }
 
 /// Reject a request the program can never score; the caller gets a
-/// response (with `error` set) rather than a silently-NaN score or a dead
+/// typed error response rather than a silently-NaN score or a dead
 /// worker thread.
-fn validate(req: &ScoreRequest, seq_len: usize) -> Option<String> {
-    if req.tokens.is_empty() {
-        return Some("empty token list".to_string());
+fn validate(tokens: &[i32], seq_len: usize) -> Option<ServeError> {
+    if tokens.is_empty() {
+        return Some(ServeError::Empty);
     }
-    if req.tokens.len() > seq_len {
-        return Some(format!("request length {} exceeds program seq_len \
-                             {seq_len}", req.tokens.len()));
+    if tokens.len() > seq_len {
+        return Some(ServeError::TooLong {
+            need: tokens.len(),
+            max: seq_len,
+        });
     }
     None
 }
@@ -677,17 +1012,15 @@ fn execute_batch(engine: &Engine, router: &Mutex<Router>,
     }
     let mut valid = Vec::with_capacity(entries.len());
     for e in entries {
-        match validate(&e.item.req, cfg.seq_len) {
-            Some(reason) => {
+        match validate(&e.item.tokens, cfg.seq_len) {
+            Some(err) => {
                 metrics.incr("request_errors", 1);
-                let resp = ScoreResponse {
-                    id: e.item.req.id,
-                    nll: f32::NAN,
+                let _ = e.item.reply.send(Response {
+                    id: e.item.id,
                     variant: String::new(),
                     latency: e.item.t_submit.elapsed(),
-                    error: Some(reason),
-                };
-                let _ = e.item.reply.send(resp);
+                    result: Err(err),
+                });
             }
             None => valid.push(e),
         }
@@ -729,27 +1062,29 @@ fn execute_group(engine: &Engine, router: &Mutex<Router>,
             metrics.incr(&format!("variant_{vname}"),
                          entries.len() as u64);
             for (i, e) in entries.into_iter().enumerate() {
-                let resp = ScoreResponse {
-                    id: e.item.req.id,
-                    nll: nll.get(i).copied().unwrap_or(f32::NAN),
+                let latency = e.item.t_submit.elapsed();
+                metrics.observe("request_us", latency);
+                let _ = e.item.reply.send(Response {
+                    id: e.item.id,
                     variant: vname.clone(),
-                    latency: e.item.t_submit.elapsed(),
-                    error: None,
-                };
-                metrics.observe("request_us", resp.latency);
-                let _ = e.item.reply.send(resp);
+                    latency,
+                    result: Ok(Output::Score(ScoreOutput {
+                        nll: nll.get(i).copied().unwrap_or(f32::NAN),
+                    })),
+                });
             }
             Ok(())
         }
         Err(err) => {
             let msg = format!("batch execution failed: {err:#}");
             for e in entries {
-                let _ = e.item.reply.send(ScoreResponse {
-                    id: e.item.req.id,
-                    nll: f32::NAN,
+                let _ = e.item.reply.send(Response {
+                    id: e.item.id,
                     variant: String::new(),
                     latency: e.item.t_submit.elapsed(),
-                    error: Some(msg.clone()),
+                    result: Err(ServeError::Internal {
+                        reason: msg.clone(),
+                    }),
                 });
             }
             Err(err)
@@ -766,9 +1101,10 @@ fn score_group(engine: &Engine, router: &Mutex<Router>,
                metrics: &Arc<Metrics>) -> Result<(Vec<f32>, String)> {
     // route the whole group to one variant (vLLM-style per-batch
     // placement); weights are Arc-shared so the router lock is not held
-    // across the execution. The admission key is server-internal,
-    // namespaced away from decode-session keys (see next_score_key).
-    let admit_key = next_score_key();
+    // across the execution. The first entry's server-minted id is the
+    // group's admission key: ids are unique across both request kinds,
+    // so no decode session can ever share (and release) it.
+    let admit_key = entries[0].item.id;
     let (vidx, program, vname, weights) = {
         let mut r = lock_unpoisoned(router);
         let vidx = r.route(admit_key, cfg.seq_len).unwrap_or(0);
@@ -781,7 +1117,7 @@ fn score_group(engine: &Engine, router: &Mutex<Router>,
         let t = cfg.seq_len;
         let mut flat = vec![0i32; b * t];
         for (i, e) in entries.iter().enumerate().take(b) {
-            let toks = &e.item.req.tokens;
+            let toks = &e.item.tokens;
             let n = toks.len().min(t);
             flat[i * t..i * t + n].copy_from_slice(&toks[..n]);
             // left-fill short requests by repeating (keeps shapes static)

@@ -17,9 +17,10 @@ use latentllm::compress::pipeline::{self, Method};
 use latentllm::compress::plan::{self, CompressionPlan, ProgressObserver,
                                 Registry};
 use latentllm::coordinator::{
+    http::{HttpConfig, HttpServer},
     kvcache::CacheKind, kvcache::KvCacheManager,
     router::{ModelVariant, Policy, Router},
-    server::{GenerateRequest, ScoreRequest, Server, ServerConfig},
+    server::{Drain, GenerateParams, ScoreParams, Server, ServerConfig},
 };
 use latentllm::data::{CalibSet, Corpus};
 use latentllm::model::config::{mini_by_name, MINI_FAMILY, OPT_FAMILY};
@@ -77,7 +78,7 @@ USAGE:
                       [--artifacts DIR] [--out FILE.ltw]
   latentllm eval      --model opt-mini-m [--weights FILE.ltw]
                       [--corpus synthwiki] [--artifacts DIR]
-  latentllm serve     [--requests N] [--generate N]
+  latentllm serve     [--requests N] [--generate N] [--http ADDR]
                       [--policy cache_aware|prefer_latent|rr]
                       [--workers N] [--kv-mb N] [--no-sched]
                       [--sched-live N] [--sched-block T] [--sched-chunk T]
@@ -100,6 +101,13 @@ Serving: generate traffic runs under a continuous-batching scheduler
        --sched-chunk bounds prefill tokens per iteration, --kv-mb sets
        each variant's page-pool budget, and --no-sched falls back to
        sequential one-session-per-worker decode.
+HTTP:  serve --http ADDR (or [http] addr in the config) opens the
+       HTTP/1.1 front door: POST /v1/completions (\"stream\": true emits
+       tokens over chunked transfer as decode steps retire), POST
+       /v1/score, GET /healthz, GET /metrics (Prometheus text). serve
+       then blocks until POST /admin/shutdown, drains in-flight
+       requests, and exits; self-traffic defaults drop to
+       --requests 0 --generate 0.
 
 Methods (presets): plain asvd_hessian asvd_l1 asvd_l2 asvd_cov asvd_rootcov
                    latentllm latentllm_jointvo
@@ -384,7 +392,17 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
         None => latentllm::config::Config::default(),
     };
     let model = args.flag("model", &file_cfg.serve.model);
-    let n_requests = args.usize_flag("requests", 64);
+    // --http ADDR (bare --http picks an ephemeral localhost port) or
+    // the config's [http] addr turns the front door on; self-traffic
+    // then defaults to zero so the process just serves
+    let http_addr = match args.flags.get("http") {
+        Some(a) if a == "true" => "127.0.0.1:0".to_string(),
+        Some(a) => a.clone(),
+        None => file_cfg.http.addr.clone(),
+    };
+    let http_on = !http_addr.is_empty();
+    let n_requests =
+        args.usize_flag("requests", if http_on { 0 } else { 64 });
     let policy = match args.flag("policy", "").as_str() {
         "rr" | "round_robin" => Policy::RoundRobin,
         "prefer_latent" => Policy::PreferLatent,
@@ -480,19 +498,31 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     let corpus = Corpus::load(artifacts.join("corpora.ltw"), "synthwiki",
                               "test")?;
     let reqs = corpus.calibration(n_requests, file_cfg.serve.seq_len, 99);
-    let n_generate = args.usize_flag("generate", 8);
+    let n_generate =
+        args.usize_flag("generate", if http_on { 0 } else { 8 });
     let gen_prompts = corpus.calibration(n_generate, 16, 101);
+    // the HTTP front door shares the coordinator with the in-process
+    // self-traffic below (ids are server-minted, so they never collide)
+    let server = std::sync::Arc::new(server);
+    let http = if http_on {
+        let hcfg = HttpConfig { addr: http_addr,
+                                ..file_cfg.http.clone() };
+        let h = HttpServer::start(server.clone(), hcfg)?;
+        println!("http: listening on {}", h.local_addr());
+        Some(h)
+    } else {
+        None
+    };
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::with_capacity(n_requests);
-    for (i, tokens) in reqs.into_iter().enumerate() {
-        rxs.push(server.submit(ScoreRequest { id: i as u64, tokens })?);
+    for tokens in reqs {
+        rxs.push(server.submit_score(ScoreParams { tokens })?);
     }
     // decode traffic rides alongside the score batches: each request is
     // a full prefill+step session against the variant's KV budget
     let mut gen_rxs = Vec::with_capacity(n_generate);
     for (i, prompt) in gen_prompts.into_iter().enumerate() {
-        gen_rxs.push(server.submit_generate(GenerateRequest {
-            id: i as u64,
+        gen_rxs.push(server.submit_generate(GenerateParams {
             prompt,
             max_new: args.usize_flag("new", 16),
             temperature: 0.0,
@@ -502,7 +532,7 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     let mut ok = 0;
     for rx in rxs {
         match rx.recv() {
-            Ok(resp) if resp.error.is_none() => ok += 1,
+            Ok(resp) if resp.result.is_ok() => ok += 1,
             _ => {}
         }
     }
@@ -510,13 +540,22 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     let mut gen_evicted = 0;
     for rx in gen_rxs {
         match rx.recv() {
-            Ok(resp) if resp.error.is_none() => gen_ok += 1,
-            Ok(resp) if resp.evicted => gen_evicted += 1,
+            Ok(resp) if resp.result.is_ok() => gen_ok += 1,
+            Ok(resp) if resp.is_evicted() => gen_evicted += 1,
             _ => {}
         }
     }
     let dt = t0.elapsed();
-    let metrics = server.shutdown();
+    if let Some(h) = http {
+        println!("http: serving until POST /admin/shutdown");
+        h.wait();
+    }
+    let server = std::sync::Arc::try_unwrap(server).ok()
+        .context("http workers still hold the server")?;
+    let metrics = server.shutdown(Drain::Graceful);
+    if http_on {
+        println!("http: drained cleanly");
+    }
     println!("served {ok}/{n_requests} score requests in {:.2}s \
               ({:.1} req/s, failed={})",
              dt.as_secs_f64(), ok as f64 / dt.as_secs_f64(),

@@ -83,6 +83,14 @@ impl Value {
         write_value(&mut s, self, 0, true);
         s
     }
+
+    /// Single-line rendering — what the HTTP layer emits (streaming
+    /// events are newline-framed, so bodies must not contain newlines).
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        write_value(&mut s, self, 0, false);
+        s
+    }
 }
 
 impl From<f64> for Value {
@@ -389,6 +397,9 @@ mod tests {
         let text = v.to_string_pretty();
         let back = parse(&text).unwrap();
         assert_eq!(v, back);
+        let compact = v.to_string_compact();
+        assert!(!compact.contains('\n'), "compact output is one line");
+        assert_eq!(parse(&compact).unwrap(), v);
     }
 
     #[test]

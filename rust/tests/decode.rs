@@ -10,8 +10,8 @@ use latentllm::coordinator::batcher::BatcherConfig;
 use latentllm::coordinator::kvcache::{CacheKind, KvCacheManager};
 use latentllm::coordinator::router::{ModelVariant, Policy, Router};
 use latentllm::coordinator::scheduler::SchedulerConfig;
-use latentllm::coordinator::server::{GenerateRequest, ScoreRequest, Server,
-                                     ServerConfig};
+use latentllm::coordinator::server::{Drain, GenerateParams, ScoreParams,
+                                     ServeError, Server, ServerConfig};
 use latentllm::data::synth::{latent_demo_ranks, write_test_artifacts};
 use latentllm::eval::generate::{generate, GenerateOpts};
 use latentllm::model::config::MiniConfig;
@@ -268,55 +268,54 @@ fn server_decodes_alongside_score_batches() {
     let timeout = std::time::Duration::from_secs(60);
 
     let prompt = vec![3, 5, 7, 9];
-    let gen_rx = server.submit_generate(GenerateRequest {
-        id: 1, prompt: prompt.clone(), max_new: 6, temperature: 0.0,
-        seed: 0,
+    let gen_rx = server.submit_generate(GenerateParams {
+        prompt: prompt.clone(), max_new: 6, temperature: 0.0, seed: 0,
     }).expect("submit_generate");
     let score_rxs: Vec<_> = (0..5)
-        .map(|i| server.submit(ScoreRequest {
-            id: i, tokens: vec![1, 2, 3, 4],
+        .map(|_| server.submit_score(ScoreParams {
+            tokens: vec![1, 2, 3, 4],
         }).expect("submit"))
         .collect();
 
     let resp = gen_rx.recv_timeout(timeout).expect("gen response");
-    assert!(resp.error.is_none(), "decode failed: {:?}", resp.error);
-    assert_eq!(resp.tokens.len(), 6);
+    assert!(resp.error().is_none(), "decode failed: {:?}", resp.error());
+    assert_eq!(resp.tokens().len(), 6);
     assert_eq!(resp.variant, "dense");
     // the served continuation is exactly the eval-path greedy decode
     let want = generate(&engine, &format!("step_{}", TINY.name), &weights,
                         &[prompt.clone()], BATCH, SEQ, TINY.vocab,
                         &opts(6, 0.0, true)).unwrap();
-    assert_eq!(resp.tokens, want.sequences[0][prompt.len()..].to_vec());
+    assert_eq!(resp.tokens(), &want.sequences[0][prompt.len()..]);
     for rx in score_rxs {
         let r = rx.recv_timeout(timeout).expect("score response");
-        assert!(r.error.is_none());
-        assert!(r.nll.is_finite());
+        assert!(r.error().is_none());
+        assert!(r.nll().is_finite());
     }
 
-    // malformed decode requests get error responses, not dead workers
-    let bad = server.submit_generate(GenerateRequest {
-        id: 9, prompt: vec![], max_new: 4, temperature: 0.0, seed: 0,
+    // malformed decode requests get typed errors, not dead workers
+    let bad = server.submit_generate(GenerateParams {
+        prompt: vec![], max_new: 4, temperature: 0.0, seed: 0,
     }).unwrap();
     let r = bad.recv_timeout(timeout).expect("error response");
-    assert!(r.error.as_deref() == Some("empty prompt"), "{:?}", r.error);
-    let long = server.submit_generate(GenerateRequest {
-        id: 10, prompt: vec![1; SEQ + 1], max_new: 4, temperature: 0.0,
-        seed: 0,
+    assert!(matches!(r.result, Err(ServeError::Empty)), "{:?}", r.error());
+    let long = server.submit_generate(GenerateParams {
+        prompt: vec![1; SEQ + 1], max_new: 4, temperature: 0.0, seed: 0,
     }).unwrap();
     let r = long.recv_timeout(timeout).expect("error response");
-    assert!(r.error.is_some());
+    assert!(r.error().is_some());
     // a request that would overflow the model context mid-decode is
     // rejected before the prefill is paid for
-    let overshoot = server.submit_generate(GenerateRequest {
-        id: 11, prompt: vec![1, 2, 3, 4], max_new: SEQ, temperature: 0.0,
-        seed: 0,
+    let overshoot = server.submit_generate(GenerateParams {
+        prompt: vec![1, 2, 3, 4], max_new: SEQ, temperature: 0.0, seed: 0,
     }).unwrap();
     let r = overshoot.recv_timeout(timeout).expect("error response");
-    assert!(r.error.as_deref().unwrap_or("").contains("context holds"),
-            "{:?}", r.error);
-    assert!(!r.evicted);
+    assert!(matches!(r.result, Err(ServeError::TooLong { .. })),
+            "{:?}", r.error());
+    assert!(r.error().unwrap_or_default().contains("context holds"),
+            "{:?}", r.error());
+    assert!(!r.is_evicted());
 
-    let m = server.shutdown();
+    let m = server.shutdown(Drain::Graceful);
     assert_eq!(m.counter("gen_requests"), 4);
     assert_eq!(m.counter("gen_tokens"), 6);
     assert_eq!(m.counter("gen_evictions"), 0);
@@ -334,55 +333,54 @@ fn eviction_under_tight_budget_errors_one_lane_only() {
     let server = tiny_server(art.clone(), 8 * bpt, 1);
     let timeout = std::time::Duration::from_secs(60);
 
-    let rx = server.submit_generate(GenerateRequest {
-        id: 1, prompt: vec![1, 2, 3, 4], max_new: 20, temperature: 0.0,
-        seed: 0,
+    let rx = server.submit_generate(GenerateParams {
+        prompt: vec![1, 2, 3, 4], max_new: 20, temperature: 0.0, seed: 0,
     }).unwrap();
     let resp = rx.recv_timeout(timeout).expect("response");
-    assert!(resp.evicted, "budget exhaustion must evict: {:?}", resp.error);
-    assert!(resp.error.as_deref().unwrap_or("").contains("evicted"),
-            "{:?}", resp.error);
+    assert!(resp.is_evicted(),
+            "budget exhaustion must evict: {:?}", resp.error());
+    assert!(resp.error().unwrap_or_default().contains("evicted"),
+            "{:?}", resp.error());
 
     // the eviction returned every byte: a request needing the whole
     // budget must now succeed — no poisoned lane, no leaked reservation
-    let rx = server.submit_generate(GenerateRequest {
-        id: 2, prompt: vec![1, 2, 3, 4], max_new: 4, temperature: 0.0,
-        seed: 0,
+    let rx = server.submit_generate(GenerateParams {
+        prompt: vec![1, 2, 3, 4], max_new: 4, temperature: 0.0, seed: 0,
     }).unwrap();
     let resp = rx.recv_timeout(timeout).expect("response");
-    assert!(resp.error.is_none(),
-            "post-eviction decode failed: {:?}", resp.error);
-    assert_eq!(resp.tokens.len(), 4);
+    assert!(resp.error().is_none(),
+            "post-eviction decode failed: {:?}", resp.error());
+    assert_eq!(resp.tokens().len(), 4);
 
     // and score traffic on the same worker still flows
-    let rx = server.submit(ScoreRequest { id: 3, tokens: vec![2, 4, 6] })
+    let rx = server.submit_score(ScoreParams { tokens: vec![2, 4, 6] })
         .unwrap();
     let r = rx.recv_timeout(timeout).expect("score response");
-    assert!(r.error.is_none());
+    assert!(r.error().is_none());
 
-    let m = server.shutdown();
+    let m = server.shutdown(Drain::Graceful);
     assert_eq!(m.counter("gen_evictions"), 1);
     assert_eq!(m.counter("worker_0_evictions"), 1);
     std::fs::remove_dir_all(&art).ok();
 }
 
 /// Mixed greedy + sampled decode traffic with per-request seeds.
-fn sched_requests() -> Vec<GenerateRequest> {
+fn sched_requests() -> Vec<GenerateParams> {
     vec![
-        GenerateRequest { id: 0, prompt: vec![1, 2, 3], max_new: 8,
-                          temperature: 0.0, seed: 0 },
-        GenerateRequest { id: 1, prompt: vec![7, 11, 13, 17], max_new: 10,
-                          temperature: 0.8, seed: 21 },
-        GenerateRequest { id: 2, prompt: vec![40, 2], max_new: 6,
-                          temperature: 0.0, seed: 0 },
-        GenerateRequest { id: 3, prompt: vec![5, 9, 4, 33, 8], max_new: 9,
-                          temperature: 0.6, seed: 99 },
-        GenerateRequest { id: 4, prompt: vec![3, 3, 3], max_new: 7,
-                          temperature: 0.0, seed: 0 },
+        GenerateParams { prompt: vec![1, 2, 3], max_new: 8,
+                         temperature: 0.0, seed: 0 },
+        GenerateParams { prompt: vec![7, 11, 13, 17], max_new: 10,
+                         temperature: 0.8, seed: 21 },
+        GenerateParams { prompt: vec![40, 2], max_new: 6,
+                         temperature: 0.0, seed: 0 },
+        GenerateParams { prompt: vec![5, 9, 4, 33, 8], max_new: 9,
+                         temperature: 0.6, seed: 99 },
+        GenerateParams { prompt: vec![3, 3, 3], max_new: 7,
+                         temperature: 0.0, seed: 0 },
     ]
 }
 
-fn run_decodes(server: &Server, reqs: &[GenerateRequest])
+fn run_decodes(server: &Server, reqs: &[GenerateParams])
                -> Vec<(Vec<i32>, Option<String>, bool)> {
     let timeout = std::time::Duration::from_secs(120);
     let rxs: Vec<_> = reqs.iter()
@@ -391,7 +389,7 @@ fn run_decodes(server: &Server, reqs: &[GenerateRequest])
     rxs.into_iter()
         .map(|rx| {
             let r = rx.recv_timeout(timeout).expect("gen response");
-            (r.tokens, r.error, r.evicted)
+            (r.tokens().to_vec(), r.error(), r.is_evicted())
         })
         .collect()
 }
@@ -408,7 +406,7 @@ fn scheduler_decode_is_token_identical_to_sequential_sessions() {
         let sequential = tiny_server_with(art.clone(), 8 << 20, 1, None,
                                           variant);
         let want = run_decodes(&sequential, &reqs);
-        sequential.shutdown();
+        sequential.shutdown(Drain::Graceful);
         for (t, err, _) in &want {
             assert!(err.is_none(), "{variant} sequential failed: {err:?}");
             assert!(!t.is_empty());
@@ -419,7 +417,7 @@ fn scheduler_decode_is_token_identical_to_sequential_sessions() {
                                    prefill_chunk: 2 }),
             variant);
         let got = run_decodes(&sched, &reqs);
-        let m = sched.shutdown();
+        let m = sched.shutdown(Drain::Graceful);
         assert_eq!(got, want,
                    "{variant}: scheduler diverged from sequential");
         assert_eq!(m.counter("gen_requests"), reqs.len() as u64);
@@ -442,7 +440,7 @@ fn scheduler_preempts_requeues_and_stays_token_identical() {
     let reqs = sched_requests();
     let oracle = tiny_server(art.clone(), 8 << 20, 1);
     let want = run_decodes(&oracle, &reqs);
-    oracle.shutdown();
+    oracle.shutdown(Drain::Graceful);
     // dense bytes/token = 2·16·2B·2L = 128; 2-token blocks of 256 B.
     // 12 blocks = 24 tokens: each request needs ≤ 13 cached tokens
     // (prompt+max_new-1 ≤ 8 blocks), so any one fits alone but three
@@ -454,7 +452,7 @@ fn scheduler_preempts_requeues_and_stays_token_identical() {
                                prefill_chunk: 4 }),
         "dense");
     let got = run_decodes(&sched, &reqs);
-    let m = sched.shutdown();
+    let m = sched.shutdown(Drain::Graceful);
     assert_eq!(got, want,
                "preempt→requeue→resume must not change a single token");
     assert!(m.counter("gen_preemptions") >= 1,
@@ -479,30 +477,29 @@ fn scheduler_rejects_only_what_can_never_fit() {
                                   Some(sched_cfg), "dense");
     let timeout = std::time::Duration::from_secs(60);
     // needs 3 + 9 = 12 positions > 4-token pool: evicted-reject
-    let rx = server.submit_generate(GenerateRequest {
-        id: 1, prompt: vec![1, 2, 3], max_new: 10, temperature: 0.0,
-        seed: 0,
+    let rx = server.submit_generate(GenerateParams {
+        prompt: vec![1, 2, 3], max_new: 10, temperature: 0.0, seed: 0,
     }).unwrap();
     let r = rx.recv_timeout(timeout).expect("response");
-    assert!(r.evicted, "can-never-fit must reject as evicted: {:?}",
-            r.error);
-    assert!(r.error.as_deref().unwrap_or("").contains("never fit"),
-            "{:?}", r.error);
+    assert!(r.is_evicted(), "can-never-fit must reject as evicted: {:?}",
+            r.error());
+    assert!(r.error().unwrap_or_default().contains("never fit"),
+            "{:?}", r.error());
     // a request that fits exactly still completes
-    let rx = server.submit_generate(GenerateRequest {
-        id: 2, prompt: vec![1, 2], max_new: 3, temperature: 0.0, seed: 0,
+    let rx = server.submit_generate(GenerateParams {
+        prompt: vec![1, 2], max_new: 3, temperature: 0.0, seed: 0,
     }).unwrap();
     let r = rx.recv_timeout(timeout).expect("response");
-    assert!(r.error.is_none(), "{:?}", r.error);
-    assert_eq!(r.tokens.len(), 3);
+    assert!(r.error().is_none(), "{:?}", r.error());
+    assert_eq!(r.tokens().len(), 3);
     // empty prompts and positional-table overshoots error like the
     // sequential path
-    let rx = server.submit_generate(GenerateRequest {
-        id: 3, prompt: vec![], max_new: 2, temperature: 0.0, seed: 0,
+    let rx = server.submit_generate(GenerateParams {
+        prompt: vec![], max_new: 2, temperature: 0.0, seed: 0,
     }).unwrap();
     let r = rx.recv_timeout(timeout).expect("response");
-    assert_eq!(r.error.as_deref(), Some("empty prompt"));
-    let m = server.shutdown();
+    assert!(matches!(r.result, Err(ServeError::Empty)), "{:?}", r.error());
+    let m = server.shutdown(Drain::Graceful);
     assert_eq!(m.counter("gen_evictions"), 1);
     assert_eq!(m.counter("gen_tokens"), 3);
     std::fs::remove_dir_all(&art).ok();
@@ -548,25 +545,23 @@ fn scheduler_reroutes_off_a_pool_that_can_never_hold_it() {
     let timeout = std::time::Duration::from_secs(120);
     // needs 4 + 10 - 1 = 13 tokens = 7 two-token blocks: never fits the
     // 4-block pool, comfortably fits the 12-block one
-    let rx = server.submit_generate(GenerateRequest {
-        id: 1, prompt: vec![1, 2, 3, 4], max_new: 10, temperature: 0.0,
-        seed: 0,
+    let rx = server.submit_generate(GenerateParams {
+        prompt: vec![1, 2, 3, 4], max_new: 10, temperature: 0.0, seed: 0,
     }).unwrap();
     let r = rx.recv_timeout(timeout).expect("response");
-    assert!(r.error.is_none(),
-            "a pool that fits elsewhere must not reject: {:?}", r.error);
+    assert!(r.error().is_none(),
+            "a pool that fits elsewhere must not reject: {:?}", r.error());
     assert_eq!(r.variant, "big", "must complete on the fitting pool");
-    assert_eq!(r.tokens.len(), 10);
+    assert_eq!(r.tokens().len(), 10);
     // a request no pool can ever hold is still terminally rejected
     // (29 tokens: inside the positional table, beyond both pools)
-    let rx = server.submit_generate(GenerateRequest {
-        id: 2, prompt: vec![1, 2, 3, 4], max_new: 26, temperature: 0.0,
-        seed: 0,
+    let rx = server.submit_generate(GenerateParams {
+        prompt: vec![1, 2, 3, 4], max_new: 26, temperature: 0.0, seed: 0,
     }).unwrap();
     let r = rx.recv_timeout(timeout).expect("response");
-    assert!(r.evicted, "nowhere-fits must reject as evicted: {:?}",
-            r.error);
-    let m = server.shutdown();
+    assert!(r.is_evicted(), "nowhere-fits must reject as evicted: {:?}",
+            r.error());
+    let m = server.shutdown(Drain::Graceful);
     assert_eq!(m.counter("gen_evictions"), 1);
     std::fs::remove_dir_all(&art).ok();
 }

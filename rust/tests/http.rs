@@ -1,0 +1,473 @@
+//! HTTP front-door tests over synthesized artifacts and raw
+//! `std::net::TcpStream` clients: endpoint shapes, streamed-token
+//! equivalence with the in-process decode, the error-status taxonomy,
+//! Prometheus exposition, backpressure, and graceful drain under
+//! in-flight generates (the zero-lost-requests criterion).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use latentllm::coordinator::batcher::BatcherConfig;
+use latentllm::coordinator::http::{HttpConfig, HttpServer};
+use latentllm::coordinator::kvcache::{CacheKind, KvCacheManager};
+use latentllm::coordinator::router::{ModelVariant, Policy, Router};
+use latentllm::coordinator::scheduler::SchedulerConfig;
+use latentllm::coordinator::server::{Drain, GenerateParams, ServeError,
+                                     Server, ServerConfig};
+use latentllm::data::synth::write_test_artifacts;
+use latentllm::model::config::MiniConfig;
+use latentllm::model::Weights;
+use latentllm::util::json::{self, Value};
+
+const TINY: MiniConfig = MiniConfig {
+    name: "tiny", vocab: 48, d: 16, n_layers: 2, n_heads: 2,
+    d_i: 32, max_len: 32,
+};
+const SEQ: usize = 32;
+
+fn synth(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("latentllm_http_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    write_test_artifacts(&dir, &TINY, 77).unwrap();
+    dir
+}
+
+/// One dense tiny variant behind the coordinator; `sched` picks the
+/// decode mode (None = sequential one-session-per-worker).
+fn tiny_server(art: PathBuf, sched: Option<SchedulerConfig>)
+               -> Arc<Server> {
+    let block_tokens = sched.map(|s| s.block_tokens)
+        .unwrap_or(latentllm::coordinator::kvcache::DEFAULT_BLOCK_TOKENS);
+    let v = ModelVariant {
+        name: "dense".to_string(),
+        score_program: format!("score_{}", TINY.name),
+        step_program: format!("step_{}", TINY.name),
+        weights: Arc::new(Weights::load(
+            art.join(format!("model_{}.ltw", TINY.name))).unwrap()),
+        cache: KvCacheManager::with_block_tokens(
+            CacheKind::Dense { d: TINY.d }, TINY.n_layers, 2, 8 << 20,
+            block_tokens),
+    };
+    Arc::new(Server::start(
+        art,
+        Router::new(vec![v], Policy::RoundRobin),
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            policy: Policy::RoundRobin,
+            program_batch: 8,
+            seq_len: SEQ,
+            workers: 1,
+            sched,
+        })
+        .expect("server start"))
+}
+
+fn http_cfg() -> HttpConfig {
+    HttpConfig { addr: "127.0.0.1:0".to_string(), ..HttpConfig::default() }
+}
+
+/// A parsed response off the wire: status, headers, de-chunked body.
+struct Reply {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl Reply {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn json(&self) -> Value {
+        json::parse(&self.body).expect("response body is JSON")
+    }
+
+    /// `data:` payloads of a `text/event-stream` body, `[DONE]`
+    /// included.
+    fn events(&self) -> Vec<String> {
+        self.body.split("\n\n")
+            .filter_map(|ev| ev.trim().strip_prefix("data: "))
+            .map(|s| s.to_string())
+            .collect()
+    }
+}
+
+fn dechunk(raw: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut pos = 0;
+    loop {
+        let Some(nl) = raw[pos..].windows(2).position(|w| w == b"\r\n")
+        else {
+            panic!("chunked body missing size line");
+        };
+        let size = usize::from_str_radix(
+            std::str::from_utf8(&raw[pos..pos + nl]).unwrap().trim(), 16)
+            .expect("chunk size is hex");
+        pos += nl + 2;
+        if size == 0 {
+            return out;
+        }
+        out.extend_from_slice(&raw[pos..pos + size]);
+        pos += size + 2; // skip the chunk's trailing CRLF
+    }
+}
+
+/// Send one request with `Connection: close` and read the connection to
+/// EOF. De-chunks `Transfer-Encoding: chunked` bodies.
+fn roundtrip(addr: SocketAddr, method: &str, path: &str, body: &str)
+             -> Reply {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    write!(s, "{method} {path} HTTP/1.1\r\nHost: test\r\n\
+               Connection: close\r\nContent-Length: {}\r\n\r\n{body}",
+           body.len())
+        .expect("write request");
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).expect("read response");
+    parse_reply(&raw)
+}
+
+fn parse_reply(raw: &[u8]) -> Reply {
+    let split = raw.windows(4).position(|w| w == b"\r\n\r\n")
+        .expect("response has a header/body split");
+    let head = std::str::from_utf8(&raw[..split]).expect("UTF-8 head");
+    let mut lines = head.split("\r\n");
+    let status: u16 = lines.next().expect("status line")
+        .split_whitespace().nth(1).expect("status code")
+        .parse().expect("numeric status");
+    let headers: Vec<(String, String)> = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+        .collect();
+    let chunked = headers.iter().any(
+        |(k, v)| k.eq_ignore_ascii_case("transfer-encoding")
+            && v.eq_ignore_ascii_case("chunked"));
+    let body = if chunked {
+        dechunk(&raw[split + 4..])
+    } else {
+        raw[split + 4..].to_vec()
+    };
+    Reply { status, headers,
+            body: String::from_utf8(body).expect("UTF-8 body") }
+}
+
+fn completion_body(prompt: &[i32], max_new: usize, temperature: f64,
+                   seed: u64, stream: bool) -> String {
+    let toks: Vec<String> =
+        prompt.iter().map(|t| t.to_string()).collect();
+    format!("{{\"prompt\": [{}], \"max_new\": {max_new}, \
+             \"temperature\": {temperature}, \"seed\": {seed}, \
+             \"stream\": {stream}}}", toks.join(", "))
+}
+
+/// Token list out of a completion reply's `"tokens"` array.
+fn tokens_of(v: &Value) -> Vec<i32> {
+    v.get("tokens").and_then(|t| t.as_arr()).expect("tokens array")
+        .iter()
+        .map(|t| t.as_f64().expect("numeric token") as i32)
+        .collect()
+}
+
+#[test]
+fn score_completion_and_health_roundtrip() {
+    let art = synth("roundtrip");
+    let server = tiny_server(art.clone(), None);
+    let http = HttpServer::start(server.clone(), http_cfg()).unwrap();
+    let addr = http.local_addr();
+
+    let health = roundtrip(addr, "GET", "/healthz", "");
+    assert_eq!(health.status, 200);
+    assert_eq!(health.json().get("status").unwrap().as_str(),
+               Some("ok"));
+
+    let score = roundtrip(addr, "POST", "/v1/score",
+                          "{\"tokens\": [1, 2, 3, 5, 7, 11]}");
+    assert_eq!(score.status, 200, "score body: {}", score.body);
+    let v = score.json();
+    assert_eq!(v.get("object").unwrap().as_str(), Some("score"));
+    assert!(v.get("nll").unwrap().as_f64().unwrap().is_finite());
+    assert_eq!(v.get("variant").unwrap().as_str(), Some("dense"));
+
+    // non-streamed completion matches the in-process typed API exactly
+    let prompt = [1, 2, 3];
+    let params = GenerateParams {
+        prompt: prompt.to_vec(), max_new: 8, temperature: 0.0, seed: 0,
+    };
+    let want = server.submit_generate(params).unwrap()
+        .recv_timeout(Duration::from_secs(60)).unwrap()
+        .into_tokens();
+    assert_eq!(want.len(), 8);
+    let comp = roundtrip(addr, "POST", "/v1/completions",
+                         &completion_body(&prompt, 8, 0.0, 0, false));
+    assert_eq!(comp.status, 200, "completion body: {}", comp.body);
+    let v = comp.json();
+    assert_eq!(v.get("object").unwrap().as_str(), Some("completion"));
+    assert_eq!(tokens_of(&v), want);
+
+    http.shutdown();
+    let server = Arc::try_unwrap(server).ok().expect("sole owner");
+    let m = server.shutdown(Drain::Graceful);
+    assert!(m.counter("http_requests") >= 3);
+    assert_eq!(m.counter("http_5xx"), 0);
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn streamed_tokens_match_sequential_reference() {
+    let art = synth("stream");
+    let server = tiny_server(art.clone(), None);
+    let http = HttpServer::start(server.clone(), http_cfg()).unwrap();
+    let addr = http.local_addr();
+
+    // greedy and temperature-sampled; both are seeded and must stream
+    // the exact token sequence the in-process sequential decode yields
+    for (temperature, seed) in [(0.0, 0u64), (0.8, 17)] {
+        let prompt = [7, 11, 13, 17];
+        let params = GenerateParams {
+            prompt: prompt.to_vec(), max_new: 10, temperature, seed,
+        };
+        let want = server.submit_generate(params).unwrap()
+            .recv_timeout(Duration::from_secs(60)).unwrap()
+            .into_tokens();
+        assert_eq!(want.len(), 10);
+
+        let reply = roundtrip(
+            addr, "POST", "/v1/completions",
+            &completion_body(&prompt, 10, temperature, seed, true));
+        assert_eq!(reply.status, 200);
+        assert_eq!(reply.header("transfer-encoding"), Some("chunked"));
+        let events = reply.events();
+        assert_eq!(events.last().map(|s| s.as_str()), Some("[DONE]"));
+        let mut streamed = Vec::new();
+        let mut done = None;
+        for ev in &events[..events.len() - 1] {
+            let v = json::parse(ev).expect("event JSON");
+            if let Some(t) = v.get("token").and_then(|t| t.as_f64()) {
+                streamed.push(t as i32);
+            } else {
+                done = Some(v);
+            }
+        }
+        assert_eq!(streamed, want,
+                   "streamed tokens diverged at temperature \
+                    {temperature}");
+        let done = done.expect("terminal done event");
+        assert!(matches!(done.get("done"), Some(Value::Bool(true))));
+        assert!(done.get("error").is_none(),
+                "terminal event carried an error: {}",
+                done.to_string_compact());
+        assert_eq!(done.get("count").unwrap().as_usize(), Some(10));
+    }
+
+    http.shutdown();
+    let server = Arc::try_unwrap(server).ok().expect("sole owner");
+    server.shutdown(Drain::Graceful);
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn error_statuses_and_backpressure() {
+    let art = synth("errors");
+    let server = tiny_server(art.clone(), None);
+    let http = HttpServer::start(server.clone(), http_cfg()).unwrap();
+    let addr = http.local_addr();
+
+    let r = roundtrip(addr, "POST", "/v1/score", "{not json");
+    assert_eq!(r.status, 400);
+    let v = r.json();
+    assert_eq!(v.get("error").unwrap().get("type").unwrap().as_str(),
+               Some("bad_request"));
+
+    let r = roundtrip(addr, "POST", "/v1/completions",
+                      "{\"max_new\": 4}");
+    assert_eq!(r.status, 400, "missing prompt must 400");
+
+    let r = roundtrip(addr, "POST", "/v1/completions",
+                      &completion_body(&[], 4, 0.0, 0, false));
+    assert_eq!(r.status, 400, "empty prompt must 400");
+    assert_eq!(r.json().get("error").unwrap().get("type").unwrap()
+                   .as_str(),
+               Some("empty"));
+
+    // 16 prompt tokens + 32 new needs 47 positions in a 32-wide window
+    let long: Vec<i32> = (0..16).collect();
+    let r = roundtrip(addr, "POST", "/v1/completions",
+                      &completion_body(&long, 32, 0.0, 0, false));
+    assert_eq!(r.status, 400, "over-long request must 400: {}", r.body);
+    assert_eq!(r.json().get("error").unwrap().get("type").unwrap()
+                   .as_str(),
+               Some("too_long"));
+
+    let r = roundtrip(addr, "GET", "/v1/nope", "");
+    assert_eq!(r.status, 404);
+
+    // a zero queue-depth listener sheds every completion with 429
+    let shed = HttpServer::start(server.clone(), HttpConfig {
+        addr: "127.0.0.1:0".to_string(),
+        max_queue_depth: 0,
+        retry_after_secs: 7,
+        ..HttpConfig::default()
+    }).unwrap();
+    let r = roundtrip(shed.local_addr(), "POST", "/v1/completions",
+                      &completion_body(&[1, 2], 4, 0.0, 0, false));
+    assert_eq!(r.status, 429);
+    assert_eq!(r.header("retry-after"), Some("7"));
+    assert_eq!(r.json().get("error").unwrap().get("type").unwrap()
+                   .as_str(),
+               Some("backpressure"));
+    shed.shutdown();
+
+    http.shutdown();
+    let server = Arc::try_unwrap(server).ok().expect("sole owner");
+    let m = server.shutdown(Drain::Graceful);
+    assert!(m.counter("http_4xx") >= 5);
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn metrics_render_as_prometheus_text() {
+    let art = synth("metrics");
+    let server = tiny_server(art.clone(), None);
+    let http = HttpServer::start(server.clone(), http_cfg()).unwrap();
+    let addr = http.local_addr();
+
+    // traffic first, so counters/gauges/latencies all have samples
+    let r = roundtrip(addr, "POST", "/v1/score",
+                      "{\"tokens\": [3, 1, 4, 1, 5]}");
+    assert_eq!(r.status, 200);
+    let r = roundtrip(addr, "POST", "/v1/completions",
+                      &completion_body(&[2, 3], 4, 0.0, 0, false));
+    assert_eq!(r.status, 200);
+
+    let m = roundtrip(addr, "GET", "/metrics", "");
+    assert_eq!(m.status, 200);
+    assert!(m.header("content-type").unwrap()
+                .starts_with("text/plain"));
+    let mut samples = 0;
+    for line in m.body.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        // every sample line is `name[{labels}] value`
+        let (name, value) = line.rsplit_once(' ')
+            .unwrap_or_else(|| panic!("unparseable line {line:?}"));
+        assert!(name.starts_with("latentllm_"),
+                "unprefixed metric {line:?}");
+        assert!(value.parse::<f64>().is_ok(),
+                "non-numeric value in {line:?}");
+        samples += 1;
+    }
+    assert!(samples >= 5, "suspiciously few samples:\n{}", m.body);
+    for want in ["latentllm_requests_total", "latentllm_http_requests_total",
+                 "latentllm_gen_queue_depth",
+                 "latentllm_request_us{quantile=\"0.5\"}"] {
+        assert!(m.body.contains(want), "missing {want}:\n{}", m.body);
+    }
+
+    http.shutdown();
+    let server = Arc::try_unwrap(server).ok().expect("sole owner");
+    server.shutdown(Drain::Graceful);
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn graceful_drain_loses_no_inflight_generates() {
+    let art = synth("drain");
+    // continuous batching so the two streams interleave on one worker
+    let server = tiny_server(art.clone(), Some(SchedulerConfig {
+        max_live: 4, block_tokens: 2, prefill_chunk: 8,
+    }));
+    let http = HttpServer::start(server.clone(), HttpConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 4, // streams + the shutdown request, concurrently
+        ..HttpConfig::default()
+    }).unwrap();
+    let addr = http.local_addr();
+
+    // open two streaming completions, then request shutdown while the
+    // decode loop is still emitting tokens
+    let mut streams = Vec::new();
+    for i in 0..2 {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let body = completion_body(&[1 + i, 2, 3], 16, 0.0, i as u64,
+                                   true);
+        write!(s, "POST /v1/completions HTTP/1.1\r\nHost: t\r\n\
+                   Connection: close\r\nContent-Length: {}\r\n\r\n{body}",
+               body.len()).unwrap();
+        streams.push(s);
+    }
+    std::thread::sleep(Duration::from_millis(50));
+    let r = roundtrip(addr, "POST", "/admin/shutdown", "");
+    assert_eq!(r.status, 200);
+    assert_eq!(r.json().get("status").unwrap().as_str(),
+               Some("draining"));
+    assert!(http.shutdown_requested());
+
+    // both in-flight streams must still complete with every token
+    for mut s in streams {
+        let mut raw = Vec::new();
+        s.read_to_end(&mut raw).expect("stream read");
+        let reply = parse_reply(&raw);
+        assert_eq!(reply.status, 200);
+        let events = reply.events();
+        assert_eq!(events.last().map(|e| e.as_str()), Some("[DONE]"));
+        let toks = events.iter()
+            .filter(|e| e.contains("\"token\""))
+            .count();
+        assert_eq!(toks, 16, "drained stream lost tokens: {:?}", events);
+        let done = json::parse(&events[events.len() - 2]).unwrap();
+        assert!(done.get("error").is_none(),
+                "in-flight generate failed during drain: {}",
+                done.to_string_compact());
+        assert_eq!(done.get("count").unwrap().as_usize(), Some(16));
+    }
+
+    http.wait(); // returns immediately: shutdown already requested
+    let server = Arc::try_unwrap(server).ok().expect("sole owner");
+    let m = server.shutdown(Drain::Graceful);
+    assert_eq!(m.counter("gen_requests"), 2);
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn drain_now_answers_every_queued_request() {
+    let art = synth("now");
+    let server = tiny_server(art.clone(), None);
+    let server = Arc::try_unwrap(server).ok().expect("sole owner");
+    let mut handles = Vec::new();
+    for i in 0..6 {
+        handles.push(server.submit_generate(GenerateParams {
+            prompt: vec![1 + i, 2, 3],
+            max_new: 12,
+            temperature: 0.0,
+            seed: i as u64,
+        }).unwrap());
+    }
+    server.shutdown(Drain::Now);
+    let mut ok = 0;
+    let mut rejected = 0;
+    for h in handles {
+        let resp = h.recv_timeout(Duration::from_secs(60))
+            .expect("every handle answers even under Drain::Now");
+        match resp.result {
+            Ok(_) => ok += 1,
+            Err(ServeError::Rejected { .. }) => rejected += 1,
+            Err(e) => panic!("unexpected error under Drain::Now: {e}"),
+        }
+    }
+    assert_eq!(ok + rejected, 6);
+    assert!(rejected >= 1,
+            "immediate hard stop should shed at least one queued \
+             request (ok={ok})");
+    std::fs::remove_dir_all(&art).ok();
+}

@@ -139,7 +139,7 @@ fn serving_stack_end_to_end() {
     use latentllm::coordinator::batcher::BatcherConfig;
     use latentllm::coordinator::kvcache::{CacheKind, KvCacheManager};
     use latentllm::coordinator::router::{ModelVariant, Policy, Router};
-    use latentllm::coordinator::server::{ScoreRequest, Server,
+    use latentllm::coordinator::server::{Drain, ScoreParams, Server,
                                          ServerConfig};
     let Some(art) = artifacts() else { return };
     let model = "opt-mini-s";
@@ -168,20 +168,19 @@ fn serving_stack_end_to_end() {
                                })
         .expect("server start");
     let reqs = corpus.calibration(24, 128, 5);
-    let rxs: Vec<_> = reqs.into_iter().enumerate()
-        .map(|(i, tokens)| server.submit(ScoreRequest { id: i as u64,
-                                                        tokens })
+    let rxs: Vec<_> = reqs.into_iter()
+        .map(|tokens| server.submit_score(ScoreParams { tokens })
             .expect("submit"))
         .collect();
     let mut got = 0;
     for rx in rxs {
         let resp = rx.recv_timeout(std::time::Duration::from_secs(120))
             .expect("response");
-        assert!(resp.nll.is_finite());
+        assert!(resp.nll().is_finite());
         got += 1;
     }
     assert_eq!(got, 24);
-    let m = server.shutdown();
+    let m = server.shutdown(Drain::Graceful);
     assert_eq!(m.counter("requests"), 24);
     assert!(m.counter("batches") >= 3);
     assert_eq!(m.counter("batch_errors"), 0);

@@ -9,7 +9,8 @@ use latentllm::compress::pipeline::tests_support::random_weights;
 use latentllm::coordinator::batcher::BatcherConfig;
 use latentllm::coordinator::kvcache::{CacheKind, KvCacheManager};
 use latentllm::coordinator::router::{ModelVariant, Policy, Router};
-use latentllm::coordinator::server::{ScoreRequest, Server, ServerConfig};
+use latentllm::coordinator::server::{Drain, ScoreParams, Server,
+                                     ServerConfig};
 use latentllm::data::Corpus;
 use latentllm::eval;
 use latentllm::model::config::MiniConfig;
@@ -248,17 +249,16 @@ fn server_pads_short_requests_through_batcher() {
         .map(|i| (0..(3 + i % 4)).map(|j| ((i * 5 + j) % 40) as i32)
             .collect())
         .collect();
-    let rxs: Vec<_> = reqs.into_iter().enumerate()
-        .map(|(i, tokens)| server.submit(ScoreRequest { id: i as u64,
-                                                        tokens })
+    let rxs: Vec<_> = reqs.into_iter()
+        .map(|tokens| server.submit_score(ScoreParams { tokens })
             .expect("submit"))
         .collect();
     for rx in rxs {
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60))
             .expect("response");
-        assert!(resp.nll.is_finite(), "padded request must score");
+        assert!(resp.nll().is_finite(), "padded request must score");
     }
-    let m = server.shutdown();
+    let m = server.shutdown(Drain::Graceful);
     assert_eq!(m.counter("requests"), 7);
     assert_eq!(m.counter("batch_errors"), 0);
     assert!(m.counter("batches") >= 3, "max_batch=3 forces ≥3 flushes");
@@ -290,19 +290,18 @@ fn overflow_flush_splits_instead_of_nan() {
         .expect("server start");
     // submit 2×BATCH requests quickly so one flush exceeds program_batch
     let rxs: Vec<_> = (0..2 * BATCH)
-        .map(|i| server.submit(ScoreRequest {
-            id: i as u64,
+        .map(|i| server.submit_score(ScoreParams {
             tokens: (0..SEQ).map(|j| ((i * 7 + j) % 40) as i32).collect(),
         }).expect("submit"))
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60))
             .expect("response");
-        assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
-        assert!(resp.nll.is_finite(),
+        assert!(resp.error().is_none(), "request {i}: {:?}", resp.error());
+        assert!(resp.nll().is_finite(),
                 "request {i} got NaN — overflow entries must be scored");
     }
-    let m = server.shutdown();
+    let m = server.shutdown(Drain::Graceful);
     assert_eq!(m.counter("requests"), 2 * BATCH as u64);
     assert_eq!(m.counter("batch_errors"), 0);
     assert!(m.counter("batch_overflow") >= 1,
@@ -335,29 +334,28 @@ fn invalid_requests_get_error_responses_not_a_dead_worker() {
         .expect("server start");
     let timeout = std::time::Duration::from_secs(60);
 
-    let empty = server.submit(ScoreRequest { id: 0, tokens: vec![] })
+    let empty = server.submit_score(ScoreParams { tokens: vec![] })
         .expect("submit");
     let resp = empty.recv_timeout(timeout).expect("error response");
-    assert!(resp.error.is_some(), "empty request must carry an error");
-    assert!(resp.nll.is_nan());
+    assert!(resp.error().is_some(), "empty request must carry an error");
+    assert!(resp.nll().is_nan());
 
-    let too_long = server.submit(ScoreRequest {
-        id: 1,
+    let too_long = server.submit_score(ScoreParams {
         tokens: vec![1; SEQ + 5],
     }).expect("submit");
     let resp = too_long.recv_timeout(timeout).expect("error response");
-    assert!(resp.error.is_some(), "over-long request must carry an error");
+    assert!(resp.error().is_some(),
+            "over-long request must carry an error");
 
     // the worker must still be alive and scoring
-    let ok = server.submit(ScoreRequest {
-        id: 2,
+    let ok = server.submit_score(ScoreParams {
         tokens: vec![3, 5, 7],
     }).expect("submit");
     let resp = ok.recv_timeout(timeout).expect("worker survived");
-    assert!(resp.error.is_none());
-    assert!(resp.nll.is_finite());
+    assert!(resp.error().is_none());
+    assert!(resp.nll().is_finite());
 
-    let m = server.shutdown();
+    let m = server.shutdown(Drain::Graceful);
     assert_eq!(m.counter("request_errors"), 2);
     assert_eq!(m.counter("batch_errors"), 0);
     std::fs::remove_dir_all(&art).ok();
@@ -393,19 +391,18 @@ fn failed_batch_execution_replies_with_errors() {
         })
         .expect("server start (engine init itself is fine)");
     let rxs: Vec<_> = (0..3u64)
-        .map(|i| server.submit(ScoreRequest {
-            id: i,
+        .map(|_| server.submit_score(ScoreParams {
             tokens: vec![1, 2, 3],
         }).expect("submit"))
         .collect();
     for rx in rxs {
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60))
             .expect("error response, not a dropped channel");
-        assert!(resp.error.is_some());
-        assert!(resp.error.unwrap().contains("batch execution failed"));
-        assert!(resp.nll.is_nan());
+        assert!(resp.error().is_some());
+        assert!(resp.error().unwrap().contains("batch execution failed"));
+        assert!(resp.nll().is_nan());
     }
-    let m = server.shutdown();
+    let m = server.shutdown(Drain::Graceful);
     assert!(m.counter("batch_errors") >= 1);
     assert_eq!(m.counter("batches"), 0, "nothing actually executed");
     std::fs::remove_dir_all(&art).ok();
