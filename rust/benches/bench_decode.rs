@@ -1,27 +1,55 @@
 //! Decode-path bench: incremental KV-cached sessions versus the
-//! full-window recompute reference, plus the paper's benefit (ii) —
-//! dense vs latent cache capacity at a matched byte budget.
+//! full-window recompute reference, the execution-layout sweep
+//! (f64 / f32 / int8 weights through the same decode sessions), and the
+//! paper's benefit (ii) — dense vs latent cache capacity at a matched
+//! byte budget.
 //!
 //! The acceptance story: recompute re-executes the whole [1, T] window
 //! per emitted token (O(T²·d²) total), so its per-token cost grows with
 //! context length; a session reads prior K/V from the cache (O(T·d² +
 //! T²·d) total), so its per-token cost stays ~flat until attention
-//! itself dominates. Fully offline — artifacts are synthesized into a
-//! tempdir.
+//! itself dominates. The layout sweep then holds the session machinery
+//! fixed and swaps the weight kernels: the blocked f32 panels and the
+//! fused-dequant int8 path against the bit-exact f64 reference.
+//!
+//! Machine-readable results land in BENCH_DECODE.json (override the
+//! path with BENCH_DECODE_JSON): ms/token + tok/s per layout × path ×
+//! T ∈ {32, 64, 128}, int8-vs-f64 speedups, and the perplexity drift
+//! each layout costs on the dense scoring program.
 //!
 //! Run: cargo bench --bench bench_decode
 
 use latentllm::coordinator::kvcache::{CacheKind, KvCacheManager};
 use latentllm::data::synth::{latent_demo_ranks, write_test_artifacts};
+use latentllm::data::Corpus;
 use latentllm::eval::generate::{generate, GenerateOpts};
+use latentllm::eval::perplexity;
 use latentllm::model::config::MiniConfig;
 use latentllm::model::Weights;
 use latentllm::runtime::Engine;
+use latentllm::util::json::Value;
+use latentllm::Layout;
 
+// wide enough that per-token matmul work dominates session bookkeeping
+// (the layout kernels target the matmul side; a toy d would measure
+// overhead, not kernels)
 const BENCH_CFG: MiniConfig = MiniConfig {
-    name: "bench-decode", vocab: 96, d: 48, n_layers: 2, n_heads: 4,
-    d_i: 96, max_len: 256,
+    name: "bench-decode", vocab: 256, d: 96, n_layers: 2, n_heads: 4,
+    d_i: 192, max_len: 256,
 };
+
+const LAYOUTS: [Layout; 3] =
+    [Layout::DenseF64, Layout::PackedF32, Layout::QuantI8];
+const TS: [usize; 3] = [32, 64, 128];
+const QUANT_CHUNK: usize = 64;
+
+struct Run {
+    path: &'static str,
+    layout: Layout,
+    max_new: usize,
+    ms_per_tok: f64,
+    tok_s: f64,
+}
 
 fn main() {
     let dir = std::env::temp_dir()
@@ -43,7 +71,7 @@ fn main() {
     for (label, program, weights) in
         [("dense ", format!("step_{}", BENCH_CFG.name), &dense_w),
          ("latent", format!("latent_step_{tag}"), &latent_w)] {
-        for max_new in [32usize, 64, 128] {
+        for max_new in TS {
             // the recompute window is sized to the context it must hold,
             // so its cost reflects the actual O(T²) re-execution
             let window = 8 + max_new;
@@ -67,6 +95,112 @@ fn main() {
                      inc.peak_cache_elements);
         }
     }
+
+    println!("== execution layouts: f64 / f32 / int8 decode kernels ==");
+    let mut runs: Vec<Run> = Vec::new();
+    for (path, program, base) in
+        [("dense", format!("step_{}", BENCH_CFG.name), &dense_w),
+         ("latent", format!("latent_step_{tag}"), &latent_w)] {
+        for layout in LAYOUTS {
+            let weights = if layout == Layout::DenseF64 {
+                (*base).clone()
+            } else {
+                base.repack(layout, QUANT_CHUNK).expect("repack")
+            };
+            // warm up: builds + packs the model once so timing below
+            // measures steady-state decode, not load-time packing
+            let warm = GenerateOpts {
+                max_new: 4, temperature: 0.0, seed: 1, use_cache: true,
+            };
+            generate(&engine, &program, &weights, &prompt, 1, 16,
+                     BENCH_CFG.vocab, &warm).expect("warmup");
+            for max_new in TS {
+                let opts = GenerateOpts {
+                    max_new, temperature: 0.0, seed: 1, use_cache: true,
+                };
+                let res = generate(&engine, &program, &weights, &prompt, 1,
+                                   8 + max_new, BENCH_CFG.vocab, &opts)
+                    .expect("generate");
+                let ms = res.seconds * 1e3 / max_new as f64;
+                println!("  {path:<6} {:<5} T={max_new:>3}: \
+                          {ms:>7.3} ms/tok  {:>8.1} tok/s",
+                         layout.name(), res.tokens_per_sec);
+                runs.push(Run { path, layout, max_new,
+                                ms_per_tok: ms,
+                                tok_s: res.tokens_per_sec });
+            }
+        }
+    }
+    // speedup vs the f64 reference at the longest context
+    let tok_s = |path: &str, layout: Layout| runs.iter()
+        .find(|r| r.path == path && r.layout == layout
+              && r.max_new == TS[TS.len() - 1])
+        .map(|r| r.tok_s).unwrap_or(f64::NAN);
+    let mut speedups: Vec<(&str, Value)> = Vec::new();
+    for path in ["dense", "latent"] {
+        let base = tok_s(path, Layout::DenseF64);
+        for layout in [Layout::PackedF32, Layout::QuantI8] {
+            let s = tok_s(path, layout) / base.max(1e-12);
+            println!("  {path} {} speedup vs f64 @ T={}: {s:.2}x",
+                     layout.name(), TS[TS.len() - 1]);
+        }
+        speedups.push((path, Value::obj(vec![
+            ("f32", Value::Num(tok_s(path, Layout::PackedF32)
+                               / base.max(1e-12))),
+            ("int8", Value::Num(tok_s(path, Layout::QuantI8)
+                                / base.max(1e-12))),
+        ])));
+    }
+
+    // accuracy side of the tradeoff: perplexity through the dense
+    // scoring program per layout
+    let corpus = Corpus::load(dir.join("corpora.ltw"), "synthwiki", "test")
+        .expect("corpus");
+    let score = format!("score_{}", BENCH_CFG.name);
+    let mut ppls: Vec<(&str, f64)> = Vec::new();
+    for layout in LAYOUTS {
+        let weights = if layout == Layout::DenseF64 {
+            dense_w.clone()
+        } else {
+            dense_w.repack(layout, QUANT_CHUNK).expect("repack")
+        };
+        let r = perplexity(&engine, &score, &weights, &corpus, 4, 96, 3)
+            .expect("perplexity");
+        println!("  ppl({}) = {:.4}", layout.name(), r.ppl);
+        ppls.push((layout.name(), r.ppl));
+    }
+    let ppl_f64 = ppls[0].1;
+    for &(name, p) in &ppls[1..] {
+        println!("  ppl drift {name} vs f64: {:+.5}", p - ppl_f64);
+    }
+
+    let json = Value::obj(vec![
+        ("model", Value::obj(vec![
+            ("name", Value::Str(BENCH_CFG.name.to_string())),
+            ("d", Value::Num(BENCH_CFG.d as f64)),
+            ("n_layers", Value::Num(BENCH_CFG.n_layers as f64)),
+            ("vocab", Value::Num(BENCH_CFG.vocab as f64)),
+        ])),
+        ("quant_chunk", Value::Num(QUANT_CHUNK as f64)),
+        ("results", Value::Arr(runs.iter().map(|r| Value::obj(vec![
+            ("path", Value::Str(r.path.to_string())),
+            ("layout", Value::Str(r.layout.name().to_string())),
+            ("t", Value::Num(r.max_new as f64)),
+            ("ms_per_tok", Value::Num(r.ms_per_tok)),
+            ("tok_s", Value::Num(r.tok_s)),
+        ])).collect())),
+        ("speedup_vs_f64", Value::obj(speedups)),
+        ("ppl", Value::Obj(ppls.iter()
+            .map(|&(n, p)| (n.to_string(), Value::Num(p)))
+            .collect())),
+        ("ppl_drift", Value::Obj(ppls[1..].iter()
+            .map(|&(n, p)| (n.to_string(), Value::Num(p - ppl_f64)))
+            .collect())),
+    ]);
+    let out = std::env::var("BENCH_DECODE_JSON")
+        .unwrap_or_else(|_| "BENCH_DECODE.json".to_string());
+    std::fs::write(&out, json.to_string_pretty()).expect("write json");
+    println!("wrote {out}");
 
     println!("== cache capacity at a matched budget (benefit ii) ==");
     let budget = 1 << 20;

@@ -32,7 +32,7 @@ use crate::data::CalibSet;
 use crate::model::{MiniConfig, Weights};
 use crate::util::pool::Pool;
 use crate::util::toml::{self, Table, Value};
-use crate::Matrix;
+use crate::{Matrix, PackedMat};
 
 // ---------------------------------------------------------------------------
 // per-layer report / output containers
@@ -71,6 +71,10 @@ impl Report {
 pub struct LayerOut {
     pub rep: LayerReport,
     pub mats: Vec<(String, Matrix)>,
+    /// Weights already in their execution layout (the 8-bit quant
+    /// post-stage emits these instead of dequantized f64 simulations);
+    /// the merge stores them natively via [`Weights::set_packed`].
+    pub packed: Vec<(String, PackedMat)>,
     pub biases: Vec<(String, Vec<f64>)>,
 }
 
@@ -79,6 +83,7 @@ impl LayerOut {
         LayerOut {
             rep: LayerReport { layer, ..Default::default() },
             mats: Vec::new(),
+            packed: Vec::new(),
             biases: Vec::new(),
         }
     }
@@ -87,6 +92,7 @@ impl LayerOut {
     /// QK/UD diagnostics come from whichever stage produced them).
     pub fn absorb(&mut self, other: LayerOut) {
         self.mats.extend(other.mats);
+        self.packed.extend(other.packed);
         self.biases.extend(other.biases);
         self.rep.params += other.rep.params;
         if other.rep.qk_rank != 0 {
@@ -629,8 +635,22 @@ impl PostOp {
                 out.rep.params += added;
             }
             PostOp::Quant { bits, chunk } => {
-                for (_, m) in out.mats.iter_mut() {
-                    *m = quant::quantize_uniform(m, *bits, *chunk);
+                if *bits == 8 {
+                    // int8 maps onto the execution layout exactly (same
+                    // Eq 242 grid, i8 codes + per-chunk affine params), so
+                    // emit `QuantI8` weights directly instead of
+                    // round-tripping through a dequantized f64 copy.
+                    // Terminal for these tensors: run quant last.
+                    for (name, m) in out.mats.drain(..) {
+                        out.packed.push(
+                            (name, PackedMat::quantize_i8(&m, *chunk)));
+                    }
+                } else {
+                    // other widths have no typed layout yet — keep the
+                    // simulated (dequantized f64) weights
+                    for (_, m) in out.mats.iter_mut() {
+                        *m = quant::quantize_uniform(m, *bits, *chunk);
+                    }
                 }
             }
         }
@@ -1040,6 +1060,9 @@ pub fn compress_plan_on(pool: &Pool, registry: &Registry, cfg: &MiniConfig,
         let lo = res.with_context(|| format!("compress layer {i}"))?;
         for (name, m) in &lo.mats {
             out.set_matrix(name, m);
+        }
+        for (name, p) in &lo.packed {
+            out.set_packed(name, p);
         }
         for (name, b) in &lo.biases {
             out.set_bias(name, b);

@@ -27,6 +27,15 @@ pub fn quantize_uniform(m: &Matrix, bits: u32, chunk: usize) -> Matrix {
             for v in seg.iter_mut() {
                 *v = ((*v - lo) * scale).round() / scale + lo;
             }
+        } else {
+            // degenerate chunk: snap to the (shared) low endpoint instead
+            // of silently passing values through unquantized, so the
+            // chunk is representable on any grid — scale 0, zero-point
+            // `lo`, all codes equal — and the int8 execution layout
+            // (tensor/packed.rs) represents constant chunks exactly
+            for v in seg.iter_mut() {
+                *v = lo;
+            }
         }
         s = e;
     }
@@ -79,6 +88,26 @@ mod tests {
         // identity at high precision
         let q16 = quantize_uniform(&m, 16, 64);
         assert!(q16.max_abs_diff(&m) < 1e-3);
+    }
+
+    #[test]
+    fn degenerate_chunks_quantize_exactly() {
+        // all-equal chunk: values are the shared endpoint, bit-unchanged
+        let m = Matrix::from_fn(4, 4, |_, _| 1.25);
+        let q = quantize_uniform(&m, 8, 8);
+        assert_eq!(q, m, "constant chunks must be represented exactly");
+        // single-element chunks are degenerate by construction
+        let s = Matrix::from_fn(1, 5, |_, j| j as f64 * 0.3 - 0.7);
+        let q1 = quantize_uniform(&s, 8, 1);
+        assert_eq!(q1, s, "chunk=1 must pass every value through exactly");
+        // near-degenerate spread (≤1e-12) snaps to the chunk's low
+        // endpoint rather than leaking unquantized values
+        let mut t = Matrix::from_fn(1, 4, |_, _| 2.0);
+        t[(0, 2)] = 2.0 + 5e-13;
+        let qt = quantize_uniform(&t, 8, 4);
+        for j in 0..4 {
+            assert_eq!(qt[(0, j)], 2.0);
+        }
     }
 
     #[test]

@@ -38,4 +38,4 @@ pub mod runtime;
 pub mod tensor;
 pub mod util;
 
-pub use tensor::Matrix;
+pub use tensor::{Layout, Matrix, PackedMat};

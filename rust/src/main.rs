@@ -27,7 +27,7 @@ use latentllm::model::config::{mini_by_name, MINI_FAMILY, OPT_FAMILY};
 use latentllm::model::Weights;
 use latentllm::reports::{figs, tables};
 use latentllm::runtime::Engine;
-use latentllm::{eval, flops};
+use latentllm::{eval, flops, Layout};
 
 struct Args {
     positional: Vec<String>,
@@ -75,6 +75,7 @@ USAGE:
   latentllm info      [--artifacts DIR]
   latentllm compress  --model opt-mini-m --method latentllm --ratio 0.3
                       [--plan FILE.toml] [--dry-run]
+                      [--layout f64|f32|int8] [--chunk N]
                       [--artifacts DIR] [--out FILE.ltw]
   latentllm eval      --model opt-mini-m [--weights FILE.ltw]
                       [--corpus synthwiki] [--artifacts DIR]
@@ -85,7 +86,7 @@ USAGE:
                       [--config FILE.toml] [--artifacts DIR]
   latentllm generate  --model opt-mini-m [--prompts 8] [--new 32]
                       [--temperature 0.8] [--latent] [--no-cache]
-                      [--artifacts DIR]
+                      [--weights FILE.ltw] [--artifacts DIR]
   latentllm synth-artifacts [--out DIR] [--model opt-mini-s] [--seed N]
   latentllm report    all|table2|table3|table4|fig4|fig5|fig7..fig16|ablations
                       [--artifacts DIR] [--out DIR] [--max-batches N]
@@ -117,6 +118,12 @@ Plans: --plan FILE.toml loads a [plan] compression plan (stages, per-layer
        validates the plan and prints the resolved rank schedule without
        artifacts. --ratio/--qk-iters/--ud-iters override the plan's values
        (--ratio re-targets uniformly, replacing any per-layer schedule).
+Layouts: compress --layout picks the execution layout persisted in the
+       artifact (f64 = today's dense reference, bit-identical; f32 =
+       cache-blocked panel kernels; int8 = per-chunk affine quantized
+       weights with fused-dequant kernels, --chunk sets the chunk width).
+       generate/serve/eval auto-pick the stored layout; ppl drift vs the
+       f64 reference is printed whenever a non-default layout is chosen.
 ";
 
 fn main() {
@@ -277,6 +284,7 @@ fn compress_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     if args.flags.contains_key("dry-run") {
         return dry_run(&cplan, &registry, cfg);
     }
+    let layout = Layout::parse(&args.flag("layout", "f64"))?;
     let (_, w, cal) = load_model(artifacts, &model)?;
     let t0 = std::time::Instant::now();
     let (nw, rep) = plan::compress_plan_on(
@@ -289,17 +297,34 @@ fn compress_cmd(args: &Args, artifacts: &Path) -> Result<()> {
              flops::human(rep.orig_linear_params as f64),
              flops::human(rep.new_linear_params as f64),
              rep.achieved_ratio());
+    // convert to the requested execution layout (quantizes matmul
+    // weights for int8; f32 just re-tags — packing happens at load)
+    let out_w = if layout == Layout::DenseF64 {
+        nw.clone()
+    } else {
+        let q = nw.repack(layout, args.usize_flag("chunk", 64))?;
+        println!("  repacked to {} execution layout", layout.name());
+        q
+    };
     if let Some(out) = args.flags.get("out") {
-        latentllm::model::io::write_ltw(out, nw.map())?;
-        println!("  wrote {out}");
+        out_w.save(out)?;
+        println!("  wrote {out} ({} layout)", out_w.layout().name());
     }
     // quick ppl check through the scoring program
     let engine = Engine::new(artifacts)?;
     let corpus = Corpus::load(artifacts.join("corpora.ltw"), "synthwiki",
                               "test")?;
-    let r = eval::perplexity(&engine, &format!("score_{model}"), &nw,
+    let r = eval::perplexity(&engine, &format!("score_{model}"), &out_w,
                              &corpus, 8, 128, 12)?;
     println!("  ppl(synthwiki) = {:.2}", r.ppl);
+    if layout != Layout::DenseF64 {
+        // drift of the typed execution layout vs the f64 reference the
+        // plan produced — the accuracy side of the layout tradeoff
+        let rf = eval::perplexity(&engine, &format!("score_{model}"), &nw,
+                                  &corpus, 8, 128, 12)?;
+        println!("  ppl drift vs f64 reference: {:+.4} ({:.2} -> {:.2})",
+                 r.ppl - rf.ppl, rf.ppl, r.ppl);
+    }
     Ok(())
 }
 
@@ -342,15 +367,31 @@ fn generate_cmd(args: &Args, artifacts: &Path) -> Result<()> {
         seed: 11,
         use_cache: !args.flags.contains_key("no-cache"),
     };
+    // --weights FILE.ltw swaps in an external weight set (e.g. a
+    // `compress --out` artifact); the stored layout tag travels with the
+    // file, so int8/f32 artifacts automatically decode on their packed
+    // kernels
     let (program, weights) = if args.flags.contains_key("latent") {
         let tag = engine.manifest().path(&["latent_demo", "tag"])
             .and_then(|v| v.as_str()).context("no latent demo artifact")?;
-        (format!("latent_step_{tag}"),
-         Weights::load(artifacts.join(format!("latent_model_{tag}.ltw")))?)
+        let w = match args.flags.get("weights") {
+            Some(p) => Weights::load(p)?,
+            None => Weights::load(
+                artifacts.join(format!("latent_model_{tag}.ltw")))?,
+        };
+        (format!("latent_step_{tag}"), w)
     } else {
-        (format!("step_{model}"),
-         Weights::load(artifacts.join(format!("model_{model}.ltw")))?)
+        let w = match args.flags.get("weights") {
+            Some(p) => Weights::load(p)?,
+            None => Weights::load(
+                artifacts.join(format!("model_{model}.ltw")))?,
+        };
+        (format!("step_{model}"), w)
     };
+    if weights.layout() != Layout::DenseF64 {
+        println!("weights execute in the {} layout",
+                 weights.layout().name());
+    }
     let res = generate(&engine, &program, &weights, &prompts, batch,
                        seq_len, vocab, &opts)?;
     for (i, s) in res.sequences.iter().enumerate() {

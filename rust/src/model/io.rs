@@ -1,7 +1,17 @@
-//! LTW1 interchange reader/writer (DESIGN.md §5; python side:
-//! python/compile/ltw.py). Little-endian: magic "LTW1", u32 count, then per
-//! tensor: u16 name-len, name, u8 dtype (0=f32, 1=i32), u8 ndim, u32 dims…,
-//! raw data.
+//! LTW interchange reader/writer (DESIGN.md §5; python side:
+//! python/compile/ltw.py). Little-endian. Two container versions:
+//!
+//! * LTW1 — magic "LTW1", u32 count, then per tensor: u16 name-len, name,
+//!   u8 dtype (0=f32, 1=i32), u8 ndim, u32 dims…, raw data. What python
+//!   emits and every pre-layout artifact holds.
+//! * LTW2 — magic "LTW2", u8 execution-layout code ([`Layout::code`]),
+//!   then the same count + entries with one more dtype: 2 = chunk-affine
+//!   int8 (u32 chunk, u32 n_chunks, f32 scales, f32 zero-points, i8
+//!   codes). Written only when needed (non-default layout or quantized
+//!   tensors), so plain f64 maps keep byte-identical LTW1 files.
+//!
+//! Readers accept both — loading an old artifact transparently upgrades
+//! it to `Layout::DenseF64`.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -9,16 +19,29 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::tensor::{Layout, PackedMat};
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum Tensor {
     F32 { shape: Vec<usize>, data: Vec<f32> },
     I32 { shape: Vec<usize>, data: Vec<i32> },
+    /// Chunk-affine int8 in the [`PackedMat::QuantI8`] convention: flat
+    /// chunks, `ŵ = q·scale + zero_point`.
+    QuantI8 {
+        shape: Vec<usize>,
+        data: Vec<i8>,
+        scales: Vec<f32>,
+        zero_points: Vec<f32>,
+        chunk: usize,
+    },
 }
 
 impl Tensor {
     pub fn shape(&self) -> &[usize] {
         match self {
-            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+            Tensor::F32 { shape, .. }
+            | Tensor::I32 { shape, .. }
+            | Tensor::QuantI8 { shape, .. } => shape,
         }
     }
 
@@ -44,8 +67,12 @@ impl Tensor {
         }
     }
 
-    /// 2-D f32 tensor → f64 Matrix.
+    /// 2-D tensor → f64 Matrix (quantized tensors dequantize — the dense
+    /// view `compress/`, `eval/` and reports keep working against).
     pub fn to_matrix(&self) -> Result<crate::Matrix> {
+        if let Tensor::QuantI8 { .. } = self {
+            return Ok(self.to_packed(Layout::DenseF64)?.to_matrix());
+        }
         let shape = self.shape();
         let data = self.as_f32()?;
         match shape.len() {
@@ -54,37 +81,115 @@ impl Tensor {
             _ => bail!("to_matrix needs 1-D/2-D, got {shape:?}"),
         }
     }
+
+    /// The tensor in its execution form. A stored `QuantI8` tensor is
+    /// already an execution layout and wins over `layout`; an f32 tensor
+    /// packs per the weight set's layout tag.
+    pub fn to_packed(&self, layout: Layout) -> Result<PackedMat> {
+        match self {
+            Tensor::QuantI8 { shape, data, scales, zero_points, chunk } => {
+                if shape.len() != 2 {
+                    bail!("to_packed needs a 2-D quant tensor, got {shape:?}");
+                }
+                Ok(PackedMat::QuantI8 {
+                    rows: shape[0],
+                    cols: shape[1],
+                    data: data.clone(),
+                    scales: scales.clone(),
+                    zero_points: zero_points.clone(),
+                    chunk: *chunk,
+                })
+            }
+            _ => {
+                let m = self.to_matrix()?;
+                Ok(match layout {
+                    Layout::PackedF32 => PackedMat::pack_f32(&m),
+                    _ => PackedMat::DenseF64(m),
+                })
+            }
+        }
+    }
+
+    /// Storage form of a [`PackedMat`]. `PackedF32` persists as plain f32
+    /// (the panel pack is a load-time memory layout, not a storage one) —
+    /// its layout travels in the LTW2 container tag instead.
+    pub fn from_packed(p: &PackedMat) -> Tensor {
+        match p {
+            PackedMat::QuantI8 { rows, cols, data, scales, zero_points,
+                                 chunk } => Tensor::QuantI8 {
+                shape: vec![*rows, *cols],
+                data: data.clone(),
+                scales: scales.clone(),
+                zero_points: zero_points.clone(),
+                chunk: *chunk,
+            },
+            _ => {
+                let m = p.to_matrix();
+                Tensor::F32 {
+                    shape: vec![m.rows(), m.cols()],
+                    data: m.to_f32(),
+                }
+            }
+        }
+    }
 }
 
 pub type TensorMap = BTreeMap<String, Tensor>;
 
 const MAGIC: &[u8; 4] = b"LTW1";
+const MAGIC2: &[u8; 4] = b"LTW2";
+
+/// True when `map` needs the LTW2 container even at the default layout.
+fn has_quant(map: &TensorMap) -> bool {
+    map.values().any(|t| matches!(t, Tensor::QuantI8 { .. }))
+}
 
 pub fn read_ltw(path: impl AsRef<Path>) -> Result<TensorMap> {
+    Ok(read_ltw_layout(path)?.0)
+}
+
+/// Read either container version; LTW1 files upgrade to
+/// `Layout::DenseF64` transparently.
+pub fn read_ltw_layout(path: impl AsRef<Path>)
+                       -> Result<(TensorMap, Layout)> {
     let path = path.as_ref();
     let mut buf = Vec::new();
     std::fs::File::open(path)
         .with_context(|| format!("open {}", path.display()))?
         .read_to_end(&mut buf)?;
-    parse_ltw(&buf).with_context(|| format!("parse {}", path.display()))
+    parse_ltw_layout(&buf)
+        .with_context(|| format!("parse {}", path.display()))
 }
 
 pub fn parse_ltw(buf: &[u8]) -> Result<TensorMap> {
-    if buf.len() < 8 || &buf[..4] != MAGIC {
-        bail!("bad LTW1 magic");
+    Ok(parse_ltw_layout(buf)?.0)
+}
+
+pub fn parse_ltw_layout(buf: &[u8]) -> Result<(TensorMap, Layout)> {
+    if buf.len() < 8 {
+        bail!("bad LTW magic");
     }
-    let n = u32::from_le_bytes(buf[4..8].try_into()?) as usize;
-    let mut off = 8;
+    let (layout, mut off) = match &buf[..4] {
+        m if m == MAGIC => (Layout::DenseF64, 4),
+        m if m == MAGIC2 => {
+            if buf.len() < 9 {
+                bail!("truncated LTW2 header");
+            }
+            (Layout::from_code(buf[4])?, 5)
+        }
+        _ => bail!("bad LTW1/LTW2 magic"),
+    };
+    let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+        if *off + n > buf.len() {
+            bail!("truncated LTW file");
+        }
+        let s = &buf[*off..*off + n];
+        *off += n;
+        Ok(s)
+    };
+    let n = u32::from_le_bytes(take(&mut off, 4)?.try_into()?) as usize;
     let mut out = TensorMap::new();
     for _ in 0..n {
-        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
-            if *off + n > buf.len() {
-                bail!("truncated LTW file");
-            }
-            let s = &buf[*off..*off + n];
-            *off += n;
-            Ok(s)
-        };
         let name_len =
             u16::from_le_bytes(take(&mut off, 2)?.try_into()?) as usize;
         let name = std::str::from_utf8(take(&mut off, name_len)?)?.to_string();
@@ -96,57 +201,108 @@ pub fn parse_ltw(buf: &[u8]) -> Result<TensorMap> {
                 as usize);
         }
         let count: usize = shape.iter().product();
-        let raw = take(&mut off, count * 4)?;
         let t = match dtype {
             0 => Tensor::F32 {
                 shape,
-                data: raw
+                data: take(&mut off, count * 4)?
                     .chunks_exact(4)
                     .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                     .collect(),
             },
             1 => Tensor::I32 {
                 shape,
-                data: raw
+                data: take(&mut off, count * 4)?
                     .chunks_exact(4)
                     .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
                     .collect(),
             },
+            2 => {
+                let chunk =
+                    u32::from_le_bytes(take(&mut off, 4)?.try_into()?)
+                        as usize;
+                let n_chunks =
+                    u32::from_le_bytes(take(&mut off, 4)?.try_into()?)
+                        as usize;
+                if chunk == 0 || n_chunks != count.div_ceil(chunk) {
+                    bail!("{name}: quant chunk grid {n_chunks}x{chunk} \
+                           disagrees with {count} elements");
+                }
+                let scales: Vec<f32> = take(&mut off, n_chunks * 4)?
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let zero_points: Vec<f32> = take(&mut off, n_chunks * 4)?
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let data = take(&mut off, count)?
+                    .iter()
+                    .map(|&b| b as i8)
+                    .collect();
+                Tensor::QuantI8 { shape, data, scales, zero_points, chunk }
+            }
             d => bail!("unknown dtype code {d}"),
         };
         out.insert(name, t);
     }
-    Ok(out)
+    Ok((out, layout))
 }
 
 pub fn write_ltw(path: impl AsRef<Path>, tensors: &TensorMap) -> Result<()> {
+    write_ltw_layout(path, tensors, Layout::DenseF64)
+}
+
+/// Write the smallest container that can hold the map: LTW1 when the
+/// layout is the default and nothing is quantized (bit-compatible with
+/// the python reader), LTW2 otherwise.
+pub fn write_ltw_layout(path: impl AsRef<Path>, tensors: &TensorMap,
+                        layout: Layout) -> Result<()> {
+    let v2 = layout != Layout::DenseF64 || has_quant(tensors);
     let mut buf = Vec::new();
-    buf.extend_from_slice(MAGIC);
+    if v2 {
+        buf.extend_from_slice(MAGIC2);
+        buf.push(layout.code());
+    } else {
+        buf.extend_from_slice(MAGIC);
+    }
     buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
     for (name, t) in tensors {
         let nb = name.as_bytes();
         buf.extend_from_slice(&(nb.len() as u16).to_le_bytes());
         buf.extend_from_slice(nb);
+        let push_shape = |buf: &mut Vec<u8>, shape: &[usize]| {
+            buf.push(shape.len() as u8);
+            for &d in shape {
+                buf.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+        };
         match t {
             Tensor::F32 { shape, data } => {
                 buf.push(0);
-                buf.push(shape.len() as u8);
-                for &d in shape {
-                    buf.extend_from_slice(&(d as u32).to_le_bytes());
-                }
+                push_shape(&mut buf, shape);
                 for v in data {
                     buf.extend_from_slice(&v.to_le_bytes());
                 }
             }
             Tensor::I32 { shape, data } => {
                 buf.push(1);
-                buf.push(shape.len() as u8);
-                for &d in shape {
-                    buf.extend_from_slice(&(d as u32).to_le_bytes());
-                }
+                push_shape(&mut buf, shape);
                 for v in data {
                     buf.extend_from_slice(&v.to_le_bytes());
                 }
+            }
+            Tensor::QuantI8 { shape, data, scales, zero_points, chunk } => {
+                buf.push(2);
+                push_shape(&mut buf, shape);
+                buf.extend_from_slice(&(*chunk as u32).to_le_bytes());
+                buf.extend_from_slice(&(scales.len() as u32).to_le_bytes());
+                for v in scales {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+                for v in zero_points {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+                buf.extend(data.iter().map(|&b| b as u8));
             }
         }
     }
@@ -196,5 +352,60 @@ mod tests {
         let t = Tensor::F32 { shape: vec![2, 2], data: vec![1., 2., 3., 4.] };
         let m = t.to_matrix().unwrap();
         assert_eq!(m[(1, 0)], 3.0);
+    }
+
+    #[test]
+    fn plain_f64_maps_stay_ltw1() {
+        // python-side compatibility: the default layout with no quantized
+        // tensors must keep emitting byte-identical LTW1 containers
+        let mut m = TensorMap::new();
+        m.insert("w".into(), Tensor::F32 { shape: vec![2], data: vec![1., 2.] });
+        let p = std::env::temp_dir().join("ltw_test_v1_default.ltw");
+        write_ltw_layout(&p, &m, Layout::DenseF64).unwrap();
+        let buf = std::fs::read(&p).unwrap();
+        assert_eq!(&buf[..4], MAGIC);
+        let (back, layout) = parse_ltw_layout(&buf).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(layout, Layout::DenseF64);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn ltw2_roundtrips_layout_and_quant_tensors() {
+        let mut m = TensorMap::new();
+        m.insert("q.w".into(), Tensor::QuantI8 {
+            shape: vec![2, 3],
+            data: vec![-128, -1, 0, 1, 64, 127],
+            scales: vec![0.5, 0.0],
+            zero_points: vec![0.25, -1.0],
+            chunk: 4,
+        });
+        m.insert("b".into(), Tensor::F32 { shape: vec![3], data: vec![0.; 3] });
+        let p = std::env::temp_dir().join("ltw_test_v2.ltw");
+        for layout in [Layout::DenseF64, Layout::PackedF32, Layout::QuantI8] {
+            write_ltw_layout(&p, &m, layout).unwrap();
+            let buf = std::fs::read(&p).unwrap();
+            assert_eq!(&buf[..4], MAGIC2, "quant tensors force LTW2");
+            let (back, l2) = parse_ltw_layout(&buf).unwrap();
+            assert_eq!(back, m, "save → load must be byte-faithful");
+            assert_eq!(l2, layout);
+            assert!(parse_ltw_layout(&buf[..buf.len() - 3]).is_err());
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn quant_tensor_dense_view_dequantizes() {
+        let t = Tensor::QuantI8 {
+            shape: vec![1, 2],
+            data: vec![-128, 127],
+            scales: vec![2.0],
+            zero_points: vec![256.0],
+            chunk: 2,
+        };
+        let m = t.to_matrix().unwrap();
+        assert_eq!(m[(0, 0)], -128.0 * 2.0 + 256.0);
+        assert_eq!(m[(0, 1)], 127.0 * 2.0 + 256.0);
+        assert!(t.as_f32().is_err(), "raw f32 view must refuse, not lie");
     }
 }

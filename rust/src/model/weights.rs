@@ -7,6 +7,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use anyhow::{anyhow, Context, Result};
 
 use super::io::{Tensor, TensorMap};
+use crate::tensor::{Layout, PackedMat};
 use crate::Matrix;
 
 /// Monotonic id source for [`Weights::cache_id`].
@@ -19,6 +20,10 @@ fn fresh_id() -> u64 {
 #[derive(Clone, Debug)]
 pub struct Weights {
     map: TensorMap,
+    /// Execution layout the backends pack f32 matmul weights into
+    /// (persisted in the LTW2 container tag; `QuantI8` *tensors* carry
+    /// their own layout regardless).
+    layout: Layout,
     /// Content-lineage id: assigned at construction, re-assigned by every
     /// mutating accessor; clones share the id until either side mutates.
     /// Equal ids therefore imply equal content — the invariant execution
@@ -28,11 +33,32 @@ pub struct Weights {
 
 impl Weights {
     pub fn new(map: TensorMap) -> Self {
-        Weights { map, id: fresh_id() }
+        Weights { map, layout: Layout::DenseF64, id: fresh_id() }
     }
 
     pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
-        Ok(Weights::new(super::io::read_ltw(path)?))
+        let (map, layout) = super::io::read_ltw_layout(path)?;
+        Ok(Weights { map, layout, id: fresh_id() })
+    }
+
+    /// Persist with the layout tag (LTW1 for plain default-layout maps,
+    /// LTW2 otherwise — see [`super::io::write_ltw_layout`]).
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        super::io::write_ltw_layout(path, &self.map, self.layout)
+    }
+
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    /// Re-tag the execution layout without touching tensor bytes (the
+    /// packing happens at model-load time; quantization does not — use
+    /// [`Weights::repack`] for that).
+    pub fn set_layout(&mut self, layout: Layout) {
+        if self.layout != layout {
+            self.layout = layout;
+            self.id = fresh_id();
+        }
     }
 
     /// Cache key for backend-side memoization: two `Weights` with the same
@@ -62,6 +88,53 @@ impl Weights {
     /// 1-D bias as f64 vector.
     pub fn bias(&self, name: &str) -> Result<Vec<f64>> {
         Ok(self.tensor(name)?.as_f32()?.iter().map(|&v| v as f64).collect())
+    }
+
+    /// 2-D weight in its execution layout: a stored `QuantI8` tensor
+    /// executes quantized, anything else packs per the layout tag.
+    pub fn packed(&self, name: &str) -> Result<PackedMat> {
+        self.tensor(name)?.to_packed(self.layout).context(name.to_string())
+    }
+
+    /// Store a weight in its execution form (quantized tensors persist
+    /// natively; dense/panel forms persist as f32).
+    pub fn set_packed(&mut self, name: &str, p: &PackedMat) {
+        self.id = fresh_id();
+        self.map.insert(name.to_string(), Tensor::from_packed(p));
+    }
+
+    /// Skip-list for [`Weights::repack`]: only 2-D f32 tensors that feed
+    /// `matmul_bt`-shaped kernels are worth converting. Positional /
+    /// patch-grid tables are gathered row-wise (never matmul'd) and the
+    /// answer head runs through `matvec` — converting those would cost
+    /// accuracy for zero kernel benefit.
+    fn repackable(name: &str, t: &Tensor) -> bool {
+        matches!(t, Tensor::F32 { shape, .. } if shape.len() == 2)
+            && !name.contains("pos")
+            && name != "ans.w"
+    }
+
+    /// A copy of this weight set converted to `layout`: every repackable
+    /// tensor is quantized (`QuantI8`, on `chunk`-wide flat chunks) or
+    /// left f32 with the tag flipped (`PackedF32` packs at load time).
+    /// The fresh lineage id means backends rebuild their models — the
+    /// converted weights never alias a cached dense model.
+    pub fn repack(&self, layout: Layout, chunk: usize) -> Result<Weights> {
+        let mut out = self.clone();
+        out.id = fresh_id();
+        out.layout = layout;
+        if layout == Layout::QuantI8 {
+            let names: Vec<String> = self.map.iter()
+                .filter(|(n, t)| Self::repackable(n, t))
+                .map(|(n, _)| n.clone())
+                .collect();
+            for name in names {
+                let m = self.matrix(&name)?;
+                let q = PackedMat::quantize_i8(&m, chunk);
+                out.map.insert(name, Tensor::from_packed(&q));
+            }
+        }
+        Ok(out)
     }
 
     /// Replace a 2-D weight (keeps f32 storage).
@@ -130,6 +203,44 @@ mod tests {
         assert_ne!(diverged.cache_id(), w.cache_id(),
                    "mutation must invalidate the id");
         assert_ne!(sample().cache_id(), sample().cache_id());
+    }
+
+    #[test]
+    fn repack_quantizes_weights_and_artifact_roundtrips_exactly() {
+        let mut m = TensorMap::new();
+        let vals: Vec<f32> = (0..48).map(|i| (i as f32 * 0.37).sin()).collect();
+        m.insert("layers.0.attn.wq".into(),
+                 Tensor::F32 { shape: vec![6, 8], data: vals });
+        m.insert("layers.0.attn.bq".into(),
+                 Tensor::F32 { shape: vec![6], data: vec![0.1; 6] });
+        m.insert("pos_emb".into(),
+                 Tensor::F32 { shape: vec![4, 8], data: vec![0.5; 32] });
+        let w = Weights::new(m);
+        let q = w.repack(Layout::QuantI8, 16).unwrap();
+        assert_eq!(q.layout(), Layout::QuantI8);
+        assert_ne!(q.cache_id(), w.cache_id());
+        let pq = q.packed("layers.0.attn.wq").unwrap();
+        assert_eq!(pq.layout(), Layout::QuantI8);
+        assert!(matches!(q.tensor("pos_emb").unwrap(), Tensor::F32 { .. }),
+                "positional tables stay f32");
+        assert!(q.bias("layers.0.attn.bq").is_ok(), "biases stay f32");
+
+        // save → load → the execution form is byte-identical
+        let p = std::env::temp_dir().join("weights_test_repack.ltw");
+        q.save(&p).unwrap();
+        let back = Weights::load(&p).unwrap();
+        assert_eq!(back.layout(), Layout::QuantI8);
+        assert_eq!(back.packed("layers.0.attn.wq").unwrap(), pq,
+                   "PackedMat bytes must survive the artifact round-trip");
+        assert_eq!(back.map(), q.map());
+        std::fs::remove_file(p).ok();
+
+        // f32 panel layout: tensors untouched, tag flips, packing at load
+        let f = w.repack(Layout::PackedF32, 16).unwrap();
+        assert_eq!(f.tensor("layers.0.attn.wq").unwrap(),
+                   w.tensor("layers.0.attn.wq").unwrap());
+        assert_eq!(f.packed("layers.0.attn.wq").unwrap().layout(),
+                   Layout::PackedF32);
     }
 
     #[test]

@@ -23,6 +23,7 @@ use super::decode::{CacheKind, DecodeState, LayerCache};
 use super::literal::ParamValue;
 use crate::model::io::Tensor;
 use crate::model::Weights;
+use crate::tensor::{Layout, PackedMat};
 use crate::util::json::Value;
 use crate::Matrix;
 
@@ -214,9 +215,12 @@ fn layer_norm(x: &Matrix, g: &[f64], b: &[f64]) -> Matrix {
 }
 
 /// y = x Wᵀ (+ b): the linear-layer application in the paper's W[out, in]
-/// convention.
-fn linear(x: &Matrix, w: &Matrix, b: Option<&[f64]>) -> Matrix {
-    let mut y = x.matmul_bt(w);
+/// convention. THE layout dispatch point: every weight arrives as a
+/// [`PackedMat`] and executes with its layout's kernel — the `DenseF64`
+/// arm is exactly the old `x.matmul_bt(w)`, bit-identical by
+/// construction (pinned by tests/layouts.rs).
+fn linear(x: &Matrix, w: &PackedMat, b: Option<&[f64]>) -> Matrix {
+    let mut y = w.apply(x);
     if let Some(b) = b {
         add_row_bias(&mut y, b);
     }
@@ -370,6 +374,54 @@ fn matmul_bt_ones(x: &Matrix, b: &Matrix) -> Matrix {
     out
 }
 
+/// Blocked [`matmul_bt_ones`] for the packed execution layouts: four
+/// cache rows per iteration, four independent accumulation chains. The
+/// latent ranks are tiny (the inner dot is ~r_k long) while the cache
+/// grows with the sequence, so the win comes from pipelining across
+/// *rows*, not within a dot. Packed layouts have no bit-identity pin —
+/// the exact-order kernel above stays the `DenseF64` path.
+fn matmul_bt_ones_fast(x: &Matrix, b: &Matrix) -> Matrix {
+    let (m, w) = (x.rows(), x.cols());
+    let r = b.cols();
+    assert_eq!(w, r + 1, "augmented operand width");
+    let n = b.rows();
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        let xi = x.row(i);
+        let ones = xi[r];
+        let oi = out.row_mut(i);
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let (b0, b1) = (b.row(j), b.row(j + 1));
+            let (b2, b3) = (b.row(j + 2), b.row(j + 3));
+            let (mut a0, mut a1) = (ones, ones);
+            let (mut a2, mut a3) = (ones, ones);
+            for k in 0..r {
+                let xk = xi[k];
+                a0 += xk * b0[k];
+                a1 += xk * b1[k];
+                a2 += xk * b2[k];
+                a3 += xk * b3[k];
+            }
+            oi[j] = a0;
+            oi[j + 1] = a1;
+            oi[j + 2] = a2;
+            oi[j + 3] = a3;
+            j += 4;
+        }
+        while j < n {
+            let bj = b.row(j);
+            let mut acc = ones;
+            for k in 0..r {
+                acc += xi[k] * bj[k];
+            }
+            oi[j] = acc;
+            j += 1;
+        }
+    }
+    out
+}
+
 /// Mean next-token NLL of one sequence (python model.nll).
 fn mean_nll(logits: &Matrix, tokens: &[i32]) -> f64 {
     let t = logits.rows().min(tokens.len());
@@ -441,9 +493,12 @@ fn embed_tokens(tok_emb: &Matrix, pos_emb: &Matrix, tokens: &[i32],
 }
 
 /// Final layer norm + tied LM head (python: `_ln(x, lnf) @ tok_emb.T`).
-fn tied_head(x: &Matrix, lnf_g: &[f64], lnf_b: &[f64], tok_emb: &Matrix)
+/// `head` is the embedding table in its execution layout — the vocab
+/// projection is the single biggest matmul of a decode step, so it
+/// dispatches like every other linear.
+fn tied_head(x: &Matrix, lnf_g: &[f64], lnf_b: &[f64], head: &PackedMat)
              -> Matrix {
-    layer_norm(x, lnf_g, lnf_b).matmul_bt(tok_emb)
+    head.apply(&layer_norm(x, lnf_g, lnf_b))
 }
 
 /// Sequences longer than the learned positional table would silently
@@ -463,6 +518,12 @@ fn check_seq_len(t: usize, pos_rows: usize) -> Result<()> {
 
 fn mat(w: &Weights, name: &str) -> Result<Matrix> {
     w.matrix(name)
+}
+
+/// Execution-layout view: what every `matmul_bt`-shaped weight loads
+/// through (dense f64 on LTW1 artifacts, panels/int8 on LTW2 ones).
+fn pmat(w: &Weights, name: &str) -> Result<PackedMat> {
+    w.packed(name)
 }
 
 fn vecf(w: &Weights, name: &str) -> Result<Vec<f64>> {
@@ -491,19 +552,19 @@ fn head_matrices(t: &Tensor, name: &str) -> Result<Vec<Matrix>> {
 struct DenseLayer {
     ln1_g: Vec<f64>,
     ln1_b: Vec<f64>,
-    wq: Matrix,
+    wq: PackedMat,
     bq: Vec<f64>,
-    wk: Matrix,
+    wk: PackedMat,
     bk: Vec<f64>,
-    wv: Matrix,
+    wv: PackedMat,
     bv: Vec<f64>,
-    wo: Matrix,
+    wo: PackedMat,
     bo: Vec<f64>,
     ln2_g: Vec<f64>,
     ln2_b: Vec<f64>,
-    wu: Matrix,
+    wu: PackedMat,
     bu: Vec<f64>,
-    wd: Matrix,
+    wd: PackedMat,
     bd: Vec<f64>,
 }
 
@@ -512,19 +573,19 @@ impl DenseLayer {
         Ok(DenseLayer {
             ln1_g: vecf(w, &format!("{prefix}ln1.g"))?,
             ln1_b: vecf(w, &format!("{prefix}ln1.b"))?,
-            wq: mat(w, &format!("{prefix}attn.wq"))?,
+            wq: pmat(w, &format!("{prefix}attn.wq"))?,
             bq: vecf(w, &format!("{prefix}attn.bq"))?,
-            wk: mat(w, &format!("{prefix}attn.wk"))?,
+            wk: pmat(w, &format!("{prefix}attn.wk"))?,
             bk: vecf(w, &format!("{prefix}attn.bk"))?,
-            wv: mat(w, &format!("{prefix}attn.wv"))?,
+            wv: pmat(w, &format!("{prefix}attn.wv"))?,
             bv: vecf(w, &format!("{prefix}attn.bv"))?,
-            wo: mat(w, &format!("{prefix}attn.wo"))?,
+            wo: pmat(w, &format!("{prefix}attn.wo"))?,
             bo: vecf(w, &format!("{prefix}attn.bo"))?,
             ln2_g: vecf(w, &format!("{prefix}ln2.g"))?,
             ln2_b: vecf(w, &format!("{prefix}ln2.b"))?,
-            wu: mat(w, &format!("{prefix}mlp.wu"))?,
+            wu: pmat(w, &format!("{prefix}mlp.wu"))?,
             bu: vecf(w, &format!("{prefix}mlp.bu"))?,
-            wd: mat(w, &format!("{prefix}mlp.wd"))?,
+            wd: pmat(w, &format!("{prefix}mlp.wd"))?,
             bd: vecf(w, &format!("{prefix}mlp.bd"))?,
         })
     }
@@ -563,7 +624,12 @@ impl DenseLayer {
 }
 
 struct DenseModel {
+    /// Dense embedding view — row-gathered by [`embed_tokens`] (the
+    /// dequantized values on an int8 artifact, so embeddings and head
+    /// read the same grid).
     tok_emb: Matrix,
+    /// The same table in its execution layout for the tied LM head.
+    head: PackedMat,
     pos_emb: Matrix,
     layers: Vec<DenseLayer>,
     lnf_g: Vec<f64>,
@@ -581,6 +647,7 @@ impl DenseModel {
         check_heads(&layers, cfg.n_heads, "dense")?;
         Ok(DenseModel {
             tok_emb,
+            head: pmat(w, "tok_emb")?,
             pos_emb: mat(w, "pos_emb")?,
             layers,
             lnf_g: vecf(w, "lnf.g")?,
@@ -595,7 +662,7 @@ impl DenseModel {
         for layer in &self.layers {
             x = layer.forward(x, self.n_heads, true);
         }
-        tied_head(&x, &self.lnf_g, &self.lnf_b, &self.tok_emb)
+        tied_head(&x, &self.lnf_g, &self.lnf_b, &self.head)
     }
 }
 
@@ -606,24 +673,30 @@ impl DenseModel {
 struct LatentLayer {
     ln1_g: Vec<f64>,
     ln1_b: Vec<f64>,
-    aq: Matrix,
-    ak: Matrix,
-    av: Matrix,
-    /// per-head augmented score core [rq+1, rk+1] (bias-absorbed)
+    aq: PackedMat,
+    ak: PackedMat,
+    av: PackedMat,
+    /// per-head augmented score core [rq+1, rk+1] (bias-absorbed).
+    /// Stays f64: tiny (rank-sized), rebuilt from the head tensors at
+    /// load, and consumed by the augmented kernels, not `linear`.
     h_aug: Vec<Matrix>,
     /// per-head augmented value decompressor [dh, rv+1]
     bv_aug: Vec<Matrix>,
-    ao_heads: Matrix,
-    bo_mat: Matrix,
+    ao_heads: PackedMat,
+    bo_mat: PackedMat,
     bo: Vec<f64>,
     ln2_g: Vec<f64>,
     ln2_b: Vec<f64>,
-    au: Matrix,
-    bu_mat: Matrix,
+    au: PackedMat,
+    bu_mat: PackedMat,
     bu: Vec<f64>,
-    ad: Matrix,
-    bd_mat: Matrix,
+    ad: PackedMat,
+    bd_mat: PackedMat,
     bd: Vec<f64>,
+    /// Packed execution layout in play → use the blocked (non-pinned)
+    /// variants of the cache-side kernels too; `DenseF64` keeps the
+    /// exact-order kernels so pre-layout results stay bit-identical.
+    fast: bool,
 }
 
 impl LatentLayer {
@@ -703,9 +776,9 @@ impl LatentLayer {
         // the compression planes must agree with the per-head
         // decompressors on the latent ranks, or forward()'s matmuls
         // panic instead of erroring (same contract as check_heads)
-        let aq = mat(w, &format!("{prefix}attn.aq"))?;
-        let ak = mat(w, &format!("{prefix}attn.ak"))?;
-        let av = mat(w, &format!("{prefix}attn.av"))?;
+        let aq = pmat(w, &format!("{prefix}attn.aq"))?;
+        let ak = pmat(w, &format!("{prefix}attn.ak"))?;
+        let av = pmat(w, &format!("{prefix}attn.av"))?;
         for (name, plane, heads) in [("q", &aq, &bq_heads),
                                      ("k", &ak, &bk_heads),
                                      ("v", &av, &bv_heads)] {
@@ -714,11 +787,14 @@ impl LatentLayer {
                        b{name}_heads slice disagrees", plane.rows());
             }
         }
-        let ao_heads = mat(w, &format!("{prefix}attn.ao_heads"))?;
+        let ao_heads = pmat(w, &format!("{prefix}attn.ao_heads"))?;
         if ao_heads.cols() != h * dh {
             bail!("{prefix}attn.ao_heads spans {} features, expected \
                    n_heads*d_h = {}", ao_heads.cols(), h * dh);
         }
+        let fast = [&aq, &ak, &av, &ao_heads]
+            .iter()
+            .any(|p| p.layout() != Layout::DenseF64);
         Ok(LatentLayer {
             ln1_g: vecf(w, &format!("{prefix}ln1.g"))?,
             ln1_b: vecf(w, &format!("{prefix}ln1.b"))?,
@@ -728,16 +804,17 @@ impl LatentLayer {
             h_aug,
             bv_aug,
             ao_heads,
-            bo_mat: mat(w, &format!("{prefix}attn.bo_mat"))?,
+            bo_mat: pmat(w, &format!("{prefix}attn.bo_mat"))?,
             bo: vecf(w, &format!("{prefix}attn.bo"))?,
             ln2_g: vecf(w, &format!("{prefix}ln2.g"))?,
             ln2_b: vecf(w, &format!("{prefix}ln2.b"))?,
-            au: mat(w, &format!("{prefix}mlp.au"))?,
-            bu_mat: mat(w, &format!("{prefix}mlp.bu_mat"))?,
+            au: pmat(w, &format!("{prefix}mlp.au"))?,
+            bu_mat: pmat(w, &format!("{prefix}mlp.bu_mat"))?,
             bu: vecf(w, &format!("{prefix}mlp.bu"))?,
-            ad: mat(w, &format!("{prefix}mlp.ad"))?,
-            bd_mat: mat(w, &format!("{prefix}mlp.bd_mat"))?,
+            ad: pmat(w, &format!("{prefix}mlp.ad"))?,
+            bd_mat: pmat(w, &format!("{prefix}mlp.bd_mat"))?,
             bd: vecf(w, &format!("{prefix}mlp.bd"))?,
+            fast,
         })
     }
 
@@ -762,7 +839,12 @@ impl LatentLayer {
         for head in 0..h {
             // ũ = [q|1]·H̃ per head, then scores against cached latents
             let u = matmul_ones_a(&q, &self.h_aug[head]); // [t, rk+1]
-            let mut s = matmul_bt_ones(&u, ck).scale(scale);
+            let s_raw = if self.fast {
+                matmul_bt_ones_fast(&u, ck)
+            } else {
+                matmul_bt_ones(&u, ck)
+            };
+            let mut s = s_raw.scale(scale);
             softmax_rows(&mut s, Some(pos0));
             let ctx_lat = s.matmul(cv); // [t, rv]
             // softmax rows sum to one, so the augmented ones column
@@ -801,6 +883,7 @@ impl LatentLayer {
 
 struct LatentModel {
     tok_emb: Matrix,
+    head: PackedMat,
     pos_emb: Matrix,
     layers: Vec<LatentLayer>,
     lnf_g: Vec<f64>,
@@ -821,6 +904,7 @@ impl LatentModel {
             .collect::<Result<Vec<_>>>()?;
         Ok(LatentModel {
             tok_emb,
+            head: pmat(w, "tok_emb")?,
             pos_emb: mat(w, "pos_emb")?,
             layers,
             lnf_g: vecf(w, "lnf.g")?,
@@ -835,7 +919,7 @@ impl LatentModel {
         for layer in &self.layers {
             x = layer.forward(x, self.n_heads, self.d_h);
         }
-        tied_head(&x, &self.lnf_g, &self.lnf_b, &self.tok_emb)
+        tied_head(&x, &self.lnf_g, &self.lnf_b, &self.head)
     }
 }
 
@@ -844,13 +928,13 @@ impl LatentModel {
 // ---------------------------------------------------------------------------
 
 struct MmModel {
-    patch_w: Matrix,
+    patch_w: PackedMat,
     patch_b: Vec<f64>,
     vit_pos: Matrix,
     vit_layers: Vec<DenseLayer>,
     vit_lnf_g: Vec<f64>,
     vit_lnf_b: Vec<f64>,
-    proj_w: Matrix,
+    proj_w: PackedMat,
     proj_b: Vec<f64>,
     lm_tok_emb: Matrix,
     lm_pos_emb: Matrix,
@@ -879,12 +963,12 @@ impl MmModel {
             bail!("vit.pos has {} rows but the vision config implies \
                    {n_patches} patches", vit_pos.rows());
         }
-        let patch_w = mat(w, "vit.patch.w")?;
+        let patch_w = pmat(w, "vit.patch.w")?;
         if patch_w.rows() != cfg.vision.d {
             bail!("vit.patch.w emits {} features but the vision config \
                    says d={}", patch_w.rows(), cfg.vision.d);
         }
-        let proj_w = mat(w, "proj.w")?;
+        let proj_w = pmat(w, "proj.w")?;
         if proj_w.rows() != cfg.lm.d || proj_w.cols() != cfg.vision.d {
             bail!("proj.w is {}x{} but the configs say lm.d={} vision.d={}",
                   proj_w.rows(), proj_w.cols(), cfg.lm.d, cfg.vision.d);
@@ -1121,7 +1205,7 @@ impl RefDecodeSession {
                     };
                     x = layer.forward_cached(x, m.n_heads, true, k, v);
                 }
-                tied_head(&last_only(x), &m.lnf_g, &m.lnf_b, &m.tok_emb)
+                tied_head(&last_only(x), &m.lnf_g, &m.lnf_b, &m.head)
             }
             LoadedModel::Latent(m) => {
                 check_seq_len(pos0 + tokens.len(), m.pos_emb.rows())?;
@@ -1134,7 +1218,7 @@ impl RefDecodeSession {
                     };
                     x = layer.forward_cached(x, m.n_heads, m.d_h, ck, cv);
                 }
-                tied_head(&last_only(x), &m.lnf_g, &m.lnf_b, &m.tok_emb)
+                tied_head(&last_only(x), &m.lnf_g, &m.lnf_b, &m.head)
             }
             LoadedModel::Mm(_) => bail!("multimodal session is unreachable"),
         };
@@ -1525,6 +1609,21 @@ mod tests {
         let braw = rng.normal_matrix(7, 4);
         let want = xa.matmul_bt(&append_ones(&braw));
         assert!(matmul_bt_ones(&xa, &braw).max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn fast_ones_kernel_matches_exact_order_kernel() {
+        // the blocked variant used on packed layouts reorders the f64
+        // accumulation, so equality is within rounding noise, not bitwise
+        let mut rng = crate::util::rng::Rng::new(29);
+        for &(m, r, n) in &[(1usize, 7usize, 5usize), (3, 8, 9), (2, 4, 4)] {
+            let x = rng.normal_matrix(m, r + 1);
+            let b = rng.normal_matrix(n, r);
+            let exact = matmul_bt_ones(&x, &b);
+            let fast = matmul_bt_ones_fast(&x, &b);
+            assert!(fast.max_abs_diff(&exact) < 1e-12,
+                    "blocked ones-kernel drifted at ({m},{r},{n})");
+        }
     }
 
     #[test]

@@ -19,9 +19,10 @@ use crate::util::pool::Pool;
 const PAR_MIN_FLOPS: usize = 2 << 20;
 
 /// Row-parallel execution plan: `Some((pool, block_rows))` when the
-/// product is big enough and a multi-thread pool is available.
-fn par_plan(out_rows: usize, out_cols: usize, flops: usize)
-            -> Option<(Pool, usize)> {
+/// product is big enough and a multi-thread pool is available. Shared
+/// with the packed-layout kernels (tensor/packed.rs).
+pub(crate) fn par_plan(out_rows: usize, out_cols: usize, flops: usize)
+                       -> Option<(Pool, usize)> {
     if out_rows < 2 || out_cols == 0 || flops < PAR_MIN_FLOPS
         || Pool::in_worker() {
         return None;
@@ -205,6 +206,14 @@ impl Matrix {
     /// Row-block-parallel above [`PAR_MIN_FLOPS`].
     pub fn matmul_bt(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.cols, b.cols, "matmul_bt shape");
+        if self.rows == 1 {
+            // the T=1 decode step: the matvec-shaped kernel skips the
+            // per-row planning/slicing overhead. Same dots in the same k
+            // order (matvec's iterator sum folds from 0.0 exactly like
+            // matmul_bt_row_into's loop), so this is bit-identical —
+            // pinned by single_row_matmul_bt_is_bit_identical.
+            return Matrix { rows: 1, cols: b.rows, data: b.matvec(self.row(0)) };
+        }
         let mut c = Matrix::zeros(self.rows, b.rows);
         let n = b.rows;
         let flops = self.rows * self.cols * n;
@@ -533,6 +542,25 @@ mod tests {
             let cat = a.transpose().matmul_at(&b);
             assert_eq!(cat.data(), r.data(), "matmul_at n={n}");
         }
+    }
+
+    #[test]
+    fn single_row_matmul_bt_is_bit_identical() {
+        // the matvec route for 1-row operands must reproduce the general
+        // kernel's per-element arithmetic exactly (not within eps)
+        let mut rng = crate::util::rng::Rng::new(41);
+        let x = rng.normal_matrix(1, 96);
+        let w = rng.normal_matrix(33, 96);
+        let got = x.matmul_bt(&w);
+        let mut want = Matrix::zeros(1, 33);
+        for j in 0..33 {
+            let mut s = 0.0;
+            for k in 0..96 {
+                s += x[(0, k)] * w[(j, k)];
+            }
+            want[(0, j)] = s;
+        }
+        assert_eq!(got.data(), want.data());
     }
 
     #[test]

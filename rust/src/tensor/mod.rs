@@ -4,10 +4,12 @@
 pub mod eig;
 pub mod linalg;
 pub mod matrix;
+pub mod packed;
 pub mod svd;
 
 pub use eig::{eigh, topk_eigvecs};
 pub use linalg::{cholesky, invsqrtm_psd, pinv, pinv_psd, solve,
                  sqrt_and_invsqrt_psd, sqrtm_psd};
 pub use matrix::Matrix;
+pub use packed::{Layout, PackedMat};
 pub use svd::{svd, svd_truncated, Svd};

@@ -1,0 +1,496 @@
+//! Typed execution layouts (ROADMAP: "compression only pays off when the
+//! compressed layout is also the *execution* layout"). A [`PackedMat`] is
+//! a weight matrix stored in the form the kernel that consumes it wants:
+//!
+//! * [`PackedMat::DenseF64`] — the historical layout. Dispatch delegates
+//!   to [`Matrix::matmul_bt`], so every result is bit-identical to the
+//!   pre-layout code (pinned by tests/layouts.rs).
+//! * `PackedF32` — a column-panel pack of the transposed weight operand:
+//!   [`NR`] output rows interleaved k-major, so the matvec-shaped decode
+//!   step (`x` is one row) streams the panel once and keeps [`NR`]
+//!   independent accumulators live — legal ILP/SIMD without reassociating
+//!   any single dot product.
+//! * `QuantI8` — chunk-wise affine int8 on the same flat-buffer grid as
+//!   `compress/quant.rs::quantize_uniform` (paper Eq 242): per-chunk
+//!   `scale`/`zero_point`, i8 weight reads, dequant fused into the dot
+//!   epilogue via `y = Σ_c scale_c·(x·q)_c + zp_c·Σ x_c`.
+//!
+//! Activations stay f64 throughout — the quantized path loses precision
+//! only through the weight grid itself, which is what lets the property
+//! test (`QuantI8` matmul == dequantize-then-f64-matmul) hold to ~1e-13.
+
+use anyhow::{bail, Result};
+
+use super::matrix::{par_plan, Matrix};
+
+/// Output-panel width of the `PackedF32` pack (accumulators per panel).
+pub const NR: usize = 8;
+
+/// Chunk width the degenerate guard shares with `quantize_uniform`.
+pub const DEGENERATE_EPS: f64 = 1e-12;
+
+/// Execution layout of a weight set — persisted in the LTW2 artifact tag
+/// and selected at the CLI with `compress --layout`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    DenseF64,
+    PackedF32,
+    QuantI8,
+}
+
+impl Layout {
+    /// Stable on-disk code (LTW2 layout byte).
+    pub fn code(self) -> u8 {
+        match self {
+            Layout::DenseF64 => 0,
+            Layout::PackedF32 => 1,
+            Layout::QuantI8 => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Layout> {
+        Ok(match c {
+            0 => Layout::DenseF64,
+            1 => Layout::PackedF32,
+            2 => Layout::QuantI8,
+            _ => bail!("unknown layout code {c}"),
+        })
+    }
+
+    /// CLI spelling (`compress --layout f64|f32|int8`).
+    pub fn parse(s: &str) -> Result<Layout> {
+        Ok(match s {
+            "f64" | "dense" => Layout::DenseF64,
+            "f32" | "packed" => Layout::PackedF32,
+            "int8" | "i8" => Layout::QuantI8,
+            _ => bail!("unknown layout {s:?} (expected f64, f32 or int8)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Layout::DenseF64 => "f64",
+            Layout::PackedF32 => "f32",
+            Layout::QuantI8 => "int8",
+        }
+    }
+}
+
+/// A weight matrix in its execution layout. Logical shape is always
+/// `[rows, cols]` in the paper's `W[out, in]` convention; [`PackedMat::apply`]
+/// computes `x · Wᵀ` with the layout's kernel.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PackedMat {
+    DenseF64(Matrix),
+    PackedF32 {
+        rows: usize,
+        cols: usize,
+        /// `rows.div_ceil(NR)` panels, each `cols × NR` k-major: element
+        /// `(p, k, r)` holds `W[p·NR + r, k]` (zero-padded tail panel).
+        data: Vec<f32>,
+    },
+    QuantI8 {
+        rows: usize,
+        cols: usize,
+        /// Row-major i8 codes; flat index `i` belongs to chunk `i / chunk`.
+        data: Vec<i8>,
+        /// Per-chunk step `(hi - lo) / 255` (0.0 for a constant chunk).
+        scales: Vec<f32>,
+        /// Per-chunk affine offset `lo + 128·step`: `ŵ = q·scale + zp`.
+        zero_points: Vec<f32>,
+        chunk: usize,
+    },
+}
+
+impl PackedMat {
+    pub fn layout(&self) -> Layout {
+        match self {
+            PackedMat::DenseF64(_) => Layout::DenseF64,
+            PackedMat::PackedF32 { .. } => Layout::PackedF32,
+            PackedMat::QuantI8 { .. } => Layout::QuantI8,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            PackedMat::DenseF64(m) => m.rows(),
+            PackedMat::PackedF32 { rows, .. }
+            | PackedMat::QuantI8 { rows, .. } => *rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            PackedMat::DenseF64(m) => m.cols(),
+            PackedMat::PackedF32 { cols, .. }
+            | PackedMat::QuantI8 { cols, .. } => *cols,
+        }
+    }
+
+    /// Weight-payload bytes in this layout (the bandwidth the kernel pays).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            PackedMat::DenseF64(m) => m.rows() * m.cols() * 8,
+            PackedMat::PackedF32 { data, .. } => data.len() * 4,
+            PackedMat::QuantI8 { data, scales, zero_points, .. } => {
+                data.len() + (scales.len() + zero_points.len()) * 4
+            }
+        }
+    }
+
+    pub fn dense(m: Matrix) -> PackedMat {
+        PackedMat::DenseF64(m)
+    }
+
+    /// Pack into NR-wide column panels of the transposed operand.
+    pub fn pack_f32(m: &Matrix) -> PackedMat {
+        let (rows, cols) = (m.rows(), m.cols());
+        let panels = rows.div_ceil(NR);
+        let mut data = vec![0.0f32; panels * cols * NR];
+        for p in 0..panels {
+            let panel = &mut data[p * cols * NR..(p + 1) * cols * NR];
+            for k in 0..cols {
+                for r in 0..NR {
+                    let i = p * NR + r;
+                    if i < rows {
+                        panel[k * NR + r] = m[(i, k)] as f32;
+                    }
+                }
+            }
+        }
+        PackedMat::PackedF32 { rows, cols, data }
+    }
+
+    /// Chunk-wise affine int8 on the `quantize_uniform` flat-buffer grid.
+    /// A degenerate chunk (`hi - lo <= 1e-12`) stores `scale = 0`,
+    /// `zero_point = lo`, codes 0 — constant chunks round-trip exactly.
+    pub fn quantize_i8(m: &Matrix, chunk: usize) -> PackedMat {
+        assert!(chunk >= 1, "quantize_i8 needs chunk >= 1");
+        let src = m.data();
+        let n = src.len();
+        let n_chunks = n.div_ceil(chunk);
+        let mut data = vec![0i8; n];
+        let mut scales = vec![0.0f32; n_chunks];
+        let mut zero_points = vec![0.0f32; n_chunks];
+        let mut s = 0;
+        let mut c = 0;
+        while s < n {
+            let e = (s + chunk).min(n);
+            let seg = &src[s..e];
+            let lo = seg.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = seg.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            if hi - lo > DEGENERATE_EPS {
+                // same grid as quantize_uniform: q_u = round((v-lo)·255/(hi-lo))
+                let scale = 255.0 / (hi - lo);
+                let step = (hi - lo) / 255.0;
+                for (d, &v) in data[s..e].iter_mut().zip(seg) {
+                    let q = (((v - lo) * scale).round() as i32 - 128)
+                        .clamp(-128, 127);
+                    *d = q as i8;
+                }
+                scales[c] = step as f32;
+                zero_points[c] = (lo + 128.0 * step) as f32;
+            } else {
+                scales[c] = 0.0;
+                zero_points[c] = lo as f32;
+            }
+            s = e;
+            c += 1;
+        }
+        PackedMat::QuantI8 { rows: m.rows(), cols: m.cols(), data, scales,
+                             zero_points, chunk }
+    }
+
+    /// Pack a dense matrix into the given layout.
+    pub fn pack(m: Matrix, layout: Layout, chunk: usize) -> PackedMat {
+        match layout {
+            Layout::DenseF64 => PackedMat::DenseF64(m),
+            Layout::PackedF32 => PackedMat::pack_f32(&m),
+            Layout::QuantI8 => PackedMat::quantize_i8(&m, chunk),
+        }
+    }
+
+    /// Densify back to f64 — the dequantized reference the property test
+    /// compares the fused kernels against (and the view `compress/`,
+    /// `eval/` and reports keep using on non-dense artifacts).
+    pub fn to_matrix(&self) -> Matrix {
+        match self {
+            PackedMat::DenseF64(m) => m.clone(),
+            PackedMat::PackedF32 { rows, cols, data } => {
+                Matrix::from_fn(*rows, *cols, |i, k| {
+                    let p = i / NR;
+                    data[p * cols * NR + k * NR + (i % NR)] as f64
+                })
+            }
+            PackedMat::QuantI8 { rows, cols, data, scales, zero_points,
+                                 chunk } => {
+                let mut m = Matrix::zeros(*rows, *cols);
+                for (idx, v) in m.data_mut().iter_mut().enumerate() {
+                    let c = idx / chunk;
+                    *v = data[idx] as f64 * scales[c] as f64
+                        + zero_points[c] as f64;
+                }
+                m
+            }
+        }
+    }
+
+    /// `x · Wᵀ` with the layout's kernel. The `DenseF64` arm IS
+    /// [`Matrix::matmul_bt`] — bit-identical to the pre-layout code; the
+    /// packed arms trade bit-identity for bandwidth and ILP.
+    pub fn apply(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), self.cols(), "apply shape {}x{} · ({}x{})ᵀ",
+                   x.rows(), x.cols(), self.rows(), self.cols());
+        match self {
+            PackedMat::DenseF64(w) => x.matmul_bt(w),
+            PackedMat::PackedF32 { rows, cols, data } => {
+                apply_packed_f32(x, *rows, *cols, data)
+            }
+            PackedMat::QuantI8 { rows, cols, data, scales, zero_points,
+                                 chunk } => {
+                apply_quant_i8(x, *rows, *cols, data, scales, zero_points,
+                               *chunk)
+            }
+        }
+    }
+}
+
+fn apply_packed_f32(x: &Matrix, rows: usize, cols: usize, data: &[f32])
+                    -> Matrix {
+    let t = x.rows();
+    let mut c = Matrix::zeros(t, rows);
+    let flops = t * cols * rows;
+    if let Some((pool, block)) = par_plan(t, rows, flops) {
+        pool.par_chunks(c.data_mut(), block * rows, |bi, chunk| {
+            for (di, crow) in chunk.chunks_mut(rows).enumerate() {
+                packed_f32_row(x.row(bi * block + di), crow, rows, cols,
+                               data);
+            }
+        });
+    } else {
+        for i in 0..t {
+            let xr = x.row(i);
+            let crow = &mut c.data_mut()[i * rows..(i + 1) * rows];
+            packed_f32_row(xr, crow, rows, cols, data);
+        }
+    }
+    c
+}
+
+/// One activation row against every NR-panel: NR independent f64
+/// accumulators per panel, panel streamed k-major exactly once.
+fn packed_f32_row(xr: &[f64], crow: &mut [f64], rows: usize, cols: usize,
+                  data: &[f32]) {
+    let panels = rows.div_ceil(NR);
+    for p in 0..panels {
+        let panel = &data[p * cols * NR..(p + 1) * cols * NR];
+        let mut acc = [0.0f64; NR];
+        for (k, &xv) in xr.iter().enumerate() {
+            let wk = &panel[k * NR..k * NR + NR];
+            for r in 0..NR {
+                acc[r] += xv * wk[r] as f64;
+            }
+        }
+        let base = p * NR;
+        let m = NR.min(rows - base);
+        crow[base..base + m].copy_from_slice(&acc[..m]);
+    }
+}
+
+fn apply_quant_i8(x: &Matrix, rows: usize, cols: usize, data: &[i8],
+                  scales: &[f32], zero_points: &[f32], chunk: usize)
+                  -> Matrix {
+    let t = x.rows();
+    let mut c = Matrix::zeros(t, rows);
+    if rows == 0 || cols == 0 {
+        return c;
+    }
+    let flops = t * cols * rows;
+    if let Some((pool, block)) = par_plan(t, rows, flops) {
+        pool.par_chunks(c.data_mut(), block * rows, |bi, chunk_out| {
+            for (di, crow) in chunk_out.chunks_mut(rows).enumerate() {
+                quant_i8_row(x.row(bi * block + di), crow, rows, cols, data,
+                             scales, zero_points, chunk);
+            }
+        });
+    } else {
+        for i in 0..t {
+            let xr = x.row(i);
+            let crow = &mut c.data_mut()[i * rows..(i + 1) * rows];
+            quant_i8_row(xr, crow, rows, cols, data, scales, zero_points,
+                         chunk);
+        }
+    }
+    c
+}
+
+/// One activation row against every quantized weight row. Chunks live on
+/// the *flat* weight buffer (they may span row boundaries), so weight row
+/// `j` starts `(j·cols) % chunk` elements into its first chunk; the
+/// per-offset activation segment sums are computed once per activation
+/// row and shared by every weight row with the same phase.
+#[allow(clippy::too_many_arguments)]
+fn quant_i8_row(xr: &[f64], crow: &mut [f64], rows: usize, cols: usize,
+                data: &[i8], scales: &[f32], zero_points: &[f32],
+                chunk: usize) {
+    let mut seg_cache: Vec<Option<Vec<f64>>> = vec![None; chunk];
+    for (j, out) in crow.iter_mut().enumerate().take(rows) {
+        let qrow = &data[j * cols..(j + 1) * cols];
+        let flat0 = j * cols;
+        let off = flat0 % chunk;
+        let sums = seg_cache[off]
+            .get_or_insert_with(|| seg_sums(xr, chunk, off));
+        let mut cidx = flat0 / chunk;
+        let mut k = 0usize;
+        let mut si = 0usize;
+        let mut acc = 0.0f64;
+        let mut e = (chunk - off).min(cols);
+        loop {
+            let dot = dot_qi8(&xr[k..e], &qrow[k..e]);
+            acc += scales[cidx] as f64 * dot
+                + zero_points[cidx] as f64 * sums[si];
+            if e == cols {
+                break;
+            }
+            k = e;
+            e = (e + chunk).min(cols);
+            cidx += 1;
+            si += 1;
+        }
+        *out = acc;
+    }
+}
+
+/// Activation segment sums on the flat-chunk grid at phase `off`.
+fn seg_sums(x: &[f64], chunk: usize, off: usize) -> Vec<f64> {
+    let n = x.len();
+    let mut out = Vec::with_capacity(n / chunk + 2);
+    let mut k = 0usize;
+    let mut e = (chunk - off).min(n);
+    loop {
+        out.push(x[k..e].iter().sum());
+        if e == n {
+            break;
+        }
+        k = e;
+        e = (e + chunk).min(n);
+    }
+    out
+}
+
+/// f64 · i8 dot with four independent accumulation chains — the packed
+/// paths have no bit-identity pin, so breaking the serial FP dependency
+/// chain is legal here (unlike `Matrix::matmul_bt`'s strict-order dots).
+#[inline]
+fn dot_qi8(x: &[f64], q: &[i8]) -> f64 {
+    let n = x.len().min(q.len());
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut k = 0usize;
+    while k + 4 <= n {
+        a0 += x[k] * q[k] as f64;
+        a1 += x[k + 1] * q[k + 1] as f64;
+        a2 += x[k + 2] * q[k + 2] as f64;
+        a3 += x[k + 3] * q[k + 3] as f64;
+        k += 4;
+    }
+    let mut s = (a0 + a1) + (a2 + a3);
+    while k < n {
+        s += x[k] * q[k] as f64;
+        k += 1;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_dispatch_is_bit_identical() {
+        let mut rng = Rng::new(7);
+        let x = rng.normal_matrix(5, 24);
+        let w = rng.normal_matrix(13, 24);
+        let p = PackedMat::dense(w.clone());
+        assert_eq!(p.apply(&x).data(), x.matmul_bt(&w).data());
+        assert_eq!(p.to_matrix(), w);
+    }
+
+    #[test]
+    fn packed_f32_matches_reference_within_f32_noise() {
+        let mut rng = Rng::new(8);
+        for (t, out, k) in [(1, 13, 24), (4, 8, 7), (3, 1, 1), (2, 9, 33)] {
+            let x = rng.normal_matrix(t, k);
+            let w = rng.normal_matrix(out, k);
+            let p = PackedMat::pack_f32(&w);
+            assert_eq!((p.rows(), p.cols()), (out, k));
+            // reference on the *f32-rounded* weights: the pack loses only
+            // the f64→f32 cast, never an element
+            let got = p.apply(&x);
+            let want = x.matmul_bt(&p.to_matrix());
+            assert!(got.max_abs_diff(&want) < 1e-9,
+                    "t={t} out={out} k={k}");
+        }
+    }
+
+    #[test]
+    fn quant_i8_roundtrip_error_bounded_by_half_step() {
+        let mut rng = Rng::new(9);
+        let w = rng.normal_matrix(6, 10);
+        let p = PackedMat::quantize_i8(&w, 16);
+        let back = p.to_matrix();
+        let PackedMat::QuantI8 { ref scales, .. } = p else { unreachable!() };
+        for idx in 0..60 {
+            let (i, j) = (idx / 10, idx % 10);
+            let step = scales[idx / 16] as f64;
+            // half-step quantization error + f32 param rounding
+            let tol = 0.5 * step + 1e-6 * (1.0 + w[(i, j)].abs());
+            assert!((back[(i, j)] - w[(i, j)]).abs() <= tol,
+                    "({i},{j}): {} vs {}", back[(i, j)], w[(i, j)]);
+        }
+    }
+
+    #[test]
+    fn quant_i8_constant_chunk_is_exact() {
+        // all-equal matrix: every chunk degenerate → exact representation
+        let w = Matrix::from_fn(3, 5, |_, _| 0.37);
+        let p = PackedMat::quantize_i8(&w, 4);
+        assert_eq!(p.to_matrix().max_abs_diff(&w), (0.37f32 as f64 - 0.37).abs());
+        // scale must be 0 (not garbage) so the kernel stays finite
+        let PackedMat::QuantI8 { scales, .. } = &p else { unreachable!() };
+        assert!(scales.iter().all(|&s| s == 0.0));
+        // single-element tail chunk (15 elements, chunk 4 → last chunk 3;
+        // chunk 7 → tail of 1)
+        let w1 = Matrix::from_fn(1, 15, |_, j| j as f64);
+        let p1 = PackedMat::quantize_i8(&w1, 7);
+        let b1 = p1.to_matrix();
+        assert!((b1[(0, 14)] - 14.0).abs() < 1e-6, "single-element chunk");
+    }
+
+    #[test]
+    fn quant_i8_apply_matches_dequant_reference() {
+        let mut rng = Rng::new(10);
+        for (t, out, k, chunk) in
+            [(1, 9, 24, 8), (3, 5, 10, 7), (2, 4, 6, 64), (1, 1, 1, 1)] {
+            let x = rng.normal_matrix(t, k);
+            let w = rng.normal_matrix(out, k);
+            let p = PackedMat::quantize_i8(&w, chunk);
+            let got = p.apply(&x);
+            let want = x.matmul_bt(&p.to_matrix());
+            let denom = 1.0 + want.data().iter().cloned().map(f64::abs)
+                .fold(0.0, f64::max);
+            assert!(got.max_abs_diff(&want) / denom < 1e-12,
+                    "t={t} out={out} k={k} chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn layout_codes_roundtrip() {
+        for l in [Layout::DenseF64, Layout::PackedF32, Layout::QuantI8] {
+            assert_eq!(Layout::from_code(l.code()).unwrap(), l);
+            assert_eq!(Layout::parse(l.name()).unwrap(), l);
+        }
+        assert!(Layout::from_code(9).is_err());
+        assert!(Layout::parse("fp4").is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! Execution-layout regression suite.
+//!
+//! Three families of pins:
+//!  * a property test that the fused-dequant int8 kernel agrees with the
+//!    dequantize-then-f64-matmul reference to 1e-6 relative across random
+//!    shapes and chunk widths;
+//!  * bit-identity of the default `DenseF64` layout on the decode path —
+//!    greedy and sampled, dense and latent programs — against the
+//!    original weight set (the typed-dispatch refactor must be invisible
+//!    at the default layout);
+//!  * end-to-end decode on repacked f32/int8 artifacts: sessions open,
+//!    tokens come out in-vocab, and the artifact round-trips its layout
+//!    through save/load.
+
+use std::path::PathBuf;
+
+use latentllm::data::synth::write_test_artifacts;
+use latentllm::eval::generate::{generate, GenerateOpts};
+use latentllm::model::config::MiniConfig;
+use latentllm::model::Weights;
+use latentllm::prop_assert;
+use latentllm::runtime::Engine;
+use latentllm::util::prop::{dim, run_cases};
+use latentllm::util::rng::Rng;
+use latentllm::{Layout, Matrix, PackedMat};
+
+const TINY: MiniConfig = MiniConfig {
+    name: "tiny", vocab: 48, d: 16, n_layers: 2, n_heads: 2,
+    d_i: 32, max_len: 32,
+};
+const SEQ: usize = 32;
+const BATCH: usize = 8;
+
+fn synth(tag: &str) -> (PathBuf, String) {
+    let dir = std::env::temp_dir()
+        .join(format!("latentllm_layouts_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let latent_tag = write_test_artifacts(&dir, &TINY, 37).unwrap();
+    (dir, latent_tag)
+}
+
+fn prompts() -> Vec<Vec<i32>> {
+    vec![vec![1, 2, 3], vec![7, 11, 13, 17, 19], vec![40, 2, 40, 2]]
+}
+
+fn opts(max_new: usize, temperature: f64) -> GenerateOpts {
+    GenerateOpts { max_new, temperature, seed: 5, use_cache: true }
+}
+
+#[test]
+fn quant_i8_matmul_matches_dequant_reference() {
+    // q.apply(x) (fused dequant in the kernel epilogue) must agree with
+    // dequantizing to f64 first and running the reference matmul_bt —
+    // the two paths share the grid, so only accumulation order differs
+    run_cases("quant_i8 == dequant ∘ matmul_bt", 40, 0xA11, |rng, _| {
+        let rows = dim(rng, 1, 24);
+        let cols = dim(rng, 1, 40);
+        let m = dim(rng, 1, 4);
+        let chunk = [1usize, 3, 8, 17, 64][rng.below(5)];
+        let w = rng.normal_matrix(rows, cols);
+        let x = rng.normal_matrix(m, cols);
+        let q = PackedMat::quantize_i8(&w, chunk);
+        let want = x.matmul_bt(&q.to_matrix());
+        let got = q.apply(&x);
+        prop_assert!(got.rows() == want.rows() && got.cols() == want.cols(),
+                     "shape mismatch");
+        let scale = want.data().iter().fold(1.0f64, |a, &v| a.max(v.abs()));
+        for (a, b) in got.data().iter().zip(want.data()) {
+            prop_assert!((a - b).abs() <= 1e-6 * scale,
+                         "{rows}x{cols} chunk={chunk}: {a} vs {b} \
+                          (rel tol 1e-6)");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_f32_matmul_matches_f32_reference() {
+    // the panel kernel computes in f64 over f32-rounded weights: it must
+    // match matmul_bt against the f32-rounded dense operand to rounding
+    // noise
+    run_cases("packed_f32 == f32-rounded matmul_bt", 25, 0xB22, |rng, _| {
+        let rows = dim(rng, 1, 30);
+        let cols = dim(rng, 1, 33);
+        let m = dim(rng, 1, 3);
+        let w = rng.normal_matrix(rows, cols);
+        let x = rng.normal_matrix(m, cols);
+        let p = PackedMat::pack_f32(&w);
+        let wr = Matrix::from_fn(rows, cols, |i, j| w[(i, j)] as f32 as f64);
+        let want = x.matmul_bt(&wr);
+        let got = p.apply(&x);
+        let scale = want.data().iter().fold(1.0f64, |a, &v| a.max(v.abs()));
+        for (a, b) in got.data().iter().zip(want.data()) {
+            prop_assert!((a - b).abs() <= 1e-9 * scale,
+                         "{rows}x{cols}: {a} vs {b}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dense_layout_decode_is_bit_identical() {
+    // the refactor's contract: at the default DenseF64 layout the typed
+    // dispatch is the *same arithmetic* as the pre-refactor decode, so a
+    // repacked (fresh model build, PackedMat path) weight set produces
+    // token-for-token identical sequences — greedy and sampled, dense
+    // and latent
+    let (art, tag) = synth("dense_id");
+    let engine = Engine::new(&art).unwrap();
+    let cases = [
+        (format!("step_{}", TINY.name),
+         Weights::load(art.join(format!("model_{}.ltw", TINY.name)))
+             .unwrap()),
+        (format!("latent_step_{tag}"),
+         Weights::load(art.join(format!("latent_model_{tag}.ltw")))
+             .unwrap()),
+    ];
+    for (program, weights) in &cases {
+        assert_eq!(weights.layout(), Layout::DenseF64,
+                   "synthesized artifacts default to the dense layout");
+        let re = weights.repack(Layout::DenseF64, 64).unwrap();
+        assert_ne!(re.cache_id(), weights.cache_id(),
+                   "repack must force a fresh model build");
+        for temperature in [0.0, 0.8] {
+            let a = generate(&engine, program, weights, &prompts(), BATCH,
+                             SEQ, TINY.vocab, &opts(10, temperature))
+                .unwrap();
+            let b = generate(&engine, program, &re, &prompts(), BATCH,
+                             SEQ, TINY.vocab, &opts(10, temperature))
+                .unwrap();
+            assert_eq!(a.sequences, b.sequences,
+                       "{program} t={temperature}: dense layout diverged");
+        }
+    }
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn repacked_artifacts_decode_end_to_end() {
+    // f32 and int8 artifacts: save → load keeps the layout tag, decode
+    // sessions run, and every emitted token is in-vocab
+    let (art, tag) = synth("packed_e2e");
+    let engine = Engine::new(&art).unwrap();
+    let cases = [
+        (format!("step_{}", TINY.name),
+         Weights::load(art.join(format!("model_{}.ltw", TINY.name)))
+             .unwrap()),
+        (format!("latent_step_{tag}"),
+         Weights::load(art.join(format!("latent_model_{tag}.ltw")))
+             .unwrap()),
+    ];
+    for (program, weights) in &cases {
+        for layout in [Layout::PackedF32, Layout::QuantI8] {
+            let rp = weights.repack(layout, 32).unwrap();
+            let p = art.join(format!("repacked_{}.ltw", layout.name()));
+            rp.save(&p).unwrap();
+            let loaded = Weights::load(&p).unwrap();
+            assert_eq!(loaded.layout(), layout,
+                       "layout tag must survive the round-trip");
+            assert_eq!(loaded.map(), rp.map());
+            let res = generate(&engine, program, &loaded, &prompts(),
+                               BATCH, SEQ, TINY.vocab, &opts(8, 0.0))
+                .unwrap();
+            assert!(res.tokens_generated > 0,
+                    "{program} {}: no tokens emitted", layout.name());
+            for s in &res.sequences {
+                assert!(s.iter().all(|&t| (0..TINY.vocab as i32)
+                            .contains(&t)),
+                        "{program} {}: token out of vocab", layout.name());
+            }
+        }
+    }
+    std::fs::remove_dir_all(&art).ok();
+}

@@ -280,6 +280,42 @@ fn quant_post_stage_quantizes_weights() {
     assert!(uniq.len() <= 16, "got {} distinct levels", uniq.len());
 }
 
+#[test]
+fn quant8_post_stage_emits_native_int8_tensors() {
+    use latentllm::model::io::Tensor;
+    let (cfg, w, cal) = setup();
+    let plan = Method::AsvdRootCov.plan()
+        .with_ratio(0.3)
+        .with_iters(2, 1)
+        .with_post(PostOp::Quant { bits: 8, chunk: 64 });
+    let (nw, _) = compress_plan(&cfg, &w, &cal, &plan).unwrap();
+    // the 8-bit post-stage stores i8 codes + affine params, not a
+    // dequantized f64 simulation
+    let t = nw.tensor("layers.0.attn.wq").unwrap();
+    assert!(matches!(t, Tensor::QuantI8 { .. }),
+            "8-bit quant must emit the execution layout");
+    // biases and untouched tensors stay f32
+    assert!(matches!(nw.tensor("layers.0.attn.bq").unwrap(),
+                     Tensor::F32 { .. }));
+    assert!(matches!(nw.tensor("tok_emb").unwrap(), Tensor::F32 { .. }));
+    // the dense view dequantizes onto the same Eq 242 grid the f64
+    // simulation uses (f32 affine params ⇒ ~1e-6 relative agreement)
+    let m = nw.matrix("layers.0.attn.wq").unwrap();
+    let scale = m.data().iter().fold(0.0f64, |a, &v| a.max(v.abs()));
+    for s in m.data().chunks(64) {
+        let lo = s.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = s.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        if hi - lo > 1e-12 {
+            let step = (hi - lo) / 255.0;
+            for &v in s {
+                let code = (v - lo) / step;
+                assert!((code - code.round()).abs() < 1e-3 * scale.max(1.0),
+                        "dequantized value off the 8-bit grid");
+            }
+        }
+    }
+}
+
 /// A custom stage registered at runtime: leaves the MLP uncompressed.
 struct MlpKeep;
 
