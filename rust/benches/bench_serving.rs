@@ -2,7 +2,7 @@
 //! coordinator under closed-loop load — the L3 target of EXPERIMENTS.md
 //! §Perf.
 //!
-//! Two sections:
+//! Three sections:
 //!
 //! * **Mixed score+generate** (always runs; artifacts synthesized into a
 //!   tempdir): the same concurrent workload driven once through the
@@ -13,6 +13,14 @@
 //!   (requeue + resume) versus the sequential path's evictions (failed
 //!   requests) is the headline number. Plus the capacity probe: live
 //!   sessions a matched page budget admits, dense vs latent.
+//! * **Shared-prefix prefill** (always runs): a prefill-dominated
+//!   generate workload at 0% and 90% prompt sharing, scheduler vs
+//!   sequential, with a warm second wave that re-submits against the
+//!   cold wave's donated blocks. Reports prefill ms/request and goodput
+//!   tok/s per (sharing, mode, phase) cell and writes the machine-
+//!   readable summary to `BENCH_SERVING.json` (path overridable via
+//!   `BENCH_SERVING_JSON`), headline field
+//!   `prefill_ms_reduction_at_90_shared`.
 //! * **Score-only batcher×worker sweep** (needs real `artifacts/`,
 //!   skipped otherwise) — the original closed-loop scoring bench.
 
@@ -28,6 +36,7 @@ use latentllm::data::synth::{latent_demo_ranks, write_test_artifacts};
 use latentllm::data::Corpus;
 use latentllm::model::config::{mini_by_name, MiniConfig};
 use latentllm::model::Weights;
+use latentllm::util::json::Value;
 
 const MIX_CFG: MiniConfig = MiniConfig {
     name: "bench-serve", vocab: 96, d: 32, n_layers: 2, n_heads: 4,
@@ -39,8 +48,15 @@ const N_GEN: usize = 6;
 const N_SCORE: usize = 12;
 const BLOCK_TOKENS: usize = 4;
 
+// shared-prefix section: long prompts, short decodes, so prefill
+// dominates and prefix reuse moves the wall clock
+const SP_PROMPT: usize = 40;
+const SP_NEW: usize = 4;
+const SP_REQS: usize = 12;
+
 fn main() {
     mixed_workload();
+    shared_prefix_workload();
     score_sweep();
 }
 
@@ -172,6 +188,146 @@ fn mixed_workload() {
     }
     println!("capacity at a matched {budget}-byte page budget, \
               {need}-token sessions:\n{line}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+struct SpRun {
+    sharing_pct: usize,
+    mode: &'static str,
+    phase: &'static str,
+    seconds: f64,
+    ms_per_request: f64,
+    tok_s: f64,
+}
+
+/// Submit one wave of generate requests and block until all answer.
+fn sp_wave(server: &Server, prompts: &[Vec<i32>]) -> (f64, usize) {
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = prompts.iter().enumerate()
+        .map(|(i, p)| server.submit_generate(GenerateParams {
+            prompt: p.clone(),
+            max_new: SP_NEW,
+            temperature: 0.0,
+            seed: i as u64,
+        }).expect("submit_generate"))
+        .collect();
+    let mut ok = 0usize;
+    for rx in rxs {
+        if let Ok(r) = rx.recv() {
+            if r.error().is_none() {
+                ok += 1;
+            }
+        }
+    }
+    (t0.elapsed().as_secs_f64(), ok)
+}
+
+fn shared_prefix_workload() {
+    let dir = std::env::temp_dir()
+        .join(format!("latentllm_bench_prefix_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    write_test_artifacts(&dir, &MIX_CFG, 17).expect("synth artifacts");
+    let weights = std::sync::Arc::new(Weights::load(
+        dir.join(format!("model_{}.ltw", MIX_CFG.name))).unwrap());
+    // roomy pool — this section measures prefix reuse, not contention
+    let bpt = 2 * MIX_CFG.d * 2 * MIX_CFG.n_layers;
+    let budget = 48 * BLOCK_TOKENS * bpt;
+    let sched_cfg = SchedulerConfig {
+        max_live: 4, block_tokens: BLOCK_TOKENS, prefill_chunk: 8,
+    };
+
+    println!("== shared-prefix prefill: content-addressed reuse ==");
+    println!("{SP_REQS} generate requests, prompt {SP_PROMPT} tokens, \
+              max_new {SP_NEW} (prefill-dominated); the warm wave \
+              re-submits the same prompts against the cold wave's \
+              donated blocks");
+    let mut runs: Vec<SpRun> = Vec::new();
+    let mut prefix_stats: Vec<(usize, u64, u64)> = Vec::new();
+    for sharing_pct in [0usize, 90] {
+        let shared = SP_PROMPT * sharing_pct / 100;
+        let prompts: Vec<Vec<i32>> = (0..SP_REQS)
+            .map(|i| (0..SP_PROMPT).map(|j| if j < shared {
+                ((j * 11 + 5) % MIX_CFG.vocab) as i32
+            } else {
+                ((i * 31 + j * 11 + 5) % MIX_CFG.vocab) as i32
+            }).collect())
+            .collect();
+
+        // sequential baseline: per-session caches, no prefix admission
+        let seq = mix_server(&dir, &weights, budget, None);
+        let (dt, ok) = sp_wave(&seq, &prompts);
+        seq.shutdown(Drain::Graceful);
+        runs.push(SpRun { sharing_pct, mode: "sequential", phase: "cold",
+                          seconds: dt,
+                          ms_per_request: dt * 1e3 / SP_REQS as f64,
+                          tok_s: (ok * SP_NEW) as f64 / dt.max(1e-9) });
+
+        // scheduler: the cold wave prefills and donates its prompt
+        // blocks; the warm wave admits against them
+        let server = mix_server(&dir, &weights, budget, Some(sched_cfg));
+        for phase in ["cold", "warm"] {
+            let (dt, ok) = sp_wave(&server, &prompts);
+            runs.push(SpRun { sharing_pct, mode: "scheduler", phase,
+                              seconds: dt,
+                              ms_per_request: dt * 1e3 / SP_REQS as f64,
+                              tok_s: (ok * SP_NEW) as f64
+                                  / dt.max(1e-9) });
+        }
+        let m = server.shutdown(Drain::Graceful);
+        prefix_stats.push((sharing_pct, m.counter("prefix_hits"),
+                           m.counter("prefix_saved_tokens")));
+    }
+    for r in &runs {
+        println!("  {:>2}% shared, {} {:<4}: {:>7.2} ms/request, \
+                  {:>7.1} tok/s goodput",
+                 r.sharing_pct, r.mode, r.phase, r.ms_per_request,
+                 r.tok_s);
+    }
+    for &(pct, hits, saved) in &prefix_stats {
+        println!("  {pct:>2}% shared: prefix hits={hits} \
+                  saved_tokens={saved}");
+    }
+    let ms_of = |pct: usize, phase: &str| runs.iter()
+        .find(|r| r.sharing_pct == pct && r.mode == "scheduler"
+              && r.phase == phase)
+        .map(|r| r.ms_per_request)
+        .unwrap_or(0.0);
+    let (cold90, warm90) = (ms_of(90, "cold"), ms_of(90, "warm"));
+    let reduction = 1.0 - warm90 / cold90.max(1e-9);
+    println!("  prefill at 90% shared: cold {cold90:.2} -> warm \
+              {warm90:.2} ms/request ({:.1}% less time)",
+             reduction * 100.0);
+
+    let json = Value::obj(vec![
+        ("model", Value::obj(vec![
+            ("name", Value::Str(MIX_CFG.name.to_string())),
+            ("d", Value::Num(MIX_CFG.d as f64)),
+            ("n_layers", Value::Num(MIX_CFG.n_layers as f64)),
+        ])),
+        ("prompt_len", Value::Num(SP_PROMPT as f64)),
+        ("max_new", Value::Num(SP_NEW as f64)),
+        ("n_requests", Value::Num(SP_REQS as f64)),
+        ("block_tokens", Value::Num(BLOCK_TOKENS as f64)),
+        ("scenarios", Value::Arr(runs.iter().map(|r| Value::obj(vec![
+            ("sharing_pct", Value::Num(r.sharing_pct as f64)),
+            ("mode", Value::Str(r.mode.to_string())),
+            ("phase", Value::Str(r.phase.to_string())),
+            ("seconds", Value::Num(r.seconds)),
+            ("ms_per_request", Value::Num(r.ms_per_request)),
+            ("tok_s", Value::Num(r.tok_s)),
+        ])).collect())),
+        ("prefix", Value::Arr(prefix_stats.iter().map(|&(pct, h, s)|
+            Value::obj(vec![
+                ("sharing_pct", Value::Num(pct as f64)),
+                ("hits", Value::Num(h as f64)),
+                ("saved_tokens", Value::Num(s as f64)),
+            ])).collect())),
+        ("prefill_ms_reduction_at_90_shared", Value::Num(reduction)),
+    ]);
+    let out = std::env::var("BENCH_SERVING_JSON")
+        .unwrap_or_else(|_| "BENCH_SERVING.json".to_string());
+    std::fs::write(&out, json.to_string_pretty()).expect("write json");
+    println!("wrote {out}");
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -15,6 +15,7 @@
 //! sched_live = 8        # live decode sessions per worker
 //! sched_block = 4       # KV page size in tokens (nominal rate)
 //! sched_chunk = 16      # prefill tokens fed per scheduler iteration
+//! prefix_cache = true   # content-addressed prefix reuse (default on)
 //! [report]
 //! max_batches = 12
 //! qk_iters = 8
@@ -59,6 +60,11 @@ pub struct ServeSettings {
     /// mirror `--sched-live/--sched-block/--sched-chunk`
     pub sched: bool,
     pub scheduler: SchedulerConfig,
+    /// content-addressed prefix cache over the paged KV pool ([serve]
+    /// prefix_cache = false, or `serve --no-prefix-cache`, disables
+    /// block sharing; freed prefix blocks then return straight to the
+    /// free list instead of the cached-free LRU)
+    pub prefix_cache: bool,
 }
 
 impl Default for ServeSettings {
@@ -74,6 +80,7 @@ impl Default for ServeSettings {
             workers: 2,
             sched: true,
             scheduler: SchedulerConfig::default(),
+            prefix_cache: true,
         }
     }
 }
@@ -173,6 +180,10 @@ impl Config {
         cfg.serve.scheduler.prefill_chunk =
             get_usize("serve.sched_chunk",
                       cfg.serve.scheduler.prefill_chunk).max(1);
+        if let Some(b) = t.get("serve.prefix_cache").and_then(|v| v.as_bool())
+        {
+            cfg.serve.prefix_cache = b;
+        }
         if let Some(v) = t.get("http.addr").and_then(|v| v.as_str()) {
             cfg.http.addr = v.to_string();
         }
@@ -247,9 +258,10 @@ mod tests {
     fn parses_scheduler_knobs() {
         let t = toml::parse(
             "[serve]\nsched = false\nsched_live = 12\nsched_block = 8\n\
-             sched_chunk = 32\n").unwrap();
+             sched_chunk = 32\nprefix_cache = false\n").unwrap();
         let c = Config::from_table(&t).unwrap();
         assert!(!c.serve.sched);
+        assert!(!c.serve.prefix_cache);
         assert_eq!(c.serve.scheduler.max_live, 12);
         assert_eq!(c.serve.scheduler.block_tokens, 8);
         assert_eq!(c.serve.scheduler.prefill_chunk, 32);

@@ -21,6 +21,8 @@
 //! (`coordinator::scheduler`).
 
 use super::pages::PageAllocator;
+use super::prefixcache::{PrefixCache, PrefixHit, PrefixStats};
+use crate::runtime::decode::PrefixSnapshot;
 pub use crate::runtime::decode::CacheKind;
 
 /// Default page size in tokens (at the variant's nominal byte-rate) —
@@ -34,7 +36,12 @@ pub struct KvCacheManager {
     kind: CacheKind,
     n_layers: usize,
     bytes_per_el: usize,
+    block_tokens: usize,
     pages: PageAllocator,
+    /// content-addressed prefix cache over this pool's blocks — on by
+    /// default, `None` when killed via
+    /// [`KvCacheManager::set_prefix_cache`]
+    prefix: Option<PrefixCache>,
     pub peak_bytes: usize,
     pub evictions: u64,
 }
@@ -56,12 +63,15 @@ impl KvCacheManager {
                              block_tokens: usize) -> Self {
         let bpt =
             kind.bytes_per_token_layer(bytes_per_el) * n_layers;
-        let block_bytes = (block_tokens.max(1) * bpt.max(1)).max(1);
+        let block_tokens = block_tokens.max(1);
+        let block_bytes = (block_tokens * bpt.max(1)).max(1);
         KvCacheManager {
             kind,
             n_layers,
             bytes_per_el,
+            block_tokens,
             pages: PageAllocator::new(budget_bytes, block_bytes),
+            prefix: Some(PrefixCache::new(block_tokens)),
             peak_bytes: 0,
             evictions: 0,
         }
@@ -101,8 +111,115 @@ impl KvCacheManager {
     pub fn admit_with(&mut self, seq_id: u64, tokens: usize,
                       bytes_per_token: usize) -> bool {
         let ok = self.pages.admit(seq_id, tokens, bytes_per_token);
+        self.sync_prefix_reclaims();
         self.note_peak();
         ok
+    }
+
+    /// Scheduler admission through the prefix cache: probe for the
+    /// longest cached prefix of `feed` (capped one token short, so the
+    /// feed always runs ≥ 1 token forward and produces logits), then
+    /// admit with the hit's blocks *shared* when the session is billed at
+    /// the nominal rate — off-rate sessions get plain whole billing but
+    /// still reuse the hit's tensor rows. Returns the hit only when the
+    /// admission succeeded; effectiveness counters move only then, so a
+    /// requeue-and-retry never double-counts.
+    pub fn admit_prefixed(&mut self, seq_id: u64, feed: &[i32],
+                          bytes_per_token: usize)
+                          -> (bool, Option<PrefixHit>) {
+        let nominal = bytes_per_token == self.bytes_per_token();
+        let hit = self.prefix.as_ref()
+            .and_then(|p| p.lookup(feed, feed.len().saturating_sub(1)));
+        let ok = match &hit {
+            Some(h) if nominal => self.pages.admit_shared(
+                seq_id, feed.len(), bytes_per_token, &h.blocks),
+            _ => self.pages.admit(seq_id, feed.len(), bytes_per_token),
+        };
+        self.sync_prefix_reclaims();
+        self.note_peak();
+        if ok {
+            if let Some(p) = self.prefix.as_mut() {
+                match &hit {
+                    Some(h) => {
+                        p.hits += 1;
+                        p.saved_tokens += h.tokens as u64;
+                    }
+                    None => p.misses += 1,
+                }
+            }
+        }
+        (ok, if ok { hit } else { None })
+    }
+
+    /// Donate the leading full blocks of a live sequence's prompt (rows
+    /// in `snap`, which must cover at least those tokens) into the prefix
+    /// cache. Idempotent — existing entries are skipped — and restricted
+    /// to sequences admitted at the nominal rate, where physical block i
+    /// holds exactly token block i.
+    pub fn donate_prefix(&mut self, seq_id: u64, tokens: &[i32],
+                         snap: &PrefixSnapshot) {
+        if self.pages.rate_of(seq_id) != Some(self.bytes_per_token()) {
+            return;
+        }
+        let Some(p) = self.prefix.as_mut() else {
+            return;
+        };
+        let Some(blocks) = self.pages.block_ids(seq_id) else {
+            return;
+        };
+        for b in p.insert(tokens, blocks, snap) {
+            self.pages.mark_cached(b);
+        }
+    }
+
+    /// Full-block tokens of `tokens` the cache already serves (donation
+    /// skip probe).
+    pub fn prefix_matched_tokens(&self, tokens: &[i32]) -> usize {
+        self.prefix.as_ref()
+            .map(|p| p.matched_tokens(tokens))
+            .unwrap_or(0)
+    }
+
+    /// Kill switch: turning the cache off forgets every entry and
+    /// unflags its blocks (parked ones move to the free set); turning it
+    /// on starts empty.
+    pub fn set_prefix_cache(&mut self, on: bool) {
+        if on {
+            if self.prefix.is_none() {
+                self.prefix = Some(PrefixCache::new(self.block_tokens));
+            }
+        } else if let Some(p) = self.prefix.take() {
+            for b in p.all_blocks() {
+                self.pages.uncache(b);
+            }
+        }
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Effectiveness counters (zeroes when the cache is off).
+    pub fn prefix_stats(&self) -> PrefixStats {
+        self.prefix.as_ref().map(|p| p.stats()).unwrap_or_default()
+    }
+
+    /// Blocks the allocator reclaimed under pressure carry prefix
+    /// content that no longer exists: evict their entries (and every
+    /// descendant) and unflag the orphans. Called after every operation
+    /// that can allocate.
+    fn sync_prefix_reclaims(&mut self) {
+        let reclaimed = self.pages.take_reclaimed();
+        if reclaimed.is_empty() {
+            return;
+        }
+        if let Some(p) = self.prefix.as_mut() {
+            for b in reclaimed {
+                for orphan in p.forget_block(b) {
+                    self.pages.uncache(orphan);
+                }
+            }
+        }
     }
 
     /// Grow a sequence by one decoded token (billed at its admission
@@ -112,6 +229,7 @@ impl KvCacheManager {
     /// preempts a *chosen* victim instead.
     pub fn extend(&mut self, seq_id: u64) -> bool {
         if self.pages.extend(seq_id) {
+            self.sync_prefix_reclaims();
             self.note_peak();
             return true;
         }
@@ -127,6 +245,7 @@ impl KvCacheManager {
     /// victim and retry. False for unknown sequences too.
     pub fn try_extend(&mut self, seq_id: u64) -> bool {
         let ok = self.pages.extend(seq_id);
+        self.sync_prefix_reclaims();
         self.note_peak();
         ok
     }
@@ -164,6 +283,12 @@ impl KvCacheManager {
         self.pages.block_bytes()
     }
 
+    /// Tokens per block at the nominal rate (the prefix cache's keying
+    /// granularity).
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
     pub fn total_blocks(&self) -> usize {
         self.pages.total_blocks()
     }
@@ -194,6 +319,120 @@ impl KvCacheManager {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::decode::LayerCache;
+    use crate::Matrix;
+
+    /// One dense layer whose rows encode token ids — adoption and
+    /// resurrection stay checkable bit-for-bit.
+    fn snap_for(tokens: &[i32], d: usize) -> PrefixSnapshot {
+        let n = tokens.len();
+        PrefixSnapshot {
+            tokens: n,
+            layers: vec![LayerCache::Dense {
+                k: Matrix::from_fn(n, d, |r, c| tokens[r] as f64
+                                                + c as f64),
+                v: Matrix::from_fn(n, d, |r, _| tokens[r] as f64),
+            }],
+        }
+    }
+
+    #[test]
+    fn prefix_donation_hit_release_and_reclaim_cycle() {
+        // 1 layer d=8 at 2 B → 32 B/token; 4 blocks of 4 tokens
+        let mut m = KvCacheManager::new(CacheKind::Dense { d: 8 }, 1, 2,
+                                        32 * 16);
+        assert!(m.prefix_enabled(), "prefix cache defaults on");
+        assert_eq!(m.block_tokens(), 4);
+        let bpt = m.bytes_per_token();
+        let prompt: Vec<i32> = (0..8).collect(); // exactly 2 full blocks
+
+        // cold: admission is a miss, donation caches both blocks
+        let (ok, hit) = m.admit_prefixed(1, &prompt, bpt);
+        assert!(ok && hit.is_none());
+        m.donate_prefix(1, &prompt, &snap_for(&prompt, 8));
+        m.donate_prefix(1, &prompt, &snap_for(&prompt, 8)); // idempotent
+        let st = m.prefix_stats();
+        assert_eq!((st.cached_blocks, st.inserts, st.misses), (2, 2, 1));
+
+        // warm: a longer prompt sharing the prefix reuses both blocks
+        let mut p2 = prompt.clone();
+        p2.push(41);
+        let (ok, hit) = m.admit_prefixed(2, &p2, bpt);
+        assert!(ok);
+        let h = hit.unwrap();
+        assert_eq!(h.tokens, 8);
+        assert_eq!(m.used_bytes(), 3 * m.block_bytes(),
+                   "2 shared + 1 private, shared billed once");
+        let st = m.prefix_stats();
+        assert_eq!((st.hits, st.saved_tokens), (1, 8));
+        m.pages().check_invariants().unwrap();
+
+        // both holders gone: blocks park cached-free, still servable
+        m.release(1);
+        m.release(2);
+        assert_eq!(m.pages().cached_free_blocks(), 2);
+        assert_eq!(m.used_bytes(), 0);
+
+        // resurrection: an identical prompt pulls them back off the list
+        let (ok, hit) = m.admit_prefixed(3, &p2, bpt);
+        assert!(ok && hit.unwrap().tokens == 8);
+        m.release(3);
+
+        // pressure: a full-pool admission reclaims the parked blocks and
+        // the matching entries are evicted
+        assert!(m.admit(4, 16));
+        let st = m.prefix_stats();
+        assert_eq!((st.cached_blocks, st.evictions), (0, 2));
+        assert!(m.admit_prefixed(5, &p2, bpt).1.is_none(),
+                "reclaimed content must not be served");
+        m.pages().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefix_kill_switch_unflags_blocks() {
+        let mut m = KvCacheManager::new(CacheKind::Dense { d: 8 }, 1, 2,
+                                        32 * 16);
+        let bpt = m.bytes_per_token();
+        let prompt: Vec<i32> = (0..8).collect();
+        assert!(m.admit_prefixed(1, &prompt, bpt).0);
+        m.donate_prefix(1, &prompt, &snap_for(&prompt, 8));
+        m.release(1);
+        assert_eq!(m.pages().cached_free_blocks(), 2);
+
+        m.set_prefix_cache(false);
+        assert!(!m.prefix_enabled());
+        assert_eq!(m.pages().cached_free_blocks(), 0,
+                   "kill switch returns parked blocks to the free set");
+        assert_eq!(m.prefix_stats().cached_blocks, 0);
+        // lookups are gone, admissions still work (and count nothing)
+        let (ok, hit) = m.admit_prefixed(2, &prompt, bpt);
+        assert!(ok && hit.is_none());
+        assert_eq!(m.prefix_stats().misses, 0);
+        m.release(2);
+        // re-enabling starts empty
+        m.set_prefix_cache(true);
+        assert!(m.prefix_enabled());
+        assert!(m.admit_prefixed(3, &prompt, bpt).1.is_none());
+        m.pages().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn off_rate_sessions_reuse_data_but_never_share_blocks() {
+        // latent-accounted pool, dense-billed sessions (serve's latent
+        // variant running dense-layout weights): donation must refuse —
+        // block i would not align with token block i
+        let mut m = KvCacheManager::new(
+            CacheKind::Latent { rk: 4, rv: 4 }, 2, 2, 1 << 12);
+        let dense_bpt = m.bytes_per_token_for(CacheKind::Dense { d: 16 }, 2);
+        assert_ne!(dense_bpt, m.bytes_per_token());
+        let prompt: Vec<i32> = (0..8).collect();
+        assert!(m.admit_prefixed(1, &prompt, dense_bpt).0);
+        m.donate_prefix(1, &prompt, &snap_for(&prompt, 16));
+        assert_eq!(m.prefix_stats().cached_blocks, 0,
+                   "off-rate donation must be refused");
+        m.release(1);
+        m.pages().check_invariants().unwrap();
+    }
 
     #[test]
     fn latent_cache_fits_more_sequences() {

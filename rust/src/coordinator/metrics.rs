@@ -63,6 +63,30 @@ impl Metrics {
         }
     }
 
+    /// Set a level gauge to an absolute value (sampled levels like
+    /// `prefix_blocks_cached`, where the source of truth lives elsewhere
+    /// and is re-read periodically), recording `<name>_peak` like
+    /// [`Metrics::gauge_add`] does.
+    pub fn gauge_set(&self, name: &str, value: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.levels.insert(name.to_string(), value as i64);
+        if value > 0 {
+            let peak = g.gauges.entry(format!("{name}_peak")).or_insert(0);
+            *peak = (*peak).max(value);
+        }
+    }
+
+    /// Raise a counter to `value` if it is below it (no-op otherwise):
+    /// reconciles a cumulative total kept elsewhere (per-variant prefix
+    /// hit/evict counts summed under the router lock) into the registry
+    /// idempotently — re-sampling never double-counts, and the counter
+    /// stays monotone as Prometheus requires.
+    pub fn counter_max(&self, name: &str, value: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.counters.entry(name.to_string()).or_insert(0);
+        *e = (*e).max(value);
+    }
+
     /// Current value of a level gauge (0 if never touched).
     pub fn level(&self, name: &str) -> i64 {
         self.inner.lock().unwrap().levels.get(name).copied().unwrap_or(0)
@@ -232,6 +256,25 @@ mod tests {
         assert!(m.summary().contains("queue_peak: 5 (peak)"));
         assert!(!m.summary().contains("queue: 0 (now)"),
                 "zero levels stay out of the summary");
+    }
+
+    #[test]
+    fn gauge_set_and_counter_max_reconcile_idempotently() {
+        let m = Metrics::new();
+        m.gauge_set("prefix_blocks_cached", 7);
+        m.gauge_set("prefix_blocks_cached", 3);
+        assert_eq!(m.level("prefix_blocks_cached"), 3,
+                   "gauge_set is absolute, not max");
+        assert_eq!(m.gauge("prefix_blocks_cached_peak"), 7);
+        m.counter_max("prefix_hits", 5);
+        m.counter_max("prefix_hits", 5); // re-sample: no double count
+        m.counter_max("prefix_hits", 2); // stale sample: monotone
+        assert_eq!(m.counter("prefix_hits"), 5);
+        m.counter_max("prefix_hits", 9);
+        assert_eq!(m.counter("prefix_hits"), 9);
+        let text = m.render_prometheus();
+        assert!(text.contains("latentllm_prefix_hits_total 9"));
+        assert!(text.contains("latentllm_prefix_blocks_cached 3"));
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub mod http;
 pub mod kvcache;
 pub mod metrics;
 pub mod pages;
+pub mod prefixcache;
 pub mod router;
 pub mod scheduler;
 pub mod server;
@@ -19,6 +20,7 @@ pub use http::{HttpConfig, HttpServer};
 pub use kvcache::{CacheKind, KvCacheManager};
 pub use metrics::Metrics;
 pub use pages::PageAllocator;
+pub use prefixcache::{PrefixCache, PrefixHit, PrefixStats};
 pub use router::{ModelVariant, Router};
 pub use scheduler::{SchedulerConfig, WorkerScheduler};
 pub use server::{

@@ -1,5 +1,6 @@
 //! Paged KV-cache block allocator — the vLLM/PagedAttention-shaped
-//! replacement for byte-counter admission.
+//! replacement for byte-counter admission, now with refcounted sharing
+//! and copy-on-write for the prefix cache.
 //!
 //! The pool is a fixed set of equal-sized physical blocks carved out of
 //! the variant's byte budget. A block is sized in *tokens at the
@@ -13,14 +14,36 @@
 //! block than a dense layer's `2·d`, so the same pool admits more live
 //! latent sessions than dense ones.
 //!
+//! **Sharing and copy-on-write.** Since the prefix-cache PR a physical
+//! block can be held by *several* sequences at once (a shared prompt
+//! prefix): each block carries a refcount, shared admission
+//! ([`PageAllocator::admit_shared`]) bumps it instead of allocating, and
+//! `used` accounting counts each distinct block once — shared prefixes
+//! cost the pool nothing beyond their single copy. Writes stay exclusive:
+//! [`PageAllocator::extend`] never grows into a block with refcount > 1 —
+//! it copy-on-write swaps in a private replacement first (the
+//! `cow_clones` counter) — so a writer can never alias a shared block.
+//!
+//! **Two free lists.** Truly-free blocks live in an ordered set (lowest
+//! id first, deterministic reuse). Blocks whose last reference was
+//! released but whose content the prefix cache still indexes park on an
+//! LRU *cached-free* list instead: a future prefix hit resurrects them
+//! for free, and when the free set runs dry the allocator reclaims them
+//! oldest-first, recording the reclaimed ids in
+//! [`PageAllocator::take_reclaimed`] so the owner can drop the matching
+//! prefix-cache entries. Cached prefixes therefore cost zero *reserved*
+//! capacity — `fits_total` and admission see cached-free blocks as
+//! available.
+//!
 //! The allocator only *accounts* — the tensors live in each session's
 //! [`crate::runtime::decode::DecodeState`] and are freed by dropping the
-//! session. Invariants (each block owned by exactly one sequence or the
-//! free list, no double-frees, churn conserves the pool) are enforced
-//! structurally and re-checkable via [`PageAllocator::check_invariants`]
-//! (property-tested in `tests/properties.rs`).
+//! session. Invariants (each block free XOR cached-free XOR refcounted,
+//! refcounts equal to the number of holders, churn conserves the pool)
+//! are enforced structurally and re-checkable via
+//! [`PageAllocator::check_invariants`] (property-tested in
+//! `tests/properties.rs`).
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap, VecDeque};
 
 #[derive(Debug)]
 struct SeqPages {
@@ -31,18 +54,48 @@ struct SeqPages {
     bytes_per_token: usize,
 }
 
-/// Fixed-pool block allocator with LIFO free-list reuse.
+/// The ordered free structure: truly-free blocks (no content anyone
+/// wants) in an ascending set, plus the LRU list of **cached-free**
+/// blocks — refcount 0 but still indexed by the prefix cache, eligible
+/// for resurrection or reclaim.
+#[derive(Debug, Default)]
+struct FreeLists {
+    /// truly free, handed out lowest-id-first (deterministic)
+    free: BTreeSet<u32>,
+    /// refcount-0 blocks the prefix cache still indexes; front = least
+    /// recently released = first reclaimed
+    cached: VecDeque<u32>,
+}
+
+impl FreeLists {
+    fn len(&self) -> usize {
+        self.free.len() + self.cached.len()
+    }
+}
+
+/// Fixed-pool block allocator with refcounted sharing, copy-on-write,
+/// and a truly-free / cached-free split free structure.
 #[derive(Debug)]
 pub struct PageAllocator {
     block_bytes: usize,
     total_blocks: usize,
-    /// LIFO: the most recently freed block is handed out first, keeping
-    /// hot blocks hot
-    free: Vec<u32>,
+    lists: FreeLists,
+    /// per-block holder count; free and cached-free blocks are 0
+    refcount: Vec<u32>,
+    /// per-block "the prefix cache indexes this content" flag —
+    /// orthogonal to refcount (a donor still holds its cached blocks)
+    cached: Vec<bool>,
     seqs: HashMap<u64, SeqPages>,
+    /// distinct blocks with refcount ≥ 1 (shared blocks count once)
     blocks_in_use: usize,
+    /// cached-free blocks reclaimed for fresh allocation since the last
+    /// [`PageAllocator::take_reclaimed`] — the owner must forget their
+    /// prefix-cache entries
+    reclaimed: Vec<u32>,
     /// high-water mark of `blocks_in_use`, monotone
     pub peak_blocks: usize,
+    /// copy-on-write clones performed by [`PageAllocator::extend`]
+    pub cow_clones: u64,
 }
 
 impl PageAllocator {
@@ -51,15 +104,20 @@ impl PageAllocator {
     pub fn new(budget_bytes: usize, block_bytes: usize) -> PageAllocator {
         let block_bytes = block_bytes.max(1);
         let total_blocks = budget_bytes / block_bytes;
-        // reversed so block 0 pops first (free-list pops from the back)
-        let free: Vec<u32> = (0..total_blocks as u32).rev().collect();
         PageAllocator {
             block_bytes,
             total_blocks,
-            free,
+            lists: FreeLists {
+                free: (0..total_blocks as u32).collect(),
+                cached: VecDeque::new(),
+            },
+            refcount: vec![0; total_blocks],
+            cached: vec![false; total_blocks],
             seqs: HashMap::new(),
             blocks_in_use: 0,
+            reclaimed: Vec::new(),
             peak_blocks: 0,
+            cow_clones: 0,
         }
     }
 
@@ -70,63 +128,203 @@ impl PageAllocator {
         bytes.div_ceil(self.block_bytes)
     }
 
+    /// Blocks allocatable right now: truly free plus reclaimable
+    /// cached-free.
+    fn available(&self) -> usize {
+        self.lists.len()
+    }
+
+    /// Take `n` blocks for fresh (exclusive) use: truly-free first, then
+    /// reclaiming cached-free oldest-first — those ids are appended to
+    /// the reclaim log for the owner to forget. Returns `None` without
+    /// mutating when `n` exceeds what is available.
+    fn take_free(&mut self, n: usize) -> Option<Vec<u32>> {
+        if n > self.available() {
+            return None;
+        }
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let b = match self.lists.free.pop_first() {
+                Some(b) => b,
+                None => {
+                    let b = self.lists.cached.pop_front()
+                        .expect("available() promised a block");
+                    self.cached[b as usize] = false;
+                    self.reclaimed.push(b);
+                    b
+                }
+            };
+            self.refcount[b as usize] = 1;
+            out.push(b);
+        }
+        self.blocks_in_use += n;
+        self.peak_blocks = self.peak_blocks.max(self.blocks_in_use);
+        Some(out)
+    }
+
+    /// Drop one reference to `b`, parking it on the right free list when
+    /// the count hits zero.
+    fn unref(&mut self, b: u32) {
+        let i = b as usize;
+        debug_assert!(self.refcount[i] > 0, "unref of free block {b}");
+        self.refcount[i] -= 1;
+        if self.refcount[i] == 0 {
+            self.blocks_in_use -= 1;
+            if self.cached[i] {
+                self.lists.cached.push_back(b);
+            } else {
+                self.lists.free.insert(b);
+            }
+        }
+    }
+
     /// Reserve blocks for `tokens` tokens at `bytes_per_token`. A live
     /// `seq_id` is replaced release-then-reserve (re-admission after
     /// preemption), so a stale reservation can never leak. Returns false
-    /// — leaving the sequence unregistered — when the free list cannot
-    /// cover it.
+    /// — leaving the sequence unregistered — when the pool cannot cover
+    /// it even after reclaiming cached-free blocks.
     pub fn admit(&mut self, seq_id: u64, tokens: usize,
                  bytes_per_token: usize) -> bool {
+        self.admit_shared(seq_id, tokens, bytes_per_token, &[])
+    }
+
+    /// [`PageAllocator::admit`] with the leading blocks *shared*: each id
+    /// in `shared` must be a live or cached-free block (the prefix cache
+    /// hands these out); its refcount is bumped — resurrecting it off the
+    /// cached-free list if parked there — instead of allocating, and only
+    /// the remainder is drawn from the free lists. Atomic: on false
+    /// nothing changed. `shared` must not exceed the sequence's total
+    /// block need and must not repeat ids.
+    pub fn admit_shared(&mut self, seq_id: u64, tokens: usize,
+                        bytes_per_token: usize, shared: &[u32]) -> bool {
         self.release(seq_id);
         let need = self.blocks_for(tokens, bytes_per_token);
-        if need > self.free.len() {
+        if shared.len() > need {
             return false;
         }
-        let at = self.free.len() - need;
-        let blocks = self.free.split_off(at);
-        self.blocks_in_use += need;
+        for (i, &b) in shared.iter().enumerate() {
+            let valid = (b as usize) < self.total_blocks
+                && (self.refcount[b as usize] > 0
+                    || self.cached[b as usize]);
+            if !valid || shared[..i].contains(&b) {
+                return false;
+            }
+        }
+        // private remainder must not count resurrect-targets as
+        // reclaimable — they are about to leave the cached-free list
+        let resurrecting = shared.iter()
+            .filter(|&&b| self.refcount[b as usize] == 0)
+            .count();
+        let private = need - shared.len();
+        if private > self.available() - resurrecting.min(self.available()) {
+            return false;
+        }
+        let mut blocks = Vec::with_capacity(need);
+        for &b in shared {
+            let i = b as usize;
+            if self.refcount[i] == 0 {
+                // resurrect off the cached-free list
+                self.lists.cached.retain(|&x| x != b);
+                self.blocks_in_use += 1;
+            }
+            self.refcount[i] += 1;
+            blocks.push(b);
+        }
         self.peak_blocks = self.peak_blocks.max(self.blocks_in_use);
+        blocks.extend(self.take_free(private)
+            .expect("availability checked above"));
         self.seqs.insert(seq_id,
                          SeqPages { blocks, tokens, bytes_per_token });
         true
     }
 
     /// Grow a sequence by one token, allocating a fresh block when it
-    /// crosses a block boundary. Returns false — without touching the
-    /// sequence — when the sequence is unknown or the pool has no free
-    /// block; the *caller* decides between eviction and
-    /// preemption-by-requeue.
+    /// crosses a block boundary — and **copy-on-write unsharing** the
+    /// write target first when the token lands in a block with
+    /// refcount > 1 (a writer never aliases a shared block). Returns
+    /// false — without touching the sequence — when the sequence is
+    /// unknown or no block can be found; the *caller* decides between
+    /// eviction and preemption-by-requeue.
     pub fn extend(&mut self, seq_id: u64) -> bool {
-        let Some(s) = self.seqs.get_mut(&seq_id) else {
+        let Some(s) = self.seqs.get(&seq_id) else {
             return false;
         };
         let bpt = s.bytes_per_token;
         let need = (s.tokens + 1) * bpt;
         let have = s.blocks.len() * self.block_bytes;
         if need <= have {
+            // the new token lands in the last held block: COW it first
+            // if it is shared (zero-rate sequences hold no blocks and
+            // have nothing to unshare)
+            let last = s.blocks.last().copied();
+            if let Some(last) = last.filter(|&b| {
+                self.refcount[b as usize] > 1
+            }) {
+                let Some(fresh) = self.take_free(1) else {
+                    return false;
+                };
+                self.unref(last);
+                let s = self.seqs.get_mut(&seq_id).expect("checked");
+                *s.blocks.last_mut().expect("non-empty") = fresh[0];
+                self.cow_clones += 1;
+            }
+            let s = self.seqs.get_mut(&seq_id).expect("checked");
             s.tokens += 1;
             return true;
         }
         let grow = (need - have).div_ceil(self.block_bytes);
-        if grow > self.free.len() {
+        let Some(fresh) = self.take_free(grow) else {
             return false;
-        }
-        let at = self.free.len() - grow;
-        s.blocks.extend(self.free.drain(at..));
+        };
+        let s = self.seqs.get_mut(&seq_id).expect("checked");
+        s.blocks.extend(fresh);
         s.tokens += 1;
-        self.blocks_in_use += grow;
-        self.peak_blocks = self.peak_blocks.max(self.blocks_in_use);
         true
     }
 
-    /// Return every block a sequence holds to the free list. Unknown ids
-    /// are a no-op — release is idempotent, so a double-release cannot
-    /// double-free.
+    /// Drop a sequence's references. Exclusive blocks return to the free
+    /// set (or the cached-free list, if the prefix cache indexes them);
+    /// shared blocks just lose one holder. Unknown ids are a no-op —
+    /// release is idempotent, so a double-release cannot double-free.
     pub fn release(&mut self, seq_id: u64) {
         if let Some(s) = self.seqs.remove(&seq_id) {
-            self.blocks_in_use -= s.blocks.len();
-            self.free.extend(s.blocks);
+            for b in s.blocks {
+                self.unref(b);
+            }
         }
+    }
+
+    /// Flag a (held) block as indexed by the prefix cache: when its last
+    /// reference drops it will park on the cached-free LRU list instead
+    /// of the free set. False if the block is out of range or not held.
+    pub fn mark_cached(&mut self, b: u32) -> bool {
+        let i = b as usize;
+        if i >= self.total_blocks || self.refcount[i] == 0 {
+            return false;
+        }
+        self.cached[i] = true;
+        true
+    }
+
+    /// The prefix cache no longer indexes `b`: clear the flag and, if
+    /// the block was parked cached-free, move it to the free set.
+    pub fn uncache(&mut self, b: u32) {
+        let i = b as usize;
+        if i >= self.total_blocks || !self.cached[i] {
+            return;
+        }
+        self.cached[i] = false;
+        if self.refcount[i] == 0 {
+            self.lists.cached.retain(|&x| x != b);
+            self.lists.free.insert(b);
+        }
+    }
+
+    /// Drain the log of cached-free blocks reclaimed for fresh
+    /// allocation since the last call — the owner must evict the
+    /// matching prefix-cache entries (their content is gone).
+    pub fn take_reclaimed(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.reclaimed)
     }
 
     /// Whether a sequence of `tokens` tokens at `bytes_per_token` could
@@ -145,8 +343,22 @@ impl PageAllocator {
         self.total_blocks
     }
 
+    /// Truly-free blocks plus reclaimable cached-free blocks — what
+    /// admission can actually draw on.
     pub fn free_blocks(&self) -> usize {
-        self.free.len()
+        self.available()
+    }
+
+    /// Blocks parked on the cached-free LRU list (refcount 0, content
+    /// still indexed by the prefix cache).
+    pub fn cached_free_blocks(&self) -> usize {
+        self.lists.cached.len()
+    }
+
+    /// Blocks currently flagged as prefix-cache content (held or
+    /// parked).
+    pub fn cached_blocks(&self) -> usize {
+        self.cached.iter().filter(|&&c| c).count()
     }
 
     pub fn used_blocks(&self) -> usize {
@@ -154,7 +366,7 @@ impl PageAllocator {
     }
 
     /// Bytes the in-use blocks pin (block-quantized — a page pool cannot
-    /// hand out fractions of a block).
+    /// hand out fractions of a block; shared blocks count once).
     pub fn used_bytes(&self) -> usize {
         self.blocks_in_use * self.block_bytes
     }
@@ -169,37 +381,81 @@ impl PageAllocator {
         self.seqs.get(&seq_id).map(|s| s.blocks.len()).unwrap_or(0)
     }
 
+    /// The physical block ids a live sequence holds, admission order.
+    pub fn block_ids(&self, seq_id: u64) -> Option<&[u32]> {
+        self.seqs.get(&seq_id).map(|s| s.blocks.as_slice())
+    }
+
+    /// The byte-rate a live sequence was admitted at (`None` for unknown
+    /// ids) — block↔token alignment checks key off this.
+    pub fn rate_of(&self, seq_id: u64) -> Option<usize> {
+        self.seqs.get(&seq_id).map(|s| s.bytes_per_token)
+    }
+
     /// Tokens a live sequence is billed for (0 for unknown ids).
     pub fn tokens_of(&self, seq_id: u64) -> usize {
         self.seqs.get(&seq_id).map(|s| s.tokens).unwrap_or(0)
+    }
+
+    /// Holders of a physical block (0 = free or cached-free).
+    pub fn refcount_of(&self, b: u32) -> u32 {
+        self.refcount.get(b as usize).copied().unwrap_or(0)
     }
 
     pub fn active_sequences(&self) -> usize {
         self.seqs.len()
     }
 
-    /// Exhaustive ownership audit: every block id in range, owned by
-    /// exactly one sequence or the free list, and the pool conserved.
-    /// O(total²) worst case — a test/debug tool, not a hot-path check.
+    /// Exhaustive ownership audit: every block id in range and in
+    /// exactly one state (truly free, cached-free, or refcounted by ≥ 1
+    /// sequences), every refcount equal to the number of distinct
+    /// holders, no sequence holding a block twice, free/cached-free
+    /// blocks unreferenced, and the pool conserved
+    /// (`free + cached_free + in_use == total`). O(total²) worst case —
+    /// a test/debug tool, not a hot-path check.
     pub fn check_invariants(&self) -> Result<(), String> {
-        let mut seen = vec![false; self.total_blocks];
-        let mut own = |b: u32, who: &str| -> Result<(), String> {
+        let mut holders = vec![0u32; self.total_blocks];
+        let mut on_free = vec![false; self.total_blocks];
+        let park = |b: u32, who: &str, seen: &mut Vec<bool>|
+                    -> Result<(), String> {
             let i = b as usize;
             if i >= self.total_blocks {
                 return Err(format!("{who} holds out-of-range block {b}"));
             }
             if seen[i] {
-                return Err(format!("block {b} owned twice (second: {who})"));
+                return Err(format!("block {b} on a free list twice \
+                                    (second: {who})"));
             }
             seen[i] = true;
             Ok(())
         };
-        for &b in &self.free {
-            own(b, "free list")?;
+        for &b in &self.lists.free {
+            park(b, "free set", &mut on_free)?;
+            if self.cached[b as usize] {
+                return Err(format!("truly-free block {b} still flagged \
+                                    cached"));
+            }
+        }
+        for &b in &self.lists.cached {
+            park(b, "cached-free list", &mut on_free)?;
+            if !self.cached[b as usize] {
+                return Err(format!("cached-free block {b} not flagged \
+                                    cached"));
+            }
         }
         for (id, s) in &self.seqs {
+            let mut held: Vec<u32> = Vec::with_capacity(s.blocks.len());
             for &b in &s.blocks {
-                own(b, &format!("seq {id}"))?;
+                let i = b as usize;
+                if i >= self.total_blocks {
+                    return Err(format!("seq {id} holds out-of-range \
+                                        block {b}"));
+                }
+                if held.contains(&b) {
+                    return Err(format!("seq {id} holds block {b} twice"));
+                }
+                held.push(b);
+                holders[i] += 1;
             }
             let need = self.blocks_for(s.tokens, s.bytes_per_token);
             if s.blocks.len() < need {
@@ -209,11 +465,37 @@ impl PageAllocator {
                     s.tokens, s.bytes_per_token, s.blocks.len()));
             }
         }
-        let owned = self.free.len() + self.blocks_in_use;
-        if owned != self.total_blocks || seen.iter().any(|s| !s) {
+        let mut in_use = 0usize;
+        for i in 0..self.total_blocks {
+            if holders[i] != self.refcount[i] {
+                return Err(format!(
+                    "block {i}: refcount {} but {} holders",
+                    self.refcount[i], holders[i]));
+            }
+            match (holders[i] > 0, on_free[i]) {
+                (true, true) => {
+                    return Err(format!("block {i} both held and free"));
+                }
+                (false, false) => {
+                    return Err(format!("block {i} leaked: neither held \
+                                        nor on a free list"));
+                }
+                (true, false) => in_use += 1,
+                (false, true) => {}
+            }
+        }
+        if in_use != self.blocks_in_use {
+            return Err(format!("blocks_in_use {} but {} blocks held",
+                               self.blocks_in_use, in_use));
+        }
+        let owned = self.lists.free.len() + self.lists.cached.len()
+            + in_use;
+        if owned != self.total_blocks {
             return Err(format!(
-                "pool not conserved: {} free + {} in use != {} total",
-                self.free.len(), self.blocks_in_use, self.total_blocks));
+                "pool not conserved: {} free + {} cached-free + {} in \
+                 use != {} total",
+                self.lists.free.len(), self.lists.cached.len(), in_use,
+                self.total_blocks));
         }
         Ok(())
     }
@@ -294,6 +576,119 @@ mod tests {
         assert!(!p.admit(1, 1, 1));
         assert!(!p.fits_total(1, 1));
         assert!(p.admit(2, 0, 16), "an empty reservation needs no blocks");
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_admission_refcounts_and_bills_once() {
+        let mut p = PageAllocator::new(512, 64); // 8 blocks, 4 tok/blk @16
+        assert!(p.admit(1, 8, 16)); // 2 blocks, fully packed
+        let shared: Vec<u32> = p.block_ids(1).unwrap().to_vec();
+        // seq 2 shares both prefix blocks and adds 1 private block
+        assert!(p.admit_shared(2, 12, 16, &shared));
+        assert_eq!(p.blocks_of(2), 3);
+        assert_eq!(p.used_blocks(), 3, "shared blocks count once");
+        assert_eq!(p.refcount_of(shared[0]), 2);
+        p.check_invariants().unwrap();
+        // releasing one holder keeps the shared blocks alive
+        p.release(1);
+        assert_eq!(p.refcount_of(shared[0]), 1);
+        assert_eq!(p.used_blocks(), 3);
+        p.release(2);
+        assert_eq!(p.used_blocks(), 0);
+        assert_eq!(p.free_blocks(), 8);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cow_unshares_before_the_write() {
+        let mut p = PageAllocator::new(512, 64);
+        assert!(p.admit(1, 6, 16)); // 2 blocks, second half-full
+        let shared: Vec<u32> = p.block_ids(1).unwrap().to_vec();
+        // seq 2 shares both blocks at the same token count: its next
+        // token must land in the (shared, half-full) second block
+        assert!(p.admit_shared(2, 6, 16, &shared));
+        assert_eq!(p.refcount_of(shared[1]), 2);
+        assert!(p.extend(2));
+        assert_eq!(p.cow_clones, 1, "write into a shared block must COW");
+        assert_eq!(p.refcount_of(shared[1]), 1, "old block back to one \
+                                                 holder");
+        let b2 = p.block_ids(2).unwrap().to_vec();
+        assert_ne!(b2[1], shared[1], "writer got a private copy");
+        assert_eq!(p.refcount_of(b2[1]), 1);
+        p.check_invariants().unwrap();
+        // a writer never aliases: growing past the boundary allocates
+        // fresh private blocks, no COW needed
+        assert!(p.extend(2) && p.extend(2));
+        assert_eq!(p.cow_clones, 1);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cached_free_parks_resurrects_and_reclaims_lru() {
+        let mut p = PageAllocator::new(256, 64); // 4 blocks
+        assert!(p.admit(1, 8, 16)); // blocks 0,1 (full at 4 tok/blk)
+        let blocks: Vec<u32> = p.block_ids(1).unwrap().to_vec();
+        assert!(p.mark_cached(blocks[0]) && p.mark_cached(blocks[1]));
+        p.release(1);
+        assert_eq!(p.used_blocks(), 0);
+        assert_eq!(p.cached_free_blocks(), 2);
+        assert_eq!(p.free_blocks(), 4, "cached-free is still available");
+        p.check_invariants().unwrap();
+        // resurrect: a shared admission pulls them off the LRU list
+        assert!(p.admit_shared(2, 8, 16, &blocks));
+        assert_eq!(p.cached_free_blocks(), 0);
+        assert_eq!(p.used_blocks(), 2);
+        assert!(p.take_reclaimed().is_empty(), "resurrection is not \
+                                                reclaim");
+        p.release(2);
+        // reclaim: a big exclusive admission must eat the cached-free
+        // list oldest-first and log it
+        assert!(p.admit(3, 16, 16)); // all 4 blocks
+        let mut reclaimed = p.take_reclaimed();
+        reclaimed.sort_unstable();
+        assert_eq!(reclaimed, blocks, "cached-free content was \
+                                       reclaimed");
+        assert_eq!(p.cached_blocks(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn uncache_moves_parked_blocks_to_the_free_set() {
+        let mut p = PageAllocator::new(256, 64);
+        assert!(p.admit(1, 4, 16));
+        let b = p.block_ids(1).unwrap()[0];
+        assert!(p.mark_cached(b));
+        p.release(1);
+        assert_eq!(p.cached_free_blocks(), 1);
+        p.uncache(b);
+        assert_eq!(p.cached_free_blocks(), 0);
+        assert_eq!(p.cached_blocks(), 0);
+        assert!(p.take_reclaimed().is_empty(), "uncache is an owner \
+                                                eviction, not a reclaim");
+        p.check_invariants().unwrap();
+        assert!(!p.mark_cached(b), "free blocks cannot be marked cached");
+        assert!(!p.mark_cached(999));
+    }
+
+    #[test]
+    fn shared_admission_is_atomic_on_failure() {
+        let mut p = PageAllocator::new(256, 64); // 4 blocks
+        assert!(p.admit(1, 8, 16));
+        let shared: Vec<u32> = p.block_ids(1).unwrap().to_vec();
+        assert!(p.admit(2, 8, 16)); // pool now full
+        // needs 2 shared + 2 private but 0 are available
+        assert!(!p.admit_shared(3, 16, 16, &shared));
+        assert_eq!(p.refcount_of(shared[0]), 1, "failed shared admission \
+                                                 must not leak refs");
+        assert!(!p.contains(3));
+        p.check_invariants().unwrap();
+        // invalid shared lists are refused outright
+        assert!(!p.admit_shared(3, 16, 16, &[99]));
+        assert!(!p.admit_shared(3, 16, 16,
+                                &[shared[0], shared[0], shared[1]]));
+        assert!(!p.admit_shared(3, 4, 16, &shared),
+                "more shared blocks than the request needs");
         p.check_invariants().unwrap();
     }
 }

@@ -1,0 +1,400 @@
+//! Content-addressed prefix cache over the paged KV allocator.
+//!
+//! Identical prompt prefixes (system prompts, few-shot templates) are the
+//! dominant sharing pattern at serving scale, and the paper's latent
+//! cache makes each shared block r_k+r_v-sized instead of 2·d — so
+//! sharing multiplies the compression win rather than sitting beside it.
+//! This module addresses *full* KV blocks by a chain hash of their token
+//! ids: block i's key folds block i-1's key over block i's tokens, so a
+//! prefix of `n` full blocks is `n` chained entries and lookup walks the
+//! chain until the first miss. Keying is per-variant by construction
+//! (each [`crate::coordinator::kvcache::KvCacheManager`] owns one
+//! `PrefixCache`), so dense and latent pools never alias.
+//!
+//! The cache stores two things per entry: the *physical block id* in the
+//! owning [`crate::coordinator::pages::PageAllocator`] (for refcounted
+//! billing) and an immutable [`PrefixSnapshot`] of the block's actual
+//! cache rows (for seeding fresh sessions without a forward pass). Hash
+//! collisions are survivable: entries keep their token ids and lookup
+//! verifies them block-for-block.
+//!
+//! Lifecycle: a donated block is flagged "cached" in the allocator.
+//! While any session still references it, hits simply bump its refcount.
+//! When the last reference drops, the allocator parks it on the LRU
+//! cached-free list — still servable, zero reserved capacity. If the
+//! allocator later reclaims it under pressure, the owner calls
+//! [`PrefixCache::forget_block`], which cascades to every descendant
+//! entry (a child whose parent is gone could never be reached by a
+//! lookup walk anyway).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::runtime::decode::PrefixSnapshot;
+
+/// FNV-1a offset basis — the chain key of the empty prefix.
+const ROOT_KEY: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold one block of token ids into its parent's chain key (FNV-1a over
+/// the parent key's bytes then each token's little-endian bytes).
+pub fn chain_key(parent: u64, block: &[i32]) -> u64 {
+    let mut h = ROOT_KEY;
+    for b in parent.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    for t in block {
+        for b in t.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// One cached full block: its position in the chain, the tokens it
+/// covers (collision guard), its physical allocator block, and the
+/// actual cache rows sessions adopt.
+struct Entry {
+    parent: u64,
+    tokens: Vec<i32>,
+    block: u32,
+    data: Arc<PrefixSnapshot>,
+}
+
+/// A successful lookup: the longest cached prefix of the probed tokens,
+/// as whole blocks. `blocks` bill against the allocator (shared,
+/// refcounted); `snaps` seed the session's cache tensors.
+pub struct PrefixHit {
+    /// tokens covered (`blocks.len() × block_tokens`)
+    pub tokens: usize,
+    pub blocks: Vec<u32>,
+    pub snaps: Vec<Arc<PrefixSnapshot>>,
+}
+
+/// Aggregate effectiveness counters, sampled into the metrics registry
+/// by the server (see `sample_cache_peaks`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefixStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub inserts: u64,
+    pub saved_tokens: u64,
+    pub cached_blocks: u64,
+}
+
+pub struct PrefixCache {
+    block_tokens: usize,
+    entries: HashMap<u64, Entry>,
+    /// physical block → chain key (reclaim notifications arrive by block)
+    by_block: HashMap<u32, u64>,
+    /// chain key → child keys (cascade eviction walks down)
+    children: HashMap<u64, Vec<u64>>,
+    /// admissions that reused ≥ 1 cached block
+    pub hits: u64,
+    /// prefix-enabled admissions that reused nothing
+    pub misses: u64,
+    /// entries dropped because the allocator reclaimed their block
+    pub evictions: u64,
+    /// entries created by donation
+    pub inserts: u64,
+    /// prefill tokens skipped via adoption
+    pub saved_tokens: u64,
+}
+
+impl std::fmt::Debug for PrefixCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PrefixCache")
+            .field("block_tokens", &self.block_tokens)
+            .field("entries", &self.entries.len())
+            .field("hits", &self.hits)
+            .field("misses", &self.misses)
+            .field("evictions", &self.evictions)
+            .finish()
+    }
+}
+
+impl PrefixCache {
+    pub fn new(block_tokens: usize) -> PrefixCache {
+        PrefixCache {
+            block_tokens: block_tokens.max(1),
+            entries: HashMap::new(),
+            by_block: HashMap::new(),
+            children: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            inserts: 0,
+            saved_tokens: 0,
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Live cached entries (== physical blocks carrying prefix content).
+    pub fn cached_blocks(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        PrefixStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            inserts: self.inserts,
+            saved_tokens: self.saved_tokens,
+            cached_blocks: self.entries.len() as u64,
+        }
+    }
+
+    /// Walk the chain from the root: how many *full blocks* of `tokens`
+    /// are cached, stopping at the first miss and at `max_blocks`.
+    fn matched(&self, tokens: &[i32], max_blocks: usize) -> Vec<u64> {
+        let bt = self.block_tokens;
+        let mut keys = Vec::new();
+        let mut parent = ROOT_KEY;
+        while keys.len() < max_blocks {
+            let lo = keys.len() * bt;
+            if lo + bt > tokens.len() {
+                break;
+            }
+            let block = &tokens[lo..lo + bt];
+            let key = chain_key(parent, block);
+            match self.entries.get(&key) {
+                // collision guard: the key must describe these tokens
+                Some(e) if e.parent == parent && e.tokens == block => {
+                    keys.push(key);
+                    parent = key;
+                }
+                _ => break,
+            }
+        }
+        keys
+    }
+
+    /// Longest cached prefix of `tokens`, capped at `cap_tokens` (the
+    /// caller passes `feed_len - 1` so at least one token always runs
+    /// forward to produce logits). Pure — effectiveness counters are
+    /// bumped by the owner once the admission actually succeeds.
+    pub fn lookup(&self, tokens: &[i32], cap_tokens: usize) -> Option<PrefixHit> {
+        let keys = self.matched(tokens, cap_tokens / self.block_tokens);
+        if keys.is_empty() {
+            return None;
+        }
+        let mut blocks = Vec::with_capacity(keys.len());
+        let mut snaps = Vec::with_capacity(keys.len());
+        for k in &keys {
+            let e = &self.entries[k];
+            blocks.push(e.block);
+            snaps.push(e.data.clone());
+        }
+        Some(PrefixHit { tokens: keys.len() * self.block_tokens, blocks, snaps })
+    }
+
+    /// Full blocks of `tokens` already cached (donation skip probe —
+    /// no point re-exporting rows the cache already holds).
+    pub fn matched_tokens(&self, tokens: &[i32]) -> usize {
+        self.matched(tokens, usize::MAX).len() * self.block_tokens
+    }
+
+    /// Donate: create entries for every *full* block of `tokens` not
+    /// already cached, backing block i with physical block `blocks[i]`
+    /// and rows `snap[i·bt, (i+1)·bt)`. Existing entries are skipped
+    /// (donation is idempotent; concurrent donors converge). Returns the
+    /// physical blocks newly carrying cache content — the caller flags
+    /// them in the allocator.
+    pub fn insert(&mut self, tokens: &[i32], blocks: &[u32],
+                  snap: &PrefixSnapshot) -> Vec<u32> {
+        let bt = self.block_tokens;
+        let n = (tokens.len() / bt)
+            .min(blocks.len())
+            .min(snap.tokens / bt);
+        let mut newly = Vec::new();
+        let mut parent = ROOT_KEY;
+        for i in 0..n {
+            let chunk = &tokens[i * bt..(i + 1) * bt];
+            let key = chain_key(parent, chunk);
+            match self.entries.get(&key) {
+                Some(e) if e.parent == parent && e.tokens == chunk => {}
+                Some(_) => break, // hash collision: stop, don't overwrite
+                None => {
+                    // one physical block can't back two entries
+                    if self.by_block.contains_key(&blocks[i]) {
+                        break;
+                    }
+                    self.entries.insert(key, Entry {
+                        parent,
+                        tokens: chunk.to_vec(),
+                        block: blocks[i],
+                        data: Arc::new(snap.slice_tokens(i * bt, (i + 1) * bt)),
+                    });
+                    self.by_block.insert(blocks[i], key);
+                    self.children.entry(parent).or_default().push(key);
+                    self.inserts += 1;
+                    newly.push(blocks[i]);
+                }
+            }
+            parent = key;
+        }
+        newly
+    }
+
+    /// The allocator reclaimed physical block `b`: drop its entry and
+    /// every descendant (they are unreachable once their ancestor is
+    /// gone). Returns the *other* physical blocks whose entries died, so
+    /// the caller can clear their cached flag.
+    pub fn forget_block(&mut self, b: u32) -> Vec<u32> {
+        let Some(root) = self.by_block.remove(&b) else {
+            return Vec::new();
+        };
+        let mut stack = vec![root];
+        let mut orphaned = Vec::new();
+        while let Some(key) = stack.pop() {
+            if let Some(e) = self.entries.remove(&key) {
+                self.evictions += 1;
+                if e.block != b {
+                    self.by_block.remove(&e.block);
+                    orphaned.push(e.block);
+                }
+            }
+            if let Some(kids) = self.children.remove(&key) {
+                stack.extend(kids);
+            }
+        }
+        // the root's parent still lists it as a child; leave the stale
+        // key — cascade walks tolerate missing entries (see above)
+        orphaned
+    }
+
+    /// Every physical block currently backing an entry (used when the
+    /// cache is switched off mid-flight, to unflag them all).
+    pub fn all_blocks(&self) -> Vec<u32> {
+        self.by_block.keys().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::decode::LayerCache;
+    use crate::Matrix;
+
+    /// Snapshot whose single dense layer encodes each token's position —
+    /// block slices stay distinguishable after round-trips.
+    fn snap_for(tokens: &[i32]) -> PrefixSnapshot {
+        let n = tokens.len();
+        PrefixSnapshot {
+            tokens: n,
+            layers: vec![LayerCache::Dense {
+                k: Matrix::from_fn(n, 2, |r, c| tokens[r] as f64 * 10.0
+                                                + c as f64),
+                v: Matrix::from_fn(n, 2, |r, _| r as f64),
+            }],
+        }
+    }
+
+    #[test]
+    fn chain_keys_separate_prefixes_and_positions() {
+        let a = chain_key(ROOT_KEY, &[1, 2]);
+        let b = chain_key(ROOT_KEY, &[2, 1]);
+        assert_ne!(a, b, "order must matter");
+        // the same block under different parents gets different keys
+        assert_ne!(chain_key(a, &[5, 6]), chain_key(b, &[5, 6]));
+    }
+
+    #[test]
+    fn lookup_walks_the_chain_and_respects_the_cap() {
+        let mut c = PrefixCache::new(2);
+        let toks = [10, 11, 12, 13, 14, 15];
+        let newly = c.insert(&toks, &[7, 8, 9], &snap_for(&toks));
+        assert_eq!(newly, vec![7, 8, 9]);
+        assert_eq!(c.cached_blocks(), 3);
+
+        // full hit capped at feed_len-1 = 5 tokens → 2 blocks
+        let hit = c.lookup(&toks, 5).unwrap();
+        assert_eq!(hit.tokens, 4);
+        assert_eq!(hit.blocks, vec![7, 8]);
+        assert_eq!(hit.snaps[1].tokens, 2);
+
+        // diverging third block stops the walk after two
+        let div = [10, 11, 12, 13, 99, 15];
+        let hit = c.lookup(&div, 6).unwrap();
+        assert_eq!(hit.blocks, vec![7, 8]);
+
+        // diverging first block is a clean miss
+        assert!(c.lookup(&[99, 11, 12, 13], 4).is_none());
+        // shorter than one block: nothing to match
+        assert!(c.lookup(&[10], 1).is_none());
+        assert_eq!(c.matched_tokens(&toks), 6);
+        assert_eq!(c.matched_tokens(&div), 4);
+    }
+
+    #[test]
+    fn insert_is_idempotent_and_partial_overlap_extends() {
+        let mut c = PrefixCache::new(2);
+        let toks = [1, 2, 3, 4];
+        assert_eq!(c.insert(&toks, &[0, 1], &snap_for(&toks)).len(), 2);
+        // same donation again: nothing new
+        assert!(c.insert(&toks, &[0, 1], &snap_for(&toks)).is_empty());
+        // a longer prompt sharing the prefix adds only the tail block
+        let longer = [1, 2, 3, 4, 5, 6];
+        let newly = c.insert(&longer, &[0, 1, 5], &snap_for(&longer));
+        assert_eq!(newly, vec![5]);
+        assert_eq!(c.cached_blocks(), 3);
+        assert_eq!(c.stats().inserts, 3);
+        // trailing partial block is never cached
+        let odd = [1, 2, 3, 4, 5, 6, 7];
+        assert!(c.insert(&odd, &[0, 1, 5, 6], &snap_for(&odd)).is_empty());
+    }
+
+    #[test]
+    fn forget_block_cascades_to_descendants() {
+        let mut c = PrefixCache::new(2);
+        let toks = [1, 2, 3, 4, 5, 6];
+        c.insert(&toks, &[10, 11, 12], &snap_for(&toks));
+        // a sibling branch off the first block survives the cascade
+        let branch = [1, 2, 7, 8];
+        c.insert(&branch, &[10, 13], &snap_for(&branch));
+        assert_eq!(c.cached_blocks(), 4);
+
+        // reclaiming the *second* block orphans only its descendant
+        let mut orphans = c.forget_block(11);
+        orphans.sort_unstable();
+        assert_eq!(orphans, vec![12]);
+        assert_eq!(c.cached_blocks(), 2);
+        assert_eq!(c.stats().evictions, 2);
+        assert!(c.lookup(&toks, 6).unwrap().blocks == vec![10],
+                "first block still serves");
+        assert_eq!(c.lookup(&branch, 4).unwrap().blocks, vec![10, 13]);
+
+        // reclaiming the root takes the whole tree
+        let mut orphans = c.forget_block(10);
+        orphans.sort_unstable();
+        assert_eq!(orphans, vec![13]);
+        assert_eq!(c.cached_blocks(), 0);
+        assert!(c.lookup(&branch, 4).is_none());
+        // unknown block is a no-op
+        assert!(c.forget_block(99).is_empty());
+    }
+
+    #[test]
+    fn snapshots_survive_the_cache_bit_identical() {
+        let mut c = PrefixCache::new(2);
+        let toks = [3, 1, 4, 1];
+        let snap = snap_for(&toks);
+        c.insert(&toks, &[0, 1], &snap);
+        let hit = c.lookup(&toks, 4).unwrap();
+        let whole = PrefixSnapshot::concat(&hit.snaps).unwrap();
+        assert_eq!(whole.tokens, 4);
+        match (&whole.layers[0], &snap.layers[0]) {
+            (LayerCache::Dense { k: a, v: b },
+             LayerCache::Dense { k: c2, v: d }) => {
+                assert_eq!(a, c2);
+                assert_eq!(b, d);
+            }
+            _ => unreachable!(),
+        }
+    }
+}

@@ -31,6 +31,18 @@
 //! Each sampled token is pushed to the task's optional stream sender at
 //! the single sampling site — exactly once per token, because resume
 //! re-prefills the already-generated suffix without re-sampling it.
+//!
+//! **Prefix cache.** Admission probes the variant's content-addressed
+//! prefix cache (`super::prefixcache`): the longest cached full-block
+//! prefix of `prompt ++ generated` is billed as *shared* pages and its
+//! rows are adopted into the fresh session, so the prefill feed starts
+//! at the cache boundary. When a feed completes, the prompt's full
+//! blocks are donated back (idempotently). Token streams stay identical
+//! to the sequential path because adopted rows are bit-identical to what
+//! a cold prefill would compute — the same cached-decode identity the
+//! preemption story rests on — and shared pages are copy-on-write
+//! underneath (`super::pages`), so one request's decode can never
+//! scribble on another's prefix.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
@@ -44,7 +56,7 @@ use super::router::Router;
 use super::server::{sample_cache_peaks, GenerateOutput, GenerateParams,
                     Output, Response, ServeError};
 use crate::eval::generate::pick_token;
-use crate::runtime::decode::BatchedDecodeState;
+use crate::runtime::decode::{BatchedDecodeState, PrefixSnapshot};
 use crate::runtime::Engine;
 use crate::util::lock_unpoisoned;
 use crate::util::rng::Rng;
@@ -251,6 +263,11 @@ impl WorkerScheduler {
                 match self.feed_chunk(i) {
                     Ok(()) => {
                         metrics.incr("sched_prefill_chunks", 1);
+                        if self.live[i].logits.is_some() {
+                            // feed complete: offer the prompt's full
+                            // blocks to the variant's prefix cache
+                            self.donate_prefix(i, router);
+                        }
                         i += 1;
                     }
                     Err(e) => {
@@ -388,7 +405,7 @@ impl WorkerScheduler {
             }));
             return Admitted::Replied;
         };
-        let session = match engine.program(&program)
+        let mut session = match engine.program(&program)
             .and_then(|p| p.decode_session(&weights)) {
             Ok(s) => s,
             Err(e) => {
@@ -413,17 +430,48 @@ impl WorkerScheduler {
         }
         // re-admit at the session's REAL footprint (a latent-accounted
         // variant may run dense-layout weights) — and decide now whether
-        // the whole request could ever fit THIS pool at that rate
-        let (admitted, never_fits_here) = {
+        // the whole request could ever fit THIS pool at that rate.
+        // Admission goes through the prefix cache: the longest cached
+        // prefix of `prompt ++ generated` is billed as shared blocks and
+        // its rows are adopted into the fresh session, so the feed below
+        // starts at the cache boundary instead of position 0. All under
+        // one router lock, so a hit's blocks cannot be reclaimed between
+        // lookup and admission.
+        let (admitted, never_fits_here, fed) = {
             let mut r = lock_unpoisoned(router);
-            let cache = &mut r.variants[vidx].cache;
-            let actual_bpt = cache.bytes_per_token_for(
+            let actual_bpt = r.variants[vidx].cache.bytes_per_token_for(
                 session.cache_kind(), session.n_layers());
-            if !cache.fits_total(total_need, actual_bpt) {
-                cache.release(task.id);
-                (false, true)
+            if !r.variants[vidx].cache.fits_total(total_need, actual_bpt) {
+                r.variants[vidx].cache.release(task.id);
+                (false, true, 0)
             } else {
-                (cache.admit_with(task.id, feed_len, actual_bpt), false)
+                let feed: Vec<i32> = task.params.prompt.iter()
+                    .chain(task.generated.iter()).copied().collect();
+                let (ok, hit) = r.variants[vidx].cache
+                    .admit_prefixed(task.id, &feed, actual_bpt);
+                let mut fed = 0usize;
+                let mut lost = false;
+                if ok {
+                    if let Some(h) = hit {
+                        match PrefixSnapshot::concat(&h.snaps)
+                            .and_then(|snap| {
+                                session.adopt_prefix(&snap)?;
+                                Ok(snap.tokens)
+                            }) {
+                            Ok(n) => fed = n,
+                            Err(_) => {
+                                // backend can't adopt cached rows: fall
+                                // back to a cold full prefill, billed
+                                // plain (release-then-reserve drops the
+                                // shared refs)
+                                lost = !r.variants[vidx].cache.admit_with(
+                                    task.id, feed.len(), actual_bpt);
+                            }
+                        }
+                    }
+                    sample_cache_peaks(&r, metrics);
+                }
+                (ok && !lost, false, fed)
             }
         };
         if never_fits_here {
@@ -461,7 +509,7 @@ impl WorkerScheduler {
             slot,
             vidx,
             vname,
-            fed: 0,
+            fed,
             logits: None,
         });
         Admitted::Live
@@ -501,6 +549,46 @@ impl WorkerScheduler {
                 .ok_or_else(|| anyhow!("empty feed chunk"))?);
         }
         Ok(())
+    }
+
+    /// Offer sequence `i`'s *prompt* blocks to its variant's prefix
+    /// cache: export the leading full-block cache rows from the live
+    /// session and insert them keyed by the prompt's token chain.
+    /// Prompt-only (generated tokens diverge per request), nominal-rate
+    /// only (the cache's block↔token alignment), and skipped when the
+    /// cache already serves this prefix — so resume-after-preempt and
+    /// sibling requests donate nothing twice.
+    fn donate_prefix(&mut self, i: usize, router: &Mutex<Router>) {
+        let (vidx, key, slot) = {
+            let l = &self.live[i];
+            (l.vidx, l.task.id, l.slot)
+        };
+        let prompt = self.live[i].task.params.prompt.clone();
+        let export = {
+            let r = lock_unpoisoned(router);
+            let cache = &r.variants[vidx].cache;
+            if !cache.prefix_enabled()
+                || cache.pages().rate_of(key)
+                    != Some(cache.bytes_per_token()) {
+                return;
+            }
+            let bt = cache.block_tokens().max(1);
+            let full = (prompt.len() / bt) * bt;
+            if full == 0 || cache.prefix_matched_tokens(&prompt) >= full {
+                return;
+            }
+            full
+        };
+        let Some(sess) = self.batch.session_mut(slot) else {
+            return;
+        };
+        // backends without row export simply never donate
+        let Ok(snap) = sess.export_prefix(export) else {
+            return;
+        };
+        let mut r = lock_unpoisoned(router);
+        r.variants[vidx].cache.donate_prefix(key, &prompt[..export],
+                                             &snap);
     }
 
     /// Retire a completed sequence: reply, free pages + session.

@@ -978,13 +978,28 @@ fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
 /// budget-relevant capacity number: each variant holds its own budget.)
 pub(crate) fn sample_cache_peaks(r: &Router, metrics: &Arc<Metrics>) {
     let mut fleet = 0usize;
+    let mut prefix = crate::coordinator::prefixcache::PrefixStats::default();
     for v in &r.variants {
         let peak = v.cache.peak_bytes;
         fleet += peak;
         metrics.set_max(&format!("cache_bytes_peak_{}", v.name),
                         peak as u64);
+        let st = v.cache.prefix_stats();
+        prefix.hits += st.hits;
+        prefix.misses += st.misses;
+        prefix.evictions += st.evictions;
+        prefix.saved_tokens += st.saved_tokens;
+        prefix.cached_blocks += st.cached_blocks;
     }
     metrics.set_max("cache_bytes_peak", fleet as u64);
+    // prefix counters live in the per-variant caches (single source of
+    // truth, bumped under the router lock); reconcile them into the
+    // registry monotonically — re-sampling is idempotent
+    metrics.counter_max("prefix_hits", prefix.hits);
+    metrics.counter_max("prefix_misses", prefix.misses);
+    metrics.counter_max("prefix_evictions", prefix.evictions);
+    metrics.counter_max("prefix_saved_tokens", prefix.saved_tokens);
+    metrics.gauge_set("prefix_blocks_cached", prefix.cached_blocks);
 }
 
 /// Reject a request the program can never score; the caller gets a

@@ -83,7 +83,9 @@ USAGE:
                       [--policy cache_aware|prefer_latent|rr]
                       [--workers N] [--kv-mb N] [--no-sched]
                       [--sched-live N] [--sched-block T] [--sched-chunk T]
-                      [--config FILE.toml] [--artifacts DIR]
+                      [--no-prefix-cache] [--gen-shared-prefix T]
+                      [--dense-only] [--config FILE.toml]
+                      [--artifacts DIR]
   latentllm generate  --model opt-mini-m [--prompts 8] [--new 32]
                       [--temperature 0.8] [--latent] [--no-cache]
                       [--weights FILE.ltw] [--artifacts DIR]
@@ -101,7 +103,14 @@ Serving: generate traffic runs under a continuous-batching scheduler
        sessions per worker, --sched-block sizes the KV pages in tokens,
        --sched-chunk bounds prefill tokens per iteration, --kv-mb sets
        each variant's page-pool budget, and --no-sched falls back to
-       sequential one-session-per-worker decode.
+       sequential one-session-per-worker decode. Full prompt KV blocks
+       are content-addressed and shared copy-on-write across sessions
+       (--no-prefix-cache disables sharing); --gen-shared-prefix T
+       prepends T identical tokens to every generate prompt so the
+       reuse path is easy to exercise. --dense-only serves just the
+       dense variant — with one set of weights the emitted token
+       streams are reproducible run to run (routing noise gone), which
+       is what the CI digest checks rely on.
 HTTP:  serve --http ADDR (or [http] addr in the config) opens the
        HTTP/1.1 front door: POST /v1/completions (\"stream\": true emits
        tokens over chunked transfer as decode steps retire), POST
@@ -474,6 +483,14 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
         args.usize_flag("sched-chunk", sched_cfg.prefill_chunk).max(1);
     let use_sched = !args.flags.contains_key("no-sched")
         && file_cfg.serve.sched;
+    // prefix cache: CLI over config, default on ([serve] prefix_cache)
+    let use_prefix = if args.flags.contains_key("no-prefix-cache") {
+        false
+    } else if args.flags.contains_key("prefix-cache") {
+        true
+    } else {
+        file_cfg.serve.prefix_cache
+    };
     let budget = match args.flags.get("kv-mb") {
         Some(v) => {
             let mb = v.parse::<f64>()
@@ -490,7 +507,7 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     let r_lat = latentllm::compress::rank::local_rank(cfg.d, cfg.d,
                                                       1.0 - ratio, true);
     let bt = sched_cfg.block_tokens;
-    let variants = vec![
+    let mut variants = vec![
         ModelVariant {
             name: "dense".into(),
             score_program: format!("score_{model}"),
@@ -510,6 +527,17 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
                 cfg.n_layers, 2, budget, bt),
         },
     ];
+    // --dense-only: a single-weights deployment — every request decodes
+    // through the same model, so token streams depend only on (prompt,
+    // seed), not on routing/scheduling order
+    if args.flags.contains_key("dense-only") {
+        variants.truncate(1);
+    }
+    if !use_prefix {
+        for v in &mut variants {
+            v.cache.set_prefix_cache(false);
+        }
+    }
     // the paged pool in one line: how many live sessions each variant's
     // budget holds (the latent/dense gap IS the paper's benefit (ii))
     for v in &variants {
@@ -527,7 +555,7 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
         workers,
         sched: use_sched.then_some(sched_cfg),
     })?;
-    println!("serving with {} worker(s), scheduler {}",
+    println!("serving with {} worker(s), scheduler {}, prefix cache {}",
              server.live_workers(),
              if use_sched {
                  format!("on (live={} block={} chunk={})",
@@ -535,13 +563,26 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
                          sched_cfg.prefill_chunk)
              } else {
                  "off (sequential sessions)".to_string()
-             });
+             },
+             if use_prefix { "on" } else { "off" });
     let corpus = Corpus::load(artifacts.join("corpora.ltw"), "synthwiki",
                               "test")?;
     let reqs = corpus.calibration(n_requests, file_cfg.serve.seq_len, 99);
     let n_generate =
         args.usize_flag("generate", if http_on { 0 } else { 8 });
-    let gen_prompts = corpus.calibration(n_generate, 16, 101);
+    let mut gen_prompts = corpus.calibration(n_generate, 16, 101);
+    // --gen-shared-prefix T: every generate prompt starts with the same
+    // T deterministic tokens — a stand-in for a shared system prompt
+    // that makes the prefix-cache reuse path observable from the CLI
+    let shared = args.usize_flag("gen-shared-prefix", 0);
+    if shared > 0 {
+        let prefix: Vec<i32> =
+            (0..shared).map(|j| ((j * 7 + 3) % cfg.vocab) as i32).collect();
+        for p in &mut gen_prompts {
+            let tail = std::mem::take(p);
+            *p = prefix.iter().copied().chain(tail).collect();
+        }
+    }
     // the HTTP front door shares the coordinator with the in-process
     // self-traffic below (ids are server-minted, so they never collide)
     let server = std::sync::Arc::new(server);
@@ -579,11 +620,24 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     }
     let mut gen_ok = 0;
     let mut gen_evicted = 0;
+    // FNV-1a over every emitted token stream in submission order — the
+    // cold-vs-warm equality check CI greps for ("generate digest:")
+    let mut digest: u64 = 0xcbf2_9ce4_8422_2325;
     for rx in gen_rxs {
-        match rx.recv() {
-            Ok(resp) if resp.result.is_ok() => gen_ok += 1,
-            Ok(resp) if resp.is_evicted() => gen_evicted += 1,
-            _ => {}
+        if let Ok(resp) = rx.recv() {
+            match &resp.result {
+                Ok(out) => {
+                    gen_ok += 1;
+                    for t in &out.tokens {
+                        for b in t.to_le_bytes() {
+                            digest = (digest ^ b as u64)
+                                .wrapping_mul(0x100_0000_01b3);
+                        }
+                    }
+                }
+                Err(_) if resp.is_evicted() => gen_evicted += 1,
+                Err(_) => {}
+            }
         }
     }
     let dt = t0.elapsed();
@@ -617,6 +671,12 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
                  metrics.gauge("live_sessions_peak"),
                  metrics.gauge("gen_queue_depth_peak"),
                  metrics.gauge("cache_bytes_peak"));
+        println!("prefix: hits={} misses={} saved_tokens={} evictions={}",
+                 metrics.counter("prefix_hits"),
+                 metrics.counter("prefix_misses"),
+                 metrics.counter("prefix_saved_tokens"),
+                 metrics.counter("prefix_evictions"));
+        println!("generate digest: {digest:016x}");
     }
     print!("{}", metrics.summary());
     Ok(())

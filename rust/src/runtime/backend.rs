@@ -13,7 +13,7 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use super::decode::CacheKind;
+use super::decode::{CacheKind, PrefixSnapshot};
 use super::literal::ParamValue;
 use crate::model::Weights;
 use crate::util::json::Value;
@@ -101,6 +101,22 @@ pub trait DecodeSession {
 
     /// Exact cached floats across all layers.
     fn cache_elements(&self) -> usize;
+
+    /// Copy out the first `tokens` cache rows of every layer so the
+    /// prefix cache can serve them to a later identical prompt. Backends
+    /// whose cache tensors live off-host keep the default error; the
+    /// scheduler then simply never donates from their sessions.
+    fn export_prefix(&self, _tokens: usize) -> Result<PrefixSnapshot> {
+        bail!("this backend does not export prefix cache blocks")
+    }
+
+    /// Seed a *fresh* session (no prefill yet) from a cached prefix, so
+    /// the first feed continues at position `prefix.tokens`. Backends
+    /// keep the default error to opt out; callers fall back to a cold
+    /// full prefill.
+    fn adopt_prefix(&mut self, _prefix: &PrefixSnapshot) -> Result<()> {
+        bail!("this backend does not adopt prefix cache blocks")
+    }
 }
 
 /// Compiles manifest programs into executables.

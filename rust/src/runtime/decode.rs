@@ -10,7 +10,8 @@
 //! runtime that *holds* the state and the coordinator that *accounts* it
 //! agree by construction).
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::sync::Arc;
 
 use super::backend::DecodeSession;
 use crate::Matrix;
@@ -39,6 +40,7 @@ impl CacheKind {
 }
 
 /// One attention layer's cache tensors, one row per cached token.
+#[derive(Clone, PartialEq)]
 pub enum LayerCache {
     /// projected K/V rows: `k`/`v` are [t, d]
     Dense { k: Matrix, v: Matrix },
@@ -74,6 +76,96 @@ impl LayerCache {
             LayerCache::Latent { ck, cv } => ck.cols() + cv.cols(),
         }
     }
+
+    /// Copy out the cache rows for token positions `[t0, t1)`.
+    pub fn slice_tokens(&self, t0: usize, t1: usize) -> LayerCache {
+        match self {
+            LayerCache::Dense { k, v } => LayerCache::Dense {
+                k: k.slice_rows(t0, t1),
+                v: v.slice_rows(t0, t1),
+            },
+            LayerCache::Latent { ck, cv } => LayerCache::Latent {
+                ck: ck.slice_rows(t0, t1),
+                cv: cv.slice_rows(t0, t1),
+            },
+        }
+    }
+
+    /// Append `other`'s rows to this layer's cache. Variant and widths
+    /// must agree (a dense layer can't adopt latent rows and vice versa).
+    pub fn append(&mut self, other: &LayerCache) -> Result<()> {
+        match (self, other) {
+            (LayerCache::Dense { k, v }, LayerCache::Dense { k: ok, v: ov }) => {
+                ensure!(k.cols() == ok.cols() && v.cols() == ov.cols(),
+                        "dense cache width mismatch: [{}, {}] vs [{}, {}]",
+                        k.cols(), v.cols(), ok.cols(), ov.cols());
+                k.push_rows(ok);
+                v.push_rows(ov);
+                Ok(())
+            }
+            (LayerCache::Latent { ck, cv },
+             LayerCache::Latent { ck: ok, cv: ov }) => {
+                ensure!(ck.cols() == ok.cols() && cv.cols() == ov.cols(),
+                        "latent cache rank mismatch: [{}, {}] vs [{}, {}]",
+                        ck.cols(), cv.cols(), ok.cols(), ov.cols());
+                ck.push_rows(ok);
+                cv.push_rows(ov);
+                Ok(())
+            }
+            _ => bail!("cache kind mismatch: dense layer vs latent rows"),
+        }
+    }
+}
+
+/// An immutable copy of the first `tokens` cache rows of every layer —
+/// the unit the prefix cache stores per block and the payload a fresh
+/// session adopts instead of re-running prefill. Rows are exactly what
+/// the donor's forward pass produced, so adoption is token-identical to
+/// recomputation by construction (causal rows depend only on the rows
+/// before them).
+#[derive(Clone, PartialEq)]
+pub struct PrefixSnapshot {
+    pub tokens: usize,
+    pub layers: Vec<LayerCache>,
+}
+
+impl PrefixSnapshot {
+    /// Copy out token positions `[t0, t1)` of every layer (used to split
+    /// a donated prefix into per-block cache entries).
+    pub fn slice_tokens(&self, t0: usize, t1: usize) -> PrefixSnapshot {
+        PrefixSnapshot {
+            tokens: t1 - t0,
+            layers: self.layers.iter().map(|l| l.slice_tokens(t0, t1)).collect(),
+        }
+    }
+
+    /// Stitch per-block snapshots back into one contiguous prefix, in
+    /// order. Every part must have the same layer structure.
+    pub fn concat(parts: &[Arc<PrefixSnapshot>]) -> Result<PrefixSnapshot> {
+        let first = parts.first()
+            .ok_or_else(|| anyhow!("prefix concat: no blocks"))?;
+        let mut out = PrefixSnapshot {
+            tokens: first.tokens,
+            layers: first.layers.clone(),
+        };
+        for p in &parts[1..] {
+            ensure!(p.layers.len() == out.layers.len(),
+                    "prefix concat: {} layers vs {}",
+                    p.layers.len(), out.layers.len());
+            for (mine, theirs) in out.layers.iter_mut().zip(&p.layers) {
+                mine.append(theirs)?;
+            }
+            out.tokens += p.tokens;
+        }
+        Ok(out)
+    }
+
+    /// Total floats held (all layers).
+    pub fn cache_elements(&self) -> usize {
+        self.layers.iter()
+            .map(|l| l.tokens() * l.elements_per_token())
+            .sum()
+    }
 }
 
 /// Whole-model decode state: one [`LayerCache`] per attention layer plus
@@ -105,6 +197,26 @@ impl DecodeState {
         self.layers.iter()
             .map(|l| l.tokens() * l.elements_per_token())
             .sum()
+    }
+
+    /// Seed an *empty* state from a cached prefix: append the snapshot's
+    /// rows to every layer and advance the position past them. The next
+    /// fed token then continues at position `snap.tokens`, exactly as if
+    /// those tokens had been prefilled here.
+    pub fn adopt_prefix(&mut self, snap: &PrefixSnapshot) -> Result<()> {
+        ensure!(self.tokens == 0,
+                "adopt_prefix: session already holds {} tokens", self.tokens);
+        ensure!(snap.layers.len() == self.layers.len(),
+                "adopt_prefix: prefix has {} layers, session has {}",
+                snap.layers.len(), self.layers.len());
+        for (mine, theirs) in self.layers.iter_mut().zip(&snap.layers) {
+            ensure!(theirs.tokens() == snap.tokens,
+                    "adopt_prefix: layer holds {} tokens, snapshot says {}",
+                    theirs.tokens(), snap.tokens);
+            mine.append(theirs)?;
+        }
+        self.tokens = snap.tokens;
+        Ok(())
     }
 }
 
@@ -151,6 +263,20 @@ impl BatchedDecodeState {
                 self.slots.len() - 1
             }
         }
+    }
+
+    /// Adopt a session seeded from a cached prefix: the snapshot's rows
+    /// are installed before the slot is handed out, so the scheduler's
+    /// first feed starts at position `prefix.tokens` instead of 0. With
+    /// `None` this is exactly [`BatchedDecodeState::insert`].
+    pub fn insert_prefilled(&mut self, seq: u64,
+                            mut session: Box<dyn DecodeSession>,
+                            prefix: Option<&PrefixSnapshot>)
+                            -> Result<usize> {
+        if let Some(p) = prefix {
+            session.adopt_prefix(p)?;
+        }
+        Ok(self.insert(seq, session))
     }
 
     /// Drop a slot (the session's cache tensors go with it — this IS
@@ -321,6 +447,71 @@ mod tests {
         let out = b.step_many(&[(c, 1), (a, 60)]);
         assert!(out[0].is_err());
         assert_eq!(out[1].as_ref().unwrap(), &vec![7.0, 60.0, 4.0]);
+    }
+
+    fn numbered(rows: usize, cols: usize, base: f64) -> Matrix {
+        Matrix::from_fn(rows, cols, |r, c| base + (r * cols + c) as f64)
+    }
+
+    #[test]
+    fn prefix_snapshot_slices_and_concats_roundtrip() {
+        let snap = PrefixSnapshot {
+            tokens: 4,
+            layers: vec![
+                LayerCache::Dense { k: numbered(4, 3, 0.0),
+                                    v: numbered(4, 3, 100.0) },
+                LayerCache::Latent { ck: numbered(4, 2, 200.0),
+                                     cv: numbered(4, 1, 300.0) },
+            ],
+        };
+        // split into two 2-token blocks, then stitch back together
+        let a = Arc::new(snap.slice_tokens(0, 2));
+        let b = Arc::new(snap.slice_tokens(2, 4));
+        assert_eq!(a.tokens, 2);
+        assert_eq!(a.cache_elements(), 2 * (6 + 3));
+        let whole = PrefixSnapshot::concat(&[a, b]).unwrap();
+        assert_eq!(whole.tokens, 4);
+        for (orig, got) in snap.layers.iter().zip(&whole.layers) {
+            match (orig, got) {
+                (LayerCache::Dense { k, v }, LayerCache::Dense { k: gk, v: gv }) => {
+                    assert_eq!(k, gk);
+                    assert_eq!(v, gv);
+                }
+                (LayerCache::Latent { ck, cv },
+                 LayerCache::Latent { ck: gk, cv: gv }) => {
+                    assert_eq!(ck, gk);
+                    assert_eq!(cv, gv);
+                }
+                _ => panic!("layer kind changed in roundtrip"),
+            }
+        }
+        assert!(PrefixSnapshot::concat(&[]).is_err());
+    }
+
+    #[test]
+    fn adopt_prefix_seeds_empty_state_only() {
+        let snap = PrefixSnapshot {
+            tokens: 3,
+            layers: vec![LayerCache::Dense { k: numbered(3, 2, 0.0),
+                                             v: numbered(3, 2, 50.0) }],
+        };
+        let mut st = DecodeState::new(vec![LayerCache::dense(2)]);
+        st.adopt_prefix(&snap).unwrap();
+        assert_eq!(st.cached_tokens(), 3);
+        assert_eq!(st.cache_elements(), 3 * 4);
+        // adopted rows are bit-identical to the donor's
+        match &st.layers[0] {
+            LayerCache::Dense { k, .. } => assert_eq!(k.row(2)[1], 5.0),
+            _ => unreachable!(),
+        }
+        // a second adoption (non-empty state) must refuse
+        assert!(st.adopt_prefix(&snap).is_err());
+        // kind mismatch refuses without panicking
+        let mut lat = DecodeState::new(vec![LayerCache::latent(2, 2)]);
+        assert!(lat.adopt_prefix(&snap).is_err());
+        // width mismatch refuses too
+        let mut wide = DecodeState::new(vec![LayerCache::dense(3)]);
+        assert!(wide.adopt_prefix(&snap).is_err());
     }
 
     #[test]

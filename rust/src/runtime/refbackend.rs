@@ -19,7 +19,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::backend::{Backend, DecodeSession, Executable, ProgramCtx};
-use super::decode::{CacheKind, DecodeState, LayerCache};
+use super::decode::{CacheKind, DecodeState, LayerCache, PrefixSnapshot};
 use super::literal::ParamValue;
 use crate::model::io::Tensor;
 use crate::model::Weights;
@@ -1288,6 +1288,27 @@ impl DecodeSession for RefDecodeSession {
     fn cache_elements(&self) -> usize {
         self.state.cache_elements()
     }
+
+    fn export_prefix(&self, tokens: usize) -> Result<PrefixSnapshot> {
+        if tokens > self.state.cached_tokens() {
+            bail!("export_prefix: {} tokens requested, {} cached",
+                  tokens, self.state.cached_tokens());
+        }
+        Ok(PrefixSnapshot {
+            tokens,
+            layers: self.state.layers.iter()
+                .map(|l| l.slice_tokens(0, tokens))
+                .collect(),
+        })
+    }
+
+    fn adopt_prefix(&mut self, prefix: &PrefixSnapshot) -> Result<()> {
+        if prefix.tokens > self.max_tokens {
+            bail!("adopt_prefix: {} tokens exceeds the positional table \
+                   ({} max)", prefix.tokens, self.max_tokens);
+        }
+        self.state.adopt_prefix(prefix).context("adopt prefix")
+    }
 }
 
 /// Buffer length must match the declared shape — callers can build
@@ -1682,5 +1703,40 @@ mod tests {
         assert!(images_3d(&bad_img).is_err());
         let bad_lens = ParamValue::I32 { shape: vec![3], data: vec![1] };
         assert!(lens_1d(&bad_lens).is_err());
+    }
+
+    #[test]
+    fn adopted_prefix_continues_bit_identical_to_cold_prefill() {
+        // the prefix-cache identity: export the first-k cache rows from
+        // one session, adopt them into a fresh one, feed the remainder —
+        // every subsequent logit row must match the cold session exactly.
+        let w = random_weights(&TINY, 31);
+        let model = std::sync::Arc::new(LoadedModel::Dense(
+            DenseModel::load(&w, &tiny_cfg()).unwrap()));
+        let prompt: Vec<i32> = (0..8).map(|i| (i * 5 + 2) % 40).collect();
+
+        let mut cold = RefDecodeSession::open(model.clone()).unwrap();
+        let cold_logits = cold.prefill(&prompt).unwrap();
+
+        // donor caches the full prompt; export only the first 6 tokens
+        let mut donor = RefDecodeSession::open(model.clone()).unwrap();
+        donor.prefill(&prompt).unwrap();
+        let snap = donor.export_prefix(6).unwrap();
+        assert_eq!(snap.tokens, 6);
+
+        let mut warm = RefDecodeSession::open(model.clone()).unwrap();
+        warm.adopt_prefix(&snap).unwrap();
+        assert_eq!(warm.cached_tokens(), 6);
+        // feed the uncached tail; the last row is the prefill logits
+        let rows = warm.step_many(&prompt[6..]).unwrap();
+        assert_eq!(rows.last().unwrap(), &cold_logits);
+
+        // and the decoded continuation stays identical too
+        assert_eq!(warm.step(7).unwrap(), cold.step(7).unwrap());
+
+        // exporting more than is cached refuses
+        assert!(warm.export_prefix(100).is_err());
+        // adopting into a non-empty session refuses
+        assert!(warm.adopt_prefix(&snap).is_err());
     }
 }

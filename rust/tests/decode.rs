@@ -16,6 +16,7 @@ use latentllm::data::synth::{latent_demo_ranks, write_test_artifacts};
 use latentllm::eval::generate::{generate, GenerateOpts};
 use latentllm::model::config::MiniConfig;
 use latentllm::model::Weights;
+use latentllm::runtime::decode::BatchedDecodeState;
 use latentllm::runtime::Engine;
 
 const TINY: MiniConfig = MiniConfig {
@@ -563,6 +564,196 @@ fn scheduler_reroutes_off_a_pool_that_can_never_hold_it() {
             r.error());
     let m = server.shutdown(Drain::Graceful);
     assert_eq!(m.counter("gen_evictions"), 1);
+    std::fs::remove_dir_all(&art).ok();
+}
+
+/// Shared-prefix decode traffic: every prompt starts with the same 8
+/// tokens (4 full blocks at block_tokens=2) and diverges after —
+/// greedy and sampled, with one pair diverging mid-chain so partial
+/// hits are exercised too.
+fn shared_prefix_requests() -> Vec<GenerateParams> {
+    let head: Vec<i32> = vec![2, 4, 6, 8, 1, 3, 5, 7];
+    let mk = |tail: &[i32], max_new: usize, temperature: f64, seed: u64| {
+        let mut prompt = head.clone();
+        prompt.extend_from_slice(tail);
+        GenerateParams { prompt, max_new, temperature, seed }
+    };
+    vec![
+        mk(&[9], 6, 0.0, 0),
+        mk(&[10, 11], 7, 0.8, 21),
+        mk(&[12, 13, 14], 5, 0.0, 0),
+        mk(&[9, 30], 6, 0.6, 77), // shares one extra block with req 0
+    ]
+}
+
+#[test]
+fn prefix_cache_reuse_is_token_identical_warm_and_cold() {
+    // the tentpole acceptance bar: scheduler decode with cold, warm and
+    // partially-hit prefixes must emit exactly the sequential path's
+    // tokens, dense AND latent, greedy AND sampled. The second batch on
+    // the same server re-runs every request against a hot cache.
+    let (art, _tag) = synth("prefixeq");
+    let reqs = shared_prefix_requests();
+    for variant in ["dense", "latent"] {
+        let sequential = tiny_server_with(art.clone(), 8 << 20, 1, None,
+                                          variant);
+        let want = run_decodes(&sequential, &reqs);
+        sequential.shutdown(Drain::Graceful);
+        for (t, err, _) in &want {
+            assert!(err.is_none(), "{variant} sequential failed: {err:?}");
+            assert!(!t.is_empty());
+        }
+        let sched = tiny_server_with(
+            art.clone(), 8 << 20, 1,
+            Some(SchedulerConfig { max_live: 4, block_tokens: 2,
+                                   prefill_chunk: 3 }),
+            variant);
+        let cold = run_decodes(&sched, &reqs);
+        let warm = run_decodes(&sched, &reqs);
+        let m = sched.shutdown(Drain::Graceful);
+        assert_eq!(cold, want, "{variant}: cold prefix-cache run diverged");
+        assert_eq!(warm, want, "{variant}: warm prefix-cache run diverged");
+        // every warm request admits against blocks donated by the cold
+        // batch (the 8-token head is 4 full blocks, under the feed-1 cap)
+        assert!(m.counter("prefix_hits") >= reqs.len() as u64,
+                "{variant}: warm batch must hit (hits={})",
+                m.counter("prefix_hits"));
+        assert!(m.counter("prefix_misses") >= 1,
+                "{variant}: the cold batch must miss first");
+        assert!(m.counter("prefix_saved_tokens") >= 8,
+                "{variant}: a hit must save at least the shared head");
+        assert!(m.gauge("prefix_blocks_cached_peak") > 0,
+                "{variant}: donated blocks must be visible in the gauge");
+    }
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn prefix_cache_preemption_cycle_stays_token_identical() {
+    // shared-prefix traffic on a pool too small for all three sessions:
+    // preempt→requeue→resume now re-admits THROUGH the prefix cache
+    // (the victim's own donated prompt blocks are the likeliest hit),
+    // and the token streams must still match an unconstrained
+    // sequential server exactly.
+    let (art, _tag) = synth("prefixpre");
+    let head = [2i32, 4, 6, 8];
+    let mk = |tail: &[i32], temperature: f64, seed: u64| {
+        let mut prompt = head.to_vec();
+        prompt.extend_from_slice(tail);
+        GenerateParams { prompt, max_new: 8, temperature, seed }
+    };
+    let reqs = vec![mk(&[9, 11], 0.0, 0), mk(&[13, 15], 0.7, 33),
+                    mk(&[17, 19], 0.0, 0)];
+    let oracle = tiny_server(art.clone(), 8 << 20, 1);
+    let want = run_decodes(&oracle, &reqs);
+    oracle.shutdown(Drain::Graceful);
+    for (t, err, _) in &want {
+        assert!(err.is_none(), "sequential failed: {err:?}");
+        assert!(!t.is_empty());
+    }
+    // each request needs 6 + 8 - 1 = 13 tokens = 7 two-token blocks:
+    // any one fits a 12-block pool alone, three cannot finish together
+    // even sharing the 2-block head (2 + 3·5 = 17 > 12)
+    let bpt = 2 * TINY.d * 2 * TINY.n_layers;
+    let sched = tiny_server_with(
+        art.clone(), 12 * 2 * bpt, 1,
+        Some(SchedulerConfig { max_live: 3, block_tokens: 2,
+                               prefill_chunk: 4 }),
+        "dense");
+    let got = run_decodes(&sched, &reqs);
+    let m = sched.shutdown(Drain::Graceful);
+    assert_eq!(got, want,
+               "prefix-cached preempt→requeue→resume changed a token");
+    assert!(m.counter("gen_preemptions") >= 1,
+            "the tight pool must actually preempt (preemptions={})",
+            m.counter("gen_preemptions"));
+    assert_eq!(m.counter("gen_evictions"), 0,
+               "requests that fit alone must never be evicted-errored");
+    assert!(m.counter("gen_resumed_ok") >= 1,
+            "a preempted request must resume and finish");
+    assert!(m.counter("prefix_misses") >= reqs.len() as u64,
+            "cold admissions on a nominal-rate pool must count misses");
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn disabling_the_prefix_cache_keeps_streams_identical() {
+    // the kill switch (`serve --no-prefix-cache`): same traffic, cache
+    // off — zero prefix counters, same tokens
+    let (art, _tag) = synth("prefixoff");
+    let reqs = shared_prefix_requests();
+    let oracle = tiny_server(art.clone(), 8 << 20, 1);
+    let want = run_decodes(&oracle, &reqs);
+    oracle.shutdown(Drain::Graceful);
+    let sched_cfg = SchedulerConfig { max_live: 4, block_tokens: 2,
+                                      prefill_chunk: 3 };
+    let mut cache = KvCacheManager::with_block_tokens(
+        CacheKind::Dense { d: TINY.d }, TINY.n_layers, 2, 8 << 20,
+        sched_cfg.block_tokens);
+    cache.set_prefix_cache(false);
+    let v = ModelVariant {
+        name: "dense".to_string(),
+        score_program: format!("score_{}", TINY.name),
+        step_program: format!("step_{}", TINY.name),
+        weights: std::sync::Arc::new(Weights::load(
+            art.join(format!("model_{}.ltw", TINY.name))).unwrap()),
+        cache,
+    };
+    let server = Server::start(
+        art.clone(),
+        Router::new(vec![v], Policy::RoundRobin),
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            policy: Policy::RoundRobin,
+            program_batch: BATCH,
+            seq_len: SEQ,
+            workers: 1,
+            sched: Some(sched_cfg),
+        })
+        .expect("server start");
+    let cold = run_decodes(&server, &reqs);
+    let warm = run_decodes(&server, &reqs);
+    let m = server.shutdown(Drain::Graceful);
+    assert_eq!(cold, want, "prefix-cache-off run diverged");
+    assert_eq!(warm, want, "prefix-cache-off rerun diverged");
+    assert_eq!(m.counter("prefix_hits"), 0, "off means no sharing");
+    assert_eq!(m.counter("prefix_misses"), 0, "off means no lookups");
+    assert_eq!(m.gauge("prefix_blocks_cached_peak"), 0);
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn insert_prefilled_seeds_sessions_from_exported_blocks() {
+    // the batch-seam entry the scheduler's admission path rests on:
+    // a session seeded from exported prefix rows, fed only the suffix,
+    // lands on bit-identical logits to a cold whole-prompt prefill
+    let (art, _tag) = synth("insertpre");
+    let engine = Engine::new(&art).unwrap();
+    let weights = Weights::load(
+        art.join(format!("model_{}.ltw", TINY.name))).unwrap();
+    let prog = engine.program(&format!("step_{}", TINY.name)).unwrap();
+    let seq: Vec<i32> = (0..10).map(|i| (i * 5 + 1) % TINY.vocab as i32)
+        .collect();
+    let mut donor = prog.decode_session(&weights).unwrap();
+    let want = donor.prefill(&seq).unwrap();
+    let snap = donor.export_prefix(6).unwrap();
+    assert_eq!(snap.tokens, 6);
+    let mut batch = BatchedDecodeState::new();
+    let slot = batch.insert_prefilled(
+        7, prog.decode_session(&weights).unwrap(), Some(&snap)).unwrap();
+    let sess = batch.session_mut(slot).unwrap();
+    let rows = sess.step_many(&seq[6..]).unwrap();
+    assert_eq!(rows.last().unwrap(), &want,
+               "adopted suffix must reach the cold prefill's logits");
+    assert_eq!(sess.cached_tokens(), seq.len());
+    // `None` behaves exactly like plain insert
+    let slot2 = batch.insert_prefilled(
+        8, prog.decode_session(&weights).unwrap(), None).unwrap();
+    assert_ne!(slot, slot2);
+    assert_eq!(batch.session_mut(slot2).unwrap().cached_tokens(), 0);
     std::fs::remove_dir_all(&art).ok();
 }
 

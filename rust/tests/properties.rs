@@ -334,3 +334,143 @@ fn prop_page_allocator_never_double_books_and_conserves_blocks() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_prefix_cache_churn_keeps_invariants_and_bits() {
+    // the refcounted prefix cache under random admit / hit / donate /
+    // extend / release / kill-switch churn: the allocator invariants
+    // (refcounts, cached-free bookkeeping, block conservation) hold
+    // after every op, a writer never appends into a block someone else
+    // still references, and every snapshot the cache serves —
+    // including resurrected cached-free blocks — is bit-identical to
+    // what its donor stored.
+    use latentllm::coordinator::kvcache::{CacheKind, KvCacheManager};
+    use latentllm::runtime::decode::{LayerCache, PrefixSnapshot};
+    use std::collections::HashMap;
+
+    // one dense layer whose rows are a pure function of the token ids,
+    // so any served snapshot can be checked against a rebuild
+    fn snap_for(tokens: &[i32], d: usize) -> PrefixSnapshot {
+        let n = tokens.len();
+        PrefixSnapshot {
+            tokens: n,
+            layers: vec![LayerCache::Dense {
+                k: Matrix::from_fn(n, d, |r, c| {
+                    tokens[r] as f64 + c as f64
+                }),
+                v: Matrix::from_fn(n, d, |r, _| tokens[r] as f64 * 0.5),
+            }],
+        }
+    }
+
+    run_cases("prefix-cache-churn", 25, 0xB8, |rng, _| {
+        let d = 4 + 2 * rng.below(4); // dense layer width 4..10
+        let bt = 2 + rng.below(3); // 2..4 tokens per block
+        let blocks = 4 + rng.below(12); // 4..15 block pool
+        let bpt = 2 * d * 2; // 1 layer at 2 B/element
+        let mut m = KvCacheManager::with_block_tokens(
+            CacheKind::Dense { d }, 1, 2, blocks * bt * bpt, bt);
+        prop_assert!(m.bytes_per_token() == bpt, "rate setup");
+        let off_rate = bpt * 2;
+        // prompts drawn from a tiny alphabet behind a shared head, so
+        // chains genuinely collide, extend and diverge across ops
+        let head: Vec<i32> = (0..2 * bt as i32).map(|i| i % 5).collect();
+        let mut feeds: HashMap<u64, Vec<i32>> = HashMap::new();
+        for op in 0..150 {
+            let id = rng.below(8) as u64;
+            match rng.below(12) {
+                // admit through the cache at the nominal rate: a served
+                // hit must be bit-identical to a rebuild from its tokens
+                0..=3 => {
+                    let mut feed =
+                        head[..rng.below(head.len()) + 1].to_vec();
+                    for _ in 0..rng.below(2 * bt) {
+                        feed.push(rng.below(5) as i32);
+                    }
+                    let (ok, hit) = m.admit_prefixed(id, &feed, bpt);
+                    if let Some(h) = hit {
+                        prop_assert!(ok, "op {op}: hit without admission");
+                        prop_assert!(h.tokens < feed.len(),
+                                     "op {op}: cap must leave ≥ 1 \
+                                      live token");
+                        let snap = PrefixSnapshot::concat(&h.snaps)
+                            .map_err(|e| format!("op {op}: {e:#}"))?;
+                        prop_assert!(snap.tokens == h.tokens,
+                                     "op {op}: hit token count");
+                        prop_assert!(
+                            snap == snap_for(&feed[..h.tokens], d),
+                            "op {op}: served rows differ from what \
+                             the donor stored");
+                    }
+                    if ok {
+                        feeds.insert(id, feed);
+                    } else {
+                        feeds.remove(&id);
+                    }
+                }
+                // off-rate admission: rows may be served, physical
+                // blocks must never be shared (token↔block misalignment)
+                4 => {
+                    let feed = head.clone();
+                    let (ok, _) = m.admit_prefixed(id, &feed, off_rate);
+                    if ok {
+                        if let Some(bs) = m.pages().block_ids(id) {
+                            for &b in bs {
+                                prop_assert!(
+                                    m.pages().refcount_of(b) == 1,
+                                    "op {op}: off-rate session shares \
+                                     block {b}");
+                            }
+                        }
+                        feeds.insert(id, feed);
+                    } else {
+                        feeds.remove(&id);
+                    }
+                }
+                // donate a live sequence's full prompt blocks
+                // (idempotent; internally refused for off-rate holders)
+                5..=6 => {
+                    if let Some(feed) = feeds.get(&id).cloned() {
+                        m.donate_prefix(id, &feed, &snap_for(&feed, d));
+                    }
+                }
+                // grow: the writer's tail block must be private —
+                // copy-on-write means never appending into a block
+                // someone else still references
+                7..=9 => {
+                    if m.try_extend(id) {
+                        let last = m.pages().block_ids(id)
+                            .and_then(|bs| bs.last().copied());
+                        if let Some(b) = last {
+                            prop_assert!(m.pages().refcount_of(b) == 1,
+                                         "op {op}: writer aliases \
+                                          shared block {b}");
+                        }
+                        if let Some(f) = feeds.get_mut(&id) {
+                            f.push(0);
+                        }
+                    }
+                }
+                // kill switch round-trip under load (rare)
+                10 => {
+                    if rng.below(8) == 0 {
+                        m.set_prefix_cache(false);
+                        prop_assert!(
+                            m.pages().cached_free_blocks() == 0,
+                            "op {op}: off must unpark every block");
+                        m.set_prefix_cache(true);
+                    }
+                }
+                // release — idempotent, unknown ids welcome
+                _ => {
+                    m.release(id);
+                    m.release(id);
+                    feeds.remove(&id);
+                }
+            }
+            m.pages().check_invariants()
+                .map_err(|e| format!("op {op}: {e}"))?;
+        }
+        Ok(())
+    });
+}
