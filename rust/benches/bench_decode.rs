@@ -12,10 +12,16 @@
 //! fixed and swaps the weight kernels: the blocked f32 panels and the
 //! fused-dequant int8 path against the bit-exact f64 reference.
 //!
+//! A batched-step section then holds the shapes fixed and varies the
+//! batch width: N ∈ {1, 4, 8, 16} prefilled sessions stepped through
+//! one `BatchedDecodeState`, the fused shared-weight pass vs the
+//! per-session fallback loop.
+//!
 //! Machine-readable results land in BENCH_DECODE.json (override the
 //! path with BENCH_DECODE_JSON): ms/token + tok/s per layout × path ×
-//! T ∈ {32, 64, 128}, int8-vs-f64 speedups, and the perplexity drift
-//! each layout costs on the dense scoring program.
+//! T ∈ {32, 64, 128}, int8-vs-f64 speedups, the batched-step
+//! fused-vs-loop sweep, and the perplexity drift each layout costs on
+//! the dense scoring program.
 //!
 //! Run: cargo bench --bench bench_decode
 
@@ -26,6 +32,7 @@ use latentllm::eval::generate::{generate, GenerateOpts};
 use latentllm::eval::perplexity;
 use latentllm::model::config::MiniConfig;
 use latentllm::model::Weights;
+use latentllm::runtime::decode::BatchedDecodeState;
 use latentllm::runtime::Engine;
 use latentllm::util::json::Value;
 use latentllm::Layout;
@@ -174,6 +181,64 @@ fn main() {
         println!("  ppl drift {name} vs f64: {:+.5}", p - ppl_f64);
     }
 
+    // batched-step kernel at matched shapes: N prefilled sessions
+    // stepped together through one BatchedDecodeState, fused weight
+    // pass vs the per-session fallback loop. Same model, same layout
+    // sweep shapes as above — this isolates what the serving scheduler
+    // gains per iteration before any queueing/cache effects.
+    println!("== batched step: fused weight pass vs per-session loop ==");
+    let step_prog = engine.program(&format!("step_{}", BENCH_CFG.name))
+        .expect("step program");
+    const BATCH_ROUNDS: usize = 64;
+    let mut batched: Vec<(usize, &'static str, f64, f64)> = Vec::new();
+    for n_live in [1usize, 4, 8, 16] {
+        for fused_on in [true, false] {
+            let mut batch = BatchedDecodeState::new();
+            batch.set_fused(fused_on);
+            let mut slots = Vec::with_capacity(n_live);
+            for s in 0..n_live {
+                let mut sess = step_prog.decode_session(&dense_w)
+                    .expect("session");
+                let p: Vec<i32> = (0..8)
+                    .map(|j| ((s * 13 + j * 7) % BENCH_CFG.vocab) as i32)
+                    .collect();
+                sess.prefill(&p).expect("prefill");
+                slots.push(batch.insert(s as u64, sess));
+            }
+            // warm round so timing excludes workspace growth
+            let warm: Vec<(usize, i32)> =
+                slots.iter().map(|&sl| (sl, 1)).collect();
+            for r in batch.step_many(&warm) {
+                r.expect("warm step");
+            }
+            let t0 = std::time::Instant::now();
+            for round in 0..BATCH_ROUNDS {
+                let steps: Vec<(usize, i32)> = slots.iter()
+                    .map(|&sl| (sl, ((round * 5 + sl * 3)
+                                     % BENCH_CFG.vocab) as i32))
+                    .collect();
+                for r in batch.step_many(&steps) {
+                    r.expect("step");
+                }
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let rows_s = (n_live * BATCH_ROUNDS) as f64 / dt.max(1e-12);
+            let ms_round = dt * 1e3 / BATCH_ROUNDS as f64;
+            let mode = if fused_on { "fused" } else { "loop" };
+            println!("  n={n_live:>2} {mode:<5}: {ms_round:>7.3} \
+                      ms/round  {rows_s:>9.1} rows/s");
+            batched.push((n_live, mode, ms_round, rows_s));
+        }
+    }
+    let rows_s_at = |n: usize, mode: &str| batched.iter()
+        .find(|r| r.0 == n && r.1 == mode)
+        .map(|r| r.3).unwrap_or(f64::NAN);
+    for n_live in [4usize, 8, 16] {
+        println!("  fused speedup @ n={n_live}: {:.2}x",
+                 rows_s_at(n_live, "fused")
+                     / rows_s_at(n_live, "loop").max(1e-12));
+    }
+
     let json = Value::obj(vec![
         ("model", Value::obj(vec![
             ("name", Value::Str(BENCH_CFG.name.to_string())),
@@ -190,6 +255,19 @@ fn main() {
             ("tok_s", Value::Num(r.tok_s)),
         ])).collect())),
         ("speedup_vs_f64", Value::obj(speedups)),
+        ("batched_step", Value::obj(vec![
+            ("rounds", Value::Num(BATCH_ROUNDS as f64)),
+            ("results", Value::Arr(batched.iter()
+                .map(|&(n, mode, ms, rs)| Value::obj(vec![
+                    ("live", Value::Num(n as f64)),
+                    ("mode", Value::Str(mode.to_string())),
+                    ("ms_per_round", Value::Num(ms)),
+                    ("rows_per_s", Value::Num(rs)),
+                ])).collect())),
+            ("fused_speedup_at_8_live",
+             Value::Num(rows_s_at(8, "fused")
+                        / rows_s_at(8, "loop").max(1e-12))),
+        ])),
         ("ppl", Value::Obj(ppls.iter()
             .map(|&(n, p)| (n.to_string(), Value::Num(p)))
             .collect())),

@@ -56,7 +56,8 @@ const SP_REQS: usize = 12;
 
 fn main() {
     mixed_workload();
-    shared_prefix_workload();
+    let live_scaling = live_scaling_workload();
+    shared_prefix_workload(live_scaling);
     score_sweep();
 }
 
@@ -116,7 +117,7 @@ fn mixed_workload() {
         ("sequential", None),
         ("scheduler ",
          Some(SchedulerConfig { max_live: 4, block_tokens: BLOCK_TOKENS,
-                                prefill_chunk: 8 })),
+                                prefill_chunk: 8, fused: true })),
     ] {
         let server = mix_server(&dir, &weights, budget, sched);
         let t0 = std::time::Instant::now();
@@ -191,6 +192,137 @@ fn mixed_workload() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+// live-session scaling: decode-dominated traffic, wide enough that the
+// per-token GEMMs are real work (a toy d would measure dispatch
+// overhead, not the fused weight pass)
+const LIVE_CFG: MiniConfig = MiniConfig {
+    name: "bench-live", vocab: 128, d: 96, n_layers: 2, n_heads: 4,
+    d_i: 192, max_len: 64,
+};
+const LIVE_PROMPT: usize = 6;
+const LIVE_NEW: usize = 40;
+const LIVE_COUNTS: [usize; 4] = [1, 4, 8, 16];
+
+/// Fused vs per-sequence stepping at live ∈ {1, 4, 8, 16} concurrent
+/// decodes on ONE worker: the step batch is exactly `live` wide, so the
+/// fused weight pass amortizes (and row-parallelizes) each layer's
+/// GEMMs across the whole live set while the fallback loop streams the
+/// weights once per sequence. Token streams are asserted bit-equal
+/// between the two modes. Returns the JSON section (with the headline
+/// `fused_speedup_at_8_live`) for BENCH_SERVING.json.
+fn live_scaling_workload() -> Value {
+    let dir = std::env::temp_dir()
+        .join(format!("latentllm_bench_live_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    write_test_artifacts(&dir, &LIVE_CFG, 23).expect("synth artifacts");
+    let weights = std::sync::Arc::new(Weights::load(
+        dir.join(format!("model_{}.ltw", LIVE_CFG.name))).unwrap());
+    // roomy pool — this section measures stepping, not contention
+    let bpt = 2 * LIVE_CFG.d * 2 * LIVE_CFG.n_layers;
+    let budget = 16 * ((LIVE_PROMPT + LIVE_NEW) / BLOCK_TOKENS + 2)
+        * BLOCK_TOKENS * bpt;
+
+    println!("== live-session scaling: fused vs per-sequence stepping ==");
+    println!("model {} (d={}, L={}), 1 worker, prompt {LIVE_PROMPT}, \
+              max_new {LIVE_NEW}, greedy",
+             LIVE_CFG.name, LIVE_CFG.d, LIVE_CFG.n_layers);
+    let mut rows: Vec<(usize, &'static str, f64, f64)> = Vec::new();
+    for live in LIVE_COUNTS {
+        let mut streams: Vec<Vec<Vec<i32>>> = Vec::new();
+        for fused in [true, false] {
+            let variants = vec![ModelVariant {
+                name: "dense".into(),
+                score_program: format!("score_{}", LIVE_CFG.name),
+                step_program: format!("step_{}", LIVE_CFG.name),
+                weights: weights.clone(),
+                cache: KvCacheManager::with_block_tokens(
+                    CacheKind::Dense { d: LIVE_CFG.d }, LIVE_CFG.n_layers,
+                    2, budget, BLOCK_TOKENS),
+            }];
+            let server = Server::start(
+                dir.to_path_buf(),
+                Router::new(variants, Policy::RoundRobin),
+                ServerConfig {
+                    batcher: BatcherConfig {
+                        max_batch: 4,
+                        max_wait: Duration::from_millis(2),
+                    },
+                    policy: Policy::RoundRobin,
+                    program_batch: 8,
+                    seq_len: LIVE_CFG.max_len,
+                    workers: 1,
+                    sched: Some(SchedulerConfig {
+                        max_live: live, block_tokens: BLOCK_TOKENS,
+                        prefill_chunk: 8, fused,
+                    }),
+                })
+                .expect("server start");
+            let t0 = std::time::Instant::now();
+            let rxs: Vec<_> = (0..live)
+                .map(|i| server.submit_generate(GenerateParams {
+                    prompt: (0..LIVE_PROMPT)
+                        .map(|j| ((i * 17 + j * 5) % LIVE_CFG.vocab) as i32)
+                        .collect(),
+                    max_new: LIVE_NEW,
+                    temperature: 0.0,
+                    seed: i as u64,
+                }).expect("submit_generate"))
+                .collect();
+            let tokens: Vec<Vec<i32>> = rxs.into_iter()
+                .map(|rx| {
+                    let r = rx.recv().expect("gen response");
+                    assert!(r.error().is_none(), "decode failed");
+                    r.tokens().to_vec()
+                })
+                .collect();
+            let dt = t0.elapsed().as_secs_f64();
+            let m = server.shutdown(Drain::Graceful);
+            streams.push(tokens);
+            let decoded = m.counter("gen_tokens");
+            let (p50, _, _) = m.quantiles("step_us")
+                .unwrap_or((0.0, 0.0, 0.0));
+            let mode = if fused { "fused" } else { "per-seq" };
+            if fused {
+                assert!(m.counter("fused_batches") >= 1 || live == 1,
+                        "live={live}: wide batches must fuse");
+            } else {
+                assert_eq!(m.counter("fused_batches"), 0,
+                           "kill switch must hold");
+            }
+            println!("  live={live:>2} {mode:<7}: {decoded} tokens in \
+                      {dt:.2}s = {:>7.1} tok/s | step p50={p50:.0}µs",
+                     decoded as f64 / dt.max(1e-9));
+            rows.push((live, mode, decoded as f64 / dt.max(1e-9), p50));
+        }
+        assert_eq!(streams[0], streams[1],
+                   "live={live}: fused and per-sequence streams differ");
+    }
+    let tok_s_at = |live: usize, mode: &str| rows.iter()
+        .find(|r| r.0 == live && r.1 == mode)
+        .map(|r| r.2)
+        .unwrap_or(f64::NAN);
+    let speedup8 = tok_s_at(8, "fused") / tok_s_at(8, "per-seq").max(1e-9);
+    println!("  fused speedup at 8 live sessions: {speedup8:.2}x");
+    std::fs::remove_dir_all(&dir).ok();
+    Value::obj(vec![
+        ("model", Value::obj(vec![
+            ("name", Value::Str(LIVE_CFG.name.to_string())),
+            ("d", Value::Num(LIVE_CFG.d as f64)),
+            ("n_layers", Value::Num(LIVE_CFG.n_layers as f64)),
+        ])),
+        ("prompt_len", Value::Num(LIVE_PROMPT as f64)),
+        ("max_new", Value::Num(LIVE_NEW as f64)),
+        ("results", Value::Arr(rows.iter().map(|&(live, mode, ts, p50)|
+            Value::obj(vec![
+                ("live", Value::Num(live as f64)),
+                ("mode", Value::Str(mode.to_string())),
+                ("tok_s", Value::Num(ts)),
+                ("step_p50_us", Value::Num(p50)),
+            ])).collect())),
+        ("fused_speedup_at_8_live", Value::Num(speedup8)),
+    ])
+}
+
 struct SpRun {
     sharing_pct: usize,
     mode: &'static str,
@@ -222,7 +354,7 @@ fn sp_wave(server: &Server, prompts: &[Vec<i32>]) -> (f64, usize) {
     (t0.elapsed().as_secs_f64(), ok)
 }
 
-fn shared_prefix_workload() {
+fn shared_prefix_workload(live_scaling: Value) {
     let dir = std::env::temp_dir()
         .join(format!("latentllm_bench_prefix_{}", std::process::id()));
     std::fs::remove_dir_all(&dir).ok();
@@ -234,6 +366,7 @@ fn shared_prefix_workload() {
     let budget = 48 * BLOCK_TOKENS * bpt;
     let sched_cfg = SchedulerConfig {
         max_live: 4, block_tokens: BLOCK_TOKENS, prefill_chunk: 8,
+        fused: true,
     };
 
     println!("== shared-prefix prefill: content-addressed reuse ==");
@@ -323,6 +456,7 @@ fn shared_prefix_workload() {
                 ("saved_tokens", Value::Num(s as f64)),
             ])).collect())),
         ("prefill_ms_reduction_at_90_shared", Value::Num(reduction)),
+        ("live_scaling", live_scaling),
     ]);
     let out = std::env::var("BENCH_SERVING_JSON")
         .unwrap_or_else(|_| "BENCH_SERVING.json".to_string());

@@ -16,6 +16,7 @@
 //! sched_block = 4       # KV page size in tokens (nominal rate)
 //! sched_chunk = 16      # prefill tokens fed per scheduler iteration
 //! prefix_cache = true   # content-addressed prefix reuse (default on)
+//! fused_step = true     # fused multi-sequence decode step (default on)
 //! [report]
 //! max_batches = 12
 //! qk_iters = 8
@@ -180,6 +181,10 @@ impl Config {
         cfg.serve.scheduler.prefill_chunk =
             get_usize("serve.sched_chunk",
                       cfg.serve.scheduler.prefill_chunk).max(1);
+        if let Some(b) = t.get("serve.fused_step").and_then(|v| v.as_bool())
+        {
+            cfg.serve.scheduler.fused = b;
+        }
         if let Some(b) = t.get("serve.prefix_cache").and_then(|v| v.as_bool())
         {
             cfg.serve.prefix_cache = b;
@@ -258,13 +263,15 @@ mod tests {
     fn parses_scheduler_knobs() {
         let t = toml::parse(
             "[serve]\nsched = false\nsched_live = 12\nsched_block = 8\n\
-             sched_chunk = 32\nprefix_cache = false\n").unwrap();
+             sched_chunk = 32\nprefix_cache = false\n\
+             fused_step = false\n").unwrap();
         let c = Config::from_table(&t).unwrap();
         assert!(!c.serve.sched);
         assert!(!c.serve.prefix_cache);
         assert_eq!(c.serve.scheduler.max_live, 12);
         assert_eq!(c.serve.scheduler.block_tokens, 8);
         assert_eq!(c.serve.scheduler.prefill_chunk, 32);
+        assert!(!c.serve.scheduler.fused);
         // defaults: scheduler on at the SchedulerConfig defaults
         let d = Config::from_table(&Table::new()).unwrap();
         assert!(d.serve.sched);

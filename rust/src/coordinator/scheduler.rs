@@ -76,6 +76,11 @@ pub struct SchedulerConfig {
     /// max prompt/resume tokens fed per sequence per iteration, so one
     /// giant prefill cannot starve its batch-mates' decode steps
     pub prefill_chunk: usize,
+    /// fuse the per-iteration step batch into one shared-weight forward
+    /// when every live slot runs the same model (`--no-fused-step`
+    /// falls back to the per-session loop; token streams are
+    /// bit-identical either way)
+    pub fused: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -84,6 +89,7 @@ impl Default for SchedulerConfig {
             max_live: 8,
             block_tokens: DEFAULT_BLOCK_TOKENS,
             prefill_chunk: 16,
+            fused: true,
         }
     }
 }
@@ -212,10 +218,12 @@ pub struct WorkerScheduler {
 
 impl WorkerScheduler {
     pub fn new(widx: usize, cfg: SchedulerConfig) -> WorkerScheduler {
+        let mut batch = BatchedDecodeState::new();
+        batch.set_fused(cfg.fused);
         WorkerScheduler {
             widx,
             cfg,
-            batch: BatchedDecodeState::new(),
+            batch,
             live: Vec::new(),
         }
     }
@@ -340,11 +348,26 @@ impl WorkerScheduler {
             let batch_steps: Vec<(usize, i32)> = steps.iter()
                 .map(|&(idx, tok)| (self.live[idx].slot, tok))
                 .collect();
-            let results = self.batch.step_many(&batch_steps);
+            // recycle each sequence's previous logits buffer — the step
+            // writes into it in place, so steady-state decode stops
+            // paying one Vec allocation per sequence per token
+            let mut outs: Vec<Vec<f32>> = steps.iter()
+                .map(|&(idx, _)| self.live[idx].logits.take()
+                    .unwrap_or_default())
+                .collect();
+            let (fb0, fr0) = self.batch.fused_stats();
+            let t0 = Instant::now();
+            let results = self.batch.step_many_into(&batch_steps,
+                                                    &mut outs);
+            metrics.observe("step_us", t0.elapsed());
+            let (fb1, fr1) = self.batch.fused_stats();
+            metrics.incr("fused_batches", fb1 - fb0);
+            metrics.incr("fused_step_rows", fr1 - fr0);
             let mut dead: Vec<(usize, String)> = Vec::new();
-            for (&(idx, _), res) in steps.iter().zip(results) {
+            for ((&(idx, _), res), out) in
+                steps.iter().zip(results).zip(outs) {
                 match res {
-                    Ok(row) => self.live[idx].logits = Some(row),
+                    Ok(()) => self.live[idx].logits = Some(out),
                     Err(e) => dead.push((idx, format!("{e:#}"))),
                 }
             }
@@ -699,6 +722,7 @@ mod tests {
         assert!(c.max_live >= 1);
         assert_eq!(c.block_tokens, DEFAULT_BLOCK_TOKENS);
         assert!(c.prefill_chunk >= 1);
+        assert!(c.fused, "fused stepping is the default");
     }
 
     #[test]

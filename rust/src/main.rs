@@ -84,8 +84,8 @@ USAGE:
                       [--workers N] [--kv-mb N] [--no-sched]
                       [--sched-live N] [--sched-block T] [--sched-chunk T]
                       [--no-prefix-cache] [--gen-shared-prefix T]
-                      [--dense-only] [--config FILE.toml]
-                      [--artifacts DIR]
+                      [--no-fused-step] [--dense-only]
+                      [--config FILE.toml] [--artifacts DIR]
   latentllm generate  --model opt-mini-m [--prompts 8] [--new 32]
                       [--temperature 0.8] [--latent] [--no-cache]
                       [--weights FILE.ltw] [--artifacts DIR]
@@ -107,7 +107,11 @@ Serving: generate traffic runs under a continuous-batching scheduler
        are content-addressed and shared copy-on-write across sessions
        (--no-prefix-cache disables sharing); --gen-shared-prefix T
        prepends T identical tokens to every generate prompt so the
-       reuse path is easy to exercise. --dense-only serves just the
+       reuse path is easy to exercise. Decode step batches whose live
+       sequences share one model are fused into a single shared-weight
+       forward per iteration; --no-fused-step keeps the per-session
+       loop (token streams are bit-identical, the GEMMs just run N
+       times). --dense-only serves just the
        dense variant — with one set of weights the emitted token
        streams are reproducible run to run (routing noise gone), which
        is what the CI digest checks rely on.
@@ -481,6 +485,12 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
         args.usize_flag("sched-block", sched_cfg.block_tokens).max(1);
     sched_cfg.prefill_chunk =
         args.usize_flag("sched-chunk", sched_cfg.prefill_chunk).max(1);
+    // fused step batch: CLI over config, default on ([serve] fused_step)
+    if args.flags.contains_key("no-fused-step") {
+        sched_cfg.fused = false;
+    } else if args.flags.contains_key("fused-step") {
+        sched_cfg.fused = true;
+    }
     let use_sched = !args.flags.contains_key("no-sched")
         && file_cfg.serve.sched;
     // prefix cache: CLI over config, default on ([serve] prefix_cache)
@@ -558,9 +568,10 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     println!("serving with {} worker(s), scheduler {}, prefix cache {}",
              server.live_workers(),
              if use_sched {
-                 format!("on (live={} block={} chunk={})",
+                 format!("on (live={} block={} chunk={} fused={})",
                          sched_cfg.max_live, sched_cfg.block_tokens,
-                         sched_cfg.prefill_chunk)
+                         sched_cfg.prefill_chunk,
+                         if sched_cfg.fused { "on" } else { "off" })
              } else {
                  "off (sequential sessions)".to_string()
              },
@@ -676,6 +687,15 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
                  metrics.counter("prefix_misses"),
                  metrics.counter("prefix_saved_tokens"),
                  metrics.counter("prefix_evictions"));
+        // the step-fusion scorecard: how many iteration batches took the
+        // shared-weight pass, how many sequence-rows rode along, and the
+        // per-iteration step latency it bought
+        let step_q = metrics.quantiles("step_us")
+            .map(|(p50, p95, _)| format!("{p50:.0}/{p95:.0}us"))
+            .unwrap_or_else(|| "n/a".to_string());
+        println!("fused: batches={} rows={} step p50/p95={step_q}",
+                 metrics.counter("fused_batches"),
+                 metrics.counter("fused_step_rows"));
         println!("generate digest: {digest:016x}");
     }
     print!("{}", metrics.summary());

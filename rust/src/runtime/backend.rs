@@ -82,6 +82,26 @@ pub trait DecodeSession {
         tokens.iter().map(|&t| self.step(t)).collect()
     }
 
+    /// [`DecodeSession::step`] writing the logits into a caller-owned
+    /// buffer (cleared and refilled) instead of a fresh `Vec` — the hot
+    /// loop's twin, so a scheduler that recycles per-sequence buffers
+    /// stops paying one allocation per decoded token. Identical results
+    /// and errors to `step` by construction.
+    fn step_into(&mut self, token: i32, out: &mut Vec<f32>) -> Result<()> {
+        *out = self.step(token)?;
+        Ok(())
+    }
+
+    /// Opt-in seam for backend-level *fused* multi-session stepping: a
+    /// backend whose sessions can share one weight-side pass across live
+    /// sequences returns `Some(self)` so
+    /// [`crate::runtime::decode::BatchedDecodeState`] can downcast the
+    /// batch and hand it to that backend's fused kernel. The default opts
+    /// out and callers keep the per-session loop.
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        None
+    }
+
     /// Tokens currently held in the caches.
     fn cached_tokens(&self) -> usize;
 

@@ -225,18 +225,30 @@ impl DecodeState {
 /// integers (freed slots are reused lowest-first) so the coordinator can
 /// refer to a sequence across iterations without holding the session.
 ///
-/// The reference backend's sessions interpret one sequence at a time, so
-/// [`BatchedDecodeState::step_many`] drives each named slot's
-/// [`DecodeSession::step`] in the caller's order — per-sequence logits
-/// are bit-identical to one-at-a-time stepping *by construction* (each
-/// session owns its own cache tensors; no cross-sequence state exists).
-/// A fused backend would override this seam, not the scheduler.
+/// [`BatchedDecodeState::step_many`] is the backend fusion seam: when
+/// every stepped slot is a reference-backend session over the *same*
+/// loaded model, the batch runs as ONE fused forward — each layer's
+/// weight-side GEMMs once over all N stacked token rows, only the
+/// attention cache phase fanned out per sequence
+/// ([`crate::runtime::refbackend`]'s fused step). Otherwise — mixed
+/// models, foreign backends, un-prefilled slots, or the kill switch
+/// ([`BatchedDecodeState::set_fused`]) — it drives each named slot's
+/// [`DecodeSession::step`] in the caller's order. Both paths are
+/// bit-identical *by construction* (each session owns its own cache
+/// tensors; no cross-sequence state exists, and every weight-side kernel
+/// computes rows independently in a fixed k-order).
 ///
 /// Not `Send` (sessions may hold `Rc`-based backend clients): it lives
 /// and dies on one worker thread, like the sessions themselves.
-#[derive(Default)]
 pub struct BatchedDecodeState {
     slots: Vec<Option<SeqSlot>>,
+    /// kill switch: `false` forces the per-session fallback loop
+    fused: bool,
+    /// backend-owned scratch reused across fused iterations (opaque so
+    /// this module stays backend-agnostic)
+    workspace: Option<Box<dyn std::any::Any>>,
+    fused_batches: u64,
+    fused_rows: u64,
 }
 
 struct SeqSlot {
@@ -244,9 +256,33 @@ struct SeqSlot {
     session: Box<dyn DecodeSession>,
 }
 
+impl Default for BatchedDecodeState {
+    fn default() -> BatchedDecodeState {
+        BatchedDecodeState::new()
+    }
+}
+
 impl BatchedDecodeState {
     pub fn new() -> BatchedDecodeState {
-        BatchedDecodeState { slots: Vec::new() }
+        BatchedDecodeState {
+            slots: Vec::new(),
+            fused: true,
+            workspace: None,
+            fused_batches: 0,
+            fused_rows: 0,
+        }
+    }
+
+    /// Toggle the fused step (`--no-fused-step` lands here). Off means
+    /// every batch takes the per-session loop.
+    pub fn set_fused(&mut self, on: bool) {
+        self.fused = on;
+    }
+
+    /// Lifetime totals: `(fused batches, rows stepped fused)` — the
+    /// scheduler diffs these across an iteration to feed its metrics.
+    pub fn fused_stats(&self) -> (u64, u64) {
+        (self.fused_batches, self.fused_rows)
     }
 
     /// Adopt a prepared session for sequence `seq`; returns its slot.
@@ -302,15 +338,69 @@ impl BatchedDecodeState {
     /// One scheduler iteration's mixed batch: step each `(slot, token)`
     /// pair in order, returning that sequence's next-token logits in the
     /// same order. Failures are per-slot — one sequence erroring (or a
-    /// stale slot id) must not poison its batch-mates.
+    /// stale slot id) must not poison its batch-mates. Thin wrapper over
+    /// [`BatchedDecodeState::step_many_into`] for callers without
+    /// recyclable buffers.
     pub fn step_many(&mut self, steps: &[(usize, i32)])
                      -> Vec<Result<Vec<f32>>> {
+        let mut outs = vec![Vec::new(); steps.len()];
+        let res = self.step_many_into(steps, &mut outs);
+        res.into_iter()
+            .zip(outs)
+            .map(|(r, o)| r.map(|()| o))
+            .collect()
+    }
+
+    /// [`BatchedDecodeState::step_many`] with caller-owned logits
+    /// buffers (one per step, cleared and refilled): the scheduler
+    /// recycles each sequence's previous logits vec here, so
+    /// steady-state decoding allocates nothing per token. Tries the
+    /// fused one-GEMM-pass-per-layer step first; falls back to the
+    /// per-session loop whenever the batch cannot fuse (which also
+    /// keeps all error reporting on the unfused path).
+    pub fn step_many_into(&mut self, steps: &[(usize, i32)],
+                          outs: &mut [Vec<f32>]) -> Vec<Result<()>> {
+        assert_eq!(steps.len(), outs.len(),
+                   "step_many_into: {} steps, {} buffers",
+                   steps.len(), outs.len());
+        if self.fused && self.try_fused(steps, outs).is_some() {
+            self.fused_batches += 1;
+            self.fused_rows += steps.len() as u64;
+            return steps.iter().map(|_| Ok(())).collect();
+        }
         steps.iter()
-            .map(|&(slot, token)| match self.session_mut(slot) {
-                Some(s) => s.step(token),
+            .zip(outs.iter_mut())
+            .map(|(&(slot, token), out)| match self.session_mut(slot) {
+                Some(s) => s.step_into(token, out),
                 None => Err(anyhow!("batched decode: slot {slot} is empty")),
             })
             .collect()
+    }
+
+    /// Collect distinct live sessions for `steps` and hand them to the
+    /// backend's fused kernel. `None` (nothing mutated) when any slot is
+    /// empty or repeated, the batch is trivially small, or the backend
+    /// declines (mixed models, un-prefilled, at capacity).
+    fn try_fused(&mut self, steps: &[(usize, i32)],
+                 outs: &mut [Vec<f32>]) -> Option<()> {
+        if steps.len() < 2 {
+            return None;
+        }
+        // taking each slot's &mut out of a side table enforces
+        // distinctness: a repeated slot would double-append to one cache
+        let mut by_slot: Vec<Option<&mut dyn DecodeSession>> = self.slots
+            .iter_mut()
+            .map(|s| s.as_mut()
+                .map(|e| e.session.as_mut() as &mut dyn DecodeSession))
+            .collect();
+        let mut sessions: Vec<&mut dyn DecodeSession> =
+            Vec::with_capacity(steps.len());
+        for &(slot, _) in steps {
+            sessions.push(by_slot.get_mut(slot)?.take()?);
+        }
+        let tokens: Vec<i32> = steps.iter().map(|&(_, t)| t).collect();
+        super::refbackend::fused_step_sessions(
+            &mut sessions, &tokens, outs, &mut self.workspace)
     }
 
     /// Live sequences.

@@ -599,13 +599,42 @@ impl DenseLayer {
     /// tower) attends everything.
     fn forward_cached(&self, x: Matrix, h: usize, causal: bool,
                       kc: &mut Matrix, vc: &mut Matrix) -> Matrix {
-        let pos0 = kc.rows();
-        let xa = layer_norm(&x, &self.ln1_g, &self.ln1_b);
+        let (q, knew, vnew) = self.attn_weight_phase(&x);
+        let ctx = self.attn_cache_phase(&q, &knew, &vnew, h, causal, kc, vc);
+        self.finish_phase(x, &ctx)
+    }
+
+    /// Weight side of the block's attention: LN1 plus the q/k/v
+    /// projections. Every kernel here computes each output row
+    /// independently in the same k-order regardless of how many rows are
+    /// stacked, so the fused multi-session step runs this once over N
+    /// sequences' rows and gets bit-identical numbers to N separate
+    /// calls. No cache state is read or written.
+    fn attn_weight_phase(&self, x: &Matrix) -> (Matrix, Matrix, Matrix) {
+        let xa = layer_norm(x, &self.ln1_g, &self.ln1_b);
         let q = linear(&xa, &self.wq, Some(&self.bq));
-        kc.push_rows(&linear(&xa, &self.wk, Some(&self.bk)));
-        vc.push_rows(&linear(&xa, &self.wv, Some(&self.bv)));
-        let ctx = mha(&q, kc, vc, h, causal.then_some(pos0));
-        let mut x = x.add(&linear(&ctx, &self.wo, Some(&self.bo)));
+        let k = linear(&xa, &self.wk, Some(&self.bk));
+        let v = linear(&xa, &self.wv, Some(&self.bv));
+        (q, k, v)
+    }
+
+    /// Cache side: append this sequence's new K/V rows and attend its
+    /// queries over its own (now-extended) cache — the only per-sequence
+    /// arithmetic in the block, and the only part the fused step fans
+    /// out. Causal rows sit at absolute positions `kc.rows()..`.
+    fn attn_cache_phase(&self, q: &Matrix, knew: &Matrix, vnew: &Matrix,
+                        h: usize, causal: bool,
+                        kc: &mut Matrix, vc: &mut Matrix) -> Matrix {
+        let pos0 = kc.rows();
+        kc.push_rows(knew);
+        vc.push_rows(vnew);
+        mha(q, kc, vc, h, causal.then_some(pos0))
+    }
+
+    /// Weight side after attention: output projection residual, LN2 and
+    /// the MLP — row-independent like [`DenseLayer::attn_weight_phase`].
+    fn finish_phase(&self, x: Matrix, ctx: &Matrix) -> Matrix {
+        let mut x = x.add(&linear(ctx, &self.wo, Some(&self.bo)));
         let xm = layer_norm(&x, &self.ln2_g, &self.ln2_b);
         let mut z = linear(&xm, &self.wu, Some(&self.bu));
         relu_inplace(&mut z);
@@ -825,12 +854,34 @@ impl LatentLayer {
     /// decode prefill/step — one body, so the paths cannot drift.
     fn forward_cached(&self, x: Matrix, h: usize, dh: usize,
                       ck: &mut Matrix, cv: &mut Matrix) -> Matrix {
-        let t = x.rows();
-        let pos0 = ck.rows();
-        let xa = layer_norm(&x, &self.ln1_g, &self.ln1_b);
+        let (q, cknew, cvnew) = self.attn_weight_phase(&x);
+        let ctx = self.attn_cache_phase(&q, &cknew, &cvnew, h, dh, ck, cv);
+        self.finish_phase(x, &ctx)
+    }
+
+    /// Weight side: LN1 plus the latent compression planes (q latents
+    /// and the new cache rows). Row-independent — the fused step stacks
+    /// N sequences' rows through these GEMMs once, bit-identically.
+    fn attn_weight_phase(&self, x: &Matrix) -> (Matrix, Matrix, Matrix) {
+        let xa = layer_norm(x, &self.ln1_g, &self.ln1_b);
         let q = linear(&xa, &self.aq, None); // [t, rq]
-        ck.push_rows(&linear(&xa, &self.ak, None));
-        cv.push_rows(&linear(&xa, &self.av, None));
+        let cknew = linear(&xa, &self.ak, None);
+        let cvnew = linear(&xa, &self.av, None);
+        (q, cknew, cvnew)
+    }
+
+    /// Cache side: append this sequence's new latents and run the
+    /// per-head latent attention against its own cache — the only
+    /// per-sequence arithmetic (the tiny rank-sized `h_aug`/`bv_aug`
+    /// products ride along; they are row-independent too, so keeping
+    /// them here changes nothing numerically).
+    fn attn_cache_phase(&self, q: &Matrix, cknew: &Matrix, cvnew: &Matrix,
+                        h: usize, dh: usize,
+                        ck: &mut Matrix, cv: &mut Matrix) -> Matrix {
+        let t = q.rows();
+        let pos0 = ck.rows();
+        ck.push_rows(cknew);
+        cv.push_rows(cvnew);
 
         // latent attention per head: scores never materialize full K
         // (ref.latent_attention); only the compressed latents are read
@@ -838,7 +889,7 @@ impl LatentLayer {
         let mut ctx = Matrix::zeros(t, h * dh);
         for head in 0..h {
             // ũ = [q|1]·H̃ per head, then scores against cached latents
-            let u = matmul_ones_a(&q, &self.h_aug[head]); // [t, rk+1]
+            let u = matmul_ones_a(q, &self.h_aug[head]); // [t, rk+1]
             let s_raw = if self.fast {
                 matmul_bt_ones_fast(&u, ck)
             } else {
@@ -855,13 +906,18 @@ impl LatentLayer {
                     .copy_from_slice(ch.row(i));
             }
         }
+        ctx
+    }
+
+    /// Weight side after attention: low-rank output projection residual,
+    /// LN2 and the low-rank MLP (ref.lowrank_matmul) — row-independent.
+    fn finish_phase(&self, x: Matrix, ctx: &Matrix) -> Matrix {
         // low-rank output projection: (ctx Aoᵀ) Boᵀ + bo
         let mut x = x.add(&linear(
-            &linear(&ctx, &self.ao_heads, None),
+            &linear(ctx, &self.ao_heads, None),
             &self.bo_mat,
             Some(&self.bo),
         ));
-        // low-rank MLP (ref.lowrank_matmul)
         let xm = layer_norm(&x, &self.ln2_g, &self.ln2_b);
         let mut z = linear(&linear(&xm, &self.au, None), &self.bu_mat,
                            Some(&self.bu));
@@ -1228,8 +1284,22 @@ impl RefDecodeSession {
 
     fn forward_new(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
         let logits = self.forward_rows(tokens, false)?;
-        Ok(logits.row(0).iter().map(|&v| v as f32).collect())
+        let mut out = Vec::new();
+        row_f32_into(logits.row(0), &mut out);
+        Ok(out)
     }
+}
+
+/// Convert one f64 logits row into a caller-owned f32 buffer: cleared,
+/// exact-capacity reserved, refilled. The hot loops hand in a recycled
+/// buffer (the scheduler's per-sequence logits vec, the fused step's
+/// out slots), so steady-state decoding does this conversion with zero
+/// allocations — the old `.iter().map(|&v| v as f32).collect()` paid a
+/// fresh vocab-sized `Vec` per token per sequence.
+fn row_f32_into(row: &[f64], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(row.len());
+    out.extend(row.iter().map(|&v| v as f32));
 }
 
 impl DecodeSession for RefDecodeSession {
@@ -1265,8 +1335,32 @@ impl DecodeSession for RefDecodeSession {
         let logits = self.forward_rows(tokens, true)
             .context("decode step_many")?;
         Ok((0..logits.rows())
-            .map(|i| logits.row(i).iter().map(|&v| v as f32).collect())
+            .map(|i| {
+                let mut out = Vec::new();
+                row_f32_into(logits.row(i), &mut out);
+                out
+            })
             .collect())
+    }
+
+    /// Allocation-free step: identical arithmetic and errors to
+    /// [`DecodeSession::step`], but the f32 logits land in a recycled
+    /// caller buffer instead of a fresh `Vec` per token.
+    fn step_into(&mut self, token: i32, out: &mut Vec<f32>) -> Result<()> {
+        if self.state.cached_tokens() == 0 {
+            bail!("step before prefill — feed the prompt first");
+        }
+        let logits = self.forward_rows(&[token], false)
+            .context("decode step")?;
+        row_f32_into(logits.row(0), out);
+        Ok(())
+    }
+
+    /// Opt in to the fused multi-session step
+    /// ([`fused_step_sessions`]) — the batched state downcasts through
+    /// this to group same-model sessions into one weight pass.
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
     }
 
     fn cached_tokens(&self) -> usize {
@@ -1309,6 +1403,193 @@ impl DecodeSession for RefDecodeSession {
         }
         self.state.adopt_prefix(prefix).context("adopt prefix")
     }
+}
+
+// ---------------------------------------------------------------------------
+// Fused multi-session decode step
+// ---------------------------------------------------------------------------
+
+/// Reusable scratch for the fused step, owned by the worker's
+/// [`crate::runtime::decode::BatchedDecodeState`] (opaquely, as
+/// `Box<dyn Any>`) so the hot loop stops allocating the stacked
+/// activation and context matrices on every scheduler iteration. The
+/// buffers are fully overwritten before every read, so reuse never
+/// leaks one iteration's values into the next.
+pub struct FusedWorkspace {
+    /// stacked single-token activations [N, d]
+    x: Matrix,
+    /// per-layer attention fan-in [N, d_attn]
+    ctx: Matrix,
+}
+
+impl Default for FusedWorkspace {
+    fn default() -> FusedWorkspace {
+        FusedWorkspace {
+            x: Matrix::zeros(0, 0),
+            ctx: Matrix::zeros(0, 0),
+        }
+    }
+}
+
+/// Token + positional embedding of one token at absolute position `pos`,
+/// written straight into a workspace row — the same `e[j] + p[j]` sum
+/// [`embed_tokens`] computes, without the per-call Matrix.
+fn embed_row_into(tok_emb: &Matrix, pos_emb: &Matrix, tok: i32, pos: usize,
+                  row: &mut [f64]) {
+    let e = tok_emb.row(clamp_token(tok, tok_emb.rows()));
+    let p = pos_emb.row(pos.min(pos_emb.rows() - 1));
+    for (o, (ev, pv)) in row.iter_mut().zip(e.iter().zip(p)) {
+        *o = ev + pv;
+    }
+}
+
+/// One fused decode step across N live sessions: stack each session's
+/// single token into one [N, d] activation matrix, run every
+/// weight-side GEMM (LN + QKV/latent projections, MLP, final LN + tied
+/// head) ONCE over all N rows through the [`PackedMat`] kernels, and
+/// fan out only the attention cache phase per sequence against its own
+/// [`LayerCache`] at its own position. Per-row results are bit-identical
+/// to N separate [`DecodeSession::step`] calls because every weight-side
+/// kernel computes each output row independently in the same k-order and
+/// attention never crosses sequences.
+///
+/// Returns `None` — with NO session state mutated — whenever the batch
+/// cannot fuse: a non-ref session in the mix, different models, a
+/// session that is un-prefilled or out of positional-table capacity.
+/// The caller then falls back to the per-session loop, which also owns
+/// all error reporting (so errors stay identical to unfused stepping).
+pub(crate) fn fused_step_sessions(
+    sessions: &mut [&mut dyn DecodeSession],
+    tokens: &[i32],
+    outs: &mut [Vec<f32>],
+    ws_slot: &mut Option<Box<dyn std::any::Any>>,
+) -> Option<()> {
+    if sessions.len() != tokens.len() || sessions.len() != outs.len() {
+        return None;
+    }
+    let mut refs: Vec<&mut RefDecodeSession> =
+        Vec::with_capacity(sessions.len());
+    for s in sessions.iter_mut() {
+        refs.push(s.as_any_mut()?.downcast_mut::<RefDecodeSession>()?);
+    }
+    let model = refs.first()?.model.clone();
+    if refs.iter().any(|r| !std::sync::Arc::ptr_eq(&r.model, &model)) {
+        return None;
+    }
+    // every session must be mid-decode with room for one more token —
+    // anything else (prefill pending, table exhausted) would error, and
+    // the fallback loop reports those errors per slot exactly as before
+    if refs.iter().any(|r| {
+        let pos = r.state.cached_tokens();
+        pos == 0 || pos + 1 > r.max_tokens
+    }) {
+        return None;
+    }
+    if matches!(&*model, LoadedModel::Mm(_)) {
+        return None;
+    }
+    let fresh = match ws_slot.as_ref() {
+        Some(b) => !b.is::<FusedWorkspace>(),
+        None => true,
+    };
+    if fresh {
+        *ws_slot = Some(Box::<FusedWorkspace>::default());
+    }
+    let ws = ws_slot.as_mut()?.downcast_mut::<FusedWorkspace>()?;
+    match &*model {
+        LoadedModel::Dense(m) => fused_dense(m, &mut refs, tokens, outs, ws),
+        LoadedModel::Latent(m) => {
+            fused_latent(m, &mut refs, tokens, outs, ws)
+        }
+        LoadedModel::Mm(_) => unreachable!("checked above"),
+    }
+    Some(())
+}
+
+/// Hand a workspace matrix out for this iteration, (re)shaping only when
+/// the live-set size changed. Contents are garbage by contract — every
+/// row is overwritten before it is read.
+fn take_scratch(slot: &mut Matrix, rows: usize, cols: usize) -> Matrix {
+    let m = std::mem::replace(slot, Matrix::zeros(0, 0));
+    if m.rows() == rows && m.cols() == cols {
+        m
+    } else {
+        Matrix::zeros(rows, cols)
+    }
+}
+
+fn fused_dense(m: &DenseModel, sess: &mut [&mut RefDecodeSession],
+               tokens: &[i32], outs: &mut [Vec<f32>],
+               ws: &mut FusedWorkspace) {
+    let n = sess.len();
+    let mut x = take_scratch(&mut ws.x, n, m.tok_emb.cols());
+    for (i, (s, &tok)) in sess.iter().zip(tokens).enumerate() {
+        embed_row_into(&m.tok_emb, &m.pos_emb, tok,
+                       s.state.cached_tokens(), x.row_mut(i));
+    }
+    let mut ctx = std::mem::replace(&mut ws.ctx, Matrix::zeros(0, 0));
+    for (li, layer) in m.layers.iter().enumerate() {
+        // weight phase: one GEMM pass over all N rows
+        let (q, knew, vnew) = layer.attn_weight_phase(&x);
+        if ctx.rows() != n || ctx.cols() != q.cols() {
+            ctx = Matrix::zeros(n, q.cols());
+        }
+        // cache phase: per-sequence attention at each one's own position
+        for (i, s) in sess.iter_mut().enumerate() {
+            let LayerCache::Dense { k, v } = &mut s.state.layers[li] else {
+                unreachable!("dense session cache kind is pinned at open");
+            };
+            let c = layer.attn_cache_phase(
+                &q.slice_rows(i, i + 1), &knew.slice_rows(i, i + 1),
+                &vnew.slice_rows(i, i + 1), m.n_heads, true, k, v);
+            ctx.row_mut(i).copy_from_slice(c.row(0));
+        }
+        x = layer.finish_phase(x, &ctx);
+    }
+    let logits = tied_head(&x, &m.lnf_g, &m.lnf_b, &m.head);
+    for (i, (s, out)) in sess.iter_mut().zip(outs.iter_mut()).enumerate() {
+        s.state.advance(1);
+        row_f32_into(logits.row(i), out);
+    }
+    ws.x = x;
+    ws.ctx = ctx;
+}
+
+fn fused_latent(m: &LatentModel, sess: &mut [&mut RefDecodeSession],
+                tokens: &[i32], outs: &mut [Vec<f32>],
+                ws: &mut FusedWorkspace) {
+    let n = sess.len();
+    let mut x = take_scratch(&mut ws.x, n, m.tok_emb.cols());
+    for (i, (s, &tok)) in sess.iter().zip(tokens).enumerate() {
+        embed_row_into(&m.tok_emb, &m.pos_emb, tok,
+                       s.state.cached_tokens(), x.row_mut(i));
+    }
+    let mut ctx = std::mem::replace(&mut ws.ctx, Matrix::zeros(0, 0));
+    let d_attn = m.n_heads * m.d_h;
+    for (li, layer) in m.layers.iter().enumerate() {
+        let (q, cknew, cvnew) = layer.attn_weight_phase(&x);
+        if ctx.rows() != n || ctx.cols() != d_attn {
+            ctx = Matrix::zeros(n, d_attn);
+        }
+        for (i, s) in sess.iter_mut().enumerate() {
+            let LayerCache::Latent { ck, cv } = &mut s.state.layers[li]
+            else {
+                unreachable!("latent session cache kind is pinned at open");
+            };
+            let c = layer.attn_cache_phase(
+                &q.slice_rows(i, i + 1), &cknew.slice_rows(i, i + 1),
+                &cvnew.slice_rows(i, i + 1), m.n_heads, m.d_h, ck, cv);
+            ctx.row_mut(i).copy_from_slice(c.row(0));
+        }
+        x = layer.finish_phase(x, &ctx);
+    }
+    let logits = tied_head(&x, &m.lnf_g, &m.lnf_b, &m.head);
+    for (i, (s, out)) in sess.iter_mut().zip(outs.iter_mut()).enumerate() {
+        s.state.advance(1);
+        row_f32_into(logits.row(i), out);
+    }
+    ws.x = x;
+    ws.ctx = ctx;
 }
 
 /// Buffer length must match the declared shape — callers can build

@@ -18,6 +18,7 @@ use latentllm::model::config::MiniConfig;
 use latentllm::model::Weights;
 use latentllm::runtime::decode::BatchedDecodeState;
 use latentllm::runtime::Engine;
+use latentllm::Layout;
 
 const TINY: MiniConfig = MiniConfig {
     name: "tiny", vocab: 48, d: 16, n_layers: 2, n_heads: 2,
@@ -415,7 +416,7 @@ fn scheduler_decode_is_token_identical_to_sequential_sessions() {
         let sched = tiny_server_with(
             art.clone(), 8 << 20, 1,
             Some(SchedulerConfig { max_live: 4, block_tokens: 2,
-                                   prefill_chunk: 2 }),
+                                   prefill_chunk: 2, fused: true }),
             variant);
         let got = run_decodes(&sched, &reqs);
         let m = sched.shutdown(Drain::Graceful);
@@ -450,7 +451,7 @@ fn scheduler_preempts_requeues_and_stays_token_identical() {
     let sched = tiny_server_with(
         art.clone(), 12 * 2 * bpt, 1,
         Some(SchedulerConfig { max_live: 3, block_tokens: 2,
-                               prefill_chunk: 4 }),
+                               prefill_chunk: 4, fused: true }),
         "dense");
     let got = run_decodes(&sched, &reqs);
     let m = sched.shutdown(Drain::Graceful);
@@ -473,7 +474,7 @@ fn scheduler_rejects_only_what_can_never_fit() {
     // 2 blocks of 2 tokens = 4-token pool
     let bpt = 2 * TINY.d * 2 * TINY.n_layers;
     let sched_cfg = SchedulerConfig { max_live: 2, block_tokens: 2,
-                                      prefill_chunk: 4 };
+                                      prefill_chunk: 4, fused: true };
     let server = tiny_server_with(art.clone(), 4 * bpt, 1,
                                   Some(sched_cfg), "dense");
     let timeout = std::time::Duration::from_secs(60);
@@ -540,7 +541,8 @@ fn scheduler_reroutes_off_a_pool_that_can_never_hold_it() {
             seq_len: SEQ,
             workers: 1,
             sched: Some(SchedulerConfig { max_live: 2, block_tokens: 2,
-                                          prefill_chunk: 4 }),
+                                          prefill_chunk: 4,
+                                          fused: true }),
         })
         .expect("server start");
     let timeout = std::time::Duration::from_secs(120);
@@ -606,7 +608,7 @@ fn prefix_cache_reuse_is_token_identical_warm_and_cold() {
         let sched = tiny_server_with(
             art.clone(), 8 << 20, 1,
             Some(SchedulerConfig { max_live: 4, block_tokens: 2,
-                                   prefill_chunk: 3 }),
+                                   prefill_chunk: 3, fused: true }),
             variant);
         let cold = run_decodes(&sched, &reqs);
         let warm = run_decodes(&sched, &reqs);
@@ -658,7 +660,7 @@ fn prefix_cache_preemption_cycle_stays_token_identical() {
     let sched = tiny_server_with(
         art.clone(), 12 * 2 * bpt, 1,
         Some(SchedulerConfig { max_live: 3, block_tokens: 2,
-                               prefill_chunk: 4 }),
+                               prefill_chunk: 4, fused: true }),
         "dense");
     let got = run_decodes(&sched, &reqs);
     let m = sched.shutdown(Drain::Graceful);
@@ -686,7 +688,7 @@ fn disabling_the_prefix_cache_keeps_streams_identical() {
     let want = run_decodes(&oracle, &reqs);
     oracle.shutdown(Drain::Graceful);
     let sched_cfg = SchedulerConfig { max_live: 4, block_tokens: 2,
-                                      prefill_chunk: 3 };
+                                      prefill_chunk: 3, fused: true };
     let mut cache = KvCacheManager::with_block_tokens(
         CacheKind::Dense { d: TINY.d }, TINY.n_layers, 2, 8 << 20,
         sched_cfg.block_tokens);
@@ -796,6 +798,113 @@ fn step_many_chunks_match_single_steps_exactly() {
         assert_eq!(&got[2..], &want[..],
                    "{program}: chunked logits diverged from single steps");
         assert!(b.step_many(&[]).unwrap().is_empty());
+    }
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn fused_batched_step_matches_per_session_across_layouts() {
+    // the tentpole pin: a ≥2-wide step batch through the fused
+    // one-GEMM-pass-per-layer path must be bit-identical to the
+    // per-session loop — dense + latent programs, f64/f32/int8 weight
+    // layouts, mixed prompt lengths, every round.
+    let (art, tag) = synth("fusedlay");
+    let engine = Engine::new(&art).unwrap();
+    let cases = [
+        (format!("step_{}", TINY.name),
+         Weights::load(art.join(format!("model_{}.ltw", TINY.name)))
+             .unwrap()),
+        (format!("latent_step_{tag}"),
+         Weights::load(art.join(format!("latent_model_{tag}.ltw")))
+             .unwrap()),
+    ];
+    let prompts: [&[i32]; 3] = [&[1, 2, 3], &[7, 11, 13, 17, 19], &[40, 2]];
+    for (program, base) in &cases {
+        for layout in [Layout::DenseF64, Layout::PackedF32,
+                       Layout::QuantI8] {
+            let weights = if layout == Layout::DenseF64 {
+                base.clone()
+            } else {
+                base.repack(layout, 16).unwrap()
+            };
+            let prog = engine.program(program).unwrap();
+            let mut fused = BatchedDecodeState::new();
+            let mut plain = BatchedDecodeState::new();
+            plain.set_fused(false);
+            let mut slots = Vec::new();
+            for (i, p) in prompts.iter().enumerate() {
+                let mut sa = prog.decode_session(&weights).unwrap();
+                let mut sb = prog.decode_session(&weights).unwrap();
+                assert_eq!(sa.prefill(p).unwrap(), sb.prefill(p).unwrap(),
+                           "{program}: prefill must agree before stepping");
+                let slot = fused.insert(i as u64, sa);
+                assert_eq!(plain.insert(i as u64, sb), slot);
+                slots.push(slot);
+            }
+            for round in 0..8usize {
+                let steps: Vec<(usize, i32)> = slots.iter().enumerate()
+                    .map(|(i, &s)| {
+                        (s, ((round * 5 + i * 3) % TINY.vocab) as i32)
+                    })
+                    .collect();
+                let a = fused.step_many(&steps);
+                let b = plain.step_many(&steps);
+                for (i, (ra, rb)) in a.iter().zip(&b).enumerate() {
+                    assert_eq!(ra.as_ref().unwrap(), rb.as_ref().unwrap(),
+                               "{program} {}: row {i} diverged in round \
+                                {round}", layout.name());
+                }
+            }
+            assert_eq!(fused.fused_stats(), (8, 24),
+                       "{program} {}: every round must take the fused \
+                        path", layout.name());
+            assert_eq!(plain.fused_stats(), (0, 0),
+                       "the kill switch must keep the per-session loop");
+        }
+    }
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn fused_kill_switch_keeps_streams_identical_and_is_observable() {
+    // `--no-fused-step` parity: the same traffic through a fused and an
+    // unfused scheduler must land on the sequential oracle's exact
+    // tokens (greedy AND sampled, across preemptable mixed batches),
+    // and the metrics must say which path ran.
+    let (art, _tag) = synth("fusedkill");
+    let reqs = sched_requests();
+    for variant in ["dense", "latent"] {
+        let oracle = tiny_server_with(art.clone(), 8 << 20, 1, None,
+                                      variant);
+        let want = run_decodes(&oracle, &reqs);
+        oracle.shutdown(Drain::Graceful);
+        for (t, err, _) in &want {
+            assert!(err.is_none(), "{variant} sequential failed: {err:?}");
+            assert!(!t.is_empty());
+        }
+        let mut metrics = Vec::new();
+        for fused in [true, false] {
+            let server = tiny_server_with(
+                art.clone(), 8 << 20, 1,
+                Some(SchedulerConfig { max_live: 4, block_tokens: 2,
+                                       prefill_chunk: 2, fused }),
+                variant);
+            let got = run_decodes(&server, &reqs);
+            let m = server.shutdown(Drain::Graceful);
+            assert_eq!(got, want,
+                       "{variant} fused={fused}: streams diverged");
+            metrics.push(m);
+        }
+        assert!(metrics[0].counter("fused_batches") >= 1,
+                "{variant}: ≥2-wide same-model batches must fuse");
+        assert!(metrics[0].counter("fused_step_rows")
+                >= 2 * metrics[0].counter("fused_batches"),
+                "{variant}: fused batches hold ≥2 rows by construction");
+        assert!(metrics[0].quantiles("step_us").is_some(),
+                "{variant}: step latency must be observed");
+        assert_eq!(metrics[1].counter("fused_batches"), 0,
+                   "{variant}: the kill switch must keep fusion off");
+        assert_eq!(metrics[1].counter("fused_step_rows"), 0);
     }
     std::fs::remove_dir_all(&art).ok();
 }

@@ -384,7 +384,7 @@ fn graceful_drain_loses_no_inflight_generates() {
     let art = synth("drain");
     // continuous batching so the two streams interleave on one worker
     let server = tiny_server(art.clone(), Some(SchedulerConfig {
-        max_live: 4, block_tokens: 2, prefill_chunk: 8,
+        max_live: 4, block_tokens: 2, prefill_chunk: 8, fused: true,
     }));
     let http = HttpServer::start(server.clone(), HttpConfig {
         addr: "127.0.0.1:0".to_string(),

@@ -474,3 +474,124 @@ fn prop_prefix_cache_churn_keeps_invariants_and_bits() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_fused_step_bit_identical_under_session_churn() {
+    // the fused decode step under arbitrary interleavings of
+    // insert / step_many / single-step / remove over a
+    // [`BatchedDecodeState`]: a fused state and a kill-switched state
+    // driven by the identical op sequence (mixed prompt lengths, slot
+    // reuse, capacity overruns) must return bit-identical logits — and
+    // identical error verdicts — at every step, on the dense and the
+    // latent program, across all three weight layouts.
+    use latentllm::data::synth::write_test_artifacts;
+    use latentllm::model::config::MiniConfig;
+    use latentllm::model::Weights;
+    use latentllm::runtime::decode::BatchedDecodeState;
+    use latentllm::runtime::Engine;
+    use latentllm::Layout;
+
+    const CFG: MiniConfig = MiniConfig {
+        name: "fuseprop", vocab: 48, d: 16, n_layers: 2, n_heads: 2,
+        d_i: 32, max_len: 32,
+    };
+    let dir = std::env::temp_dir()
+        .join(format!("latentllm_prop_fused_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let tag = write_test_artifacts(&dir, &CFG, 17).unwrap();
+    let engine = Engine::new(&dir).unwrap();
+    let dense = Weights::load(
+        dir.join(format!("model_{}.ltw", CFG.name))).unwrap();
+    let latent = Weights::load(
+        dir.join(format!("latent_model_{tag}.ltw"))).unwrap();
+    let mut cases: Vec<(String, Weights)> = Vec::new();
+    for (program, base) in [(format!("step_{}", CFG.name), &dense),
+                            (format!("latent_step_{tag}"), &latent)] {
+        for layout in [Layout::DenseF64, Layout::PackedF32,
+                       Layout::QuantI8] {
+            let w = if layout == Layout::DenseF64 {
+                base.clone()
+            } else {
+                base.repack(layout, 16).unwrap()
+            };
+            cases.push((program.clone(), w));
+        }
+    }
+
+    run_cases("fused-step-churn", 6, 0xB9, |rng, case| {
+        let (program, weights) = &cases[case % cases.len()];
+        let prog = engine.program(program).map_err(|e| e.to_string())?;
+        let mut fused = BatchedDecodeState::new();
+        let mut plain = BatchedDecodeState::new();
+        plain.set_fused(false);
+        let mut live: Vec<usize> = Vec::new();
+        let mut next_seq = 0u64;
+        let mut wide_batches = 0u64;
+        for op in 0..40 {
+            match rng.below(8) {
+                // open + prefill a fresh sequence in both states
+                0..=2 if live.len() < 5 => {
+                    let plen = 1 + rng.below(6);
+                    let prompt: Vec<i32> = (0..plen)
+                        .map(|_| rng.below(CFG.vocab) as i32)
+                        .collect();
+                    let mut sa = prog.decode_session(weights)
+                        .map_err(|e| e.to_string())?;
+                    let mut sb = prog.decode_session(weights)
+                        .map_err(|e| e.to_string())?;
+                    let la = sa.prefill(&prompt)
+                        .map_err(|e| e.to_string())?;
+                    let lb = sb.prefill(&prompt)
+                        .map_err(|e| e.to_string())?;
+                    prop_assert!(la == lb, "op {op}: prefill diverged");
+                    let slot = fused.insert(next_seq, sa);
+                    prop_assert!(plain.insert(next_seq, sb) == slot,
+                                 "op {op}: slot allocation diverged");
+                    live.push(slot);
+                    next_seq += 1;
+                }
+                // retire a random sequence from both states
+                3 if !live.is_empty() => {
+                    let slot = live.swap_remove(rng.below(live.len()));
+                    prop_assert!(fused.remove(slot) == plain.remove(slot),
+                                 "op {op}: remove diverged");
+                }
+                // one mixed batch over every live slot (the fused shape)
+                _ if !live.is_empty() => {
+                    let steps: Vec<(usize, i32)> = live.iter()
+                        .map(|&s| (s, rng.below(CFG.vocab) as i32))
+                        .collect();
+                    if steps.len() >= 2 {
+                        wide_batches += 1;
+                    }
+                    let a = fused.step_many(&steps);
+                    let b = plain.step_many(&steps);
+                    for (i, (ra, rb)) in a.iter().zip(&b).enumerate() {
+                        match (ra, rb) {
+                            (Ok(x), Ok(y)) => prop_assert!(
+                                x == y,
+                                "op {op}: row {i} logits diverged"),
+                            (Err(_), Err(_)) => {}
+                            _ => prop_assert!(
+                                false,
+                                "op {op}: row {i} verdicts diverged \
+                                 (fused ok={} plain ok={})",
+                                ra.is_ok(), rb.is_ok()),
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        // the churn must actually exercise the fused path (capacity
+        // overruns can demote SOME wide batches, never all of them)
+        if wide_batches > 0 {
+            prop_assert!(fused.fused_stats().0 >= 1,
+                         "no wide batch fused ({wide_batches} seen)");
+        }
+        prop_assert!(plain.fused_stats() == (0, 0),
+                     "kill-switched state must never fuse");
+        Ok(())
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
