@@ -239,6 +239,59 @@ fn main() {
                      / rows_s_at(n_live, "loop").max(1e-12));
     }
 
+    // per-layer phase breakdown (what `serve --profile-layers` exposes
+    // on /metrics): enable the global profiler with a bench-local sink,
+    // decode through both programs at every layout, and report mean µs
+    // per (layer kind, phase, weight layout) cell
+    println!("== per-layer phase profile (attn_weight / attn_cache / \
+              finish) ==");
+    let sink = std::sync::Arc::new(
+        latentllm::coordinator::metrics::Metrics::new());
+    latentllm::runtime::profile::install(sink.clone());
+    for (program, base) in
+        [(format!("step_{}", BENCH_CFG.name), &dense_w),
+         (format!("latent_step_{tag}"), &latent_w)] {
+        for layout in LAYOUTS {
+            let weights = if layout == Layout::DenseF64 {
+                (*base).clone()
+            } else {
+                base.repack(layout, QUANT_CHUNK).expect("repack")
+            };
+            let opts = GenerateOpts {
+                max_new: 32, temperature: 0.0, seed: 1, use_cache: true,
+            };
+            generate(&engine, &program, &weights, &prompt, 1, 40,
+                     BENCH_CFG.vocab, &opts).expect("profiled decode");
+        }
+    }
+    latentllm::runtime::profile::disable();
+    let mut phase_rows: Vec<Value> = Vec::new();
+    for kind in ["dense", "latent"] {
+        for layout in LAYOUTS {
+            for phase in ["attn_weight", "attn_cache", "finish"] {
+                let labels = [("kind", kind), ("phase", phase),
+                              ("layout", layout.name())];
+                let Some((sum, n)) = sink.sum_count_with(
+                    latentllm::runtime::profile::PHASE_METRIC, &labels)
+                else {
+                    continue;
+                };
+                let mean = sum / n as f64;
+                println!("  {kind:<6} {:<5} {phase:<11}: {mean:>8.2} µs \
+                          mean over {n} calls", layout.name());
+                phase_rows.push(Value::obj(vec![
+                    ("kind", Value::Str(kind.to_string())),
+                    ("phase", Value::Str(phase.to_string())),
+                    ("layout", Value::Str(layout.name().to_string())),
+                    ("mean_us", Value::Num(mean)),
+                    ("calls", Value::Num(n as f64)),
+                ]));
+            }
+        }
+    }
+    assert!(!phase_rows.is_empty(),
+            "the profiler must record phase timings when enabled");
+
     let json = Value::obj(vec![
         ("model", Value::obj(vec![
             ("name", Value::Str(BENCH_CFG.name.to_string())),
@@ -268,6 +321,7 @@ fn main() {
              Value::Num(rows_s_at(8, "fused")
                         / rows_s_at(8, "loop").max(1e-12))),
         ])),
+        ("layer_phase_us", Value::Arr(phase_rows)),
         ("ppl", Value::Obj(ppls.iter()
             .map(|&(n, p)| (n.to_string(), Value::Num(p)))
             .collect())),

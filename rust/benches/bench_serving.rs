@@ -57,7 +57,8 @@ const SP_REQS: usize = 12;
 fn main() {
     mixed_workload();
     let live_scaling = live_scaling_workload();
-    shared_prefix_workload(live_scaling);
+    let trace_overhead = trace_overhead_workload();
+    shared_prefix_workload(live_scaling, trace_overhead);
     score_sweep();
 }
 
@@ -86,6 +87,7 @@ fn mix_server(art: &std::path::Path, weights: &std::sync::Arc<Weights>,
             seq_len: MIX_CFG.max_len,
             workers: 2,
             sched,
+            trace: true,
         })
         .expect("server start")
 }
@@ -255,6 +257,7 @@ fn live_scaling_workload() -> Value {
                         max_live: live, block_tokens: BLOCK_TOKENS,
                         prefill_chunk: 8, fused,
                     }),
+                    trace: true,
                 })
                 .expect("server start");
             let t0 = std::time::Instant::now();
@@ -323,6 +326,110 @@ fn live_scaling_workload() -> Value {
     ])
 }
 
+/// Tracing is on by default in production, so it must be effectively
+/// free. The same decode-dominated workload runs traced and untraced,
+/// interleaved, best-of-3 each: the streams must be bit-identical and
+/// the traced goodput must stay within 2% of untraced (best-of compares
+/// peak capability, which filters scheduler/allocator noise on shared
+/// runners). Returns the JSON section for BENCH_SERVING.json.
+fn trace_overhead_workload() -> Value {
+    let dir = std::env::temp_dir()
+        .join(format!("latentllm_bench_trace_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    write_test_artifacts(&dir, &LIVE_CFG, 29).expect("synth artifacts");
+    let weights = std::sync::Arc::new(Weights::load(
+        dir.join(format!("model_{}.ltw", LIVE_CFG.name))).unwrap());
+    let bpt = 2 * LIVE_CFG.d * 2 * LIVE_CFG.n_layers;
+    let budget = 16 * ((LIVE_PROMPT + LIVE_NEW) / BLOCK_TOKENS + 2)
+        * BLOCK_TOKENS * bpt;
+    let live = 8usize;
+
+    println!("== request-trace overhead: traced vs untraced ==");
+    println!("model {} (d={}, L={}), 1 worker, {live} concurrent \
+              decodes of {LIVE_NEW} tokens, best of 3 runs per mode",
+             LIVE_CFG.name, LIVE_CFG.d, LIVE_CFG.n_layers);
+    // [untraced, traced]
+    let mut best = [0.0f64; 2];
+    let mut streams: [Option<Vec<Vec<i32>>>; 2] = [None, None];
+    for _run in 0..3 {
+        for (slot, trace) in [(0usize, false), (1usize, true)] {
+            let variants = vec![ModelVariant {
+                name: "dense".into(),
+                score_program: format!("score_{}", LIVE_CFG.name),
+                step_program: format!("step_{}", LIVE_CFG.name),
+                weights: weights.clone(),
+                cache: KvCacheManager::with_block_tokens(
+                    CacheKind::Dense { d: LIVE_CFG.d }, LIVE_CFG.n_layers,
+                    2, budget, BLOCK_TOKENS),
+            }];
+            let server = Server::start(
+                dir.to_path_buf(),
+                Router::new(variants, Policy::RoundRobin),
+                ServerConfig {
+                    batcher: BatcherConfig {
+                        max_batch: 4,
+                        max_wait: Duration::from_millis(2),
+                    },
+                    policy: Policy::RoundRobin,
+                    program_batch: 8,
+                    seq_len: LIVE_CFG.max_len,
+                    workers: 1,
+                    sched: Some(SchedulerConfig {
+                        max_live: live, block_tokens: BLOCK_TOKENS,
+                        prefill_chunk: 8, fused: true,
+                    }),
+                    trace,
+                })
+                .expect("server start");
+            let t0 = std::time::Instant::now();
+            let rxs: Vec<_> = (0..live)
+                .map(|i| server.submit_generate(GenerateParams {
+                    prompt: (0..LIVE_PROMPT)
+                        .map(|j| ((i * 17 + j * 5) % LIVE_CFG.vocab)
+                             as i32)
+                        .collect(),
+                    max_new: LIVE_NEW,
+                    temperature: 0.0,
+                    seed: i as u64,
+                }).expect("submit_generate"))
+                .collect();
+            let tokens: Vec<Vec<i32>> = rxs.into_iter()
+                .map(|rx| {
+                    let r = rx.recv().expect("gen response");
+                    assert!(r.error().is_none(), "decode failed");
+                    r.tokens().to_vec()
+                })
+                .collect();
+            let dt = t0.elapsed().as_secs_f64();
+            let m = server.shutdown(Drain::Graceful);
+            best[slot] = best[slot]
+                .max(m.counter("gen_tokens") as f64 / dt.max(1e-9));
+            match &streams[slot] {
+                None => streams[slot] = Some(tokens),
+                Some(prev) => assert_eq!(
+                    prev, &tokens,
+                    "trace={trace}: token streams changed across runs"),
+            }
+        }
+    }
+    assert_eq!(streams[0], streams[1],
+               "tracing changed the token streams — it must be a pure \
+                observer");
+    let overhead = 1.0 - best[1] / best[0].max(1e-9);
+    println!("  untraced best {:.1} tok/s, traced best {:.1} tok/s \
+              ({:+.2}% overhead)",
+             best[0], best[1], overhead * 100.0);
+    assert!(overhead < 0.02,
+            "tracing costs {:.2}% goodput — over the 2% budget",
+            overhead * 100.0);
+    std::fs::remove_dir_all(&dir).ok();
+    Value::obj(vec![
+        ("untraced_tok_s", Value::Num(best[0])),
+        ("traced_tok_s", Value::Num(best[1])),
+        ("overhead_pct", Value::Num(overhead * 100.0)),
+    ])
+}
+
 struct SpRun {
     sharing_pct: usize,
     mode: &'static str,
@@ -354,7 +461,7 @@ fn sp_wave(server: &Server, prompts: &[Vec<i32>]) -> (f64, usize) {
     (t0.elapsed().as_secs_f64(), ok)
 }
 
-fn shared_prefix_workload(live_scaling: Value) {
+fn shared_prefix_workload(live_scaling: Value, trace_overhead: Value) {
     let dir = std::env::temp_dir()
         .join(format!("latentllm_bench_prefix_{}", std::process::id()));
     std::fs::remove_dir_all(&dir).ok();
@@ -457,6 +564,7 @@ fn shared_prefix_workload(live_scaling: Value) {
             ])).collect())),
         ("prefill_ms_reduction_at_90_shared", Value::Num(reduction)),
         ("live_scaling", live_scaling),
+        ("trace_overhead", trace_overhead),
     ]);
     let out = std::env::var("BENCH_SERVING_JSON")
         .unwrap_or_else(|_| "BENCH_SERVING.json".to_string());
@@ -506,6 +614,7 @@ fn score_sweep() {
                 seq_len: 128,
                 workers,
                 sched: None,
+                trace: true,
             })
             .expect("server start");
         let reqs = corpus.calibration(n_requests, 128, 42);

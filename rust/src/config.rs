@@ -17,6 +17,8 @@
 //! sched_chunk = 16      # prefill tokens fed per scheduler iteration
 //! prefix_cache = true   # content-addressed prefix reuse (default on)
 //! fused_step = true     # fused multi-sequence decode step (default on)
+//! trace = true          # per-request lifecycle traces (default on)
+//! profile_layers = false  # per-layer phase histograms (opt-in)
 //! [report]
 //! max_batches = 12
 //! qk_iters = 8
@@ -66,6 +68,14 @@ pub struct ServeSettings {
     /// block sharing; freed prefix blocks then return straight to the
     /// free list instead of the cached-free LRU)
     pub prefix_cache: bool,
+    /// request-scoped lifecycle traces ([serve] trace = false, or
+    /// `serve --no-trace`, turns them off): timings on every response
+    /// and span chains on `GET /debug/requests`
+    pub trace: bool,
+    /// per-layer phase profiling into labeled histograms ([serve]
+    /// profile_layers = true, or `serve --profile-layers`); off by
+    /// default — the hooks clock every layer phase
+    pub profile_layers: bool,
 }
 
 impl Default for ServeSettings {
@@ -82,6 +92,8 @@ impl Default for ServeSettings {
             sched: true,
             scheduler: SchedulerConfig::default(),
             prefix_cache: true,
+            trace: true,
+            profile_layers: false,
         }
     }
 }
@@ -189,6 +201,13 @@ impl Config {
         {
             cfg.serve.prefix_cache = b;
         }
+        if let Some(b) = t.get("serve.trace").and_then(|v| v.as_bool()) {
+            cfg.serve.trace = b;
+        }
+        if let Some(b) = t.get("serve.profile_layers")
+            .and_then(|v| v.as_bool()) {
+            cfg.serve.profile_layers = b;
+        }
         if let Some(v) = t.get("http.addr").and_then(|v| v.as_str()) {
             cfg.http.addr = v.to_string();
         }
@@ -264,18 +283,24 @@ mod tests {
         let t = toml::parse(
             "[serve]\nsched = false\nsched_live = 12\nsched_block = 8\n\
              sched_chunk = 32\nprefix_cache = false\n\
-             fused_step = false\n").unwrap();
+             fused_step = false\ntrace = false\n\
+             profile_layers = true\n").unwrap();
         let c = Config::from_table(&t).unwrap();
         assert!(!c.serve.sched);
         assert!(!c.serve.prefix_cache);
+        assert!(!c.serve.trace);
+        assert!(c.serve.profile_layers);
         assert_eq!(c.serve.scheduler.max_live, 12);
         assert_eq!(c.serve.scheduler.block_tokens, 8);
         assert_eq!(c.serve.scheduler.prefill_chunk, 32);
         assert!(!c.serve.scheduler.fused);
-        // defaults: scheduler on at the SchedulerConfig defaults
+        // defaults: scheduler on at the SchedulerConfig defaults,
+        // tracing on, layer profiling off
         let d = Config::from_table(&Table::new()).unwrap();
         assert!(d.serve.sched);
         assert_eq!(d.serve.scheduler, SchedulerConfig::default());
+        assert!(d.serve.trace);
+        assert!(!d.serve.profile_layers);
     }
 
     #[test]

@@ -10,6 +10,8 @@
 //! | `/v1/score`            | POST   | sequence NLL through the batcher|
 //! | `/healthz`             | GET    | liveness + worker count         |
 //! | `/metrics`             | GET    | Prometheus text exposition      |
+//! | `/debug/requests?n=K`  | GET    | last K completed request traces |
+//! |                        |        | (span chains + timings)         |
 //! | `/admin/shutdown`      | POST   | SIGTERM-equivalent: stop        |
 //! |                        |        | accepting, drain, exit `wait()` |
 //!
@@ -489,10 +491,23 @@ fn retry_after(ctx: &Ctx) -> Vec<(&'static str, String)> {
     vec![("Retry-After", ctx.cfg.retry_after_secs.to_string())]
 }
 
+/// `?key=value` lookup on a raw query string (no percent decoding —
+/// the debug endpoints take numeric params only).
+fn query_usize(query: &str, key: &str) -> Option<usize> {
+    query.split('&')
+        .filter_map(|kv| kv.split_once('='))
+        .find(|(k, _)| *k == key)
+        .and_then(|(_, v)| v.parse().ok())
+}
+
 /// Dispatch one parsed request; returns whether to keep the connection.
 fn handle_request(ctx: &Arc<Ctx>, w: &mut TcpStream, req: HttpRequest,
                   keep: bool) -> Result<bool> {
-    match (req.method.as_str(), req.path.as_str()) {
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (req.path.clone(), String::new()),
+    };
+    match (req.method.as_str(), path.as_str()) {
         ("GET", "/healthz") => {
             let workers = ctx.server.live_workers();
             let (status, state) =
@@ -508,6 +523,17 @@ fn handle_request(ctx: &Arc<Ctx>, w: &mut TcpStream, req: HttpRequest,
             let text = ctx.server.metrics.render_prometheus();
             respond_raw(ctx, w, 200, "text/plain; version=0.0.4",
                         text.as_bytes(), keep, &[])?;
+            Ok(keep)
+        }
+        ("GET", "/debug/requests") => {
+            let n = query_usize(&query, "n").unwrap_or(32);
+            let traces: Vec<Value> = ctx.server.traces.recent(n)
+                .iter().map(|t| t.to_json()).collect();
+            let body = Value::obj(vec![
+                ("count", traces.len().into()),
+                ("requests", Value::Arr(traces)),
+            ]);
+            respond_json(ctx, w, 200, &body, keep, &[])?;
             Ok(keep)
         }
         ("POST", "/v1/score") => {
@@ -574,12 +600,16 @@ fn handle_score(ctx: &Arc<Ctx>, w: &mut TcpStream, req: &HttpRequest,
     match handle.recv_timeout(REQUEST_TIMEOUT) {
         Ok(resp) => match &resp.result {
             Ok(out) => {
-                let body = Value::obj(vec![
+                let mut fields = vec![
                     ("id", (resp.id as f64).into()),
                     ("object", "score".into()),
                     ("variant", resp.variant.as_str().into()),
                     ("nll", f64::from(out.nll).into()),
-                ]);
+                ];
+                if let Some(t) = &resp.timings {
+                    fields.push(("timings", t.to_json()));
+                }
+                let body = Value::obj(fields);
                 respond_json(ctx, w, 200, &body, keep, &[])
             }
             Err(e) => respond_serve_error(ctx, w, e, keep),
@@ -643,12 +673,16 @@ fn handle_completions(ctx: &Arc<Ctx>, w: &mut TcpStream,
                 Ok(out) => {
                     let toks = Value::Arr(out.tokens.iter()
                         .map(|&t| Value::Num(t as f64)).collect());
-                    let body = Value::obj(vec![
+                    let mut fields = vec![
                         ("id", (resp.id as f64).into()),
                         ("object", "completion".into()),
                         ("variant", resp.variant.as_str().into()),
                         ("tokens", toks),
-                    ]);
+                    ];
+                    if let Some(t) = &resp.timings {
+                        fields.push(("timings", t.to_json()));
+                    }
+                    let body = Value::obj(fields);
                     respond_json(ctx, w, 200, &body, keep, &[])
                 }
                 Err(e) => respond_serve_error(ctx, w, e, keep),
@@ -694,12 +728,18 @@ fn handle_completions(ctx: &Arc<Ctx>, w: &mut TcpStream,
     }
     let fin = match handle.recv_timeout(REQUEST_TIMEOUT) {
         Ok(resp) => match &resp.result {
-            Ok(out) => Value::obj(vec![
-                ("done", true.into()),
-                ("id", (resp.id as f64).into()),
-                ("variant", resp.variant.as_str().into()),
-                ("count", out.tokens.len().into()),
-            ]),
+            Ok(out) => {
+                let mut fields = vec![
+                    ("done", true.into()),
+                    ("id", (resp.id as f64).into()),
+                    ("variant", resp.variant.as_str().into()),
+                    ("count", out.tokens.len().into()),
+                ];
+                if let Some(t) = &resp.timings {
+                    fields.push(("timings", t.to_json()));
+                }
+                Value::obj(fields)
+            }
             Err(e) => {
                 let (_, kind) = status_for(e);
                 Value::obj(vec![
@@ -766,6 +806,14 @@ mod tests {
             reason: "x".into() }).0, 503);
         assert_eq!(status_for(&ServeError::Internal {
             reason: "x".into() }).0, 500);
+    }
+
+    #[test]
+    fn query_strings_parse_numeric_params() {
+        assert_eq!(query_usize("n=5", "n"), Some(5));
+        assert_eq!(query_usize("a=1&n=12", "n"), Some(12));
+        assert_eq!(query_usize("n=x", "n"), None);
+        assert_eq!(query_usize("", "n"), None);
     }
 
     #[test]

@@ -1,14 +1,157 @@
-//! Lightweight metrics registry: counters + latency histograms with
-//! p50/p95/p99 summaries, shared across coordinator threads.
+//! Lightweight metrics registry: labeled counters, gauges, and
+//! fixed-log-bucket latency histograms (native Prometheus `histogram`
+//! exposition), shared across coordinator threads. Every series is
+//! O(1) memory regardless of traffic volume — a long-running server
+//! never grows its registry past the set of (name, label-set) pairs it
+//! touches.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Mutex;
 use std::time::Duration;
 
+/// Number of finite histogram buckets: upper bounds are 2^0..2^26 µs
+/// (1 µs to ~67 s), one octave per bucket, plus a +Inf overflow slot.
+/// Log-2 spacing bounds the quantile estimate to within one bucket
+/// (≤2× relative) of the exact-sort answer at constant memory.
+const BUCKETS: usize = 27;
+
+/// Upper bound (µs) of finite bucket `i`.
+fn bucket_bound(i: usize) -> u64 {
+    1u64 << i
+}
+
+/// Index of the first bucket whose upper bound holds `us` (the +Inf
+/// slot for anything past the last finite bound).
+fn bucket_index(us: f64) -> usize {
+    (0..BUCKETS)
+        .find(|&i| us <= bucket_bound(i) as f64)
+        .unwrap_or(BUCKETS)
+}
+
+/// One fixed-size latency histogram: per-bucket counts plus exact
+/// sum/count so `_sum`/`_count` stay precise even though quantiles are
+/// bucket-resolved.
+#[derive(Clone, Default)]
+struct Hist {
+    counts: [u64; BUCKETS + 1],
+    total: u64,
+    sum: f64,
+}
+
+impl Hist {
+    fn observe(&mut self, us: f64) {
+        self.counts[bucket_index(us)] += 1;
+        self.total += 1;
+        self.sum += us;
+    }
+
+    /// Quantile estimate at the same rank the old exact-sort used
+    /// (`(n-1)·p`), resolved to the holding bucket's upper bound — a
+    /// conservative estimate within one bucket of the exact value.
+    fn quantile(&self, p: f64) -> f64 {
+        let target = ((self.total.saturating_sub(1)) as f64 * p) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if c > 0 && cum > target {
+                return bucket_bound(i.min(BUCKETS)) as f64;
+            }
+        }
+        0.0
+    }
+}
+
+/// Registry key: metric name plus a sorted label set. The empty label
+/// set is the unlabeled series the plain `incr`/`observe` API touches.
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+struct Key {
+    name: String,
+    labels: Vec<(String, String)>,
+}
+
+impl Key {
+    fn new(name: &str, labels: &[(&str, &str)]) -> Self {
+        let mut labels: Vec<(String, String)> = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        labels.sort();
+        Key { name: name.to_string(), labels }
+    }
+
+    fn plain(name: &str) -> Self {
+        Key { name: name.to_string(), labels: Vec::new() }
+    }
+
+    /// Human form for the shutdown summary: `name` or `name{k=v,...}`.
+    fn display(&self) -> String {
+        if self.labels.is_empty() {
+            return self.name.clone();
+        }
+        let labels: Vec<String> = self.labels
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        format!("{}{{{}}}", self.name, labels.join(","))
+    }
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+/// Map each distinct registry name to a unique sanitized exposition
+/// name. `sanitize` is lossy (`a.b` and `a/b` both land on `a_b`), so
+/// without this two distinct registry keys would silently merge into
+/// one exposition series; later names that collide with a taken
+/// spelling get a deterministic `_2`, `_3`, … suffix instead.
+fn unique_names<'a>(names: impl Iterator<Item = &'a str>)
+                    -> BTreeMap<&'a str, String> {
+    let originals: BTreeSet<&str> = names.collect();
+    let mut used: BTreeSet<String> = BTreeSet::new();
+    let mut out = BTreeMap::new();
+    for name in originals {
+        let base = sanitize(name);
+        let mut candidate = base.clone();
+        let mut i = 2;
+        while !used.insert(candidate.clone()) {
+            candidate = format!("{base}_{i}");
+            i += 1;
+        }
+        out.insert(name, candidate);
+    }
+    out
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render a label set as `{k="v",...}` (empty string when there is
+/// nothing to show), with an optional extra pair appended last — the
+/// histogram renderer threads `le` through here.
+fn label_str(labels: &[(String, String)], extra: Option<(&str, &str)>)
+             -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{}=\"{}\"", sanitize(k), escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
 #[derive(Default)]
 struct Inner {
-    counters: BTreeMap<String, u64>,
-    latencies: BTreeMap<String, Vec<f64>>, // micros
+    counters: BTreeMap<Key, u64>,
+    hists: BTreeMap<Key, Hist>,
     /// high-water gauges (e.g. peak cache bytes across workers)
     gauges: BTreeMap<String, u64>,
     /// level gauges adjusted by +/- deltas (queue depth, live sessions);
@@ -28,11 +171,26 @@ impl Metrics {
 
     pub fn incr(&self, name: &str, by: u64) {
         let mut g = self.inner.lock().unwrap();
-        *g.counters.entry(name.to_string()).or_insert(0) += by;
+        *g.counters.entry(Key::plain(name)).or_insert(0) += by;
+    }
+
+    /// Increment a labeled counter series — rendered as a Prometheus
+    /// label set (`latentllm_<name>_total{variant="dense",...}`).
+    pub fn incr_with(&self, name: &str, labels: &[(&str, &str)],
+                     by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(Key::new(name, labels)).or_insert(0) += by;
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+        self.inner.lock().unwrap()
+            .counters.get(&Key::plain(name)).copied().unwrap_or(0)
+    }
+
+    pub fn counter_with(&self, name: &str, labels: &[(&str, &str)])
+                        -> u64 {
+        self.inner.lock().unwrap()
+            .counters.get(&Key::new(name, labels)).copied().unwrap_or(0)
     }
 
     /// Record a high-water mark: the gauge keeps the max value observed
@@ -83,7 +241,17 @@ impl Metrics {
     /// stays monotone as Prometheus requires.
     pub fn counter_max(&self, name: &str, value: u64) {
         let mut g = self.inner.lock().unwrap();
-        let e = g.counters.entry(name.to_string()).or_insert(0);
+        let e = g.counters.entry(Key::plain(name)).or_insert(0);
+        *e = (*e).max(value);
+    }
+
+    /// Labeled form of [`Metrics::counter_max`]: raise one series of a
+    /// labeled counter family to `value` (per-variant prefix counters
+    /// are reconciled this way, one series per cache).
+    pub fn counter_max_with(&self, name: &str, labels: &[(&str, &str)],
+                            value: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.counters.entry(Key::new(name, labels)).or_insert(0);
         *e = (*e).max(value);
     }
 
@@ -105,76 +273,128 @@ impl Metrics {
     }
 
     pub fn observe(&self, name: &str, d: Duration) {
-        let mut g = self.inner.lock().unwrap();
-        g.latencies.entry(name.to_string()).or_default()
-            .push(d.as_secs_f64() * 1e6);
+        self.observe_with(name, &[], d);
     }
 
+    /// Record a latency sample into a labeled histogram series.
+    pub fn observe_with(&self, name: &str, labels: &[(&str, &str)],
+                        d: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        g.hists.entry(Key::new(name, labels)).or_default()
+            .observe(d.as_secs_f64() * 1e6);
+    }
+
+    /// p50/p95/p99 estimates off the histogram buckets (µs): each is
+    /// the upper bound of the bucket holding the exact-sort rank, so it
+    /// is within one log-2 bucket of the old exact answer.
     pub fn quantiles(&self, name: &str) -> Option<(f64, f64, f64)> {
+        self.quantiles_with(name, &[])
+    }
+
+    pub fn quantiles_with(&self, name: &str, labels: &[(&str, &str)])
+                          -> Option<(f64, f64, f64)> {
         let g = self.inner.lock().unwrap();
-        let mut v = g.latencies.get(name)?.clone();
-        if v.is_empty() {
+        let h = g.hists.get(&Key::new(name, labels))?;
+        if h.total == 0 {
             return None;
         }
-        v.sort_by(|a, b| a.total_cmp(b));
-        let q = |p: f64| v[((v.len() as f64 - 1.0) * p) as usize];
-        Some((q(0.50), q(0.95), q(0.99)))
+        Some((h.quantile(0.50), h.quantile(0.95), h.quantile(0.99)))
     }
 
     pub fn count(&self, name: &str) -> usize {
         self.inner.lock().unwrap()
-            .latencies.get(name).map(|v| v.len()).unwrap_or(0)
+            .hists.get(&Key::plain(name))
+            .map(|h| h.total as usize).unwrap_or(0)
+    }
+
+    /// Exact (sum µs, sample count) of a histogram series — what the
+    /// benches use to report mean per-phase cost.
+    pub fn sum_count_with(&self, name: &str, labels: &[(&str, &str)])
+                          -> Option<(f64, u64)> {
+        let g = self.inner.lock().unwrap();
+        let h = g.hists.get(&Key::new(name, labels))?;
+        if h.total == 0 {
+            return None;
+        }
+        Some((h.sum, h.total))
     }
 
     /// Render the whole registry in Prometheus text exposition format
     /// (what `GET /metrics` serves). Counters become
     /// `latentllm_<name>_total`, high-water and level gauges become
     /// `latentllm_<name>` gauges, and each latency series becomes a
-    /// summary with p50/p95/p99 quantiles plus `_count`/`_sum` (values
-    /// are microseconds, as the `_us` metric names say). Everything is
-    /// computed under one lock acquisition — the inner Mutex is not
-    /// reentrant, so this must not call the public getters.
+    /// native `histogram` with log-2 `le` buckets plus `_sum`/`_count`
+    /// (values are microseconds, as the `_us` metric names say). Label
+    /// sets render inline; colliding sanitized names are suffix-
+    /// disambiguated by `unique_names`. Everything is computed under
+    /// one lock acquisition — the inner Mutex is not reentrant, so this
+    /// must not call the public getters.
     pub fn render_prometheus(&self) -> String {
-        fn sanitize(name: &str) -> String {
-            name.chars()
-                .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
-                .collect()
-        }
         let g = self.inner.lock().unwrap();
         let mut out = String::new();
+
+        let counter_names =
+            unique_names(g.counters.keys().map(|k| k.name.as_str()));
+        let mut last: Option<&str> = None;
         for (k, v) in &g.counters {
-            let n = sanitize(k);
+            let n = &counter_names[k.name.as_str()];
+            if last != Some(k.name.as_str()) {
+                out.push_str(&format!(
+                    "# TYPE latentllm_{n}_total counter\n"));
+                last = Some(k.name.as_str());
+            }
             out.push_str(&format!(
-                "# TYPE latentllm_{n}_total counter\n\
-                 latentllm_{n}_total {v}\n"));
+                "latentllm_{n}_total{} {v}\n",
+                label_str(&k.labels, None)));
         }
+
+        // gauges and levels share the plain-name exposition namespace
+        let gauge_names = unique_names(
+            g.gauges.keys().map(String::as_str)
+                .chain(g.levels.keys().map(String::as_str)));
         for (k, v) in &g.gauges {
-            let n = sanitize(k);
+            let n = &gauge_names[k.as_str()];
             out.push_str(&format!(
                 "# TYPE latentllm_{n} gauge\nlatentllm_{n} {v}\n"));
         }
         for (k, v) in &g.levels {
-            let n = sanitize(k);
+            if g.gauges.contains_key(k) {
+                continue; // the gauge rendering above already owns it
+            }
+            let n = &gauge_names[k.as_str()];
             out.push_str(&format!(
                 "# TYPE latentllm_{n} gauge\nlatentllm_{n} {v}\n"));
         }
-        for (k, vals) in &g.latencies {
-            if vals.is_empty() {
+
+        let hist_names =
+            unique_names(g.hists.keys().map(|k| k.name.as_str()));
+        let mut last: Option<&str> = None;
+        for (k, h) in &g.hists {
+            if h.total == 0 {
                 continue;
             }
-            let n = format!("latentllm_{}", sanitize(k));
-            let mut v = vals.clone();
-            v.sort_by(|a, b| a.total_cmp(b));
-            let q = |p: f64| v[((v.len() as f64 - 1.0) * p) as usize];
-            let sum: f64 = v.iter().sum();
-            out.push_str(&format!("# TYPE {n} summary\n"));
-            for (label, p) in [("0.5", 0.5), ("0.95", 0.95),
-                               ("0.99", 0.99)] {
-                out.push_str(&format!(
-                    "{n}{{quantile=\"{label}\"}} {}\n", q(p)));
+            let n = format!("latentllm_{}", hist_names[k.name.as_str()]);
+            if last != Some(k.name.as_str()) {
+                out.push_str(&format!("# TYPE {n} histogram\n"));
+                last = Some(k.name.as_str());
             }
-            out.push_str(&format!("{n}_sum {sum}\n"));
-            out.push_str(&format!("{n}_count {}\n", v.len()));
+            let mut cum = 0u64;
+            for (i, &c) in h.counts[..BUCKETS].iter().enumerate() {
+                cum += c;
+                out.push_str(&format!(
+                    "{n}_bucket{} {cum}\n",
+                    label_str(&k.labels,
+                              Some(("le",
+                                    &bucket_bound(i).to_string())))));
+            }
+            out.push_str(&format!(
+                "{n}_bucket{} {}\n",
+                label_str(&k.labels, Some(("le", "+Inf"))), h.total));
+            out.push_str(&format!(
+                "{n}_sum{} {}\n", label_str(&k.labels, None), h.sum));
+            out.push_str(&format!(
+                "{n}_count{} {}\n", label_str(&k.labels, None),
+                h.total));
         }
         out
     }
@@ -184,7 +404,7 @@ impl Metrics {
         let g = self.inner.lock().unwrap();
         let mut out = String::new();
         for (k, v) in &g.counters {
-            out.push_str(&format!("  {k}: {v}\n"));
+            out.push_str(&format!("  {}: {v}\n", k.display()));
         }
         for (k, v) in &g.gauges {
             out.push_str(&format!("  {k}: {v} (peak)\n"));
@@ -194,17 +414,14 @@ impl Metrics {
                 out.push_str(&format!("  {k}: {v} (now)\n"));
             }
         }
-        drop(g);
-        let names: Vec<String> = {
-            let g = self.inner.lock().unwrap();
-            g.latencies.keys().cloned().collect()
-        };
-        for name in names {
-            if let Some((p50, p95, p99)) = self.quantiles(&name) {
-                out.push_str(&format!(
-                    "  {name}: n={} p50={:.0}µs p95={:.0}µs p99={:.0}µs\n",
-                    self.count(&name), p50, p95, p99));
+        for (k, h) in &g.hists {
+            if h.total == 0 {
+                continue;
             }
+            out.push_str(&format!(
+                "  {}: n={} p50={:.0}µs p95={:.0}µs p99={:.0}µs\n",
+                k.display(), h.total, h.quantile(0.50),
+                h.quantile(0.95), h.quantile(0.99)));
         }
         out
     }
@@ -223,11 +440,47 @@ mod tests {
         for i in 1..=100u64 {
             m.observe("lat", Duration::from_micros(i));
         }
+        // bucket-resolved quantiles: the estimate is the upper bound of
+        // the bucket holding the exact value, so exact ≤ est < 2·exact
         let (p50, p95, p99) = m.quantiles("lat").unwrap();
-        assert!((p50 - 50.0).abs() <= 2.0);
-        assert!((p95 - 95.0).abs() <= 2.0);
-        assert!((p99 - 99.0).abs() <= 2.0);
+        for (est, exact) in [(p50, 50.0), (p95, 95.0), (p99, 99.0)] {
+            assert!(est >= exact && est < 2.0 * exact,
+                    "estimate {est} not within one bucket of {exact}");
+        }
+        assert_eq!(m.count("lat"), 100);
         assert!(m.quantiles("missing").is_none());
+    }
+
+    #[test]
+    fn histogram_quantiles_track_exact_sort_within_one_bucket() {
+        // the pre-histogram implementation sorted the raw samples; the
+        // bucketed estimate must stay within one log-2 bucket of it on
+        // an awkward (clustered + heavy-tailed) distribution
+        let mut samples: Vec<f64> = Vec::new();
+        let mut x = 7u64;
+        for _ in 0..500 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695);
+            samples.push(1.0 + (x >> 33) as f64 % 9000.0);
+        }
+        samples.extend([120000.0; 25]); // tail well past the cluster
+        let m = Metrics::new();
+        for &s in &samples {
+            m.observe_with("lat", &[("variant", "dense")],
+                           Duration::from_secs_f64(s / 1e6));
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let exact =
+            |p: f64| sorted[((sorted.len() as f64 - 1.0) * p) as usize];
+        let (p50, p95, p99) =
+            m.quantiles_with("lat", &[("variant", "dense")]).unwrap();
+        for (est, p) in [(p50, 0.50), (p95, 0.95), (p99, 0.99)] {
+            let want = exact(p);
+            assert!(est >= want && est <= 2.0 * want + 1.0,
+                    "p{p}: estimate {est} vs exact {want}");
+        }
+        // unlabeled series is a distinct key
+        assert!(m.quantiles("lat").is_none());
     }
 
     #[test]
@@ -278,6 +531,35 @@ mod tests {
     }
 
     #[test]
+    fn labeled_counters_round_trip_through_exposition() {
+        let m = Metrics::new();
+        m.incr_with("steps", &[("variant", "dense"), ("path", "fused")],
+                    4);
+        m.incr_with("steps", &[("path", "fused"), ("variant", "dense")],
+                    1); // label order must not mint a second series
+        m.incr_with("steps", &[("variant", "latent"), ("path", "fused")],
+                    2);
+        m.incr("steps", 10); // unlabeled sibling stays separate
+        assert_eq!(m.counter_with(
+            "steps", &[("variant", "dense"), ("path", "fused")]), 5);
+        assert_eq!(m.counter_with(
+            "steps", &[("path", "fused"), ("variant", "dense")]), 5);
+        assert_eq!(m.counter("steps"), 10);
+        let text = m.render_prometheus();
+        assert!(text.contains(
+            "latentllm_steps_total{path=\"fused\",variant=\"dense\"} 5"),
+            "sorted label set missing:\n{text}");
+        assert!(text.contains(
+            "latentllm_steps_total{path=\"fused\",variant=\"latent\"} 2"));
+        assert!(text.contains("latentllm_steps_total 10"));
+        assert_eq!(
+            text.matches("# TYPE latentllm_steps_total counter").count(),
+            1, "one TYPE line per family:\n{text}");
+        assert!(m.summary()
+                    .contains("steps{path=fused,variant=dense}: 5"));
+    }
+
+    #[test]
     fn renders_prometheus_text() {
         let m = Metrics::new();
         m.incr("requests", 3);
@@ -285,15 +567,26 @@ mod tests {
         m.gauge_add("gen_queue_depth", 2);
         m.observe("request_us", Duration::from_micros(100));
         m.observe("request_us", Duration::from_micros(300));
+        m.observe_with("step_us", &[("variant", "dense")],
+                       Duration::from_micros(3));
         let text = m.render_prometheus();
         assert!(text.contains("# TYPE latentllm_requests_total counter"));
         assert!(text.contains("latentllm_requests_total 3"));
         assert!(text.contains("latentllm_cache_bytes_peak 42"));
         assert!(text.contains("latentllm_gen_queue_depth 2"));
-        assert!(text.contains("# TYPE latentllm_request_us summary"));
-        assert!(text.contains("latentllm_request_us{quantile=\"0.5\"}"));
+        // native histogram exposition: cumulative log-2 `le` buckets,
+        // a +Inf terminal, exact _sum/_count
+        assert!(text.contains("# TYPE latentllm_request_us histogram"));
+        assert!(text.contains("latentllm_request_us_bucket{le=\"128\"} 1"));
+        assert!(text.contains("latentllm_request_us_bucket{le=\"512\"} 2"));
+        assert!(text.contains(
+            "latentllm_request_us_bucket{le=\"+Inf\"} 2"));
         assert!(text.contains("latentllm_request_us_count 2"));
         assert!(text.contains("latentllm_request_us_sum 400"));
+        assert!(text.contains(
+            "latentllm_step_us_bucket{variant=\"dense\",le=\"4\"} 1"),
+            "labeled histogram buckets must merge labels with le:\n\
+             {text}");
         // the exposition format contract: every non-comment line is
         // exactly "name[{labels}] value" with a numeric value
         for line in text.lines() {
@@ -307,6 +600,45 @@ mod tests {
             assert!(val.parse::<f64>().is_ok(), "value in {line:?}");
             assert!(name.starts_with("latentllm_"), "prefix in {line:?}");
         }
+    }
+
+    #[test]
+    fn colliding_sanitized_names_get_distinct_series() {
+        // `a.b` and `a/b` both sanitize to `a_b`: without
+        // disambiguation the exposition would show one merged series
+        let m = Metrics::new();
+        m.incr("gen.tokens", 7);
+        m.incr("gen/tokens", 11);
+        m.incr("gen_tokens", 13);
+        let text = m.render_prometheus();
+        assert!(text.contains("latentllm_gen_tokens_total 7"),
+                "first sorted original keeps the base name:\n{text}");
+        assert!(text.contains("latentllm_gen_tokens_2_total 11"),
+                "second collider must be suffixed:\n{text}");
+        assert!(text.contains("latentllm_gen_tokens_3_total 13"),
+                "third collider must be suffixed:\n{text}");
+        // same story for histograms
+        m.observe("a.us", Duration::from_micros(5));
+        m.observe("a_us", Duration::from_micros(9));
+        let text = m.render_prometheus();
+        assert!(text.contains("latentllm_a_us_count 1"));
+        assert!(text.contains("latentllm_a_us_2_count 1"));
+    }
+
+    #[test]
+    fn histogram_memory_is_bounded() {
+        // a million observations must not grow the registry: one Hist
+        // is a fixed array, unlike the old per-sample Vec<f64>
+        let m = Metrics::new();
+        for i in 0..1_000_000u64 {
+            m.observe("gen_us", Duration::from_micros(i % 4096));
+        }
+        assert_eq!(m.count("gen_us"), 1_000_000);
+        let (_, n) = m.sum_count_with("gen_us", &[]).unwrap();
+        assert_eq!(n, 1_000_000);
+        let (p50, _, _) = m.quantiles("gen_us").unwrap();
+        assert!(p50 >= 2048.0 / 2.0 && p50 <= 4096.0,
+                "p50 {p50} off a uniform 0..4096 distribution");
     }
 
     #[test]

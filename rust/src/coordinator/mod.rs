@@ -14,6 +14,7 @@ pub mod prefixcache;
 pub mod router;
 pub mod scheduler;
 pub mod server;
+pub mod trace;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use http::{HttpConfig, HttpServer};
@@ -27,3 +28,4 @@ pub use server::{
     Drain, GenerateParams, Handle, Output, Request, Response,
     ScoreParams, ServeError, Server, ServerConfig,
 };
+pub use trace::{CompletedTrace, RequestTrace, Timings, TraceRing};

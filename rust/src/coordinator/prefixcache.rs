@@ -83,6 +83,24 @@ pub struct PrefixStats {
     pub cached_blocks: u64,
 }
 
+impl PrefixStats {
+    /// Reconcile these counters into the registry as one labeled series
+    /// per cache (`latentllm_prefix_hits_total{variant="dense"}`, ...).
+    /// The caches are the source of truth, so each value is raised
+    /// monotonically — re-publishing an older snapshot is a no-op and
+    /// periodic sampling never double-counts.
+    pub fn publish(&self, variant: &str,
+                   metrics: &crate::coordinator::metrics::Metrics) {
+        let l: &[(&str, &str)] = &[("variant", variant)];
+        metrics.counter_max_with("prefix_hits", l, self.hits);
+        metrics.counter_max_with("prefix_misses", l, self.misses);
+        metrics.counter_max_with("prefix_evictions", l, self.evictions);
+        metrics.counter_max_with("prefix_inserts", l, self.inserts);
+        metrics.counter_max_with("prefix_saved_tokens", l,
+                                 self.saved_tokens);
+    }
+}
+
 pub struct PrefixCache {
     block_tokens: usize,
     entries: HashMap<u64, Entry>,
@@ -293,6 +311,23 @@ mod tests {
                 v: Matrix::from_fn(n, 2, |r, _| r as f64),
             }],
         }
+    }
+
+    #[test]
+    fn stats_publish_as_labeled_monotone_counters() {
+        let m = crate::coordinator::metrics::Metrics::new();
+        let st = PrefixStats { hits: 3, misses: 1, evictions: 0,
+                               inserts: 2, saved_tokens: 8,
+                               cached_blocks: 2 };
+        st.publish("dense", &m);
+        // a stale (smaller) snapshot never regresses the series
+        PrefixStats { hits: 2, ..st }.publish("dense", &m);
+        let l: &[(&str, &str)] = &[("variant", "dense")];
+        assert_eq!(m.counter_with("prefix_hits", l), 3);
+        assert_eq!(m.counter_with("prefix_saved_tokens", l), 8);
+        // other variants are independent series
+        assert_eq!(m.counter_with("prefix_hits",
+                                  &[("variant", "latent30")]), 0);
     }
 
     #[test]

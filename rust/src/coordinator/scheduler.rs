@@ -46,7 +46,7 @@
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -55,6 +55,7 @@ use super::metrics::Metrics;
 use super::router::Router;
 use super::server::{sample_cache_peaks, GenerateOutput, GenerateParams,
                     Output, Response, ServeError};
+use super::trace::{RequestTrace, TraceRing};
 use crate::eval::generate::pick_token;
 use crate::runtime::decode::{BatchedDecodeState, PrefixSnapshot};
 use crate::runtime::Engine;
@@ -120,6 +121,9 @@ pub struct GenTask {
     /// excludes them so the request lands elsewhere instead of bouncing
     /// against the same pool forever
     pub no_fit: Vec<usize>,
+    /// lifecycle span recorder — rides the task through every
+    /// preempt→requeue→resume cycle; `None` when tracing is off
+    pub trace: Option<RequestTrace>,
 }
 
 impl GenTask {
@@ -138,6 +142,7 @@ impl GenTask {
             preemptions: 0,
             t_first_admit: None,
             no_fit: Vec::new(),
+            trace: None,
         }
     }
 
@@ -240,14 +245,15 @@ impl WorkerScheduler {
     /// one mixed step batch → retire. Returns whether any work was done
     /// (the worker loop uses it to pace its queue polling).
     pub fn iteration(&mut self, engine: &Engine, router: &Mutex<Router>,
-                     queue: &SchedQueue, metrics: &Arc<Metrics>) -> bool {
+                     queue: &SchedQueue, metrics: &Arc<Metrics>,
+                     traces: &TraceRing) -> bool {
         let mut progress = false;
         // --- admission: fill free slots from the shared queue (FCFS —
         // a head that doesn't fit parks rather than being overtaken) ---
         while self.live.len() < self.cfg.max_live.max(1) {
             let Some(task) = queue.pop() else { break };
             metrics.gauge_add("gen_queue_depth", -1);
-            match self.admit(engine, router, task, metrics) {
+            match self.admit(engine, router, task, metrics, traces) {
                 Admitted::Live | Admitted::Replied => progress = true,
                 Admitted::Requeue(task) => {
                     metrics.gauge_add("gen_queue_depth", 1);
@@ -268,8 +274,14 @@ impl WorkerScheduler {
             if self.live[i].logits.is_none() {
                 // prefill (or resume re-prefill), one chunk per iteration
                 progress = true;
+                let t_chunk = Instant::now();
                 match self.feed_chunk(i) {
-                    Ok(()) => {
+                    Ok(n) => {
+                        if let Some(tr) =
+                            self.live[i].task.trace.as_mut() {
+                            tr.prefill_chunk(n as u64,
+                                             t_chunk.elapsed());
+                        }
                         metrics.incr("sched_prefill_chunks", 1);
                         if self.live[i].logits.is_some() {
                             // feed complete: offer the prompt's full
@@ -282,7 +294,7 @@ impl WorkerScheduler {
                         metrics.incr("gen_errors", 1);
                         self.fail(i, router, metrics, ServeError::Internal {
                             reason: format!("{e:#}"),
-                        });
+                        }, traces);
                         // the next sequence shifted into index i
                     }
                 }
@@ -294,7 +306,7 @@ impl WorkerScheduler {
             if self.live[i].task.generated.len()
                 >= self.live[i].task.params.max_new {
                 progress = true;
-                self.finish(i, router, metrics);
+                self.finish(i, router, metrics, traces);
                 continue;
             }
             let (next, done) = {
@@ -305,12 +317,22 @@ impl WorkerScheduler {
                 l.task.generated.push(next);
                 if let Some(s) = &l.task.stream {
                     let _ = s.send(next);
+                    if let Some(tr) = l.task.trace.as_mut() {
+                        tr.stream_emit();
+                    }
                 }
                 (next, l.task.generated.len() >= l.task.params.max_new)
             };
             progress = true;
             if done {
-                self.finish(i, router, metrics);
+                // the final sampled token is never fed back; its logits
+                // came from an already-attributed batch, so it adds no
+                // decode time — record it so `timings.tokens` equals
+                // the tokens the caller receives
+                if let Some(tr) = self.live[i].task.trace.as_mut() {
+                    tr.step(Duration::ZERO);
+                }
+                self.finish(i, router, metrics, traces);
                 continue;
             }
             // reserve the next cache row; on refusal preempt the newest
@@ -359,7 +381,8 @@ impl WorkerScheduler {
             let t0 = Instant::now();
             let results = self.batch.step_many_into(&batch_steps,
                                                     &mut outs);
-            metrics.observe("step_us", t0.elapsed());
+            let step_d = t0.elapsed();
+            metrics.observe("step_us", step_d);
             let (fb1, fr1) = self.batch.fused_stats();
             metrics.incr("fused_batches", fb1 - fb0);
             metrics.incr("fused_step_rows", fr1 - fr0);
@@ -367,7 +390,15 @@ impl WorkerScheduler {
             for ((&(idx, _), res), out) in
                 steps.iter().zip(results).zip(outs) {
                 match res {
-                    Ok(()) => self.live[idx].logits = Some(out),
+                    Ok(()) => {
+                        // the batch's wall time is attributed to every
+                        // sequence it stepped (Timings docs this)
+                        if let Some(tr) =
+                            self.live[idx].task.trace.as_mut() {
+                            tr.step(step_d);
+                        }
+                        self.live[idx].logits = Some(out);
+                    }
                     Err(e) => dead.push((idx, format!("{e:#}"))),
                 }
             }
@@ -375,7 +406,7 @@ impl WorkerScheduler {
             for (idx, msg) in dead.into_iter().rev() {
                 metrics.incr("gen_errors", 1);
                 self.fail(idx, router, metrics,
-                          ServeError::Internal { reason: msg });
+                          ServeError::Internal { reason: msg }, traces);
             }
         }
         progress
@@ -387,10 +418,12 @@ impl WorkerScheduler {
     /// with one difference: a request that doesn't fit *right now* but
     /// could ever fit is requeued, not rejected.
     fn admit(&mut self, engine: &Engine, router: &Mutex<Router>,
-             mut task: GenTask, metrics: &Arc<Metrics>) -> Admitted {
+             mut task: GenTask, metrics: &Arc<Metrics>,
+             traces: &TraceRing) -> Admitted {
         if task.params.prompt.is_empty() {
             metrics.incr("request_errors", 1);
-            send_response(task, String::new(), Err(ServeError::Empty));
+            send_response(task, String::new(), Err(ServeError::Empty),
+                          Some(traces));
             return Admitted::Replied;
         }
         let feed_len = task.total_feed();
@@ -425,7 +458,7 @@ impl WorkerScheduler {
             send_response(task, String::new(), Err(ServeError::Evicted {
                 reason: format!("{total_need}-token request can never \
                                  fit any variant's paged KV budget"),
-            }));
+            }), Some(traces));
             return Admitted::Replied;
         };
         let mut session = match engine.program(&program)
@@ -436,7 +469,7 @@ impl WorkerScheduler {
                 metrics.incr("gen_errors", 1);
                 send_response(task, vname, Err(ServeError::Internal {
                     reason: format!("{e:#}"),
-                }));
+                }), Some(traces));
                 return Admitted::Replied;
             }
         };
@@ -448,7 +481,7 @@ impl WorkerScheduler {
             send_response(task, vname, Err(ServeError::TooLong {
                 need: total_need,
                 max: session.max_tokens(),
-            }));
+            }), Some(traces));
             return Admitted::Replied;
         }
         // re-admit at the session's REAL footprint (a latent-accounted
@@ -514,7 +547,7 @@ impl WorkerScheduler {
                 reason: format!("{total_need}-token request can never \
                                  fit any variant's paged KV budget at \
                                  its real session footprint"),
-            }));
+            }), Some(traces));
             return Admitted::Replied;
         }
         if !admitted {
@@ -524,6 +557,12 @@ impl WorkerScheduler {
         if task.t_first_admit.is_none() {
             task.t_first_admit = Some(Instant::now());
             metrics.observe("gen_queue_us", task.t_submit.elapsed());
+        }
+        if let Some(tr) = task.trace.as_mut() {
+            tr.admitted(); // records Resumed after a preemption
+            if fed > 0 {
+                tr.prefix_adopted(fed as u64);
+            }
         }
         let slot = self.batch.insert(task.id, session);
         metrics.gauge_add("live_sessions", 1);
@@ -542,8 +581,9 @@ impl WorkerScheduler {
     /// sequence `i`'s session; the final chunk's last row becomes the
     /// sequence's next-token logits. Chunking is bit-transparent: rows
     /// depend only on cache contents before them, so any chunk split
-    /// yields the same logits as one whole-prompt prefill.
-    fn feed_chunk(&mut self, i: usize) -> Result<()> {
+    /// yields the same logits as one whole-prompt prefill. Returns the
+    /// number of tokens fed.
+    fn feed_chunk(&mut self, i: usize) -> Result<usize> {
         let l = &mut self.live[i];
         let prompt = &l.task.params.prompt;
         let gen = &l.task.generated;
@@ -571,7 +611,7 @@ impl WorkerScheduler {
             l.logits = Some(rows.pop()
                 .ok_or_else(|| anyhow!("empty feed chunk"))?);
         }
-        Ok(())
+        Ok(end - start)
     }
 
     /// Offer sequence `i`'s *prompt* blocks to its variant's prefix
@@ -616,7 +656,7 @@ impl WorkerScheduler {
 
     /// Retire a completed sequence: reply, free pages + session.
     fn finish(&mut self, i: usize, router: &Mutex<Router>,
-              metrics: &Arc<Metrics>) {
+              metrics: &Arc<Metrics>, traces: &TraceRing) {
         let mut l = self.live.remove(i);
         self.batch.remove(l.slot);
         {
@@ -633,7 +673,7 @@ impl WorkerScheduler {
         if l.task.preemptions > 0 {
             metrics.incr("gen_resumed_ok", 1);
         }
-        send_response(l.task, l.vname, Ok(tokens));
+        send_response(l.task, l.vname, Ok(tokens), Some(traces));
     }
 
     /// Preempt a live sequence: drop its session (the cache tensors go
@@ -644,6 +684,9 @@ impl WorkerScheduler {
         self.batch.remove(l.slot);
         lock_unpoisoned(router).release(l.vidx, l.task.id);
         l.task.preemptions += 1;
+        if let Some(tr) = l.task.trace.as_mut() {
+            tr.preempted(); // records Preempted + Requeued
+        }
         metrics.incr("gen_preemptions", 1);
         metrics.gauge_add("live_sessions", -1);
         metrics.gauge_add("gen_queue_depth", 1);
@@ -652,7 +695,8 @@ impl WorkerScheduler {
 
     /// Hard per-sequence failure: reply with the error, free everything.
     fn fail(&mut self, i: usize, router: &Mutex<Router>,
-            metrics: &Arc<Metrics>, err: ServeError) {
+            metrics: &Arc<Metrics>, err: ServeError,
+            traces: &TraceRing) {
         let l = self.live.remove(i);
         self.batch.remove(l.slot);
         {
@@ -661,17 +705,17 @@ impl WorkerScheduler {
             sample_cache_peaks(&r, metrics);
         }
         metrics.gauge_add("live_sessions", -1);
-        send_response(l.task, l.vname, Err(err));
+        send_response(l.task, l.vname, Err(err), Some(traces));
     }
 
     /// `Drain::Now`: abort every live sequence with a Rejected reply —
     /// pages released, sessions dropped, callers unblocked.
     pub fn abort_all(&mut self, router: &Mutex<Router>,
-                     metrics: &Arc<Metrics>) {
+                     metrics: &Arc<Metrics>, traces: &TraceRing) {
         while !self.live.is_empty() {
             self.fail(0, router, metrics, ServeError::Rejected {
                 reason: "server shut down mid-decode".to_string(),
-            });
+            }, traces);
         }
     }
 }
@@ -690,14 +734,26 @@ fn any_pool_could_ever_fit(router: &Mutex<Router>, no_fit: &[usize],
 }
 
 /// Send the terminal [`Response`] for a task (the receiver may have
-/// hung up — that's its problem, not the worker's).
-fn send_response(task: GenTask, variant: String,
-                 result: std::result::Result<Vec<i32>, ServeError>) {
+/// hung up — that's its problem, not the worker's). Retires the task's
+/// trace: the timings summary rides the response, the full span chain
+/// lands in the completed-trace ring (when one is given).
+fn send_response(mut task: GenTask, variant: String,
+                 result: std::result::Result<Vec<i32>, ServeError>,
+                 traces: Option<&TraceRing>) {
     let latency = task.t_submit.elapsed();
+    let failed = result.is_err();
+    let timings = task.trace.take().map(|mut tr| {
+        let t = tr.retire(failed);
+        if let Some(ring) = traces {
+            ring.push(tr.completed(&variant, failed));
+        }
+        t
+    });
     let _ = task.reply.send(Response {
         id: task.id,
         variant,
         latency,
+        timings,
         result: result.map(|tokens| {
             Output::Generate(GenerateOutput { tokens })
         }),
@@ -706,10 +762,10 @@ fn send_response(task: GenTask, variant: String,
 
 /// Reply Rejected to a task that never reached a worker (queue drained
 /// at `Drain::Now` shutdown) so its caller does not block forever.
-pub(crate) fn abandon(task: GenTask) {
+pub(crate) fn abandon(task: GenTask, traces: Option<&TraceRing>) {
     send_response(task, String::new(), Err(ServeError::Rejected {
         reason: "server shut down before the request ran".to_string(),
-    }));
+    }), traces);
 }
 
 #[cfg(test)]

@@ -71,6 +71,7 @@ use super::metrics::Metrics;
 use super::router::{Policy, Router};
 use super::scheduler::{self, GenTask, SchedQueue, SchedulerConfig,
                        WorkerScheduler};
+use super::trace::{RequestTrace, Timings, TraceRing};
 use crate::runtime::{Engine, ParamValue};
 use crate::util::lock_unpoisoned;
 
@@ -176,6 +177,9 @@ pub struct Response<T = Output> {
     /// variant that served the request (empty when it never routed)
     pub variant: String,
     pub latency: Duration,
+    /// per-request timing breakdown from the lifecycle trace; `None`
+    /// when tracing is off ([`ServerConfig::trace`])
+    pub timings: Option<Timings>,
     pub result: std::result::Result<T, ServeError>,
 }
 
@@ -250,6 +254,7 @@ impl Response<Output> {
             id: self.id,
             variant: self.variant,
             latency: self.latency,
+            timings: self.timings,
             result: self.result.map(T::from_output),
         }
     }
@@ -312,6 +317,11 @@ pub struct ServerConfig {
     /// the sequential one-session-per-worker path (the PR 4 behavior,
     /// kept as the equivalence oracle and bench baseline)
     pub sched: Option<SchedulerConfig>,
+    /// record a lifecycle trace per request: timings ride each
+    /// [`Response`], completed span chains land in [`Server::traces`]
+    /// (`GET /debug/requests`). Cheap enough to default on; `--no-trace`
+    /// turns it off
+    pub trace: bool,
 }
 
 pub(crate) struct Entry {
@@ -321,6 +331,7 @@ pub(crate) struct Entry {
     tokens: Vec<i32>,
     reply: mpsc::Sender<Response<Output>>,
     t_submit: Instant,
+    trace: Option<RequestTrace>,
 }
 
 struct GenEntry {
@@ -330,6 +341,7 @@ struct GenEntry {
     /// per-token stream: each sampled token is sent as it is picked
     stream: Option<mpsc::Sender<i32>>,
     t_submit: Instant,
+    trace: Option<RequestTrace>,
 }
 
 /// One queued unit of work.
@@ -400,6 +412,8 @@ pub struct Server {
     shared: Arc<Shared>,
     handles: Vec<std::thread::JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
+    /// completed request traces, bounded ring (`/debug/requests`)
+    pub traces: Arc<TraceRing>,
     cfg: Arc<ServerConfig>,
 }
 
@@ -434,6 +448,7 @@ impl Server {
             }
         }
         let metrics = Arc::new(Metrics::new());
+        let traces = Arc::new(TraceRing::default());
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
@@ -452,6 +467,7 @@ impl Server {
             let router = router.clone();
             let cfg = cfg.clone();
             let metrics = metrics.clone();
+            let traces = traces.clone();
             let artifacts = artifacts.clone();
             let init_tx = init_tx.clone();
             let handle = std::thread::Builder::new()
@@ -472,7 +488,7 @@ impl Server {
                     let _ = init_tx.send(Ok(()));
                     drop(init_tx);
                     worker_loop(w, &engine, &shared, &router, &cfg,
-                                &metrics);
+                                &metrics, &traces);
                 })
                 .expect("spawn server worker");
             handles.push(handle);
@@ -499,7 +515,7 @@ impl Server {
             }
             return Err(e.context("server start"));
         }
-        Ok(Server { shared, handles, metrics, cfg })
+        Ok(Server { shared, handles, metrics, traces, cfg })
     }
 
     fn mint_id(&self) -> u64 {
@@ -563,6 +579,8 @@ impl Server {
             tokens: params.tokens,
             reply: rtx,
             t_submit: Instant::now(),
+            trace: self.cfg.trace
+                .then(|| RequestTrace::new(id, "score")),
         }));
         self.shared.cv.notify_one();
         Ok((id, rrx))
@@ -581,9 +599,12 @@ impl Server {
         // signal (the HTTP 429 knob) either way
         self.metrics.incr("gen_requests", 1);
         self.metrics.gauge_add("gen_queue_depth", 1);
+        let trace = self.cfg.trace
+            .then(|| RequestTrace::new(id, "generate"));
         if self.cfg.sched.is_some() {
-            self.shared.gen_queue.push_back(
-                GenTask::new(id, params, rtx, stream));
+            let mut task = GenTask::new(id, params, rtx, stream);
+            task.trace = trace;
+            self.shared.gen_queue.push_back(task);
         } else {
             self.shared.queue.lock().unwrap().push_back(
                 Job::Generate(GenEntry {
@@ -592,6 +613,7 @@ impl Server {
                     reply: rtx,
                     stream,
                     t_submit: Instant::now(),
+                    trace,
                 }));
         }
         self.shared.cv.notify_one();
@@ -647,20 +669,26 @@ impl Server {
                     .to_string(),
             };
             match job {
-                Job::Score(e) => {
+                Job::Score(mut e) => {
+                    let timings = finish_trace(&mut e.trace, "", true,
+                                               Some(&self.traces));
                     let _ = e.reply.send(Response {
                         id: e.id,
                         variant: String::new(),
                         latency: e.t_submit.elapsed(),
+                        timings,
                         result: Err(rejected),
                     });
                 }
-                Job::Generate(g) => {
+                Job::Generate(mut g) => {
                     self.metrics.gauge_add("gen_queue_depth", -1);
+                    let timings = finish_trace(&mut g.trace, "", true,
+                                               Some(&self.traces));
                     let _ = g.reply.send(Response {
                         id: g.id,
                         variant: String::new(),
                         latency: g.t_submit.elapsed(),
+                        timings,
                         result: Err(rejected),
                     });
                 }
@@ -668,7 +696,7 @@ impl Server {
         }
         while let Some(task) = self.shared.gen_queue.pop() {
             self.metrics.gauge_add("gen_queue_depth", -1);
-            scheduler::abandon(task);
+            scheduler::abandon(task, Some(&self.traces));
         }
     }
 }
@@ -681,7 +709,7 @@ impl Drop for Server {
 
 fn worker_loop(widx: usize, engine: &Engine, shared: &Shared,
                router: &Mutex<Router>, cfg: &ServerConfig,
-               metrics: &Arc<Metrics>) {
+               metrics: &Arc<Metrics>, traces: &TraceRing) {
     if cfg.workers.max(1) > 1 {
         // parallelism comes from the workers themselves; keep each
         // worker's tensor kernels serial instead of workers×pool-width
@@ -700,9 +728,9 @@ fn worker_loop(widx: usize, engine: &Engine, shared: &Shared,
             // Drain::Now — abort instead of draining: everything this
             // worker holds gets a Rejected reply; what is still queued
             // is answered by `Server::stop` after the join
-            abort_batcher(&mut batcher);
+            abort_batcher(&mut batcher, traces);
             if let Some(s) = sched.as_mut() {
-                s.abort_all(router, metrics);
+                s.abort_all(router, metrics, traces);
             }
             break;
         }
@@ -738,20 +766,21 @@ fn worker_loop(widx: usize, engine: &Engine, shared: &Shared,
                     // the whole decode.
                     metrics.gauge_add("gen_queue_depth", -1);
                     flush_due(widx, engine, router, cfg, metrics,
-                              &mut batcher, false);
-                    run_generate(widx, engine, router, g, metrics);
+                              &mut batcher, false, traces);
+                    run_generate(widx, engine, router, g, metrics,
+                                 traces);
                 }
             },
             Pop::Timeout => {}
             Pop::Shutdown => draining = true,
         }
         flush_due(widx, engine, router, cfg, metrics, &mut batcher,
-                  draining);
+                  draining, traces);
         // one scheduler iteration between score flushes: admit, feed a
         // prefill chunk per pending sequence, run one mixed step batch
         if let Some(s) = sched.as_mut() {
             sched_active = s.iteration(engine, router, &shared.gen_queue,
-                                       metrics);
+                                       metrics, traces);
         }
         if draining && batcher.is_empty()
             && shared.queue.lock().unwrap().is_empty()
@@ -764,13 +793,16 @@ fn worker_loop(widx: usize, engine: &Engine, shared: &Shared,
 
 /// `Drain::Now`: answer everything still sitting in this worker's
 /// batcher with a Rejected reply instead of executing it.
-fn abort_batcher(batcher: &mut Batcher<Entry>) {
+fn abort_batcher(batcher: &mut Batcher<Entry>, traces: &TraceRing) {
     while !batcher.is_empty() {
-        for e in batcher.flush(Instant::now()) {
+        for mut e in batcher.flush(Instant::now()) {
+            let timings = finish_trace(&mut e.item.trace, "", true,
+                                       Some(traces));
             let _ = e.item.reply.send(Response {
                 id: e.item.id,
                 variant: String::new(),
                 latency: e.item.t_submit.elapsed(),
+                timings,
                 result: Err(ServeError::Rejected {
                     reason: "server shut down before the request ran"
                         .to_string(),
@@ -784,12 +816,13 @@ fn abort_batcher(batcher: &mut Batcher<Entry>) {
 /// (or unconditionally while draining) and execute the batch.
 fn flush_due(widx: usize, engine: &Engine, router: &Mutex<Router>,
              cfg: &ServerConfig, metrics: &Arc<Metrics>,
-             batcher: &mut Batcher<Entry>, draining: bool) {
+             batcher: &mut Batcher<Entry>, draining: bool,
+             traces: &TraceRing) {
     let now = Instant::now();
     if batcher.ready(now) || (draining && !batcher.is_empty()) {
         let entries = batcher.flush(now);
         if let Err(e) = execute_batch(engine, router, cfg, entries,
-                                      metrics) {
+                                      metrics, traces) {
             metrics.incr("batch_errors", 1);
             eprintln!("[server worker {widx}] batch error: {e:#}");
         } else {
@@ -806,23 +839,30 @@ fn flush_due(widx: usize, engine: &Engine, router: &Mutex<Router>,
 /// session is dropped (its tensors go with it) and the request gets an
 /// eviction error — other requests are untouched.
 fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
-                g: GenEntry, metrics: &Arc<Metrics>) {
+                mut g: GenEntry, metrics: &Arc<Metrics>,
+                traces: &TraceRing) {
     use crate::eval::generate::pick_token;
     use crate::util::rng::Rng;
 
     // queue wait = submit → a worker actually starting the decode (the
     // scheduler path observes the same metric at first admission)
     metrics.observe("gen_queue_us", g.t_submit.elapsed());
+    let mut trace = g.trace.take();
+    if let Some(tr) = trace.as_mut() {
+        tr.admitted();
+    }
     // decode sessions are windowless — cfg.seq_len is the *score*
     // program's window and does not bound them. The real capacity check
     // (prompt + max_new - 1 vs session.max_tokens()) runs right after
     // the session opens, before any prefill cost.
     if g.params.prompt.is_empty() {
         metrics.incr("request_errors", 1);
+        let timings = finish_trace(&mut trace, "", true, Some(traces));
         let _ = g.reply.send(Response {
             id: g.id,
             variant: String::new(),
             latency: g.t_submit.elapsed(),
+            timings,
             result: Err(ServeError::Empty),
         });
         return;
@@ -843,10 +883,12 @@ fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
     };
     let (Some(vidx), program, vname, Some(weights)) = routed else {
         metrics.incr("gen_rejected", 1);
+        let timings = finish_trace(&mut trace, "", true, Some(traces));
         let _ = g.reply.send(Response {
             id: g.id,
             variant: String::new(),
             latency: g.t_submit.elapsed(),
+            timings,
             result: Err(ServeError::Rejected {
                 reason: format!(
                     "no variant has KV budget for {} prompt tokens",
@@ -897,18 +939,29 @@ fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
                      session's real footprint", g.params.prompt.len()),
             });
         }
+        let t_pre = Instant::now();
         let mut logits = session.prefill(&g.params.prompt)
             .map_err(internal)?;
+        if let Some(tr) = trace.as_mut() {
+            tr.prefill_chunk(g.params.prompt.len() as u64,
+                             t_pre.elapsed());
+        }
         for step in 0..g.params.max_new {
             let next =
                 pick_token(&logits, g.params.temperature, &mut rng) as i32;
             tokens.push(next);
             if let Some(s) = &g.stream {
                 let _ = s.send(next);
+                if let Some(tr) = trace.as_mut() {
+                    tr.stream_emit();
+                }
             }
             if step + 1 == g.params.max_new {
                 // the final token is never fed back: its logits would go
                 // unused and its cache row was never reserved
+                if let Some(tr) = trace.as_mut() {
+                    tr.step(Duration::ZERO);
+                }
                 break;
             }
             let alive = {
@@ -922,7 +975,11 @@ fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
                         tokens.len(), g.params.max_new),
                 });
             }
+            let t_step = Instant::now();
             logits = session.step(next).map_err(internal)?;
+            if let Some(tr) = trace.as_mut() {
+                tr.step(t_step.elapsed());
+            }
         }
         Ok(())
     })();
@@ -947,10 +1004,13 @@ fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
             metrics.incr(&format!("worker_{widx}_gen_tokens"),
                          tokens.len() as u64);
             metrics.observe("gen_us", latency);
+            let timings = finish_trace(&mut trace, &vname, false,
+                                       Some(traces));
             let _ = g.reply.send(Response {
                 id: g.id,
                 variant: vname,
                 latency,
+                timings,
                 result: Ok(Output::Generate(GenerateOutput { tokens })),
             });
         }
@@ -961,14 +1021,33 @@ fn run_generate(widx: usize, engine: &Engine, router: &Mutex<Router>,
             } else {
                 metrics.incr("gen_errors", 1);
             }
+            let timings = finish_trace(&mut trace, &vname, true,
+                                       Some(traces));
             let _ = g.reply.send(Response {
                 id: g.id,
                 variant: vname,
                 latency,
+                timings,
                 result: Err(err),
             });
         }
     }
+}
+
+/// Retire a request's trace (when one rides it): the completed span
+/// chain goes to the ring, the timing summary to the caller's response.
+/// One retirement site shape for every reply path, so a trace can never
+/// be finalized twice or leak un-retired.
+fn finish_trace(trace: &mut Option<RequestTrace>, variant: &str,
+                failed: bool, traces: Option<&TraceRing>)
+                -> Option<Timings> {
+    trace.take().map(|mut tr| {
+        let t = tr.retire(failed);
+        if let Some(ring) = traces {
+            ring.push(tr.completed(variant, failed));
+        }
+        t
+    })
 }
 
 /// Publish each variant's exact, monotone `peak_bytes` plus their sum
@@ -985,6 +1064,9 @@ pub(crate) fn sample_cache_peaks(r: &Router, metrics: &Arc<Metrics>) {
         metrics.set_max(&format!("cache_bytes_peak_{}", v.name),
                         peak as u64);
         let st = v.cache.prefix_stats();
+        // per-variant labeled series alongside the fleet aggregates —
+        // the dense/latent split is where the paper's benefit shows
+        st.publish(&v.name, metrics);
         prefix.hits += st.hits;
         prefix.misses += st.misses;
         prefix.evictions += st.evictions;
@@ -1021,19 +1103,23 @@ fn validate(tokens: &[i32], seq_len: usize) -> Option<ServeError> {
 fn execute_batch(engine: &Engine, router: &Mutex<Router>,
                  cfg: &ServerConfig,
                  entries: Vec<super::batcher::Pending<Entry>>,
-                 metrics: &Arc<Metrics>) -> Result<()> {
+                 metrics: &Arc<Metrics>, traces: &TraceRing)
+                 -> Result<()> {
     if entries.is_empty() {
         return Ok(());
     }
     let mut valid = Vec::with_capacity(entries.len());
-    for e in entries {
+    for mut e in entries {
         match validate(&e.item.tokens, cfg.seq_len) {
             Some(err) => {
                 metrics.incr("request_errors", 1);
+                let timings = finish_trace(&mut e.item.trace, "", true,
+                                           Some(traces));
                 let _ = e.item.reply.send(Response {
                     id: e.item.id,
                     variant: String::new(),
                     latency: e.item.t_submit.elapsed(),
+                    timings,
                     result: Err(err),
                 });
             }
@@ -1053,7 +1139,8 @@ fn execute_batch(engine: &Engine, router: &Mutex<Router>,
     while !rest.is_empty() {
         let take = rest.len().min(b);
         let group: Vec<_> = rest.drain(..take).collect();
-        if let Err(e) = execute_group(engine, router, cfg, group, metrics) {
+        if let Err(e) = execute_group(engine, router, cfg, group, metrics,
+                                      traces) {
             first_err.get_or_insert(e);
         }
     }
@@ -1069,20 +1156,31 @@ fn execute_batch(engine: &Engine, router: &Mutex<Router>,
 /// reply sender.
 fn execute_group(engine: &Engine, router: &Mutex<Router>,
                  cfg: &ServerConfig,
-                 entries: Vec<super::batcher::Pending<Entry>>,
-                 metrics: &Arc<Metrics>) -> Result<()> {
+                 mut entries: Vec<super::batcher::Pending<Entry>>,
+                 metrics: &Arc<Metrics>, traces: &TraceRing)
+                 -> Result<()> {
+    // the group leaves the batcher and hits the execution path now —
+    // that is a score request's admission moment
+    for e in entries.iter_mut() {
+        if let Some(tr) = e.item.trace.as_mut() {
+            tr.admitted();
+        }
+    }
     match score_group(engine, router, cfg, &entries, metrics) {
         Ok((nll, vname)) => {
             metrics.incr("batches", 1);
             metrics.incr(&format!("variant_{vname}"),
                          entries.len() as u64);
-            for (i, e) in entries.into_iter().enumerate() {
+            for (i, mut e) in entries.into_iter().enumerate() {
                 let latency = e.item.t_submit.elapsed();
                 metrics.observe("request_us", latency);
+                let timings = finish_trace(&mut e.item.trace, &vname,
+                                           false, Some(traces));
                 let _ = e.item.reply.send(Response {
                     id: e.item.id,
                     variant: vname.clone(),
                     latency,
+                    timings,
                     result: Ok(Output::Score(ScoreOutput {
                         nll: nll.get(i).copied().unwrap_or(f32::NAN),
                     })),
@@ -1092,11 +1190,14 @@ fn execute_group(engine: &Engine, router: &Mutex<Router>,
         }
         Err(err) => {
             let msg = format!("batch execution failed: {err:#}");
-            for e in entries {
+            for mut e in entries {
+                let timings = finish_trace(&mut e.item.trace, "", true,
+                                           Some(traces));
                 let _ = e.item.reply.send(Response {
                     id: e.item.id,
                     variant: String::new(),
                     latency: e.item.t_submit.elapsed(),
+                    timings,
                     result: Err(ServeError::Internal {
                         reason: msg.clone(),
                     }),

@@ -1,0 +1,439 @@
+//! Request-scoped tracing: a [`RequestTrace`] rides each score/generate
+//! task through the coordinator, recording timestamped lifecycle events
+//! (queued, admitted, prefix-adopted, prefill-chunk, step, stream-emit,
+//! preempted, requeued, resumed, retired) and accumulating phase
+//! durations. Completed traces land in a bounded [`TraceRing`] served
+//! by `GET /debug/requests?n=K`, and every response carries a compact
+//! [`Timings`] summary. Recording an event costs two `Instant::now()`
+//! reads and a bounded vec push — cheap enough to default on — and
+//! never touches the decode math, so traced runs stay token-identical.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Value;
+use crate::util::lock_unpoisoned;
+
+/// Per-trace event cap: a million-token stream must not balloon its
+/// trace, so repeatable events (step, stream-emit, prefill-chunk) past
+/// the cap are counted in `events_dropped` instead of stored. Terminal
+/// events (retired) always record so span chains stay complete.
+pub const MAX_TRACE_EVENTS: usize = 256;
+
+/// Default capacity of the completed-trace ring.
+pub const DEFAULT_RING_CAP: usize = 512;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum EventKind {
+    Queued,
+    Admitted,
+    PrefixAdopted,
+    PrefillChunk,
+    Step,
+    StreamEmit,
+    Preempted,
+    Requeued,
+    Resumed,
+    Retired,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Queued => "queued",
+            EventKind::Admitted => "admitted",
+            EventKind::PrefixAdopted => "prefix_adopted",
+            EventKind::PrefillChunk => "prefill_chunk",
+            EventKind::Step => "step",
+            EventKind::StreamEmit => "stream_emit",
+            EventKind::Preempted => "preempted",
+            EventKind::Requeued => "requeued",
+            EventKind::Resumed => "resumed",
+            EventKind::Retired => "retired",
+        }
+    }
+}
+
+/// One recorded event: offset from submission plus an event-specific
+/// value (tokens for prefill chunks and prefix adoption, 0 otherwise).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub at_us: u64,
+    pub kind: EventKind,
+    pub value: u64,
+}
+
+/// The per-response timing summary (also embedded in HTTP replies).
+/// `decode_us` is wall time of the step batches the request took part
+/// in; under continuous batching a batch's duration is attributed to
+/// every sequence it stepped.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Timings {
+    pub queue_us: u64,
+    pub prefill_us: u64,
+    pub decode_us: u64,
+    pub total_us: u64,
+    pub tokens: u64,
+    pub preemptions: u32,
+    pub prefix_hit: bool,
+}
+
+impl Timings {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("queue_us", (self.queue_us as usize).into()),
+            ("prefill_us", (self.prefill_us as usize).into()),
+            ("decode_us", (self.decode_us as usize).into()),
+            ("total_us", (self.total_us as usize).into()),
+            ("tokens", (self.tokens as usize).into()),
+            ("preemptions", (self.preemptions as usize).into()),
+            ("prefix_hit", self.prefix_hit.into()),
+        ])
+    }
+}
+
+/// A live trace carried by a task. Survives preempt→requeue→resume
+/// because it is owned by the task that travels through the queue.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    pub id: u64,
+    /// "generate" or "score"
+    pub kind: &'static str,
+    t0: Instant,
+    events: Vec<TraceEvent>,
+    events_dropped: u64,
+    queue_us: u64,
+    prefill_us: u64,
+    decode_us: u64,
+    tokens: u64,
+    preemptions: u32,
+    prefix_hit: bool,
+    prefix_saved_tokens: u64,
+    /// set while queued (at submit and again at requeue), drained into
+    /// `queue_us` on admit/resume
+    queue_since: Option<Instant>,
+}
+
+impl RequestTrace {
+    /// Start a trace at submission time; records the `queued` event.
+    pub fn new(id: u64, kind: &'static str) -> Self {
+        let t0 = Instant::now();
+        let mut t = RequestTrace {
+            id, kind, t0,
+            events: Vec::new(),
+            events_dropped: 0,
+            queue_us: 0, prefill_us: 0, decode_us: 0,
+            tokens: 0, preemptions: 0,
+            prefix_hit: false, prefix_saved_tokens: 0,
+            queue_since: Some(t0),
+        };
+        t.push(EventKind::Queued, 0);
+        t
+    }
+
+    fn push(&mut self, kind: EventKind, value: u64) {
+        if self.events.len() < MAX_TRACE_EVENTS
+            || kind == EventKind::Retired {
+            let at_us = self.t0.elapsed().as_micros() as u64;
+            self.events.push(TraceEvent { at_us, kind, value });
+        } else {
+            self.events_dropped += 1;
+        }
+    }
+
+    /// First admission (or re-admission after preemption): closes the
+    /// open queue phase.
+    pub fn admitted(&mut self) {
+        if let Some(since) = self.queue_since.take() {
+            self.queue_us += since.elapsed().as_micros() as u64;
+        }
+        let kind = if self.preemptions > 0 {
+            EventKind::Resumed
+        } else {
+            EventKind::Admitted
+        };
+        self.push(kind, 0);
+    }
+
+    /// A prefix-cache hit adopted `saved` already-computed tokens.
+    pub fn prefix_adopted(&mut self, saved: u64) {
+        self.prefix_hit = true;
+        self.prefix_saved_tokens += saved;
+        self.push(EventKind::PrefixAdopted, saved);
+    }
+
+    /// One prefill chunk of `tokens` ran for `d`.
+    pub fn prefill_chunk(&mut self, tokens: u64, d: Duration) {
+        self.prefill_us += d.as_micros() as u64;
+        self.push(EventKind::PrefillChunk, tokens);
+    }
+
+    /// One decode step retired a token; `d` is the wall time of the
+    /// step batch this sequence was part of.
+    pub fn step(&mut self, d: Duration) {
+        self.tokens += 1;
+        self.decode_us += d.as_micros() as u64;
+        self.push(EventKind::Step, 0);
+    }
+
+    /// A sampled token went out on the streaming channel.
+    pub fn stream_emit(&mut self) {
+        self.push(EventKind::StreamEmit, 0);
+    }
+
+    /// Preemption: session dropped, task requeued at the queue head.
+    /// Records both events and reopens the queue phase.
+    pub fn preempted(&mut self) {
+        self.preemptions += 1;
+        self.push(EventKind::Preempted, 0);
+        self.push(EventKind::Requeued, 0);
+        self.queue_since = Some(Instant::now());
+    }
+
+    pub fn preemptions(&self) -> u32 {
+        self.preemptions
+    }
+
+    /// Terminal transition; returns the response-facing summary.
+    pub fn retire(&mut self, failed: bool) -> Timings {
+        // a task that dies while queued still closes its queue phase
+        if let Some(since) = self.queue_since.take() {
+            self.queue_us += since.elapsed().as_micros() as u64;
+        }
+        self.push(EventKind::Retired, u64::from(failed));
+        self.timings()
+    }
+
+    pub fn timings(&self) -> Timings {
+        Timings {
+            queue_us: self.queue_us,
+            prefill_us: self.prefill_us,
+            decode_us: self.decode_us,
+            total_us: self.t0.elapsed().as_micros() as u64,
+            tokens: self.tokens,
+            preemptions: self.preemptions,
+            prefix_hit: self.prefix_hit,
+        }
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Seal into the ring-buffer form (call after `retire`).
+    pub fn completed(self, variant: &str, failed: bool)
+                     -> CompletedTrace {
+        let timings = self.timings();
+        CompletedTrace {
+            id: self.id,
+            kind: self.kind,
+            variant: variant.to_string(),
+            failed,
+            prefix_saved_tokens: self.prefix_saved_tokens,
+            timings,
+            events: self.events,
+            events_dropped: self.events_dropped,
+        }
+    }
+}
+
+/// A finished request's span chain, as served by `/debug/requests`.
+#[derive(Clone, Debug)]
+pub struct CompletedTrace {
+    pub id: u64,
+    pub kind: &'static str,
+    pub variant: String,
+    pub failed: bool,
+    pub prefix_saved_tokens: u64,
+    pub timings: Timings,
+    pub events: Vec<TraceEvent>,
+    pub events_dropped: u64,
+}
+
+impl CompletedTrace {
+    pub fn to_json(&self) -> Value {
+        let events: Vec<Value> = self.events
+            .iter()
+            .map(|e| Value::obj(vec![
+                ("t_us", (e.at_us as usize).into()),
+                ("event", e.kind.name().into()),
+                ("value", (e.value as usize).into()),
+            ]))
+            .collect();
+        Value::obj(vec![
+            ("id", (self.id as usize).into()),
+            ("kind", self.kind.into()),
+            ("variant", self.variant.as_str().into()),
+            ("failed", self.failed.into()),
+            ("prefix_saved_tokens",
+             (self.prefix_saved_tokens as usize).into()),
+            ("timings", self.timings.to_json()),
+            ("events", Value::Arr(events)),
+            ("events_dropped", (self.events_dropped as usize).into()),
+        ])
+    }
+}
+
+/// Bounded ring of completed traces: pushes past capacity evict the
+/// oldest entry, so trace memory is O(capacity) however long the
+/// server runs.
+pub struct TraceRing {
+    cap: usize,
+    inner: Mutex<VecDeque<CompletedTrace>>,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Self {
+        TraceRing { cap: cap.max(1), inner: Mutex::new(VecDeque::new()) }
+    }
+
+    pub fn push(&self, t: CompletedTrace) {
+        let mut g = lock_unpoisoned(&self.inner);
+        if g.len() == self.cap {
+            g.pop_front();
+        }
+        g.push_back(t);
+    }
+
+    /// Most recent `n` traces, newest first.
+    pub fn recent(&self, n: usize) -> Vec<CompletedTrace> {
+        let g = lock_unpoisoned(&self.inner);
+        g.iter().rev().take(n).cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        lock_unpoisoned(&self.inner).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        TraceRing::new(DEFAULT_RING_CAP)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(t: &RequestTrace) -> Vec<EventKind> {
+        t.events().iter().map(|e| e.kind).collect()
+    }
+
+    #[test]
+    fn lifecycle_without_preemption() {
+        let mut t = RequestTrace::new(7, "generate");
+        t.admitted();
+        t.prefix_adopted(6);
+        t.prefill_chunk(2, Duration::from_micros(40));
+        for _ in 0..3 {
+            t.step(Duration::from_micros(10));
+            t.stream_emit();
+        }
+        let timings = t.retire(false);
+        assert_eq!(kinds(&t), vec![
+            EventKind::Queued, EventKind::Admitted,
+            EventKind::PrefixAdopted, EventKind::PrefillChunk,
+            EventKind::Step, EventKind::StreamEmit,
+            EventKind::Step, EventKind::StreamEmit,
+            EventKind::Step, EventKind::StreamEmit,
+            EventKind::Retired,
+        ]);
+        assert_eq!(timings.tokens, 3);
+        assert_eq!(timings.preemptions, 0);
+        assert!(timings.prefix_hit);
+        assert_eq!(timings.prefill_us, 40);
+        assert_eq!(timings.decode_us, 30);
+        assert!(timings.total_us >= timings.prefill_us);
+        let c = t.clone().completed("dense", false);
+        assert_eq!(c.prefix_saved_tokens, 6);
+        assert!(!c.failed);
+        // offsets are monotone within the span chain
+        let offs: Vec<u64> =
+            c.events.iter().map(|e| e.at_us).collect();
+        assert!(offs.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn preempt_requeue_resume_emits_the_right_sequence() {
+        let mut t = RequestTrace::new(1, "generate");
+        t.admitted();
+        t.prefill_chunk(4, Duration::from_micros(20));
+        t.step(Duration::from_micros(5));
+        t.preempted();
+        // back through the queue: the second admission is a resume
+        t.admitted();
+        t.prefill_chunk(5, Duration::from_micros(25));
+        t.step(Duration::from_micros(5));
+        t.retire(false);
+        assert_eq!(kinds(&t), vec![
+            EventKind::Queued, EventKind::Admitted,
+            EventKind::PrefillChunk, EventKind::Step,
+            EventKind::Preempted, EventKind::Requeued,
+            EventKind::Resumed, EventKind::PrefillChunk,
+            EventKind::Step, EventKind::Retired,
+        ]);
+        let timings = t.timings();
+        assert_eq!(timings.preemptions, 1);
+        assert_eq!(timings.prefill_us, 45,
+                   "re-prefill after resume accumulates");
+        assert_eq!(timings.tokens, 2);
+    }
+
+    #[test]
+    fn event_list_is_capped_but_aggregates_keep_counting() {
+        let mut t = RequestTrace::new(2, "generate");
+        t.admitted();
+        for _ in 0..(2 * MAX_TRACE_EVENTS) {
+            t.step(Duration::from_micros(1));
+        }
+        let timings = t.retire(false);
+        // cap + the always-recorded terminal event
+        assert_eq!(t.events().len(), MAX_TRACE_EVENTS + 1);
+        assert_eq!(t.events().last().unwrap().kind, EventKind::Retired);
+        assert_eq!(timings.tokens, 2 * MAX_TRACE_EVENTS as u64,
+                   "dropping events must not drop token accounting");
+        let c = t.completed("dense", false);
+        assert!(c.events_dropped > 0);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_newest_first() {
+        let ring = TraceRing::new(4);
+        assert!(ring.is_empty());
+        for id in 0..10u64 {
+            let mut t = RequestTrace::new(id, "generate");
+            t.retire(false);
+            ring.push(t.completed("dense", false));
+        }
+        assert_eq!(ring.len(), 4);
+        let ids: Vec<u64> =
+            ring.recent(16).iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![9, 8, 7, 6]);
+        assert_eq!(ring.recent(2).len(), 2);
+    }
+
+    #[test]
+    fn json_shape_has_the_span_chain() {
+        let mut t = RequestTrace::new(3, "score");
+        t.admitted();
+        let timings = t.retire(true);
+        assert_eq!(timings.tokens, 0);
+        let v = t.completed("latent30", true).to_json();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("score"));
+        assert_eq!(v.get("variant").unwrap().as_str(), Some("latent30"));
+        assert_eq!(v.get("failed"),
+                   Some(&crate::util::json::Value::Bool(true)));
+        let events = v.get("events").unwrap().as_arr().unwrap();
+        let names: Vec<&str> = events.iter()
+            .map(|e| e.get("event").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["queued", "admitted", "retired"]);
+        assert!(v.get("timings").unwrap().get("queue_us").is_some());
+    }
+}

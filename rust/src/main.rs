@@ -85,6 +85,7 @@ USAGE:
                       [--sched-live N] [--sched-block T] [--sched-chunk T]
                       [--no-prefix-cache] [--gen-shared-prefix T]
                       [--no-fused-step] [--dense-only]
+                      [--no-trace] [--profile-layers]
                       [--config FILE.toml] [--artifacts DIR]
   latentllm generate  --model opt-mini-m [--prompts 8] [--new 32]
                       [--temperature 0.8] [--latent] [--no-cache]
@@ -114,7 +115,15 @@ Serving: generate traffic runs under a continuous-batching scheduler
        times). --dense-only serves just the
        dense variant — with one set of weights the emitted token
        streams are reproducible run to run (routing noise gone), which
-       is what the CI digest checks rely on.
+       is what the CI digest checks rely on. Request tracing is on by
+       default: every request carries a span trace (queued, admitted,
+       prefill chunks, steps, preemptions, prefix adoption, retire) and
+       replies include a timings object; completed traces land in a
+       bounded ring served at GET /debug/requests?n=K. --no-trace turns
+       it off (token streams are bit-identical either way).
+       --profile-layers additionally feeds per-layer phase timings
+       (attn_weight / attn_cache / finish, labeled by layer kind and
+       weight layout) into /metrics histograms.
 HTTP:  serve --http ADDR (or [http] addr in the config) opens the
        HTTP/1.1 front door: POST /v1/completions (\"stream\": true emits
        tokens over chunked transfer as decode steps retire), POST
@@ -501,6 +510,17 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
     } else {
         file_cfg.serve.prefix_cache
     };
+    // request tracing: CLI over config, default on ([serve] trace)
+    let use_trace = if args.flags.contains_key("no-trace") {
+        false
+    } else if args.flags.contains_key("trace") {
+        true
+    } else {
+        file_cfg.serve.trace
+    };
+    // per-layer phase profiling is opt-in: either flag or config
+    let profile_layers = args.flags.contains_key("profile-layers")
+        || file_cfg.serve.profile_layers;
     let budget = match args.flags.get("kv-mb") {
         Some(v) => {
             let mb = v.parse::<f64>()
@@ -564,7 +584,14 @@ fn serve_cmd(args: &Args, artifacts: &Path) -> Result<()> {
         seq_len: file_cfg.serve.seq_len,
         workers,
         sched: use_sched.then_some(sched_cfg),
+        trace: use_trace,
     })?;
+    if profile_layers {
+        latentllm::runtime::profile::install(server.metrics.clone());
+    }
+    println!("observability: trace {}, layer profiling {}",
+             if use_trace { "on" } else { "off" },
+             if profile_layers { "on" } else { "off" });
     println!("serving with {} worker(s), scheduler {}, prefix cache {}",
              server.live_workers(),
              if use_sched {

@@ -14,6 +14,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 use std::sync::Arc;
 
 use super::backend::DecodeSession;
+use super::profile;
 use crate::Matrix;
 
 /// Cache-footprint descriptor for one model variant's attention layers.
@@ -363,18 +364,22 @@ impl BatchedDecodeState {
         assert_eq!(steps.len(), outs.len(),
                    "step_many_into: {} steps, {} buffers",
                    steps.len(), outs.len());
+        let t0 = profile::phase_start();
         if self.fused && self.try_fused(steps, outs).is_some() {
             self.fused_batches += 1;
             self.fused_rows += steps.len() as u64;
+            profile::step_path(true, steps.len(), t0);
             return steps.iter().map(|_| Ok(())).collect();
         }
-        steps.iter()
+        let res: Vec<Result<()>> = steps.iter()
             .zip(outs.iter_mut())
             .map(|(&(slot, token), out)| match self.session_mut(slot) {
                 Some(s) => s.step_into(token, out),
                 None => Err(anyhow!("batched decode: slot {slot} is empty")),
             })
-            .collect()
+            .collect();
+        profile::step_path(false, steps.len(), t0);
+        res
     }
 
     /// Collect distinct live sessions for `steps` and hand them to the

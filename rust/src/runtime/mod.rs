@@ -22,6 +22,7 @@ pub mod engine;
 pub mod literal;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod profile;
 pub mod refbackend;
 
 pub use backend::{Backend, DecodeSession, Executable, ProgramCtx};

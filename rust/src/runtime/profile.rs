@@ -1,0 +1,126 @@
+//! Opt-in per-layer phase profiler (`serve --profile-layers`).
+//!
+//! RefBackend's decode step splits every layer into three phases —
+//! attention weight phase (shared GEMMs), attention cache phase
+//! (per-sequence KV/latent attention), finish phase (output projection
+//! + MLP) — and the fused batched path runs the same three phases over
+//! N stacked rows. When profiling is enabled, each phase call feeds a
+//! labeled histogram (`layer_phase_us{kind,phase,layout}`) on the
+//! installed [`Metrics`] sink, giving a per-layer breakdown of where a
+//! decode step's time actually goes per weight layout.
+//!
+//! Off (the default) the hooks are a single relaxed atomic load: no
+//! clocks are read, nothing locks, decode is untouched. The recorder is
+//! process-global because sessions and layers hold no handle to the
+//! coordinator; `install` is idempotent and `disable` detaches the
+//! sink.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::metrics::Metrics;
+use crate::util::lock_unpoisoned;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<Arc<Metrics>>> = Mutex::new(None);
+
+/// Metric name the phase histograms land under.
+pub const PHASE_METRIC: &str = "layer_phase_us";
+
+/// Install a sink and turn profiling on.
+pub fn install(sink: Arc<Metrics>) {
+    *lock_unpoisoned(&SINK) = Some(sink);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn profiling off and drop the sink.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+    *lock_unpoisoned(&SINK) = None;
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Start a phase timer — `None` (free) when profiling is off.
+#[inline]
+pub fn phase_start() -> Option<Instant> {
+    if enabled() { Some(Instant::now()) } else { None }
+}
+
+/// Close a phase timer opened by [`phase_start`] into the labeled
+/// histogram. `kind` is the layer kind ("dense"/"latent"), `phase` one
+/// of "attn_weight"/"attn_cache"/"finish", `layout` the `PackedMat`
+/// layout name of the layer's attention weights.
+pub fn phase_end(t0: Option<Instant>, kind: &str, phase: &str,
+                 layout: &str) {
+    let Some(t0) = t0 else { return };
+    let d = t0.elapsed();
+    let sink = lock_unpoisoned(&SINK).clone();
+    if let Some(m) = sink {
+        m.observe_with(PHASE_METRIC,
+                       &[("kind", kind), ("phase", phase),
+                         ("layout", layout)],
+                       d);
+    }
+}
+
+/// Record which path a batched step took (fused one-GEMM-pass vs the
+/// per-session loop) and how long it ran — the step-level companion to
+/// the per-phase breakdown.
+pub fn step_path(fused: bool, rows: usize, t0: Option<Instant>) {
+    let Some(t0) = t0 else { return };
+    let d = t0.elapsed();
+    let sink = lock_unpoisoned(&SINK).clone();
+    if let Some(m) = sink {
+        let path = if fused { "fused" } else { "per_seq" };
+        m.observe_with("batched_step_path_us", &[("path", path)], d);
+        m.incr_with("batched_step_path_rows", &[("path", path)],
+                    rows as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_profiler_is_free_and_enabled_profiler_records() {
+        // default off: timers are None and recording is a no-op
+        disable();
+        assert!(!enabled());
+        assert!(phase_start().is_none());
+        phase_end(None, "dense", "attn_weight", "f64");
+
+        let m = Arc::new(Metrics::new());
+        install(m.clone());
+        assert!(enabled());
+        let t0 = phase_start();
+        assert!(t0.is_some());
+        phase_end(t0, "dense", "attn_weight", "f64");
+        phase_end(phase_start(), "dense", "attn_weight", "f64");
+        phase_end(phase_start(), "latent", "finish", "int8");
+        step_path(true, 4, phase_start());
+        disable();
+        // post-disable observations go nowhere
+        phase_end(phase_start(), "dense", "attn_weight", "f64");
+
+        // `>=`: other tests in this binary may legitimately run decode
+        // phases during the enabled window — the sink is process-global
+        let labels = [("kind", "dense"), ("phase", "attn_weight"),
+                      ("layout", "f64")];
+        let (_, n) = m.sum_count_with(PHASE_METRIC, &labels).unwrap();
+        assert!(n >= 2, "both explicit observations must land (n={n})");
+        let latent = [("kind", "latent"), ("phase", "finish"),
+                      ("layout", "int8")];
+        assert!(m.sum_count_with(PHASE_METRIC, &latent).is_some());
+        assert!(m.counter_with("batched_step_path_rows",
+                               &[("path", "fused")]) >= 4);
+        let text = m.render_prometheus();
+        assert!(text.contains("latentllm_layer_phase_us_bucket{"),
+                "phase histogram must expose natively:\n{text}");
+    }
+}

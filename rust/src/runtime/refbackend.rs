@@ -21,6 +21,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::backend::{Backend, DecodeSession, Executable, ProgramCtx};
 use super::decode::{CacheKind, DecodeState, LayerCache, PrefixSnapshot};
 use super::literal::ParamValue;
+use super::profile;
 use crate::model::io::Tensor;
 use crate::model::Weights;
 use crate::tensor::{Layout, PackedMat};
@@ -599,9 +600,17 @@ impl DenseLayer {
     /// tower) attends everything.
     fn forward_cached(&self, x: Matrix, h: usize, causal: bool,
                       kc: &mut Matrix, vc: &mut Matrix) -> Matrix {
+        let layout = self.wq.layout().name();
+        let t0 = profile::phase_start();
         let (q, knew, vnew) = self.attn_weight_phase(&x);
+        profile::phase_end(t0, "dense", "attn_weight", layout);
+        let t0 = profile::phase_start();
         let ctx = self.attn_cache_phase(&q, &knew, &vnew, h, causal, kc, vc);
-        self.finish_phase(x, &ctx)
+        profile::phase_end(t0, "dense", "attn_cache", layout);
+        let t0 = profile::phase_start();
+        let out = self.finish_phase(x, &ctx);
+        profile::phase_end(t0, "dense", "finish", layout);
+        out
     }
 
     /// Weight side of the block's attention: LN1 plus the q/k/v
@@ -854,9 +863,17 @@ impl LatentLayer {
     /// decode prefill/step — one body, so the paths cannot drift.
     fn forward_cached(&self, x: Matrix, h: usize, dh: usize,
                       ck: &mut Matrix, cv: &mut Matrix) -> Matrix {
+        let layout = self.aq.layout().name();
+        let t0 = profile::phase_start();
         let (q, cknew, cvnew) = self.attn_weight_phase(&x);
+        profile::phase_end(t0, "latent", "attn_weight", layout);
+        let t0 = profile::phase_start();
         let ctx = self.attn_cache_phase(&q, &cknew, &cvnew, h, dh, ck, cv);
-        self.finish_phase(x, &ctx)
+        profile::phase_end(t0, "latent", "attn_cache", layout);
+        let t0 = profile::phase_start();
+        let out = self.finish_phase(x, &ctx);
+        profile::phase_end(t0, "latent", "finish", layout);
+        out
     }
 
     /// Weight side: LN1 plus the latent compression planes (q latents
@@ -1529,12 +1546,16 @@ fn fused_dense(m: &DenseModel, sess: &mut [&mut RefDecodeSession],
     }
     let mut ctx = std::mem::replace(&mut ws.ctx, Matrix::zeros(0, 0));
     for (li, layer) in m.layers.iter().enumerate() {
+        let layout = layer.wq.layout().name();
         // weight phase: one GEMM pass over all N rows
+        let t0 = profile::phase_start();
         let (q, knew, vnew) = layer.attn_weight_phase(&x);
+        profile::phase_end(t0, "dense", "attn_weight", layout);
         if ctx.rows() != n || ctx.cols() != q.cols() {
             ctx = Matrix::zeros(n, q.cols());
         }
         // cache phase: per-sequence attention at each one's own position
+        let t0 = profile::phase_start();
         for (i, s) in sess.iter_mut().enumerate() {
             let LayerCache::Dense { k, v } = &mut s.state.layers[li] else {
                 unreachable!("dense session cache kind is pinned at open");
@@ -1544,7 +1565,10 @@ fn fused_dense(m: &DenseModel, sess: &mut [&mut RefDecodeSession],
                 &vnew.slice_rows(i, i + 1), m.n_heads, true, k, v);
             ctx.row_mut(i).copy_from_slice(c.row(0));
         }
+        profile::phase_end(t0, "dense", "attn_cache", layout);
+        let t0 = profile::phase_start();
         x = layer.finish_phase(x, &ctx);
+        profile::phase_end(t0, "dense", "finish", layout);
     }
     let logits = tied_head(&x, &m.lnf_g, &m.lnf_b, &m.head);
     for (i, (s, out)) in sess.iter_mut().zip(outs.iter_mut()).enumerate() {
@@ -1567,10 +1591,14 @@ fn fused_latent(m: &LatentModel, sess: &mut [&mut RefDecodeSession],
     let mut ctx = std::mem::replace(&mut ws.ctx, Matrix::zeros(0, 0));
     let d_attn = m.n_heads * m.d_h;
     for (li, layer) in m.layers.iter().enumerate() {
+        let layout = layer.aq.layout().name();
+        let t0 = profile::phase_start();
         let (q, cknew, cvnew) = layer.attn_weight_phase(&x);
+        profile::phase_end(t0, "latent", "attn_weight", layout);
         if ctx.rows() != n || ctx.cols() != d_attn {
             ctx = Matrix::zeros(n, d_attn);
         }
+        let t0 = profile::phase_start();
         for (i, s) in sess.iter_mut().enumerate() {
             let LayerCache::Latent { ck, cv } = &mut s.state.layers[li]
             else {
@@ -1581,7 +1609,10 @@ fn fused_latent(m: &LatentModel, sess: &mut [&mut RefDecodeSession],
                 &cvnew.slice_rows(i, i + 1), m.n_heads, m.d_h, ck, cv);
             ctx.row_mut(i).copy_from_slice(c.row(0));
         }
+        profile::phase_end(t0, "latent", "attn_cache", layout);
+        let t0 = profile::phase_start();
         x = layer.finish_phase(x, &ctx);
+        profile::phase_end(t0, "latent", "finish", layout);
     }
     let logits = tied_head(&x, &m.lnf_g, &m.lnf_b, &m.head);
     for (i, (s, out)) in sess.iter_mut().zip(outs.iter_mut()).enumerate() {

@@ -209,6 +209,14 @@ fn tiny_server(art: PathBuf, budget: usize, workers: usize) -> Server {
 fn tiny_server_with(art: PathBuf, budget: usize, workers: usize,
                     sched: Option<SchedulerConfig>, variant: &str)
                     -> Server {
+    tiny_server_traced(art, budget, workers, sched, variant, true)
+}
+
+/// Like [`tiny_server_with`] but with request tracing switchable — the
+/// tracing-identity test runs the same traffic with it on and off.
+fn tiny_server_traced(art: PathBuf, budget: usize, workers: usize,
+                      sched: Option<SchedulerConfig>, variant: &str,
+                      trace: bool) -> Server {
     let tag = latent_tag(&art);
     let block_tokens = sched.map(|s| s.block_tokens)
         .unwrap_or(latentllm::coordinator::kvcache::DEFAULT_BLOCK_TOKENS);
@@ -249,6 +257,7 @@ fn tiny_server_with(art: PathBuf, budget: usize, workers: usize,
             seq_len: SEQ,
             workers,
             sched,
+            trace,
         })
         .expect("server start")
 }
@@ -543,6 +552,7 @@ fn scheduler_reroutes_off_a_pool_that_can_never_hold_it() {
             sched: Some(SchedulerConfig { max_live: 2, block_tokens: 2,
                                           prefill_chunk: 4,
                                           fused: true }),
+            trace: true,
         })
         .expect("server start");
     let timeout = std::time::Duration::from_secs(120);
@@ -714,6 +724,7 @@ fn disabling_the_prefix_cache_keeps_streams_identical() {
             seq_len: SEQ,
             workers: 1,
             sched: Some(sched_cfg),
+            trace: true,
         })
         .expect("server start");
     let cold = run_decodes(&server, &reqs);
@@ -862,6 +873,119 @@ fn fused_batched_step_matches_per_session_across_layouts() {
                        "the kill switch must keep the per-session loop");
         }
     }
+    std::fs::remove_dir_all(&art).ok();
+}
+
+/// `names` must contain `want` as an ordered (not necessarily
+/// contiguous) subsequence.
+fn has_subsequence(names: &[&str], want: &[&str]) -> bool {
+    let mut it = names.iter();
+    want.iter().all(|w| it.any(|n| n == w))
+}
+
+#[test]
+fn tracing_is_token_identical_and_pins_the_preemption_span_chain() {
+    // tracing defaults on; it must be a pure observer. The same tight-
+    // pool preemption workload runs traced and untraced and must emit
+    // identical streams — and the traced run's ring must hold complete
+    // span chains including the preempt→requeue→resume arc.
+    let (art, _tag) = synth("traceeq");
+    let reqs = sched_requests();
+    let bpt = 2 * TINY.d * 2 * TINY.n_layers;
+    let sched_cfg = SchedulerConfig { max_live: 3, block_tokens: 2,
+                                      prefill_chunk: 4, fused: true };
+    let traced = tiny_server_traced(art.clone(), 12 * 2 * bpt, 1,
+                                    Some(sched_cfg), "dense", true);
+    let got_traced = run_decodes(&traced, &reqs);
+    // every response carries a timings summary when tracing is on
+    let rx = traced.submit_generate(reqs[0].clone()).unwrap();
+    let resp = rx.recv_timeout(std::time::Duration::from_secs(120))
+        .unwrap();
+    let t = resp.timings.expect("traced responses carry timings");
+    assert_eq!(t.tokens, reqs[0].max_new as u64,
+               "timings.tokens must equal delivered tokens");
+    let completed = traced.traces.recent(64);
+    let m = traced.shutdown(Drain::Graceful);
+    assert!(m.counter("gen_preemptions") >= 1,
+            "the tight pool must actually preempt");
+
+    assert_eq!(completed.len(), reqs.len() + 1);
+    let mut saw_preemption_arc = false;
+    for c in &completed {
+        assert_eq!(c.kind, "generate");
+        assert!(!c.failed, "request {} failed in the trace ring", c.id);
+        let names: Vec<&str> =
+            c.events.iter().map(|e| e.kind.name()).collect();
+        assert_eq!(names.first(), Some(&"queued"), "chain: {names:?}");
+        assert_eq!(names.last(), Some(&"retired"), "chain: {names:?}");
+        assert!(names.contains(&"admitted"), "chain: {names:?}");
+        assert!(names.contains(&"step"), "chain: {names:?}");
+        if c.timings.preemptions > 0 {
+            assert!(has_subsequence(
+                        &names,
+                        &["preempted", "requeued", "resumed"]),
+                    "preempted request missing the requeue arc: \
+                     {names:?}");
+            saw_preemption_arc = true;
+        }
+        assert!(c.timings.total_us
+                >= c.timings.queue_us + c.timings.prefill_us,
+                "phase times exceed the wall: {:?}", c.timings);
+    }
+    assert!(saw_preemption_arc,
+            "at least one trace must record the preemption arc");
+    let delivered: u64 = completed.iter().map(|c| c.timings.tokens).sum();
+    let want_tokens: u64 = reqs.iter().map(|r| r.max_new as u64).sum();
+    assert_eq!(delivered, want_tokens + reqs[0].max_new as u64);
+
+    // tracing off: identical tokens, no timings, an empty ring
+    let plain = tiny_server_traced(art.clone(), 12 * 2 * bpt, 1,
+                                   Some(sched_cfg), "dense", false);
+    let got_plain = run_decodes(&plain, &reqs);
+    let rx = plain.submit_generate(reqs[0].clone()).unwrap();
+    let resp = rx.recv_timeout(std::time::Duration::from_secs(120))
+        .unwrap();
+    assert!(resp.timings.is_none(), "untraced responses stay lean");
+    assert!(plain.traces.is_empty(), "untraced runs record nothing");
+    plain.shutdown(Drain::Graceful);
+    assert_eq!(got_traced, got_plain,
+               "tracing changed a token stream — it must be a pure \
+                observer");
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn warm_prefix_hits_show_up_in_traces_with_saved_tokens() {
+    // a warm prefix-cache admission must be visible per-request: the
+    // span chain records prefix_adopted with the tokens it skipped, and
+    // the timings summary flags the hit.
+    let (art, _tag) = synth("traceprefix");
+    let reqs = shared_prefix_requests();
+    let server = tiny_server_with(
+        art.clone(), 8 << 20, 1,
+        Some(SchedulerConfig { max_live: 4, block_tokens: 2,
+                               prefill_chunk: 3, fused: true }),
+        "dense");
+    run_decodes(&server, &reqs); // cold: donates the shared head
+    run_decodes(&server, &reqs); // warm: adopts it
+    let warm = server.traces.recent(reqs.len());
+    server.shutdown(Drain::Graceful);
+    assert_eq!(warm.len(), reqs.len());
+    let mut saved = 0u64;
+    for c in &warm {
+        assert!(c.timings.prefix_hit,
+                "warm request {} missed the prefix cache", c.id);
+        let adopted = c.events.iter()
+            .find(|e| e.kind.name() == "prefix_adopted")
+            .unwrap_or_else(|| panic!("no prefix_adopted event for {}",
+                                      c.id));
+        assert!(adopted.value >= 2,
+                "a hit must adopt at least one full block");
+        saved += c.prefix_saved_tokens;
+    }
+    assert!(saved >= 8 * reqs.len() as u64 - 8,
+            "the shared 8-token head must dominate the savings \
+             (saved={saved})");
     std::fs::remove_dir_all(&art).ok();
 }
 

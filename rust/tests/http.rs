@@ -65,6 +65,7 @@ fn tiny_server(art: PathBuf, sched: Option<SchedulerConfig>)
             seq_len: SEQ,
             workers: 1,
             sched,
+            trace: true,
         })
         .expect("server start"))
 }
@@ -369,9 +370,76 @@ fn metrics_render_as_prometheus_text() {
     assert!(samples >= 5, "suspiciously few samples:\n{}", m.body);
     for want in ["latentllm_requests_total", "latentllm_http_requests_total",
                  "latentllm_gen_queue_depth",
-                 "latentllm_request_us{quantile=\"0.5\"}"] {
+                 // latencies render as native Prometheus histograms
+                 "latentllm_request_us_bucket{le=",
+                 "latentllm_request_us_bucket{le=\"+Inf\"}",
+                 "latentllm_request_us_sum", "latentllm_request_us_count",
+                 "# TYPE latentllm_request_us histogram"] {
         assert!(m.body.contains(want), "missing {want}:\n{}", m.body);
     }
+
+    http.shutdown();
+    let server = Arc::try_unwrap(server).ok().expect("sole owner");
+    server.shutdown(Drain::Graceful);
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn replies_carry_timings_and_debug_requests_serves_span_chains() {
+    let art = synth("traces");
+    let server = tiny_server(art.clone(), None);
+    let http = HttpServer::start(server.clone(), http_cfg()).unwrap();
+    let addr = http.local_addr();
+
+    let score = roundtrip(addr, "POST", "/v1/score",
+                          "{\"tokens\": [2, 7, 1, 8]}");
+    assert_eq!(score.status, 200, "score body: {}", score.body);
+    let t = score.json().get("timings").cloned()
+        .expect("score reply carries a timings object");
+    assert!(t.get("total_us").unwrap().as_f64().unwrap() >= 0.0);
+    assert_eq!(t.get("preemptions").unwrap().as_usize(), Some(0));
+
+    let comp = roundtrip(addr, "POST", "/v1/completions",
+                         &completion_body(&[3, 1, 4], 6, 0.0, 0, false));
+    assert_eq!(comp.status, 200, "completion body: {}", comp.body);
+    let t = comp.json().get("timings").cloned()
+        .expect("completion reply carries a timings object");
+    assert_eq!(t.get("tokens").unwrap().as_usize(), Some(6),
+               "timings.tokens must equal the tokens delivered");
+    assert!(t.get("decode_us").unwrap().as_f64().is_some());
+
+    // the streamed terminal event carries the same timings object
+    let reply = roundtrip(addr, "POST", "/v1/completions",
+                          &completion_body(&[3, 1, 4], 6, 0.0, 0, true));
+    let events = reply.events();
+    let done = json::parse(&events[events.len() - 2]).unwrap();
+    assert_eq!(done.get("timings").unwrap().get("tokens").unwrap()
+                   .as_usize(),
+               Some(6));
+
+    // completed traces land in the debug ring, newest first, with the
+    // full span chain
+    let d = roundtrip(addr, "GET", "/debug/requests?n=2", "");
+    assert_eq!(d.status, 200);
+    let v = d.json();
+    assert_eq!(v.get("count").unwrap().as_usize(), Some(2));
+    let reqs = v.get("requests").unwrap().as_arr().unwrap();
+    let newest = &reqs[0];
+    assert_eq!(newest.get("kind").unwrap().as_str(), Some("generate"));
+    assert_eq!(newest.get("failed"), Some(&Value::Bool(false)));
+    let names: Vec<&str> = newest.get("events").unwrap().as_arr()
+        .unwrap().iter()
+        .map(|e| e.get("event").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(names.first(), Some(&"queued"));
+    assert!(names.contains(&"admitted"), "span chain: {names:?}");
+    assert!(names.contains(&"step"), "span chain: {names:?}");
+    assert_eq!(names.last(), Some(&"retired"));
+
+    // the ring holds all three requests even when the query asks for
+    // fewer; an uncapped query returns them all
+    let all = roundtrip(addr, "GET", "/debug/requests?n=100", "");
+    assert!(all.json().get("count").unwrap().as_usize().unwrap() >= 3);
 
     http.shutdown();
     let server = Arc::try_unwrap(server).ok().expect("sole owner");

@@ -165,6 +165,7 @@ fn serving_stack_end_to_end() {
                                    seq_len: 128,
                                    workers: 2,
                                    sched: None,
+                                   trace: true,
                                })
         .expect("server start");
     let reqs = corpus.calibration(24, 128, 5);

@@ -241,6 +241,7 @@ fn server_pads_short_requests_through_batcher() {
             seq_len: SEQ,
             workers: 2,
             sched: None,
+            trace: true,
         })
         .expect("server start");
     assert_eq!(server.live_workers(), 2);
@@ -286,6 +287,7 @@ fn overflow_flush_splits_instead_of_nan() {
             seq_len: SEQ,
             workers: 1,
             sched: None,
+            trace: true,
         })
         .expect("server start");
     // submit 2×BATCH requests quickly so one flush exceeds program_batch
@@ -330,6 +332,7 @@ fn invalid_requests_get_error_responses_not_a_dead_worker() {
             seq_len: SEQ,
             workers: 1,
             sched: None,
+            trace: true,
         })
         .expect("server start");
     let timeout = std::time::Duration::from_secs(60);
@@ -388,6 +391,7 @@ fn failed_batch_execution_replies_with_errors() {
             seq_len: SEQ,
             workers: 1,
             sched: None,
+            trace: true,
         })
         .expect("server start (engine init itself is fine)");
     let rxs: Vec<_> = (0..3u64)
@@ -427,6 +431,7 @@ fn failed_engine_init_surfaces_from_start() {
             seq_len: SEQ,
             workers: 3,
             sched: None,
+            trace: true,
         });
     let err = match res {
         Ok(_) => panic!("start must fail without a manifest"),
